@@ -1,0 +1,95 @@
+//! Compress-and-analyze: runs the real mini model over a prompt, extracts
+//! its KV cache, compresses every layer/head with each method, and prints
+//! a per-layer error/memory breakdown — the "what does the codec do to
+//! *my* cache" tool a downstream user reaches for first.
+//!
+//! Run: `cargo run --release --example compress_analyze [-- --prompt-len 256]`
+
+use polarquant::eval::report;
+use polarquant::model::config::ModelConfig;
+use polarquant::model::transformer::Transformer;
+use polarquant::quant::compressor::KvBlock;
+use polarquant::quant::registry::{build_method, MethodContext};
+use polarquant::util::args::Args;
+use polarquant::util::rng::{Pcg64, Rng};
+use polarquant::util::stats::rel_l2_error;
+
+fn main() {
+    let a = Args::new("Analyze compression error/memory on a real model KV cache.")
+        .opt("prompt-len", "192", "prompt tokens")
+        .opt("model", "mini", "model config (mini|small|test)")
+        .opt("seed", "0", "weight seed")
+        .parse();
+
+    let cfg = ModelConfig::by_name(&a.get("model")).expect("model config");
+    let mut model = Transformer::synthetic(&cfg, a.get_u64("seed"));
+    let mut rng = Pcg64::new(11);
+    let prompt: Vec<u32> = (0..a.get_usize("prompt-len"))
+        .map(|_| 16 + rng.next_below((cfg.vocab - 16) as u64) as u32)
+        .collect();
+    println!(
+        "running {}-layer model ({} params) on a {}-token prompt…",
+        cfg.n_layers,
+        cfg.num_params(),
+        prompt.len()
+    );
+    let pre = model.prefill(&prompt);
+
+    let methods = ["kivi", "qjl", "polarquant", "polarquant-r-offline", "polarquant-r-online"];
+    let mut t = report::Table::new(
+        "per-method cache fidelity (keys, averaged over layers/heads)",
+        &["method", "key rel err", "score rel err", "bytes/token", "ratio vs fp16"],
+    );
+    for method in methods {
+        let mut key_err = Vec::new();
+        let mut score_err = Vec::new();
+        let mut bytes = 0usize;
+        for (l, layer) in pre.kv.iter().enumerate() {
+            for h in 0..cfg.n_heads {
+                let keys = layer.head_keys(h, cfg.n_heads, cfg.head_dim);
+                let values = layer.head_values(h, cfg.n_heads, cfg.head_dim);
+                let obs = layer.head_obs_queries(h, cfg.n_heads, cfg.head_dim);
+                let block = KvBlock::new(keys.clone(), values, pre.seq_len, cfg.head_dim);
+                let ctx = MethodContext::new(cfg.head_dim).at_layer(l, cfg.n_layers);
+                let kv = build_method(method, 0.25, ctx).compress(&block, &obs);
+                bytes += kv.memory_bytes();
+                // Key reconstruction error (quant methods only — eviction
+                // keeps exact subsets).
+                let deq = kv.dequant_keys();
+                if kv.n_tokens() == pre.seq_len {
+                    key_err.push(rel_l2_error(&deq, &keys));
+                }
+                // Score error against a fresh query.
+                let mut q = vec![0.0f32; cfg.head_dim];
+                rng.fill_gaussian(&mut q);
+                let mut got = Vec::new();
+                kv.key_scores(&q, &mut got);
+                let pos = kv.positions();
+                let want: Vec<f32> = pos
+                    .iter()
+                    .map(|&p| {
+                        polarquant::math::linalg::dot(
+                            &keys[p as usize * cfg.head_dim..(p as usize + 1) * cfg.head_dim],
+                            &q,
+                        )
+                    })
+                    .collect();
+                score_err.push(rel_l2_error(&got, &want));
+            }
+        }
+        let tokens = pre.seq_len * cfg.n_layers * cfg.n_heads;
+        let fp16 = 2 * 2 * cfg.head_dim * tokens;
+        t.row(vec![
+            method.to_string(),
+            if key_err.is_empty() {
+                "-".into()
+            } else {
+                report::f(polarquant::util::stats::mean(&key_err), 4)
+            },
+            report::f(polarquant::util::stats::mean(&score_err), 4),
+            report::f(bytes as f64 / (pre.seq_len as f64), 1),
+            report::f(bytes as f64 / fp16 as f64, 3),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,65 @@
+//! Needle-in-a-haystack demo: plants a needle at a chosen depth in a
+//! synthetic long-context cache and shows, method by method, whether
+//! attention retrieval survives compression — Fig. 3's mechanism made
+//! observable for one concrete needle.
+//!
+//! Run: `cargo run --release --example niah_demo [-- --context 4096 --depth 0.35]`
+
+use polarquant::eval::niah::{run_method, NiahConfig};
+use polarquant::eval::report;
+use polarquant::util::args::Args;
+
+fn main() {
+    let a = Args::new("NIAH demo: recall vs depth for one context length.")
+        .opt("context", "2048", "context length (tokens)")
+        .opt("depths", "10", "depth buckets")
+        .opt("trials", "10", "trials per cell")
+        .opt("ratio", "0.25", "compression ratio for all methods")
+        .parse();
+
+    let cfg = NiahConfig {
+        contexts: vec![a.get_usize("context")],
+        depths: a.get_usize("depths"),
+        trials: a.get_usize("trials"),
+        ratio: a.get_f64("ratio"),
+        ..Default::default()
+    };
+    let methods = [
+        "exact",
+        "polarquant-r-offline",
+        "polarquant",
+        "kivi",
+        "qjl",
+        "snapkv",
+        "pyramidkv",
+        "headkv",
+        "streamingllm",
+    ];
+    println!(
+        "NIAH @ context {} — recall by needle depth (ratio {:.2})\n",
+        cfg.contexts[0], cfg.ratio
+    );
+    let mut t = {
+        let mut headers = vec!["method".to_string()];
+        headers.extend((0..cfg.depths).map(|d| format!("{}%", d * 100 / cfg.depths)));
+        headers.push("mean".into());
+        report::Table {
+            title: "recall per depth".into(),
+            headers,
+            rows: vec![],
+        }
+    };
+    for m in methods {
+        let r = run_method(m, &cfg);
+        let mut cells = vec![m.to_string()];
+        cells.extend(r.recall.iter().map(|row| report::f(row[0], 2)));
+        cells.push(report::f(r.mean_recall, 3));
+        t.row(cells);
+    }
+    t.print();
+    println!(
+        "\nReading: StreamingLLM keeps sinks+recent only → middle depths go to 0;\n\
+         eviction methods depend on the observation window spotting the needle;\n\
+         quantization methods keep every token at ~4 bits and stay near exact."
+    );
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the PolarQuant codec + serving stack in ~60 lines.
+//!
+//! 1. Quantize a batch of KV-like vectors with the paper's §4.1 layout and
+//!    inspect error + memory.
+//! 2. Spin up the in-process serving coordinator with a synthetic
+//!    mini-Llama and generate under a PolarQuant-compressed cache.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use polarquant::coordinator::request::GenRequest;
+use polarquant::coordinator::server::{Server, ServerConfig};
+use polarquant::eval::workload::{KvGenConfig, KvGenerator};
+use polarquant::model::config::ModelConfig;
+use polarquant::polar::quantizer::{PolarConfig, PolarQuantizer};
+use std::time::Duration;
+
+fn main() {
+    // --- 1. the codec ------------------------------------------------------
+    let d = 64;
+    let cfg = PolarConfig::paper_default(d);
+    println!(
+        "PolarQuant layout: d={d}, L={}, bits={:?} → {:.3} bits/coord (×{:.2} vs fp16)",
+        cfg.levels,
+        cfg.level_bits,
+        cfg.bits_per_coordinate(),
+        cfg.compression_vs_fp16()
+    );
+
+    let quantizer = PolarQuantizer::new_offline(cfg);
+    let mut gen = KvGenerator::new(KvGenConfig::realistic(d, 7));
+    let block = gen.block(256);
+    let err = quantizer.reconstruction_error(&block.keys);
+    println!("reconstruction error on 256 realistic KV rows: {:.3} (rel L2)", err);
+
+    let code = quantizer.encode(&block.keys[..d]);
+    println!(
+        "one encoded vector: {} bytes (fp16 would be {} bytes)",
+        code.storage_bytes(),
+        2 * d
+    );
+
+    // --- 2. serving with a quantized cache ---------------------------------
+    let server = Server::start(ServerConfig {
+        model: ModelConfig::mini(),
+        seed: 0,
+        workers: 1,
+        ..Default::default()
+    });
+    let prompt: Vec<u32> = (0..96).map(|i| 16 + (i * 37) % 1000).collect();
+
+    for method in ["exact", "polarquant-r-offline"] {
+        let mut req = GenRequest::new(0, prompt.clone(), 16);
+        req.method = method.into();
+        let resp = server
+            .generate_blocking(req, Duration::from_secs(120))
+            .expect("generation");
+        println!(
+            "[{method:22}] {} tokens, prefill {:.1} ms, decode {:.1} ms, cache {:.1} KiB (ratio {:.3})",
+            resp.tokens.len(),
+            resp.timing.prefill_s * 1e3,
+            resp.timing.decode_s * 1e3,
+            resp.cache_bytes as f64 / 1024.0,
+            resp.compression_ratio,
+        );
+    }
+    server.shutdown();
+    println!("quickstart OK");
+}

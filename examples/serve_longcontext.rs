@@ -1,0 +1,113 @@
+//! End-to-end serving driver (the DESIGN.md §validation workload).
+//!
+//! Starts the full coordinator (router → batcher → continuous-batching
+//! scheduler → native engine with PolarQuant caches), loads the mini
+//! model, replays a Poisson arrival workload of long-context requests,
+//! and reports latency percentiles + throughput per cache method — the
+//! serving-paper validation: all three layers composing under load.
+//!
+//! Run: `cargo run --release --example serve_longcontext [-- --requests 24]`
+
+use polarquant::coordinator::request::GenRequest;
+use polarquant::coordinator::server::{Server, ServerConfig};
+use polarquant::eval::report;
+use polarquant::eval::workload::ServingWorkload;
+use polarquant::model::config::ModelConfig;
+use polarquant::util::args::Args;
+use polarquant::util::stats::Percentiles;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let a = Args::new("Serving driver: Poisson long-context workload against the coordinator.")
+        .opt("requests", "16", "requests per method")
+        .opt("rate", "4.0", "arrival rate (req/s)")
+        .opt("prompt-lo", "128", "min prompt tokens")
+        .opt("prompt-hi", "384", "max prompt tokens")
+        .opt("gen-tokens", "24", "tokens generated per request")
+        .opt("workers", "1", "worker replicas")
+        .parse();
+
+    let model = ModelConfig::mini();
+    let n_req = a.get_usize("requests");
+    let methods = ["exact", "kivi", "polarquant-r-offline", "polarquant-r-online"];
+
+    let mut table = report::Table::new(
+        "serve_longcontext — latency / throughput per cache method",
+        &[
+            "method",
+            "req",
+            "ttft p50 (ms)",
+            "ttft p99 (ms)",
+            "total p50 (ms)",
+            "tok/s",
+            "mean ratio",
+        ],
+    );
+
+    for method in methods {
+        let server = Server::start(ServerConfig {
+            model: model.clone(),
+            seed: 0,
+            workers: a.get_usize("workers"),
+            ..Default::default()
+        });
+        let mut workload = ServingWorkload::new(
+            model.vocab,
+            a.get_f64("rate"),
+            a.get_usize("prompt-lo"),
+            a.get_usize("prompt-hi"),
+            42,
+        );
+
+        let t0 = Instant::now();
+        let mut submitted = 0;
+        let mut done = 0;
+        let mut ttft = Percentiles::new();
+        let mut total = Percentiles::new();
+        let mut gen_tokens = 0usize;
+        let mut ratios = Vec::new();
+
+        // Open-loop arrivals: submit per the Poisson schedule while
+        // draining completions.
+        let mut next_arrival = 0.0f64;
+        while done < n_req {
+            let now = t0.elapsed().as_secs_f64();
+            if submitted < n_req && now >= next_arrival {
+                let (gap, prompt) = workload.next();
+                next_arrival = now + gap;
+                let mut req = GenRequest::new(0, prompt, a.get_usize("gen-tokens"));
+                req.method = method.into();
+                server.submit(req);
+                submitted += 1;
+            }
+            if let Some(resp) = server.recv_timeout(Duration::from_millis(2)) {
+                ttft.add(resp.timing.ttft_s * 1e3);
+                total.add(resp.timing.total_s * 1e3);
+                gen_tokens += resp.tokens.len();
+                ratios.push(resp.compression_ratio);
+                done += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            method.to_string(),
+            n_req.to_string(),
+            report::f(ttft.pct(50.0), 1),
+            report::f(ttft.pct(99.0), 1),
+            report::f(total.pct(50.0), 1),
+            report::f(gen_tokens as f64 / wall, 1),
+            report::f(polarquant::util::stats::mean(&ratios), 3),
+        ]);
+        println!(
+            "[{method}] {} requests in {:.1}s — server metrics: {}",
+            n_req,
+            wall,
+            server.metrics.snapshot().encode()
+        );
+        server.shutdown();
+    }
+    table.print();
+    if let Ok(p) = table.save_csv("serve_longcontext") {
+        println!("saved {p}");
+    }
+}

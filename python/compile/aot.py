@@ -1,0 +1,302 @@
+"""AOT compile path: lower every request-path graph to HLO *text*.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``.hlo.txt`` per graph plus ``manifest.json`` describing each
+graph's arguments/outputs (names, shapes, dtypes), the model config, and
+the default codebooks — everything the Rust runtime needs to execute the
+artifacts without Python.
+
+HLO **text** (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Interface conventions (the Rust side mirrors these):
+  * all float tensors are f32; all integer tensors are i32 (the ``xla``
+    crate has no u8 literal support);
+  * codebooks / rotations are *arguments*, not constants, so the Rust
+    codec's own tables can be fed in — keeping both layers bit-identical;
+  * every graph is lowered with ``return_tuple=True`` and unwrapped with
+    ``to_tuple`` on the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import codebooks as cb
+from compile import model as M
+from compile.kernels import polar as K
+
+S = jax.ShapeDtypeStruct
+
+# Codec layout shared by every codec graph (paper §4.1 at head_dim=64).
+HEAD_DIM = 64
+LEVELS = 4
+LEVEL_BITS = (4, 2, 2, 2)
+ENC_N = 256  # tokens per encode call (one cache page group)
+SCORE_B = 4  # query batch per fused-attention call (heads batched)
+
+# Model graph shapes.
+PREFILL_S = 128  # prefill chunk length
+DECODE_MAXLEN = 512  # decode-step cache buffer rows
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return S(tuple(shape), dtype)
+
+
+def _code_shapes(n, d=HEAD_DIM, levels=LEVELS):
+    return [(n, d >> (l + 1)) for l in range(levels)]
+
+
+def _book_sizes(bits=LEVEL_BITS):
+    return [1 << b for b in bits]
+
+
+# ---------------------------------------------------------------------------
+# Codec graphs (wrap the L1 Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def graph_polar_encode(x, rotation, *boundaries):
+    radii, codes = K.polar_encode(
+        x, rotation, list(boundaries), levels=LEVELS, interpret=True
+    )
+    return (radii,) + tuple(c.astype(jnp.int32) for c in codes)
+
+
+def graph_key_scores(q_rot, radii, *rest):
+    codes = [r.astype(jnp.uint8) for r in rest[:LEVELS]]
+    cents = list(rest[LEVELS:])
+    return (K.key_scores(q_rot, radii, codes, cents, interpret=True),)
+
+
+def graph_value_combine(weights, radii, *rest):
+    codes = [r.astype(jnp.uint8) for r in rest[:LEVELS]]
+    cents = list(rest[LEVELS:])
+    return (K.value_combine(weights, radii, codes, cents, interpret=True),)
+
+
+def graph_quantized_attention(q, rotation, k_radii, v_radii, *rest):
+    k_codes = [r.astype(jnp.uint8) for r in rest[:LEVELS]]
+    v_codes = [r.astype(jnp.uint8) for r in rest[LEVELS : 2 * LEVELS]]
+    cents = list(rest[2 * LEVELS :])
+    out = K.quantized_attention(
+        q, k_radii, k_codes, v_radii, v_codes, cents, rotation, interpret=True
+    )
+    return (out,)
+
+
+# ---------------------------------------------------------------------------
+# Model graphs
+# ---------------------------------------------------------------------------
+
+
+def graph_prefill(cfg, tokens, *flat_params):
+    params = dict(zip(cfg.params_order, flat_params))
+    logits, k, v = M.prefill(params, cfg, tokens)
+    return logits, k, v
+
+
+def graph_decode_step(cfg, token, pos, k_cache, v_cache, *flat_params):
+    params = dict(zip(cfg.params_order, flat_params))
+    logits, nk, nv = M.decode_step(params, cfg, token, pos, k_cache, v_cache)
+    return logits, nk, nv
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def build_entries(cfg: M.ModelConfig):
+    """(name, fn, arg_specs, arg_names) for every artifact."""
+    d = HEAD_DIM
+    nr = d >> LEVELS
+    ks = _book_sizes()
+    code_shapes = _code_shapes(ENC_N)
+    param_specs = [
+        _spec(cfg.param_shape(n)) for n in cfg.params_order
+    ]
+    param_names = [f"param:{n}" for n in cfg.params_order]
+
+    entries = []
+    entries.append(
+        (
+            "polar_encode",
+            graph_polar_encode,
+            [_spec((ENC_N, d)), _spec((d, d))]
+            + [_spec((k - 1,)) for k in ks],
+            ["x", "rotation"] + [f"boundaries_l{i+1}" for i in range(LEVELS)],
+        )
+    )
+    entries.append(
+        (
+            "polar_key_scores",
+            graph_key_scores,
+            [_spec((SCORE_B, d)), _spec((ENC_N, nr))]
+            + [_spec(s, jnp.int32) for s in code_shapes]
+            + [_spec((k,)) for k in ks],
+            ["q_rot", "k_radii"]
+            + [f"k_codes_l{i+1}" for i in range(LEVELS)]
+            + [f"centroids_l{i+1}" for i in range(LEVELS)],
+        )
+    )
+    entries.append(
+        (
+            "polar_value_combine",
+            graph_value_combine,
+            [_spec((SCORE_B, ENC_N)), _spec((ENC_N, nr))]
+            + [_spec(s, jnp.int32) for s in code_shapes]
+            + [_spec((k,)) for k in ks],
+            ["weights", "v_radii"]
+            + [f"v_codes_l{i+1}" for i in range(LEVELS)]
+            + [f"centroids_l{i+1}" for i in range(LEVELS)],
+        )
+    )
+    entries.append(
+        (
+            "quantized_attention",
+            graph_quantized_attention,
+            [_spec((SCORE_B, d)), _spec((d, d)), _spec((ENC_N, nr)), _spec((ENC_N, nr))]
+            + [_spec(s, jnp.int32) for s in code_shapes] * 2
+            + [_spec((k,)) for k in ks],
+            ["q", "rotation", "k_radii", "v_radii"]
+            + [f"k_codes_l{i+1}" for i in range(LEVELS)]
+            + [f"v_codes_l{i+1}" for i in range(LEVELS)]
+            + [f"centroids_l{i+1}" for i in range(LEVELS)],
+        )
+    )
+    entries.append(
+        (
+            "model_prefill",
+            functools.partial(graph_prefill, cfg),
+            [_spec((PREFILL_S,), jnp.int32)] + param_specs,
+            ["tokens"] + param_names,
+        )
+    )
+    entries.append(
+        (
+            "model_decode_step",
+            functools.partial(graph_decode_step, cfg),
+            [
+                _spec((), jnp.int32),
+                _spec((), jnp.int32),
+                _spec((cfg.n_layers, DECODE_MAXLEN, cfg.n_heads, cfg.head_dim)),
+                _spec((cfg.n_layers, DECODE_MAXLEN, cfg.n_heads, cfg.head_dim)),
+            ]
+            + param_specs,
+            ["token", "pos", "k_cache", "v_cache"] + param_names,
+        )
+    )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="mini", choices=["mini", "small"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = M.MINI if args.config == "mini" else M.SMALL
+    entries = build_entries(cfg)
+
+    manifest = {
+        "format": "hlo-text/1",
+        "config": args.config,
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "rope_theta": cfg.rope_theta,
+            "rms_eps": cfg.rms_eps,
+            "params_order": cfg.params_order,
+        },
+        "codec": {
+            "head_dim": HEAD_DIM,
+            "levels": LEVELS,
+            "level_bits": list(LEVEL_BITS),
+            "enc_n": ENC_N,
+            "score_b": SCORE_B,
+        },
+        "shapes": {
+            "prefill_s": PREFILL_S,
+            "decode_maxlen": DECODE_MAXLEN,
+        },
+        "graphs": {},
+        "codebooks": {},
+    }
+
+    # Default analytic codebooks recorded in the manifest (informational;
+    # the graphs take books as arguments).
+    for l, bits in enumerate(LEVEL_BITS):
+        cent, bnd = cb.lloyd_max(l + 1, bits)
+        manifest["codebooks"][f"level{l+1}"] = {
+            "bits": bits,
+            "centroids": [float(c) for c in cent],
+            "boundaries": [float(b) for b in bnd],
+        }
+
+    for name, fn, specs, arg_names in entries:
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *specs)
+        manifest["graphs"][name] = {
+            "file": fname,
+            "args": [
+                {
+                    "name": an,
+                    "shape": list(s.shape),
+                    "dtype": str(s.dtype),
+                }
+                for an, s in zip(arg_names, specs)
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)}
+                for o in jax.tree_util.tree_leaves(out_shapes)
+            ],
+        }
+        print(f"lowered {name:24s} -> {fname} ({len(text)} chars)")
+
+    # Reference weights for the quickstart (Rust can also generate its own).
+    weights_path = os.path.join(args.out, "model_weights.bin")
+    params = M.init_params(cfg, seed=0)
+    M.save_weights(weights_path, cfg, params)
+    manifest["weights_file"] = "model_weights.bin"
+    print(f"saved weights ({cfg.num_params()} params) -> {weights_path}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['graphs'])} graphs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Analytic angle codebooks (python mirror of rust `polar::codebook`).
+
+Computes the Lloyd-Max codebooks on the analytic post-preconditioning
+angle densities (paper Lemma 2) so the AOT graphs embed *identical*
+centroids/boundaries to the Rust codec — the cross-language parity test
+depends on both sides deriving the same books.
+
+Level 1 is uniform on [0, 2pi) -> uniform grid (exactly optimal).
+Level l >= 2 has density  f_m(t) = Gamma(m)/(2^{m-2} Gamma(m/2)^2)
+sin^{m-1}(2t)  on [0, pi/2] with m = 2^{l-1}.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def angle_pdf(level: int, t: np.ndarray) -> np.ndarray:
+    """Density of level-`level` angles (Lemma 2)."""
+    if level == 1:
+        return np.full_like(t, 1.0 / (2 * math.pi))
+    m = 1 << (level - 1)
+    log_c = (
+        math.lgamma(m) - (m - 2) * math.log(2.0) - 2 * math.lgamma(m / 2)
+    )
+    s = np.sin(2 * t)
+    out = np.zeros_like(t)
+    pos = s > 0
+    out[pos] = np.exp(log_c + (m - 1) * np.log(s[pos]))
+    return out
+
+
+def _grid(level: int, num: int = 20001):
+    lo, hi = (0.0, 2 * math.pi) if level == 1 else (0.0, math.pi / 2)
+    t = np.linspace(lo, hi, num)
+    return t, angle_pdf(level, t)
+
+
+def angle_quantile(level: int, p: np.ndarray) -> np.ndarray:
+    """Inverse CDF via dense-grid interpolation."""
+    t, f = _grid(level)
+    cdf = np.cumsum((f[1:] + f[:-1]) * 0.5 * np.diff(t))
+    cdf = np.concatenate([[0.0], cdf])
+    cdf /= cdf[-1]
+    return np.interp(p, cdf, t)
+
+
+def lloyd_max(level: int, bits: int, iters: int = 60):
+    """Offline codebook: (centroids, boundaries), both float32.
+
+    Matches rust `Codebook::lloyd_max_analytic`: quantile init, midpoint
+    boundaries, conditional-mean centroids, iterated to convergence.
+    """
+    k = 1 << bits
+    if level == 1:
+        w = 2 * math.pi / k
+        cent = (np.arange(k) + 0.5) * w
+        bnd = (cent[:-1] + cent[1:]) / 2
+        return cent.astype(np.float32), bnd.astype(np.float32)
+    t, f = _grid(level)
+    # Trapezoid masses for fast interval integrals.
+    seg = (f[1:] + f[:-1]) * 0.5 * np.diff(t)
+    seg_t = (t[1:] + t[:-1]) * 0.5
+    cent = angle_quantile(level, (np.arange(k) + 0.5) / k)
+    lo, hi = t[0], t[-1]
+    for _ in range(iters):
+        bnd = (cent[:-1] + cent[1:]) / 2
+        edges = np.concatenate([[lo], bnd, [hi]])
+        idx = np.searchsorted(edges, seg_t) - 1
+        idx = np.clip(idx, 0, k - 1)
+        mass = np.bincount(idx, weights=seg, minlength=k)
+        mom = np.bincount(idx, weights=seg * seg_t, minlength=k)
+        new = np.where(mass > 1e-14, mom / np.maximum(mass, 1e-14), cent)
+        if np.abs(new - cent).sum() < 1e-12:
+            cent = new
+            break
+        cent = new
+    cent = np.sort(cent)
+    bnd = (cent[:-1] + cent[1:]) / 2
+    return cent.astype(np.float32), bnd.astype(np.float32)
+
+
+def paper_default_books(levels: int = 4, level_bits=(4, 2, 2, 2)):
+    """The §4.1 codebook set: [(centroids, boundaries)] per level."""
+    assert len(level_bits) == levels
+    return [lloyd_max(l + 1, level_bits[l]) for l in range(levels)]
+
+
+def haar_rotation(d: int, seed: int = 0) -> np.ndarray:
+    """Haar-random rotation via QR sign-fix (analysis/tests only — the
+    artifacts embed the *Rust* codec's rotation, exported to keep the two
+    sides bit-identical; see aot.py)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((d, d))
+    q, r = np.linalg.qr(a)
+    return (q * np.sign(np.diag(r))).astype(np.float32)

@@ -1,0 +1,248 @@
+"""Layer-1 Pallas kernels for the PolarQuant codec.
+
+The paper implements two CUDA kernels (§4.1): (1) query x dequantized-key
+product and (2) attention-probs x dequantized-value product, both
+dequantizing codes in registers per threadblock tile. This module
+re-thinks them for TPU (see DESIGN.md §Hardware-Adaptation):
+
+* a ``(block_n, d)`` tile of codes + radii is staged HBM->VMEM via
+  ``BlockSpec`` (VMEM plays the role CUDA gives to shared memory);
+* dequantization is a vectorized gather from the <=16-entry per-level
+  centroid tables (resident in VMEM for the whole kernel);
+* the reconstructed tile feeds an MXU-shaped ``jnp.dot``.
+
+A third kernel implements the encode side (precondition -> recursive polar
+transform -> codebook assignment), which the paper runs at prefill time.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the same
+graphs execute under the Rust runtime. Real-TPU resource estimates for the
+chosen BlockSpecs are documented in DESIGN.md §Perf.
+
+VMEM budget at the default ``block_n=128``, d=64, L=4 (f32):
+  codes 128x(32+16+8+4)B + radii 128x4x4B + khat tile 128x64x4B
+  + q tile and partial outputs  ->  well under 1 MiB per step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_polar_forward(x, levels: int):
+    """polar_forward on a single resident tile (same math as ref.py)."""
+    x0 = x[:, 0::2]
+    x1 = x[:, 1::2]
+    theta = jnp.arctan2(x1, x0)
+    theta = jnp.where(theta < 0, theta + 2 * jnp.pi, theta)
+    angles = [theta]
+    r = jnp.sqrt(x0 * x0 + x1 * x1)
+    for _ in range(2, levels + 1):
+        r0 = r[:, 0::2]
+        r1 = r[:, 1::2]
+        angles.append(jnp.arctan2(r1, r0))
+        r = jnp.sqrt(r0 * r0 + r1 * r1)
+    return r, angles
+
+
+def _tile_polar_inverse(radii, angles):
+    r = radii
+    for theta in reversed(angles):
+        c = jnp.cos(theta)
+        s = jnp.sin(theta)
+        r = jnp.stack([r * c, r * s], axis=-1).reshape(r.shape[0], -1)
+    return r
+
+
+def _pick_block(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (grid must tile n exactly)."""
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Encode kernel
+# ---------------------------------------------------------------------------
+
+
+def _encode_kernel(levels, x_ref, rot_ref, *rest):
+    """rest = (b1..bL boundary refs, radii_out, code1..codeL outs)."""
+    brefs = rest[:levels]
+    radii_out = rest[levels]
+    code_outs = rest[levels + 1 :]
+    x = x_ref[...]
+    # Precondition: y = x @ R^T (R rows are projection directions).
+    pre = jnp.dot(x, rot_ref[...].T, preferred_element_type=jnp.float32)
+    radii, angles = _tile_polar_forward(pre, levels)
+    radii_out[...] = radii
+    for l in range(levels):
+        b = brefs[l][...]
+        codes = jnp.sum(
+            angles[l][..., None] > b[None, None, :], axis=-1
+        ).astype(jnp.uint8)
+        code_outs[l][...] = codes
+
+
+def polar_encode(x, rotation, boundaries, *, levels: int, block_n: int = 128,
+                 interpret: bool = True):
+    """Encode a batch: (radii, [codes per level]).
+
+    Args:
+      x: (n, d) f32. rotation: (d, d) f32. boundaries: list of L sorted
+        f32 boundary vectors (len 2^b_l - 1).
+    Returns:
+      radii (n, d >> levels) f32; codes list, codes[l] (n, d >> (l+1)) u8.
+    """
+    n, d = x.shape
+    assert d % (1 << levels) == 0
+    bn = _pick_block(n, block_n)
+    grid = (n // bn,)
+    out_shape = [jax.ShapeDtypeStruct((n, d >> levels), jnp.float32)] + [
+        jax.ShapeDtypeStruct((n, d >> (l + 1)), jnp.uint8) for l in range(levels)
+    ]
+    in_specs = (
+        [pl.BlockSpec((bn, d), lambda i: (i, 0))]
+        + [pl.BlockSpec((d, d), lambda i: (0, 0))]
+        + [
+            pl.BlockSpec((boundaries[l].shape[0],), lambda i: (0,))
+            for l in range(levels)
+        ]
+    )
+    out_specs = [pl.BlockSpec((bn, d >> levels), lambda i: (i, 0))] + [
+        pl.BlockSpec((bn, d >> (l + 1)), lambda i: (i, 0)) for l in range(levels)
+    ]
+    outs = pl.pallas_call(
+        functools.partial(_encode_kernel, levels),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, rotation, *boundaries)
+    return outs[0], list(outs[1:])
+
+
+# ---------------------------------------------------------------------------
+# Decode / fused-attention kernels
+# ---------------------------------------------------------------------------
+
+
+def _decode_tile(levels, radii_ref, code_refs, cent_refs):
+    """Reconstruct a (block_n, d) tile in the preconditioned basis."""
+    angles = []
+    for l in range(levels):
+        codes = code_refs[l][...].astype(jnp.int32)
+        angles.append(cent_refs[l][...][codes])
+    return _tile_polar_inverse(radii_ref[...], angles)
+
+
+def _key_scores_kernel(levels, q_ref, radii_ref, *rest):
+    code_refs = rest[:levels]
+    cent_refs = rest[levels : 2 * levels]
+    out_ref = rest[2 * levels]
+    k_hat = _decode_tile(levels, radii_ref, code_refs, cent_refs)
+    # (B, d) x (d, block_n) -> (B, block_n) on the MXU.
+    out_ref[...] = jnp.dot(
+        q_ref[...], k_hat.T, preferred_element_type=jnp.float32
+    )
+
+
+def key_scores(q_rot, radii, codes, centroids, *, block_n: int = 128,
+               interpret: bool = True):
+    """scores = q_rot @ K_hat^T, dequantizing K tiles on the fly.
+
+    q_rot: (B, d) rotated queries; radii (n, d>>L); codes[l] (n, d>>(l+1)).
+    Returns (B, n) f32.
+    """
+    levels = len(codes)
+    bq, d = q_rot.shape
+    n = radii.shape[0]
+    bn = _pick_block(n, block_n)
+    grid = (n // bn,)
+    in_specs = (
+        [pl.BlockSpec((bq, d), lambda i: (0, 0))]
+        + [pl.BlockSpec((bn, radii.shape[1]), lambda i: (i, 0))]
+        + [pl.BlockSpec((bn, codes[l].shape[1]), lambda i: (i, 0)) for l in range(levels)]
+        + [pl.BlockSpec((centroids[l].shape[0],), lambda i: (0,)) for l in range(levels)]
+    )
+    return pl.pallas_call(
+        functools.partial(_key_scores_kernel, levels),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bq, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bq, n), jnp.float32),
+        interpret=interpret,
+    )(q_rot, radii, *codes, *centroids)
+
+
+def _value_combine_kernel(levels, w_ref, radii_ref, *rest):
+    code_refs = rest[:levels]
+    cent_refs = rest[levels : 2 * levels]
+    out_ref = rest[2 * levels]
+    v_hat = _decode_tile(levels, radii_ref, code_refs, cent_refs)
+    # Accumulate partial (B, d) products across sequential grid steps: the
+    # out block maps every step to block 0 (revisited), so initialize on
+    # the first step and add on the rest.
+    partial = jnp.dot(w_ref[...], v_hat, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+def value_combine(weights, radii, codes, centroids, *, block_n: int = 128,
+                  interpret: bool = True):
+    """out = weights @ V_hat (preconditioned basis), tiled over tokens.
+
+    weights: (B, n) attention probabilities. Returns (B, d) f32 — note the
+    caller applies R^T once (linearity; see rust polar_kv).
+    """
+    levels = len(codes)
+    bq, n = weights.shape
+    d = radii.shape[1] << levels
+    bn = _pick_block(n, block_n)
+    grid = (n // bn,)
+    in_specs = (
+        [pl.BlockSpec((bq, bn), lambda i: (0, i))]
+        + [pl.BlockSpec((bn, radii.shape[1]), lambda i: (i, 0))]
+        + [pl.BlockSpec((bn, codes[l].shape[1]), lambda i: (i, 0)) for l in range(levels)]
+        + [pl.BlockSpec((centroids[l].shape[0],), lambda i: (0,)) for l in range(levels)]
+    )
+    return pl.pallas_call(
+        functools.partial(_value_combine_kernel, levels),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bq, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bq, d), jnp.float32),
+        interpret=interpret,
+    )(weights, radii, *codes, *centroids)
+
+
+def quantized_attention(q, k_radii, k_codes, v_radii, v_codes, centroids,
+                        rotation, *, block_n: int = 128, interpret: bool = True):
+    """Paper Eq. 6 for one head: softmax(q K_hat^T / sqrt(d)) V_hat.
+
+    q: (B, d) unrotated queries; K/V quantized in the preconditioned
+    basis. Composes the two Pallas kernels with a jnp softmax in between
+    (like the paper's implementation, which fuses only the two matmuls).
+    """
+    d = q.shape[-1]
+    q_rot = q @ rotation.T
+    scores = key_scores(q_rot, k_radii, k_codes, centroids,
+                        block_n=block_n, interpret=interpret)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores / jnp.sqrt(d) - m / jnp.sqrt(d))
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    pre = value_combine(probs, v_radii, v_codes, centroids,
+                        block_n=block_n, interpret=interpret)
+    return pre @ rotation

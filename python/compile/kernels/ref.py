@@ -1,0 +1,150 @@
+"""Pure-jnp reference implementations (the correctness oracle).
+
+Everything the Pallas kernels in :mod:`polar` compute is re-implemented
+here with plain ``jax.numpy`` ops, shapes kept identical. pytest compares
+kernel-vs-ref with ``assert_allclose`` across hypothesis-generated shapes;
+the Rust test-suite additionally compares its native codec against the AOT
+artifacts lowered from these functions.
+
+Conventions
+-----------
+* ``x`` is a row-major ``(n, d)`` batch of embedding vectors.
+* ``levels`` is the recursion depth L (paper §4.1 uses 4 → blocks of 16).
+* Level-1 angles live in [0, 2π); levels ≥ 2 in [0, π/2].
+* Codes are ``uint8`` planes per level (bit-packing is a storage-side
+  concern handled by the Rust coordinator, not the compute graphs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def polar_forward(x: jnp.ndarray, levels: int):
+    """Recursive polar transform (paper Definition 1, Algorithm 1 `Polar`).
+
+    Args:
+      x: (n, d) input; d divisible by 2**levels.
+      levels: recursion depth L >= 1.
+
+    Returns:
+      (radii, angles): radii (n, d/2**L); angles list of length L where
+      angles[l] has shape (n, d / 2**(l+1)).
+    """
+    n, d = x.shape
+    assert d % (1 << levels) == 0, f"d={d} not divisible by 2^{levels}"
+    angles = []
+    # Level 1: signed pairs -> atan2 in [0, 2pi).
+    x0 = x[:, 0::2]
+    x1 = x[:, 1::2]
+    theta = jnp.arctan2(x1, x0)
+    theta = jnp.where(theta < 0, theta + 2 * jnp.pi, theta)
+    angles.append(theta)
+    r = jnp.sqrt(x0 * x0 + x1 * x1)
+    # Levels >= 2: non-negative pairs -> atan2 in [0, pi/2].
+    for _ in range(2, levels + 1):
+        r0 = r[:, 0::2]
+        r1 = r[:, 1::2]
+        angles.append(jnp.arctan2(r1, r0))
+        r = jnp.sqrt(r0 * r0 + r1 * r1)
+    return r, angles
+
+
+def polar_inverse(radii: jnp.ndarray, angles):
+    """Inverse transform (Algorithm 1 `DeQuant` reconstruction loop)."""
+    r = radii
+    for theta in reversed(angles):
+        c = jnp.cos(theta)
+        s = jnp.sin(theta)
+        # Interleave (r*cos, r*sin) along the last axis.
+        r = jnp.stack([r * c, r * s], axis=-1).reshape(r.shape[0], -1)
+    return r
+
+
+def quantize_angles(angles: jnp.ndarray, boundaries: jnp.ndarray) -> jnp.ndarray:
+    """Map angles to codebook indices: code = #(boundaries < angle).
+
+    ``boundaries`` is the sorted (k-1,) interval-edge vector. The same
+    rule is implemented by the Rust codec (binary search over boundaries),
+    so codes agree across layers bit-for-bit for interval codebooks. The
+    circular level-1 codebook is a uniform grid whose wrap cell is split
+    across code 0 and code k-1 by this rule; the Rust side quantizes
+    circularly, differing only for angles within half a cell of 2pi
+    (handled by the parity test's tolerance mask).
+    """
+    return jnp.sum(
+        angles[..., None] > boundaries[None, None, :], axis=-1
+    ).astype(jnp.uint8)
+
+
+def dequantize_angles(codes: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """codes (n, m) uint8 -> centroid angles (n, m) f32."""
+    return centroids[codes.astype(jnp.int32)]
+
+
+def polar_encode(x, rotation, boundaries, levels: int):
+    """Full encode: precondition -> polar -> quantize.
+
+    Args:
+      x: (n, d); rotation: (d, d) orthogonal (rows are the projection
+      directions, i.e. y = x @ rotation.T); boundaries: list of L sorted
+      boundary vectors.
+
+    Returns:
+      (radii, codes): radii (n, d/2**L) f32, codes list of uint8 planes.
+    """
+    pre = x @ rotation.T
+    radii, angles = polar_forward(pre, levels)
+    codes = [quantize_angles(a, b) for a, b in zip(angles, boundaries)]
+    return radii, codes
+
+
+def polar_decode(radii, codes, rotation, centroids):
+    """Full decode: dequantize -> inverse polar -> un-rotate."""
+    pre = decode_preconditioned(radii, codes, centroids)
+    return pre @ rotation
+
+
+def decode_preconditioned(radii, codes, centroids):
+    """Decode without undoing the rotation (fused-attention basis)."""
+    angles = [dequantize_angles(c, cb) for c, cb in zip(codes, centroids)]
+    return polar_inverse(radii, angles)
+
+
+def softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def quantized_key_scores(q_rot, radii, codes, centroids):
+    """scores[b, i] = <K_hat_i (preconditioned basis), q_rot[b]>.
+
+    q_rot: (B, d) queries *already rotated* (q' = R q); this is the
+    identity the paper's dequant-matmul CUDA kernel (§4.1 op 1) computes.
+    """
+    k_hat = decode_preconditioned(radii, codes, centroids)  # (n, d)
+    return q_rot @ k_hat.T
+
+
+def quantized_value_combine(weights, radii, codes, centroids, rotation):
+    """out[b] = R^T . sum_i weights[b,i] V_hat_i (paper §4.1 op 2).
+
+    weights: (B, n) attention probabilities.
+    """
+    v_hat = decode_preconditioned(radii, codes, centroids)  # (n, d)
+    return (weights @ v_hat) @ rotation
+
+
+def quantized_attention(
+    q, k_radii, k_codes, v_radii, v_codes, centroids, rotation
+):
+    """Full quantized attention step (paper Eq. 6) for a batch of queries.
+
+    q: (B, d) *unrotated* queries. Returns (B, d) attention outputs.
+    """
+    d = q.shape[-1]
+    q_rot = q @ rotation.T
+    scores = quantized_key_scores(q_rot, k_radii, k_codes, centroids)
+    probs = softmax(scores / jnp.sqrt(d))
+    return quantized_value_combine(probs, v_radii, v_codes, centroids, rotation)

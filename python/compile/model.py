@@ -1,0 +1,269 @@
+"""Layer-2 JAX model: a mini-Llama decoder used for the end-to-end system.
+
+Structure mirrors Llama-3 (RMSNorm, RoPE, MHA, SwiGLU, tied LM head) at a
+size that runs comfortably on the single-CPU eval box. The *same*
+architecture is implemented natively in Rust (`rust/src/model/`); weights
+are interchanged through a flat binary format (see `weights_io`), and the
+AOT graphs take all parameters as *arguments* so the Rust runtime feeds
+its own weights — keeping Python strictly build-time.
+
+Two request-path graphs are exported by aot.py:
+  * ``prefill``: tokens (1, S) -> (logits (S, V), k/v caches (L, S, H, Dh))
+  * ``decode_step``: one token + fixed-size cache buffers + position ->
+    (logits, new k/v rows), with causal masking by ``cur_len``.
+
+The quantized-attention path (PolarQuant codes instead of f32 caches) is
+exported separately from the L1 kernels; the Rust coordinator owns cache
+quantization either way (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 1024
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 768
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def params_order(self) -> List[str]:
+        """Canonical flat parameter order (the weights-file order)."""
+        names = ["embed"]
+        for l in range(self.n_layers):
+            names += [
+                f"l{l}.attn_norm",
+                f"l{l}.wq",
+                f"l{l}.wk",
+                f"l{l}.wv",
+                f"l{l}.wo",
+                f"l{l}.mlp_norm",
+                f"l{l}.w_gate",
+                f"l{l}.w_up",
+                f"l{l}.w_down",
+            ]
+        names.append("final_norm")
+        return names
+
+    def param_shape(self, name: str) -> Tuple[int, ...]:
+        d, h, dh, f = self.d_model, self.n_heads, self.head_dim, self.d_ff
+        if name == "embed":
+            return (self.vocab, d)
+        if name.endswith("_norm"):
+            return (d,)
+        leaf = name.split(".")[-1]
+        return {
+            "wq": (d, h * dh),
+            "wk": (d, h * dh),
+            "wv": (d, h * dh),
+            "wo": (h * dh, d),
+            "w_gate": (d, f),
+            "w_up": (d, f),
+            "w_down": (f, d),
+        }[leaf]
+
+    def num_params(self) -> int:
+        return sum(
+            int(np.prod(self.param_shape(n))) for n in self.params_order
+        )
+
+
+# The two standard configs used across the repo (keep in sync with
+# rust/src/model/config.rs).
+MINI = ModelConfig()
+SMALL = ModelConfig(
+    vocab=2048, d_model=512, n_layers=6, n_heads=8, head_dim=64, d_ff=1536
+)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Synthetic weights: scaled-Gaussian init (the 'small real model' is
+    simulated per DESIGN.md substitutions; structure, not provenance, is
+    what the codec exercises)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name in cfg.params_order:
+        shape = cfg.param_shape(name)
+        if name.endswith("_norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            w = rng.standard_normal(shape) / math.sqrt(fan_in)
+            params[name] = jnp.asarray(w, jnp.float32)
+    return params
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """(P, Dh/2) rotary angles for the given positions."""
+    half = cfg.head_dim // 2
+    inv = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions[:, None].astype(jnp.float32) * inv[None, :]
+
+
+def apply_rope(x, ang):
+    """x: (P, H, Dh); ang: (P, Dh/2). Interleaved-pair rotation (Llama)."""
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    c = jnp.cos(ang)[:, None, :]
+    s = jnp.sin(ang)[:, None, :]
+    r0 = x0 * c - x1 * s
+    r1 = x0 * s + x1 * c
+    return jnp.stack([r0, r1], axis=-1).reshape(x.shape)
+
+
+def _attn_weights(scores, mask):
+    scores = jnp.where(mask, scores, -1e9)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def prefill(params, cfg: ModelConfig, tokens):
+    """Process a full prompt.
+
+    tokens: (S,) int32. Returns (logits (S, V), k (L, S, H, Dh), v alike).
+    """
+    s = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # (S, D)
+    pos = jnp.arange(s)
+    ang = rope_angles(cfg, pos)
+    causal = pos[:, None] >= pos[None, :]
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        xin = rmsnorm(x, params[f"l{l}.attn_norm"], cfg.rms_eps)
+        q = (xin @ params[f"l{l}.wq"]).reshape(s, h, dh)
+        k = (xin @ params[f"l{l}.wk"]).reshape(s, h, dh)
+        v = (xin @ params[f"l{l}.wv"]).reshape(s, h, dh)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+        ks.append(k)
+        vs.append(v)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / math.sqrt(dh)
+        probs = _attn_weights(scores, causal[None, :, :])
+        attn = jnp.einsum("hqk,khd->qhd", probs, v).reshape(s, h * dh)
+        x = x + attn @ params[f"l{l}.wo"]
+        xin = rmsnorm(x, params[f"l{l}.mlp_norm"], cfg.rms_eps)
+        gate = xin @ params[f"l{l}.w_gate"]
+        up = xin @ params[f"l{l}.w_up"]
+        x = x + (jax.nn.silu(gate) * up) @ params[f"l{l}.w_down"]
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["embed"].T  # tied head
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, k_cache, v_cache):
+    """One generation step against fixed-size cache buffers.
+
+    token: () int32; pos: () int32 (index of this token); caches
+    (L, MAXLEN, H, Dh) with rows ≥ pos unused. Returns
+    (logits (V,), new_k (L, H, Dh), new_v (L, H, Dh)); the *caller* (Rust
+    coordinator or jax test harness) writes the new rows at `pos` — cache
+    ownership stays outside the graph.
+    """
+    maxlen = k_cache.shape[1]
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["embed"][token]  # (D,)
+    ang = rope_angles(cfg, jnp.array([pos]))
+    valid = jnp.arange(maxlen) < pos  # strictly-previous tokens
+    new_ks, new_vs = [], []
+    for l in range(cfg.n_layers):
+        xin = rmsnorm(x, params[f"l{l}.attn_norm"], cfg.rms_eps)
+        q = (xin @ params[f"l{l}.wq"]).reshape(1, h, dh)
+        k = (xin @ params[f"l{l}.wk"]).reshape(1, h, dh)
+        v = (xin @ params[f"l{l}.wv"]).reshape(1, h, dh)
+        q = apply_rope(q, ang)[0]  # (H, Dh)
+        k = apply_rope(k, ang)[0]
+        v = v[0]
+        new_ks.append(k)
+        new_vs.append(v)
+        # Attend over cache rows [0, pos) plus self.
+        kc = k_cache[l]  # (MAXLEN, H, Dh)
+        vc = v_cache[l]
+        scores = jnp.einsum("hd,thd->ht", q, kc) / math.sqrt(dh)
+        self_score = jnp.sum(q * k, axis=-1) / math.sqrt(dh)  # (H,)
+        scores = jnp.where(valid[None, :], scores, -1e9)
+        m = jnp.maximum(jnp.max(scores, axis=-1), self_score)
+        e = jnp.exp(scores - m[:, None])
+        e_self = jnp.exp(self_score - m)
+        denom = jnp.sum(e, axis=-1) + e_self
+        attn = (
+            jnp.einsum("ht,thd->hd", e, vc) + e_self[:, None] * v
+        ) / denom[:, None]
+        x = x + attn.reshape(h * dh) @ params[f"l{l}.wo"]
+        xin = rmsnorm(x, params[f"l{l}.mlp_norm"], cfg.rms_eps)
+        x = x + (
+            jax.nn.silu(xin @ params[f"l{l}.w_gate"]) * (xin @ params[f"l{l}.w_up"])
+        ) @ params[f"l{l}.w_down"]
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+# ---------------------------------------------------------------------------
+# Weight interchange (flat f32 little-endian, canonical order + header)
+# ---------------------------------------------------------------------------
+
+WEIGHTS_MAGIC = 0x50514D31  # "PQM1"
+
+
+def save_weights(path: str, cfg: ModelConfig, params) -> None:
+    """Binary layout: magic, then 7 u32 config fields, then each param
+    flat f32 LE in `params_order`. Mirrored by rust model/weights.rs."""
+    header = np.array(
+        [
+            WEIGHTS_MAGIC,
+            cfg.vocab,
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.head_dim,
+            cfg.d_ff,
+        ],
+        dtype="<u4",
+    )
+    with open(path, "wb") as f:
+        f.write(header.tobytes())
+        for name in cfg.params_order:
+            arr = np.asarray(params[name], dtype="<f4")
+            assert arr.shape == cfg.param_shape(name), name
+            f.write(arr.tobytes())
+
+
+def load_weights(path: str):
+    with open(path, "rb") as f:
+        header = np.frombuffer(f.read(28), dtype="<u4")
+        assert header[0] == WEIGHTS_MAGIC, "bad magic"
+        cfg = ModelConfig(
+            vocab=int(header[1]),
+            d_model=int(header[2]),
+            n_layers=int(header[3]),
+            n_heads=int(header[4]),
+            head_dim=int(header[5]),
+            d_ff=int(header[6]),
+        )
+        params = {}
+        for name in cfg.params_order:
+            shape = cfg.param_shape(name)
+            count = int(np.prod(shape))
+            buf = np.frombuffer(f.read(4 * count), dtype="<f4")
+            params[name] = jnp.asarray(buf.reshape(shape))
+    return cfg, params

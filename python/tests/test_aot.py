@@ -1,0 +1,92 @@
+"""AOT pipeline: every graph lowers to HLO text, text is parseable-looking,
+manifest is complete and internally consistent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__))),
+        env=env,
+    )
+    return out
+
+
+def test_all_graphs_emitted(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    expected = {
+        "polar_encode",
+        "polar_key_scores",
+        "polar_value_combine",
+        "quantized_attention",
+        "model_prefill",
+        "model_decode_step",
+    }
+    assert set(manifest["graphs"]) == expected
+    for name, g in manifest["graphs"].items():
+        text = (artifacts / g["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_arg_shapes_match_lowering(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    cfg = M.MINI
+    g = manifest["graphs"]["model_prefill"]
+    assert g["args"][0]["name"] == "tokens"
+    assert g["args"][0]["shape"] == [manifest["shapes"]["prefill_s"]]
+    # One arg per parameter, in canonical order.
+    param_args = [a for a in g["args"] if a["name"].startswith("param:")]
+    assert [a["name"][6:] for a in param_args] == cfg.params_order
+    for a in param_args:
+        assert tuple(a["shape"]) == cfg.param_shape(a["name"][6:])
+
+
+def test_manifest_codebooks_sorted(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    for level, book in manifest["codebooks"].items():
+        c = book["centroids"]
+        assert c == sorted(c), level
+        assert len(c) == 1 << book["bits"]
+        assert len(book["boundaries"]) == len(c) - 1
+
+
+def test_weights_file_loads(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    cfg, params = M.load_weights(str(artifacts / manifest["weights_file"]))
+    assert cfg.vocab == manifest["model"]["vocab"]
+    assert set(params) == set(cfg.params_order)
+
+
+def test_hlo_text_int64_free(artifacts):
+    """xla_extension 0.5.1 rejects 64-bit ids; the *text* path sidesteps
+    ids, but the graphs themselves must also avoid s64/u64 tensors at the
+    interface (the rust Literal layer feeds i32/f32 only)."""
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    for name, g in manifest["graphs"].items():
+        for a in g["args"]:
+            assert a["dtype"] in ("float32", "int32"), (name, a)
+
+
+def test_entries_lower_under_jit_without_error():
+    # Smoke: build_entries' specs are jit-lowerable (no concretization).
+    cfg = M.ModelConfig(vocab=32, d_model=32, n_layers=1, n_heads=2, head_dim=16, d_ff=32)
+    entries = aot.build_entries(cfg)
+    # Only the small codec graphs here (model graphs covered by the
+    # artifacts fixture); keep the test fast.
+    for name, fn, specs, _ in entries[:3]:
+        jax.jit(fn).lower(*specs)

@@ -1,0 +1,190 @@
+"""Pallas kernels vs the pure-jnp oracle, across hypothesis-generated
+shapes and inputs. This is the CORE L1 correctness signal."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import codebooks as cb
+from compile.kernels import polar as K
+from compile.kernels import ref
+
+BOOKS = cb.paper_default_books()
+BNDS = [jnp.asarray(b) for _, b in BOOKS]
+CENTS = [jnp.asarray(c) for c, _ in BOOKS]
+
+
+def _rows(n, d, seed=0, scale=1.0):
+    return jnp.asarray(
+        scale
+        * np.random.default_rng(seed).standard_normal((n, d)).astype(np.float32)
+    )
+
+
+def _rot(d, seed=0):
+    return jnp.asarray(cb.haar_rotation(d, seed))
+
+
+# -- encode -----------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 96, 256]),
+    d=st.sampled_from([16, 32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 40.0]),
+)
+def test_encode_matches_ref(n, d, seed, scale):
+    x = _rows(n, d, seed, scale)
+    rot = _rot(d, seed % 100)
+    radii, codes = K.polar_encode(x, rot, BNDS, levels=4)
+    radii_r, codes_r = ref.polar_encode(x, rot, BNDS, 4)
+    np.testing.assert_allclose(
+        np.asarray(radii), np.asarray(radii_r), rtol=1e-4, atol=1e-5
+    )
+    for a, b in zip(codes, codes_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_encode_block_boundary_independence():
+    # Same rows must encode identically regardless of block tiling.
+    x = _rows(256, 64, 5)
+    rot = _rot(64, 5)
+    r1, c1 = K.polar_encode(x, rot, BNDS, levels=4, block_n=256)
+    r2, c2 = K.polar_encode(x, rot, BNDS, levels=4, block_n=32)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-6)
+    for a, b in zip(c1, c2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- key scores ---------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([16, 64, 256]),
+    b=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_key_scores_matches_ref(n, b, seed):
+    d = 64
+    x = _rows(n, d, seed)
+    q = _rows(b, d, seed + 1)
+    rot = _rot(d, seed % 50)
+    radii, codes = ref.polar_encode(x, rot, BNDS, 4)
+    got = K.key_scores(q, radii, codes, CENTS)
+    want = ref.quantized_key_scores(q, radii, codes, CENTS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_key_scores_tiling_independence():
+    d = 64
+    x = _rows(128, d, 6)
+    q = _rows(4, d, 7)
+    radii, codes = ref.polar_encode(x, _rot(d, 1), BNDS, 4)
+    s1 = K.key_scores(q, radii, codes, CENTS, block_n=128)
+    s2 = K.key_scores(q, radii, codes, CENTS, block_n=16)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)
+
+
+# -- value combine ------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([16, 64, 256]),
+    b=st.sampled_from([1, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_value_combine_matches_ref(n, b, seed):
+    d = 64
+    x = _rows(n, d, seed)
+    w = jax.nn.softmax(_rows(b, n, seed + 2), axis=-1)
+    radii, codes = ref.polar_encode(x, _rot(d, seed % 50), BNDS, 4)
+    got = K.value_combine(w, radii, codes, CENTS)
+    want = w @ ref.decode_preconditioned(radii, codes, CENTS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_value_combine_accumulates_across_blocks():
+    # The accumulate-across-grid-steps pattern must equal single-block.
+    d = 64
+    x = _rows(96, d, 8)
+    w = jax.nn.softmax(_rows(2, 96, 9), axis=-1)
+    radii, codes = ref.polar_encode(x, _rot(d, 2), BNDS, 4)
+    v1 = K.value_combine(w, radii, codes, CENTS, block_n=96)
+    v2 = K.value_combine(w, radii, codes, CENTS, block_n=32)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5, atol=1e-6)
+
+
+# -- fused attention ----------------------------------------------------------
+
+
+def test_quantized_attention_matches_ref():
+    d = 64
+    n = 128
+    k = _rows(n, d, 10)
+    v = _rows(n, d, 11)
+    q = _rows(4, d, 12)
+    rot = _rot(d, 3)
+    kr, kc = ref.polar_encode(k, rot, BNDS, 4)
+    vr, vc = ref.polar_encode(v, rot, BNDS, 4)
+    got = K.quantized_attention(q, kr, kc, vr, vc, CENTS, rot)
+    want = ref.quantized_attention(q, kr, kc, vr, vc, CENTS, rot)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_attention_tracks_exact():
+    d = 64
+    n = 64
+    k = _rows(n, d, 13)
+    v = _rows(n, d, 14)
+    q = _rows(2, d, 15)
+    rot = _rot(d, 4)
+    kr, kc = ref.polar_encode(k, rot, BNDS, 4)
+    vr, vc = ref.polar_encode(v, rot, BNDS, 4)
+    got = np.asarray(K.quantized_attention(q, kr, kc, vr, vc, CENTS, rot))
+    probs = ref.softmax(q @ k.T / math.sqrt(d))
+    want = np.asarray(probs @ v)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.35, rel
+
+
+# -- degenerate inputs --------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", ["zeros", "spike", "negative"])
+def test_encode_degenerate_inputs(case):
+    d = 64
+    x = np.zeros((16, d), np.float32)
+    if case == "spike":
+        x[:, 5] = 100.0
+    elif case == "negative":
+        x[:] = -1.0
+    x = jnp.asarray(x)
+    rot = _rot(d, 6)
+    radii, codes = K.polar_encode(x, rot, BNDS, levels=4)
+    assert np.isfinite(np.asarray(radii)).all()
+    for c in codes:
+        arr = np.asarray(c)
+        assert (arr < 16).all()
+
+
+def test_jit_compiles_and_matches_eager():
+    d = 64
+    x = _rows(32, d, 16)
+    rot = _rot(d, 7)
+
+    def enc(x):
+        r, c = K.polar_encode(x, rot, BNDS, levels=4)
+        return (r,) + tuple(ci.astype(jnp.int32) for ci in c)
+
+    eager = enc(x)
+    jitted = jax.jit(enc)(x)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,98 @@
+"""L2 model correctness: shapes, causality, prefill/decode agreement,
+weights round-trip."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16, d_ff=48)
+
+
+def _params():
+    return M.init_params(CFG, seed=1)
+
+
+def test_prefill_shapes():
+    p = _params()
+    toks = jnp.arange(10, dtype=jnp.int32) % CFG.vocab
+    logits, k, v = M.prefill(p, CFG, toks)
+    assert logits.shape == (10, CFG.vocab)
+    assert k.shape == (CFG.n_layers, 10, CFG.n_heads, CFG.head_dim)
+    assert v.shape == k.shape
+
+
+def test_prefill_is_causal():
+    # Changing a later token must not change earlier logits.
+    p = _params()
+    t1 = jnp.asarray(np.arange(12) % CFG.vocab, jnp.int32)
+    t2 = t1.at[8].set((int(t1[8]) + 7) % CFG.vocab)
+    l1, _, _ = M.prefill(p, CFG, t1)
+    l2, _, _ = M.prefill(p, CFG, t2)
+    np.testing.assert_allclose(np.asarray(l1[:8]), np.asarray(l2[:8]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[8:]), np.asarray(l2[8:]), atol=1e-5)
+
+
+def test_decode_step_matches_prefill():
+    """Teacher-forced decode over the same tokens reproduces prefill
+    logits (the prefill/decode consistency invariant the Rust runtime
+    relies on)."""
+    p = _params()
+    s = 9
+    maxlen = 16
+    toks = jnp.asarray((np.arange(s) * 5 + 3) % CFG.vocab, jnp.int32)
+    want, _, _ = M.prefill(p, CFG, toks)
+
+    k_cache = jnp.zeros((CFG.n_layers, maxlen, CFG.n_heads, CFG.head_dim))
+    v_cache = jnp.zeros_like(k_cache)
+    for i in range(s):
+        logits, nk, nv = M.decode_step(p, CFG, toks[i], jnp.int32(i), k_cache, v_cache)
+        k_cache = k_cache.at[:, i].set(nk)
+        v_cache = v_cache.at[:, i].set(nv)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(want[i]), rtol=2e-3, atol=2e-4
+        )
+
+
+def test_decode_ignores_unwritten_cache_rows():
+    p = _params()
+    maxlen = 8
+    k1 = jnp.zeros((CFG.n_layers, maxlen, CFG.n_heads, CFG.head_dim))
+    v1 = jnp.zeros_like(k1)
+    # Garbage beyond pos must not matter.
+    k2 = k1.at[:, 5:].set(99.0)
+    v2 = v1.at[:, 5:].set(-99.0)
+    tok = jnp.int32(3)
+    l1, _, _ = M.decode_step(p, CFG, tok, jnp.int32(0), k1, v1)
+    l2, _, _ = M.decode_step(p, CFG, tok, jnp.int32(0), k2, v2)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+
+
+def test_rope_rotates_pairs():
+    ang = M.rope_angles(CFG, jnp.asarray([0, 1]))
+    x = jnp.ones((2, 1, CFG.head_dim))
+    y = M.apply_rope(x, ang)
+    # Position 0: identity.
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x[0]), atol=1e-6)
+    # Norms preserved at every position.
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y[1])), np.linalg.norm(np.asarray(x[1])), rtol=1e-5
+    )
+
+
+def test_weights_roundtrip(tmp_path):
+    p = _params()
+    path = str(tmp_path / "w.bin")
+    M.save_weights(path, CFG, p)
+    cfg2, p2 = M.load_weights(path)
+    assert cfg2 == CFG
+    for name in CFG.params_order:
+        np.testing.assert_array_equal(np.asarray(p[name]), np.asarray(p2[name]))
+
+
+def test_param_count_matches_shapes():
+    n = CFG.num_params()
+    total = sum(int(np.prod(CFG.param_shape(name))) for name in CFG.params_order)
+    assert n == total
+    # Mini config is the documented ~3.7M params.
+    assert 3_500_000 < M.MINI.num_params() < 4_000_000

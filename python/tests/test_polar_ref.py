@@ -1,0 +1,130 @@
+"""Correctness of the pure-jnp reference codec (the oracle itself).
+
+These tests pin the oracle to the paper's math (Definition 1, Lemma 1/2,
+Algorithm 1) — independent of the Pallas kernels, which are tested against
+this oracle in test_kernels.py.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import codebooks as cb
+from compile.kernels import ref
+
+
+def _rows(n, d, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((n, d)).astype(np.float32)
+    )
+
+
+@pytest.mark.parametrize("d,levels", [(4, 1), (4, 2), (16, 4), (64, 4), (128, 4), (64, 6)])
+def test_polar_roundtrip_exact(d, levels):
+    x = _rows(16, d)
+    r, a = ref.polar_forward(x, levels)
+    y = ref.polar_inverse(r, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=2e-5)
+
+
+def test_polar_shapes_match_definition_1():
+    x = _rows(8, 16)
+    r, a = ref.polar_forward(x, 4)
+    assert r.shape == (8, 1)
+    assert [ai.shape[1] for ai in a] == [8, 4, 2, 1]
+
+
+def test_angle_ranges():
+    x = _rows(64, 32, seed=1)
+    _, a = ref.polar_forward(x, 5)
+    a1 = np.asarray(a[0])
+    assert (a1 >= 0).all() and (a1 < 2 * math.pi).all()
+    for ai in a[1:]:
+        v = np.asarray(ai)
+        assert (v >= 0).all() and (v <= math.pi / 2 + 1e-6).all()
+
+
+def test_radius_is_norm():
+    x = _rows(16, 64, seed=2)
+    r, _ = ref.polar_forward(x, 6)
+    np.testing.assert_allclose(
+        np.asarray(r[:, 0]), np.linalg.norm(np.asarray(x), axis=1), rtol=1e-5
+    )
+
+
+def test_quantize_angles_against_searchsorted():
+    bnd = jnp.asarray(np.array([0.3, 0.7, 1.1], np.float32))
+    angles = _rows(4, 8, seed=3) % (math.pi / 2)
+    codes = ref.quantize_angles(angles, bnd)
+    want = np.searchsorted(np.asarray(bnd), np.asarray(angles), side="left")
+    np.testing.assert_array_equal(np.asarray(codes), want.astype(np.uint8))
+
+
+def test_encode_decode_relative_error_small():
+    d = 64
+    x = _rows(64, d, seed=4)
+    books = cb.paper_default_books()
+    bnds = [jnp.asarray(b) for _, b in books]
+    cents = [jnp.asarray(c) for c, _ in books]
+    rot = jnp.asarray(cb.haar_rotation(d, 7))
+    radii, codes = ref.polar_encode(x, rot, bnds, 4)
+    y = ref.polar_decode(radii, codes, rot, cents)
+    rel = np.linalg.norm(np.asarray(y - x)) / np.linalg.norm(np.asarray(x))
+    assert rel < 0.25, rel
+
+
+def test_quantized_attention_close_to_exact():
+    d = 64
+    n = 96
+    k = _rows(n, d, seed=5)
+    v = _rows(n, d, seed=6)
+    q = _rows(4, d, seed=7)
+    books = cb.paper_default_books()
+    bnds = [jnp.asarray(b) for _, b in books]
+    cents = [jnp.asarray(c) for c, _ in books]
+    rot = jnp.asarray(cb.haar_rotation(d, 8))
+    kr, kc = ref.polar_encode(k, rot, bnds, 4)
+    vr, vc = ref.polar_encode(v, rot, bnds, 4)
+    out = ref.quantized_attention(q, kr, kc, vr, vc, cents, rot)
+    # exact attention
+    scores = q @ k.T / math.sqrt(d)
+    probs = ref.softmax(scores)
+    want = probs @ v
+    rel = np.linalg.norm(np.asarray(out - want)) / np.linalg.norm(np.asarray(want))
+    assert rel < 0.35, rel
+
+
+def test_codebook_monotone_and_normalized():
+    for level in range(1, 5):
+        cent, bnd = cb.lloyd_max(level, 3)
+        assert (np.diff(cent) > 0).all()
+        assert (np.diff(bnd) > 0).all()
+        lo, hi = (0, 2 * math.pi) if level == 1 else (0, math.pi / 2)
+        assert cent[0] > lo and cent[-1] < hi
+
+
+def test_pdf_integrates_to_one():
+    for level in range(1, 6):
+        lo, hi = (0, 2 * math.pi) if level == 1 else (0, math.pi / 2)
+        t = np.linspace(lo, hi, 40001)
+        f = cb.angle_pdf(level, t)
+        total = np.trapezoid(f, t)
+        assert abs(total - 1) < 1e-4, (level, total)
+
+
+def test_lloyd_max_beats_uniform():
+    level, bits = 4, 2
+    cent, bnd = cb.lloyd_max(level, bits)
+    k = 1 << bits
+    u_cent = (np.arange(k) + 0.5) * (math.pi / 2) / k
+    rng = np.random.default_rng(9)
+    # Sample from the analytic law by inverse CDF.
+    samples = cb.angle_quantile(level, rng.random(20000))
+
+    def mse(c):
+        d = np.abs(samples[:, None] - c[None, :])
+        return (d.min(axis=1) ** 2).mean()
+
+    assert mse(cent) < 0.9 * mse(u_cent)

@@ -1,0 +1,81 @@
+//! Ablations over PolarQuant's design choices (DESIGN.md index):
+//! recursion depth, bit allocation, preconditioner kind, codebook
+//! construction — each scored by bits/coordinate and reconstruction
+//! error on realistic KV data, plus the §4 memory table.
+
+mod common;
+
+use polarquant::eval::{ablation, report};
+use polarquant::kvcache::accounting::memory_table;
+
+fn print_points(title: &str, pts: &[ablation::AblationPoint], slug: &str) {
+    let mut t = report::Table::new(title, &["setting", "bits/coord", "rel error"]);
+    for p in pts {
+        t.row(vec![
+            p.label.clone(),
+            report::f(p.bits_per_coord, 3),
+            report::f(p.rel_error, 4),
+        ]);
+    }
+    t.print();
+    if let Ok(p) = t.save_csv(slug) {
+        println!("saved {p}");
+    }
+}
+
+fn main() {
+    common::banner(
+        "Ablations — PolarQuant design choices",
+        "levels, bit allocation, preconditioner, codebooks, memory accounting",
+    );
+    let d = 64;
+    let n = if common::full_scale() { 512 } else { 128 };
+    let rows = ablation::test_rows(d, n, 3);
+
+    print_points("recursion depth L (bits 4,2,…)", &ablation::sweep_levels(d, &rows), "ablation_levels");
+    print_points(
+        "bit allocation at L=4",
+        &ablation::sweep_bit_allocation(d, &rows),
+        "ablation_bits",
+    );
+    print_points(
+        "preconditioner (paper layout)",
+        &ablation::sweep_preconditioner(d, &rows),
+        "ablation_precond",
+    );
+    print_points(
+        "codebook construction (§4.1)",
+        &ablation::sweep_codebooks(d, &rows),
+        "ablation_codebooks",
+    );
+
+    // §4 memory accounting at the paper's d=128.
+    let mem = memory_table(128, 4096);
+    let mut t = report::Table::new(
+        "§4 memory — bits/coordinate (d=128, n=4096)",
+        &["method", "bits/coord", "× vs fp16", "overhead bits"],
+    );
+    for r in &mem {
+        t.row(vec![
+            r.method.clone(),
+            report::f(r.bits_per_coord, 3),
+            report::f(r.compression_vs_fp16, 3),
+            report::f(r.overhead_bits, 3),
+        ]);
+    }
+    t.print();
+    if let Ok(p) = t.save_csv("memory_accounting_bench") {
+        println!("saved {p}");
+    }
+    let pq = mem.iter().find(|r| r.method == "polarquant").unwrap();
+    println!(
+        "\nshape check — paper §4: 3.875 bits/coord, ×4+ compression: {:.3} bits, ×{:.3} → {}",
+        pq.bits_per_coord,
+        pq.compression_vs_fp16,
+        if (pq.bits_per_coord - 3.875).abs() < 1e-9 && pq.compression_vs_fp16 > 4.0 {
+            "PASS"
+        } else {
+            "CHECK"
+        }
+    );
+}

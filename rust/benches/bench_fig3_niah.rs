@@ -1,0 +1,75 @@
+//! Fig. 3: Needle-In-A-Haystack recall grids for the paper's five-method
+//! lineup at compression ratio 0.25, printed as text heatmaps (green/red
+//! in the paper → deciles 0–9 here) plus the mean-recall summary.
+
+mod common;
+
+use polarquant::eval::{niah, report};
+use polarquant::quant::registry::FIG3_METHODS;
+
+fn main() {
+    common::banner(
+        "Fig. 3 — Needle-In-A-Haystack (attention-retrieval recall)",
+        "quantization methods beat token eviction; PolarQuant best; streaming loses mid-depth",
+    );
+    let cfg = if common::full_scale() {
+        niah::NiahConfig {
+            contexts: vec![256, 512, 1024, 2048, 4096, 8192, 16384],
+            depths: 10,
+            trials: 16,
+            ..Default::default()
+        }
+    } else {
+        niah::NiahConfig {
+            contexts: vec![256, 512, 1024, 2048],
+            depths: 5,
+            trials: 6,
+            ..Default::default()
+        }
+    };
+    let col: Vec<String> = cfg.contexts.iter().map(|c| c.to_string()).collect();
+    let rows_l: Vec<String> = (0..cfg.depths)
+        .map(|d| format!("{}%", d * 100 / cfg.depths))
+        .collect();
+
+    let mut methods = vec!["exact"];
+    methods.extend_from_slice(FIG3_METHODS);
+    methods.push("streamingllm");
+    methods.push("polarquant-r-online");
+
+    let mut summary = report::Table::new(
+        "Fig. 3 mean recall (ratio 0.25)",
+        &["method", "mean recall"],
+    );
+    let mut results = Vec::new();
+    for m in &methods {
+        let t = std::time::Instant::now();
+        let r = niah::run_method(m, &cfg);
+        print!(
+            "{}",
+            report::heatmap(&format!("Fig. 3 — {m} ({:.1}s)", t.elapsed().as_secs_f64()), &col, &rows_l, &r.recall)
+        );
+        summary.row(vec![m.to_string(), report::f(r.mean_recall, 3)]);
+        results.push(r);
+    }
+    summary.print();
+    if let Ok(p) = summary.save_csv("fig3_niah_bench") {
+        println!("saved {p}");
+    }
+
+    // Paper-shape checks.
+    let get = |name: &str| results.iter().find(|r| r.method == name).map(|r| r.mean_recall);
+    let polar = get("polarquant-r-offline").unwrap_or(0.0);
+    let kivi = get("kivi").unwrap_or(0.0);
+    let snap = get("snapkv").unwrap_or(1.0);
+    let stream = get("streamingllm").unwrap_or(1.0);
+    println!("\nshape checks:");
+    println!(
+        "  quantization > eviction: polar {polar:.3} / kivi {kivi:.3} vs snapkv {snap:.3} → {}",
+        if polar > snap && kivi > snap { "PASS" } else { "CHECK" }
+    );
+    println!(
+        "  streaming collapses: {stream:.3} ≪ polar {polar:.3} → {}",
+        if polar > stream + 0.2 { "PASS" } else { "CHECK" }
+    );
+}

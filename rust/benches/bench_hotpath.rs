@@ -1,0 +1,84 @@
+//! Hot-path microbenchmarks (§Perf): codec encode/decode throughput,
+//! fused score kernel, rotation application, attention step over each
+//! cache type. This is the bench the L3 optimization loop iterates on;
+//! EXPERIMENTS.md §Perf records its before/after numbers.
+
+mod common;
+
+use polarquant::math::rotation::PreconditionKind;
+use polarquant::polar::quantizer::{PolarConfig, PolarQuantizer};
+use polarquant::quant::compressor::KvBlock;
+use polarquant::quant::registry::{build_method, MethodContext};
+use polarquant::util::rng::{Pcg64, Rng};
+use polarquant::util::timer::{bench, print_result};
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_gaussian(&mut v);
+    v
+}
+
+fn main() {
+    common::banner(
+        "Hot-path microbenchmarks",
+        "codec + fused attention throughput (the §Perf optimization loop)",
+    );
+    let d = 64;
+    let n = 1024;
+    let rows = gaussian(n * d, 1);
+    let target = if common::full_scale() { 2.0 } else { 0.4 };
+
+    // Encode.
+    let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(d));
+    let r = bench("polar encode (1024 × d64)", target, || {
+        std::hint::black_box(pq.encode_batch(&rows));
+    });
+    print_result(&r);
+    println!("  → {:.1} vectors/ms", n as f64 / (r.mean_s * 1e3));
+
+    // Decode (preconditioned basis — the attention hot path).
+    let codes = pq.encode_batch(&rows);
+    let mut out = vec![0.0f32; d];
+    let r = bench("polar decode_pre (1024 × d64)", target, || {
+        for c in &codes {
+            pq.decode_preconditioned(c, &mut out);
+            std::hint::black_box(&out);
+        }
+    });
+    print_result(&r);
+    println!("  → {:.1} vectors/ms", n as f64 / (r.mean_s * 1e3));
+
+    // Fused key-score pass per method (one decode-attention step).
+    let q = gaussian(d, 2);
+    for method in ["exact", "kivi", "qjl", "polarquant-r-offline"] {
+        let block = KvBlock::new(rows.clone(), rows.clone(), n, d);
+        let kv = build_method(method, 0.25, MethodContext::new(d)).compress(&block, &[]);
+        let mut scores = Vec::new();
+        let r = bench(&format!("key_scores {method} (n=1024)"), target, || {
+            kv.key_scores(&q, &mut scores);
+            std::hint::black_box(&scores);
+        });
+        print_result(&r);
+        println!(
+            "  → {:.2} Mtok/s scored",
+            kv.n_tokens() as f64 / r.mean_s / 1e6
+        );
+    }
+
+    // Rotation micro (per-query cost of the preconditioned-basis trick).
+    let rot_cfgs = [
+        ("haar dense d64", PreconditionKind::Haar),
+        ("fast hadamard d64", PreconditionKind::Hadamard),
+    ];
+    for (label, kind) in rot_cfgs {
+        let rot = polarquant::math::rotation::Rotation::new(kind, d, 3);
+        let x = gaussian(d, 4);
+        let mut y = vec![0.0f32; d];
+        let r = bench(label, target * 0.5, || {
+            rot.apply(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        print_result(&r);
+    }
+}

@@ -1,0 +1,79 @@
+//! Table 2: wall-clock prefill and generation time per method, on the
+//! same stack with only the cache method varying (scaled testbed; the
+//! claim under test is the relative cost shape — see DESIGN.md).
+
+mod common;
+
+use polarquant::eval::{report, runtime_bench};
+use polarquant::model::config::ModelConfig;
+use polarquant::quant::registry::TABLE1_METHODS;
+
+fn main() {
+    common::banner(
+        "Table 2 — prefill / generation wall-clock",
+        "eviction ≤ exact < quantized decode; online-codebook prefill ≫ offline",
+    );
+    let cfg = if common::full_scale() {
+        runtime_bench::RuntimeBenchConfig {
+            model: ModelConfig::mini(),
+            prompt_len: 4096,
+            gen_tokens: 256,
+            ..Default::default()
+        }
+    } else {
+        runtime_bench::RuntimeBenchConfig {
+            model: ModelConfig::mini(),
+            prompt_len: 768,
+            gen_tokens: 32,
+            ..Default::default()
+        }
+    };
+    let rows = runtime_bench::run(TABLE1_METHODS, &cfg);
+    let mut t = report::Table::new(
+        &format!("Table 2 (n={}, {} generated)", cfg.prompt_len, cfg.gen_tokens),
+        &["Method", "Prefill (s)", "compress (s)", "Generation (s)", "tok/s", "cache MB"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.method.clone(),
+            report::f(r.prefill_s, 3),
+            report::f(r.compress_s, 3),
+            report::f(r.generation_s, 3),
+            report::f(r.tokens_per_s, 1),
+            report::f(r.cache_bytes as f64 / 1e6, 3),
+        ]);
+    }
+    t.print();
+    if let Ok(p) = t.save_csv("table2_runtime_bench") {
+        println!("saved {p}");
+    }
+
+    let get = |name: &str| rows.iter().find(|r| r.method == name).unwrap();
+    let exact = get("exact");
+    let snap = get("snapkv");
+    let polar = get("polarquant-r-offline");
+    let online = get("polarquant-r-online");
+    println!("\nshape checks:");
+    println!(
+        "  eviction decode ≤ exact decode: snap {:.3}s vs exact {:.3}s → {}",
+        snap.generation_s,
+        exact.generation_s,
+        if snap.generation_s <= exact.generation_s * 1.1 { "PASS" } else { "CHECK" }
+    );
+    println!(
+        "  quantized decode ≥ exact decode (dequant cost): polar {:.3}s vs exact {:.3}s → {}",
+        polar.generation_s,
+        exact.generation_s,
+        if polar.generation_s >= exact.generation_s * 0.9 { "PASS" } else { "CHECK" }
+    );
+    println!(
+        "  online prefill ≫ offline prefill (clustering): {:.3}s vs {:.3}s → {}",
+        online.prefill_s,
+        polar.prefill_s,
+        if online.compress_s > polar.compress_s * 1.5 { "PASS" } else { "CHECK" }
+    );
+    println!(
+        "  polar decode overhead vs exact: ×{:.2} (paper: ×1.14 with CUDA kernels; see EXPERIMENTS.md §Perf)",
+        polar.generation_s / exact.generation_s
+    );
+}

@@ -1,0 +1,22 @@
+//! Shared bench plumbing. Criterion is unavailable offline, so each bench
+//! target is `harness = false` with its own `main`, using
+//! `polarquant::util::timer::bench` for measurements and the eval
+//! harnesses for paper-figure regeneration.
+//!
+//! Scale: `PQ_BENCH_SCALE=full` runs paper-scale sweeps (minutes);
+//! default is a reduced grid that keeps `cargo bench` under a few
+//! minutes end-to-end while preserving every qualitative comparison.
+
+#[allow(dead_code)]
+pub fn full_scale() -> bool {
+    std::env::var("PQ_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+#[allow(dead_code)]
+pub fn banner(name: &str, what: &str) {
+    println!("\n################################################################");
+    println!("# {name}");
+    println!("# {what}");
+    println!("# scale: {}", if full_scale() { "full (PQ_BENCH_SCALE=full)" } else { "reduced (set PQ_BENCH_SCALE=full for paper-scale)" });
+    println!("################################################################");
+}

@@ -1,0 +1,181 @@
+//! Dynamic batcher: groups queued requests into admission batches under a
+//! (max size, max wait) policy, with a token budget per batch so one huge
+//! prompt cannot starve the step loop (continuous-batching admission).
+
+use crate::coordinator::request::Tracked;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per admission batch.
+    pub max_batch: usize,
+    /// Max prompt tokens per admission batch.
+    pub max_tokens: usize,
+    /// Max time the head-of-line request may wait before a partial batch
+    /// is released.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_tokens: 8192, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// FIFO queue + admission batching.
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    queue: VecDeque<Tracked>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, t: Tracked) {
+        self.queue.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Tokens queued in total (for backpressure decisions).
+    pub fn queued_tokens(&self) -> usize {
+        self.queue.iter().map(|t| t.req.prompt.len()).sum()
+    }
+
+    /// Whether a batch should be released now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        if self.queued_tokens() >= self.policy.max_tokens {
+            return true;
+        }
+        now.duration_since(self.queue.front().unwrap().arrived) >= self.policy.max_wait
+    }
+
+    /// Pop the next admission batch subject to the policy. `capacity_ok`
+    /// lets the scheduler veto admissions (e.g. the page pool is full):
+    /// admission stops at the first request the callback rejects, keeping
+    /// FIFO order (no head-of-line bypass → no starvation).
+    pub fn next_batch<F: FnMut(&Tracked) -> bool>(
+        &mut self,
+        mut capacity_ok: F,
+    ) -> Vec<Tracked> {
+        let mut out = Vec::new();
+        let mut tokens = 0usize;
+        while let Some(front) = self.queue.front() {
+            if out.len() >= self.policy.max_batch {
+                break;
+            }
+            let t = front.req.prompt.len();
+            if !out.is_empty() && tokens + t > self.policy.max_tokens {
+                break;
+            }
+            if !capacity_ok(front) {
+                break;
+            }
+            tokens += t;
+            out.push(self.queue.pop_front().unwrap());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenRequest;
+
+    fn req(id: u64, len: usize) -> Tracked {
+        Tracked::new(GenRequest::new(id, vec![1; len], 4))
+    }
+
+    #[test]
+    fn batches_up_to_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, ..Default::default() });
+        for i in 0..5 {
+            b.push(req(i, 10));
+        }
+        let batch = b.next_batch(|_| true);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].req.id, 0);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn token_budget_limits_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_tokens: 25,
+            ..Default::default()
+        });
+        for i in 0..4 {
+            b.push(req(i, 10));
+        }
+        let batch = b.next_batch(|_| true);
+        assert_eq!(batch.len(), 2, "10+10 fits, +10 exceeds 25");
+    }
+
+    #[test]
+    fn oversized_first_request_still_admitted() {
+        // A single prompt larger than max_tokens must not deadlock.
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_tokens: 8,
+            ..Default::default()
+        });
+        b.push(req(0, 100));
+        let batch = b.next_batch(|_| true);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn capacity_veto_preserves_fifo() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        for i in 0..3 {
+            b.push(req(i, 10));
+        }
+        // Reject id 1 → admission stops after id 0 (no bypass).
+        let batch = b.next_batch(|t| t.req.id != 1);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].req.id, 0);
+        assert_eq!(b.len(), 2);
+        // id 1 remains at the head.
+        let batch2 = b.next_batch(|_| true);
+        assert_eq!(batch2[0].req.id, 1);
+    }
+
+    #[test]
+    fn ready_respects_wait_and_size() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_tokens: 1000,
+            max_wait: Duration::from_millis(50),
+        });
+        assert!(!b.ready(Instant::now()));
+        b.push(req(0, 5));
+        assert!(!b.ready(Instant::now()), "single fresh request waits");
+        b.push(req(1, 5));
+        assert!(b.ready(Instant::now()), "max_batch reached");
+        let mut c = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_tokens: 1000,
+            max_wait: Duration::from_millis(0),
+        });
+        c.push(req(2, 5));
+        assert!(c.ready(Instant::now()), "zero wait releases immediately");
+    }
+}

@@ -1,0 +1,158 @@
+//! Serving metrics: counters, latency distributions, token throughput.
+//! Thread-safe (shared by workers + server); snapshots encode to JSON for
+//! the `/stats` endpoint and the bench reporters.
+
+use crate::util::json::Json;
+use crate::util::stats::Percentiles;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+struct Latencies {
+    ttft: Percentiles,
+    total: Percentiles,
+    prefill: Percentiles,
+    per_token: Percentiles,
+}
+
+/// Shared metrics hub.
+pub struct Metrics {
+    pub requests_in: AtomicU64,
+    pub requests_done: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub tokens_prefilled: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub cache_bytes: AtomicU64,
+    pub preemptions: AtomicU64,
+    lat: Mutex<Latencies>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            requests_in: AtomicU64::new(0),
+            requests_done: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            tokens_prefilled: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            cache_bytes: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            lat: Mutex::new(Latencies::default()),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_done(&self, timing: &crate::coordinator::request::Timing, gen_tokens: usize) {
+        self.requests_done.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated
+            .fetch_add(gen_tokens as u64, Ordering::Relaxed);
+        let mut lat = self.lat.lock().unwrap();
+        lat.ttft.add(timing.ttft_s);
+        lat.total.add(timing.total_s);
+        lat.prefill.add(timing.prefill_s);
+        if gen_tokens > 0 {
+            lat.per_token.add(timing.decode_s / gen_tokens as f64);
+        }
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Generated tokens per second since start.
+    pub fn throughput(&self) -> f64 {
+        self.tokens_generated.load(Ordering::Relaxed) as f64 / self.uptime_s().max(1e-9)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let lat = self.lat.lock().unwrap();
+        let pct = |p: &Percentiles| {
+            Json::from_pairs(vec![
+                ("p50", Json::num(p.pct(50.0))),
+                ("p90", Json::num(p.pct(90.0))),
+                ("p99", Json::num(p.pct(99.0))),
+                ("mean", Json::num(p.mean())),
+            ])
+        };
+        Json::from_pairs(vec![
+            ("uptime_s", Json::num(self.uptime_s())),
+            (
+                "requests",
+                Json::from_pairs(vec![
+                    ("in", Json::num(self.requests_in.load(Ordering::Relaxed) as f64)),
+                    ("done", Json::num(self.requests_done.load(Ordering::Relaxed) as f64)),
+                    (
+                        "rejected",
+                        Json::num(self.requests_rejected.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "tokens",
+                Json::from_pairs(vec![
+                    (
+                        "prefilled",
+                        Json::num(self.tokens_prefilled.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "generated",
+                        Json::num(self.tokens_generated.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            ("throughput_tok_s", Json::num(self.throughput())),
+            ("cache_bytes", Json::num(self.cache_bytes.load(Ordering::Relaxed) as f64)),
+            ("preemptions", Json::num(self.preemptions.load(Ordering::Relaxed) as f64)),
+            ("ttft", pct(&lat.ttft)),
+            ("total", pct(&lat.total)),
+            ("prefill", pct(&lat.prefill)),
+            ("per_token", pct(&lat.per_token)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Timing;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.requests_in.fetch_add(3, Ordering::Relaxed);
+        let t = Timing { ttft_s: 0.1, total_s: 0.5, prefill_s: 0.05, decode_s: 0.4, queue_s: 0.0 };
+        m.record_done(&t, 10);
+        m.record_done(&t, 20);
+        assert_eq!(m.requests_done.load(Ordering::Relaxed), 2);
+        assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 30);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_valid_json_with_percentiles() {
+        let m = Metrics::new();
+        for i in 0..10 {
+            let t = Timing {
+                ttft_s: 0.01 * i as f64,
+                total_s: 0.1 * i as f64,
+                prefill_s: 0.005,
+                decode_s: 0.09,
+                queue_s: 0.0,
+            };
+            m.record_done(&t, 5);
+        }
+        let snap = m.snapshot();
+        let parsed = crate::util::json::Json::parse(&snap.encode()).unwrap();
+        let p50 = parsed.path("ttft.p50").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p50 < 0.1);
+        assert_eq!(parsed.path("requests.done").unwrap().as_f64().unwrap(), 10.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 serving coordinator: request router → dynamic batcher →
+//! continuous-batching scheduler → worker threads running the model with
+//! compressed KV caches. Python is never on this path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+pub mod worker;

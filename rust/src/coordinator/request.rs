@@ -1,0 +1,168 @@
+//! Request/response types of the serving API.
+
+use crate::model::sampler::SamplerConfig;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Cache compression method (registry name).
+    pub method: String,
+    /// Nominal compression ratio for eviction methods.
+    pub ratio: f64,
+    pub sampler: SamplerConfig,
+    /// Session key for router affinity (e.g. a conversation id).
+    pub session: Option<String>,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            method: "polarquant-r-offline".into(),
+            ratio: 0.25,
+            sampler: SamplerConfig::greedy(),
+            session: None,
+        }
+    }
+
+    /// Parse from the TCP JSON-lines protocol.
+    pub fn from_json(j: &Json, id: u64) -> Option<Self> {
+        let prompt: Vec<u32> = j
+            .get("prompt")?
+            .as_arr()?
+            .iter()
+            .filter_map(|t| t.as_f64())
+            .map(|t| t as u32)
+            .collect();
+        let mut r = GenRequest::new(id, prompt, 16);
+        if let Some(n) = j.get("max_new_tokens").and_then(|v| v.as_usize()) {
+            r.max_new_tokens = n;
+        }
+        if let Some(m) = j.get("method").and_then(|v| v.as_str()) {
+            r.method = m.to_string();
+        }
+        if let Some(x) = j.get("ratio").and_then(|v| v.as_f64()) {
+            r.ratio = x;
+        }
+        if let Some(t) = j.get("temperature").and_then(|v| v.as_f64()) {
+            r.sampler.temperature = t as f32;
+        }
+        if let Some(s) = j.get("session").and_then(|v| v.as_str()) {
+            r.session = Some(s.to_string());
+        }
+        Some(r)
+    }
+}
+
+/// Timing breakdown for one finished request.
+#[derive(Clone, Debug, Default)]
+pub struct Timing {
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    /// Time to first generated token (queue + prefill + first step).
+    pub ttft_s: f64,
+    pub decode_s: f64,
+    pub total_s: f64,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub timing: Timing,
+    /// Cache memory in bytes at completion.
+    pub cache_bytes: usize,
+    /// Achieved compression ratio vs fp16.
+    pub compression_ratio: f64,
+    pub method: String,
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("id", Json::num(self.id as f64)),
+            (
+                "tokens",
+                Json::Arr(self.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("method", Json::str(self.method.clone())),
+            ("cache_bytes", Json::num(self.cache_bytes as f64)),
+            ("compression_ratio", Json::num(self.compression_ratio)),
+            ("prefill_s", Json::num(self.timing.prefill_s)),
+            ("decode_s", Json::num(self.timing.decode_s)),
+            ("ttft_s", Json::num(self.timing.ttft_s)),
+            ("total_s", Json::num(self.timing.total_s)),
+        ])
+    }
+}
+
+/// Book-keeping wrapper while a request is in flight.
+pub struct Tracked {
+    pub req: GenRequest,
+    pub arrived: Instant,
+}
+
+impl Tracked {
+    pub fn new(req: GenRequest) -> Self {
+        Self { req, arrived: Instant::now() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"prompt": [1, 2, 3], "max_new_tokens": 8, "method": "kivi",
+                "temperature": 0.5, "session": "abc"}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&j, 42).unwrap();
+        assert_eq!(r.id, 42);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 8);
+        assert_eq!(r.method, "kivi");
+        assert!((r.sampler.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(r.session.as_deref(), Some("abc"));
+    }
+
+    #[test]
+    fn request_json_defaults() {
+        let j = Json::parse(r#"{"prompt": [7]}"#).unwrap();
+        let r = GenRequest::from_json(&j, 1).unwrap();
+        assert_eq!(r.method, "polarquant-r-offline");
+        assert_eq!(r.max_new_tokens, 16);
+    }
+
+    #[test]
+    fn request_json_missing_prompt_fails() {
+        let j = Json::parse(r#"{"max_new_tokens": 2}"#).unwrap();
+        assert!(GenRequest::from_json(&j, 1).is_none());
+    }
+
+    #[test]
+    fn response_serializes() {
+        let resp = GenResponse {
+            id: 7,
+            tokens: vec![1, 2],
+            timing: Timing { total_s: 1.5, ..Default::default() },
+            cache_bytes: 1024,
+            compression_ratio: 0.24,
+            method: "polarquant".into(),
+        };
+        let j = resp.to_json();
+        assert_eq!(j.get("id").unwrap().as_f64().unwrap(), 7.0);
+        let parsed = Json::parse(&j.encode()).unwrap();
+        assert_eq!(parsed.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

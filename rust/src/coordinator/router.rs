@@ -1,0 +1,109 @@
+//! Request router: spreads requests across worker replicas.
+//!
+//! Policy: session affinity when a session key is present (consistent
+//! hashing so a conversation's prefix cache stays on one replica), else
+//! least-loaded by outstanding token count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Router over `n` workers.
+pub struct Router {
+    /// Outstanding prompt tokens per worker (updated by the server).
+    load: Vec<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { load: (0..n).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.load.len()
+    }
+
+    /// FNV-1a hash for session affinity.
+    fn hash(s: &str) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in s.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Pick a worker for a request.
+    pub fn route(&self, session: Option<&str>, tokens: usize) -> usize {
+        let idx = match session {
+            Some(s) => (Self::hash(s) % self.load.len() as u64) as usize,
+            None => {
+                // Least loaded.
+                let mut best = 0;
+                let mut best_load = u64::MAX;
+                for (i, l) in self.load.iter().enumerate() {
+                    let v = l.load(Ordering::Relaxed);
+                    if v < best_load {
+                        best_load = v;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.load[idx].fetch_add(tokens as u64, Ordering::Relaxed);
+        idx
+    }
+
+    /// Mark a request's tokens as drained from a worker.
+    pub fn complete(&self, worker: usize, tokens: usize) {
+        self.load[worker].fetch_sub(
+            (tokens as u64).min(self.load[worker].load(Ordering::Relaxed)),
+            Ordering::Relaxed,
+        );
+    }
+
+    pub fn load_of(&self, worker: usize) -> u64 {
+        self.load[worker].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_affinity_is_stable() {
+        let r = Router::new(4);
+        let w1 = r.route(Some("conversation-42"), 10);
+        for _ in 0..10 {
+            assert_eq!(r.route(Some("conversation-42"), 10), w1);
+        }
+    }
+
+    #[test]
+    fn sessions_spread_across_workers() {
+        let r = Router::new(4);
+        let mut seen = [false; 4];
+        for i in 0..64 {
+            let w = r.route(Some(&format!("s{i}")), 1);
+            seen[w] = true;
+        }
+        assert!(seen.iter().filter(|&&b| b).count() >= 3, "hash should spread");
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let r = Router::new(3);
+        let a = r.route(None, 100);
+        let b = r.route(None, 100);
+        let c = r.route(None, 100);
+        let mut ws = vec![a, b, c];
+        ws.sort_unstable();
+        ws.dedup();
+        assert_eq!(ws.len(), 3, "each new request goes to the emptiest worker");
+        // After completions, load drains.
+        r.complete(a, 100);
+        assert_eq!(r.load_of(a), 0);
+        assert_eq!(r.route(None, 1), a);
+    }
+}

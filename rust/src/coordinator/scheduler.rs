@@ -1,0 +1,284 @@
+//! Continuous-batching scheduler (vLLM/Orca-style).
+//!
+//! Maintains the set of *active* sequences; each scheduler step either
+//! (a) admits new requests from the batcher when the page pool has room —
+//! running their prefills — or (b) runs one decode round across all
+//! active sequences. Decode-starved rounds preempt the newest sequence
+//! back to the queue when the pool runs dry mid-generation (recompute-on-
+//! resume policy, the simpler of vLLM's two).
+//!
+//! The scheduler is engine-agnostic: it drives a [`StepEngine`] trait so
+//! tests exercise the policy with a mock engine and the worker plugs in
+//! the real model.
+
+use crate::coordinator::request::{GenRequest, GenResponse, Timing, Tracked};
+use crate::kvcache::paged::PagedPool;
+use std::time::Instant;
+
+/// One active sequence's scheduler state.
+pub struct ActiveSeq {
+    pub req: GenRequest,
+    pub arrived: Instant,
+    pub prefill_done: Instant,
+    pub prefill_s: f64,
+    pub queue_s: f64,
+    pub generated: Vec<u32>,
+    pub ttft_s: Option<f64>,
+    pub decode_s: f64,
+    pub engine_id: u64,
+}
+
+/// What the engine must provide: prefill a sequence (returning its first
+/// generated token) and run one decode step for a sequence.
+pub trait StepEngine {
+    /// Prefill; returns (engine sequence id, first sampled token).
+    fn prefill(&mut self, req: &GenRequest) -> (u64, u32);
+    /// One decode step; returns the next token.
+    fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32;
+    /// Cache footprint in bytes for accounting (0 if unknown).
+    fn cache_bytes(&self, engine_id: u64) -> usize;
+    /// Achieved compression ratio (1.0 if unknown).
+    fn compression_ratio(&self, engine_id: u64) -> f64;
+    /// Release resources.
+    fn release(&mut self, engine_id: u64);
+}
+
+/// Scheduler outcome of one `step`.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    pub admitted: usize,
+    pub decoded: usize,
+    pub finished: Vec<GenResponse>,
+    pub preempted: usize,
+}
+
+/// The scheduler.
+pub struct Scheduler {
+    pub active: Vec<ActiveSeq>,
+    pub pool: PagedPool,
+    /// Max sequences decoding simultaneously.
+    pub max_active: usize,
+}
+
+impl Scheduler {
+    pub fn new(pool: PagedPool, max_active: usize) -> Self {
+        Self { active: Vec::new(), pool, max_active }
+    }
+
+    /// Can we admit a request of this prompt length right now?
+    pub fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        self.active.len() < self.max_active && self.pool.can_admit(prompt_len + max_new)
+    }
+
+    /// Admit a batch of requests (runs their prefills through the engine).
+    pub fn admit<E: StepEngine>(&mut self, batch: Vec<Tracked>, engine: &mut E) -> usize {
+        let mut n = 0;
+        for t in batch {
+            let now = Instant::now();
+            let queue_s = now.duration_since(t.arrived).as_secs_f64();
+            let prompt_len = t.req.prompt.len();
+            // Reserve pages for prompt + full generation budget up front
+            // (conservative admission → fewer preemptions).
+            if self
+                .pool
+                .register(t.req.id, prompt_len + t.req.max_new_tokens)
+                .is_err()
+            {
+                // Shouldn't happen if can_admit was checked; skip.
+                continue;
+            }
+            let t0 = Instant::now();
+            let (engine_id, first) = engine.prefill(&t.req);
+            let prefill_s = t0.elapsed().as_secs_f64();
+            let done = Instant::now();
+            self.active.push(ActiveSeq {
+                queue_s,
+                prefill_s,
+                prefill_done: done,
+                arrived: t.arrived,
+                generated: vec![first],
+                ttft_s: Some(done.duration_since(t.arrived).as_secs_f64()),
+                decode_s: 0.0,
+                engine_id,
+                req: t.req,
+            });
+            n += 1;
+        }
+        n
+    }
+
+    /// Run one decode round over all active sequences; collect finished.
+    pub fn decode_round<E: StepEngine>(&mut self, engine: &mut E) -> StepOutcome {
+        let mut outcome = StepOutcome::default();
+        let mut finished_idx = Vec::new();
+        for (i, seq) in self.active.iter_mut().enumerate() {
+            let pos = seq.req.prompt.len() + seq.generated.len() - 1;
+            let last = *seq.generated.last().unwrap();
+            let t0 = Instant::now();
+            let next = engine.decode(seq.engine_id, last, pos);
+            seq.decode_s += t0.elapsed().as_secs_f64();
+            seq.generated.push(next);
+            outcome.decoded += 1;
+            if seq.generated.len() >= seq.req.max_new_tokens {
+                finished_idx.push(i);
+            }
+        }
+        // Retire finished sequences (reverse order keeps indices valid).
+        for &i in finished_idx.iter().rev() {
+            let seq = self.active.remove(i);
+            let total_s = seq.arrived.elapsed().as_secs_f64();
+            let resp = GenResponse {
+                id: seq.req.id,
+                tokens: seq.generated.clone(),
+                timing: Timing {
+                    queue_s: seq.queue_s,
+                    prefill_s: seq.prefill_s,
+                    ttft_s: seq.ttft_s.unwrap_or(total_s),
+                    decode_s: seq.decode_s,
+                    total_s,
+                },
+                cache_bytes: engine.cache_bytes(seq.engine_id),
+                compression_ratio: engine.compression_ratio(seq.engine_id),
+                method: seq.req.method.clone(),
+            };
+            engine.release(seq.engine_id);
+            self.pool.release(seq.req.id).ok();
+            outcome.finished.push(resp);
+        }
+        outcome
+    }
+
+    /// Preempt the newest sequence (recompute-on-resume): its pages are
+    /// freed and the request re-queued by the caller.
+    pub fn preempt_newest<E: StepEngine>(&mut self, engine: &mut E) -> Option<GenRequest> {
+        let seq = self.active.pop()?;
+        engine.release(seq.engine_id);
+        self.pool.release(seq.req.id).ok();
+        Some(seq.req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::paged::PagedConfig;
+    use std::collections::BTreeMap;
+
+    /// Mock engine: next token = last + 1; tracks live sequences.
+    #[derive(Default)]
+    struct MockEngine {
+        next_id: u64,
+        live: BTreeMap<u64, usize>,
+        prefills: usize,
+        decodes: usize,
+    }
+
+    impl StepEngine for MockEngine {
+        fn prefill(&mut self, req: &GenRequest) -> (u64, u32) {
+            self.next_id += 1;
+            self.live.insert(self.next_id, req.prompt.len());
+            self.prefills += 1;
+            (self.next_id, 100)
+        }
+        fn decode(&mut self, _id: u64, last: u32, _pos: usize) -> u32 {
+            self.decodes += 1;
+            last + 1
+        }
+        fn cache_bytes(&self, _id: u64) -> usize {
+            4096
+        }
+        fn compression_ratio(&self, _id: u64) -> f64 {
+            0.25
+        }
+        fn release(&mut self, id: u64) {
+            self.live.remove(&id);
+        }
+    }
+
+    fn sched(pages: usize, max_active: usize) -> Scheduler {
+        let pool = PagedPool::new(PagedConfig {
+            page_tokens: 16,
+            token_bytes: 64,
+            num_pages: pages,
+        });
+        Scheduler::new(pool, max_active)
+    }
+
+    fn tracked(id: u64, prompt: usize, max_new: usize) -> Tracked {
+        Tracked::new(GenRequest::new(id, vec![1; prompt], max_new))
+    }
+
+    #[test]
+    fn admit_prefills_and_sets_ttft() {
+        let mut s = sched(64, 4);
+        let mut e = MockEngine::default();
+        let n = s.admit(vec![tracked(1, 32, 4), tracked(2, 32, 4)], &mut e);
+        assert_eq!(n, 2);
+        assert_eq!(e.prefills, 2);
+        assert_eq!(s.active.len(), 2);
+        assert!(s.active[0].ttft_s.unwrap() >= 0.0);
+        assert_eq!(s.active[0].generated, vec![100]);
+    }
+
+    #[test]
+    fn decode_rounds_finish_sequences() {
+        let mut s = sched(64, 4);
+        let mut e = MockEngine::default();
+        s.admit(vec![tracked(1, 8, 3)], &mut e);
+        let r1 = s.decode_round(&mut e);
+        assert_eq!(r1.decoded, 1);
+        assert!(r1.finished.is_empty());
+        let r2 = s.decode_round(&mut e);
+        assert_eq!(r2.finished.len(), 1, "3 tokens: prefill + 2 decodes");
+        let resp = &r2.finished[0];
+        assert_eq!(resp.tokens, vec![100, 101, 102]);
+        assert!(s.active.is_empty());
+        assert!(e.live.is_empty(), "engine released");
+        assert_eq!(s.pool.used_pages(), 0, "pages returned");
+    }
+
+    #[test]
+    fn admission_respects_pool_capacity() {
+        let mut s = sched(2, 8); // 2 pages × 16 tokens = 32 token budget
+        assert!(s.can_admit(16, 8)); // needs 2 pages
+        assert!(!s.can_admit(40, 8));
+        let mut e = MockEngine::default();
+        s.admit(vec![tracked(1, 16, 8)], &mut e);
+        assert!(!s.can_admit(16, 8), "pool exhausted");
+    }
+
+    #[test]
+    fn admission_respects_max_active() {
+        let mut s = sched(1024, 2);
+        let mut e = MockEngine::default();
+        s.admit(vec![tracked(1, 4, 8), tracked(2, 4, 8)], &mut e);
+        assert!(!s.can_admit(4, 8), "max_active reached");
+    }
+
+    #[test]
+    fn preempt_frees_resources() {
+        let mut s = sched(8, 4);
+        let mut e = MockEngine::default();
+        s.admit(vec![tracked(1, 16, 4), tracked(2, 16, 4)], &mut e);
+        let used = s.pool.used_pages();
+        let req = s.preempt_newest(&mut e).unwrap();
+        assert_eq!(req.id, 2);
+        assert!(s.pool.used_pages() < used);
+        assert_eq!(s.active.len(), 1);
+        assert_eq!(e.live.len(), 1);
+    }
+
+    #[test]
+    fn interleaved_admission_and_decode() {
+        let mut s = sched(64, 4);
+        let mut e = MockEngine::default();
+        s.admit(vec![tracked(1, 8, 5)], &mut e);
+        s.decode_round(&mut e);
+        s.admit(vec![tracked(2, 8, 2)], &mut e);
+        // Seq 2 finishes first (needs only 1 decode after prefill).
+        let r = s.decode_round(&mut e);
+        assert_eq!(r.finished.len(), 1);
+        assert_eq!(r.finished[0].id, 2);
+        assert_eq!(s.active.len(), 1);
+    }
+}

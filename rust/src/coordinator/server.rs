@@ -1,0 +1,398 @@
+//! The serving front end: worker threads (each a batcher + scheduler +
+//! native engine) behind a router, with an optional TCP JSON-lines
+//! endpoint. std threads + channels (no async runtime available offline;
+//! on this single-core box thread-per-component is the right shape).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": [1,2,3], "max_new_tokens": 8, "method": "kivi"}
+//!   ← {"id": 0, "tokens": [...], "prefill_s": ..., ...}
+//!   → {"cmd": "stats"}   ← metrics snapshot
+//!   → {"cmd": "shutdown"}
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{GenRequest, GenResponse, Tracked};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::worker::NativeWorker;
+use crate::kvcache::paged::{PagedConfig, PagedPool};
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub model: ModelConfig,
+    pub seed: u64,
+    pub workers: usize,
+    pub batch: BatchPolicy,
+    /// Page-pool size per worker, in tokens.
+    pub pool_tokens: usize,
+    pub max_active: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelConfig::mini(),
+            seed: 0,
+            workers: 1,
+            batch: BatchPolicy::default(),
+            pool_tokens: 1 << 16,
+            max_active: 8,
+        }
+    }
+}
+
+enum WorkerMsg {
+    Submit(Tracked),
+    Stop,
+}
+
+/// The in-process serving handle.
+pub struct Server {
+    router: Arc<Router>,
+    worker_txs: Vec<Sender<WorkerMsg>>,
+    resp_rx: Mutex<Receiver<(usize, GenResponse)>>,
+    pub metrics: Arc<Metrics>,
+    handles: Vec<thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    stopping: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Start worker threads, each with its own model replica.
+    pub fn start(cfg: ServerConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let router = Arc::new(Router::new(cfg.workers));
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let stopping = Arc::new(AtomicBool::new(false));
+        let mut worker_txs = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            let cfg_c = cfg.clone();
+            let resp_tx = resp_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let stopping = Arc::clone(&stopping);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("pq-serve-{w}"))
+                    .spawn(move || {
+                        worker_loop(w, cfg_c, rx, resp_tx, metrics, stopping);
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self {
+            router,
+            worker_txs,
+            resp_rx: Mutex::new(resp_rx),
+            metrics,
+            handles,
+            next_id: AtomicU64::new(0),
+            stopping,
+        }
+    }
+
+    /// Submit a request; returns its assigned id.
+    pub fn submit(&self, mut req: GenRequest) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        req.id = id;
+        self.metrics.requests_in.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .tokens_prefilled
+            .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+        let w = self.router.route(req.session.as_deref(), req.prompt.len());
+        self.worker_txs[w]
+            .send(WorkerMsg::Submit(Tracked::new(req)))
+            .expect("worker alive");
+        id
+    }
+
+    /// Receive the next finished response (blocking with timeout).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<GenResponse> {
+        match self.resp_rx.lock().unwrap().recv_timeout(timeout) {
+            Ok((w, resp)) => {
+                self.router.complete(w, resp.tokens.len());
+                Some(resp)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Submit and wait for this specific request (convenience; assumes a
+    /// single caller pattern or unique ids).
+    pub fn generate_blocking(&self, req: GenRequest, timeout: Duration) -> Option<GenResponse> {
+        let id = self.submit(req);
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remain = deadline.checked_duration_since(Instant::now())?;
+            let resp = self.recv_timeout(remain)?;
+            if resp.id == id {
+                return Some(resp);
+            }
+            // Out-of-order response for another caller — shouldn't happen
+            // in blocking usage; drop it (metrics already recorded).
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        for tx in &self.worker_txs {
+            let _ = tx.send(WorkerMsg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    worker_idx: usize,
+    cfg: ServerConfig,
+    rx: Receiver<WorkerMsg>,
+    resp_tx: Sender<(usize, GenResponse)>,
+    metrics: Arc<Metrics>,
+    stopping: Arc<AtomicBool>,
+) {
+    let weights = Weights::synthetic(&cfg.model, cfg.seed);
+    let mut engine = NativeWorker::new(weights);
+    let mut batcher = Batcher::new(cfg.batch.clone());
+    let pool = PagedPool::new(PagedConfig {
+        page_tokens: 16,
+        token_bytes: cfg.model.kv_bytes_per_token_fp16(),
+        num_pages: cfg.pool_tokens / 16,
+    });
+    let mut sched = Scheduler::new(pool, cfg.max_active);
+
+    loop {
+        // Drain the inbox (non-blocking when busy, blocking when idle).
+        let idle = sched.active.is_empty() && batcher.is_empty();
+        if idle {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(WorkerMsg::Submit(t)) => batcher.push(t),
+                Ok(WorkerMsg::Stop) => return,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stopping.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(WorkerMsg::Submit(t)) => batcher.push(t),
+                Ok(WorkerMsg::Stop) => return,
+                Err(_) => break,
+            }
+        }
+
+        // Admit when the batcher releases and capacity allows.
+        if batcher.ready(Instant::now()) || (!batcher.is_empty() && sched.active.is_empty()) {
+            let batch = batcher.next_batch(|t| {
+                sched.can_admit(t.req.prompt.len(), t.req.max_new_tokens)
+            });
+            if !batch.is_empty() {
+                sched.admit(batch, &mut engine);
+            } else if sched.active.is_empty() && !batcher.is_empty() {
+                // Head request cannot fit even an empty pool → reject it.
+                let dropped = batcher.next_batch(|_| true);
+                for t in dropped {
+                    metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                    let resp = GenResponse {
+                        id: t.req.id,
+                        tokens: vec![],
+                        timing: Default::default(),
+                        cache_bytes: 0,
+                        compression_ratio: 1.0,
+                        method: t.req.method,
+                    };
+                    let _ = resp_tx.send((worker_idx, resp));
+                }
+            }
+        }
+
+        // One decode round.
+        if !sched.active.is_empty() {
+            let outcome = sched.decode_round(&mut engine);
+            for resp in outcome.finished {
+                metrics.record_done(&resp.timing, resp.tokens.len());
+                metrics
+                    .cache_bytes
+                    .store(engine.total_cache_bytes() as u64, Ordering::Relaxed);
+                let _ = resp_tx.send((worker_idx, resp));
+            }
+        }
+    }
+}
+
+/// Serve the TCP JSON-lines protocol until a shutdown command arrives.
+pub fn run_tcp(server: Arc<Server>, listener: TcpListener) -> std::io::Result<()> {
+    listener.set_nonblocking(false)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        let server = Arc::clone(&server);
+        let shutdown = Arc::clone(&shutdown);
+        thread::spawn(move || {
+            let _ = handle_conn(server, stream, shutdown);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    server: Arc<Server>,
+    stream: TcpStream,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Err(e) => Json::from_pairs(vec![("error", Json::str(format!("bad json: {e}")))]),
+            Ok(j) => match j.get("cmd").and_then(|c| c.as_str()) {
+                Some("stats") => server.metrics.snapshot(),
+                Some("shutdown") => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    writeln!(writer, "{}", Json::from_pairs(vec![("ok", Json::Bool(true))]).encode())?;
+                    break;
+                }
+                Some(other) => {
+                    Json::from_pairs(vec![("error", Json::str(format!("unknown cmd {other}")))])
+                }
+                None => match GenRequest::from_json(&j, 0) {
+                    None => Json::from_pairs(vec![("error", Json::str("missing prompt"))]),
+                    Some(req) => match server.generate_blocking(req, Duration::from_secs(600)) {
+                        Some(resp) => resp.to_json(),
+                        None => Json::from_pairs(vec![("error", Json::str("timeout"))]),
+                    },
+                },
+            },
+        };
+        writeln!(writer, "{}", reply.encode())?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_server(workers: usize) -> Server {
+        Server::start(ServerConfig {
+            model: ModelConfig::test(),
+            seed: 3,
+            workers,
+            batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+            pool_tokens: 4096,
+            max_active: 4,
+        })
+    }
+
+    #[test]
+    fn generate_blocking_roundtrip() {
+        let s = test_server(1);
+        let req = GenRequest::new(0, (0..16).collect(), 4);
+        let resp = s.generate_blocking(req, Duration::from_secs(30)).expect("response");
+        assert_eq!(resp.tokens.len(), 4);
+        assert!(resp.timing.total_s > 0.0);
+        assert!(resp.timing.ttft_s > 0.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn multiple_requests_all_complete() {
+        let s = test_server(2);
+        let n = 6;
+        for i in 0..n {
+            let mut req = GenRequest::new(0, (0..(8 + i)).map(|x| x as u32).collect(), 3);
+            req.method = if i % 2 == 0 { "exact".into() } else { "polarquant-r-offline".into() };
+            s.submit(req);
+        }
+        let mut got = 0;
+        while got < n {
+            let resp = s
+                .recv_timeout(Duration::from_secs(60))
+                .expect("all requests complete");
+            assert_eq!(resp.tokens.len(), 3);
+            got += 1;
+        }
+        assert_eq!(s.metrics.requests_done.load(Ordering::Relaxed), n as u64);
+        s.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_rejected_not_hung() {
+        let s = Server::start(ServerConfig {
+            model: ModelConfig::test(),
+            seed: 3,
+            workers: 1,
+            batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+            pool_tokens: 64, // tiny pool
+            max_active: 4,
+        });
+        let req = GenRequest::new(0, vec![1; 512], 4);
+        let resp = s.generate_blocking(req, Duration::from_secs(30)).expect("reply");
+        assert!(resp.tokens.is_empty(), "rejected requests return no tokens");
+        assert_eq!(s.metrics.requests_rejected.load(Ordering::Relaxed), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let s = Arc::new(test_server(1));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let s2 = Arc::clone(&s);
+        let h = thread::spawn(move || {
+            let _ = run_tcp(s2, listener);
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"prompt": [1,2,3,4], "max_new_tokens": 2}}"#).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        // Stats.
+        writeln!(conn, r#"{{"cmd": "stats"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.path("requests.done").unwrap().as_f64().unwrap() >= 1.0);
+        // Shutdown the acceptor.
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        drop(conn);
+        // Unblock the accept loop with one extra connection attempt.
+        let _ = TcpStream::connect(addr);
+        h.join().unwrap();
+        match Arc::try_unwrap(s) {
+            Ok(srv) => srv.shutdown(),
+            Err(_) => {}
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! The worker: a [`StepEngine`] implementation backed by the native
+//! transformer + compressed per-sequence caches. One worker owns one model
+//! replica; the router spreads sequences across workers.
+
+use crate::coordinator::request::GenRequest;
+use crate::coordinator::scheduler::StepEngine;
+use crate::kvcache::sequence::{CacheConfig, SequenceCache};
+use crate::model::config::ModelConfig;
+use crate::model::sampler::Sampler;
+use crate::model::transformer::Transformer;
+use crate::model::weights::Weights;
+use std::collections::BTreeMap;
+
+/// Native-engine worker.
+pub struct NativeWorker {
+    pub model: Transformer,
+    next_id: u64,
+    sessions: BTreeMap<u64, Session>,
+}
+
+struct Session {
+    cache: SequenceCache,
+    sampler: Sampler,
+}
+
+impl NativeWorker {
+    pub fn new(weights: Weights) -> Self {
+        Self { model: Transformer::new(weights), next_id: 0, sessions: BTreeMap::new() }
+    }
+
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
+        Self::new(Weights::synthetic(cfg, seed))
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Total cache bytes across live sessions (for metrics/backpressure).
+    pub fn total_cache_bytes(&self) -> usize {
+        self.sessions.values().map(|s| s.cache.memory_bytes()).sum()
+    }
+}
+
+impl StepEngine for NativeWorker {
+    fn prefill(&mut self, req: &GenRequest) -> (u64, u32) {
+        let pre = self.model.prefill(&req.prompt);
+        let cache_cfg = CacheConfig::new(&req.method, req.ratio);
+        let cache = SequenceCache::from_prefill(&self.model.cfg, &cache_cfg, &pre);
+        let mut sampler = Sampler::new(req.sampler.clone());
+        let first = sampler.sample(pre.last_logits(self.model.cfg.vocab));
+        self.next_id += 1;
+        self.sessions.insert(self.next_id, Session { cache, sampler });
+        (self.next_id, first)
+    }
+
+    fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32 {
+        let session = self.sessions.get_mut(&engine_id).expect("live session");
+        let logits = self
+            .model
+            .decode_step(last_token, pos, &mut session.cache.caches);
+        session.cache.note_decoded();
+        session.sampler.sample(&logits)
+    }
+
+    fn cache_bytes(&self, engine_id: u64) -> usize {
+        self.sessions
+            .get(&engine_id)
+            .map(|s| s.cache.memory_bytes())
+            .unwrap_or(0)
+    }
+
+    fn compression_ratio(&self, engine_id: u64) -> f64 {
+        self.sessions
+            .get(&engine_id)
+            .map(|s| s.cache.compression_ratio(&self.model.cfg))
+            .unwrap_or(1.0)
+    }
+
+    fn release(&mut self, engine_id: u64) {
+        self.sessions.remove(&engine_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker() -> NativeWorker {
+        NativeWorker::synthetic(&ModelConfig::test(), 5)
+    }
+
+    fn req(id: u64, method: &str) -> GenRequest {
+        let mut r = GenRequest::new(id, (0..24).map(|i| i % 64).collect(), 4);
+        r.method = method.into();
+        r
+    }
+
+    #[test]
+    fn prefill_decode_release_lifecycle() {
+        let mut w = worker();
+        let (eid, first) = w.prefill(&req(1, "exact"));
+        assert!(w.live_sessions() == 1);
+        assert!(first < 64);
+        let t1 = w.decode(eid, first, 24);
+        assert!(t1 < 64);
+        assert!(w.cache_bytes(eid) > 0);
+        w.release(eid);
+        assert_eq!(w.live_sessions(), 0);
+    }
+
+    #[test]
+    fn greedy_generation_deterministic_across_workers() {
+        let mut w1 = worker();
+        let mut w2 = worker();
+        let r = req(1, "exact");
+        let (e1, f1) = w1.prefill(&r);
+        let (e2, f2) = w2.prefill(&r);
+        assert_eq!(f1, f2);
+        let mut last1 = f1;
+        let mut last2 = f2;
+        for i in 0..4 {
+            last1 = w1.decode(e1, last1, 24 + i);
+            last2 = w2.decode(e2, last2, 24 + i);
+            assert_eq!(last1, last2);
+        }
+    }
+
+    #[test]
+    fn quantized_method_reports_compression() {
+        let mut w = worker();
+        let (eid, _) = w.prefill(&req(1, "polarquant-r-offline"));
+        let ratio = w.compression_ratio(eid);
+        assert!(ratio < 0.4, "ratio {ratio}");
+        let (eid2, _) = w.prefill(&req(2, "exact"));
+        assert!(w.compression_ratio(eid2) > 0.9);
+    }
+
+    #[test]
+    fn quantized_generation_tracks_exact_early_tokens() {
+        // With a small cache and greedy decoding, PolarQuant generations
+        // should match exact for at least the first token (quality smoke).
+        let mut we = worker();
+        let mut wq = worker();
+        let (ee, fe) = we.prefill(&req(1, "exact"));
+        let (eq, fq) = wq.prefill(&req(1, "polarquant-r-offline"));
+        assert_eq!(fe, fq, "prefill logits identical (quantization starts at decode)");
+        let t_e = we.decode(ee, fe, 24);
+        let t_q = wq.decode(eq, fq, 24);
+        // Not guaranteed equal, but usually is on the test model; assert
+        // both valid tokens and report mismatch via message if it trips.
+        assert!(t_e < 64 && t_q < 64);
+    }
+}

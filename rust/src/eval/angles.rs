@@ -1,0 +1,178 @@
+//! Fig. 2: distributions of polar-transformed key-cache angles, with and
+//! without random preconditioning.
+//!
+//! The paper extracts a KV cache from a Qasper prompt; we extract one from
+//! the mini model run on a synthetic prompt *and* from the KV-statistics
+//! generator (both show the same effect — the claim is distributional).
+//! For each of the 4 levels we histogram the angles and report the total
+//! variation distance to the analytic law of Lemma 2; preconditioning
+//! must (a) flatten level-1 and (b) drive every level toward the law.
+
+use crate::math::rotation::{PreconditionKind, Rotation};
+use crate::polar::distribution::AngleDistribution;
+use crate::polar::transform::polar_forward;
+use crate::util::stats::Histogram;
+
+/// One level's result for one preconditioning setting.
+#[derive(Clone, Debug)]
+pub struct AngleLevelReport {
+    pub level: usize,
+    pub histogram: Histogram,
+    /// Total-variation distance between the empirical histogram and the
+    /// analytic density (Lemma 2), both discretized on the same bins.
+    pub tv_to_analytic: f64,
+    /// Empirical mean and std of the angles.
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Full Fig.-2 data: per-level reports with and without preconditioning.
+#[derive(Clone, Debug)]
+pub struct AngleExperiment {
+    pub with_precondition: Vec<AngleLevelReport>,
+    pub without_precondition: Vec<AngleLevelReport>,
+    pub n_vectors: usize,
+}
+
+/// Run the experiment on a batch of key rows (n × d).
+pub fn run(keys: &[f32], d: usize, levels: usize, bins: usize, seed: u64) -> AngleExperiment {
+    let n = keys.len() / d;
+    let rot = Rotation::new(PreconditionKind::Haar, d, seed);
+    let with_precondition = collect(keys, d, n, levels, bins, Some(&rot));
+    let without_precondition = collect(keys, d, n, levels, bins, None);
+    AngleExperiment { with_precondition, without_precondition, n_vectors: n }
+}
+
+fn collect(
+    keys: &[f32],
+    d: usize,
+    n: usize,
+    levels: usize,
+    bins: usize,
+    rot: Option<&Rotation>,
+) -> Vec<AngleLevelReport> {
+    let mut per_level: Vec<Vec<f64>> = vec![Vec::new(); levels];
+    let mut pre = vec![0.0f32; d];
+    for t in 0..n {
+        let row = &keys[t * d..(t + 1) * d];
+        let rep = match rot {
+            Some(r) => {
+                r.apply(row, &mut pre);
+                polar_forward(&pre, levels)
+            }
+            None => polar_forward(row, levels),
+        };
+        for (l, angles) in rep.angles.iter().enumerate() {
+            per_level[l].extend(angles.iter().map(|&a| a as f64));
+        }
+    }
+
+    per_level
+        .into_iter()
+        .enumerate()
+        .map(|(l, angles)| {
+            let dist = AngleDistribution::for_level(l + 1);
+            let (lo, hi) = dist.support();
+            let mut h = Histogram::new(lo, hi, bins);
+            h.extend(&angles);
+            // TV distance on the bin grid.
+            let w = (hi - lo) / bins as f64;
+            let emp = h.density();
+            let mut tv = 0.0;
+            for (i, &e) in emp.iter().enumerate() {
+                let mid = lo + (i as f64 + 0.5) * w;
+                tv += 0.5 * (e - dist.pdf(mid)).abs() * w;
+            }
+            let mean = crate::util::stats::mean(&angles);
+            let var = angles.iter().map(|a| (a - mean).powi(2)).sum::<f64>()
+                / angles.len().max(1) as f64;
+            AngleLevelReport { level: l + 1, histogram: h, tv_to_analytic: tv, mean, std: var.sqrt() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::workload::{KvGenConfig, KvGenerator};
+
+    fn realistic_keys(n: usize, d: usize) -> Vec<f32> {
+        let mut g = KvGenerator::new(KvGenConfig::realistic(d, 7));
+        g.block(n).keys
+    }
+
+    #[test]
+    fn preconditioning_improves_fit_to_analytic_law() {
+        let d = 64;
+        let keys = realistic_keys(256, d);
+        let exp = run(&keys, d, 4, 48, 11);
+        // The paper's Fig.-2 claim bites at the shallow levels, where the
+        // outlier channels live: preconditioning must improve the fit
+        // there. Deeper levels aggregate over whole blocks and are already
+        // near the law either way (assert they stay sane).
+        for l in 0..2 {
+            let with = &exp.with_precondition[l];
+            let without = &exp.without_precondition[l];
+            assert!(
+                with.tv_to_analytic < without.tv_to_analytic,
+                "level {}: TV with {} vs without {}",
+                l + 1,
+                with.tv_to_analytic,
+                without.tv_to_analytic
+            );
+        }
+        for l in 2..4 {
+            assert!(exp.with_precondition[l].tv_to_analytic < 0.5, "level {}", l + 1);
+        }
+        // Preconditioned angles should fit the law reasonably. The fit is
+        // not perfect: the rotation is *shared* across tokens (paper
+        // §4.1), so anisotropic covariance survives in rotated form — the
+        // residual TV reflects that, exactly as the paper's footnote on
+        // rotations-vs-sketches concedes.
+        assert!(exp.with_precondition[1].tv_to_analytic < 0.25);
+    }
+
+    #[test]
+    fn preconditioned_levels_concentrate_around_pi_over_4() {
+        let d = 64;
+        let keys = realistic_keys(256, d);
+        let exp = run(&keys, d, 4, 48, 12);
+        // Lemma 2: std shrinks with level; mean ≈ π/4 for ℓ ≥ 2 (tolerance
+        // covers the shared-rotation anisotropy residual).
+        for l in 1..4 {
+            let r = &exp.with_precondition[l];
+            assert!((r.mean - std::f64::consts::FRAC_PI_4).abs() < 0.15, "level {} mean {}", l + 1, r.mean);
+        }
+        assert!(
+            exp.with_precondition[3].std < exp.with_precondition[1].std,
+            "deeper level concentrates more"
+        );
+    }
+
+    #[test]
+    fn outliers_visible_without_preconditioning() {
+        // Without rotation, level-1 angles of outlier-channel pairs pile up
+        // near specific values → level-1 histogram far from uniform.
+        let d = 64;
+        let keys = realistic_keys(256, d);
+        let exp = run(&keys, d, 4, 48, 13);
+        assert!(
+            exp.without_precondition[0].tv_to_analytic
+                > 1.25 * exp.with_precondition[0].tv_to_analytic,
+            "level-1 misfit should be driven by outliers: {} vs {}",
+            exp.without_precondition[0].tv_to_analytic,
+            exp.with_precondition[0].tv_to_analytic
+        );
+    }
+
+    #[test]
+    fn histograms_cover_all_samples() {
+        let d = 32;
+        let keys = realistic_keys(64, d);
+        let exp = run(&keys, d, 4, 32, 14);
+        // Level l has n·d/2^l angles.
+        for (i, r) in exp.with_precondition.iter().enumerate() {
+            assert_eq!(r.histogram.total as usize, 64 * d >> (i + 1));
+        }
+    }
+}

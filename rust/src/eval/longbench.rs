@@ -1,0 +1,230 @@
+//! Table 1: LongBench-like six-family quality scores.
+//!
+//! Substitution (DESIGN.md): with synthetic weights the model cannot do
+//! real QA, so quality is measured as *generation fidelity under cache
+//! compression*: first generate the reference continuation greedily with
+//! the exact cache, then **teacher-force** the reference tokens through
+//! each method's cache and score the fraction of steps whose argmax
+//! matches the reference (×100). Teacher forcing keeps the steps
+//! independent — one early flip cannot cascade — so the score measures
+//! per-step cache fidelity, the quantity the paper's Table 1 ranks
+//! methods by. Exact scores 100 by construction.
+
+use crate::eval::workload::{make_episode, Episode, TaskFamily, ALL_FAMILIES};
+use crate::kvcache::sequence::{CacheConfig, SequenceCache};
+use crate::model::config::ModelConfig;
+use crate::model::transformer::Transformer;
+use crate::util::rng::Pcg64;
+
+/// Configuration.
+#[derive(Clone, Debug)]
+pub struct LongBenchConfig {
+    pub model: ModelConfig,
+    pub model_seed: u64,
+    pub prompt_len: usize,
+    pub episodes_per_family: usize,
+    pub ratio: f64,
+    pub seed: u64,
+}
+
+impl Default for LongBenchConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelConfig::mini(),
+            model_seed: 0,
+            prompt_len: 192,
+            episodes_per_family: 4,
+            ratio: 0.25,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-method results: score per family + average (the Table-1 row).
+#[derive(Clone, Debug)]
+pub struct LongBenchRow {
+    pub method: String,
+    pub scores: Vec<(TaskFamily, f64)>,
+    pub average: f64,
+    pub mean_compression: f64,
+}
+
+/// Greedy generation with a given cache method; returns generated tokens.
+fn generate(
+    model: &mut Transformer,
+    episode: &Episode,
+    method: &str,
+    ratio: f64,
+) -> (Vec<u32>, f64) {
+    let pre = model.prefill(&episode.prompt);
+    let cache_cfg = CacheConfig::new(method, ratio);
+    let mut cache = SequenceCache::from_prefill(&model.cfg, &cache_cfg, &pre);
+    let ratio_achieved = cache.compression_ratio(&model.cfg);
+    let vocab = model.cfg.vocab;
+    let mut tokens = Vec::with_capacity(episode.gen_tokens);
+    let mut last =
+        crate::math::linalg::argmax(pre.last_logits(vocab)).unwrap() as u32;
+    tokens.push(last);
+    for i in 1..episode.gen_tokens {
+        let pos = episode.prompt.len() + i - 1;
+        let logits = model.decode_step(last, pos, &mut cache.caches);
+        cache.note_decoded();
+        last = crate::math::linalg::argmax(&logits).unwrap() as u32;
+        tokens.push(last);
+    }
+    (tokens, ratio_achieved)
+}
+
+/// Teacher-forced per-step agreement ×100: feed the *reference* tokens
+/// through the method's cache and count steps whose argmax matches the
+/// next reference token.
+fn teacher_forced_score(
+    model: &mut Transformer,
+    episode: &Episode,
+    method: &str,
+    ratio: f64,
+    reference: &[u32],
+) -> (f64, f64) {
+    let pre = model.prefill(&episode.prompt);
+    let cache_cfg = CacheConfig::new(method, ratio);
+    let mut cache = SequenceCache::from_prefill(&model.cfg, &cache_cfg, &pre);
+    let ratio_achieved = cache.compression_ratio(&model.cfg);
+    let vocab = model.cfg.vocab;
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    // Step 0: prefill logits are method-independent; start from ref[0].
+    let first = crate::math::linalg::argmax(pre.last_logits(vocab)).unwrap() as u32;
+    total += 1;
+    if first == reference[0] {
+        hits += 1;
+    }
+    for i in 1..reference.len() {
+        let pos = episode.prompt.len() + i - 1;
+        // Teacher-force the reference token so steps stay independent.
+        let logits = model.decode_step(reference[i - 1], pos, &mut cache.caches);
+        cache.note_decoded();
+        let got = crate::math::linalg::argmax(&logits).unwrap() as u32;
+        total += 1;
+        if got == reference[i] {
+            hits += 1;
+        }
+    }
+    (100.0 * hits as f64 / total as f64, ratio_achieved)
+}
+
+/// Evaluate a list of methods across all six families (Table 1).
+pub fn run(methods: &[&str], cfg: &LongBenchConfig) -> Vec<LongBenchRow> {
+    let mut model = Transformer::synthetic(&cfg.model, cfg.model_seed);
+    // Pre-generate episodes + exact references (shared across methods).
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut episodes: Vec<Episode> = Vec::new();
+    for fam in ALL_FAMILIES {
+        for _ in 0..cfg.episodes_per_family {
+            episodes.push(make_episode(fam, cfg.prompt_len, cfg.model.vocab, &mut rng));
+        }
+    }
+    let references: Vec<Vec<u32>> = episodes
+        .iter()
+        .map(|ep| generate(&mut model, ep, "exact", 1.0).0)
+        .collect();
+
+    methods
+        .iter()
+        .map(|&method| {
+            let mut per_family: Vec<(TaskFamily, Vec<f64>)> =
+                ALL_FAMILIES.iter().map(|&f| (f, Vec::new())).collect();
+            let mut ratios = Vec::new();
+            for (ep, reference) in episodes.iter().zip(&references) {
+                let (score, ratio) = if method == "exact" {
+                    (100.0, 1.0)
+                } else {
+                    teacher_forced_score(&mut model, ep, method, cfg.ratio, reference)
+                };
+                ratios.push(ratio);
+                per_family
+                    .iter_mut()
+                    .find(|(f, _)| *f == ep.family)
+                    .unwrap()
+                    .1
+                    .push(score);
+            }
+            let scores: Vec<(TaskFamily, f64)> = per_family
+                .into_iter()
+                .map(|(f, v)| (f, crate::util::stats::mean(&v)))
+                .collect();
+            let average =
+                scores.iter().map(|(_, s)| s).sum::<f64>() / scores.len() as f64;
+            LongBenchRow {
+                method: method.to_string(),
+                scores,
+                average,
+                mean_compression: crate::util::stats::mean(&ratios),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> LongBenchConfig {
+        LongBenchConfig {
+            model: ModelConfig::test(),
+            prompt_len: 64,
+            episodes_per_family: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exact_scores_100() {
+        let rows = run(&["exact"], &tiny_cfg());
+        assert!((rows[0].average - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn teacher_forced_exact_cache_scores_100() {
+        // Teacher-forcing the exact cache must reproduce the reference at
+        // every step (it IS the reference process).
+        let cfg = tiny_cfg();
+        let mut model = Transformer::synthetic(&cfg.model, cfg.model_seed);
+        let mut rng = crate::util::rng::Pcg64::new(3);
+        let ep = crate::eval::workload::make_episode(
+            crate::eval::workload::TaskFamily::Sqa,
+            cfg.prompt_len,
+            cfg.model.vocab,
+            &mut rng,
+        );
+        let (reference, _) = generate(&mut model, &ep, "exact", 1.0);
+        let (score, _) = teacher_forced_score(&mut model, &ep, "exact", 1.0, &reference);
+        assert!((score - 100.0).abs() < 1e-9, "score {score}");
+    }
+
+    #[test]
+    fn quantization_beats_harsh_eviction() {
+        let cfg = tiny_cfg();
+        let rows = run(&["polarquant-r-offline", "streamingllm"], &cfg);
+        let polar = rows.iter().find(|r| r.method.starts_with("polar")).unwrap();
+        let stream = rows.iter().find(|r| r.method == "streamingllm").unwrap();
+        assert!(
+            polar.average >= stream.average,
+            "polar {} vs streaming {}",
+            polar.average,
+            stream.average
+        );
+        assert!(polar.average > 50.0, "polar should track exact: {}", polar.average);
+    }
+
+    #[test]
+    fn rows_report_all_families_and_compression() {
+        let rows = run(&["kivi"], &tiny_cfg());
+        assert_eq!(rows[0].scores.len(), 6);
+        // Tiny 64-token prompts leave KIVI's 32-token fp16 residual window
+        // dominating; real Table-1 runs (192+) land near 0.3.
+        assert!(rows[0].mean_compression < 0.85);
+        for (_, s) in &rows[0].scores {
+            assert!((0.0..=100.0).contains(s));
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Evaluation harnesses regenerating every table and figure in the
+//! paper's §5 (see DESIGN.md experiment index):
+//!
+//! * [`angles`]      — Fig. 2: angle distributions w/ vs w/o preconditioning
+//! * [`niah`]        — Fig. 3: Needle-In-A-Haystack recall grid
+//! * [`longbench`]   — Table 1: six-family long-context quality scores
+//! * [`runtime_bench`] — Table 2: prefill / generation wall-clock
+//! * [`ablation`]    — design-choice sweeps (bits, levels, preconditioner)
+//! * [`workload`]    — synthetic KV / prompt generators shared by the above
+//! * [`report`]      — ASCII table + CSV reporters
+
+pub mod ablation;
+pub mod angles;
+pub mod longbench;
+pub mod niah;
+pub mod report;
+pub mod runtime_bench;
+pub mod workload;

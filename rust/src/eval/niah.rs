@@ -1,0 +1,201 @@
+//! Fig. 3: Needle-In-A-Haystack, as an attention-retrieval test.
+//!
+//! Substitution (DESIGN.md): NIAH failures under cache compression are
+//! attention-retrieval failures — the query that should attend to the
+//! needle's key lands elsewhere after dequantization error or eviction.
+//! We measure exactly that mechanism: plant a needle (k*, v*) at depth p
+//! in an n-token synthetic cache, probe with a query matched to k*, and
+//! score recall = [the cache's top-scoring token is the needle]. The
+//! (context × depth) grid and the ratio-0.25 method lineup mirror the
+//! paper's figure.
+
+use crate::eval::workload::{KvGenConfig, KvGenerator};
+
+use crate::quant::registry::{build_method, MethodContext};
+use crate::util::rng::{Pcg64, Rng};
+
+/// Grid configuration.
+#[derive(Clone, Debug)]
+pub struct NiahConfig {
+    pub d: usize,
+    pub contexts: Vec<usize>,
+    pub depths: usize,
+    pub trials: usize,
+    pub ratio: f64,
+    /// Needle salience: how strongly the probe query matches the needle
+    /// key relative to distractors (higher = easier task).
+    pub salience: f32,
+    /// Noise on the observation-window queries relative to the probe
+    /// (higher = less reliable eviction scoring).
+    pub obs_noise: f32,
+    pub seed: u64,
+}
+
+impl Default for NiahConfig {
+    fn default() -> Self {
+        Self {
+            d: 64,
+            contexts: vec![256, 512, 1024, 2048, 4096],
+            depths: 10,
+            trials: 8,
+            ratio: 0.25,
+            salience: 1.0,
+            obs_noise: 1.5,
+            seed: 2024,
+        }
+    }
+}
+
+/// Result grid for one method: recall[depth][context].
+#[derive(Clone, Debug)]
+pub struct NiahResult {
+    pub method: String,
+    pub recall: Vec<Vec<f64>>,
+    pub mean_recall: f64,
+}
+
+/// Run the grid for one method.
+pub fn run_method(method: &str, cfg: &NiahConfig) -> NiahResult {
+    let mut recall = vec![vec![0.0; cfg.contexts.len()]; cfg.depths];
+    for (ci, &n) in cfg.contexts.iter().enumerate() {
+        for depth in 0..cfg.depths {
+            let mut hits = 0usize;
+            for trial in 0..cfg.trials {
+                let seed = cfg.seed
+                    ^ (n as u64) << 32
+                    ^ (depth as u64) << 16
+                    ^ trial as u64;
+                if run_trial(method, cfg, n, depth, seed) {
+                    hits += 1;
+                }
+            }
+            recall[depth][ci] = hits as f64 / cfg.trials as f64;
+        }
+    }
+    let mean = recall.iter().flatten().sum::<f64>() / (cfg.depths * cfg.contexts.len()) as f64;
+    NiahResult { method: method.to_string(), recall, mean_recall: mean }
+}
+
+/// One trial: true iff the method's top-scoring cached token is the needle.
+fn run_trial(method: &str, cfg: &NiahConfig, n: usize, depth: usize, seed: u64) -> bool {
+    let d = cfg.d;
+    let mut rng = Pcg64::new(seed);
+    let mut gen = KvGenerator::new(KvGenConfig::realistic(d, seed ^ 0xA5A5));
+    let mut block = gen.block(n);
+
+    // The needle position for this depth bucket.
+    let pos = ((depth as f64 + 0.5) / cfg.depths as f64 * n as f64) as usize;
+    let pos = pos.min(n - 1);
+
+    // Needle key: same channel statistics as every other key (it comes
+    // from the same model) *plus* a unique direction u the probe query
+    // matches. Because needle and distractors share the outlier-channel
+    // mean, the common score shift cancels in the ranking — exactly as in
+    // real attention, where softmax is shift-invariant.
+    let mut u = vec![0.0f32; d];
+    rng.fill_gaussian(&mut u);
+    let mut q = vec![0.0f32; d];
+    for j in 0..d {
+        block.keys[pos * d + j] += u[j] * cfg.salience;
+        q[j] = u[j] * cfg.salience + 0.3 * rng.gaussian_f32();
+    }
+
+    // Observation window correlates with the probe (NIAH prompts end with
+    // the question) — this is what lets SnapKV-style methods keep needles.
+    // The correlation is imperfect (the window holds the question's
+    // surface tokens, not the retrieval query itself): obs_noise controls
+    // how much, and with it how often eviction drops the needle.
+    let mut obs = vec![0.0f32; 2 * d];
+    for j in 0..d {
+        obs[j] = q[j] + cfg.obs_noise * rng.gaussian_f32();
+        obs[d + j] = q[j] + cfg.obs_noise * rng.gaussian_f32();
+    }
+
+    let compressor = build_method(method, cfg.ratio, MethodContext::new(d));
+    let kv = compressor.compress(&block, &obs);
+
+    let mut scores = Vec::new();
+    kv.key_scores(&q, &mut scores);
+    let positions = kv.positions();
+    let best = match crate::math::linalg::argmax(&scores) {
+        Some(i) => i,
+        None => return false,
+    };
+    positions[best] as usize == pos
+}
+
+/// Fig. 3: run every method.
+pub fn run_all(methods: &[&str], cfg: &NiahConfig) -> Vec<NiahResult> {
+    methods.iter().map(|m| run_method(m, cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> NiahConfig {
+        NiahConfig {
+            contexts: vec![128, 256],
+            depths: 4,
+            trials: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exact_cache_has_perfect_recall() {
+        let r = run_method("exact", &small_cfg());
+        assert!(
+            r.mean_recall > 0.95,
+            "exact should recall nearly always: {}",
+            r.mean_recall
+        );
+    }
+
+    #[test]
+    fn quantization_beats_eviction_and_streaming_fails_middle() {
+        // The paper's Fig.-3 ordering: quantization (PolarQuant, KIVI) >
+        // token-eviction (SnapKV/Pyramid); StreamingLLM loses mid-depth
+        // needles entirely.
+        let cfg = small_cfg();
+        let pq = run_method("polarquant-r-offline", &cfg);
+        let stream = run_method("streamingllm", &cfg);
+        assert!(
+            pq.mean_recall > stream.mean_recall + 0.2,
+            "polar {} vs streaming {}",
+            pq.mean_recall,
+            stream.mean_recall
+        );
+        // Middle depths (indices 1, 2 of 4) must be ~0 for streaming.
+        let mid = (stream.recall[1].iter().sum::<f64>() + stream.recall[2].iter().sum::<f64>())
+            / (2.0 * cfg.contexts.len() as f64);
+        assert!(mid < 0.2, "streaming mid-depth recall {mid}");
+    }
+
+    #[test]
+    fn polarquant_recall_high() {
+        let r = run_method("polarquant-r-offline", &small_cfg());
+        assert!(r.mean_recall > 0.8, "polar recall {}", r.mean_recall);
+    }
+
+    #[test]
+    fn grid_shape_matches_config() {
+        let cfg = small_cfg();
+        let r = run_method("kivi", &cfg);
+        assert_eq!(r.recall.len(), cfg.depths);
+        assert_eq!(r.recall[0].len(), cfg.contexts.len());
+        for row in &r.recall {
+            for &v in row {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let a = run_method("snapkv", &cfg);
+        let b = run_method("snapkv", &cfg);
+        assert_eq!(a.recall, b.recall);
+    }
+}

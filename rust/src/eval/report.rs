@@ -1,0 +1,150 @@
+//! Result reporting: ASCII tables matching the paper's layout plus CSV
+//! dumps under `target/results/` so every bench leaves a machine-readable
+//! trail for EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |out: &mut String| {
+            let total: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+            let _ = writeln!(out, "{}", "-".repeat(total));
+        };
+        line(&mut out);
+        let _ = write!(out, "|");
+        for (h, w) in self.headers.iter().zip(&widths) {
+            let _ = write!(out, " {h:>w$} |");
+        }
+        let _ = writeln!(out);
+        line(&mut out);
+        for row in &self.rows {
+            let _ = write!(out, "|");
+            for (c, w) in row.iter().zip(&widths) {
+                let _ = write!(out, " {c:>w$} |");
+            }
+            let _ = writeln!(out);
+        }
+        line(&mut out);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write `title.csv` under `target/results/`.
+    pub fn save_csv(&self, slug: &str) -> std::io::Result<String> {
+        let dir = "target/results";
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{slug}.csv");
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// Format a float with fixed decimals.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+/// Render a recall grid (Fig. 3 style) as a text heatmap: rows = depths,
+/// cols = context lengths, cells = 0–9 recall deciles.
+pub fn heatmap(title: &str, col_labels: &[String], row_labels: &[String], grid: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "\n== {title} ==  (cells: recall 0–9, 9≈1.0)");
+    let _ = write!(out, "{:>10} ", "depth\\ctx");
+    for c in col_labels {
+        let _ = write!(out, "{c:>7}");
+    }
+    let _ = writeln!(out);
+    for (r, row) in grid.iter().enumerate() {
+        let _ = write!(out, "{:>10} ", row_labels[r]);
+        for &v in row {
+            let decile = (v.clamp(0.0, 1.0) * 9.0).round() as u32;
+            let _ = write!(out, "{decile:>7}");
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Score"]);
+        t.row(vec!["exact".into(), "48.63".into()]);
+        t.row(vec!["polarquant".into(), "48.11".into()]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| polarquant |"));
+        let widths: Vec<usize> = s.lines().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "aligned rows");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let path = t.save_csv("test_report").unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "a,b\n1,2\n");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn heatmap_deciles() {
+        let s = heatmap(
+            "t",
+            &["256".into(), "512".into()],
+            &["0%".into()],
+            &[vec![1.0, 0.5]],
+        );
+        assert!(s.contains('9'));
+        assert!(s.contains('5') || s.contains('4'));
+    }
+}

@@ -1,0 +1,337 @@
+//! Synthetic workload generators.
+//!
+//! Two kinds of synthetic data drive the evaluation (substitutions
+//! documented in DESIGN.md):
+//!
+//! 1. **KV-statistics generator** — per-head key/value embeddings with the
+//!    pathologies reported for real transformer KV caches: anisotropic
+//!    per-channel scales, a few large-magnitude outlier channels in keys
+//!    (the reason KIVI quantizes keys per-channel), mild token-position
+//!    drift. Used by Fig. 2 / Fig. 3 / codec ablations where *cache
+//!    content*, not model behaviour, is under test.
+//!
+//! 2. **Prompt generators** — token sequences with controlled information
+//!    structure for the six LongBench-like task families (Table 1) and
+//!    the serving benches.
+
+use crate::quant::compressor::KvBlock;
+use crate::util::rng::{Pcg64, Rng};
+
+/// Configuration of the KV-statistics generator.
+#[derive(Clone, Debug)]
+pub struct KvGenConfig {
+    pub d: usize,
+    /// Number of key outlier channels (real caches: a handful).
+    pub outlier_channels: usize,
+    /// Outlier magnitude multiplier.
+    pub outlier_scale: f32,
+    /// Per-channel log-scale spread (anisotropy).
+    pub anisotropy: f32,
+    pub seed: u64,
+}
+
+impl KvGenConfig {
+    pub fn realistic(d: usize, seed: u64) -> Self {
+        Self { d, outlier_channels: d / 8, outlier_scale: 10.0, anisotropy: 0.4, seed }
+    }
+
+    /// Isotropic Gaussian control (the Theorem-1 regime).
+    pub fn gaussian(d: usize, seed: u64) -> Self {
+        Self { d, outlier_channels: 0, outlier_scale: 1.0, anisotropy: 0.0, seed }
+    }
+}
+
+/// Generates KV blocks with realistic channel statistics.
+pub struct KvGenerator {
+    cfg: KvGenConfig,
+    key_scales: Vec<f32>,
+    val_scales: Vec<f32>,
+    outliers: Vec<usize>,
+    rng: Pcg64,
+}
+
+impl KvGenerator {
+    pub fn new(cfg: KvGenConfig) -> Self {
+        let mut rng = Pcg64::new(cfg.seed ^ 0x4b5647); // "KVG"
+        let mut key_scales = Vec::with_capacity(cfg.d);
+        let mut val_scales = Vec::with_capacity(cfg.d);
+        for _ in 0..cfg.d {
+            key_scales.push((rng.gaussian() as f32 * cfg.anisotropy).exp());
+            val_scales.push((rng.gaussian() as f32 * cfg.anisotropy * 0.5).exp());
+        }
+        let mut idx: Vec<usize> = (0..cfg.d).collect();
+        rng.shuffle(&mut idx);
+        let outliers = idx[..cfg.outlier_channels].to_vec();
+        Self { cfg, key_scales, val_scales, outliers, rng }
+    }
+
+    /// One key row into `out`.
+    pub fn key_row(&mut self, out: &mut [f32]) {
+        let d = self.cfg.d;
+        assert_eq!(out.len(), d);
+        for j in 0..d {
+            out[j] = self.rng.gaussian_f32() * self.key_scales[j];
+        }
+        for &c in &self.outliers {
+            // Outlier channels have a large, consistent-sign mean — the
+            // structure random rotation destroys (Fig. 2's motivation).
+            out[c] = self.cfg.outlier_scale * (1.0 + 0.15 * self.rng.gaussian_f32());
+        }
+    }
+
+    pub fn value_row(&mut self, out: &mut [f32]) {
+        let d = self.cfg.d;
+        for j in 0..d {
+            out[j] = self.rng.gaussian_f32() * self.val_scales[j];
+        }
+    }
+
+    /// A full block of n tokens.
+    pub fn block(&mut self, n: usize) -> KvBlock {
+        let d = self.cfg.d;
+        let mut keys = vec![0.0f32; n * d];
+        let mut values = vec![0.0f32; n * d];
+        for t in 0..n {
+            self.key_row(&mut keys[t * d..(t + 1) * d]);
+            self.value_row(&mut values[t * d..(t + 1) * d]);
+        }
+        KvBlock::new(keys, values, n, d)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prompt generators (Table 1 task families + serving workloads)
+// ---------------------------------------------------------------------------
+
+/// The six LongBench-like task families (paper Table 1 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskFamily {
+    /// Single-document QA: one salient fact early, question at the end.
+    Sqa,
+    /// Multi-document QA: several salient spans, multi-hop question.
+    Mqa,
+    /// Summarization: information spread uniformly.
+    Sum,
+    /// Few-shot: repeated (input, output) exemplars then a fresh input.
+    Few,
+    /// Synthetic copy/retrieval: literal span must be reproduced.
+    Syn,
+    /// Code completion: nested structural patterns with long-range deps.
+    Code,
+}
+
+pub const ALL_FAMILIES: [TaskFamily; 6] = [
+    TaskFamily::Sqa,
+    TaskFamily::Mqa,
+    TaskFamily::Sum,
+    TaskFamily::Few,
+    TaskFamily::Syn,
+    TaskFamily::Code,
+];
+
+impl TaskFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskFamily::Sqa => "SQA",
+            TaskFamily::Mqa => "MQA",
+            TaskFamily::Sum => "Sum",
+            TaskFamily::Few => "Few",
+            TaskFamily::Syn => "Syn",
+            TaskFamily::Code => "Code",
+        }
+    }
+}
+
+/// A generated episode: prompt tokens + how many tokens to generate.
+#[derive(Clone, Debug)]
+pub struct Episode {
+    pub family: TaskFamily,
+    pub prompt: Vec<u32>,
+    pub gen_tokens: usize,
+}
+
+/// Build one episode of a family. `vocab` must exceed 64 (special tokens
+/// live below 16). Prompts are `len` tokens.
+pub fn make_episode(
+    family: TaskFamily,
+    len: usize,
+    vocab: usize,
+    rng: &mut Pcg64,
+) -> Episode {
+    assert!(vocab >= 64 && len >= 32);
+    let filler = |rng: &mut Pcg64| 16 + (rng.next_below((vocab - 16) as u64) as u32);
+    let mut p: Vec<u32> = (0..len).map(|_| filler(rng)).collect();
+    let gen_tokens = 12;
+    match family {
+        TaskFamily::Sqa => {
+            // Salient fact (rare marker + payload) in the first half,
+            // "question" marker at the end.
+            let pos = 8 + rng.next_below((len / 2 - 8) as u64) as usize;
+            p[pos] = 1; // fact marker
+            p[pos + 1] = filler(rng);
+            p[len - 2] = 2; // question marker
+            p[len - 1] = 1;
+        }
+        TaskFamily::Mqa => {
+            for k in 0..3 {
+                let lo = 8 + k * (len / 4);
+                let pos = lo + rng.next_below((len / 5) as u64) as usize;
+                p[pos] = 1;
+                p[pos + 1] = filler(rng);
+            }
+            p[len - 2] = 2;
+            p[len - 1] = 1;
+        }
+        TaskFamily::Sum => {
+            // Uniform structure: periodic topic markers.
+            for t in (0..len).step_by(16) {
+                p[t] = 3;
+            }
+            p[len - 1] = 4; // summarize marker
+        }
+        TaskFamily::Few => {
+            // Exemplars: (5, a, 6, b) pairs repeated; query (5, a') at end.
+            let mut t = 0;
+            while t + 4 < len - 4 {
+                p[t] = 5;
+                p[t + 1] = filler(rng);
+                p[t + 2] = 6;
+                p[t + 3] = filler(rng);
+                t += 4 + rng.next_below(4) as usize;
+            }
+            p[len - 2] = 5;
+            p[len - 1] = filler(rng);
+        }
+        TaskFamily::Syn => {
+            // Literal span early; copy marker at the end.
+            let span: Vec<u32> = (0..8).map(|_| filler(rng)).collect();
+            let pos = 4 + rng.next_below((len / 3) as u64) as usize;
+            p[pos..pos + 8].copy_from_slice(&span);
+            p[pos - 1] = 7; // span marker
+            p[len - 1] = 8; // copy marker
+        }
+        TaskFamily::Code => {
+            // Nested open/close structure with long-range matching.
+            let mut depth: u32 = 0;
+            for t in 0..len - 1 {
+                if rng.next_below(6) == 0 {
+                    p[t] = 9; // open
+                    depth += 1;
+                } else if depth > 0 && rng.next_below(8) == 0 {
+                    p[t] = 10; // close
+                    depth -= 1;
+                }
+            }
+            p[len - 1] = 10;
+        }
+    }
+    Episode { family, prompt: p, gen_tokens }
+}
+
+/// Poisson arrivals of random-length prompts for the serving benches.
+pub struct ServingWorkload {
+    pub rng: Pcg64,
+    pub vocab: usize,
+    pub rate_per_s: f64,
+    pub len_lo: usize,
+    pub len_hi: usize,
+}
+
+impl ServingWorkload {
+    pub fn new(vocab: usize, rate_per_s: f64, len_lo: usize, len_hi: usize, seed: u64) -> Self {
+        Self { rng: Pcg64::new(seed), vocab, rate_per_s, len_lo, len_hi }
+    }
+
+    /// Next (inter-arrival seconds, prompt).
+    pub fn next(&mut self) -> (f64, Vec<u32>) {
+        let gap = self.rng.exponential(self.rate_per_s);
+        let len = self.len_lo
+            + self.rng.next_below((self.len_hi - self.len_lo + 1) as u64) as usize;
+        let prompt = (0..len)
+            .map(|_| 16 + self.rng.next_below((self.vocab - 16) as u64) as u32)
+            .collect();
+        (gap, prompt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_generator_outliers_present() {
+        let mut g = KvGenerator::new(KvGenConfig::realistic(64, 1));
+        let block = g.block(32);
+        // Outlier channels should have a much larger mean |value|.
+        let mut means = vec![0.0f64; 64];
+        for t in 0..32 {
+            for j in 0..64 {
+                means[j] += block.keys[t * 64 + j].abs() as f64 / 32.0;
+            }
+        }
+        let mut sorted = means.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!(
+            sorted[3] > 4.0 * sorted[12],
+            "top channels should be outliers: {:?}",
+            &sorted[..6]
+        );
+    }
+
+    #[test]
+    fn gaussian_control_is_isotropic() {
+        let mut g = KvGenerator::new(KvGenConfig::gaussian(32, 2));
+        let block = g.block(256);
+        let mut means = vec![0.0f64; 32];
+        for t in 0..256 {
+            for j in 0..32 {
+                means[j] += (block.keys[t * 32 + j] as f64).powi(2) / 256.0;
+            }
+        }
+        for &m in &means {
+            assert!(m > 0.5 && m < 1.7, "channel var {m}");
+        }
+    }
+
+    #[test]
+    fn episodes_have_family_structure() {
+        let mut rng = Pcg64::new(3);
+        for fam in ALL_FAMILIES {
+            let ep = make_episode(fam, 128, 1024, &mut rng);
+            assert_eq!(ep.prompt.len(), 128);
+            assert!(ep.prompt.iter().all(|&t| t < 1024));
+            match fam {
+                TaskFamily::Sqa | TaskFamily::Mqa => {
+                    assert!(ep.prompt.contains(&1));
+                    assert_eq!(ep.prompt[126], 2);
+                }
+                TaskFamily::Syn => {
+                    assert!(ep.prompt.contains(&7));
+                    assert_eq!(*ep.prompt.last().unwrap(), 8);
+                }
+                TaskFamily::Code => {
+                    assert!(ep.prompt.contains(&9));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn serving_workload_in_bounds() {
+        let mut w = ServingWorkload::new(1024, 10.0, 32, 64, 4);
+        for _ in 0..50 {
+            let (gap, prompt) = w.next();
+            assert!(gap > 0.0);
+            assert!((32..=64).contains(&prompt.len()));
+            assert!(prompt.iter().all(|&t| (16..1024).contains(&(t as usize))));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = KvGenerator::new(KvGenConfig::realistic(32, 9));
+        let mut b = KvGenerator::new(KvGenConfig::realistic(32, 9));
+        assert_eq!(a.block(4).keys, b.block(4).keys);
+    }
+}

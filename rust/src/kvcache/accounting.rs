@@ -1,0 +1,122 @@
+//! Memory accounting across methods — regenerates the paper's §4 claims
+//! (3.875 bits/coordinate, ×4.008–×4.2 compression) and the
+//! quantization-constant overhead comparison that motivates PolarQuant.
+
+use crate::polar::quantizer::PolarConfig;
+
+/// Bits-per-coordinate report for one method at a given sequence length.
+#[derive(Clone, Debug)]
+pub struct MemoryRow {
+    pub method: String,
+    pub bits_per_coord: f64,
+    pub compression_vs_fp16: f64,
+    /// Overhead bits per coordinate spent on quantization constants
+    /// (zero points, scales, norms, codebooks) rather than payload.
+    pub overhead_bits: f64,
+}
+
+/// Analytic memory table (independent of data; layouts only).
+/// `n` is the quantized-prefix length used to amortize per-token constants.
+pub fn memory_table(d: usize, n: usize) -> Vec<MemoryRow> {
+    let mut rows = Vec::new();
+
+    rows.push(MemoryRow {
+        method: "exact".into(),
+        bits_per_coord: 16.0,
+        compression_vs_fp16: 1.0,
+        overhead_bits: 0.0,
+    });
+
+    // KIVI: b bits + 2 fp16 constants per group of G (both K and V sides).
+    let (b, g) = (2.0, 32.0);
+    let kivi_bits = b + 2.0 * 16.0 / g;
+    rows.push(MemoryRow {
+        method: "kivi".into(),
+        bits_per_coord: kivi_bits,
+        compression_vs_fp16: 16.0 / kivi_bits,
+        overhead_bits: kivi_bits - b,
+    });
+
+    // QJL: keys m=3d sign bits + fp16 norm; values 8-bit + 2 fp16 consts.
+    let m = 3.0 * d as f64;
+    let qjl_key_bits = (m + 16.0) / d as f64;
+    let qjl_val_bits = 8.0 + 32.0 / d as f64;
+    let qjl_bits = (qjl_key_bits + qjl_val_bits) / 2.0;
+    rows.push(MemoryRow {
+        method: "qjl".into(),
+        bits_per_coord: qjl_bits,
+        compression_vs_fp16: 16.0 / qjl_bits,
+        overhead_bits: (16.0 + 32.0) / (2.0 * d as f64),
+    });
+
+    // PolarQuant §4.1 layout.
+    let cfg = PolarConfig::paper_default(d);
+    let pq_bits = cfg.bits_per_coordinate();
+    // Its only "constant" is the fp16 radius per 2^L block — but that is
+    // payload (it carries the norm), so overhead = 0; the online variant
+    // additionally amortizes its codebook over the whole block.
+    rows.push(MemoryRow {
+        method: "polarquant".into(),
+        bits_per_coord: pq_bits,
+        compression_vs_fp16: cfg.compression_vs_fp16(),
+        overhead_bits: 0.0,
+    });
+    let book_bits = ((16 + 4 + 4 + 4) * 16) as f64 / (n * d) as f64;
+    rows.push(MemoryRow {
+        method: "polarquant-r-online".into(),
+        bits_per_coord: pq_bits + book_bits,
+        compression_vs_fp16: 16.0 / (pq_bits + book_bits),
+        overhead_bits: book_bits,
+    });
+
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_numbers() {
+        let rows = memory_table(128, 4096);
+        let pq = rows.iter().find(|r| r.method == "polarquant").unwrap();
+        assert!((pq.bits_per_coord - 3.875).abs() < 1e-9);
+        assert!(pq.compression_vs_fp16 > 4.0 && pq.compression_vs_fp16 < 4.2);
+    }
+
+    #[test]
+    fn kivi_overhead_is_one_bit() {
+        let rows = memory_table(128, 4096);
+        let kivi = rows.iter().find(|r| r.method == "kivi").unwrap();
+        // "over 1 additional bit per quantized number" (paper §1).
+        assert!((kivi.overhead_bits - 1.0).abs() < 1e-9);
+        assert!((kivi.bits_per_coord - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn polarquant_beats_kivi_on_bits() {
+        for d in [64usize, 128] {
+            let rows = memory_table(d, 4096);
+            let pq = rows.iter().find(|r| r.method == "polarquant").unwrap();
+            let kivi = rows.iter().find(|r| r.method == "kivi").unwrap();
+            // PolarQuant spends more bits but needs no normalization
+            // constants; at the paper's layouts the totals are close
+            // (3.875 vs 3.0) while PolarQuant keeps norm information.
+            assert!(pq.overhead_bits < kivi.overhead_bits);
+        }
+    }
+
+    #[test]
+    fn online_codebook_amortizes_away() {
+        let small = memory_table(64, 128);
+        let large = memory_table(64, 8192);
+        let get = |rows: &[MemoryRow]| {
+            rows.iter()
+                .find(|r| r.method == "polarquant-r-online")
+                .unwrap()
+                .overhead_bits
+        };
+        assert!(get(&small) > get(&large));
+        assert!(get(&large) < 0.01);
+    }
+}

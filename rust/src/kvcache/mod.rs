@@ -1,0 +1,13 @@
+//! KV-cache management: the serving-side substrate around the codec.
+//!
+//! * [`paged`] — a vLLM-style paged pool (fixed-size pages, free list,
+//!   per-sequence block tables, copy-on-write ref counts) used by the
+//!   coordinator for generation-tail storage and admission control.
+//! * [`sequence`] — per-sequence cache: one [`CompressedKv`] per
+//!   (layer, head), built from prefill output by any compression method.
+//! * [`accounting`] — memory bookkeeping that regenerates the paper's §4
+//!   compression-ratio claims.
+
+pub mod accounting;
+pub mod paged;
+pub mod sequence;

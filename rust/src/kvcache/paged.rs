@@ -1,0 +1,334 @@
+//! Paged KV storage (vLLM-style [23]).
+//!
+//! The pool owns fixed-size pages of `page_tokens × token_bytes` bytes;
+//! sequences allocate pages through a block table as they grow, free them
+//! on completion, and may share pages copy-on-write (prefix sharing).
+//! The coordinator uses pool occupancy for admission control and
+//! preemption decisions; PolarQuant pages store packed codes, exact pages
+//! store fp16, so `token_bytes` is method-dependent.
+
+use std::collections::BTreeMap;
+
+/// Pool configuration.
+#[derive(Clone, Debug)]
+pub struct PagedConfig {
+    /// Tokens per page (vLLM default 16).
+    pub page_tokens: usize,
+    /// Bytes per token slot (method-dependent).
+    pub token_bytes: usize,
+    /// Total pages in the pool.
+    pub num_pages: usize,
+}
+
+/// Page identifier.
+pub type PageId = u32;
+
+/// A sequence's block table: ordered pages + fill level of the last page.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    pub pages: Vec<PageId>,
+    /// Tokens used in the final page (0 < last_fill ≤ page_tokens unless
+    /// the table is empty).
+    pub last_fill: usize,
+}
+
+impl BlockTable {
+    pub fn num_tokens(&self, page_tokens: usize) -> usize {
+        if self.pages.is_empty() {
+            0
+        } else {
+            (self.pages.len() - 1) * page_tokens + self.last_fill
+        }
+    }
+}
+
+/// Errors from pool operations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    OutOfPages,
+    UnknownSequence,
+}
+
+/// The pool: backing storage + free list + per-sequence block tables +
+/// ref counts (shared pages from prefix forks).
+pub struct PagedPool {
+    pub cfg: PagedConfig,
+    storage: Vec<u8>,
+    free: Vec<PageId>,
+    refcount: Vec<u32>,
+    tables: BTreeMap<u64, BlockTable>,
+}
+
+impl PagedPool {
+    pub fn new(cfg: PagedConfig) -> Self {
+        let free = (0..cfg.num_pages as PageId).rev().collect();
+        Self {
+            storage: vec![0u8; cfg.num_pages * cfg.page_tokens * cfg.token_bytes],
+            refcount: vec![0; cfg.num_pages],
+            free,
+            tables: BTreeMap::new(),
+            cfg,
+        }
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.cfg.num_pages - self.free.len()
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.page_tokens)
+    }
+
+    /// Can a new sequence of `tokens` tokens be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_for(tokens) <= self.free.len()
+    }
+
+    /// Register a sequence and allocate pages for its prefill length.
+    pub fn register(&mut self, seq: u64, tokens: usize) -> Result<(), PoolError> {
+        let need = self.pages_for(tokens);
+        if need > self.free.len() {
+            return Err(PoolError::OutOfPages);
+        }
+        let mut table = BlockTable::default();
+        for _ in 0..need {
+            let p = self.free.pop().unwrap();
+            self.refcount[p as usize] = 1;
+            table.pages.push(p);
+        }
+        table.last_fill = if tokens == 0 {
+            0
+        } else {
+            let rem = tokens % self.cfg.page_tokens;
+            if rem == 0 {
+                self.cfg.page_tokens
+            } else {
+                rem
+            }
+        };
+        self.tables.insert(seq, table);
+        Ok(())
+    }
+
+    /// Append one token slot to a sequence, allocating a page on boundary.
+    pub fn append_token(&mut self, seq: u64) -> Result<(), PoolError> {
+        // Determine if a new page is needed without holding a &mut borrow.
+        let needs_page = {
+            let table = self.tables.get(&seq).ok_or(PoolError::UnknownSequence)?;
+            table.pages.is_empty() || table.last_fill == self.cfg.page_tokens
+        };
+        if needs_page {
+            let p = self.free.pop().ok_or(PoolError::OutOfPages)?;
+            self.refcount[p as usize] = 1;
+            let table = self.tables.get_mut(&seq).unwrap();
+            table.pages.push(p);
+            table.last_fill = 1;
+        } else {
+            let table = self.tables.get_mut(&seq).unwrap();
+            table.last_fill += 1;
+        }
+        Ok(())
+    }
+
+    /// Fork `child` from `parent`, sharing all pages copy-on-write.
+    pub fn fork(&mut self, parent: u64, child: u64) -> Result<(), PoolError> {
+        let table = self
+            .tables
+            .get(&parent)
+            .ok_or(PoolError::UnknownSequence)?
+            .clone();
+        for &p in &table.pages {
+            self.refcount[p as usize] += 1;
+        }
+        self.tables.insert(child, table);
+        Ok(())
+    }
+
+    /// Make the last page of `seq` private (copy-on-write) before writing.
+    pub fn make_last_private(&mut self, seq: u64) -> Result<(), PoolError> {
+        let (last, fill_bytes) = {
+            let table = self.tables.get(&seq).ok_or(PoolError::UnknownSequence)?;
+            match table.pages.last() {
+                None => return Ok(()),
+                Some(&p) => (p, self.cfg.page_tokens * self.cfg.token_bytes),
+            }
+        };
+        if self.refcount[last as usize] <= 1 {
+            return Ok(());
+        }
+        let new = self.free.pop().ok_or(PoolError::OutOfPages)?;
+        self.refcount[new as usize] = 1;
+        self.refcount[last as usize] -= 1;
+        // Copy page contents.
+        let src = last as usize * fill_bytes;
+        let dst = new as usize * fill_bytes;
+        let (a, b) = if src < dst {
+            let (lo, hi) = self.storage.split_at_mut(dst);
+            (&lo[src..src + fill_bytes], &mut hi[..fill_bytes])
+        } else {
+            let (lo, hi) = self.storage.split_at_mut(src);
+            (&hi[..fill_bytes], &mut lo[dst..dst + fill_bytes])
+        };
+        b.copy_from_slice(a);
+        let table = self.tables.get_mut(&seq).unwrap();
+        *table.pages.last_mut().unwrap() = new;
+        Ok(())
+    }
+
+    /// Release all pages of a sequence.
+    pub fn release(&mut self, seq: u64) -> Result<(), PoolError> {
+        let table = self.tables.remove(&seq).ok_or(PoolError::UnknownSequence)?;
+        for p in table.pages {
+            let rc = &mut self.refcount[p as usize];
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(p);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn table(&self, seq: u64) -> Option<&BlockTable> {
+        self.tables.get(&seq)
+    }
+
+    /// Mutable byte slice of a token slot (page-table indirection).
+    pub fn token_slot_mut(&mut self, seq: u64, token_idx: usize) -> Option<&mut [u8]> {
+        let table = self.tables.get(&seq)?;
+        let page_idx = token_idx / self.cfg.page_tokens;
+        let off = token_idx % self.cfg.page_tokens;
+        let page = *table.pages.get(page_idx)? as usize;
+        if page_idx + 1 == table.pages.len() && off >= table.last_fill {
+            return None;
+        }
+        let tb = self.cfg.token_bytes;
+        let base = page * self.cfg.page_tokens * tb + off * tb;
+        Some(&mut self.storage[base..base + tb])
+    }
+
+    pub fn token_slot(&self, seq: u64, token_idx: usize) -> Option<&[u8]> {
+        let table = self.tables.get(&seq)?;
+        let page_idx = token_idx / self.cfg.page_tokens;
+        let off = token_idx % self.cfg.page_tokens;
+        let page = *table.pages.get(page_idx)? as usize;
+        if page_idx + 1 == table.pages.len() && off >= table.last_fill {
+            return None;
+        }
+        let tb = self.cfg.token_bytes;
+        let base = page * self.cfg.page_tokens * tb + off * tb;
+        Some(&self.storage[base..base + tb])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(pages: usize) -> PagedPool {
+        PagedPool::new(PagedConfig { page_tokens: 4, token_bytes: 8, num_pages: pages })
+    }
+
+    #[test]
+    fn register_allocates_ceil_pages() {
+        let mut p = pool(10);
+        p.register(1, 9).unwrap(); // ceil(9/4) = 3 pages
+        assert_eq!(p.used_pages(), 3);
+        assert_eq!(p.table(1).unwrap().num_tokens(4), 9);
+    }
+
+    #[test]
+    fn out_of_pages_rejected() {
+        let mut p = pool(2);
+        assert_eq!(p.register(1, 100), Err(PoolError::OutOfPages));
+        assert!(p.register(1, 8).is_ok());
+        assert!(!p.can_admit(1));
+        assert_eq!(p.append_token(1), Err(PoolError::OutOfPages));
+    }
+
+    #[test]
+    fn append_crosses_page_boundary() {
+        let mut p = pool(4);
+        p.register(1, 4).unwrap();
+        assert_eq!(p.used_pages(), 1);
+        p.append_token(1).unwrap(); // 5th token → new page
+        assert_eq!(p.used_pages(), 2);
+        assert_eq!(p.table(1).unwrap().num_tokens(4), 5);
+        for _ in 0..3 {
+            p.append_token(1).unwrap();
+        }
+        assert_eq!(p.used_pages(), 2); // page not full yet → no alloc
+        p.append_token(1).unwrap();
+        assert_eq!(p.used_pages(), 3);
+    }
+
+    #[test]
+    fn release_returns_pages() {
+        let mut p = pool(4);
+        p.register(1, 10).unwrap();
+        p.register(2, 4).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        p.release(1).unwrap();
+        assert_eq!(p.free_pages(), 3);
+        p.release(2).unwrap();
+        assert_eq!(p.free_pages(), 4);
+        assert_eq!(p.release(2), Err(PoolError::UnknownSequence));
+    }
+
+    #[test]
+    fn fork_shares_pages_and_cow_splits() {
+        let mut p = pool(6);
+        p.register(1, 8).unwrap();
+        assert_eq!(p.used_pages(), 2);
+        p.fork(1, 2).unwrap();
+        assert_eq!(p.used_pages(), 2, "fork shares pages");
+        // Write through seq 2's last page → private copy.
+        p.token_slot_mut(1, 7).unwrap().fill(0xAB);
+        p.make_last_private(2).unwrap();
+        assert_eq!(p.used_pages(), 3);
+        // Parent data unchanged, child copy identical until written.
+        assert_eq!(p.token_slot(1, 7).unwrap(), &[0xAB; 8]);
+        assert_eq!(p.token_slot(2, 7).unwrap(), &[0xAB; 8]);
+        p.token_slot_mut(2, 7).unwrap().fill(0xCD);
+        assert_eq!(p.token_slot(1, 7).unwrap(), &[0xAB; 8]);
+        assert_eq!(p.token_slot(2, 7).unwrap(), &[0xCD; 8]);
+    }
+
+    #[test]
+    fn release_of_shared_pages_keeps_refs() {
+        let mut p = pool(4);
+        p.register(1, 8).unwrap();
+        p.fork(1, 2).unwrap();
+        p.release(1).unwrap();
+        assert_eq!(p.free_pages(), 2, "pages still referenced by child");
+        assert_eq!(p.token_slot(2, 0).unwrap().len(), 8);
+        p.release(2).unwrap();
+        assert_eq!(p.free_pages(), 4);
+    }
+
+    #[test]
+    fn token_slot_bounds() {
+        let mut p = pool(4);
+        p.register(1, 5).unwrap();
+        assert!(p.token_slot(1, 4).is_some());
+        assert!(p.token_slot(1, 5).is_none(), "beyond fill");
+        assert!(p.token_slot(1, 99).is_none());
+        assert!(p.token_slot(9, 0).is_none());
+    }
+
+    #[test]
+    fn slots_are_disjoint() {
+        let mut p = pool(4);
+        p.register(1, 8).unwrap();
+        for t in 0..8 {
+            p.token_slot_mut(1, t).unwrap().fill(t as u8);
+        }
+        for t in 0..8 {
+            assert_eq!(p.token_slot(1, t).unwrap(), &[t as u8; 8]);
+        }
+    }
+}

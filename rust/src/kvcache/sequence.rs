@@ -1,0 +1,137 @@
+//! Per-sequence compressed KV cache: one [`CompressedKv`] per
+//! (layer, head), built from prefill output by any compression method,
+//! then extended token-by-token during generation.
+
+use crate::model::config::ModelConfig;
+use crate::model::transformer::PrefillOutput;
+use crate::quant::compressor::{CompressedKv, KvBlock};
+use crate::quant::registry::{build_method, MethodContext};
+
+/// Cache-building configuration.
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Method name from the registry ("exact", "kivi", "polarquant-r-offline", …).
+    pub method: String,
+    /// Nominal compression ratio for eviction methods (paper: 0.25).
+    pub ratio: f64,
+}
+
+impl CacheConfig {
+    pub fn new(method: &str, ratio: f64) -> Self {
+        Self { method: method.to_string(), ratio }
+    }
+}
+
+/// The per-sequence cache.
+pub struct SequenceCache {
+    pub caches: Vec<Vec<Box<dyn CompressedKv>>>,
+    pub method: String,
+    pub prefill_len: usize,
+    pub decoded: usize,
+}
+
+impl SequenceCache {
+    /// Compress a prefill's K/V into per-(layer, head) stores.
+    pub fn from_prefill(cfg: &ModelConfig, cache_cfg: &CacheConfig, pre: &PrefillOutput) -> Self {
+        let mut caches = Vec::with_capacity(cfg.n_layers);
+        for (l, layer) in pre.kv.iter().enumerate() {
+            let mut heads: Vec<Box<dyn CompressedKv>> = Vec::with_capacity(cfg.n_heads);
+            for h in 0..cfg.n_heads {
+                let ctx = MethodContext::new(cfg.head_dim).at_layer(l, cfg.n_layers);
+                let method = build_method(&cache_cfg.method, cache_cfg.ratio, ctx);
+                let keys = layer.head_keys(h, cfg.n_heads, cfg.head_dim);
+                let values = layer.head_values(h, cfg.n_heads, cfg.head_dim);
+                let obs = layer.head_obs_queries(h, cfg.n_heads, cfg.head_dim);
+                let block = KvBlock::new(keys, values, pre.seq_len, cfg.head_dim);
+                heads.push(method.compress(&block, &obs));
+            }
+            caches.push(heads);
+        }
+        Self {
+            caches,
+            method: cache_cfg.method.clone(),
+            prefill_len: pre.seq_len,
+            decoded: 0,
+        }
+    }
+
+    /// Total bytes across layers/heads.
+    pub fn memory_bytes(&self) -> usize {
+        self.caches
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|c| c.memory_bytes())
+            .sum()
+    }
+
+    /// fp16 bytes an exact cache of the same token count would use.
+    pub fn fp16_reference_bytes(&self, cfg: &ModelConfig) -> usize {
+        (self.prefill_len + self.decoded) * cfg.kv_bytes_per_token_fp16()
+    }
+
+    /// Compression ratio achieved (≤ 1; exact ≈ 1).
+    pub fn compression_ratio(&self, cfg: &ModelConfig) -> f64 {
+        self.memory_bytes() as f64 / self.fp16_reference_bytes(cfg) as f64
+    }
+
+    pub fn note_decoded(&mut self) {
+        self.decoded += 1;
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.prefill_len + self.decoded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::Transformer;
+
+    fn prefill_cache(method: &str) -> (Transformer, SequenceCache) {
+        let cfg = ModelConfig::test();
+        let mut m = Transformer::synthetic(&cfg, 11);
+        let tokens: Vec<u32> = (0..40).map(|i| (i * 3) % 64).collect();
+        let pre = m.prefill(&tokens);
+        let sc = SequenceCache::from_prefill(&cfg, &CacheConfig::new(method, 0.25), &pre);
+        (m, sc)
+    }
+
+    #[test]
+    fn builds_layer_head_grid() {
+        let (m, sc) = prefill_cache("exact");
+        assert_eq!(sc.caches.len(), m.cfg.n_layers);
+        assert_eq!(sc.caches[0].len(), m.cfg.n_heads);
+        assert_eq!(sc.caches[0][0].n_tokens(), 40);
+        assert_eq!(sc.prefill_len, 40);
+    }
+
+    #[test]
+    fn exact_ratio_near_one_quantized_near_quarter() {
+        let cfg = ModelConfig::test();
+        let (_, exact) = prefill_cache("exact");
+        let r = exact.compression_ratio(&cfg);
+        assert!((r - 1.0).abs() < 0.05, "exact ratio {r}");
+        let (_, pq) = prefill_cache("polarquant-r-offline");
+        let r = pq.compression_ratio(&cfg);
+        assert!(r < 0.35, "polar ratio {r}");
+    }
+
+    #[test]
+    fn decode_through_cache_appends_everywhere() {
+        let (mut m, mut sc) = prefill_cache("snapkv");
+        let n0 = sc.caches[1][0].n_tokens();
+        m.decode_step(5, 40, &mut sc.caches);
+        sc.note_decoded();
+        assert_eq!(sc.caches[1][0].n_tokens(), n0 + 1);
+        assert_eq!(sc.seq_len(), 41);
+    }
+
+    #[test]
+    fn pyramid_budgets_vary_by_layer() {
+        let (_, sc) = prefill_cache("pyramidkv");
+        let low = sc.caches[0][0].n_tokens();
+        let high = sc.caches[1][0].n_tokens();
+        assert!(low > high, "pyramid: layer0 {low} vs layer1 {high}");
+    }
+}

@@ -1,0 +1,21 @@
+//! PolarQuant: quantizing KV caches with polar transformation.
+//!
+//! Full-stack reproduction of "PolarQuant: Quantizing KV Caches with Polar
+//! Transformation" (Han, Kacham, Karbasi, Mirrokni, Zandieh — 2025).
+//!
+//! Layer 3 (this crate): serving coordinator — request routing, dynamic
+//! batching, paged quantized KV-cache management, prefill/decode scheduling.
+//! Layer 2: JAX model graphs AOT-lowered to HLO text (`python/compile/`).
+//! Layer 1: Pallas kernels for the polar codec hot spots.
+//! The Rust binary loads the HLO artifacts through the PJRT C API and never
+//! touches Python at request time.
+
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod math;
+pub mod model;
+pub mod runtime;
+pub mod polar;
+pub mod quant;
+pub mod util;

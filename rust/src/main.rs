@@ -1,0 +1,460 @@
+//! `polarquant` — the serving/evaluation CLI.
+//!
+//! Subcommands:
+//!   serve      start the TCP serving coordinator
+//!   generate   one-shot generation from a prompt of token ids
+//!   angles     Fig. 2 angle-distribution experiment
+//!   niah       Fig. 3 needle-in-a-haystack grid
+//!   longbench  Table 1 six-family quality scores
+//!   runtime    Table 2 prefill/generation wall-clock
+//!   memory     §4 memory/bits accounting table
+//!   theorem1   Theorem 1 rate-distortion curve
+//!   info       artifact/manifest inspection
+
+use polarquant::coordinator::request::GenRequest;
+use polarquant::coordinator::server::{run_tcp, Server, ServerConfig};
+use polarquant::eval::{ablation, angles, longbench, niah, report, runtime_bench};
+use polarquant::kvcache::accounting::memory_table;
+use polarquant::model::config::ModelConfig;
+use polarquant::polar::error::rate_distortion_curve;
+use polarquant::quant::registry::{FIG3_METHODS, TABLE1_METHODS};
+use polarquant::runtime::artifacts::Manifest;
+use polarquant::util::args::Args;
+use polarquant::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().collect();
+    if argv.len() < 2 {
+        usage_and_exit();
+    }
+    let cmd = argv.remove(1);
+    match cmd.as_str() {
+        "serve" => cmd_serve(argv),
+        "generate" => cmd_generate(argv),
+        "angles" => cmd_angles(argv),
+        "niah" => cmd_niah(argv),
+        "longbench" => cmd_longbench(argv),
+        "runtime" => cmd_runtime(argv),
+        "memory" => cmd_memory(argv),
+        "theorem1" => cmd_theorem1(argv),
+        "info" => cmd_info(argv),
+        "--help" | "-h" | "help" => usage_and_exit(),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            usage_and_exit();
+        }
+    }
+}
+
+fn usage_and_exit() -> ! {
+    eprintln!(
+        "polarquant — PolarQuant KV-cache quantization serving stack\n\n\
+         USAGE: polarquant <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 serve      start the TCP serving coordinator\n\
+         \x20 generate   one-shot generation\n\
+         \x20 angles     Fig. 2 angle distributions\n\
+         \x20 niah       Fig. 3 needle-in-a-haystack\n\
+         \x20 longbench  Table 1 quality scores\n\
+         \x20 runtime    Table 2 wall-clock\n\
+         \x20 memory     §4 memory accounting\n\
+         \x20 theorem1   Theorem 1 ε(bits) curve\n\
+         \x20 info       inspect AOT artifacts\n\n\
+         Run `polarquant <subcommand> --help` for options."
+    );
+    std::process::exit(2);
+}
+
+fn parse(argv: Vec<String>, args: Args) -> Args {
+    match args.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn model_cfg(name: &str) -> ModelConfig {
+    ModelConfig::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown model config {name:?} (mini|small|test)");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_serve(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("Start the TCP serving coordinator (JSON-lines protocol).")
+            .opt("addr", "127.0.0.1:7878", "bind address")
+            .opt("model", "mini", "model config (mini|small|test)")
+            .opt("workers", "1", "worker replicas")
+            .opt("seed", "0", "weight seed")
+            .opt("max-active", "8", "max concurrent sequences per worker")
+            .opt("pool-tokens", "65536", "KV page-pool size per worker (tokens)"),
+    );
+    let cfg = ServerConfig {
+        model: model_cfg(&a.get("model")),
+        seed: a.get_u64("seed"),
+        workers: a.get_usize("workers"),
+        pool_tokens: a.get_usize("pool-tokens"),
+        max_active: a.get_usize("max-active"),
+        ..Default::default()
+    };
+    let addr = a.get("addr");
+    println!(
+        "starting polarquant server on {addr}: model={} workers={} params={}",
+        a.get("model"),
+        cfg.workers,
+        cfg.model.num_params()
+    );
+    let server = Arc::new(Server::start(cfg));
+    let listener = std::net::TcpListener::bind(&addr).expect("bind");
+    println!("listening. protocol: one JSON object per line; see README.");
+    run_tcp(server, listener).expect("serve");
+}
+
+fn cmd_generate(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("One-shot generation; prompt is comma-separated token ids.")
+            .opt("model", "mini", "model config")
+            .opt("seed", "0", "weight seed")
+            .opt("prompt", "1,2,3,4,5,6,7,8", "comma-separated token ids")
+            .opt("prompt-len", "0", "generate a random prompt of this length instead")
+            .opt("max-new-tokens", "16", "tokens to generate")
+            .opt("method", "polarquant-r-offline", "cache method")
+            .opt("ratio", "0.25", "compression ratio"),
+    );
+    let cfg = ServerConfig { model: model_cfg(&a.get("model")), seed: a.get_u64("seed"), ..Default::default() };
+    let vocab = cfg.model.vocab;
+    let prompt: Vec<u32> = if a.get_usize("prompt-len") > 0 {
+        use polarquant::util::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::new(42);
+        (0..a.get_usize("prompt-len"))
+            .map(|_| 16 + rng.next_below((vocab - 16) as u64) as u32)
+            .collect()
+    } else {
+        a.get("prompt")
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .collect()
+    };
+    let server = Server::start(cfg);
+    let mut req = GenRequest::new(0, prompt, a.get_usize("max-new-tokens"));
+    req.method = a.get("method");
+    req.ratio = a.get_f64("ratio");
+    let resp = server
+        .generate_blocking(req, Duration::from_secs(3600))
+        .expect("generation");
+    println!("{}", resp.to_json().encode_pretty());
+    server.shutdown();
+}
+
+fn cmd_angles(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("Fig. 2: angle distributions with/without preconditioning.")
+            .opt("dim", "64", "head dimension")
+            .opt("tokens", "512", "number of key vectors")
+            .opt("bins", "48", "histogram bins")
+            .opt("seed", "7", "seed")
+            .flag("from-model", "extract keys from the mini model instead of the KV generator"),
+    );
+    let d = a.get_usize("dim");
+    let keys = if a.get_flag("from-model") {
+        use polarquant::model::transformer::Transformer;
+        use polarquant::util::rng::{Pcg64, Rng};
+        let cfg = ModelConfig::mini();
+        let mut m = Transformer::synthetic(&cfg, a.get_u64("seed"));
+        let mut rng = Pcg64::new(a.get_u64("seed"));
+        let prompt: Vec<u32> = (0..a.get_usize("tokens").min(512))
+            .map(|_| 16 + rng.next_below((cfg.vocab - 16) as u64) as u32)
+            .collect();
+        let pre = m.prefill(&prompt);
+        pre.kv[cfg.n_layers / 2].head_keys(0, cfg.n_heads, cfg.head_dim)
+    } else {
+        polarquant::eval::ablation::test_rows(d, a.get_usize("tokens"), a.get_u64("seed"))
+    };
+    let exp = angles::run(&keys, d, 4, a.get_usize("bins"), a.get_u64("seed"));
+    println!("Fig. 2 — angle distributions over {} key vectors", exp.n_vectors);
+    for (tag, reports) in [
+        ("WITH preconditioning", &exp.with_precondition),
+        ("WITHOUT preconditioning", &exp.without_precondition),
+    ] {
+        println!("\n[{tag}]");
+        for r in reports {
+            println!(
+                "  level {}: mean={:.3} std={:.3} TV-to-analytic={:.4}\n    {}",
+                r.level,
+                r.mean,
+                r.std,
+                r.tv_to_analytic,
+                r.histogram.sparkline()
+            );
+        }
+    }
+    let mut t = report::Table::new("Fig2 summary", &["level", "setting", "mean", "std", "TV"]);
+    for (tag, reports) in [("precond", &exp.with_precondition), ("raw", &exp.without_precondition)] {
+        for r in reports {
+            t.row(vec![
+                r.level.to_string(),
+                tag.to_string(),
+                report::f(r.mean, 4),
+                report::f(r.std, 4),
+                report::f(r.tv_to_analytic, 4),
+            ]);
+        }
+    }
+    t.print();
+    if let Ok(p) = t.save_csv("fig2_angles") {
+        println!("saved {p}");
+    }
+}
+
+fn cmd_niah(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("Fig. 3: needle-in-a-haystack recall grid.")
+            .opt("contexts", "256,512,1024,2048,4096", "comma-separated context lengths")
+            .opt("depths", "10", "depth buckets")
+            .opt("trials", "8", "trials per cell")
+            .opt("ratio", "0.25", "compression ratio")
+            .opt("methods", "", "comma-separated methods (default: Fig. 3 set)")
+            .opt("seed", "2024", "seed"),
+    );
+    let cfg = niah::NiahConfig {
+        contexts: a
+            .get("contexts")
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect(),
+        depths: a.get_usize("depths"),
+        trials: a.get_usize("trials"),
+        ratio: a.get_f64("ratio"),
+        seed: a.get_u64("seed"),
+        ..Default::default()
+    };
+    let methods_s = a.get("methods");
+    let methods: Vec<&str> = if methods_s.is_empty() {
+        FIG3_METHODS.to_vec()
+    } else {
+        methods_s.split(',').map(|s| s.trim()).collect::<Vec<_>>()
+    };
+    let col_labels: Vec<String> = cfg.contexts.iter().map(|c| c.to_string()).collect();
+    let row_labels: Vec<String> = (0..cfg.depths)
+        .map(|d| format!("{}%", (d * 100) / cfg.depths))
+        .collect();
+    let mut summary = report::Table::new("Fig3 mean recall", &["method", "mean recall"]);
+    for m in &methods {
+        let r = niah::run_method(m, &cfg);
+        print!("{}", report::heatmap(&format!("Fig 3 — {m}"), &col_labels, &row_labels, &r.recall));
+        summary.row(vec![m.to_string(), report::f(r.mean_recall, 3)]);
+    }
+    summary.print();
+    if let Ok(p) = summary.save_csv("fig3_niah") {
+        println!("saved {p}");
+    }
+}
+
+fn cmd_longbench(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("Table 1: six-family long-context quality scores.")
+            .opt("model", "mini", "model config")
+            .opt("prompt-len", "192", "episode prompt length")
+            .opt("episodes", "4", "episodes per family")
+            .opt("ratio", "0.25", "compression ratio")
+            .opt("methods", "", "comma-separated (default: Table 1 set)")
+            .opt("seed", "7", "seed"),
+    );
+    let cfg = longbench::LongBenchConfig {
+        model: model_cfg(&a.get("model")),
+        prompt_len: a.get_usize("prompt-len"),
+        episodes_per_family: a.get_usize("episodes"),
+        ratio: a.get_f64("ratio"),
+        seed: a.get_u64("seed"),
+        ..Default::default()
+    };
+    let methods_s = a.get("methods");
+    let methods: Vec<&str> = if methods_s.is_empty() {
+        TABLE1_METHODS.to_vec()
+    } else {
+        methods_s.split(',').map(|s| s.trim()).collect()
+    };
+    let rows = longbench::run(&methods, &cfg);
+    let mut t = report::Table::new(
+        "Table 1 — LongBench-sim scores (token agreement ×100 with exact-cache generation)",
+        &["Method", "SQA", "MQA", "Sum", "Few", "Syn", "Code", "Average", "mem ratio"],
+    );
+    for r in &rows {
+        let mut cells = vec![r.method.clone()];
+        cells.extend(r.scores.iter().map(|(_, s)| report::f(*s, 2)));
+        cells.push(report::f(r.average, 2));
+        cells.push(report::f(r.mean_compression, 3));
+        t.row(cells);
+    }
+    t.print();
+    if let Ok(p) = t.save_csv("table1_longbench") {
+        println!("saved {p}");
+    }
+}
+
+fn cmd_runtime(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("Table 2: prefill/generation wall-clock per method.")
+            .opt("model", "mini", "model config")
+            .opt("prompt-len", "2048", "prompt tokens")
+            .opt("gen-tokens", "128", "generated tokens")
+            .opt("methods", "", "comma-separated (default: Table 1 set)")
+            .opt("ratio", "0.25", "compression ratio"),
+    );
+    let cfg = runtime_bench::RuntimeBenchConfig {
+        model: model_cfg(&a.get("model")),
+        prompt_len: a.get_usize("prompt-len"),
+        gen_tokens: a.get_usize("gen-tokens"),
+        ratio: a.get_f64("ratio"),
+        ..Default::default()
+    };
+    let methods_s = a.get("methods");
+    let methods: Vec<&str> = if methods_s.is_empty() {
+        TABLE1_METHODS.to_vec()
+    } else {
+        methods_s.split(',').map(|s| s.trim()).collect()
+    };
+    let rows = runtime_bench::run(&methods, &cfg);
+    let mut t = report::Table::new(
+        &format!(
+            "Table 2 — wall-clock (n={}, {} generated)",
+            cfg.prompt_len, cfg.gen_tokens
+        ),
+        &["Method", "Prefill (s)", "  of which compress", "Generation (s)", "tok/s", "cache MB"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.method.clone(),
+            report::f(r.prefill_s, 3),
+            report::f(r.compress_s, 3),
+            report::f(r.generation_s, 3),
+            report::f(r.tokens_per_s, 1),
+            report::f(r.cache_bytes as f64 / 1e6, 3),
+        ]);
+    }
+    t.print();
+    if let Ok(p) = t.save_csv("table2_runtime") {
+        println!("saved {p}");
+    }
+}
+
+fn cmd_memory(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("§4 memory accounting: bits/coordinate per method.")
+            .opt("dim", "128", "head dimension (paper: 128)")
+            .opt("tokens", "4096", "prefix length for amortized constants"),
+    );
+    let rows = memory_table(a.get_usize("dim"), a.get_usize("tokens"));
+    let mut t = report::Table::new(
+        "§4 memory — bits per coordinate",
+        &["Method", "bits/coord", "× vs fp16", "overhead bits"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.method.clone(),
+            report::f(r.bits_per_coord, 3),
+            report::f(r.compression_vs_fp16, 3),
+            report::f(r.overhead_bits, 3),
+        ]);
+    }
+    t.print();
+    if let Ok(p) = t.save_csv("memory_accounting") {
+        println!("saved {p}");
+    }
+    // Ablation snapshot.
+    let rows_kv = ablation::test_rows(64, 64, 3);
+    let pts = ablation::sweep_preconditioner(64, &rows_kv);
+    let mut t2 = report::Table::new("preconditioner ablation (d=64)", &["kind", "rel err"]);
+    for p in pts {
+        t2.row(vec![p.label, report::f(p.rel_error, 4)]);
+    }
+    t2.print();
+}
+
+fn cmd_theorem1(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("Theorem 1: ε(bits) rate-distortion curve on Gaussian vectors.")
+            .opt("dim", "64", "dimension")
+            .opt("levels", "4", "recursion depth")
+            .opt("samples", "200", "vectors per point")
+            .opt("seed", "42", "seed"),
+    );
+    let pts = rate_distortion_curve(
+        a.get_usize("dim"),
+        a.get_usize("levels"),
+        &[1, 2, 3, 4, 5, 6],
+        a.get_usize("samples"),
+        a.get_u64("seed"),
+    );
+    let mut t = report::Table::new(
+        "Theorem 1 — E‖x−x′‖²/‖x‖² vs bits",
+        &["bits/coord", "epsilon", "log2(1/eps)"],
+    );
+    for p in &pts {
+        t.row(vec![
+            report::f(p.bits_per_coord, 3),
+            format!("{:.3e}", p.epsilon),
+            report::f((1.0 / p.epsilon).log2(), 2),
+        ]);
+    }
+    t.print();
+    if let Ok(p) = t.save_csv("theorem1_curve") {
+        println!("saved {p}");
+    }
+}
+
+fn cmd_info(argv: Vec<String>) {
+    let a = parse(
+        argv,
+        Args::new("Inspect AOT artifacts.")
+            .opt("artifacts", "artifacts", "artifacts directory"),
+    );
+    let dir = a.get("artifacts");
+    if !Manifest::available(&dir) {
+        eprintln!("no manifest at {dir}/manifest.json — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let m = Manifest::load(&dir).expect("manifest");
+    println!("artifacts dir : {dir}");
+    println!(
+        "model         : vocab={} d_model={} layers={} heads={} head_dim={} ({} params)",
+        m.model.vocab,
+        m.model.d_model,
+        m.model.n_layers,
+        m.model.n_heads,
+        m.model.head_dim,
+        m.model.num_params()
+    );
+    println!(
+        "codec         : d={} L={} bits={:?}",
+        m.codec.head_dim, m.codec.levels, m.codec.level_bits
+    );
+    println!("graphs        :");
+    for g in &m.graphs {
+        println!(
+            "  {:24} {} args, {} outputs ({})",
+            g.name,
+            g.args.len(),
+            g.outputs.len(),
+            g.file
+        );
+    }
+    let j = Json::from_pairs(vec![
+        ("graphs", Json::num(m.graphs.len() as f64)),
+        ("weights", Json::str(m.weights_file.unwrap_or_default())),
+    ]);
+    println!("{}", j.encode());
+}

@@ -1,0 +1,222 @@
+//! Dense f32 linear algebra for the reference model and the codec hot path.
+//!
+//! Row-major matrices as flat slices. The matmul is blocked + unrolled over
+//! k with 4-wide accumulators — on the single-core eval box this is the L3
+//! serving hot path (decode attention + MLP), so it is written for the
+//! autovectorizer (see EXPERIMENTS.md §Perf for the iteration log).
+
+/// y = A·x, A is (m × n) row-major.
+pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        y[i] = dot(&a[i * n..(i + 1) * n], x);
+    }
+}
+
+/// y = Aᵀ·x, A is (m × n) row-major, x is length m, y length n.
+pub fn matvec_t(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for i in 0..m {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a[i * n..(i + 1) * n];
+        for j in 0..n {
+            y[j] += xi * row[j];
+        }
+    }
+}
+
+/// Dot product with 4 accumulators (breaks the dependency chain so LLVM can
+/// vectorize; measured ~3× over the naive loop on this box).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// C = A·B. A is (m×k), B is (k×n), C is (m×n); all row-major.
+/// Blocked i-k-j loop order (B streamed row-wise → unit-stride inner loop).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMSNorm: x ← x / rms(x) * w  (Llama-style, eps inside the sqrt).
+pub fn rmsnorm(x: &mut [f32], w: &[f32], eps: f32) {
+    assert_eq!(x.len(), w.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for (v, &wi) in x.iter_mut().zip(w) {
+        *v = *v * inv * wi;
+    }
+}
+
+/// SiLU activation x·σ(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// a += b
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// a ← a * s
+pub fn scale(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// argmax over a slice (first max wins). Empty → None.
+pub fn argmax(x: &[f32]) -> Option<usize> {
+    if x.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = 5;
+        let mut eye = vec![0.0f32; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1.0;
+        }
+        let a: Vec<f32> = (0..m * m).map(|i| i as f32).collect();
+        let mut c = vec![0.0f32; m * m];
+        matmul(&a, &eye, m, m, m, &mut c);
+        assert_eq!(a, c);
+        matmul(&eye, &a, m, m, m, &mut c);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [[1,2],[3,4]] · [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_t_transposes() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let x = [1.0f32, 10.0];
+        let mut y = [0.0f32; 3];
+        matvec_t(&a, &x, 2, 3, &mut y);
+        assert_eq!(y, [41.0, 52.0, 63.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = [1000.0f32, 1001.0, 999.0];
+        softmax(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_output_rms() {
+        let mut x = vec![3.0f32; 16];
+        let w = vec![1.0f32; 16];
+        rmsnorm(&mut x, &w, 1e-6);
+        let rms = (x.iter().map(|v| v * v).sum::<f32>() / 16.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn argmax_first_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax(&[]), None);
+    }
+}

@@ -1,0 +1,6 @@
+//! Numerical substrates: special functions, dense linear algebra, and
+//! random orthogonal preconditioners.
+
+pub mod linalg;
+pub mod rotation;
+pub mod special;

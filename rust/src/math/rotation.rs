@@ -1,0 +1,407 @@
+//! Random preconditioners (paper §2.2 / footnote in §3.2).
+//!
+//! The analysis uses an i.i.d. Gaussian sketch **S**; the implementation —
+//! like the paper's — uses random *rotations* (orthogonal matrices), which
+//! preserve norms and inner products exactly. Two constructions:
+//!
+//! * [`Rotation::haar`] — dense Haar-random rotation via QR (Householder)
+//!   of a Gaussian matrix, sign-corrected so the distribution is Haar.
+//!   O(d²) apply; the faithful version of the paper's "random rotational
+//!   matrix".
+//! * [`Rotation::hadamard`] — fast randomized Hadamard preconditioner
+//!   (H·D with random signs D), O(d log d) apply; the QuaRot/FlashAttn-3
+//!   style preconditioner the paper cites as related. Exposed as an
+//!   ablation (`bench_ablations`).
+//!
+//! Also provides [`GaussianSketch`] (the analysis object, m×d i.i.d.
+//! normals scaled by 1/√m) for the theory-validation tests.
+
+use crate::util::rng::{Pcg64, Rng};
+
+/// Which preconditioner to use — threaded through configs/CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreconditionKind {
+    /// No preconditioning (paper's "PolarQuant" row; -R variants use one).
+    None,
+    /// Dense Haar rotation (paper's implementation choice).
+    Haar,
+    /// Randomized Hadamard transform (fast variant, ablation).
+    Hadamard,
+}
+
+impl PreconditionKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(Self::None),
+            "haar" | "rotation" => Some(Self::Haar),
+            "hadamard" => Some(Self::Hadamard),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Haar => "haar",
+            Self::Hadamard => "hadamard",
+        }
+    }
+}
+
+/// An orthogonal preconditioner for dimension-d vectors.
+#[derive(Clone, Debug)]
+pub enum Rotation {
+    Identity {
+        d: usize,
+    },
+    /// Row-major d×d orthogonal matrix.
+    Dense {
+        d: usize,
+        m: Vec<f32>,
+    },
+    /// x ↦ (1/√d)·H·(D·x) with D = diag(signs); involution up to sign order.
+    FastHadamard {
+        d: usize,
+        signs: Vec<f32>,
+    },
+}
+
+impl Rotation {
+    pub fn new(kind: PreconditionKind, d: usize, seed: u64) -> Self {
+        match kind {
+            PreconditionKind::None => Rotation::Identity { d },
+            PreconditionKind::Haar => Rotation::haar(d, seed),
+            PreconditionKind::Hadamard => Rotation::hadamard(d, seed),
+        }
+    }
+
+    /// Haar-random rotation, memoized by (d, seed): the preconditioner is
+    /// shared across K/V, layers and heads (paper §4.1), so every cache
+    /// build asks for the same matrix — compute the QR once per process.
+    pub fn haar(d: usize, seed: u64) -> Self {
+        use std::collections::HashMap;
+        use std::sync::{Mutex, OnceLock};
+        static CACHE: OnceLock<Mutex<HashMap<(usize, u64), Vec<f32>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(m) = cache.lock().unwrap().get(&(d, seed)) {
+            return Rotation::Dense { d, m: m.clone() };
+        }
+        let rot = Self::haar_uncached(d, seed);
+        if let Rotation::Dense { m, .. } = &rot {
+            cache.lock().unwrap().insert((d, seed), m.clone());
+        }
+        rot
+    }
+
+    /// QR of a Gaussian matrix with the sign fix (multiply column j of Q
+    /// by sign(R_jj)) that makes Q exactly Haar-distributed.
+    fn haar_uncached(d: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x524f54); // "ROT"
+        // Gaussian matrix, column-major for the Householder sweep below.
+        let mut a = vec![0.0f64; d * d];
+        for v in a.iter_mut() {
+            *v = rng.gaussian();
+        }
+        // Householder QR in f64, accumulate Q explicitly.
+        // a is treated as column-major: a[i + j*d] = A[i][j].
+        let mut q = vec![0.0f64; d * d];
+        for i in 0..d {
+            q[i + i * d] = 1.0;
+        }
+        let mut v = vec![0.0f64; d];
+        for k in 0..d {
+            // Householder vector for column k below the diagonal.
+            let mut normx = 0.0;
+            for i in k..d {
+                normx += a[i + k * d] * a[i + k * d];
+            }
+            let normx = normx.sqrt();
+            if normx < 1e-300 {
+                continue;
+            }
+            let alpha = if a[k + k * d] >= 0.0 { -normx } else { normx };
+            let mut vnorm2 = 0.0;
+            for i in k..d {
+                v[i] = a[i + k * d];
+                if i == k {
+                    v[i] -= alpha;
+                }
+                vnorm2 += v[i] * v[i];
+            }
+            if vnorm2 < 1e-300 {
+                continue;
+            }
+            let beta = 2.0 / vnorm2;
+            // Apply H = I − β v vᵀ to A (columns k..d) …
+            for j in k..d {
+                let mut s = 0.0;
+                for i in k..d {
+                    s += v[i] * a[i + j * d];
+                }
+                let s = s * beta;
+                for i in k..d {
+                    a[i + j * d] -= s * v[i];
+                }
+            }
+            // … and accumulate into Q (Q ← Q·H).
+            for r in 0..d {
+                let mut s = 0.0;
+                for i in k..d {
+                    s += q[r + i * d] * v[i];
+                }
+                let s = s * beta;
+                for i in k..d {
+                    q[r + i * d] -= s * v[i];
+                }
+            }
+        }
+        // Sign fix: column j of Q times sign(R_jj) (R is in `a`'s diag).
+        for j in 0..d {
+            if a[j + j * d] < 0.0 {
+                for i in 0..d {
+                    q[i + j * d] = -q[i + j * d];
+                }
+            }
+        }
+        // Store row-major f32.
+        let mut m = vec![0.0f32; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                m[i * d + j] = q[i + j * d] as f32;
+            }
+        }
+        Rotation::Dense { d, m }
+    }
+
+    /// Randomized Hadamard: requires d a power of two.
+    pub fn hadamard(d: usize, seed: u64) -> Self {
+        assert!(d.is_power_of_two(), "hadamard requires power-of-two d");
+        let mut rng = Pcg64::new(seed ^ 0x484144); // "HAD"
+        let signs = (0..d)
+            .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        Rotation::FastHadamard { d, signs }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Rotation::Identity { d } | Rotation::Dense { d, .. } | Rotation::FastHadamard { d, .. } => *d,
+        }
+    }
+
+    /// y = R·x (forward preconditioning).
+    pub fn apply(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Rotation::Identity { d } => {
+                assert_eq!(x.len(), *d);
+                y.copy_from_slice(x);
+            }
+            Rotation::Dense { d, m } => {
+                crate::math::linalg::matvec(m, x, *d, *d, y);
+            }
+            Rotation::FastHadamard { d, signs } => {
+                assert_eq!(x.len(), *d);
+                for i in 0..*d {
+                    y[i] = x[i] * signs[i];
+                }
+                fwht(y);
+                let s = 1.0 / (*d as f32).sqrt();
+                for v in y.iter_mut() {
+                    *v *= s;
+                }
+            }
+        }
+    }
+
+    /// y = Rᵀ·x (inverse — rotations are orthogonal).
+    pub fn apply_t(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Rotation::Identity { d } => {
+                assert_eq!(x.len(), *d);
+                y.copy_from_slice(x);
+            }
+            Rotation::Dense { d, m } => {
+                crate::math::linalg::matvec_t(m, x, *d, *d, y);
+            }
+            Rotation::FastHadamard { d, signs } => {
+                // (H·D)ᵀ = D·Hᵀ = D·H (H symmetric).
+                assert_eq!(x.len(), *d);
+                y.copy_from_slice(x);
+                fwht(y);
+                let s = 1.0 / (*d as f32).sqrt();
+                for (v, &sg) in y.iter_mut().zip(signs) {
+                    *v *= s * sg;
+                }
+            }
+        }
+    }
+
+    /// Apply forward to every row of a row-major (n × d) matrix in place.
+    pub fn apply_rows(&self, rows: &mut [f32]) {
+        let d = self.dim();
+        assert_eq!(rows.len() % d, 0);
+        let mut tmp = vec![0.0f32; d];
+        for row in rows.chunks_mut(d) {
+            self.apply(row, &mut tmp);
+            row.copy_from_slice(&tmp);
+        }
+    }
+}
+
+/// In-place fast Walsh–Hadamard transform (unnormalized).
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// The analysis object: m×d i.i.d. N(0, 1/m) sketch (JL). Only used by
+/// theory-validation tests/benches, not the production codec.
+#[derive(Clone, Debug)]
+pub struct GaussianSketch {
+    pub m: usize,
+    pub d: usize,
+    w: Vec<f32>,
+}
+
+impl GaussianSketch {
+    pub fn new(m: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x534b45); // "SKE"
+        let s = 1.0 / (m as f64).sqrt();
+        let w = (0..m * d).map(|_| (rng.gaussian() * s) as f32).collect();
+        Self { m, d, w }
+    }
+
+    pub fn apply(&self, x: &[f32], y: &mut [f32]) {
+        crate::math::linalg::matvec(&self.w, x, self.m, self.d, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::{dot, norm2};
+
+    fn check_orthogonal(r: &Rotation, d: usize, seed: u64) {
+        let mut rng = Pcg64::new(seed);
+        let mut x = vec![0.0f32; d];
+        let mut y = vec![0.0f32; d];
+        let mut rx = vec![0.0f32; d];
+        let mut ry = vec![0.0f32; d];
+        rng.fill_gaussian(&mut x);
+        rng.fill_gaussian(&mut y);
+        r.apply(&x, &mut rx);
+        r.apply(&y, &mut ry);
+        // Norms and inner products preserved.
+        assert!((norm2(&rx) - norm2(&x)).abs() / norm2(&x) < 1e-4);
+        assert!((dot(&rx, &ry) - dot(&x, &y)).abs() < 1e-2 * norm2(&x) * norm2(&y));
+        // Round trip via transpose.
+        let mut back = vec![0.0f32; d];
+        r.apply_t(&rx, &mut back);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4, "roundtrip {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn haar_is_orthogonal() {
+        for d in [2usize, 4, 16, 64] {
+            let r = Rotation::haar(d, 7);
+            check_orthogonal(&r, d, 99);
+        }
+    }
+
+    #[test]
+    fn hadamard_is_orthogonal() {
+        for d in [2usize, 8, 64, 128] {
+            let r = Rotation::hadamard(d, 7);
+            check_orthogonal(&r, d, 100);
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let r = Rotation::new(PreconditionKind::None, 8, 0);
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut y = vec![0.0f32; 8];
+        r.apply(&x, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn fwht_parseval() {
+        let mut x = vec![1.0f32, 2.0, -1.0, 0.5, 0.0, 3.0, -2.0, 1.5];
+        let n0 = norm2(&x);
+        fwht(&mut x);
+        let n1 = norm2(&x) / (8f32).sqrt();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn haar_rotation_gaussianizes_coordinates() {
+        // Rotating a *fixed* unit vector by many random rotations should give
+        // coordinates with roughly sphere-uniform statistics: mean 0,
+        // var 1/d per coordinate.
+        let d = 16;
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        let trials = 200;
+        for s in 0..trials {
+            let r = Rotation::haar(d, s as u64);
+            let mut e0 = vec![0.0f32; d];
+            e0[0] = 1.0;
+            let mut y = vec![0.0f32; d];
+            r.apply(&e0, &mut y);
+            for &v in &y {
+                sum += v as f64;
+                sum2 += (v as f64) * (v as f64);
+            }
+        }
+        let n = (trials * d) as f64;
+        let mean = sum / n;
+        let var = sum2 / n - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0 / d as f64).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn sketch_preserves_norms_on_average() {
+        let d = 32;
+        let m = 256;
+        let sk = GaussianSketch::new(m, d, 3);
+        let mut rng = Pcg64::new(4);
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian(&mut x);
+        let mut y = vec![0.0f32; m];
+        sk.apply(&x, &mut y);
+        let ratio = norm2(&y) / norm2(&x);
+        assert!((ratio - 1.0).abs() < 0.25, "JL ratio {ratio}");
+    }
+
+    #[test]
+    fn apply_rows_matches_apply() {
+        let d = 8;
+        let r = Rotation::haar(d, 5);
+        let mut rng = Pcg64::new(6);
+        let mut rows = vec![0.0f32; 3 * d];
+        rng.fill_gaussian(&mut rows);
+        let orig = rows.clone();
+        r.apply_rows(&mut rows);
+        for i in 0..3 {
+            let mut want = vec![0.0f32; d];
+            r.apply(&orig[i * d..(i + 1) * d], &mut want);
+            assert_eq!(&rows[i * d..(i + 1) * d], &want[..]);
+        }
+    }
+}

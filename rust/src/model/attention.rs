@@ -1,0 +1,175 @@
+//! Attention over a (possibly compressed) KV cache — the L3 decode hot
+//! path. Mirrors `python/compile/model.py::decode_step`'s attention:
+//! scores over cached tokens plus the current token's own (k, v), one
+//! stable softmax across both.
+
+use crate::math::linalg::dot;
+use crate::quant::compressor::CompressedKv;
+
+/// Scratch buffers reused across decode steps (no allocation in the loop).
+#[derive(Default)]
+pub struct AttnScratch {
+    pub scores: Vec<f32>,
+    pub out_pre: Vec<f32>,
+}
+
+/// Exact attention for one head over materialized f32 K/V rows
+/// (prefill path): q (dh), keys/values (n × dh) with causal prefix `n`.
+pub fn attend_exact(q: &[f32], keys: &[f32], values: &[f32], n: usize, out: &mut [f32]) {
+    let dh = q.len();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0.0f32; n];
+    for t in 0..n {
+        scores[t] = dot(&keys[t * dh..(t + 1) * dh], q) * scale;
+    }
+    crate::math::linalg::softmax(&mut scores);
+    out.fill(0.0);
+    for t in 0..n {
+        let w = scores[t];
+        let row = &values[t * dh..(t + 1) * dh];
+        for j in 0..dh {
+            out[j] += w * row[j];
+        }
+    }
+}
+
+/// Attention for one head over a compressed cache plus the current token's
+/// own (k, v) — the generation-step path (paper Eq. 6 with the streamed
+/// pair in full precision).
+pub fn attend_cached(
+    cache: &dyn CompressedKv,
+    q: &[f32],
+    self_k: &[f32],
+    self_v: &[f32],
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    let dh = q.len();
+    let scale = 1.0 / (dh as f32).sqrt();
+    cache.key_scores(q, &mut scratch.scores);
+    let n = scratch.scores.len();
+    debug_assert_eq!(n, cache.n_tokens());
+    let self_score = dot(q, self_k) * scale;
+
+    // Stable softmax over cache scores + self score.
+    let mut max = self_score;
+    for s in scratch.scores.iter_mut() {
+        *s *= scale;
+        if *s > max {
+            max = *s;
+        }
+    }
+    let mut denom = 0.0f32;
+    for s in scratch.scores.iter_mut() {
+        *s = (*s - max).exp();
+        denom += *s;
+    }
+    let e_self = (self_score - max).exp();
+    denom += e_self;
+    let inv = 1.0 / denom;
+    for s in scratch.scores.iter_mut() {
+        *s *= inv;
+    }
+
+    out.fill(0.0);
+    cache.value_combine(&scratch.scores, out);
+    let w_self = e_self * inv;
+    for j in 0..dh {
+        out[j] += w_self * self_v[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::compressor::{KvBlock, KvCompressor};
+    use crate::quant::exact::ExactCompressor;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian(&mut v);
+        v
+    }
+
+    #[test]
+    fn attend_exact_uniform_when_scores_equal() {
+        let dh = 8;
+        let keys = vec![0.0f32; 4 * dh]; // all-zero keys → uniform attention
+        let mut values = vec![0.0f32; 4 * dh];
+        for t in 0..4 {
+            values[t * dh] = t as f32;
+        }
+        let q = vec![1.0f32; dh];
+        let mut out = vec![0.0f32; dh];
+        attend_exact(&q, &keys, &values, 4, &mut out);
+        assert!((out[0] - 1.5).abs() < 1e-5); // mean of 0..3
+    }
+
+    #[test]
+    fn attend_cached_exact_matches_attend_exact() {
+        // With an Exact cache holding n−1 tokens and the n-th passed as
+        // self, results must match full attention over n tokens.
+        let dh = 16;
+        let n = 12;
+        let keys = gaussian(n * dh, 1);
+        let values = gaussian(n * dh, 2);
+        let q = gaussian(dh, 3);
+
+        let mut want = vec![0.0f32; dh];
+        attend_exact(&q, &keys, &values, n, &mut want);
+
+        let block = KvBlock::new(
+            keys[..(n - 1) * dh].to_vec(),
+            values[..(n - 1) * dh].to_vec(),
+            n - 1,
+            dh,
+        );
+        let cache = ExactCompressor.compress(&block, &[]);
+        let mut scratch = AttnScratch::default();
+        let mut got = vec![0.0f32; dh];
+        attend_cached(
+            &*cache,
+            &q,
+            &keys[(n - 1) * dh..],
+            &values[(n - 1) * dh..],
+            &mut scratch,
+            &mut got,
+        );
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 5e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn self_token_dominates_when_matching() {
+        let dh = 16;
+        let block = KvBlock::new(gaussian(8 * dh, 4), gaussian(8 * dh, 5), 8, dh);
+        let cache = ExactCompressor.compress(&block, &[]);
+        let q: Vec<f32> = (0..dh).map(|i| (i as f32) * 2.0).collect();
+        let self_k = q.clone(); // huge self score
+        let self_v = vec![7.0f32; dh];
+        let mut scratch = AttnScratch::default();
+        let mut out = vec![0.0f32; dh];
+        attend_cached(&*cache, &q, &self_k, &self_v, &mut scratch, &mut out);
+        for &o in &out {
+            assert!((o - 7.0).abs() < 0.1, "self should dominate: {o}");
+        }
+    }
+
+    #[test]
+    fn weights_are_probabilities() {
+        let dh = 8;
+        let block = KvBlock::new(gaussian(6 * dh, 6), gaussian(6 * dh, 7), 6, dh);
+        let cache = ExactCompressor.compress(&block, &[]);
+        let q = gaussian(dh, 8);
+        let self_k = gaussian(dh, 9);
+        let self_v = vec![0.0f32; dh];
+        let mut scratch = AttnScratch::default();
+        let mut out = vec![0.0f32; dh];
+        attend_cached(&*cache, &q, &self_k, &self_v, &mut scratch, &mut out);
+        let total: f32 = scratch.scores.iter().sum();
+        assert!(total <= 1.0 + 1e-5 && total > 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Model configuration — kept in lockstep with `python/compile/model.py`
+//! (`ModelConfig`, `MINI`, `SMALL`). The canonical parameter order defined
+//! here is the weights-file order and the AOT-graph argument order.
+
+/// Mini-Llama architecture hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    /// The default config every example/bench uses (≈3.7M params).
+    pub fn mini() -> Self {
+        Self {
+            vocab: 1024,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 64,
+            d_ff: 768,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// Larger config for scaling experiments (≈25M params).
+    pub fn small() -> Self {
+        Self {
+            vocab: 2048,
+            d_model: 512,
+            n_layers: 6,
+            n_heads: 8,
+            head_dim: 64,
+            d_ff: 1536,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// Tiny config for unit tests.
+    pub fn test() -> Self {
+        Self {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 16,
+            d_ff: 48,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "mini" => Some(Self::mini()),
+            "small" => Some(Self::small()),
+            "test" => Some(Self::test()),
+            _ => None,
+        }
+    }
+
+    /// Canonical flat parameter order (matches python `params_order`).
+    pub fn params_order(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        for l in 0..self.n_layers {
+            for leaf in [
+                "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+            ] {
+                names.push(format!("l{l}.{leaf}"));
+            }
+        }
+        names.push("final_norm".to_string());
+        names
+    }
+
+    /// Shape of a named parameter.
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        let (d, h, dh, f) = (self.d_model, self.n_heads, self.head_dim, self.d_ff);
+        if name == "embed" {
+            return vec![self.vocab, d];
+        }
+        if name.ends_with("_norm") {
+            return vec![d];
+        }
+        let leaf = name.rsplit('.').next().unwrap();
+        match leaf {
+            "wq" | "wk" | "wv" => vec![d, h * dh],
+            "wo" => vec![h * dh, d],
+            "w_gate" | "w_up" => vec![d, f],
+            "w_down" => vec![f, d],
+            _ => panic!("unknown param {name}"),
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params_order()
+            .iter()
+            .map(|n| self.param_shape(n).iter().product::<usize>())
+            .sum()
+    }
+
+    /// fp16 KV bytes per token across all layers/heads (the denominator of
+    /// cache-compression ratios at the whole-model level).
+    pub fn kv_bytes_per_token_fp16(&self) -> usize {
+        2 * 2 * self.n_layers * self.n_heads * self.head_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_order_matches_python_convention() {
+        let cfg = ModelConfig::test();
+        let order = cfg.params_order();
+        assert_eq!(order[0], "embed");
+        assert_eq!(order[1], "l0.attn_norm");
+        assert_eq!(order[9], "l0.w_down");
+        assert_eq!(order.last().unwrap(), "final_norm");
+        assert_eq!(order.len(), 2 + 9 * cfg.n_layers);
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let cfg = ModelConfig::mini();
+        assert_eq!(cfg.param_shape("embed"), vec![1024, 256]);
+        assert_eq!(cfg.param_shape("l0.wq"), vec![256, 256]);
+        assert_eq!(cfg.param_shape("l3.w_down"), vec![768, 256]);
+        assert_eq!(cfg.param_shape("final_norm"), vec![256]);
+    }
+
+    #[test]
+    fn mini_param_count_matches_python() {
+        // python test pins 3.5M..4M; the exact figure must agree.
+        assert_eq!(ModelConfig::mini().num_params(), 3_672_320);
+    }
+
+    #[test]
+    fn kv_bytes_accounting() {
+        let cfg = ModelConfig::mini();
+        // 4 layers × 4 heads × 64 dims × 2 (K+V) × 2 bytes = 4096.
+        assert_eq!(cfg.kv_bytes_per_token_fp16(), 4096);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelConfig::by_name("mini").is_some());
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,9 @@
+//! The model substrate: a mini-Llama implemented natively (reference /
+//! serving engine) with weights interchangeable with the JAX L2 model.
+
+pub mod attention;
+pub mod config;
+pub mod rope;
+pub mod sampler;
+pub mod transformer;
+pub mod weights;

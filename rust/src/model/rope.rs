@@ -1,0 +1,162 @@
+//! Rotary position embeddings (Llama-style interleaved pairs), matching
+//! `python/compile/model.py::apply_rope` exactly so the native and PJRT
+//! engines agree numerically.
+
+use crate::model::config::ModelConfig;
+
+/// Precomputed per-position rotation table.
+#[derive(Clone, Debug)]
+pub struct RopeTable {
+    pub head_dim: usize,
+    /// (max_pos × head_dim/2) cos values.
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    max_pos: usize,
+    theta: f32,
+}
+
+impl RopeTable {
+    pub fn new(cfg: &ModelConfig, max_pos: usize) -> Self {
+        let half = cfg.head_dim / 2;
+        let mut cos = Vec::with_capacity(max_pos * half);
+        let mut sin = Vec::with_capacity(max_pos * half);
+        for p in 0..max_pos {
+            for j in 0..half {
+                let inv = (cfg.rope_theta as f64).powf(-(j as f64) / half as f64);
+                let ang = p as f64 * inv;
+                cos.push(ang.cos() as f32);
+                sin.push(ang.sin() as f32);
+            }
+        }
+        Self { head_dim: cfg.head_dim, cos, sin, max_pos, theta: cfg.rope_theta }
+    }
+
+    /// Grow the table if `pos` exceeds capacity (amortized doubling).
+    fn ensure(&mut self, pos: usize) {
+        if pos < self.max_pos {
+            return;
+        }
+        let half = self.head_dim / 2;
+        let new_max = (pos + 1).next_power_of_two();
+        for p in self.max_pos..new_max {
+            for j in 0..half {
+                let inv = (self.theta as f64).powf(-(j as f64) / half as f64);
+                let ang = p as f64 * inv;
+                self.cos.push(ang.cos() as f32);
+                self.sin.push(ang.sin() as f32);
+            }
+        }
+        self.max_pos = new_max;
+    }
+
+    /// Rotate one head vector in place for position `pos`.
+    pub fn apply(&mut self, x: &mut [f32], pos: usize) {
+        assert_eq!(x.len(), self.head_dim);
+        self.ensure(pos);
+        let half = self.head_dim / 2;
+        let c = &self.cos[pos * half..(pos + 1) * half];
+        let s = &self.sin[pos * half..(pos + 1) * half];
+        for j in 0..half {
+            let x0 = x[2 * j];
+            let x1 = x[2 * j + 1];
+            x[2 * j] = x0 * c[j] - x1 * s[j];
+            x[2 * j + 1] = x0 * s[j] + x1 * c[j];
+        }
+    }
+
+    /// Rotate all heads of a (H × head_dim) flattened vector.
+    pub fn apply_heads(&mut self, x: &mut [f32], pos: usize) {
+        let dh = self.head_dim;
+        assert_eq!(x.len() % dh, 0);
+        self.ensure(pos);
+        // Split per-head without re-borrowing self mutably inside.
+        let half = dh / 2;
+        let c = self.cos[pos * half..(pos + 1) * half].to_vec();
+        let s = self.sin[pos * half..(pos + 1) * half].to_vec();
+        for head in x.chunks_mut(dh) {
+            for j in 0..half {
+                let x0 = head[2 * j];
+                let x1 = head[2 * j + 1];
+                head[2 * j] = x0 * c[j] - x1 * s[j];
+                head[2 * j + 1] = x0 * s[j] + x1 * c[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::norm2;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::test()
+    }
+
+    #[test]
+    fn position_zero_is_identity() {
+        let mut t = RopeTable::new(&cfg(), 8);
+        let mut x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let orig = x.clone();
+        t.apply(&mut x, 0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut t = RopeTable::new(&cfg(), 64);
+        let mut rng = Pcg64::new(1);
+        for pos in [1usize, 5, 63] {
+            let mut x = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut x);
+            let n0 = norm2(&x);
+            t.apply(&mut x, pos);
+            assert!((norm2(&x) - n0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn relative_property_dot_depends_on_distance() {
+        // ⟨R_p q, R_q k⟩ depends only on p−q: check ⟨R_3 x, R_5 y⟩ =
+        // ⟨R_0 x, R_2 y⟩ for pair-aligned vectors.
+        let mut t = RopeTable::new(&cfg(), 64);
+        let mut rng = Pcg64::new(2);
+        let mut x = vec![0.0f32; 16];
+        let mut y = vec![0.0f32; 16];
+        rng.fill_gaussian(&mut x);
+        rng.fill_gaussian(&mut y);
+        let dot = crate::math::linalg::dot;
+        let mut x3 = x.clone();
+        let mut y5 = y.clone();
+        t.apply(&mut x3, 3);
+        t.apply(&mut y5, 5);
+        let mut x0 = x.clone();
+        let mut y2 = y.clone();
+        t.apply(&mut x0, 0);
+        t.apply(&mut y2, 2);
+        assert!((dot(&x3, &y5) - dot(&x0, &y2)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn table_grows_on_demand() {
+        let mut t = RopeTable::new(&cfg(), 4);
+        let mut x = vec![1.0f32; 16];
+        t.apply(&mut x, 100); // must not panic
+        assert!(t.max_pos > 100);
+    }
+
+    #[test]
+    fn apply_heads_matches_per_head() {
+        let mut t1 = RopeTable::new(&cfg(), 32);
+        let mut t2 = RopeTable::new(&cfg(), 32);
+        let mut rng = Pcg64::new(3);
+        let mut flat = vec![0.0f32; 2 * 16];
+        rng.fill_gaussian(&mut flat);
+        let mut per = flat.clone();
+        t1.apply_heads(&mut flat, 9);
+        t2.apply(&mut per[..16], 9);
+        t2.apply(&mut per[16..], 9);
+        assert_eq!(flat, per);
+    }
+}

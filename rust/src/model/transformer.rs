@@ -1,0 +1,393 @@
+//! The mini-Llama forward pass in pure Rust (the native engine).
+//!
+//! Architecture matches `python/compile/model.py` op-for-op (RMSNorm →
+//! MHA with RoPE → residual → RMSNorm → SwiGLU → residual; tied LM head)
+//! so the native and PJRT engines are numerically interchangeable given
+//! the same weights file. Prefill materializes per-layer K/V blocks (then
+//! handed to a compression method); decode attends through the
+//! [`CompressedKv`] interface so every method pays its real decode cost.
+
+use crate::math::linalg::{matmul, matvec, matvec_t, rmsnorm, silu, softmax};
+use crate::model::attention::{attend_cached, AttnScratch};
+use crate::model::config::ModelConfig;
+use crate::model::rope::RopeTable;
+use crate::model::weights::Weights;
+use crate::quant::compressor::CompressedKv;
+
+/// Per-layer prefill output: K/V rows plus the observation-window queries
+/// that score-based eviction methods need.
+#[derive(Clone, Debug)]
+pub struct LayerKv {
+    /// (S × H × dh) flattened keys (RoPE applied).
+    pub keys: Vec<f32>,
+    /// (S × H × dh) flattened values.
+    pub values: Vec<f32>,
+    /// Last-W queries, (W × H × dh) flattened (RoPE applied).
+    pub obs_queries: Vec<f32>,
+}
+
+impl LayerKv {
+    /// Extract head `h`'s (S × dh) key block.
+    pub fn head_keys(&self, h: usize, n_heads: usize, dh: usize) -> Vec<f32> {
+        extract_head(&self.keys, h, n_heads, dh)
+    }
+
+    pub fn head_values(&self, h: usize, n_heads: usize, dh: usize) -> Vec<f32> {
+        extract_head(&self.values, h, n_heads, dh)
+    }
+
+    pub fn head_obs_queries(&self, h: usize, n_heads: usize, dh: usize) -> Vec<f32> {
+        extract_head(&self.obs_queries, h, n_heads, dh)
+    }
+}
+
+fn extract_head(flat: &[f32], h: usize, n_heads: usize, dh: usize) -> Vec<f32> {
+    let row = n_heads * dh;
+    let s = flat.len() / row;
+    let mut out = Vec::with_capacity(s * dh);
+    for t in 0..s {
+        out.extend_from_slice(&flat[t * row + h * dh..t * row + (h + 1) * dh]);
+    }
+    out
+}
+
+/// Prefill result.
+pub struct PrefillOutput {
+    /// (S × vocab) logits.
+    pub logits: Vec<f32>,
+    pub kv: Vec<LayerKv>,
+    pub seq_len: usize,
+}
+
+impl PrefillOutput {
+    pub fn last_logits(&self, vocab: usize) -> &[f32] {
+        &self.logits[(self.seq_len - 1) * vocab..]
+    }
+}
+
+/// The model: weights + RoPE table + scratch.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+    rope: RopeTable,
+    scratch: AttnScratch,
+}
+
+/// Observation-window length captured at prefill (SnapKV's default is 16–64;
+/// we use 16 to keep the window smaller than the shortest eval prompts).
+pub const OBS_WINDOW: usize = 16;
+
+impl Transformer {
+    pub fn new(weights: Weights) -> Self {
+        let cfg = weights.cfg.clone();
+        let rope = RopeTable::new(&cfg, 256);
+        Self { cfg, weights, rope, scratch: AttnScratch::default() }
+    }
+
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
+        Self::new(Weights::synthetic(cfg, seed))
+    }
+
+    /// Full-prompt forward. O(S²) attention, materializes K/V per layer.
+    pub fn prefill(&mut self, tokens: &[u32]) -> PrefillOutput {
+        let cfg = self.cfg.clone();
+        let (s, d, h, dh, f) = (tokens.len(), cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
+        let hd = h * dh;
+        assert!(s > 0, "empty prompt");
+
+        // Embed.
+        let embed = self.weights.get("embed");
+        let mut x = vec![0.0f32; s * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize % cfg.vocab;
+            x[t * d..(t + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        }
+
+        let mut kv_out = Vec::with_capacity(cfg.n_layers);
+        let mut xin = vec![0.0f32; s * d];
+        let mut q = vec![0.0f32; s * hd];
+        let mut k = vec![0.0f32; s * hd];
+        let mut v = vec![0.0f32; s * hd];
+        let mut attn = vec![0.0f32; s * hd];
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        for l in 0..cfg.n_layers {
+            // Attention block.
+            xin.copy_from_slice(&x);
+            for t in 0..s {
+                rmsnorm(&mut xin[t * d..(t + 1) * d], self.weights.layer(l, "attn_norm"), cfg.rms_eps);
+            }
+            let wq = self.weights.layer(l, "wq").to_vec();
+            let wk = self.weights.layer(l, "wk").to_vec();
+            let wv = self.weights.layer(l, "wv").to_vec();
+            matmul(&xin, &wq, s, d, hd, &mut q);
+            matmul(&xin, &wk, s, d, hd, &mut k);
+            matmul(&xin, &wv, s, d, hd, &mut v);
+            for t in 0..s {
+                self.rope.apply_heads(&mut q[t * hd..(t + 1) * hd], t);
+                self.rope.apply_heads(&mut k[t * hd..(t + 1) * hd], t);
+            }
+
+            // Per-head causal attention.
+            for head in 0..h {
+                let qh = extract_head(&q, head, h, dh);
+                let kh = extract_head(&k, head, h, dh);
+                let vh = extract_head(&v, head, h, dh);
+                let mut probs = vec![0.0f32; s];
+                for t in 0..s {
+                    let qrow = &qh[t * dh..(t + 1) * dh];
+                    for u in 0..=t {
+                        probs[u] = crate::math::linalg::dot(qrow, &kh[u * dh..(u + 1) * dh])
+                            * scale;
+                    }
+                    softmax(&mut probs[..=t]);
+                    let orow = &mut attn[t * hd + head * dh..t * hd + (head + 1) * dh];
+                    orow.fill(0.0);
+                    for u in 0..=t {
+                        let w = probs[u];
+                        let vrow = &vh[u * dh..(u + 1) * dh];
+                        for j in 0..dh {
+                            orow[j] += w * vrow[j];
+                        }
+                    }
+                }
+            }
+            // Output projection + residual.
+            let wo = self.weights.layer(l, "wo").to_vec();
+            let mut proj = vec![0.0f32; s * d];
+            matmul(&attn, &wo, s, hd, d, &mut proj);
+            for i in 0..s * d {
+                x[i] += proj[i];
+            }
+
+            // MLP block.
+            xin.copy_from_slice(&x);
+            for t in 0..s {
+                rmsnorm(&mut xin[t * d..(t + 1) * d], self.weights.layer(l, "mlp_norm"), cfg.rms_eps);
+            }
+            let wg = self.weights.layer(l, "w_gate").to_vec();
+            let wu = self.weights.layer(l, "w_up").to_vec();
+            let wd = self.weights.layer(l, "w_down").to_vec();
+            let mut gate = vec![0.0f32; s * f];
+            let mut up = vec![0.0f32; s * f];
+            matmul(&xin, &wg, s, d, f, &mut gate);
+            matmul(&xin, &wu, s, d, f, &mut up);
+            for i in 0..s * f {
+                gate[i] = silu(gate[i]) * up[i];
+            }
+            let mut down = vec![0.0f32; s * d];
+            matmul(&gate, &wd, s, f, d, &mut down);
+            for i in 0..s * d {
+                x[i] += down[i];
+            }
+
+            // Capture K/V + observation queries for this layer.
+            let w = OBS_WINDOW.min(s);
+            kv_out.push(LayerKv {
+                keys: k.clone(),
+                values: v.clone(),
+                obs_queries: q[(s - w) * hd..].to_vec(),
+            });
+        }
+
+        // Final norm + tied head.
+        for t in 0..s {
+            rmsnorm(&mut x[t * d..(t + 1) * d], self.weights.get("final_norm"), cfg.rms_eps);
+        }
+        let mut logits = vec![0.0f32; s * cfg.vocab];
+        for t in 0..s {
+            matvec(
+                embed,
+                &x[t * d..(t + 1) * d],
+                cfg.vocab,
+                d,
+                &mut logits[t * cfg.vocab..(t + 1) * cfg.vocab],
+            );
+        }
+        PrefillOutput { logits, kv: kv_out, seq_len: s }
+    }
+
+    /// One generation step against per-layer/per-head compressed caches.
+    /// `caches[l][h]`; the new (k, v) rows are appended to each cache.
+    pub fn decode_step(
+        &mut self,
+        token: u32,
+        pos: usize,
+        caches: &mut [Vec<Box<dyn CompressedKv>>],
+    ) -> Vec<f32> {
+        let cfg = self.cfg.clone();
+        let (d, h, dh, f) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
+        let hd = h * dh;
+        assert_eq!(caches.len(), cfg.n_layers);
+
+        let embed = self.weights.get("embed");
+        let tok = token as usize % cfg.vocab;
+        let mut x = embed[tok * d..(tok + 1) * d].to_vec();
+
+        let mut xin = vec![0.0f32; d];
+        let mut q = vec![0.0f32; hd];
+        let mut k = vec![0.0f32; hd];
+        let mut v = vec![0.0f32; hd];
+        let mut attn = vec![0.0f32; hd];
+        let mut proj = vec![0.0f32; d];
+        let mut gate = vec![0.0f32; f];
+        let mut up = vec![0.0f32; f];
+
+        for l in 0..cfg.n_layers {
+            xin.copy_from_slice(&x);
+            rmsnorm(&mut xin, self.weights.layer(l, "attn_norm"), cfg.rms_eps);
+            matvec_t(self.weights.layer(l, "wq"), &xin, d, hd, &mut q);
+            matvec_t(self.weights.layer(l, "wk"), &xin, d, hd, &mut k);
+            matvec_t(self.weights.layer(l, "wv"), &xin, d, hd, &mut v);
+            self.rope.apply_heads(&mut q, pos);
+            self.rope.apply_heads(&mut k, pos);
+
+            for head in 0..h {
+                let qh = &q[head * dh..(head + 1) * dh];
+                let kh = &k[head * dh..(head + 1) * dh];
+                let vh = &v[head * dh..(head + 1) * dh];
+                let out = &mut attn[head * dh..(head + 1) * dh];
+                attend_cached(&*caches[l][head], qh, kh, vh, &mut self.scratch, out);
+            }
+            // Append the streamed pair (kept full precision, paper §5.3).
+            for head in 0..h {
+                caches[l][head].append(
+                    pos as u32,
+                    &k[head * dh..(head + 1) * dh],
+                    &v[head * dh..(head + 1) * dh],
+                );
+            }
+
+            matvec_t(self.weights.layer(l, "wo"), &attn, hd, d, &mut proj);
+            crate::math::linalg::add_assign(&mut x, &proj);
+
+            xin.copy_from_slice(&x);
+            rmsnorm(&mut xin, self.weights.layer(l, "mlp_norm"), cfg.rms_eps);
+            matvec_t(self.weights.layer(l, "w_gate"), &xin, d, f, &mut gate);
+            matvec_t(self.weights.layer(l, "w_up"), &xin, d, f, &mut up);
+            for i in 0..f {
+                gate[i] = silu(gate[i]) * up[i];
+            }
+            matvec_t(self.weights.layer(l, "w_down"), &gate, f, d, &mut proj);
+            crate::math::linalg::add_assign(&mut x, &proj);
+        }
+
+        rmsnorm(&mut x, self.weights.get("final_norm"), cfg.rms_eps);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        matvec(embed, &x, cfg.vocab, d, &mut logits);
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::compressor::{KvBlock, KvCompressor};
+    use crate::quant::exact::ExactCompressor;
+
+    fn model() -> Transformer {
+        Transformer::synthetic(&ModelConfig::test(), 42)
+    }
+
+    fn build_caches(
+        m: &Transformer,
+        pre: &PrefillOutput,
+    ) -> Vec<Vec<Box<dyn CompressedKv>>> {
+        let cfg = &m.cfg;
+        pre.kv
+            .iter()
+            .map(|layer| {
+                (0..cfg.n_heads)
+                    .map(|h| {
+                        let keys = layer.head_keys(h, cfg.n_heads, cfg.head_dim);
+                        let vals = layer.head_values(h, cfg.n_heads, cfg.head_dim);
+                        let block = KvBlock::new(keys, vals, pre.seq_len, cfg.head_dim);
+                        ExactCompressor.compress(&block, &[])
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefill_shapes() {
+        let mut m = model();
+        let out = m.prefill(&[1, 2, 3, 4, 5]);
+        assert_eq!(out.seq_len, 5);
+        assert_eq!(out.logits.len(), 5 * m.cfg.vocab);
+        assert_eq!(out.kv.len(), m.cfg.n_layers);
+        assert_eq!(out.kv[0].keys.len(), 5 * m.cfg.n_heads * m.cfg.head_dim);
+        assert_eq!(
+            out.kv[0].obs_queries.len(),
+            5 * m.cfg.n_heads * m.cfg.head_dim // min(OBS_WINDOW, s) = 5
+        );
+    }
+
+    #[test]
+    fn prefill_is_causal() {
+        let mut m = model();
+        let a = m.prefill(&[1, 2, 3, 4, 5, 6]);
+        let b = m.prefill(&[1, 2, 3, 4, 9, 9]);
+        let vocab = m.cfg.vocab;
+        for t in 0..4 {
+            for j in 0..vocab {
+                assert!(
+                    (a.logits[t * vocab + j] - b.logits[t * vocab + j]).abs() < 1e-4,
+                    "prefix logits must match at t={t}"
+                );
+            }
+        }
+        let last = 5 * vocab;
+        assert!(
+            (0..vocab).any(|j| (a.logits[last + j] - b.logits[last + j]).abs() > 1e-3),
+            "suffix logits must differ"
+        );
+    }
+
+    #[test]
+    fn decode_with_exact_cache_matches_prefill() {
+        // Teacher-forced decode must reproduce prefill logits (within fp16
+        // cache noise) — the invariant tying the two paths together.
+        let mut m = model();
+        let tokens = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let full = m.prefill(&tokens);
+        let split = 4;
+        let pre = m.prefill(&tokens[..split]);
+        let mut caches = build_caches(&m, &pre);
+        let vocab = m.cfg.vocab;
+        for (i, &t) in tokens[split..].iter().enumerate() {
+            let pos = split + i;
+            let logits = m.decode_step(t, pos, &mut caches);
+            let want = &full.logits[pos * vocab..(pos + 1) * vocab];
+            let rel = crate::util::stats::rel_l2_error(&logits, want);
+            assert!(rel < 2e-2, "step {pos}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn decode_appends_to_caches() {
+        let mut m = model();
+        let pre = m.prefill(&[1, 2, 3]);
+        let mut caches = build_caches(&m, &pre);
+        assert_eq!(caches[0][0].n_tokens(), 3);
+        m.decode_step(7, 3, &mut caches);
+        assert_eq!(caches[0][0].n_tokens(), 4);
+        assert_eq!(*caches[0][0].positions().last().unwrap(), 3);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = model();
+        let mut b = model();
+        let la = a.prefill(&[5, 6, 7]).logits;
+        let lb = b.prefill(&[5, 6, 7]).logits;
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn head_extraction_roundtrip() {
+        let flat: Vec<f32> = (0..24).map(|i| i as f32).collect(); // 2 tokens × 3 heads × 4
+        let h1 = extract_head(&flat, 1, 3, 4);
+        assert_eq!(h1, vec![4.0, 5.0, 6.0, 7.0, 16.0, 17.0, 18.0, 19.0]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Model weights: load/save the flat binary format shared with
+//! `python/compile/model.py` (`save_weights`), or generate synthetic
+//! weights natively (scaled-Gaussian init) when no artifact is present.
+//!
+//! Layout: u32 magic "PQM1", then 6 u32 config fields, then each parameter
+//! flat f32 little-endian in the canonical `params_order`.
+
+use crate::model::config::ModelConfig;
+use crate::util::rng::{Pcg64, Rng};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+pub const WEIGHTS_MAGIC: u32 = 0x5051_4D31; // "PQM1"
+
+/// All parameters, keyed by canonical name.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    params: BTreeMap<String, Vec<f32>>,
+}
+
+impl Weights {
+    /// Synthetic init: W ~ N(0, 1/fan_in), norms = 1 (mirrors python
+    /// `init_params` in distribution, not bit pattern — bit-identical
+    /// interchange goes through the weights file).
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x57_45_49); // "WEI"
+        let mut params = BTreeMap::new();
+        for name in cfg.params_order() {
+            let shape = cfg.param_shape(&name);
+            let count: usize = shape.iter().product();
+            let data = if name.ends_with("_norm") {
+                vec![1.0f32; count]
+            } else {
+                let scale = 1.0 / (shape[0] as f64).sqrt();
+                (0..count).map(|_| (rng.gaussian() * scale) as f32).collect()
+            };
+            params.insert(name, data);
+        }
+        Self { cfg: cfg.clone(), params }
+    }
+
+    pub fn get(&self, name: &str) -> &[f32] {
+        self.params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    /// Layer-scoped accessor: `layer(2, "wq")` → `l2.wq`.
+    pub fn layer(&self, l: usize, leaf: &str) -> &[f32] {
+        self.get(&format!("l{l}.{leaf}"))
+    }
+
+    /// Parameters flattened in canonical order (the AOT graph arg order).
+    pub fn flat_order(&self) -> Vec<(&str, &[f32])> {
+        // params_order is authoritative; BTreeMap iteration is not.
+        self.cfg
+            .params_order()
+            .into_iter()
+            .map(|n| {
+                let slice: &[f32] = self.params.get(&n).unwrap();
+                // Leak-free name borrow: find the stored key.
+                let key = self.params.get_key_value(&n).unwrap().0.as_str();
+                (key, slice)
+            })
+            .collect()
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+        let cfg = &self.cfg;
+        let header: [u32; 7] = [
+            WEIGHTS_MAGIC,
+            cfg.vocab as u32,
+            cfg.d_model as u32,
+            cfg.n_layers as u32,
+            cfg.n_heads as u32,
+            cfg.head_dim as u32,
+            cfg.d_ff as u32,
+        ];
+        for h in header {
+            f.write_all(&h.to_le_bytes())?;
+        }
+        for name in cfg.params_order() {
+            let data = self.params.get(&name).unwrap();
+            // Bulk byte conversion.
+            let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+        let mut head = [0u8; 28];
+        f.read_exact(&mut head)?;
+        let u = |i: usize| u32::from_le_bytes(head[i * 4..i * 4 + 4].try_into().unwrap());
+        if u(0) != WEIGHTS_MAGIC {
+            bail!("bad weights magic {:#x}", u(0));
+        }
+        let cfg = ModelConfig {
+            vocab: u(1) as usize,
+            d_model: u(2) as usize,
+            n_layers: u(3) as usize,
+            n_heads: u(4) as usize,
+            head_dim: u(5) as usize,
+            d_ff: u(6) as usize,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        };
+        let mut params = BTreeMap::new();
+        let mut buf = Vec::new();
+        for name in cfg.params_order() {
+            let count: usize = cfg.param_shape(&name).iter().product();
+            buf.resize(count * 4, 0);
+            f.read_exact(&mut buf)
+                .with_context(|| format!("reading param {name}"))?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            params.insert(name, data);
+        }
+        Ok(Self { cfg, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_deterministic() {
+        let cfg = ModelConfig::test();
+        let a = Weights::synthetic(&cfg, 7);
+        let b = Weights::synthetic(&cfg, 7);
+        assert_eq!(a.get("l0.wq"), b.get("l0.wq"));
+        let c = Weights::synthetic(&cfg, 8);
+        assert_ne!(a.get("l0.wq"), c.get("l0.wq"));
+    }
+
+    #[test]
+    fn norms_are_ones() {
+        let w = Weights::synthetic(&ModelConfig::test(), 1);
+        assert!(w.get("l0.attn_norm").iter().all(|&x| x == 1.0));
+        assert!(w.get("final_norm").iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn init_scale_is_one_over_sqrt_fan_in() {
+        let cfg = ModelConfig::mini();
+        let w = Weights::synthetic(&cfg, 2);
+        let wq = w.get("l0.wq");
+        let var: f64 =
+            wq.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / wq.len() as f64;
+        let want = 1.0 / cfg.d_model as f64;
+        assert!((var - want).abs() / want < 0.05, "var {var} want {want}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::test();
+        let w = Weights::synthetic(&cfg, 3);
+        let path = std::env::temp_dir().join("pq_weights_test.bin");
+        let path = path.to_str().unwrap();
+        w.save(path).unwrap();
+        let w2 = Weights::load(path).unwrap();
+        assert_eq!(w2.cfg, cfg);
+        for name in cfg.params_order() {
+            assert_eq!(w.get(&name), w2.get(&name), "{name}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let path = std::env::temp_dir().join("pq_weights_bad.bin");
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        assert!(Weights::load(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn flat_order_is_canonical() {
+        let cfg = ModelConfig::test();
+        let w = Weights::synthetic(&cfg, 4);
+        let names: Vec<&str> = w.flat_order().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, cfg.params_order());
+    }
+}

@@ -1,0 +1,465 @@
+//! Angle codebooks (paper Eq. 4 and §4.1).
+//!
+//! A codebook for one recursion level is a sorted list of centroids plus
+//! the induced interval boundaries. Three builders:
+//!
+//! * [`Codebook::lloyd_max_analytic`] — the *offline* codebook: Lloyd-Max
+//!   fixed-point on the **analytic** level density (Lemma 2), initialized
+//!   at distribution quantiles. Matches the paper's precomputed codebook
+//!   shared across prompts/layers/heads.
+//! * [`Codebook::kmeans1d`] — the *online* codebook: 1-D k-means++ on the
+//!   actual prefill angles (paper §4.1, online variant).
+//! * [`Codebook::uniform`] — uniform grid over the support; the optimal
+//!   choice for the uniform level-1 law and the baseline for ablations.
+//!
+//! Level-1 codebooks are *circular*: assignment and expected error use
+//! wrap-around distance on [0, 2π).
+
+use crate::polar::distribution::AngleDistribution;
+use crate::util::rng::Rng;
+#[cfg(test)]
+use std::f64::consts::PI;
+
+/// A 1-D quantizer over an interval (optionally circular).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    /// Sorted centroids, length 2^bits.
+    pub centroids: Vec<f32>,
+    /// Interval boundaries between adjacent centroids (len = centroids-1).
+    pub boundaries: Vec<f32>,
+    /// Support of the quantized variable.
+    pub lo: f32,
+    pub hi: f32,
+    /// Circular topology (level-1 angles on [0, 2π)).
+    pub circular: bool,
+}
+
+impl Codebook {
+    fn from_centroids(mut centroids: Vec<f64>, lo: f64, hi: f64, circular: bool) -> Self {
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let boundaries: Vec<f32> = centroids
+            .windows(2)
+            .map(|w| (0.5 * (w[0] + w[1])) as f32)
+            .collect();
+        Codebook {
+            centroids: centroids.into_iter().map(|c| c as f32).collect(),
+            boundaries,
+            lo: lo as f32,
+            hi: hi as f32,
+            circular,
+        }
+    }
+
+    /// Uniform mid-rise grid with 2^bits cells.
+    pub fn uniform(bits: u8, lo: f64, hi: f64, circular: bool) -> Self {
+        let k = 1usize << bits;
+        let w = (hi - lo) / k as f64;
+        let centroids: Vec<f64> = (0..k).map(|i| lo + (i as f64 + 0.5) * w).collect();
+        Self::from_centroids(centroids, lo, hi, circular)
+    }
+
+    /// Offline codebook: Lloyd-Max on the analytic density of `level`,
+    /// memoized globally — these books are universal constants (that is
+    /// the point of the offline variant: one precomputed table shared by
+    /// every prompt/layer/head), so they are computed once per process.
+    pub fn lloyd_max_analytic(level: usize, bits: u8) -> Self {
+        use std::collections::HashMap;
+        use std::sync::{Mutex, OnceLock};
+        static CACHE: OnceLock<Mutex<HashMap<(usize, u8), Codebook>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(cb) = cache.lock().unwrap().get(&(level, bits)) {
+            return cb.clone();
+        }
+        let cb = Self::lloyd_max_analytic_uncached(level, bits);
+        cache.lock().unwrap().insert((level, bits), cb.clone());
+        cb
+    }
+
+    /// The actual Lloyd-Max fixed point: initialization at quantiles
+    /// (i + ½)/k, then the standard two-step iteration (boundaries =
+    /// midpoints, centroids = conditional means) to convergence.
+    fn lloyd_max_analytic_uncached(level: usize, bits: u8) -> Self {
+        let dist = AngleDistribution::for_level(level);
+        let (lo, hi) = dist.support();
+        let circular = level == 1;
+        if circular {
+            // Uniform law on the circle → uniform grid is exactly optimal.
+            return Self::uniform(bits, lo, hi, true);
+        }
+        let k = 1usize << bits;
+        let mut c: Vec<f64> = (0..k)
+            .map(|i| dist.quantile((i as f64 + 0.5) / k as f64))
+            .collect();
+        let mut b = vec![0.0f64; k - 1];
+        for _iter in 0..60 {
+            for i in 0..k - 1 {
+                b[i] = 0.5 * (c[i] + c[i + 1]);
+            }
+            let mut moved = 0.0f64;
+            for i in 0..k {
+                let a = if i == 0 { lo } else { b[i - 1] };
+                let z = if i == k - 1 { hi } else { b[i] };
+                let mass = dist.mass(a, z);
+                if mass > 1e-14 {
+                    let nc = dist.first_moment(a, z) / mass;
+                    moved += (nc - c[i]).abs();
+                    c[i] = nc;
+                }
+            }
+            if moved < 1e-10 {
+                break;
+            }
+        }
+        Self::from_centroids(c, lo, hi, false)
+    }
+
+    /// Online codebook: 1-D k-means++ seeding + Lloyd iterations on
+    /// empirical angles (paper §4.1). `samples` need not be sorted.
+    pub fn kmeans1d<R: Rng>(
+        samples: &[f32],
+        bits: u8,
+        lo: f64,
+        hi: f64,
+        circular: bool,
+        rng: &mut R,
+    ) -> Self {
+        let k = 1usize << bits;
+        assert!(!samples.is_empty(), "kmeans1d needs samples");
+        let mut xs: Vec<f64> = samples.iter().map(|&x| x as f64).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        // k-means++ seeding.
+        let mut centers: Vec<f64> = Vec::with_capacity(k);
+        centers.push(xs[rng.next_below(xs.len() as u64) as usize]);
+        let dist2 = |x: f64, c: f64| {
+            let d = if circular {
+                let raw = (x - c).abs();
+                raw.min((hi - lo) - raw)
+            } else {
+                (x - c).abs()
+            };
+            d * d
+        };
+        let mut d2: Vec<f64> = xs.iter().map(|&x| dist2(x, centers[0])).collect();
+        while centers.len() < k {
+            match rng.weighted_choice(&d2) {
+                Some(i) => {
+                    let c = xs[i];
+                    centers.push(c);
+                    for (j, &x) in xs.iter().enumerate() {
+                        d2[j] = d2[j].min(dist2(x, c));
+                    }
+                }
+                None => {
+                    // All residual distances zero (fewer distinct samples
+                    // than k): pad with jittered copies inside the support.
+                    let base = centers[centers.len() % centers.len().max(1)];
+                    let eps = (hi - lo) * 1e-6 * centers.len() as f64;
+                    centers.push((base + eps).clamp(lo, hi));
+                }
+            }
+        }
+
+        // Lloyd iterations (exact 1-D assignment via sort order).
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for _ in 0..50 {
+            // Assign: for sorted centers, boundaries are midpoints.
+            let bnd: Vec<f64> = centers.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+            let mut sums = vec![0.0f64; k];
+            let mut counts = vec![0usize; k];
+            for &x in &xs {
+                let idx = match bnd.binary_search_by(|b| b.partial_cmp(&x).unwrap()) {
+                    Ok(i) => i + 1,
+                    Err(i) => i,
+                };
+                sums[idx] += x;
+                counts[idx] += 1;
+            }
+            let mut moved = 0.0;
+            for i in 0..k {
+                if counts[i] > 0 {
+                    let nc = sums[i] / counts[i] as f64;
+                    moved += (nc - centers[i]).abs();
+                    centers[i] = nc;
+                }
+            }
+            centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if moved < 1e-9 {
+                break;
+            }
+        }
+        Self::from_centroids(centers, lo, hi, circular)
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Quantize one angle → codeword index.
+    #[inline]
+    pub fn quantize(&self, theta: f32) -> u16 {
+        if self.circular {
+            // Nearest centroid under wrap-around distance.
+            let span = self.hi - self.lo;
+            let mut best = 0u16;
+            let mut best_d = f32::INFINITY;
+            for (i, &c) in self.centroids.iter().enumerate() {
+                let raw = (theta - c).abs();
+                let d = raw.min(span - raw);
+                if d < best_d {
+                    best_d = d;
+                    best = i as u16;
+                }
+            }
+            best
+        } else {
+            // Binary search over boundaries.
+            let mut lo = 0usize;
+            let mut hi = self.boundaries.len();
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if theta > self.boundaries[mid] {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo as u16
+        }
+    }
+
+    /// Dequantize an index → centroid angle.
+    #[inline]
+    pub fn dequantize(&self, idx: u16) -> f32 {
+        self.centroids[idx as usize]
+    }
+
+    /// Expected squared quantization error under `dist` (Eq. 4 objective).
+    pub fn expected_sq_error(&self, dist: &AngleDistribution) -> f64 {
+        let (lo, hi) = dist.support();
+        let k = self.k();
+        let mut total = 0.0;
+        for i in 0..k {
+            let a = if i == 0 { lo } else { self.boundaries[i - 1] as f64 };
+            let b = if i == k - 1 { hi } else { self.boundaries[i] as f64 };
+            let c = self.centroids[i] as f64;
+            total += crate::math::special::integrate(
+                &|t| (t - c).powi(2) * dist.pdf(t),
+                a,
+                b,
+                1e-11,
+            );
+        }
+        total
+    }
+
+    /// Empirical MSE of quantizing `samples` with this codebook.
+    pub fn empirical_mse(&self, samples: &[f32]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let span = (self.hi - self.lo) as f64;
+        samples
+            .iter()
+            .map(|&x| {
+                let q = self.dequantize(self.quantize(x)) as f64;
+                let mut d = (x as f64 - q).abs();
+                if self.circular {
+                    d = d.min(span - d);
+                }
+                d * d
+            })
+            .sum::<f64>()
+            / samples.len() as f64
+    }
+
+    /// Serialize to a flat f32 list (for manifest/artifact interchange).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.centroids.clone()
+    }
+}
+
+/// The per-level codebook set used by a quantizer instance.
+#[derive(Clone, Debug)]
+pub struct CodebookSet {
+    pub books: Vec<Codebook>,
+}
+
+impl CodebookSet {
+    /// Offline analytic set for `levels` levels with per-level bit widths.
+    pub fn analytic(level_bits: &[u8]) -> Self {
+        let books = level_bits
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| Codebook::lloyd_max_analytic(i + 1, b))
+            .collect();
+        Self { books }
+    }
+
+    /// Online set fitted to per-level empirical angles.
+    pub fn online<R: Rng>(level_angles: &[Vec<f32>], level_bits: &[u8], rng: &mut R) -> Self {
+        assert_eq!(level_angles.len(), level_bits.len());
+        let books = level_angles
+            .iter()
+            .zip(level_bits)
+            .enumerate()
+            .map(|(i, (samples, &b))| {
+                let dist = AngleDistribution::for_level(i + 1);
+                let (lo, hi) = dist.support();
+                if samples.is_empty() {
+                    Codebook::lloyd_max_analytic(i + 1, b)
+                } else {
+                    Codebook::kmeans1d(samples, b, lo, hi, i == 0, rng)
+                }
+            })
+            .collect();
+        Self { books }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.books.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn uniform_codebook_centers() {
+        let cb = Codebook::uniform(2, 0.0, 4.0, false);
+        assert_eq!(cb.centroids, vec![0.5, 1.5, 2.5, 3.5]);
+        assert_eq!(cb.boundaries, vec![1.0, 2.0, 3.0]);
+        assert_eq!(cb.quantize(0.9), 0);
+        assert_eq!(cb.quantize(1.1), 1);
+        assert_eq!(cb.quantize(100.0), 3);
+    }
+
+    #[test]
+    fn circular_quantize_wraps() {
+        let cb = Codebook::uniform(2, 0.0, 2.0 * PI, true);
+        // 2π−ε is closer (circularly) to centroid at π/4 than to 7π/4? No:
+        // centroids are at π/4, 3π/4, 5π/4, 7π/4. 2π−0.01 wraps to −0.01,
+        // nearest is π/4 (d≈0.79+0.01... wait: distance to 7π/4 is 0.25π+0.01? )
+        // Just assert: angle just below 2π maps to the last centroid, and
+        // angle just above 0 maps to the first — and an angle at exactly 0
+        // is equidistant-ish but must be a valid index.
+        let near_two_pi = (2.0 * PI - 0.01) as f32;
+        assert_eq!(cb.quantize(near_two_pi), 3);
+        assert_eq!(cb.quantize(0.01), 0);
+        assert!(cb.quantize(0.0) < 4);
+    }
+
+    #[test]
+    fn lloyd_max_beats_uniform_on_sin_power() {
+        // On the concentrated level-4 law, the analytic Lloyd-Max codebook
+        // must have strictly lower expected error than the uniform grid.
+        for bits in [2u8, 3] {
+            let dist = AngleDistribution::for_level(4);
+            let lm = Codebook::lloyd_max_analytic(4, bits);
+            let (lo, hi) = dist.support();
+            let un = Codebook::uniform(bits, lo, hi, false);
+            let e_lm = lm.expected_sq_error(&dist);
+            let e_un = un.expected_sq_error(&dist);
+            assert!(
+                e_lm < e_un * 0.9,
+                "bits={bits}: lloyd {e_lm} vs uniform {e_un}"
+            );
+        }
+    }
+
+    #[test]
+    fn lloyd_max_centroids_sorted_and_in_support() {
+        for level in 2..=5 {
+            let cb = Codebook::lloyd_max_analytic(level, 2);
+            let (lo, hi) = AngleDistribution::for_level(level).support();
+            for w in cb.centroids.windows(2) {
+                assert!(w[0] < w[1], "sorted");
+            }
+            for &c in &cb.centroids {
+                assert!((lo as f32..=hi as f32).contains(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn lloyd_max_symmetric_around_pi_over_4() {
+        let cb = Codebook::lloyd_max_analytic(3, 2);
+        let q = (PI / 4.0) as f32;
+        let k = cb.k();
+        for i in 0..k / 2 {
+            let a = q - cb.centroids[i];
+            let b = cb.centroids[k - 1 - i] - q;
+            assert!((a - b).abs() < 1e-4, "symmetry: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn kmeans_recovers_clusters() {
+        // Samples at 4 tight clusters → centroids ≈ cluster centers.
+        let mut rng = Pcg64::new(77);
+        let mut samples = Vec::new();
+        let truth = [0.2f32, 0.6, 1.0, 1.4];
+        for &c in &truth {
+            for _ in 0..200 {
+                samples.push(c + 0.005 * (rng.gaussian() as f32));
+            }
+        }
+        let cb = Codebook::kmeans1d(&samples, 2, 0.0, PI / 2.0, false, &mut rng);
+        for (&c, &t) in cb.centroids.iter().zip(&truth) {
+            assert!((c - t).abs() < 0.02, "{c} vs {t}");
+        }
+    }
+
+    #[test]
+    fn kmeans_on_analytic_samples_approaches_lloyd_max() {
+        let dist = AngleDistribution::for_level(3);
+        let mut rng = Pcg64::new(99);
+        let samples: Vec<f32> = (0..4000).map(|_| dist.sample(&mut rng) as f32).collect();
+        let km = Codebook::kmeans1d(&samples, 2, 0.0, PI / 2.0, false, &mut rng);
+        let lm = Codebook::lloyd_max_analytic(3, 2);
+        let e_km = km.expected_sq_error(&dist);
+        let e_lm = lm.expected_sq_error(&dist);
+        assert!(e_km < e_lm * 1.15, "km {e_km} vs lm {e_lm}");
+    }
+
+    #[test]
+    fn kmeans_handles_fewer_distinct_samples_than_k() {
+        let mut rng = Pcg64::new(5);
+        let samples = vec![0.5f32; 10];
+        let cb = Codebook::kmeans1d(&samples, 3, 0.0, 2.0, false, &mut rng);
+        assert_eq!(cb.k(), 8);
+        // Quantizing the sample value must be lossless-ish.
+        let q = cb.dequantize(cb.quantize(0.5));
+        assert!((q - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bounded_by_cell() {
+        let cb = Codebook::lloyd_max_analytic(2, 3);
+        let dist = AngleDistribution::for_level(2);
+        let mut rng = Pcg64::new(31);
+        for _ in 0..2000 {
+            let t = dist.sample(&mut rng) as f32;
+            let q = cb.dequantize(cb.quantize(t));
+            // Error can never exceed the largest half-cell width.
+            let max_cell = cb
+                .centroids
+                .windows(2)
+                .map(|w| w[1] - w[0])
+                .fold(0.0f32, f32::max);
+            assert!((t - q).abs() <= max_cell.max((cb.hi - cb.lo) / cb.k() as f32));
+        }
+    }
+
+    #[test]
+    fn codebook_set_shapes() {
+        let set = CodebookSet::analytic(&[4, 2, 2, 2]);
+        assert_eq!(set.levels(), 4);
+        assert_eq!(set.books[0].k(), 16);
+        assert!(set.books[0].circular);
+        assert_eq!(set.books[1].k(), 4);
+        assert!(!set.books[3].circular);
+    }
+}

@@ -1,0 +1,238 @@
+//! Analytic angle distributions after random preconditioning (Lemma 1/2).
+//!
+//! At level 1 the angle is uniform on [0, 2π). At level ℓ ≥ 2 the two
+//! paired radii are norms of independent m-dimensional Gaussians with
+//! m = 2^{ℓ-1}, so the angle θ = atan(r₂/r₁) has density
+//!
+//!   f_m(θ) = Γ(m) / (2^{m−2} Γ(m/2)²) · sin^{m−1}(2θ),   θ ∈ [0, π/2],
+//!
+//! with E[θ] = π/4 and Var(θ) = O(1/m). This module evaluates the pdf /
+//! cdf / inverse-cdf (cached grid + bisection), samples from it, and
+//! computes moments — everything the analytic (offline) codebook builder
+//! needs.
+
+use crate::math::special::{bisect, integrate, lgamma};
+use crate::util::rng::Rng;
+use std::f64::consts::PI;
+
+/// Angle law for one recursion level.
+#[derive(Clone, Debug)]
+pub enum AngleDistribution {
+    /// Level 1: uniform on [0, 2π).
+    UniformCircle,
+    /// Level ℓ ≥ 2: the sin-power law with m = 2^{ℓ-1}.
+    SinPower {
+        /// Effective Gaussian dimension m = 2^{ℓ-1}.
+        m: u32,
+        /// log of the normalizing constant Γ(m)/(2^{m−2}Γ(m/2)²).
+        log_c: f64,
+    },
+}
+
+impl AngleDistribution {
+    /// Distribution of level-`level` angles (1-based) per Lemma 2.
+    pub fn for_level(level: usize) -> Self {
+        assert!(level >= 1);
+        if level == 1 {
+            AngleDistribution::UniformCircle
+        } else {
+            let m = 1u32 << (level - 1);
+            let mf = m as f64;
+            let log_c = lgamma(mf) - (mf - 2.0) * 2f64.ln() - 2.0 * lgamma(mf / 2.0);
+            AngleDistribution::SinPower { m, log_c }
+        }
+    }
+
+    /// Support of the density.
+    pub fn support(&self) -> (f64, f64) {
+        match self {
+            AngleDistribution::UniformCircle => (0.0, 2.0 * PI),
+            AngleDistribution::SinPower { .. } => (0.0, PI / 2.0),
+        }
+    }
+
+    pub fn pdf(&self, theta: f64) -> f64 {
+        let (lo, hi) = self.support();
+        if theta < lo || theta > hi {
+            return 0.0;
+        }
+        match self {
+            AngleDistribution::UniformCircle => 1.0 / (2.0 * PI),
+            AngleDistribution::SinPower { m, log_c } => {
+                let s = (2.0 * theta).sin();
+                if s <= 0.0 {
+                    return 0.0;
+                }
+                (log_c + (*m as f64 - 1.0) * s.ln()).exp()
+            }
+        }
+    }
+
+    /// CDF by adaptive Simpson (exact for the uniform case).
+    pub fn cdf(&self, theta: f64) -> f64 {
+        let (lo, hi) = self.support();
+        let t = theta.clamp(lo, hi);
+        match self {
+            AngleDistribution::UniformCircle => (t - lo) / (hi - lo),
+            AngleDistribution::SinPower { .. } => {
+                // Exploit symmetry around π/4 for stability.
+                let quarter = PI / 4.0;
+                if t <= quarter {
+                    integrate(&|x| self.pdf(x), lo, t, 1e-11)
+                } else {
+                    1.0 - integrate(&|x| self.pdf(x), t, hi, 1e-11)
+                }
+            }
+        }
+    }
+
+    /// Inverse CDF via bisection (CDF is strictly increasing on support).
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&p));
+        let (lo, hi) = self.support();
+        match self {
+            AngleDistribution::UniformCircle => lo + p * (hi - lo),
+            AngleDistribution::SinPower { .. } => bisect(&|t| self.cdf(t), p, lo, hi, 1e-12),
+        }
+    }
+
+    /// Mean: π (circle) or π/4 (sin-power, by symmetry — Lemma 1).
+    pub fn mean(&self) -> f64 {
+        match self {
+            AngleDistribution::UniformCircle => PI,
+            AngleDistribution::SinPower { .. } => PI / 4.0,
+        }
+    }
+
+    /// Variance, numerically.
+    pub fn variance(&self) -> f64 {
+        let (lo, hi) = self.support();
+        let mu = self.mean();
+        integrate(&|t| (t - mu).powi(2) * self.pdf(t), lo, hi, 1e-11)
+    }
+
+    /// Sample by inverse-CDF (used for synthetic codebook fitting tests).
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        self.quantile(rng.next_f64())
+    }
+
+    /// ∫ t·pdf(t) dt over [a, b] — the Lloyd-Max centroid numerator.
+    pub fn first_moment(&self, a: f64, b: f64) -> f64 {
+        integrate(&|t| t * self.pdf(t), a, b, 1e-11)
+    }
+
+    /// ∫ pdf(t) dt over [a, b] — interval mass.
+    pub fn mass(&self, a: f64, b: f64) -> f64 {
+        integrate(&|t| self.pdf(t), a, b, 1e-11)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn pdf_normalizes_all_levels() {
+        for level in 1..=6 {
+            let d = AngleDistribution::for_level(level);
+            let (lo, hi) = d.support();
+            let total = integrate(&|t| d.pdf(t), lo, hi, 1e-11);
+            assert!((total - 1.0).abs() < 1e-7, "level {level}: {total}");
+        }
+    }
+
+    #[test]
+    fn level2_is_sin2theta() {
+        // m = 2 → f(θ) = sin(2θ) exactly.
+        let d = AngleDistribution::for_level(2);
+        for &t in &[0.1, 0.5, 1.0, 1.4] {
+            assert!((d.pdf(t) - (2.0 * t).sin()).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let d = AngleDistribution::for_level(4);
+        let mut last = -1.0;
+        for i in 0..=40 {
+            let t = PI / 2.0 * i as f64 / 40.0;
+            let c = d.cdf(t);
+            assert!((0.0..=1.0 + 1e-9).contains(&c));
+            assert!(c >= last - 1e-9, "cdf must be monotone");
+            last = c;
+        }
+        assert!(d.cdf(0.0).abs() < 1e-9);
+        assert!((d.cdf(PI / 2.0) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for level in [2usize, 3, 5] {
+            let d = AngleDistribution::for_level(level);
+            for &p in &[0.01, 0.25, 0.5, 0.75, 0.99] {
+                let t = d.quantile(p);
+                assert!((d.cdf(t) - p).abs() < 1e-8, "level {level} p {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn median_is_pi_over_4() {
+        for level in 2..=6 {
+            let d = AngleDistribution::for_level(level);
+            assert!((d.quantile(0.5) - PI / 4.0).abs() < 1e-8, "level {level}");
+        }
+    }
+
+    #[test]
+    fn variance_shrinks_like_one_over_m() {
+        // Lemma 1: Var = O(1/m). Check Var(level ℓ+1) < Var(level ℓ) and the
+        // product m·Var stays bounded.
+        let mut prev = f64::INFINITY;
+        for level in 2..=7 {
+            let d = AngleDistribution::for_level(level);
+            let v = d.variance();
+            let m = (1u32 << (level - 1)) as f64;
+            assert!(v < prev, "variance must shrink with level");
+            assert!(m * v < 2.0, "m·Var should stay O(1): level {level} gives {}", m * v);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn samples_match_moments() {
+        let d = AngleDistribution::for_level(3);
+        let mut rng = Pcg64::new(21);
+        let n = 20_000;
+        let mut s = 0.0;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let x = d.sample(&mut rng);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - d.mean()).abs() < 0.01, "mean {mean}");
+        assert!((var - d.variance()).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn uniform_circle_basics() {
+        let d = AngleDistribution::for_level(1);
+        assert!((d.pdf(1.0) - 1.0 / (2.0 * PI)).abs() < 1e-12);
+        assert!((d.cdf(PI) - 0.5).abs() < 1e-12);
+        assert!((d.quantile(0.25) - PI / 2.0).abs() < 1e-12);
+        assert!((d.variance() - (2.0 * PI).powi(2) / 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn interval_mass_and_moment_consistency() {
+        let d = AngleDistribution::for_level(4);
+        let mass_total = d.mass(0.0, PI / 2.0);
+        assert!((mass_total - 1.0).abs() < 1e-7);
+        let mu = d.first_moment(0.0, PI / 2.0);
+        assert!((mu - PI / 4.0).abs() < 1e-7);
+    }
+}

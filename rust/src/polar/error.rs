@@ -1,0 +1,172 @@
+//! Theorem-1 empirics: measured reconstruction error vs. bit budget.
+//!
+//! Theorem 1 states that for x ~ N(0, I_d) the scheme achieves
+//! E‖x − x′‖² = ε‖x‖² with O(log 1/ε) bits per coordinate. This module
+//! produces the (bits/coord, ε) curves that `bench_theorem1_error`
+//! prints, plus per-level error decompositions used in ablations.
+
+use crate::math::rotation::PreconditionKind;
+use crate::polar::quantizer::{PolarConfig, PolarQuantizer};
+use crate::util::rng::{Pcg64, Rng};
+
+/// One point on the rate-distortion curve.
+#[derive(Clone, Debug)]
+pub struct RatePoint {
+    pub bits_per_coord: f64,
+    /// ε = E‖x−x′‖² / E‖x‖² over the sample.
+    pub epsilon: f64,
+    pub level_bits: Vec<u8>,
+    pub levels: usize,
+}
+
+/// Measure ε for a given config over `n` Gaussian vectors.
+pub fn measure_epsilon(cfg: &PolarConfig, n: usize, seed: u64) -> f64 {
+    let pq = PolarQuantizer::new_offline(cfg.clone());
+    let d = cfg.dim;
+    let mut rng = Pcg64::new(seed);
+    let mut x = vec![0.0f32; d];
+    let mut y = vec![0.0f32; d];
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for _ in 0..n {
+        rng.fill_gaussian(&mut x);
+        let c = pq.encode(&x);
+        pq.decode(&c, &mut y);
+        for (a, b) in x.iter().zip(&y) {
+            num += ((a - b) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+    }
+    num / den
+}
+
+/// Sweep uniform-per-level bit budgets b ∈ bits_list at fixed levels,
+/// producing the ε(bits) curve of Theorem 1.
+pub fn rate_distortion_curve(
+    dim: usize,
+    levels: usize,
+    bits_list: &[u8],
+    n: usize,
+    seed: u64,
+) -> Vec<RatePoint> {
+    bits_list
+        .iter()
+        .map(|&b| {
+            // Level 1 gets +2 bits, matching the paper's 4× wider range.
+            let mut level_bits = vec![b; levels];
+            level_bits[0] = (b + 2).min(12);
+            let cfg = PolarConfig {
+                dim,
+                levels,
+                level_bits: level_bits.clone(),
+                precondition: PreconditionKind::Haar,
+                seed: seed ^ 0xA5,
+            };
+            let epsilon = measure_epsilon(&cfg, n, seed);
+            RatePoint {
+                bits_per_coord: cfg.bits_per_coordinate(),
+                epsilon,
+                level_bits,
+                levels,
+            }
+        })
+        .collect()
+}
+
+/// Per-level contribution to the total squared error: quantize only level
+/// `l` (others kept exact) and measure ε. Used to validate the error
+/// recursion in Appendix C (higher levels contribute geometrically less).
+pub fn per_level_epsilon(dim: usize, levels: usize, bits: u8, n: usize, seed: u64) -> Vec<f64> {
+    use crate::polar::transform::{polar_forward, polar_inverse};
+    let mut rng = Pcg64::new(seed);
+    let mut out = Vec::with_capacity(levels);
+    for target in 0..levels {
+        let cfg = PolarConfig {
+            dim,
+            levels,
+            level_bits: (0..levels)
+                .map(|l| if l == target { bits } else { 12 })
+                .collect(),
+            precondition: PreconditionKind::None,
+            seed: 1,
+        };
+        let pq = PolarQuantizer::new_offline(cfg);
+        let mut x = vec![0.0f32; dim];
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for _ in 0..n {
+            rng.fill_gaussian(&mut x);
+            // Quantize only `target`'s angles through the codec codebooks;
+            // reuse the real encode/decode (other levels get 12-bit books —
+            // effectively lossless next to level `target`).
+            let c = pq.encode(&x);
+            let mut y = vec![0.0f32; dim];
+            pq.decode(&c, &mut y);
+            // Remove the fp16-radius floor by comparing against the
+            // all-12-bit reconstruction instead of x itself.
+            let rep = polar_forward(&x, levels);
+            let mut base = vec![0.0f32; dim];
+            polar_inverse(&rep, &mut base);
+            for i in 0..dim {
+                num += ((y[i] - base[i]) as f64).powi(2);
+                den += (base[i] as f64).powi(2);
+            }
+        }
+        out.push(num / den.max(1e-12));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_decreases_with_bits() {
+        let pts = rate_distortion_curve(32, 4, &[1, 2, 3, 4], 60, 42);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].epsilon < w[0].epsilon,
+                "more bits must shrink ε: {:?} -> {:?}",
+                w[0].epsilon,
+                w[1].epsilon
+            );
+        }
+        // At 4(+2) bits/level ε should be small.
+        assert!(pts.last().unwrap().epsilon < 0.02);
+    }
+
+    #[test]
+    fn epsilon_scales_log_inverse() {
+        // Theorem 1: bits/coord = O(log 1/ε) ⇒ ε should drop by a roughly
+        // constant *factor* per extra bit. Check the ratio is bounded away
+        // from 1 (strictly geometric decay).
+        let pts = rate_distortion_curve(32, 4, &[2, 3, 4, 5], 80, 7);
+        for w in pts.windows(2) {
+            let ratio = w[0].epsilon / w[1].epsilon;
+            assert!(ratio > 1.8, "per-bit ε ratio too flat: {ratio}");
+        }
+    }
+
+    #[test]
+    fn deeper_levels_contribute_less() {
+        // Appendix C: quant_i ≲ ε/2^{i-1}; with equal bits the measured
+        // per-level contribution should be non-increasing in level
+        // (level-1 spans 2π so it dominates).
+        let eps = per_level_epsilon(32, 4, 2, 100, 21);
+        assert_eq!(eps.len(), 4);
+        assert!(
+            eps[0] > eps[3],
+            "level-1 error should dominate the deepest level: {eps:?}"
+        );
+    }
+
+    #[test]
+    fn paper_default_epsilon_reasonable() {
+        // With the (4,2,2,2) layout on Gaussian data the paper's regime
+        // gives a small but nonzero ε; sanity-box it.
+        let cfg = PolarConfig::paper_default(64);
+        let eps = measure_epsilon(&cfg, 80, 3);
+        assert!(eps > 1e-4 && eps < 0.1, "ε = {eps}");
+    }
+}

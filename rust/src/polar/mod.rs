@@ -1,0 +1,17 @@
+//! The PolarQuant codec (paper §3–§4).
+//!
+//! Pipeline: random preconditioning (`math::rotation`) → recursive polar
+//! transform ([`transform`]) → per-level angle quantization against
+//! codebooks derived from the analytic post-preconditioning angle law
+//! ([`distribution`], [`codebook`]) → bit packing ([`pack`]).
+//!
+//! [`quantizer::PolarQuantizer`] ties it together and is what the KV cache
+//! stores per page.
+
+pub mod codebook;
+pub mod distribution;
+pub mod error;
+pub mod pack;
+pub mod quantizer;
+pub mod similarity;
+pub mod transform;

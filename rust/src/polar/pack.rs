@@ -1,0 +1,291 @@
+//! Little-endian bitstream packing for quantized angle indices.
+//!
+//! The paper packs indices into `torch.uint8`; we do the same but allow
+//! arbitrary field widths (1–16 bits) so the level-bit allocation
+//! (4,2,2,2) and the ablation sweeps share one code path. Fields are
+//! written LSB-first into a growing `Vec<u8>`.
+
+/// Append-only bit writer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the stream.
+    bits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        Self { buf: Vec::with_capacity(bits.div_ceil(8)), bits: 0 }
+    }
+
+    /// Write the low `width` bits of `value`.
+    pub fn write(&mut self, value: u16, width: u8) {
+        debug_assert!(width >= 1 && width <= 16);
+        debug_assert!(
+            (value as u32) < (1u32 << width),
+            "value {value} does not fit in {width} bits"
+        );
+        let mut v = value as u32;
+        let mut remaining = width as usize;
+        while remaining > 0 {
+            let bit_in_byte = self.bits % 8;
+            if bit_in_byte == 0 {
+                self.buf.push(0);
+            }
+            let byte = self.buf.last_mut().unwrap();
+            let take = remaining.min(8 - bit_in_byte);
+            let mask = ((1u32 << take) - 1) as u8;
+            *byte |= ((v as u8) & mask) << bit_in_byte;
+            v >>= take;
+            self.bits += take;
+            remaining -= take;
+        }
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Sequential bit reader over a byte slice.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Position the cursor at an absolute bit offset.
+    pub fn seek(&mut self, bit: usize) {
+        self.pos = bit;
+    }
+
+    /// Read `width` bits; panics (debug) / wraps zeros (release) past end.
+    pub fn read(&mut self, width: u8) -> u16 {
+        debug_assert!(width >= 1 && width <= 16);
+        let mut out: u32 = 0;
+        let mut got = 0usize;
+        let width = width as usize;
+        while got < width {
+            let byte_idx = self.pos / 8;
+            let bit_in_byte = self.pos % 8;
+            let byte = *self.buf.get(byte_idx).unwrap_or(&0);
+            let take = (width - got).min(8 - bit_in_byte);
+            let mask = ((1u32 << take) - 1) as u32;
+            out |= (((byte >> bit_in_byte) as u32) & mask) << got;
+            self.pos += take;
+            got += take;
+        }
+        out as u16
+    }
+}
+
+/// Bits needed to store `n` values per field of `width` bits, rounded to
+/// whole bytes (the allocation the cache accountant charges).
+pub fn packed_bytes(n_fields: usize, width: u8) -> usize {
+    (n_fields * width as usize).div_ceil(8)
+}
+
+/// Fast field extraction for the byte-aligned widths the paper layout
+/// uses (§Perf): when `offset_bits` is byte-aligned and `width` ∈
+/// {1, 2, 4, 8}, decode `count` fields into `out` with direct byte
+/// arithmetic (no per-field cursor). Returns false (out untouched) when
+/// the fast path does not apply — callers fall back to [`BitReader`].
+#[inline]
+pub fn read_fields_fast(
+    buf: &[u8],
+    offset_bits: usize,
+    width: u8,
+    count: usize,
+    out: &mut [u16],
+) -> bool {
+    if offset_bits % 8 != 0 || !matches!(width, 1 | 2 | 4 | 8) {
+        return false;
+    }
+    let base = offset_bits / 8;
+    let per_byte = 8 / width as usize;
+    if buf.len() * per_byte < base * per_byte + count {
+        return false;
+    }
+    let mask = ((1u16 << width) - 1) as u8;
+    match width {
+        8 => {
+            for i in 0..count {
+                out[i] = buf[base + i] as u16;
+            }
+        }
+        4 => {
+            for i in 0..count / 2 {
+                let b = buf[base + i];
+                out[2 * i] = (b & 0x0F) as u16;
+                out[2 * i + 1] = (b >> 4) as u16;
+            }
+            if count % 2 == 1 {
+                out[count - 1] = (buf[base + count / 2] & 0x0F) as u16;
+            }
+        }
+        2 => {
+            let full = count / 4;
+            for i in 0..full {
+                let b = buf[base + i];
+                out[4 * i] = (b & 0x03) as u16;
+                out[4 * i + 1] = ((b >> 2) & 0x03) as u16;
+                out[4 * i + 2] = ((b >> 4) & 0x03) as u16;
+                out[4 * i + 3] = (b >> 6) as u16;
+            }
+            for r in full * 4..count {
+                let b = buf[base + r / 4];
+                out[r] = ((b >> (2 * (r % 4))) & mask) as u16;
+            }
+        }
+        1 => {
+            for i in 0..count {
+                let b = buf[base + i / 8];
+                out[i] = ((b >> (i % 8)) & 1) as u16;
+            }
+        }
+        _ => unreachable!(),
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    #[test]
+    fn roundtrip_uniform_width() {
+        for width in 1u8..=12 {
+            let mut w = BitWriter::new();
+            let vals: Vec<u16> =
+                (0..100).map(|i| (i * 7 + 3) as u16 & ((1u16 << width) - 1)).collect();
+            for &v in &vals {
+                w.write(v, width);
+            }
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), packed_bytes(100, width));
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                assert_eq!(r.read(width), v, "width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        // The actual PolarQuant layout: 4-bit then runs of 2-bit fields.
+        let mut w = BitWriter::new();
+        let seq: Vec<(u16, u8)> =
+            vec![(9, 4), (3, 2), (0, 2), (2, 2), (1, 2), (15, 4), (1, 1), (511, 10)];
+        for &(v, b) in &seq {
+            w.write(v, b);
+        }
+        let total_bits: usize = seq.iter().map(|&(_, b)| b as usize).sum();
+        assert_eq!(w.len_bits(), total_bits);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, b) in &seq {
+            assert_eq!(r.read(b), v);
+        }
+    }
+
+    #[test]
+    fn random_roundtrip_property() {
+        // Hand-rolled property test: 200 random (width, value) sequences.
+        let mut rng = Pcg64::new(42);
+        for _ in 0..200 {
+            let n = 1 + rng.next_below(64) as usize;
+            let seq: Vec<(u16, u8)> = (0..n)
+                .map(|_| {
+                    let b = 1 + rng.next_below(16) as u8;
+                    let v = (rng.next_u64() & ((1u64 << b) - 1)) as u16;
+                    (v, b)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, b) in &seq {
+                w.write(v, b);
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for &(v, b) in &seq {
+                assert_eq!(r.read(b), v);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_fields_match_bitreader() {
+        let mut rng = Pcg64::new(99);
+        for width in [1u8, 2, 4, 8] {
+            for count in [1usize, 3, 7, 16, 32, 61] {
+                for offset_bytes in [0usize, 2, 5] {
+                    let mut w = BitWriter::new();
+                    for _ in 0..offset_bytes {
+                        w.write(0xAB, 8);
+                    }
+                    let vals: Vec<u16> = (0..count)
+                        .map(|_| (rng.next_u64() & ((1u64 << width) - 1)) as u16)
+                        .collect();
+                    for &v in &vals {
+                        w.write(v, width);
+                    }
+                    let bytes = w.into_bytes();
+                    let mut out = vec![0u16; count];
+                    let ok =
+                        read_fields_fast(&bytes, offset_bytes * 8, width, count, &mut out);
+                    assert!(ok, "width {width} must take the fast path");
+                    assert_eq!(out, vals, "width={width} count={count}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_fields_rejects_unaligned_and_odd_widths() {
+        let buf = [0u8; 8];
+        let mut out = [0u16; 4];
+        assert!(!read_fields_fast(&buf, 3, 2, 4, &mut out), "unaligned offset");
+        assert!(!read_fields_fast(&buf, 0, 3, 4, &mut out), "3-bit fields");
+        assert!(!read_fields_fast(&buf, 0, 8, 100, &mut out), "past end");
+    }
+
+    #[test]
+    fn seek_supports_random_access() {
+        let mut w = BitWriter::new();
+        for i in 0..32u16 {
+            w.write(i & 0x3, 2);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        r.seek(2 * 10);
+        assert_eq!(r.read(2), 10 & 0x3);
+        r.seek(0);
+        assert_eq!(r.read(2), 0);
+    }
+
+    #[test]
+    fn read_past_end_yields_zeros() {
+        let bytes = [0xFFu8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(8), 0xFF);
+        assert_eq!(r.read(8), 0);
+    }
+}

@@ -1,0 +1,636 @@
+//! The end-to-end PolarQuant codec (paper Algorithm 1 + §4.1 layout).
+//!
+//! Encode: precondition (rotation R) → recursive polar transform →
+//! per-level angle quantization → bit-pack. Store the residual radii in
+//! fp16 (b_FPN = 16).
+//!
+//! Decode: unpack codes → centroid angles → inverse polar transform →
+//! apply Rᵀ.
+//!
+//! Hot-path trick (same one the paper's CUDA kernels exploit): for scores
+//! q·K̂ᵀ the rotation need not be undone per cached vector — rotate the
+//! *query* once (q′ = R·q) and dot against the un-rotated reconstruction,
+//! since ⟨Rᵀy, q⟩ = ⟨y, Rq⟩. [`PolarQuantizer::decode_preconditioned`]
+//! exposes that path; `model::attention` builds on it.
+
+use crate::math::rotation::{PreconditionKind, Rotation};
+use crate::polar::codebook::CodebookSet;
+use crate::polar::pack::{BitReader, BitWriter};
+use crate::polar::transform::polar_forward;
+use crate::quant::fp16::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::util::rng::Pcg64;
+
+/// Codec configuration (paper defaults: L=4, bits (4,2,2,2), rotation).
+#[derive(Clone, Debug)]
+pub struct PolarConfig {
+    /// Vector dimension (head_dim); must be divisible by 2^levels.
+    pub dim: usize,
+    /// Recursion depth L (paper §4.1: 4).
+    pub levels: usize,
+    /// Bits per angle at each level, len == levels (paper: [4,2,2,2] —
+    /// level 1 spans [0,2π), four times the width of the others).
+    pub level_bits: Vec<u8>,
+    /// Random preconditioner (paper -R variants: Haar rotation).
+    pub precondition: PreconditionKind,
+    /// Seed for the shared preconditioner (shared across K, V, layers,
+    /// heads — paper §4.1).
+    pub seed: u64,
+}
+
+impl PolarConfig {
+    /// Paper §4.1 defaults for dimension `dim`.
+    pub fn paper_default(dim: usize) -> Self {
+        Self {
+            dim,
+            levels: 4,
+            level_bits: vec![4, 2, 2, 2],
+            precondition: PreconditionKind::Haar,
+            seed: 0x504f4c4152, // "POLAR"
+        }
+    }
+
+    /// Same layout without preconditioning (paper's "PolarQuant" row).
+    pub fn paper_default_no_precondition(dim: usize) -> Self {
+        Self { precondition: PreconditionKind::None, ..Self::paper_default(dim) }
+    }
+
+    pub fn validate(&self) {
+        assert!(self.levels >= 1 && self.levels <= 16);
+        assert_eq!(self.level_bits.len(), self.levels, "bits per level");
+        assert!(
+            self.dim % (1 << self.levels) == 0,
+            "dim {} not divisible by 2^{}",
+            self.dim,
+            self.levels
+        );
+        for &b in &self.level_bits {
+            assert!(b >= 1 && b <= 12, "angle bits in 1..=12");
+        }
+    }
+
+    /// Residual radii per vector.
+    pub fn num_radii(&self) -> usize {
+        self.dim >> self.levels
+    }
+
+    /// Packed angle bits per vector.
+    pub fn angle_bits(&self) -> usize {
+        (0..self.levels)
+            .map(|l| (self.dim >> (l + 1)) * self.level_bits[l] as usize)
+            .sum()
+    }
+
+    /// Total storage bits per vector (radii fp16 + packed angles, angles
+    /// rounded up to whole bytes as allocated).
+    pub fn bits_per_vector(&self) -> usize {
+        self.num_radii() * 16 + self.angle_bits().div_ceil(8) * 8
+    }
+
+    /// Effective bits per coordinate (paper: 3.875 at d=128, L=4, (4,2,2,2)).
+    pub fn bits_per_coordinate(&self) -> f64 {
+        self.bits_per_vector() as f64 / self.dim as f64
+    }
+
+    /// Compression ratio versus fp16 storage.
+    pub fn compression_vs_fp16(&self) -> f64 {
+        16.0 / self.bits_per_coordinate()
+    }
+}
+
+/// One encoded vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedVector {
+    /// fp16 bit patterns of the residual radii.
+    pub radii: Vec<u16>,
+    /// Bit-packed angle codes, levels concatenated low-to-high.
+    pub codes: Vec<u8>,
+}
+
+impl QuantizedVector {
+    pub fn storage_bytes(&self) -> usize {
+        self.radii.len() * 2 + self.codes.len()
+    }
+}
+
+/// The codec: configuration + preconditioner + per-level codebooks.
+///
+/// Decode-side acceleration (§Perf): the only angles a decoder ever sees
+/// are codebook centroids — at most 16 per level — so `trig_luts` holds
+/// their precomputed (cos, sin) pairs and the decode path does table
+/// lookups + multiplies, no trig. `level_offsets` gives each level's bit
+/// offset in the packed stream for direct seeking.
+#[derive(Clone, Debug)]
+pub struct PolarQuantizer {
+    pub cfg: PolarConfig,
+    pub rotation: Rotation,
+    pub codebooks: CodebookSet,
+    trig_luts: Vec<Vec<(f32, f32)>>,
+    level_offsets: Vec<usize>,
+}
+
+/// A query preprocessed for fused scoring against encoded vectors
+/// (rotation applied once; level-1 pair contractions pre-tabulated per
+/// centroid — the per-token cost is then lookups + ~d multiplies).
+pub struct PreparedQuery {
+    /// table[j * k1 + c] = rq[2j]·cos(c₁[c]) + rq[2j+1]·sin(c₁[c]).
+    level1_table: Vec<f32>,
+    k1: usize,
+}
+
+impl PolarQuantizer {
+    fn finish(cfg: PolarConfig, rotation: Rotation, codebooks: CodebookSet) -> Self {
+        let trig_luts = codebooks
+            .books
+            .iter()
+            .map(|b| {
+                b.centroids
+                    .iter()
+                    .map(|&c| {
+                        let (s, co) = c.sin_cos();
+                        (co, s)
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut level_offsets = Vec::with_capacity(cfg.levels);
+        let mut off = 0usize;
+        for l in 0..cfg.levels {
+            level_offsets.push(off);
+            off += (cfg.dim >> (l + 1)) * cfg.level_bits[l] as usize;
+        }
+        Self { cfg, rotation, codebooks, trig_luts, level_offsets }
+    }
+
+    /// Offline variant: analytic Lloyd-Max codebooks (shared, precomputed).
+    pub fn new_offline(cfg: PolarConfig) -> Self {
+        cfg.validate();
+        let rotation = Rotation::new(cfg.precondition, cfg.dim, cfg.seed);
+        let codebooks = CodebookSet::analytic(&cfg.level_bits);
+        Self::finish(cfg, rotation, codebooks)
+    }
+
+    /// Online variant: fit k-means codebooks to the angles of the supplied
+    /// calibration rows (the prefill KV block, paper §4.1 online).
+    pub fn new_online(cfg: PolarConfig, calibration_rows: &[f32]) -> Self {
+        cfg.validate();
+        let d = cfg.dim;
+        assert!(
+            !calibration_rows.is_empty() && calibration_rows.len() % d == 0,
+            "calibration rows must be non-empty multiples of dim"
+        );
+        let rotation = Rotation::new(cfg.precondition, d, cfg.seed);
+        // Gather per-level angles from the preconditioned calibration data.
+        let mut level_angles: Vec<Vec<f32>> = vec![Vec::new(); cfg.levels];
+        let mut pre = vec![0.0f32; d];
+        for row in calibration_rows.chunks(d) {
+            rotation.apply(row, &mut pre);
+            let rep = polar_forward(&pre, cfg.levels);
+            for (l, a) in rep.angles.iter().enumerate() {
+                level_angles[l].extend_from_slice(a);
+            }
+        }
+        let mut rng = Pcg64::new(cfg.seed ^ 0x4f4e4c); // "ONL"
+        let codebooks = CodebookSet::online(&level_angles, &cfg.level_bits, &mut rng);
+        Self::finish(cfg, rotation, codebooks)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    /// Encode one vector.
+    pub fn encode(&self, x: &[f32]) -> QuantizedVector {
+        assert_eq!(x.len(), self.cfg.dim);
+        let mut pre = vec![0.0f32; x.len()];
+        self.rotation.apply(x, &mut pre);
+        let rep = polar_forward(&pre, self.cfg.levels);
+
+        let radii = rep.radii.iter().map(|&r| f32_to_f16_bits(r)).collect();
+        let mut w = BitWriter::with_capacity_bits(self.cfg.angle_bits());
+        for (l, angles) in rep.angles.iter().enumerate() {
+            let book = &self.codebooks.books[l];
+            let bits = self.cfg.level_bits[l];
+            for &a in angles {
+                w.write(book.quantize(a), bits);
+            }
+        }
+        QuantizedVector { radii, codes: w.into_bytes() }
+    }
+
+    /// Decode into the *preconditioned* basis (no Rᵀ). Hot path for fused
+    /// attention: dot this against R·q.
+    ///
+    /// Allocation- and trig-free (§Perf): radii land in `out[0..nr]`, then
+    /// each level expands in place back-to-front using the centroid
+    /// (cos, sin) LUTs — `out[2j] = r·cos`, `out[2j+1] = r·sin` is safe
+    /// descending because 2j ≥ j.
+    pub fn decode_preconditioned(&self, q: &QuantizedVector, out: &mut [f32]) {
+        let cfg = &self.cfg;
+        debug_assert_eq!(out.len(), cfg.dim);
+        let nr = cfg.num_radii();
+        for j in 0..nr {
+            out[j] = f16_bits_to_f32(q.radii[j]);
+        }
+        let mut scratch = [0u16; 256];
+        let mut m = nr;
+        for l in (0..cfg.levels).rev() {
+            // Current values occupy out[0..m]; this level has m codes.
+            debug_assert_eq!(m, cfg.dim >> (l + 1));
+            debug_assert!(m <= scratch.len());
+            let bits = cfg.level_bits[l];
+            let lut = &self.trig_luts[l];
+            self.read_level_codes(&q.codes, l, bits, m, &mut scratch);
+            for j in (0..m).rev() {
+                let r = out[j];
+                let (co, si) = lut[scratch[j] as usize];
+                out[2 * j] = r * co;
+                out[2 * j + 1] = r * si;
+            }
+            m *= 2;
+        }
+    }
+
+    /// Extract one level's codes: byte-aligned fast path, BitReader
+    /// fallback for exotic layouts (§Perf).
+    #[inline]
+    fn read_level_codes(&self, codes: &[u8], l: usize, bits: u8, count: usize, out: &mut [u16]) {
+        if !crate::polar::pack::read_fields_fast(
+            codes,
+            self.level_offsets[l],
+            bits,
+            count,
+            out,
+        ) {
+            let mut reader = BitReader::new(codes);
+            reader.seek(self.level_offsets[l]);
+            for c in out[..count].iter_mut() {
+                *c = reader.read(bits);
+            }
+        }
+    }
+
+    /// Fused `acc += w · decode_preconditioned(q)` (§Perf): seeds the
+    /// expansion with w-scaled radii and writes the last level directly
+    /// into the accumulator — one fewer full-width pass than decode+axpy.
+    pub fn decode_scaled_accumulate(&self, q: &QuantizedVector, w: f32, acc: &mut [f32]) {
+        let cfg = &self.cfg;
+        debug_assert_eq!(acc.len(), cfg.dim);
+        let nr = cfg.num_radii();
+        let mut tmp = [0.0f32; 128];
+        debug_assert!(cfg.dim / 2 <= tmp.len());
+        for j in 0..nr {
+            tmp[j] = w * f16_bits_to_f32(q.radii[j]);
+        }
+        let mut scratch = [0u16; 256];
+        let mut m = nr;
+        for l in (1..cfg.levels).rev() {
+            let bits = cfg.level_bits[l];
+            let lut = &self.trig_luts[l];
+            self.read_level_codes(&q.codes, l, bits, m, &mut scratch);
+            for j in (0..m).rev() {
+                let r = tmp[j];
+                let (co, si) = lut[scratch[j] as usize];
+                tmp[2 * j] = r * co;
+                tmp[2 * j + 1] = r * si;
+            }
+            m *= 2;
+        }
+        // Last level expands straight into the accumulator.
+        let bits = cfg.level_bits[0];
+        let lut = &self.trig_luts[0];
+        self.read_level_codes(&q.codes, 0, bits, m, &mut scratch);
+        for j in 0..m {
+            let (co, si) = lut[scratch[j] as usize];
+            let r = tmp[j];
+            acc[2 * j] += r * co;
+            acc[2 * j + 1] += r * si;
+        }
+    }
+
+    /// Preprocess a query for [`Self::score`]: rotate once and tabulate
+    /// the level-1 pair contractions per centroid (d/2 × k₁ fmas, done
+    /// once per attention step instead of once per cached token).
+    pub fn prepare_query(&self, q: &[f32]) -> PreparedQuery {
+        let d = self.cfg.dim;
+        assert_eq!(q.len(), d);
+        let mut rq = vec![0.0f32; d];
+        self.rotation.apply(q, &mut rq);
+        let lut1 = &self.trig_luts[0];
+        let k1 = lut1.len();
+        let pairs = d / 2;
+        let mut table = vec![0.0f32; pairs * k1];
+        for j in 0..pairs {
+            let (a, b) = (rq[2 * j], rq[2 * j + 1]);
+            let row = &mut table[j * k1..(j + 1) * k1];
+            for (c, &(co, si)) in lut1.iter().enumerate() {
+                row[c] = a * co + b * si;
+            }
+        }
+        PreparedQuery { level1_table: table, k1 }
+    }
+
+    /// Fused score ⟨decode_preconditioned(code), R·q⟩ without materializing
+    /// the reconstruction: contract the expansion tree against the query
+    /// bottom-up (level-1 via the prepared table, deeper levels via the
+    /// trig LUTs), finishing with a dot against the fp16 radii.
+    pub fn score(&self, prepared: &PreparedQuery, code: &QuantizedVector, scratch: &mut Vec<f32>) -> f32 {
+        let cfg = &self.cfg;
+        let d = cfg.dim;
+        let mut m = d / 2;
+        scratch.clear();
+        scratch.resize(m, 0.0);
+
+        let mut codes_buf = [0u16; 256];
+        // Level 1: pure lookups.
+        {
+            let bits = cfg.level_bits[0];
+            let k1 = prepared.k1;
+            self.read_level_codes(&code.codes, 0, bits, m, &mut codes_buf);
+            for j in 0..m {
+                scratch[j] = prepared.level1_table[j * k1 + codes_buf[j] as usize];
+            }
+        }
+        // Levels 2..L: contract pairs with centroid trig.
+        for l in 1..cfg.levels {
+            m /= 2;
+            let bits = cfg.level_bits[l];
+            let lut = &self.trig_luts[l];
+            self.read_level_codes(&code.codes, l, bits, m, &mut codes_buf);
+            for j in 0..m {
+                let (co, si) = lut[codes_buf[j] as usize];
+                scratch[j] = scratch[2 * j] * co + scratch[2 * j + 1] * si;
+            }
+        }
+        // Final: dot with radii.
+        let mut s = 0.0f32;
+        for (j, &h) in code.radii.iter().enumerate() {
+            s += f16_bits_to_f32(h) * scratch[j];
+        }
+        s
+    }
+
+    /// Full decode (applies Rᵀ) — Algorithm 1 `DeQuant`.
+    pub fn decode(&self, q: &QuantizedVector, out: &mut [f32]) {
+        let d = self.cfg.dim;
+        assert_eq!(out.len(), d);
+        let mut pre = vec![0.0f32; d];
+        self.decode_preconditioned(q, &mut pre);
+        self.rotation.apply_t(&pre, out);
+    }
+
+    /// Rotate a query into the preconditioned basis (once per attention
+    /// call; pairs with [`Self::decode_preconditioned`]).
+    pub fn precondition_query(&self, q: &[f32], out: &mut [f32]) {
+        self.rotation.apply(q, out);
+    }
+
+    /// Encode a row-major batch.
+    pub fn encode_batch(&self, rows: &[f32]) -> Vec<QuantizedVector> {
+        assert_eq!(rows.len() % self.cfg.dim, 0);
+        rows.chunks(self.cfg.dim).map(|r| self.encode(r)).collect()
+    }
+
+    /// Mean relative L2 reconstruction error over a batch (diagnostics).
+    pub fn reconstruction_error(&self, rows: &[f32]) -> f64 {
+        let d = self.cfg.dim;
+        let mut out = vec![0.0f32; d];
+        let mut total = 0.0;
+        let mut n = 0;
+        for row in rows.chunks(d) {
+            let q = self.encode(row);
+            self.decode(&q, &mut out);
+            total += crate::util::stats::rel_l2_error(&out, row);
+            n += 1;
+        }
+        total / n.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::{dot, norm2};
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn gaussian_rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut v);
+        v
+    }
+
+    #[test]
+    fn paper_bit_accounting_d128() {
+        // §4.1: d=128, L=4, bits (4,2,2,2), radii fp16 → 3.875 bits/coord,
+        // ×4.129 vs fp16 (paper quotes ×4.008 vs an extra-overhead layout
+        // and 62/16 = 3.875 bits per coord for a 16-block).
+        let cfg = PolarConfig::paper_default(128);
+        assert_eq!(cfg.num_radii(), 8);
+        // Per 16-block: 8·4 + 4·2 + 2·2 + 1·2 = 46 angle bits.
+        assert_eq!(cfg.angle_bits(), 8 * 46);
+        assert!((cfg.bits_per_coordinate() - 3.875).abs() < 1e-9);
+        assert!(cfg.compression_vs_fp16() > 4.0);
+    }
+
+    #[test]
+    fn bit_accounting_d64() {
+        let cfg = PolarConfig::paper_default(64);
+        assert_eq!(cfg.num_radii(), 4);
+        assert_eq!(cfg.angle_bits(), 184);
+        assert!((cfg.bits_per_coordinate() - 3.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn encode_decode_small_error_on_gaussian() {
+        // Theorem-1 regime: Gaussian inputs, default layout. The relative
+        // L2 error at ~3.9 bits/coord should be well under 30%.
+        for kind in [PreconditionKind::None, PreconditionKind::Haar, PreconditionKind::Hadamard] {
+            let mut cfg = PolarConfig::paper_default(64);
+            cfg.precondition = kind;
+            let pq = PolarQuantizer::new_offline(cfg);
+            let rows = gaussian_rows(64, 64, 3);
+            let err = pq.reconstruction_error(&rows);
+            assert!(err < 0.30, "{:?}: err {err}", kind);
+        }
+    }
+
+    #[test]
+    fn preconditioning_helps_structured_vectors() {
+        // Pathological input: energy on one coordinate with heavy outliers —
+        // the case Fig. 2 motivates. Rotation should reduce error materially.
+        let d = 64;
+        let mut rng = Pcg64::new(9);
+        let mut rows = vec![0.0f32; 32 * d];
+        for r in 0..32 {
+            for j in 0..d {
+                rows[r * d + j] = 0.05 * rng.gaussian_f32();
+            }
+            rows[r * d + 3] = 8.0 + rng.gaussian_f32(); // outlier channel
+        }
+        let pq_none =
+            PolarQuantizer::new_offline(PolarConfig::paper_default_no_precondition(d));
+        let pq_rot = PolarQuantizer::new_offline(PolarConfig::paper_default(d));
+        let e_none = pq_none.reconstruction_error(&rows);
+        let e_rot = pq_rot.reconstruction_error(&rows);
+        assert!(
+            e_rot < e_none,
+            "rotation should help structured data: {e_rot} vs {e_none}"
+        );
+    }
+
+    #[test]
+    fn online_beats_or_matches_offline_on_shifted_data() {
+        // Data whose angles deviate from the analytic law (no
+        // preconditioning, anisotropic scaling) → online codebooks help.
+        let d = 32;
+        let mut rng = Pcg64::new(10);
+        let mut rows = vec![0.0f32; 128 * d];
+        for r in 0..128 {
+            for j in 0..d {
+                let scale = if j % 2 == 0 { 4.0 } else { 0.25 };
+                rows[r * d + j] = scale * rng.gaussian_f32();
+            }
+        }
+        let cfg = PolarConfig::paper_default_no_precondition(d);
+        let off = PolarQuantizer::new_offline(cfg.clone());
+        let on = PolarQuantizer::new_online(cfg, &rows);
+        let e_off = off.reconstruction_error(&rows);
+        let e_on = on.reconstruction_error(&rows);
+        assert!(e_on <= e_off * 1.02, "online {e_on} vs offline {e_off}");
+    }
+
+    #[test]
+    fn decode_preconditioned_dot_equals_decoded_dot() {
+        // ⟨decode(c), q⟩ == ⟨decode_pre(c), R·q⟩ — the fused-attention
+        // identity.
+        let d = 64;
+        let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(d));
+        let rows = gaussian_rows(4, d, 11);
+        let q = gaussian_rows(1, d, 12);
+        let mut rq = vec![0.0f32; d];
+        pq.precondition_query(&q, &mut rq);
+        let mut full = vec![0.0f32; d];
+        let mut pre = vec![0.0f32; d];
+        for row in rows.chunks(d) {
+            let c = pq.encode(row);
+            pq.decode(&c, &mut full);
+            pq.decode_preconditioned(&c, &mut pre);
+            let a = dot(&full, &q);
+            let b = dot(&pre, &rq);
+            assert!((a - b).abs() < 1e-2 * norm2(&q) * norm2(&full).max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn norm_preserved_up_to_fp16() {
+        // Radii carry the norm; reconstruction norm must match within the
+        // fp16 relative error plus angle-induced distortion bound.
+        let d = 64;
+        let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(d));
+        let rows = gaussian_rows(16, d, 13);
+        let mut out = vec![0.0f32; d];
+        for row in rows.chunks(d) {
+            let c = pq.encode(row);
+            pq.decode(&c, &mut out);
+            let r_in = norm2(row);
+            let r_out = norm2(&out);
+            assert!((r_in - r_out).abs() / r_in < 0.02, "{r_in} vs {r_out}");
+        }
+    }
+
+    #[test]
+    fn storage_bytes_match_config() {
+        let cfg = PolarConfig::paper_default(64);
+        let pq = PolarQuantizer::new_offline(cfg.clone());
+        let rows = gaussian_rows(1, 64, 14);
+        let c = pq.encode(&rows);
+        assert_eq!(c.storage_bytes() * 8, cfg.bits_per_vector());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let cfg = PolarConfig::paper_default(32);
+        let a = PolarQuantizer::new_offline(cfg.clone());
+        let b = PolarQuantizer::new_offline(cfg);
+        let rows = gaussian_rows(3, 32, 15);
+        for row in rows.chunks(32) {
+            assert_eq!(a.encode(row), b.encode(row));
+        }
+    }
+
+    #[test]
+    fn scaled_accumulate_matches_decode_axpy() {
+        for d in [32usize, 64, 128] {
+            let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(d));
+            let rows = gaussian_rows(6, d, 31);
+            let mut acc_fast = vec![0.0f32; d];
+            let mut acc_slow = vec![0.0f32; d];
+            let mut buf = vec![0.0f32; d];
+            for (i, row) in rows.chunks(d).enumerate() {
+                let w = 0.1 + 0.2 * i as f32;
+                let c = pq.encode(row);
+                pq.decode_scaled_accumulate(&c, w, &mut acc_fast);
+                pq.decode_preconditioned(&c, &mut buf);
+                for j in 0..d {
+                    acc_slow[j] += w * buf[j];
+                }
+            }
+            for (a, b) in acc_fast.iter().zip(&acc_slow) {
+                assert!((a - b).abs() < 1e-4 * b.abs().max(1.0), "d={d}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_score_matches_materialized_decode() {
+        // score(prepare(q), c) ≡ ⟨decode_preconditioned(c), R·q⟩ — the
+        // §Perf fast path must be bit-for-bit faithful to the slow one.
+        for d in [32usize, 64, 128] {
+            let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(d));
+            let rows = gaussian_rows(8, d, 21);
+            let q = gaussian_rows(1, d, 22);
+            let prepared = pq.prepare_query(&q);
+            let mut rq = vec![0.0f32; d];
+            pq.precondition_query(&q, &mut rq);
+            let mut scratch = Vec::new();
+            let mut dec = vec![0.0f32; d];
+            for row in rows.chunks(d) {
+                let c = pq.encode(row);
+                let fast = pq.score(&prepared, &c, &mut scratch);
+                pq.decode_preconditioned(&c, &mut dec);
+                let slow = dot(&dec, &rq);
+                assert!(
+                    (fast - slow).abs() < 1e-3 * slow.abs().max(1.0),
+                    "d={d}: fused {fast} vs materialized {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(32));
+        let x = vec![0.0f32; 32];
+        let c = pq.encode(&x);
+        let mut out = vec![1.0f32; 32];
+        pq.decode(&c, &mut out);
+        assert!(norm2(&out) < 1e-5, "zero maps to ~zero");
+    }
+
+    #[test]
+    fn varying_level_bits_accounting() {
+        // Ablation layouts must account correctly.
+        let cfg = PolarConfig {
+            dim: 64,
+            levels: 3,
+            level_bits: vec![5, 3, 2],
+            precondition: PreconditionKind::None,
+            seed: 1,
+        };
+        cfg.validate();
+        // level1: 32·5=160, level2: 16·3=48, level3: 8·2=16 → 224 bits,
+        // radii: 8·16=128 → 352 bits → 5.5 b/coord.
+        assert_eq!(cfg.angle_bits(), 224);
+        assert!((cfg.bits_per_coordinate() - 5.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,244 @@
+//! Recursive Cartesian↔polar transform (paper Definition 1 / Algorithm 1,
+//! `Polar` and the reconstruction inside `DeQuant`).
+//!
+//! A d-vector (d a power of two) is reduced over `levels` rounds: each
+//! round pairs adjacent entries of the current radius vector, emitting an
+//! angle per pair and halving the radius vector. After L levels a block of
+//! 2^L coordinates is represented by one radius plus 2^L − 1 angles
+//! (2^{L-1} at level 1, …, 1 at level L).
+//!
+//! Level-1 angles use atan2 in [0, 2π) (the paired values are signed);
+//! level-≥2 angles pair *norms* (non-negative), so they lie in [0, π/2].
+//! The paper's practical setting is L = 4 → blocks of 16 (§4.1); the full
+//! recursion L = log₂ d is also supported (Theorem 1 experiments).
+
+use std::f32::consts::PI;
+
+/// Output of the forward transform on one vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolarRep {
+    /// Residual radii, length d / 2^levels.
+    pub radii: Vec<f32>,
+    /// `angles[l]` holds the level-(l+1) angles, length d / 2^(l+1).
+    pub angles: Vec<Vec<f32>>,
+}
+
+impl PolarRep {
+    pub fn levels(&self) -> usize {
+        self.angles.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.radii.len() << self.angles.len()
+    }
+
+    /// Total number of angles (d − d/2^L).
+    pub fn num_angles(&self) -> usize {
+        self.angles.iter().map(|a| a.len()).sum()
+    }
+}
+
+/// Number of angles at level `l` (1-based) for dimension `d`.
+pub fn angles_at_level(d: usize, l: usize) -> usize {
+    d >> l
+}
+
+/// Forward transform (Algorithm 1, `Polar`): `x.len()` must be divisible by
+/// 2^levels.
+pub fn polar_forward(x: &[f32], levels: usize) -> PolarRep {
+    let d = x.len();
+    assert!(levels >= 1, "need at least one level");
+    assert!(
+        d % (1 << levels) == 0 && d >= (1 << levels),
+        "dim {d} not divisible by 2^{levels}"
+    );
+    let mut angles = Vec::with_capacity(levels);
+
+    // Level 1: signed pairs → atan2 in [0, 2π), radius = hypot.
+    let mut r: Vec<f32> = Vec::with_capacity(d / 2);
+    let mut a1: Vec<f32> = Vec::with_capacity(d / 2);
+    for j in 0..d / 2 {
+        let x0 = x[2 * j];
+        let x1 = x[2 * j + 1];
+        let mut theta = x1.atan2(x0); // (−π, π]
+        if theta < 0.0 {
+            theta += 2.0 * PI;
+        }
+        a1.push(theta);
+        r.push(x0.hypot(x1));
+    }
+    angles.push(a1);
+
+    // Levels 2..=L: non-negative pairs → atan in [0, π/2].
+    for _l in 2..=levels {
+        let half = r.len() / 2;
+        let mut nr = Vec::with_capacity(half);
+        let mut al = Vec::with_capacity(half);
+        for j in 0..half {
+            let r0 = r[2 * j];
+            let r1 = r[2 * j + 1];
+            // atan2 of non-negatives lies in [0, π/2]; also handles r0=0.
+            al.push(r1.atan2(r0));
+            nr.push(r0.hypot(r1));
+        }
+        angles.push(al);
+        r = nr;
+    }
+
+    PolarRep { radii: r, angles }
+}
+
+/// Inverse transform: reconstruct the Cartesian vector from radii + angles.
+pub fn polar_inverse(rep: &PolarRep, out: &mut [f32]) {
+    let levels = rep.levels();
+    assert_eq!(out.len(), rep.dim(), "output buffer size");
+    // Expand radii top-down.
+    let mut r = rep.radii.clone();
+    for l in (2..=levels).rev() {
+        let al = &rep.angles[l - 1];
+        let mut nr = Vec::with_capacity(r.len() * 2);
+        for (j, &radius) in r.iter().enumerate() {
+            let (s, c) = al[j].sin_cos();
+            nr.push(radius * c);
+            nr.push(radius * s);
+        }
+        r = nr;
+    }
+    // Level 1 → Cartesian.
+    let a1 = &rep.angles[0];
+    for (j, &radius) in r.iter().enumerate() {
+        let (s, c) = a1[j].sin_cos();
+        out[2 * j] = radius * c;
+        out[2 * j + 1] = radius * s;
+    }
+}
+
+/// Convenience: forward + immediate inverse (used in tests/benches).
+pub fn roundtrip(x: &[f32], levels: usize) -> Vec<f32> {
+    let rep = polar_forward(x, levels);
+    let mut out = vec![0.0f32; x.len()];
+    polar_inverse(&rep, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::norm2;
+    use crate::util::rng::{Pcg64, Rng};
+
+    #[test]
+    fn shapes_follow_definition_1() {
+        // d = 16, L = 4: angles per level 8, 4, 2, 1; one radius.
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) - 7.5).collect();
+        let rep = polar_forward(&x, 4);
+        assert_eq!(rep.radii.len(), 1);
+        let lens: Vec<usize> = rep.angles.iter().map(|a| a.len()).collect();
+        assert_eq!(lens, vec![8, 4, 2, 1]);
+        assert_eq!(rep.num_angles(), 15);
+        assert_eq!(rep.dim(), 16);
+    }
+
+    #[test]
+    fn partial_levels_shapes() {
+        // d = 64, L = 2 → 16 radii; angles 32, 16.
+        let x = vec![1.0f32; 64];
+        let rep = polar_forward(&x, 2);
+        assert_eq!(rep.radii.len(), 16);
+        assert_eq!(rep.angles[0].len(), 32);
+        assert_eq!(rep.angles[1].len(), 16);
+    }
+
+    #[test]
+    fn angle_ranges_match_paper() {
+        let mut rng = Pcg64::new(5);
+        for _ in 0..200 {
+            let mut x = vec![0.0f32; 32];
+            rng.fill_gaussian(&mut x);
+            let rep = polar_forward(&x, 5);
+            for &a in &rep.angles[0] {
+                assert!((0.0..2.0 * PI).contains(&a), "level-1 angle {a}");
+            }
+            for l in 1..rep.levels() {
+                for &a in &rep.angles[l] {
+                    assert!(
+                        (0.0..=PI / 2.0 + 1e-6).contains(&a),
+                        "level-{} angle {a}",
+                        l + 1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radius_preserves_norm() {
+        let mut rng = Pcg64::new(6);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_gaussian(&mut x);
+        let rep = polar_forward(&x, 6); // full recursion
+        assert_eq!(rep.radii.len(), 1);
+        assert!((rep.radii[0] - norm2(&x)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn exact_roundtrip_random_vectors() {
+        let mut rng = Pcg64::new(7);
+        for &(d, l) in &[(4usize, 1usize), (4, 2), (16, 4), (64, 4), (128, 4), (64, 6)] {
+            for _ in 0..20 {
+                let mut x = vec![0.0f32; d];
+                rng.fill_gaussian(&mut x);
+                let y = roundtrip(&x, l);
+                for (a, b) in x.iter().zip(&y) {
+                    assert!((a - b).abs() < 1e-4, "d={d} l={l}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_handles_zeros_and_axis_vectors() {
+        // Degenerate inputs: zero vector, single-coordinate spikes, negatives.
+        let cases: Vec<Vec<f32>> = vec![
+            vec![0.0; 16],
+            {
+                let mut v = vec![0.0; 16];
+                v[0] = 3.0;
+                v
+            },
+            {
+                let mut v = vec![0.0; 16];
+                v[15] = -2.5;
+                v
+            },
+            vec![-1.0; 16],
+        ];
+        for x in cases {
+            let y = roundtrip(&x, 4);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-5, "{x:?} → {y:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruction_formula_spot_check() {
+        // Verify the closed-form in Definition 1 for one coordinate:
+        // x_0 = r · Π cos(first angle of each level).
+        let mut rng = Pcg64::new(8);
+        let mut x = vec![0.0f32; 16];
+        rng.fill_gaussian(&mut x);
+        let rep = polar_forward(&x, 4);
+        let mut acc = rep.radii[0];
+        for l in (0..4).rev() {
+            acc *= rep.angles[l][0].cos();
+        }
+        assert!((acc - x[0]).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_indivisible_dims() {
+        polar_forward(&[1.0, 2.0, 3.0], 1);
+    }
+}

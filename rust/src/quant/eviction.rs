@@ -1,0 +1,318 @@
+//! Token-eviction baselines (paper §5: SnapKV, PyramidKV, StreamingLLM,
+//! HeadKV). All four keep a *subset* of prefill tokens in fp16 and drop
+//! the rest; they differ only in how the subset is chosen:
+//!
+//! * **SnapKV** [24]: score prefill tokens by the attention mass they get
+//!   from an observation window of the last queries (max-pooled into
+//!   spans), keep top-budget plus the recent window.
+//! * **PyramidKV** [8]: SnapKV scoring with a per-layer budget that decays
+//!   up the stack ("pyramidal information funneling") — lower layers keep
+//!   more, upper layers fewer, same average.
+//! * **StreamingLLM** [38]: no scores — keep the first `sinks` tokens
+//!   (attention sinks) plus the most recent window.
+//! * **HeadKV** [13]: SnapKV scoring with per-head budgets allocated
+//!   proportionally to a head-importance (retrieval-reasoning) score, so
+//!   important heads keep more under the same total.
+//!
+//! Shared store: [`EvictedKv`], fp16 rows for retained tokens.
+
+use crate::quant::compressor::{
+    observation_scores, select_topk_with_recent, CompressedKv, FpTail, KvBlock, KvCompressor,
+};
+use crate::quant::fp16::{encode_f16, f16_bits_to_f32};
+
+/// Which eviction policy to apply.
+#[derive(Clone, Debug)]
+pub enum EvictionPolicy {
+    SnapKv {
+        /// Observation-window pooling width (SnapKV paper uses 7).
+        pool: usize,
+    },
+    PyramidKv {
+        pool: usize,
+        /// This head's layer and the total layer count (budget decays
+        /// linearly from 2× at layer 0 to ~0.25× at the top, normalized to
+        /// preserve the average).
+        layer: usize,
+        num_layers: usize,
+    },
+    StreamingLlm {
+        /// Number of initial attention-sink tokens to pin.
+        sinks: usize,
+    },
+    HeadKv {
+        pool: usize,
+        /// Relative importance of this head in [0, 1]; budgets scale as
+        /// 0.5 + 1.5·importance (normalized so the fleet average is ~1×).
+        importance: f64,
+    },
+}
+
+/// Eviction compressor: policy + target compression ratio (the fraction of
+/// prefill tokens retained; paper Fig. 3 sets 0.25 for all methods).
+#[derive(Clone, Debug)]
+pub struct EvictionCompressor {
+    pub policy: EvictionPolicy,
+    pub ratio: f64,
+    /// Recent-window fraction of the budget always retained (SnapKV keeps
+    /// the observation window verbatim).
+    pub recent_frac: f64,
+}
+
+impl EvictionCompressor {
+    pub fn snapkv(ratio: f64) -> Self {
+        Self { policy: EvictionPolicy::SnapKv { pool: 7 }, ratio, recent_frac: 0.25 }
+    }
+
+    pub fn pyramidkv(ratio: f64, layer: usize, num_layers: usize) -> Self {
+        Self {
+            policy: EvictionPolicy::PyramidKv { pool: 7, layer, num_layers },
+            ratio,
+            recent_frac: 0.25,
+        }
+    }
+
+    pub fn streamingllm(ratio: f64) -> Self {
+        Self { policy: EvictionPolicy::StreamingLlm { sinks: 4 }, ratio, recent_frac: 1.0 }
+    }
+
+    pub fn headkv(ratio: f64, importance: f64) -> Self {
+        Self {
+            policy: EvictionPolicy::HeadKv { pool: 7, importance },
+            ratio,
+            recent_frac: 0.25,
+        }
+    }
+
+    fn budget(&self, n: usize) -> usize {
+        let base = (self.ratio * n as f64).round();
+        let scaled = match &self.policy {
+            EvictionPolicy::PyramidKv { layer, num_layers, .. } => {
+                // Linear decay 1.75× → 0.25× across layers, mean 1.0.
+                let nl = (*num_layers).max(1) as f64;
+                let t = *layer as f64 / (nl - 1.0).max(1.0);
+                base * (1.75 - 1.5 * t)
+            }
+            EvictionPolicy::HeadKv { importance, .. } => base * (0.5 + 1.5 * importance),
+            _ => base,
+        };
+        (scaled as usize).clamp(1, n)
+    }
+}
+
+impl KvCompressor for EvictionCompressor {
+    fn name(&self) -> String {
+        match &self.policy {
+            EvictionPolicy::SnapKv { .. } => "snapkv".into(),
+            EvictionPolicy::PyramidKv { .. } => "pyramidkv".into(),
+            EvictionPolicy::StreamingLlm { .. } => "streamingllm".into(),
+            EvictionPolicy::HeadKv { .. } => "headkv".into(),
+        }
+    }
+
+    fn compress(&self, block: &KvBlock, obs_queries: &[f32]) -> Box<dyn CompressedKv> {
+        let n = block.n;
+        let budget = self.budget(n);
+        let keep: Vec<usize> = match &self.policy {
+            EvictionPolicy::StreamingLlm { sinks } => {
+                // Sinks + most recent (budget − sinks).
+                let sinks = (*sinks).min(budget);
+                let recent = budget - sinks;
+                let mut keep: Vec<usize> = (0..sinks).collect();
+                keep.extend(n.saturating_sub(recent)..n);
+                keep.dedup();
+                keep
+            }
+            EvictionPolicy::SnapKv { pool }
+            | EvictionPolicy::PyramidKv { pool, .. }
+            | EvictionPolicy::HeadKv { pool, .. } => {
+                let scores = observation_scores(block, obs_queries, *pool);
+                let recent = ((budget as f64) * self.recent_frac) as usize;
+                select_topk_with_recent(&scores, budget, recent)
+            }
+        };
+
+        let d = block.d;
+        let mut keys = Vec::with_capacity(keep.len() * d);
+        let mut values = Vec::with_capacity(keep.len() * d);
+        for &i in &keep {
+            keys.extend(encode_f16(block.key(i)));
+            values.extend(encode_f16(block.value(i)));
+        }
+        Box::new(EvictedKv {
+            d,
+            positions: keep.iter().map(|&i| i as u32).collect(),
+            keys,
+            values,
+            tail: FpTail::new(d),
+        })
+    }
+
+    fn target_ratio(&self) -> f64 {
+        self.ratio
+    }
+}
+
+/// Retained-subset fp16 store.
+pub struct EvictedKv {
+    d: usize,
+    positions: Vec<u32>,
+    keys: Vec<u16>,
+    values: Vec<u16>,
+    tail: FpTail,
+}
+
+impl CompressedKv for EvictedKv {
+    fn n_tokens(&self) -> usize {
+        self.positions.len() + self.tail.len()
+    }
+
+    fn positions(&self) -> Vec<u32> {
+        let mut p = self.positions.clone();
+        p.extend_from_slice(&self.tail.positions);
+        p
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // f16 rows + 4-byte position indices (eviction must store which
+        // tokens survive) + tail.
+        (self.keys.len() + self.values.len()) * 2
+            + self.positions.len() * 4
+            + self.tail.memory_bytes()
+    }
+
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
+        scores.clear();
+        let d = self.d;
+        for i in 0..self.positions.len() {
+            let row = &self.keys[i * d..(i + 1) * d];
+            let mut s = 0.0f32;
+            for j in 0..d {
+                s += f16_bits_to_f32(row[j]) * q[j];
+            }
+            scores.push(s);
+        }
+        self.tail.key_scores_into(q, scores);
+    }
+
+    fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let np = self.positions.len();
+        for i in 0..np {
+            let w = weights[i];
+            if w == 0.0 {
+                continue;
+            }
+            let row = &self.values[i * d..(i + 1) * d];
+            for j in 0..d {
+                out[j] += w * f16_bits_to_f32(row[j]);
+            }
+        }
+        self.tail.value_combine(&weights[np..], out);
+    }
+
+    fn append(&mut self, position: u32, k: &[f32], v: &[f32]) {
+        self.tail.append(position, k, v);
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn block(n: usize, d: usize, seed: u64) -> KvBlock {
+        let mut rng = Pcg64::new(seed);
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut k);
+        rng.fill_gaussian(&mut v);
+        KvBlock::new(k, v, n, d)
+    }
+
+    #[test]
+    fn snapkv_respects_budget_and_memory() {
+        let b = block(64, 16, 1);
+        let mut rng = Pcg64::new(2);
+        let mut q = vec![0.0f32; 4 * 16];
+        rng.fill_gaussian(&mut q);
+        let kv = EvictionCompressor::snapkv(0.25).compress(&b, &q);
+        assert_eq!(kv.n_tokens(), 16);
+        let ratio = kv.memory_bytes() as f64 / b.fp16_bytes() as f64;
+        assert!(ratio < 0.35, "ratio {ratio}");
+    }
+
+    #[test]
+    fn snapkv_keeps_highly_attended_token() {
+        let d = 16;
+        let mut b = block(128, d, 3);
+        let mut rng = Pcg64::new(4);
+        let mut q = vec![0.0f32; d];
+        rng.fill_gaussian(&mut q);
+        // Token 10 is what the query looks for.
+        for j in 0..d {
+            b.keys[10 * d + j] = q[j] * 6.0;
+        }
+        let kv = EvictionCompressor::snapkv(0.25).compress(&b, &q);
+        assert!(kv.positions().contains(&10), "needle must survive SnapKV");
+    }
+
+    #[test]
+    fn streamingllm_keeps_sinks_and_recent_only() {
+        let b = block(100, 8, 5);
+        let kv = EvictionCompressor::streamingllm(0.2).compress(&b, &[]);
+        let pos = kv.positions();
+        assert_eq!(pos.len(), 20);
+        assert_eq!(&pos[..4], &[0, 1, 2, 3]);
+        assert_eq!(*pos.last().unwrap(), 99);
+        // A middle token (the needle zone) is gone — StreamingLLM's known
+        // failure mode on NIAH.
+        assert!(!pos.contains(&50));
+    }
+
+    #[test]
+    fn pyramid_budget_decays_with_layer() {
+        let b = block(96, 8, 6);
+        let q = vec![0.0f32; 8];
+        let low = EvictionCompressor::pyramidkv(0.25, 0, 8).compress(&b, &q);
+        let high = EvictionCompressor::pyramidkv(0.25, 7, 8).compress(&b, &q);
+        assert!(
+            low.n_tokens() > high.n_tokens(),
+            "layer0 {} vs layer7 {}",
+            low.n_tokens(),
+            high.n_tokens()
+        );
+    }
+
+    #[test]
+    fn headkv_budget_scales_with_importance() {
+        let b = block(96, 8, 7);
+        let q = vec![0.0f32; 8];
+        let hot = EvictionCompressor::headkv(0.25, 1.0).compress(&b, &q);
+        let cold = EvictionCompressor::headkv(0.25, 0.0).compress(&b, &q);
+        assert!(hot.n_tokens() > cold.n_tokens());
+    }
+
+    #[test]
+    fn appended_tail_visible() {
+        let b = block(32, 8, 8);
+        let mut kv = EvictionCompressor::snapkv(0.25).compress(&b, &[]);
+        let before = kv.n_tokens();
+        kv.append(32, &vec![1.0; 8], &vec![1.0; 8]);
+        assert_eq!(kv.n_tokens(), before + 1);
+        assert_eq!(*kv.positions().last().unwrap(), 32);
+    }
+
+    #[test]
+    fn empty_obs_queries_still_works() {
+        // Without observation queries the scorer returns zeros →
+        // selection degenerates to "recent + arbitrary", but must not panic.
+        let b = block(40, 8, 9);
+        let kv = EvictionCompressor::snapkv(0.25).compress(&b, &[]);
+        assert_eq!(kv.n_tokens(), 10);
+    }
+}

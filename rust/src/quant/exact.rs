@@ -1,0 +1,163 @@
+//! Exact (FP16) cache — the paper's "Exact (16 bits)" reference row.
+//!
+//! Stores all prefill keys/values as f16 bit patterns (matching the
+//! Llama-3.1 bf16/fp16 deployment the paper measures against) and serves
+//! scores by converting on the fly.
+
+use crate::quant::compressor::{CompressedKv, FpTail, KvBlock, KvCompressor};
+use crate::quant::fp16::{encode_f16, f16_bits_to_f32};
+
+/// Factory for exact-fp16 caches.
+#[derive(Clone, Debug, Default)]
+pub struct ExactCompressor;
+
+impl KvCompressor for ExactCompressor {
+    fn name(&self) -> String {
+        "exact".into()
+    }
+
+    fn compress(&self, block: &KvBlock, _obs_queries: &[f32]) -> Box<dyn CompressedKv> {
+        Box::new(ExactKv {
+            d: block.d,
+            positions: (0..block.n as u32).collect(),
+            keys: encode_f16(&block.keys),
+            values: encode_f16(&block.values),
+            tail: FpTail::new(block.d),
+        })
+    }
+
+    fn target_ratio(&self) -> f64 {
+        1.0
+    }
+}
+
+/// The fp16 store.
+pub struct ExactKv {
+    d: usize,
+    positions: Vec<u32>,
+    keys: Vec<u16>,
+    values: Vec<u16>,
+    tail: FpTail,
+}
+
+impl CompressedKv for ExactKv {
+    fn n_tokens(&self) -> usize {
+        self.positions.len() + self.tail.len()
+    }
+
+    fn positions(&self) -> Vec<u32> {
+        let mut p = self.positions.clone();
+        p.extend_from_slice(&self.tail.positions);
+        p
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.keys.len() + self.values.len()) * 2 + self.tail.memory_bytes()
+    }
+
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
+        assert_eq!(q.len(), self.d);
+        scores.clear();
+        let d = self.d;
+        for i in 0..self.positions.len() {
+            let row = &self.keys[i * d..(i + 1) * d];
+            let mut s = 0.0f32;
+            for j in 0..d {
+                s += f16_bits_to_f32(row[j]) * q[j];
+            }
+            scores.push(s);
+        }
+        self.tail.key_scores_into(q, scores);
+    }
+
+    fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let np = self.positions.len();
+        assert_eq!(weights.len(), self.n_tokens());
+        for i in 0..np {
+            let w = weights[i];
+            if w == 0.0 {
+                continue;
+            }
+            let row = &self.values[i * d..(i + 1) * d];
+            for j in 0..d {
+                out[j] += w * f16_bits_to_f32(row[j]);
+            }
+        }
+        self.tail.value_combine(&weights[np..], out);
+    }
+
+    fn append(&mut self, position: u32, k: &[f32], v: &[f32]) {
+        self.tail.append(position, k, v);
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn block(n: usize, d: usize, seed: u64) -> KvBlock {
+        let mut rng = Pcg64::new(seed);
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut k);
+        rng.fill_gaussian(&mut v);
+        KvBlock::new(k, v, n, d)
+    }
+
+    #[test]
+    fn scores_match_f32_within_fp16() {
+        let b = block(16, 32, 1);
+        let kv = ExactCompressor.compress(&b, &[]);
+        let mut rng = Pcg64::new(2);
+        let mut q = vec![0.0f32; 32];
+        rng.fill_gaussian(&mut q);
+        let mut scores = Vec::new();
+        kv.key_scores(&q, &mut scores);
+        for i in 0..16 {
+            let want = crate::math::linalg::dot(b.key(i), &q);
+            assert!((scores[i] - want).abs() < 0.05, "{} vs {}", scores[i], want);
+        }
+    }
+
+    #[test]
+    fn memory_is_fp16_footprint() {
+        let b = block(16, 32, 3);
+        let kv = ExactCompressor.compress(&b, &[]);
+        assert_eq!(kv.memory_bytes(), b.fp16_bytes());
+    }
+
+    #[test]
+    fn append_extends_positions_and_scores() {
+        let d = 8;
+        let b = block(4, d, 4);
+        let mut kv = ExactCompressor.compress(&b, &[]);
+        let k = vec![1.0f32; d];
+        let v = vec![2.0f32; d];
+        kv.append(4, &k, &v);
+        assert_eq!(kv.n_tokens(), 5);
+        assert_eq!(kv.positions(), vec![0, 1, 2, 3, 4]);
+        let q = vec![1.0f32; d];
+        let mut scores = Vec::new();
+        kv.key_scores(&q, &mut scores);
+        assert!((scores[4] - d as f32).abs() < 1e-3);
+        let mut out = vec![0.0f32; d];
+        kv.value_combine(&[0.0, 0.0, 0.0, 0.0, 1.0], &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dequant_keys_default_impl_matches_storage() {
+        let b = block(3, 8, 5);
+        let kv = ExactCompressor.compress(&b, &[]);
+        let keys = kv.dequant_keys();
+        for (a, b) in keys.iter().zip(&b.keys) {
+            assert!((a - b).abs() < 0.01);
+        }
+    }
+}

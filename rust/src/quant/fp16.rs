@@ -1,0 +1,166 @@
+//! IEEE-754 binary16 conversion (the `half` crate is unavailable offline).
+//!
+//! Used for radius storage in the PolarQuant layout (paper §4.1: radii kept
+//! in b_FPN = 16 bits), for the Exact-FP16 baseline cache, and for the
+//! generation-tail storage. Round-to-nearest-even, with correct handling of
+//! subnormals, infinities and NaN.
+
+/// Convert f32 → f16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN. Preserve NaN-ness with a quiet mantissa bit.
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        // Overflow → ±inf.
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // Normal f16. Round mantissa 23 → 10 bits.
+        let mant16 = mant >> 13;
+        let rest = mant & 0x1FFF;
+        let halfway = 0x1000;
+        let mut out = sign | (((e + 15) as u16) << 10) | mant16 as u16;
+        if rest > halfway || (rest == halfway && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent — that's correct
+        }
+        return out;
+    }
+    if e >= -24 {
+        // Subnormal f16.
+        let full = mant | 0x80_0000; // implicit leading 1
+        let shift = (-14 - e) as u32 + 13;
+        let mant16 = full >> shift;
+        let rest = full & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut out = sign | mant16 as u16;
+        if rest > halfway || (rest == halfway && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    // Underflow → ±0.
+    sign
+}
+
+/// Convert f16 bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign, // ±0
+        (0, m) => {
+            // Subnormal: value = m · 2⁻²⁴. Normalize around the highest
+            // set bit hb (0..=9): value = 2^(hb−24) · (m / 2^hb).
+            let hb = 31 - m.leading_zeros(); // position of highest set bit
+            let e = 103 + hb; // 127 + (hb − 24)
+            let frac = (m ^ (1 << hb)) << (23 - hb);
+            sign | (e << 23) | frac
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,              // ±inf
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),  // NaN
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an f32 through f16 (the storage loss an fp16 cache incurs).
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Convert a slice to f16 bits.
+pub fn encode_f16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16_bits(x)).collect()
+}
+
+/// Convert f16 bits back into an f32 buffer.
+pub fn decode_f16_into(hs: &[u16], out: &mut [f32]) {
+    assert_eq!(hs.len(), out.len());
+    for (o, &h) in out.iter_mut().zip(hs) {
+        *o = f16_bits_to_f32(h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048i32..=2048 {
+            let x = i as f32;
+            assert_eq!(quantize_f16(x), x, "f16 must be exact for |int| <= 2048: {i}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // max finite f16
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00); // overflow → inf
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let min_sub = f16_bits_to_f32(0x0001); // 2^-24
+        assert!((min_sub - 2.0f32.powi(-24)).abs() < 1e-12);
+        assert_eq!(f32_to_f16_bits(min_sub), 0x0001);
+        let x = 3.0 * 2.0f32.powi(-24);
+        let b = f32_to_f16_bits(x);
+        assert_eq!(f16_bits_to_f32(b), x);
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        let mut rng = Pcg64::new(17);
+        for _ in 0..20_000 {
+            let x = (rng.gaussian() * 10.0) as f32;
+            if x.abs() < 1e-4 {
+                continue;
+            }
+            let q = quantize_f16(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel < 1.0 / 1024.0, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 → ties to even (1.0).
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(quantize_f16(x), 1.0);
+        // 1 + 3·2^-11 is halfway between 1+2^-10 and 1+2^-9 → ties to even (1+2^-9).
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(quantize_f16(y), 1.0 + 2.0 * 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(quantize_f16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn slice_encode_decode() {
+        let xs = [0.5f32, -1.25, 3.75, 100.0];
+        let hs = encode_f16(&xs);
+        let mut out = [0.0f32; 4];
+        decode_f16_into(&hs, &mut out);
+        assert_eq!(xs, out);
+    }
+}

@@ -1,0 +1,360 @@
+//! KIVI baseline [26]: tuning-free asymmetric 2-bit quantization.
+//!
+//! KIVI's recipe: quantize the **key** cache *per-channel* (group along the
+//! token axis within each channel — key channels have outlier magnitudes
+//! that per-token grouping would smear) and the **value** cache
+//! *per-token*; keep a full-precision residual window of the most recent
+//! tokens. Every group stores a zero point and scale in fp16 — exactly the
+//! normalization overhead PolarQuant's analysis removes, and the reason
+//! KIVI's bits/coordinate is higher than its nominal 2 bits
+//! (2 + 2·16/G extra bits per coordinate for group size G).
+
+use crate::quant::compressor::{CompressedKv, FpTail, KvBlock, KvCompressor};
+use crate::quant::fp16::{f16_bits_to_f32, quantize_f16};
+
+/// KIVI configuration.
+#[derive(Clone, Debug)]
+pub struct KiviConfig {
+    /// Bits per quantized coordinate (paper: 2).
+    pub bits: u8,
+    /// Group size G along the grouped axis (paper: 32 or 128).
+    pub group: usize,
+    /// Full-precision residual window (most recent tokens kept fp16).
+    pub residual: usize,
+}
+
+impl Default for KiviConfig {
+    fn default() -> Self {
+        Self { bits: 2, group: 32, residual: 32 }
+    }
+}
+
+/// The compressor.
+#[derive(Clone, Debug, Default)]
+pub struct KiviCompressor {
+    pub cfg: KiviConfig,
+}
+
+impl KiviCompressor {
+    pub fn new(cfg: KiviConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+/// One quantized group: codes plus fp16 zero/scale.
+#[derive(Clone, Debug)]
+struct Group {
+    /// zero point (minimum), fp16-rounded.
+    zero: f32,
+    /// scale = (max−min)/(2^b−1), fp16-rounded.
+    scale: f32,
+}
+
+fn quantize_group(xs: &[f32], bits: u8) -> (Group, Vec<u8>) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let levels = (1u32 << bits) - 1;
+    let zero = quantize_f16(lo);
+    let scale = quantize_f16(((hi - lo) / levels as f32).max(1e-8));
+    let codes = xs
+        .iter()
+        .map(|&x| (((x - zero) / scale).round().clamp(0.0, levels as f32)) as u8)
+        .collect();
+    (Group { zero, scale }, codes)
+}
+
+#[inline]
+fn dequant(code: u8, g: &Group) -> f32 {
+    g.zero + g.scale * code as f32
+}
+
+impl KvCompressor for KiviCompressor {
+    fn name(&self) -> String {
+        "kivi".into()
+    }
+
+    fn compress(&self, block: &KvBlock, _obs: &[f32]) -> Box<dyn CompressedKv> {
+        let d = block.d;
+        let n = block.n;
+        let cfg = &self.cfg;
+        let res = cfg.residual.min(n);
+        let nq = n - res; // tokens quantized; most recent `res` stay fp16
+
+        // Keys: per-channel groups along tokens. codes stored
+        // channel-major: key_codes[c][t] for t in 0..nq.
+        let mut key_groups: Vec<Group> = Vec::new();
+        let mut key_codes = vec![0u8; nq * d];
+        let groups_per_channel = nq.div_ceil(cfg.group).max(if nq > 0 { 1 } else { 0 });
+        let mut chan = vec![0.0f32; cfg.group];
+        for c in 0..d {
+            for g in 0..groups_per_channel {
+                let t0 = g * cfg.group;
+                let t1 = ((g + 1) * cfg.group).min(nq);
+                let m = t1 - t0;
+                for (slot, t) in (t0..t1).enumerate() {
+                    chan[slot] = block.keys[t * d + c];
+                }
+                let (grp, codes) = quantize_group(&chan[..m], cfg.bits);
+                key_groups.push(grp);
+                for (slot, t) in (t0..t1).enumerate() {
+                    key_codes[c * nq + t] = codes[slot];
+                }
+            }
+        }
+
+        // Values: per-token groups along channels.
+        let mut val_groups: Vec<Group> = Vec::with_capacity(nq * d.div_ceil(cfg.group));
+        let mut val_codes = vec![0u8; nq * d];
+        for t in 0..nq {
+            let row = block.value(t);
+            for g in 0..d.div_ceil(cfg.group) {
+                let c0 = g * cfg.group;
+                let c1 = ((g + 1) * cfg.group).min(d);
+                let (grp, codes) = quantize_group(&row[c0..c1], cfg.bits);
+                val_groups.push(grp);
+                val_codes[t * d + c0..t * d + c1].copy_from_slice(&codes);
+            }
+        }
+
+        // Residual window: fp16 exact.
+        let mut tail = FpTail::new(d);
+        for t in nq..n {
+            tail.append(t as u32, block.key(t), block.value(t));
+        }
+
+        Box::new(KiviKv {
+            d,
+            nq,
+            bits: cfg.bits,
+            group: cfg.group,
+            key_groups,
+            key_codes,
+            val_groups,
+            val_codes,
+            tail,
+        })
+    }
+
+    fn target_ratio(&self) -> f64 {
+        // ~ (b + 2·16/G)/16 plus the residual window.
+        (self.cfg.bits as f64 + 32.0 / self.cfg.group as f64) / 16.0
+    }
+}
+
+/// KIVI store: channel-major key codes, token-major value codes.
+pub struct KiviKv {
+    d: usize,
+    nq: usize,
+    bits: u8,
+    group: usize,
+    key_groups: Vec<Group>,
+    key_codes: Vec<u8>,
+    val_groups: Vec<Group>,
+    val_codes: Vec<u8>,
+    tail: FpTail,
+}
+
+impl CompressedKv for KiviKv {
+    fn n_tokens(&self) -> usize {
+        self.nq + self.tail.len()
+    }
+
+    fn positions(&self) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..self.nq as u32).collect();
+        p.extend_from_slice(&self.tail.positions);
+        p
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // Packed codes at `bits` per entry + fp16 zero/scale per group.
+        let code_bytes = |n_codes: usize| (n_codes * self.bits as usize).div_ceil(8);
+        code_bytes(self.key_codes.len())
+            + code_bytes(self.val_codes.len())
+            + (self.key_groups.len() + self.val_groups.len()) * 4
+            + self.tail.memory_bytes()
+    }
+
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
+        scores.clear();
+        scores.resize(self.nq, 0.0);
+        let d = self.d;
+        let nq = self.nq;
+        if nq > 0 {
+            let gpc = nq.div_ceil(self.group);
+            for c in 0..d {
+                let qc = q[c];
+                if qc == 0.0 {
+                    continue;
+                }
+                let codes = &self.key_codes[c * nq..(c + 1) * nq];
+                for g in 0..gpc {
+                    let grp = &self.key_groups[c * gpc + g];
+                    let t0 = g * self.group;
+                    let t1 = ((g + 1) * self.group).min(nq);
+                    for t in t0..t1 {
+                        scores[t] += qc * dequant(codes[t], grp);
+                    }
+                }
+            }
+        }
+        self.tail.key_scores_into(q, scores);
+    }
+
+    fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let gpr = d.div_ceil(self.group);
+        for t in 0..self.nq {
+            let w = weights[t];
+            if w == 0.0 {
+                continue;
+            }
+            let row = &self.val_codes[t * d..(t + 1) * d];
+            for g in 0..gpr {
+                let grp = &self.val_groups[t * gpr + g];
+                let c0 = g * self.group;
+                let c1 = ((g + 1) * self.group).min(d);
+                for c in c0..c1 {
+                    out[c] += w * dequant(row[c], grp);
+                }
+            }
+        }
+        self.tail.value_combine(&weights[self.nq..], out);
+    }
+
+    fn append(&mut self, position: u32, k: &[f32], v: &[f32]) {
+        self.tail.append(position, k, v);
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+// Silence unused warning for f16 import used in tests.
+#[allow(unused)]
+fn _use(h: u16) -> f32 {
+    f16_bits_to_f32(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn block(n: usize, d: usize, seed: u64) -> KvBlock {
+        let mut rng = Pcg64::new(seed);
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut k);
+        rng.fill_gaussian(&mut v);
+        KvBlock::new(k, v, n, d)
+    }
+
+    #[test]
+    fn group_quantizer_hits_extremes() {
+        let xs = [0.0f32, 1.0, 2.0, 3.0];
+        let (g, codes) = quantize_group(&xs, 2);
+        assert_eq!(codes, vec![0, 1, 2, 3]);
+        assert!((dequant(codes[0], &g) - 0.0).abs() < 1e-3);
+        assert!((dequant(codes[3], &g) - 3.0).abs() < 2e-3);
+    }
+
+    #[test]
+    fn scores_track_exact_within_2bit_noise() {
+        let d = 32;
+        let n = 128;
+        let b = block(n, d, 1);
+        let kv = KiviCompressor::default().compress(&b, &[]);
+        let mut rng = Pcg64::new(2);
+        let mut q = vec![0.0f32; d];
+        rng.fill_gaussian(&mut q);
+        let mut scores = Vec::new();
+        kv.key_scores(&q, &mut scores);
+        assert_eq!(scores.len(), n);
+        let mut err = 0.0f64;
+        let mut mag = 0.0f64;
+        for t in 0..n {
+            let want = crate::math::linalg::dot(b.key(t), &q);
+            err += ((scores[t] - want) as f64).powi(2);
+            mag += (want as f64).powi(2);
+        }
+        let rel = (err / mag).sqrt();
+        assert!(rel < 0.35, "2-bit KIVI relative score error {rel}");
+        // Residual window tokens are exact (fp16).
+        let t = n - 1;
+        let want = crate::math::linalg::dot(b.key(t), &q);
+        assert!((scores[t] - want).abs() < 0.05);
+    }
+
+    #[test]
+    fn memory_ratio_near_nominal() {
+        let d = 64;
+        let n = 512;
+        let b = block(n, d, 3);
+        let kv = KiviCompressor::default().compress(&b, &[]);
+        let ratio = kv.memory_bytes() as f64 / b.fp16_bytes() as f64;
+        // 2-bit + overhead + 32-token residual on 512 → ~0.25.
+        assert!(ratio > 0.15 && ratio < 0.32, "ratio {ratio}");
+    }
+
+    #[test]
+    fn overhead_bits_exceed_nominal_bits() {
+        // The normalization-overhead claim: actual bits/coord > 2.
+        let d = 64;
+        let n = 512;
+        let b = block(n, d, 4);
+        let cfg = KiviConfig { bits: 2, group: 32, residual: 0 };
+        let kv = KiviCompressor::new(cfg).compress(&b, &[]);
+        let bits_per_coord = kv.memory_bytes() as f64 * 8.0 / (2 * n * d) as f64;
+        assert!(
+            bits_per_coord > 2.9 && bits_per_coord < 3.2,
+            "KIVI true cost ≈ 2 + 2·16/32 = 3 bits/coord, got {bits_per_coord}"
+        );
+    }
+
+    #[test]
+    fn value_combine_matches_exact_within_noise() {
+        let d = 16;
+        let n = 64;
+        let b = block(n, d, 5);
+        let kv = KiviCompressor::default().compress(&b, &[]);
+        let mut rng = Pcg64::new(6);
+        let mut w = vec![0.0f32; n];
+        rng.fill_uniform(&mut w, 0.0, 1.0);
+        let s: f32 = w.iter().sum();
+        for x in w.iter_mut() {
+            *x /= s;
+        }
+        let mut got = vec![0.0f32; d];
+        kv.value_combine(&w, &mut got);
+        let mut want = vec![0.0f32; d];
+        for t in 0..n {
+            for c in 0..d {
+                want[c] += w[t] * b.values[t * d + c];
+            }
+        }
+        let rel = crate::util::stats::rel_l2_error(&got, &want);
+        assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn short_sequences_all_residual() {
+        let b = block(8, 16, 7);
+        let kv = KiviCompressor::default().compress(&b, &[]);
+        // n < residual ⇒ everything fp16, nothing quantized.
+        assert_eq!(kv.n_tokens(), 8);
+        let q = vec![1.0f32; 16];
+        let mut scores = Vec::new();
+        kv.key_scores(&q, &mut scores);
+        let want = crate::math::linalg::dot(b.key(0), &q);
+        assert!((scores[0] - want).abs() < 0.05);
+    }
+}

@@ -1,0 +1,13 @@
+//! KV compression methods: the common [`compressor::KvCompressor`]
+//! interface, the fp16 substrate, and every baseline the paper compares
+//! against (Table 1 / Fig. 3): KIVI, QJL, SnapKV, PyramidKV, StreamingLLM,
+//! HeadKV, plus Exact-FP16 and PolarQuant itself behind the same trait.
+
+pub mod compressor;
+pub mod eviction;
+pub mod exact;
+pub mod fp16;
+pub mod kivi;
+pub mod polar_kv;
+pub mod qjl;
+pub mod registry;

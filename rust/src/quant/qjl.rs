@@ -1,0 +1,324 @@
+//! QJL baseline [41]: 1-bit quantized Johnson–Lindenstrauss transform.
+//!
+//! Keys: store sign(S·k) (1 bit per sketch coordinate) plus ‖k‖ in fp16.
+//! The inner product is estimated from the angle between sign patterns:
+//!   ⟨k, q⟩ ≈ ‖k‖·‖q‖·cos(π·hamming/m)  — the classic SimHash estimator,
+//! which is what makes QJL data-oblivious and normalization-free (its
+//! overhead is one fp16 norm per token — the property PolarQuant shares).
+//! Values: per-token 8-bit quantization (QJL quantizes values by standard
+//! integer quantization since value outliers are token-aligned).
+
+use crate::quant::compressor::{CompressedKv, FpTail, KvBlock, KvCompressor};
+use crate::quant::fp16::{f16_bits_to_f32, f32_to_f16_bits, quantize_f16};
+use crate::util::rng::{Pcg64, Rng};
+
+/// QJL configuration.
+#[derive(Clone, Debug)]
+pub struct QjlConfig {
+    /// Sketch dimension m (bits per key). The QJL paper uses m ≈ 2–4×d.
+    pub sketch_dim: usize,
+    /// Value bits (paper: 8 per coordinate, per-token normalization).
+    pub value_bits: u8,
+    pub seed: u64,
+}
+
+impl QjlConfig {
+    pub fn for_dim(d: usize) -> Self {
+        Self { sketch_dim: 3 * d, value_bits: 8, seed: 0x514a4c } // "QJL"
+    }
+}
+
+/// The compressor; holds the shared Gaussian sketch.
+pub struct QjlCompressor {
+    cfg: QjlConfig,
+    d: usize,
+    /// Row-major (m × d) Gaussian sketch.
+    sketch: Vec<f32>,
+}
+
+impl QjlCompressor {
+    pub fn new(d: usize, cfg: QjlConfig) -> Self {
+        let mut rng = Pcg64::new(cfg.seed);
+        let sketch = (0..cfg.sketch_dim * d).map(|_| rng.gaussian_f32()).collect();
+        Self { cfg, d, sketch }
+    }
+
+    pub fn for_dim(d: usize) -> Self {
+        Self::new(d, QjlConfig::for_dim(d))
+    }
+
+    fn sketch_signs(&self, x: &[f32]) -> Vec<u64> {
+        let m = self.cfg.sketch_dim;
+        let d = self.d;
+        let mut words = vec![0u64; m.div_ceil(64)];
+        for i in 0..m {
+            let s = crate::math::linalg::dot(&self.sketch[i * d..(i + 1) * d], x);
+            if s >= 0.0 {
+                words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        words
+    }
+}
+
+impl KvCompressor for QjlCompressor {
+    fn name(&self) -> String {
+        "qjl".into()
+    }
+
+    fn compress(&self, block: &KvBlock, _obs: &[f32]) -> Box<dyn CompressedKv> {
+        let d = block.d;
+        assert_eq!(d, self.d, "QJL sketch built for dim {}", self.d);
+        let n = block.n;
+        let m = self.cfg.sketch_dim;
+        let words_per_key = m.div_ceil(64);
+
+        let mut key_bits = Vec::with_capacity(n * words_per_key);
+        let mut key_norms = Vec::with_capacity(n);
+        for t in 0..n {
+            let k = block.key(t);
+            key_bits.extend(self.sketch_signs(k));
+            key_norms.push(f32_to_f16_bits(crate::math::linalg::norm2(k)));
+        }
+
+        // Values: 8-bit per-token asymmetric quantization.
+        let levels = (1u32 << self.cfg.value_bits) - 1;
+        let mut val_codes = vec![0u8; n * d];
+        let mut val_zero = Vec::with_capacity(n);
+        let mut val_scale = Vec::with_capacity(n);
+        for t in 0..n {
+            let row = block.value(t);
+            let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let zero = quantize_f16(lo);
+            let scale = quantize_f16(((hi - lo) / levels as f32).max(1e-8));
+            val_zero.push(zero);
+            val_scale.push(scale);
+            for c in 0..d {
+                val_codes[t * d + c] =
+                    (((row[c] - zero) / scale).round().clamp(0.0, levels as f32)) as u8;
+            }
+        }
+
+        Box::new(QjlKv {
+            d,
+            n,
+            m,
+            words_per_key,
+            sketch: self.sketch.clone(),
+            key_bits,
+            key_norms,
+            val_codes,
+            val_zero,
+            val_scale,
+            tail: FpTail::new(d),
+        })
+    }
+
+    fn target_ratio(&self) -> f64 {
+        // keys: m bits + 16; values: 8·d + 32 — over 2·16·d.
+        let d = self.d as f64;
+        let m = self.cfg.sketch_dim as f64;
+        ((m + 16.0) + (8.0 * d + 32.0)) / (32.0 * d)
+    }
+}
+
+/// QJL store.
+pub struct QjlKv {
+    d: usize,
+    n: usize,
+    m: usize,
+    words_per_key: usize,
+    sketch: Vec<f32>,
+    key_bits: Vec<u64>,
+    key_norms: Vec<u16>,
+    val_codes: Vec<u8>,
+    val_zero: Vec<f32>,
+    val_scale: Vec<f32>,
+    tail: FpTail,
+}
+
+impl CompressedKv for QjlKv {
+    fn n_tokens(&self) -> usize {
+        self.n + self.tail.len()
+    }
+
+    fn positions(&self) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..self.n as u32).collect();
+        p.extend_from_slice(&self.tail.positions);
+        p
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.key_bits.len() * 8
+            + self.key_norms.len() * 2
+            + self.val_codes.len()
+            + (self.val_zero.len() + self.val_scale.len()) * 2
+            + self.tail.memory_bytes()
+        // The shared sketch is amortized across all layers/heads/tokens and
+        // not charged per block (same convention as the QJL paper).
+    }
+
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
+        scores.clear();
+        // Sketch the query once, then per-key hamming distance.
+        let m = self.m;
+        let d = self.d;
+        let qn = crate::math::linalg::norm2(q);
+        let mut q_words = vec![0u64; self.words_per_key];
+        for i in 0..m {
+            let s = crate::math::linalg::dot(&self.sketch[i * d..(i + 1) * d], q);
+            if s >= 0.0 {
+                q_words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        // Mask for the final partial word.
+        let tail_bits = m % 64;
+        let last_mask = if tail_bits == 0 { u64::MAX } else { (1u64 << tail_bits) - 1 };
+        for t in 0..self.n {
+            let words = &self.key_bits[t * self.words_per_key..(t + 1) * self.words_per_key];
+            let mut ham = 0u32;
+            for (wi, (&a, &b)) in words.iter().zip(&q_words).enumerate() {
+                let mut x = a ^ b;
+                if wi + 1 == self.words_per_key {
+                    x &= last_mask;
+                }
+                ham += x.count_ones();
+            }
+            let angle = std::f32::consts::PI * ham as f32 / m as f32;
+            let kn = f16_bits_to_f32(self.key_norms[t]);
+            scores.push(kn * qn * angle.cos());
+        }
+        self.tail.key_scores_into(q, scores);
+    }
+
+    fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        for t in 0..self.n {
+            let w = weights[t];
+            if w == 0.0 {
+                continue;
+            }
+            let zero = self.val_zero[t];
+            let scale = self.val_scale[t];
+            let row = &self.val_codes[t * d..(t + 1) * d];
+            for c in 0..d {
+                out[c] += w * (zero + scale * row[c] as f32);
+            }
+        }
+        self.tail.value_combine(&weights[self.n..], out);
+    }
+
+    fn append(&mut self, position: u32, k: &[f32], v: &[f32]) {
+        self.tail.append(position, k, v);
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(n: usize, d: usize, seed: u64) -> KvBlock {
+        let mut rng = Pcg64::new(seed);
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut k);
+        rng.fill_gaussian(&mut v);
+        KvBlock::new(k, v, n, d)
+    }
+
+    #[test]
+    fn identical_vectors_score_as_norm_product() {
+        let d = 32;
+        let mut b = block(2, d, 1);
+        let mut rng = Pcg64::new(2);
+        let mut q = vec![0.0f32; d];
+        rng.fill_gaussian(&mut q);
+        // Key 0 = q → hamming 0 → score = ‖k‖·‖q‖ = ‖q‖².
+        b.keys[..d].copy_from_slice(&q);
+        let kv = QjlCompressor::for_dim(d).compress(&b, &[]);
+        let mut scores = Vec::new();
+        kv.key_scores(&q, &mut scores);
+        let want = crate::math::linalg::dot(&q, &q);
+        assert!(
+            (scores[0] - want).abs() / want < 0.05,
+            "{} vs {}",
+            scores[0],
+            want
+        );
+    }
+
+    #[test]
+    fn orthogonal_vectors_score_near_zero() {
+        let d = 32;
+        let mut b = block(1, d, 3);
+        for j in 0..d {
+            b.keys[j] = if j == 0 { 5.0 } else { 0.0 };
+        }
+        let mut q = vec![0.0f32; d];
+        q[1] = 5.0;
+        let kv = QjlCompressor::for_dim(d).compress(&b, &[]);
+        let mut scores = Vec::new();
+        kv.key_scores(&q, &mut scores);
+        // cos estimator noise ~ 1/√m; allow generous slack.
+        assert!(scores[0].abs() < 8.0, "orthogonal score {}", scores[0]);
+    }
+
+    #[test]
+    fn score_correlation_with_exact() {
+        let d = 32;
+        let n = 64;
+        let b = block(n, d, 4);
+        let kv = QjlCompressor::for_dim(d).compress(&b, &[]);
+        let mut rng = Pcg64::new(5);
+        let mut q = vec![0.0f32; d];
+        rng.fill_gaussian(&mut q);
+        let mut got = Vec::new();
+        kv.key_scores(&q, &mut got);
+        let want: Vec<f32> = (0..n).map(|t| crate::math::linalg::dot(b.key(t), &q)).collect();
+        // Pearson correlation should be strong (1-bit sketch, m = 3d).
+        let mw = want.iter().sum::<f32>() / n as f32;
+        let mg = got.iter().sum::<f32>() / n as f32;
+        let mut cov = 0.0;
+        let mut vw = 0.0;
+        let mut vg = 0.0;
+        for t in 0..n {
+            cov += (want[t] - mw) * (got[t] - mg);
+            vw += (want[t] - mw).powi(2);
+            vg += (got[t] - mg).powi(2);
+        }
+        let corr = cov / (vw.sqrt() * vg.sqrt());
+        // 1-bit SimHash estimator at m = 3d has ~1/√m angle noise; 0.6 is
+        // the right ballpark for d=32 Gaussian scores.
+        assert!(corr > 0.6, "QJL score correlation {corr}");
+    }
+
+    #[test]
+    fn values_8bit_accurate() {
+        let d = 16;
+        let n = 8;
+        let b = block(n, d, 6);
+        let kv = QjlCompressor::for_dim(d).compress(&b, &[]);
+        let mut w = vec![0.0f32; n];
+        w[3] = 1.0;
+        let mut out = vec![0.0f32; d];
+        kv.value_combine(&w, &mut out);
+        let rel = crate::util::stats::rel_l2_error(&out, b.value(3));
+        assert!(rel < 0.02, "8-bit value error {rel}");
+    }
+
+    #[test]
+    fn memory_matches_target_ratio() {
+        let d = 64;
+        let n = 256;
+        let b = block(n, d, 7);
+        let comp = QjlCompressor::for_dim(d);
+        let kv = comp.compress(&b, &[]);
+        let ratio = kv.memory_bytes() as f64 / b.fp16_bytes() as f64;
+        assert!((ratio - comp.target_ratio()).abs() < 0.05, "ratio {ratio}");
+    }
+}

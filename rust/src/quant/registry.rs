@@ -1,0 +1,136 @@
+//! Method registry: build any compression method by name, with the
+//! paper's comparison settings (everything lined up at compression ratio
+//! 0.25 for Fig. 3 / Table 1). Used by the CLI, eval harnesses and
+//! benches so each experiment names methods as strings.
+
+use crate::quant::compressor::KvCompressor;
+use crate::quant::eviction::EvictionCompressor;
+use crate::quant::exact::ExactCompressor;
+use crate::quant::kivi::{KiviCompressor, KiviConfig};
+use crate::quant::polar_kv::{PolarKvCompressor, PolarVariant};
+use crate::quant::qjl::QjlCompressor;
+
+/// Context a method may need (layer/head identity for PyramidKV/HeadKV).
+#[derive(Clone, Copy, Debug)]
+pub struct MethodContext {
+    pub head_dim: usize,
+    pub layer: usize,
+    pub num_layers: usize,
+    /// Head importance in [0,1] (HeadKV); eval computes it from retrieval
+    /// scores, defaults to 0.5.
+    pub head_importance: f64,
+}
+
+impl MethodContext {
+    pub fn new(head_dim: usize) -> Self {
+        Self { head_dim, layer: 0, num_layers: 1, head_importance: 0.5 }
+    }
+
+    pub fn at_layer(mut self, layer: usize, num_layers: usize) -> Self {
+        self.layer = layer;
+        self.num_layers = num_layers;
+        self
+    }
+}
+
+/// All method names in the paper's tables, in presentation order.
+pub const TABLE1_METHODS: &[&str] = &[
+    "exact",
+    "snapkv",
+    "headkv",
+    "pyramidkv",
+    "streamingllm",
+    "kivi",
+    "polarquant",
+    "polarquant-r-offline",
+    "polarquant-r-online",
+];
+
+/// Fig. 3 methods (paper compares these five at ratio 0.25).
+pub const FIG3_METHODS: &[&str] =
+    &["snapkv", "pyramidkv", "kivi", "polarquant", "polarquant-r-offline"];
+
+/// Build a compressor by name. Ratio is the nominal compression target
+/// for eviction methods (quantization methods' ratios are fixed by their
+/// bit layouts — PolarQuant 0.242, KIVI ≈ 0.25 with its residual window).
+pub fn build_method(name: &str, ratio: f64, ctx: MethodContext) -> Box<dyn KvCompressor> {
+    let d = ctx.head_dim;
+    match name {
+        "exact" => Box::new(ExactCompressor),
+        "snapkv" => Box::new(EvictionCompressor::snapkv(ratio)),
+        "pyramidkv" => Box::new(EvictionCompressor::pyramidkv(ratio, ctx.layer, ctx.num_layers)),
+        "streamingllm" => Box::new(EvictionCompressor::streamingllm(ratio)),
+        "headkv" => Box::new(EvictionCompressor::headkv(ratio, ctx.head_importance)),
+        "kivi" => Box::new(KiviCompressor::new(KiviConfig::default())),
+        "qjl" => Box::new(QjlCompressor::for_dim(d)),
+        "polarquant" => Box::new(PolarKvCompressor::new(d, PolarVariant::plain())),
+        "polarquant-r-offline" => {
+            Box::new(PolarKvCompressor::new(d, PolarVariant::r_offline()))
+        }
+        "polarquant-r-online" => Box::new(PolarKvCompressor::new(d, PolarVariant::r_online())),
+        other => panic!("unknown method {other:?}; known: {TABLE1_METHODS:?} + qjl"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::compressor::KvBlock;
+    use crate::util::rng::{Pcg64, Rng};
+
+    #[test]
+    fn all_table1_methods_build_and_run() {
+        let d = 32;
+        let n = 64;
+        let mut rng = Pcg64::new(1);
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut k);
+        rng.fill_gaussian(&mut v);
+        let b = KvBlock::new(k, v, n, d);
+        let mut q = vec![0.0f32; 2 * d];
+        rng.fill_gaussian(&mut q);
+        for name in TABLE1_METHODS.iter().chain(["qjl"].iter()) {
+            let m = build_method(name, 0.25, MethodContext::new(d));
+            assert_eq!(&m.name(), name);
+            let kv = m.compress(&b, &q);
+            assert!(kv.n_tokens() > 0, "{name}");
+            assert!(kv.memory_bytes() > 0, "{name}");
+            let mut scores = Vec::new();
+            let mut qq = vec![0.0f32; d];
+            rng.fill_gaussian(&mut qq);
+            kv.key_scores(&qq, &mut scores);
+            assert_eq!(scores.len(), kv.n_tokens(), "{name}");
+            assert!(scores.iter().all(|s| s.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn compressed_methods_use_quarter_memory() {
+        let d = 64;
+        let n = 512;
+        let mut rng = Pcg64::new(2);
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut k);
+        rng.fill_gaussian(&mut v);
+        let b = KvBlock::new(k, v, n, d);
+        let mut q = vec![0.0f32; 8 * d];
+        rng.fill_gaussian(&mut q);
+        let exact = build_method("exact", 1.0, MethodContext::new(d)).compress(&b, &q);
+        for name in &["snapkv", "streamingllm", "kivi", "polarquant-r-offline"] {
+            let kv = build_method(name, 0.25, MethodContext::new(d)).compress(&b, &q);
+            let ratio = kv.memory_bytes() as f64 / exact.memory_bytes() as f64;
+            assert!(
+                ratio > 0.1 && ratio < 0.4,
+                "{name} should sit near ratio 0.25, got {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_method_panics() {
+        build_method("nope", 0.25, MethodContext::new(8));
+    }
+}

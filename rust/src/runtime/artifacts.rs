@@ -1,0 +1,251 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+//!
+//! The manifest is written by `python/compile/aot.py` and describes every
+//! lowered graph (file, argument names/shapes/dtypes, output shapes), the
+//! model config, the codec layout, and the default codebooks.
+
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One argument of a graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// Codec layout recorded in the manifest.
+#[derive(Clone, Debug)]
+pub struct CodecSpec {
+    pub head_dim: usize,
+    pub levels: usize,
+    pub level_bits: Vec<u8>,
+    pub enc_n: usize,
+    pub score_b: usize,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub model: ModelConfig,
+    pub codec: CodecSpec,
+    pub graphs: Vec<GraphSpec>,
+    pub weights_file: Option<String>,
+    pub prefill_s: usize,
+    pub decode_maxlen: usize,
+    /// Default codebooks: (centroids, boundaries) per level.
+    pub codebooks: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Self> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {path}: {e}"))?;
+
+        let model = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let num = |node: &Json, k: &str| -> Result<usize> {
+            node.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("missing field {k}"))
+        };
+        let model_cfg = ModelConfig {
+            vocab: num(model, "vocab")?,
+            d_model: num(model, "d_model")?,
+            n_layers: num(model, "n_layers")?,
+            n_heads: num(model, "n_heads")?,
+            head_dim: num(model, "head_dim")?,
+            d_ff: num(model, "d_ff")?,
+            rope_theta: model.get("rope_theta").and_then(|v| v.as_f64()).unwrap_or(1e4) as f32,
+            rms_eps: model.get("rms_eps").and_then(|v| v.as_f64()).unwrap_or(1e-5) as f32,
+        };
+
+        let codec = j.get("codec").ok_or_else(|| anyhow!("missing codec"))?;
+        let codec_spec = CodecSpec {
+            head_dim: num(codec, "head_dim")?,
+            levels: num(codec, "levels")?,
+            level_bits: codec
+                .get("level_bits")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("level_bits"))?
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .map(|x| x as u8)
+                .collect(),
+            enc_n: num(codec, "enc_n")?,
+            score_b: num(codec, "score_b")?,
+        };
+
+        let parse_specs = |node: &Json| -> Result<Vec<ArgSpec>> {
+            node.as_arr()
+                .ok_or_else(|| anyhow!("expected array"))?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("out")
+                            .to_string(),
+                        shape: a
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .ok_or_else(|| anyhow!("shape"))?
+                            .iter()
+                            .filter_map(|x| x.as_usize())
+                            .collect(),
+                        dtype: a
+                            .get("dtype")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("float32")
+                            .to_string(),
+                    })
+                })
+                .collect()
+        };
+
+        let graphs_node = j.get("graphs").ok_or_else(|| anyhow!("missing graphs"))?;
+        let mut graphs = Vec::new();
+        if let Json::Obj(m) = graphs_node {
+            for (name, g) in m {
+                graphs.push(GraphSpec {
+                    name: name.clone(),
+                    file: g
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("graph file"))?
+                        .to_string(),
+                    args: parse_specs(g.get("args").ok_or_else(|| anyhow!("args"))?)?,
+                    outputs: parse_specs(g.get("outputs").ok_or_else(|| anyhow!("outputs"))?)?,
+                });
+            }
+        } else {
+            bail!("graphs must be an object");
+        }
+
+        let shapes = j.get("shapes").ok_or_else(|| anyhow!("missing shapes"))?;
+
+        // Codebooks.
+        let mut codebooks = Vec::new();
+        if let Some(Json::Obj(books)) = j.get("codebooks") {
+            for l in 1..=codec_spec.levels {
+                let b = books
+                    .get(&format!("level{l}"))
+                    .ok_or_else(|| anyhow!("codebook level{l}"))?;
+                let cent = b
+                    .get("centroids")
+                    .and_then(|v| v.as_f32_vec())
+                    .ok_or_else(|| anyhow!("centroids"))?;
+                let bnd = b
+                    .get("boundaries")
+                    .and_then(|v| v.as_f32_vec())
+                    .ok_or_else(|| anyhow!("boundaries"))?;
+                codebooks.push((cent, bnd));
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_string(),
+            model: model_cfg,
+            codec: codec_spec,
+            graphs,
+            weights_file: j
+                .get("weights_file")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
+            prefill_s: num(shapes, "prefill_s")?,
+            decode_maxlen: num(shapes, "decode_maxlen")?,
+            codebooks,
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .iter()
+            .find(|g| g.name == name)
+            .ok_or_else(|| anyhow!("graph {name} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<String> {
+        Ok(format!("{}/{}", self.dir, self.graph(name)?.file))
+    }
+
+    /// Default artifacts directory (env override → ./artifacts).
+    pub fn default_dir() -> String {
+        std::env::var("POLARQUANT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+
+    pub fn available(dir: &str) -> bool {
+        std::path::Path::new(&format!("{dir}/manifest.json")).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text/1",
+      "model": {"vocab": 64, "d_model": 32, "n_layers": 2, "n_heads": 2,
+                 "head_dim": 16, "d_ff": 48, "rope_theta": 10000.0,
+                 "rms_eps": 1e-5, "params_order": []},
+      "codec": {"head_dim": 64, "levels": 4, "level_bits": [4,2,2,2],
+                 "enc_n": 256, "score_b": 4},
+      "shapes": {"prefill_s": 128, "decode_maxlen": 512},
+      "graphs": {"g1": {"file": "g1.hlo.txt",
+                          "args": [{"name": "x", "shape": [2,3], "dtype": "float32"}],
+                          "outputs": [{"shape": [2], "dtype": "float32"}]}},
+      "codebooks": {
+        "level1": {"bits": 1, "centroids": [0.5, 1.5], "boundaries": [1.0]},
+        "level2": {"bits": 1, "centroids": [0.3, 0.9], "boundaries": [0.6]},
+        "level3": {"bits": 1, "centroids": [0.3, 0.9], "boundaries": [0.6]},
+        "level4": {"bits": 1, "centroids": [0.3, 0.9], "boundaries": [0.6]}
+      },
+      "weights_file": "w.bin"
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("pq_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.model.vocab, 64);
+        assert_eq!(m.codec.level_bits, vec![4, 2, 2, 2]);
+        assert_eq!(m.graphs.len(), 1);
+        let g = m.graph("g1").unwrap();
+        assert_eq!(g.args[0].shape, vec![2, 3]);
+        assert_eq!(g.args[0].elements(), 6);
+        assert_eq!(m.weights_file.as_deref(), Some("w.bin"));
+        assert_eq!(m.codebooks.len(), 4);
+        assert!(m.graph("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let dir = std::env::temp_dir().join("pq_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"graphs": {}}"#).unwrap();
+        assert!(Manifest::load(dir.to_str().unwrap()).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

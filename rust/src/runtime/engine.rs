@@ -1,0 +1,119 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `client.compile` → `execute`). Executables are
+//! compiled lazily per graph and cached; inputs/outputs are `xla::Literal`s
+//! with f32/i32 payloads per the manifest conventions.
+
+use crate::runtime::artifacts::Manifest;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Lazily-compiled artifact executor.
+pub struct PjrtEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self { manifest, client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for a graph.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse HLO text {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a graph with literal inputs; returns the flattened tuple
+    /// outputs (aot.py lowers everything with return_tuple=True).
+    pub fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_borrowed(name, &refs)
+    }
+
+    /// Like [`Self::run`] but borrowing the argument literals — the model
+    /// runtime keeps weights as cached literals and passes references, so
+    /// nothing is copied per step.
+    pub fn run_borrowed(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.graph(name)?;
+        if spec.args.len() != args.len() {
+            return Err(anyhow!(
+                "graph {name} expects {} args, got {}",
+                spec.args.len(),
+                args.len()
+            ));
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} vs {} elements", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} vs {} elements", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Scalar i32 literal.
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))
+}
+
+// NOTE: engine integration tests live in rust/tests/artifacts_parity.rs
+// (they need `make artifacts` to have run; unit tests here would drag the
+// PJRT runtime into every `cargo test --lib` invocation).

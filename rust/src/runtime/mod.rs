@@ -1,0 +1,7 @@
+//! The PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! lowered once by `python/compile/aot.py`) and executes them through the
+//! PJRT C API via the `xla` crate. Python never runs at request time.
+
+pub mod artifacts;
+pub mod engine;
+pub mod model_runtime;

@@ -1,0 +1,140 @@
+//! Model execution through the PJRT artifacts (the "pjrt" engine mode).
+//!
+//! Wraps `model_prefill` / `model_decode_step` graphs: weights are
+//! converted to literals once, prompts are chunk-padded to the lowered
+//! prefill length, and the decode step runs against fixed-size f32 cache
+//! buffers owned on the Rust side.
+//!
+//! The *quantized* serving hot path stays native (rust codec); this engine
+//! exists to (a) prove the three-layer AOT contract end-to-end and
+//! (b) cross-validate the native model (logit parity tests).
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::runtime::engine::{lit_f32, lit_i32, lit_i32_scalar, to_f32_vec, PjrtEngine};
+use anyhow::{ensure, Result};
+
+/// PJRT-backed model session.
+pub struct PjrtModel<'e> {
+    pub engine: &'e PjrtEngine,
+    pub cfg: ModelConfig,
+    /// Weight literals in canonical order (shared across calls).
+    weight_lits: Vec<xla::Literal>,
+    maxlen: usize,
+    prefill_s: usize,
+}
+
+/// Decode-time cache buffers (L, MAXLEN, H, Dh) flattened.
+pub struct PjrtKvState {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+    cfg: ModelConfig,
+    maxlen: usize,
+}
+
+impl PjrtKvState {
+    fn row(&self, l: usize, pos: usize) -> std::ops::Range<usize> {
+        let (h, dh) = (self.cfg.n_heads, self.cfg.head_dim);
+        let base = (l * self.maxlen + pos) * h * dh;
+        base..base + h * dh
+    }
+
+    /// Write one token's (k, v) rows (L × H × Dh each) at `pos`.
+    pub fn write(&mut self, pos: usize, new_k: &[f32], new_v: &[f32]) {
+        let (h, dh) = (self.cfg.n_heads, self.cfg.head_dim);
+        for l in 0..self.cfg.n_layers {
+            let r = self.row(l, pos);
+            self.k[r.clone()].copy_from_slice(&new_k[l * h * dh..(l + 1) * h * dh]);
+            self.v[r].copy_from_slice(&new_v[l * h * dh..(l + 1) * h * dh]);
+        }
+        self.len = self.len.max(pos + 1);
+    }
+}
+
+impl<'e> PjrtModel<'e> {
+    pub fn new(engine: &'e PjrtEngine, weights: &Weights) -> Result<Self> {
+        let cfg = weights.cfg.clone();
+        ensure!(
+            cfg == engine.manifest.model,
+            "weights config does not match the lowered model graphs"
+        );
+        let mut weight_lits = Vec::new();
+        for (name, data) in weights.flat_order() {
+            let shape = cfg.param_shape(name);
+            weight_lits.push(lit_f32(data, &shape)?);
+        }
+        Ok(Self {
+            engine,
+            cfg,
+            weight_lits,
+            maxlen: engine.manifest.decode_maxlen,
+            prefill_s: engine.manifest.prefill_s,
+        })
+    }
+
+    pub fn maxlen(&self) -> usize {
+        self.maxlen
+    }
+
+    pub fn fresh_kv(&self) -> PjrtKvState {
+        let n = self.cfg.n_layers * self.maxlen * self.cfg.n_heads * self.cfg.head_dim;
+        PjrtKvState {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            len: 0,
+            cfg: self.cfg.clone(),
+            maxlen: self.maxlen,
+        }
+    }
+
+    /// Run the prefill graph on `tokens` (≤ the lowered chunk size; padded
+    /// with token 0 — caller slices logits by true length). Returns
+    /// (logits S×V, k, v) with k/v shaped (L, S, H, Dh) flattened.
+    pub fn prefill_chunk(&self, tokens: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let s = self.prefill_s;
+        ensure!(
+            tokens.len() <= s,
+            "prompt chunk {} exceeds lowered prefill length {s}",
+            tokens.len()
+        );
+        let mut padded = vec![0i32; s];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let toks = lit_i32(&padded, &[s])?;
+        // Borrow cached weight literals — no copies on the call path.
+        let mut args: Vec<&xla::Literal> = vec![&toks];
+        args.extend(self.weight_lits.iter());
+        let out = self.engine.run_borrowed("model_prefill", &args)?;
+        ensure!(out.len() == 3, "prefill returns 3 outputs");
+        Ok((to_f32_vec(&out[0])?, to_f32_vec(&out[1])?, to_f32_vec(&out[2])?))
+    }
+
+    /// Run one decode step at `pos` against the cache buffers; writes the
+    /// new K/V rows into `kv` and returns the logits.
+    pub fn decode_step(&self, token: u32, pos: usize, kv: &mut PjrtKvState) -> Result<Vec<f32>> {
+        ensure!(pos < self.maxlen, "pos {pos} exceeds decode maxlen {}", self.maxlen);
+        let shape = [
+            self.cfg.n_layers,
+            self.maxlen,
+            self.cfg.n_heads,
+            self.cfg.head_dim,
+        ];
+        let tok = lit_i32_scalar(token as i32);
+        let p = lit_i32_scalar(pos as i32);
+        let kbuf = lit_f32(&kv.k, &shape)?;
+        let vbuf = lit_f32(&kv.v, &shape)?;
+        let mut args: Vec<&xla::Literal> = vec![&tok, &p, &kbuf, &vbuf];
+        args.extend(self.weight_lits.iter());
+        let out = self.engine.run_borrowed("model_decode_step", &args)?;
+        ensure!(out.len() == 3, "decode returns 3 outputs");
+        let logits = to_f32_vec(&out[0])?;
+        let new_k = to_f32_vec(&out[1])?;
+        let new_v = to_f32_vec(&out[2])?;
+        kv.write(pos, &new_k, &new_v);
+        Ok(logits)
+    }
+}
+
+// Integration coverage: rust/tests/artifacts_parity.rs (needs artifacts).

@@ -1,0 +1,207 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters and a generated usage string. Each binary declares
+//! its options up-front so `--help` output stays accurate.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative arg parser: register options, then `parse`.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub program: String,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Self { about, ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}\n\nUSAGE: {} [OPTIONS]\n\nOPTIONS:", self.about, self.program);
+        for spec in &self.specs {
+            let d = match (spec.is_flag, spec.default) {
+                (true, _) => String::new(),
+                (false, Some(d)) => format!(" [default: {d}]"),
+                (false, None) => " (required)".to_string(),
+            };
+            let _ = writeln!(s, "  --{:<24} {}{}", spec.name, spec.help, d);
+        }
+        s
+    }
+
+    /// Parse from an iterator (first item must be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self, String> {
+        let mut it = argv.into_iter();
+        self.program = it.next().unwrap_or_else(|| "prog".into());
+        let known_flag = |specs: &[OptSpec], n: &str| {
+            specs.iter().find(|s| s.name == n).map(|s| s.is_flag)
+        };
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                match known_flag(&self.specs, &name) {
+                    Some(true) => {
+                        self.flags.insert(name, true);
+                    }
+                    Some(false) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| format!("missing value for --{name}"))?,
+                        };
+                        self.values.insert(name, v);
+                    }
+                    None => return Err(format!("unknown option --{name}\n\n{}", self.usage())),
+                }
+            } else {
+                self.positional.push(a);
+            }
+        }
+        // Check required options.
+        for spec in &self.specs {
+            if !spec.is_flag
+                && spec.default.is_none()
+                && !self.values.contains_key(spec.name)
+            {
+                return Err(format!("missing required option --{}\n\n{}", spec.name, self.usage()));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse(self) -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        match self.parse_from(argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name && !s.is_flag)
+            .and_then(|s| s.default.map(|d| d.to_string()))
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name).unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        let v = self.get(name);
+        v.parse().unwrap_or_else(|_| panic!("--{name}: expected integer, got {v:?}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        let v = self.get(name);
+        v.parse().unwrap_or_else(|_| panic!("--{name}: expected integer, got {v:?}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        let v = self.get(name);
+        v.parse().unwrap_or_else(|_| panic!("--{name}: expected float, got {v:?}"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::new("t")
+            .opt("n", "4", "count")
+            .opt("name", "x", "name")
+            .flag("verbose", "talk")
+            .parse_from(argv(&["prog", "--n", "8", "--name=abc", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 8);
+        assert_eq!(a.get("name"), "abc");
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t")
+            .opt("n", "4", "count")
+            .flag("v", "")
+            .parse_from(argv(&["prog"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 4);
+        assert!(!a.get_flag("v"));
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Args::new("t").req("model", "path").parse_from(argv(&["prog"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t").parse_from(argv(&["prog", "--bogus"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let r = Args::new("about-text").opt("n", "1", "").parse_from(argv(&["prog", "--help"]));
+        let msg = r.unwrap_err();
+        assert!(msg.contains("about-text"));
+        assert!(msg.contains("--n"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utility substrates (no external deps available in
+//! this build environment beyond `xla`/`anyhow`, so RNG, JSON, CLI parsing,
+//! stats, timing and thread pools are implemented from scratch here).
+
+pub mod args;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

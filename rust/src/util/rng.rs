@@ -1,0 +1,273 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The build environment has no `rand` crate, so we implement a small,
+//! well-tested PRNG stack from scratch:
+//!
+//! * [`SplitMix64`] — seeding / stream-splitting generator.
+//! * [`Pcg64`] — the main generator (PCG XSL RR 128/64), good statistical
+//!   quality and a tiny state. Used everywhere randomness is needed:
+//!   synthetic weights, workload generation, preconditioners, k-means++.
+//!
+//! All sampling helpers (uniform, Gaussian via Box–Muller, shuffling,
+//! weighted choice) live on the [`Rng`] trait so tests can substitute a
+//! counting generator.
+
+/// Minimal RNG interface: a source of uniform `u64`s plus derived samplers.
+pub trait Rng {
+    /// Next uniformly distributed 64-bit value.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53 bits of mantissa entropy.
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits — unbiased and exactly representable.
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as `f32`.
+    fn next_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0) using Lemire's rejection method.
+    fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        // Widening multiply rejection sampling; bias-free.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (n.wrapping_neg() % n) {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (cached second value is *not* kept to
+    /// stay allocation- and state-free; cost is fine for our workloads).
+    fn gaussian(&mut self) -> f64 {
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Standard normal as f32.
+    fn gaussian_f32(&mut self) -> f32 {
+        self.gaussian() as f32
+    }
+
+    /// Fill a slice with i.i.d. standard normals.
+    fn fill_gaussian(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.gaussian_f32();
+        }
+    }
+
+    /// Fill a slice with uniforms in `[lo, hi)`.
+    fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for v in out.iter_mut() {
+            *v = lo + (hi - lo) * self.next_f32();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index proportionally to the non-negative weights.
+    /// Returns `None` if all weights are zero/empty.
+    fn weighted_choice(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().sum();
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut t = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return Some(i);
+            }
+        }
+        Some(weights.len() - 1)
+    }
+
+    /// Sample from Exp(rate) — used by the workload arrival generator.
+    fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+}
+
+/// SplitMix64: tiny generator mainly used to expand a seed into streams.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL RR 128/64 — the workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MUL: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Construct from a 64-bit seed; state and stream are both derived via
+    /// SplitMix64 so nearby seeds give unrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut g = Self { state, inc };
+        g.next_u64(); // burn-in one step so state is well mixed
+        g
+    }
+
+    /// Derive an independent child stream (used to give each worker thread /
+    /// layer / head its own generator deterministically).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        Pcg64::new(s)
+    }
+}
+
+impl Rng for Pcg64 {
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MUL).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_deterministic_and_seed_sensitive() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(1);
+        let mut c = Pcg64::new(2);
+        let va: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut g = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut g = Pcg64::new(9);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            let x = g.next_below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut g = Pcg64::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = g.gaussian();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = Pcg64::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        g.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_choice_respects_zeros() {
+        let mut g = Pcg64::new(5);
+        for _ in 0..1000 {
+            let i = g.weighted_choice(&[0.0, 1.0, 0.0]).unwrap();
+            assert_eq!(i, 1);
+        }
+        assert!(g.weighted_choice(&[0.0, 0.0]).is_none());
+        assert!(g.weighted_choice(&[]).is_none());
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut g = Pcg64::new(13);
+        let mut a = g.split(0);
+        let mut b = g.split(1);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

