@@ -44,6 +44,11 @@ fn main() {
         model: ModelConfig::mini(),
         seed: 0,
         workers: 1,
+        // Off so the per-method prefill times below stay comparable: with
+        // the cache on, the second method would reuse the first method's
+        // prompt KV (the store is method-independent) and prefill ~6x
+        // less work. See examples/chat_prefix_reuse.rs for the cache.
+        prefix_cache: false,
         ..Default::default()
     });
     let prompt: Vec<u32> = (0..96).map(|i| 16 + (i * 37) % 1000).collect();

@@ -1,0 +1,97 @@
+//! Prefix-cache throughput bench: end-to-end scheduler + native engine
+//! over shared-prefix workloads at 0% / 50% / 90% sharing, with the
+//! radix cache enabled vs. disabled. The 90%-shared column is the
+//! system-prompt-heavy traffic the cache targets; the acceptance bar is
+//! ≥2x throughput over cold prefill there.
+
+mod common;
+
+use polarquant::coordinator::request::GenRequest;
+use polarquant::coordinator::request::Tracked;
+use polarquant::coordinator::scheduler::Scheduler;
+use polarquant::coordinator::worker::NativeWorker;
+use polarquant::eval::report;
+use polarquant::eval::workload::PrefixWorkload;
+use polarquant::kvcache::paged::{PagedConfig, PagedPool};
+use polarquant::model::config::ModelConfig;
+use polarquant::util::timer::Timer;
+
+struct RunStats {
+    elapsed_s: f64,
+    tokens_reused: u64,
+    requests: usize,
+}
+
+fn run(share: f64, enable_cache: bool, n_req: usize, model: &ModelConfig) -> RunStats {
+    let mut engine = NativeWorker::synthetic(model, 7);
+    let pool = PagedPool::new(PagedConfig {
+        page_tokens: 16,
+        token_bytes: model.kv_bytes_per_token_fp16(),
+        num_pages: 4096,
+    });
+    let mut sched = if enable_cache {
+        Scheduler::with_prefix_cache(pool, 8, 2048)
+    } else {
+        Scheduler::new(pool, 8)
+    };
+    // 192-token shared head (12 pages) + 32-token unique tail.
+    let mut wl = PrefixWorkload::new(model.vocab, 1, 192, 32, share, 11);
+
+    let mut tokens_reused = 0u64;
+    let t = Timer::start();
+    for i in 0..n_req {
+        let (prompt, _) = wl.next_prompt();
+        let mut req = GenRequest::new(i as u64, prompt, 4);
+        req.method = "polarquant-r-offline".into();
+        sched.admit(vec![Tracked::new(req)], &mut engine);
+        while !sched.active.is_empty() {
+            sched.decode_round(&mut engine);
+        }
+        tokens_reused += sched.take_prefix_events().tokens_reused;
+    }
+    RunStats { elapsed_s: t.secs(), tokens_reused, requests: n_req }
+}
+
+fn main() {
+    common::banner(
+        "Prefix-cache throughput",
+        "scheduler + native engine over 0%/50%/90% shared-prefix workloads",
+    );
+    let model = ModelConfig::mini();
+    let n_req = if common::full_scale() { 48 } else { 12 };
+
+    let mut table = report::Table::new(
+        "bench_prefix_cache — requests/s, cache off vs. on",
+        &[
+            "shared",
+            "req",
+            "off (req/s)",
+            "on (req/s)",
+            "speedup",
+            "tokens reused",
+        ],
+    );
+    let mut speedup_90 = 0.0;
+    for &share in &[0.0, 0.5, 0.9] {
+        let off = run(share, false, n_req, &model);
+        let on = run(share, true, n_req, &model);
+        let rps_off = off.requests as f64 / off.elapsed_s;
+        let rps_on = on.requests as f64 / on.elapsed_s;
+        let speedup = rps_on / rps_off;
+        if share == 0.9 {
+            speedup_90 = speedup;
+        }
+        table.row(vec![
+            format!("{:.0}%", share * 100.0),
+            format!("{n_req}"),
+            format!("{rps_off:.2}"),
+            format!("{rps_on:.2}"),
+            format!("{speedup:.2}x"),
+            format!("{}", on.tokens_reused),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n90%-shared speedup: {speedup_90:.2}x (target ≥ 2x over cold prefill)"
+    );
+}

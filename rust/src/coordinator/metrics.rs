@@ -25,6 +25,14 @@ pub struct Metrics {
     pub tokens_generated: AtomicU64,
     pub cache_bytes: AtomicU64,
     pub preemptions: AtomicU64,
+    /// Prefix-cache counters (requests with a radix hit / without).
+    pub prefix_hits: AtomicU64,
+    pub prefix_misses: AtomicU64,
+    /// Prompt tokens served from cached KV instead of prefilled.
+    pub prefix_tokens_reused: AtomicU64,
+    pub prefix_evictions: AtomicU64,
+    /// Gauge: pool pages currently pinned by prefix caches (all workers).
+    pub prefix_cached_pages: AtomicU64,
     lat: Mutex<Latencies>,
     started: Instant,
 }
@@ -45,8 +53,36 @@ impl Metrics {
             tokens_generated: AtomicU64::new(0),
             cache_bytes: AtomicU64::new(0),
             preemptions: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_misses: AtomicU64::new(0),
+            prefix_tokens_reused: AtomicU64::new(0),
+            prefix_evictions: AtomicU64::new(0),
+            prefix_cached_pages: AtomicU64::new(0),
             lat: Mutex::new(Latencies::default()),
             started: Instant::now(),
+        }
+    }
+
+    /// Fold one worker's drained prefix-cache events into the hub.
+    /// `cached_pages` is a per-worker gauge, so the caller passes its
+    /// previous contribution and we apply the delta.
+    pub fn record_prefix_events(
+        &self,
+        ev: &crate::coordinator::scheduler::PrefixEvents,
+        prev_cached_pages: usize,
+    ) {
+        self.prefix_hits.fetch_add(ev.hits, Ordering::Relaxed);
+        self.prefix_misses.fetch_add(ev.misses, Ordering::Relaxed);
+        self.prefix_tokens_reused
+            .fetch_add(ev.tokens_reused, Ordering::Relaxed);
+        self.prefix_evictions
+            .fetch_add(ev.evicted_nodes, Ordering::Relaxed);
+        if ev.cached_pages >= prev_cached_pages {
+            self.prefix_cached_pages
+                .fetch_add((ev.cached_pages - prev_cached_pages) as u64, Ordering::Relaxed);
+        } else {
+            self.prefix_cached_pages
+                .fetch_sub((prev_cached_pages - ev.cached_pages) as u64, Ordering::Relaxed);
         }
     }
 
@@ -111,6 +147,31 @@ impl Metrics {
             ("throughput_tok_s", Json::num(self.throughput())),
             ("cache_bytes", Json::num(self.cache_bytes.load(Ordering::Relaxed) as f64)),
             ("preemptions", Json::num(self.preemptions.load(Ordering::Relaxed) as f64)),
+            ("prefix_cache", {
+                let hits = self.prefix_hits.load(Ordering::Relaxed);
+                let misses = self.prefix_misses.load(Ordering::Relaxed);
+                let looked = hits + misses;
+                Json::from_pairs(vec![
+                    ("hits", Json::num(hits as f64)),
+                    ("misses", Json::num(misses as f64)),
+                    (
+                        "hit_rate",
+                        Json::num(if looked == 0 { 0.0 } else { hits as f64 / looked as f64 }),
+                    ),
+                    (
+                        "tokens_reused",
+                        Json::num(self.prefix_tokens_reused.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "evicted_nodes",
+                        Json::num(self.prefix_evictions.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "cached_pages",
+                        Json::num(self.prefix_cached_pages.load(Ordering::Relaxed) as f64),
+                    ),
+                ])
+            }),
             ("ttft", pct(&lat.ttft)),
             ("total", pct(&lat.total)),
             ("prefill", pct(&lat.prefill)),
@@ -154,5 +215,40 @@ mod tests {
         let p50 = parsed.path("ttft.p50").unwrap().as_f64().unwrap();
         assert!(p50 > 0.0 && p50 < 0.1);
         assert_eq!(parsed.path("requests.done").unwrap().as_f64().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn prefix_events_aggregate_into_snapshot() {
+        use crate::coordinator::scheduler::PrefixEvents;
+        let m = Metrics::new();
+        let ev = |hits, misses, tokens_reused, evicted_nodes, cached_pages| PrefixEvents {
+            hits,
+            misses,
+            tokens_reused,
+            evicted_nodes,
+            cached_pages,
+        };
+        m.record_prefix_events(&ev(3, 1, 96, 2, 7), 0);
+        // A second worker reports; gauge deltas compose.
+        m.record_prefix_events(&ev(1, 1, 16, 0, 4), 0);
+        // First worker shrinks its cache from 7 to 5 pages.
+        m.record_prefix_events(&ev(0, 0, 0, 1, 5), 7);
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        assert_eq!(parsed.path("prefix_cache.hits").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(parsed.path("prefix_cache.misses").unwrap().as_f64().unwrap(), 2.0);
+        let rate = parsed.path("prefix_cache.hit_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 4.0 / 6.0).abs() < 1e-9);
+        assert_eq!(
+            parsed.path("prefix_cache.tokens_reused").unwrap().as_f64().unwrap(),
+            112.0
+        );
+        assert_eq!(
+            parsed.path("prefix_cache.evicted_nodes").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        assert_eq!(
+            parsed.path("prefix_cache.cached_pages").unwrap().as_f64().unwrap(),
+            9.0
+        );
     }
 }

@@ -82,6 +82,8 @@ pub struct GenResponse {
     pub cache_bytes: usize,
     /// Achieved compression ratio vs fp16.
     pub compression_ratio: f64,
+    /// Prompt tokens served from the prefix cache instead of prefilled.
+    pub reused_tokens: usize,
     pub method: String,
 }
 
@@ -96,6 +98,7 @@ impl GenResponse {
             ("method", Json::str(self.method.clone())),
             ("cache_bytes", Json::num(self.cache_bytes as f64)),
             ("compression_ratio", Json::num(self.compression_ratio)),
+            ("reused_tokens", Json::num(self.reused_tokens as f64)),
             ("prefill_s", Json::num(self.timing.prefill_s)),
             ("decode_s", Json::num(self.timing.decode_s)),
             ("ttft_s", Json::num(self.timing.ttft_s)),
@@ -158,11 +161,13 @@ mod tests {
             timing: Timing { total_s: 1.5, ..Default::default() },
             cache_bytes: 1024,
             compression_ratio: 0.24,
+            reused_tokens: 48,
             method: "polarquant".into(),
         };
         let j = resp.to_json();
         assert_eq!(j.get("id").unwrap().as_f64().unwrap(), 7.0);
         let parsed = Json::parse(&j.encode()).unwrap();
         assert_eq!(parsed.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(parsed.get("reused_tokens").unwrap().as_f64().unwrap(), 48.0);
     }
 }

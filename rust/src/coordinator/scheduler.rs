@@ -13,6 +13,7 @@
 
 use crate::coordinator::request::{GenRequest, GenResponse, Timing, Tracked};
 use crate::kvcache::paged::PagedPool;
+use crate::prefix::{NodeId, PrefixConfig, RadixPrefixCache};
 use std::time::Instant;
 
 /// One active sequence's scheduler state.
@@ -26,6 +27,10 @@ pub struct ActiveSeq {
     pub ttft_s: Option<f64>,
     pub decode_s: f64,
     pub engine_id: u64,
+    /// Prompt tokens the engine reused from the prefix cache.
+    pub reused_tokens: usize,
+    /// Radix node pinned for this sequence's lifetime.
+    pub prefix_node: Option<NodeId>,
 }
 
 /// What the engine must provide: prefill a sequence (returning its first
@@ -33,6 +38,21 @@ pub struct ActiveSeq {
 pub trait StepEngine {
     /// Prefill; returns (engine sequence id, first sampled token).
     fn prefill(&mut self, req: &GenRequest) -> (u64, u32);
+    /// Prefill with a prefix-cache hint: the scheduler matched the first
+    /// `reuse_tokens` of the prompt in its radix cache and asks the engine
+    /// to skip recomputing them if it can, and to snapshot the first
+    /// `store_tokens` (the page-aligned prompt) for future reuse. Returns
+    /// (engine id, first token, tokens actually reused) — engines without
+    /// a reuse path fall back to a full prefill.
+    fn prefill_reuse(
+        &mut self,
+        req: &GenRequest,
+        _reuse_tokens: usize,
+        _store_tokens: usize,
+    ) -> (u64, u32, usize) {
+        let (id, first) = self.prefill(req);
+        (id, first, 0)
+    }
     /// One decode step; returns the next token.
     fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32;
     /// Cache footprint in bytes for accounting (0 if unknown).
@@ -41,6 +61,31 @@ pub trait StepEngine {
     fn compression_ratio(&self, engine_id: u64) -> f64;
     /// Release resources.
     fn release(&mut self, engine_id: u64);
+}
+
+/// A passed admission gate from [`Scheduler::gate_request`]: the serving
+/// loop gates each batch candidate (accumulating `pages` into the
+/// pending total), admits the batch, then releases every gate. While a
+/// gate is held, its matched radix path cannot be evicted, which is what
+/// makes the gate's promise sound: a gated request's page reservation in
+/// `admit` cannot fail.
+#[derive(Debug)]
+pub struct AdmitGate {
+    /// Fresh pool pages the request will consume (prefix-credited).
+    pub pages: usize,
+    pinned: Option<NodeId>,
+}
+
+/// Prefix-cache activity since the last [`Scheduler::take_prefix_events`]
+/// drain, for the metrics hub.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixEvents {
+    pub hits: u64,
+    pub misses: u64,
+    pub tokens_reused: u64,
+    pub evicted_nodes: u64,
+    /// Absolute gauge (not a delta): pool pages the cache holds now.
+    pub cached_pages: usize,
 }
 
 /// Scheduler outcome of one `step`.
@@ -58,38 +103,192 @@ pub struct Scheduler {
     pub pool: PagedPool,
     /// Max sequences decoding simultaneously.
     pub max_active: usize,
+    /// Optional radix-tree prefix cache over the pool's pages.
+    pub prefix: Option<RadixPrefixCache>,
+    events: PrefixEvents,
+    reported_evictions: u64,
 }
 
 impl Scheduler {
     pub fn new(pool: PagedPool, max_active: usize) -> Self {
-        Self { active: Vec::new(), pool, max_active }
+        Self {
+            active: Vec::new(),
+            pool,
+            max_active,
+            prefix: None,
+            events: PrefixEvents::default(),
+            reported_evictions: 0,
+        }
     }
 
-    /// Can we admit a request of this prompt length right now?
+    /// A scheduler with the radix-tree prefix cache enabled; the cache may
+    /// keep up to `cache_pages` of the pool referenced for reuse.
+    pub fn with_prefix_cache(pool: PagedPool, max_active: usize, cache_pages: usize) -> Self {
+        let cfg = PrefixConfig { page_tokens: pool.cfg.page_tokens, max_pages: cache_pages };
+        let mut s = Self::new(pool, max_active);
+        s.prefix = Some(RadixPrefixCache::new(cfg));
+        s
+    }
+
+    /// Can a request of this prompt length be admitted right now, without
+    /// touching any state? Conservative: a `true` here guarantees the
+    /// page reservation in [`admit`](Self::admit) succeeds. It does not
+    /// count cache-held pages — use
+    /// [`gate_request`](Self::gate_request) to also credit prefix hits
+    /// and evict cold cache entries to make the room.
     pub fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
         self.active.len() < self.max_active && self.pool.can_admit(prompt_len + max_new)
     }
 
+    /// Gate one request for admission: make room for it (evicting cold,
+    /// freeable cache entries only when that covers the shortfall) and,
+    /// on success, return an [`AdmitGate`] carrying its prefix-credited
+    /// page demand plus a pin on the matched radix path. The caller
+    /// accumulates `pages` into `pending_pages` for subsequent gate
+    /// calls and releases every gate after the batch is admitted.
+    pub fn gate_request(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        pending_seqs: usize,
+        pending_pages: usize,
+    ) -> Option<AdmitGate> {
+        if self.active.len() + pending_seqs >= self.max_active {
+            return None;
+        }
+        let need = self.pool.pages_for(prompt.len() + max_new);
+        // Credit the longest cached prefix: matched pages are shared into
+        // the block table, not allocated — and pinning them here keeps
+        // later gate evictions (and earlier admits' budget trims) from
+        // destroying the very entry this request is about to hit.
+        let (credit, pinned) = match &mut self.prefix {
+            Some(pc) => {
+                let m = pc.match_prefix(prompt);
+                if let Some(n) = m.node {
+                    pc.pin(n);
+                }
+                (m.pages.len(), m.node)
+            }
+            None => (0, None),
+        };
+        let fresh = need.saturating_sub(credit);
+        let want = fresh + pending_pages;
+        if want > self.pool.free_pages() {
+            if let Some(pc) = &mut self.prefix {
+                // All-or-nothing: a request the cache cannot make room
+                // for must not destroy reusable entries while failing.
+                let short = want - self.pool.free_pages();
+                pc.make_room(&mut self.pool, short);
+            }
+        }
+        if want <= self.pool.free_pages() {
+            Some(AdmitGate { pages: fresh, pinned })
+        } else {
+            if let (Some(pc), Some(n)) = (&mut self.prefix, pinned) {
+                pc.unpin(n);
+            }
+            None
+        }
+    }
+
+    /// Drop a gate's pin after the batch it guarded has been admitted.
+    pub fn release_gate(&mut self, gate: AdmitGate) {
+        if let (Some(pc), Some(n)) = (&mut self.prefix, gate.pinned) {
+            pc.unpin(n);
+        }
+    }
+
     /// Admit a batch of requests (runs their prefills through the engine).
+    /// With the prefix cache enabled, each request first matches its
+    /// longest cached prefix: matched pages are shared into the new block
+    /// table (copy-on-write) and the engine is asked to skip recomputing
+    /// them; afterwards the prompt is inserted so later requests can reuse
+    /// it, and the matched path stays pinned until the sequence retires.
     pub fn admit<E: StepEngine>(&mut self, batch: Vec<Tracked>, engine: &mut E) -> usize {
         let mut n = 0;
         for t in batch {
             let now = Instant::now();
             let queue_s = now.duration_since(t.arrived).as_secs_f64();
             let prompt_len = t.req.prompt.len();
+            let total = prompt_len + t.req.max_new_tokens;
+
+            // Longest cached prefix (page-granular); pin it so eviction
+            // below cannot drop the matched pages mid-admission.
+            let (m_pages, m_tokens, m_node) = match &mut self.prefix {
+                Some(pc) => {
+                    let m = pc.match_prefix(&t.req.prompt);
+                    if let Some(nid) = m.node {
+                        pc.pin(nid);
+                    }
+                    (m.pages, m.tokens, m.node)
+                }
+                None => (Vec::new(), 0, None),
+            };
+
+            // Make room by evicting cache entries — only if that can
+            // actually cover the shortfall (all-or-nothing).
+            let fresh_needed = self.pool.pages_for(total).saturating_sub(m_pages.len());
+            if fresh_needed > self.pool.free_pages() {
+                if let Some(pc) = &mut self.prefix {
+                    let short = fresh_needed - self.pool.free_pages();
+                    pc.make_room(&mut self.pool, short);
+                }
+            }
+
             // Reserve pages for prompt + full generation budget up front
-            // (conservative admission → fewer preemptions).
+            // (conservative admission → fewer preemptions), sharing the
+            // matched prefix pages.
             if self
                 .pool
-                .register(t.req.id, prompt_len + t.req.max_new_tokens)
+                .register_with_prefix(t.req.id, &m_pages, total)
                 .is_err()
             {
+                if let (Some(pc), Some(nid)) = (&mut self.prefix, m_node) {
+                    pc.unpin(nid);
+                }
                 // Shouldn't happen if can_admit was checked; skip.
                 continue;
             }
+
+            let store_tokens = if self.prefix.is_some() {
+                prompt_len - prompt_len % self.pool.cfg.page_tokens
+            } else {
+                0
+            };
             let t0 = Instant::now();
-            let (engine_id, first) = engine.prefill(&t.req);
+            let (engine_id, first, reused) = if self.prefix.is_some() {
+                engine.prefill_reuse(&t.req, m_tokens, store_tokens)
+            } else {
+                let (id, f) = engine.prefill(&t.req);
+                (id, f, 0)
+            };
             let prefill_s = t0.elapsed().as_secs_f64();
+
+            // Publish this prompt for future requests; the pin moves from
+            // the matched node to the (deeper) inserted leaf.
+            let mut prefix_node = None;
+            if let Some(pc) = &mut self.prefix {
+                let leaf = pc.insert(&t.req.prompt, &mut self.pool, t.req.id);
+                if let Some(l) = leaf {
+                    pc.pin(l);
+                }
+                if let Some(nid) = m_node {
+                    pc.unpin(nid);
+                }
+                prefix_node = leaf;
+                // A hit means the engine actually skipped prefill work; a
+                // radix match whose KV snapshot was unavailable (evicted,
+                // or suffix too short to reuse) counts as a miss so
+                // hit_rate tracks real latency wins.
+                if reused > 0 {
+                    self.events.hits += 1;
+                } else {
+                    self.events.misses += 1;
+                }
+                self.events.tokens_reused += reused as u64;
+                pc.enforce_budget(&mut self.pool);
+            }
+
             let done = Instant::now();
             self.active.push(ActiveSeq {
                 queue_s,
@@ -100,11 +299,25 @@ impl Scheduler {
                 ttft_s: Some(done.duration_since(t.arrived).as_secs_f64()),
                 decode_s: 0.0,
                 engine_id,
+                reused_tokens: reused,
+                prefix_node,
                 req: t.req,
             });
             n += 1;
         }
         n
+    }
+
+    /// Drain prefix-cache activity since the last call (for metrics).
+    pub fn take_prefix_events(&mut self) -> PrefixEvents {
+        let mut ev = std::mem::take(&mut self.events);
+        if let Some(pc) = &self.prefix {
+            let total = pc.stats().evicted_nodes;
+            ev.evicted_nodes = total - self.reported_evictions;
+            self.reported_evictions = total;
+            ev.cached_pages = pc.cached_pages();
+        }
+        ev
     }
 
     /// Run one decode round over all active sequences; collect finished.
@@ -139,9 +352,11 @@ impl Scheduler {
                 },
                 cache_bytes: engine.cache_bytes(seq.engine_id),
                 compression_ratio: engine.compression_ratio(seq.engine_id),
+                reused_tokens: seq.reused_tokens,
                 method: seq.req.method.clone(),
             };
             engine.release(seq.engine_id);
+            self.retire_prefix_pin(&seq);
             self.pool.release(seq.req.id).ok();
             outcome.finished.push(resp);
         }
@@ -153,8 +368,15 @@ impl Scheduler {
     pub fn preempt_newest<E: StepEngine>(&mut self, engine: &mut E) -> Option<GenRequest> {
         let seq = self.active.pop()?;
         engine.release(seq.engine_id);
+        self.retire_prefix_pin(&seq);
         self.pool.release(seq.req.id).ok();
         Some(seq.req)
+    }
+
+    fn retire_prefix_pin(&mut self, seq: &ActiveSeq) {
+        if let (Some(pc), Some(nid)) = (&mut self.prefix, seq.prefix_node) {
+            pc.unpin(nid);
+        }
     }
 }
 
@@ -164,13 +386,15 @@ mod tests {
     use crate::kvcache::paged::PagedConfig;
     use std::collections::BTreeMap;
 
-    /// Mock engine: next token = last + 1; tracks live sequences.
+    /// Mock engine: next token = last + 1; tracks live sequences and the
+    /// reuse hints it was given (reusing everything the scheduler offers).
     #[derive(Default)]
     struct MockEngine {
         next_id: u64,
         live: BTreeMap<u64, usize>,
         prefills: usize,
         decodes: usize,
+        reuse_hints: Vec<usize>,
     }
 
     impl StepEngine for MockEngine {
@@ -179,6 +403,16 @@ mod tests {
             self.live.insert(self.next_id, req.prompt.len());
             self.prefills += 1;
             (self.next_id, 100)
+        }
+        fn prefill_reuse(
+            &mut self,
+            req: &GenRequest,
+            reuse_tokens: usize,
+            _store_tokens: usize,
+        ) -> (u64, u32, usize) {
+            self.reuse_hints.push(reuse_tokens);
+            let (id, first) = self.prefill(req);
+            (id, first, reuse_tokens)
         }
         fn decode(&mut self, _id: u64, last: u32, _pos: usize) -> u32 {
             self.decodes += 1;
@@ -266,6 +500,144 @@ mod tests {
         assert!(s.pool.used_pages() < used);
         assert_eq!(s.active.len(), 1);
         assert_eq!(e.live.len(), 1);
+    }
+
+    fn sched_prefix(pages: usize, max_active: usize, cache_pages: usize) -> Scheduler {
+        let pool = PagedPool::new(PagedConfig {
+            page_tokens: 4,
+            token_bytes: 8,
+            num_pages: pages,
+        });
+        Scheduler::with_prefix_cache(pool, max_active, cache_pages)
+    }
+
+    fn tracked_prompt(id: u64, prompt: Vec<u32>, max_new: usize) -> Tracked {
+        Tracked::new(GenRequest::new(id, prompt, max_new))
+    }
+
+    fn run_to_completion(s: &mut Scheduler, e: &mut MockEngine) -> Vec<GenResponse> {
+        let mut done = Vec::new();
+        while !s.active.is_empty() {
+            done.extend(s.decode_round(e).finished);
+        }
+        done
+    }
+
+    #[test]
+    fn prefix_hit_shares_pages_and_reports_reuse() {
+        let mut s = sched_prefix(16, 4, 16);
+        let mut e = MockEngine::default();
+        let prompt: Vec<u32> = vec![7; 12]; // 3 full pages
+        s.admit(vec![tracked_prompt(1, prompt.clone(), 4)], &mut e);
+        run_to_completion(&mut s, &mut e);
+        // Prompt pages stay cached after the sequence retires.
+        assert_eq!(s.pool.used_pages(), 3);
+
+        s.admit(vec![tracked_prompt(2, prompt.clone(), 4)], &mut e);
+        assert_eq!(e.reuse_hints, vec![0, 12], "cold miss then 3-page hit");
+        // Shared head: the new table starts with the cached pages.
+        let cached = s.prefix.as_mut().unwrap().match_prefix(&prompt).pages;
+        assert_eq!(s.pool.table(2).unwrap().pages[..3], cached[..]);
+        let resps = run_to_completion(&mut s, &mut e);
+        assert_eq!(resps[0].reused_tokens, 12);
+
+        let ev = s.take_prefix_events();
+        assert_eq!(ev.hits, 1);
+        assert_eq!(ev.misses, 1);
+        assert_eq!(ev.tokens_reused, 12);
+        assert_eq!(ev.cached_pages, 3);
+        // Drain is a delta: immediately draining again is empty.
+        let ev2 = s.take_prefix_events();
+        assert_eq!(ev2.hits + ev2.misses + ev2.tokens_reused, 0);
+    }
+
+    #[test]
+    fn admission_evicts_cold_cache_entries_for_room() {
+        let mut s = sched_prefix(8, 4, 100);
+        let mut e = MockEngine::default();
+        s.admit(vec![tracked_prompt(1, vec![1; 16], 4)], &mut e); // 5 pages
+        run_to_completion(&mut s, &mut e);
+        assert_eq!(s.pool.free_pages(), 4, "4 prompt pages cached");
+        // A different prompt needing 5 pages: the cold entry is evicted.
+        s.admit(vec![tracked_prompt(2, vec![2; 16], 4)], &mut e);
+        assert_eq!(s.active.len(), 1);
+        let ev = s.take_prefix_events();
+        assert!(ev.evicted_nodes >= 1);
+        assert_eq!(
+            s.prefix.as_mut().unwrap().match_prefix(&vec![1u32; 16]).tokens,
+            0,
+            "cold entry gone"
+        );
+    }
+
+    #[test]
+    fn active_sequence_pins_survive_eviction_pressure() {
+        let mut s = sched_prefix(8, 4, 100);
+        let mut e = MockEngine::default();
+        s.admit(vec![tracked_prompt(1, vec![1; 16], 4)], &mut e); // 5 pages, active
+        assert_eq!(s.pool.free_pages(), 3);
+        // Next request cannot fit and the only cache entry is pinned by
+        // the active sequence → admission skips it, nothing is broken.
+        let n = s.admit(vec![tracked_prompt(2, vec![2; 16], 4)], &mut e);
+        assert_eq!(n, 0);
+        assert_eq!(
+            s.prefix.as_mut().unwrap().match_prefix(&vec![1u32; 16]).tokens,
+            16,
+            "pinned pages survived the pressure"
+        );
+        // After the active sequence finishes, the same request fits.
+        run_to_completion(&mut s, &mut e);
+        let n = s.admit(vec![tracked_prompt(3, vec![2; 16], 4)], &mut e);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn gate_credits_prefix_hits_and_spares_their_entries() {
+        let mut s = sched_prefix(8, 4, 100);
+        let mut e = MockEngine::default();
+        let hot: Vec<u32> = vec![1; 16];
+        s.admit(vec![tracked_prompt(1, hot.clone(), 4)], &mut e); // 5 pages
+        // Active sequence pins its pages: no room to make for a stranger.
+        assert!(s.gate_request(&[2; 16], 4, 0, 0).is_none());
+        run_to_completion(&mut s, &mut e);
+        // Pool: 4 cached pages + 4 free. A request matching the cached
+        // head needs only 1 fresh page — gated WITHOUT evicting the very
+        // entry it is about to hit.
+        let g = s.gate_request(&hot, 4, 0, 0).expect("prefix-credited");
+        assert_eq!(g.pages, 1, "5 needed minus 4 matched");
+        assert_eq!(
+            s.prefix.as_mut().unwrap().match_prefix(&hot).tokens,
+            16,
+            "matched entry survives the gate"
+        );
+        s.release_gate(g);
+        // A non-matching request needs all 5 pages: now the cold entry
+        // does get evicted to make room.
+        let g2 = s.gate_request(&[2u32; 16], 4, 0, 0).expect("room made");
+        assert_eq!(g2.pages, 5);
+        s.release_gate(g2);
+        assert_eq!(
+            s.prefix.as_mut().unwrap().match_prefix(&hot).tokens,
+            0,
+            "cold entry evicted for the stranger"
+        );
+        // Batch-aware: pending pages count against free space.
+        assert!(s.gate_request(&[3u32; 16], 4, 1, 5).is_none());
+        // The max_active bound is respected including pending seqs.
+        assert!(s.gate_request(&[3u32; 16], 4, 4, 0).is_none());
+    }
+
+    #[test]
+    fn identical_prompt_hit_caps_at_page_granularity() {
+        let mut s = sched_prefix(32, 4, 32);
+        let mut e = MockEngine::default();
+        let prompt: Vec<u32> = (0..14).collect(); // 3 full pages + 2 spare
+        s.admit(vec![tracked_prompt(1, prompt.clone(), 4)], &mut e);
+        run_to_completion(&mut s, &mut e);
+        s.admit(vec![tracked_prompt(2, prompt.clone(), 4)], &mut e);
+        // Only the 12 page-aligned tokens can match; the partial page is
+        // always re-prefetched.
+        assert_eq!(e.reuse_hints, vec![0, 12]);
     }
 
     #[test]

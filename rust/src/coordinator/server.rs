@@ -37,6 +37,10 @@ pub struct ServerConfig {
     /// Page-pool size per worker, in tokens.
     pub pool_tokens: usize,
     pub max_active: usize,
+    /// Radix-tree prefix cache: shared system prompts / few-shot headers /
+    /// multi-turn histories skip re-prefill (and keep their quantized
+    /// pages resident) across requests on the same worker.
+    pub prefix_cache: bool,
 }
 
 impl Default for ServerConfig {
@@ -48,6 +52,7 @@ impl Default for ServerConfig {
             batch: BatchPolicy::default(),
             pool_tokens: 1 << 16,
             max_active: 8,
+            prefix_cache: true,
         }
     }
 }
@@ -168,12 +173,20 @@ fn worker_loop(
     let weights = Weights::synthetic(&cfg.model, cfg.seed);
     let mut engine = NativeWorker::new(weights);
     let mut batcher = Batcher::new(cfg.batch.clone());
+    let num_pages = cfg.pool_tokens / 16;
     let pool = PagedPool::new(PagedConfig {
         page_tokens: 16,
         token_bytes: cfg.model.kv_bytes_per_token_fp16(),
-        num_pages: cfg.pool_tokens / 16,
+        num_pages,
     });
-    let mut sched = Scheduler::new(pool, cfg.max_active);
+    let mut sched = if cfg.prefix_cache {
+        // The cache may pin up to half the pool; admission evicts cold
+        // entries on demand, so this only bounds steady-state residency.
+        Scheduler::with_prefix_cache(pool, cfg.max_active, num_pages / 2)
+    } else {
+        Scheduler::new(pool, cfg.max_active)
+    };
+    let mut reported_cached_pages = 0usize;
 
     loop {
         // Drain the inbox (non-blocking when busy, blocking when idle).
@@ -199,14 +212,38 @@ fn worker_loop(
             }
         }
 
-        // Admit when the batcher releases and capacity allows.
+        // Admit when the batcher releases and capacity allows. The gate
+        // makes room (evicting only cold, freeable prefix-cache entries,
+        // with prefix-hit pages credited and pinned), and accounts for
+        // earlier members of the same batch — so `admit`'s page
+        // reservations cannot fail for a gated request.
         if batcher.ready(Instant::now()) || (!batcher.is_empty() && sched.active.is_empty()) {
+            let mut pending = (0usize, 0usize); // (seqs, pages) gated so far
+            let mut gates = Vec::new();
             let batch = batcher.next_batch(|t| {
-                sched.can_admit(t.req.prompt.len(), t.req.max_new_tokens)
+                match sched.gate_request(
+                    &t.req.prompt,
+                    t.req.max_new_tokens,
+                    pending.0,
+                    pending.1,
+                ) {
+                    Some(g) => {
+                        pending.0 += 1;
+                        pending.1 += g.pages;
+                        gates.push(g);
+                        true
+                    }
+                    None => false,
+                }
             });
-            if !batch.is_empty() {
+            let admitted_any = !batch.is_empty();
+            if admitted_any {
                 sched.admit(batch, &mut engine);
-            } else if sched.active.is_empty() && !batcher.is_empty() {
+            }
+            for g in gates {
+                sched.release_gate(g);
+            }
+            if !admitted_any && sched.active.is_empty() && !batcher.is_empty() {
                 // Head request cannot fit even an empty pool → reject it.
                 let dropped = batcher.next_batch(|_| true);
                 for t in dropped {
@@ -217,6 +254,7 @@ fn worker_loop(
                         timing: Default::default(),
                         cache_bytes: 0,
                         compression_ratio: 1.0,
+                        reused_tokens: 0,
                         method: t.req.method,
                     };
                     let _ = resp_tx.send((worker_idx, resp));
@@ -224,11 +262,24 @@ fn worker_loop(
             }
         }
 
+        // Fold prefix-cache activity into the hub every tick — gate
+        // evictions happen even when nothing was admitted, and the
+        // cached_pages gauge must not go stale while traffic is idle.
+        let ev = sched.take_prefix_events();
+        metrics.record_prefix_events(&ev, reported_cached_pages);
+        reported_cached_pages = ev.cached_pages;
+
         // One decode round.
         if !sched.active.is_empty() {
             let outcome = sched.decode_round(&mut engine);
             for resp in outcome.finished {
                 metrics.record_done(&resp.timing, resp.tokens.len());
+                // `tokens_prefilled` was bumped by the full prompt at
+                // submit; settle it down to what was actually prefilled
+                // now that the reuse count is known.
+                metrics
+                    .tokens_prefilled
+                    .fetch_sub(resp.reused_tokens as u64, Ordering::Relaxed);
                 metrics
                     .cache_bytes
                     .store(engine.total_cache_bytes() as u64, Ordering::Relaxed);
@@ -308,6 +359,7 @@ mod tests {
             batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
             pool_tokens: 4096,
             max_active: 4,
+            prefix_cache: true,
         })
     }
 
@@ -352,11 +404,70 @@ mod tests {
             batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
             pool_tokens: 64, // tiny pool
             max_active: 4,
+            prefix_cache: true,
         });
         let req = GenRequest::new(0, vec![1; 512], 4);
         let resp = s.generate_blocking(req, Duration::from_secs(30)).expect("reply");
         assert!(resp.tokens.is_empty(), "rejected requests return no tokens");
         assert_eq!(s.metrics.requests_rejected.load(Ordering::Relaxed), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shared_prefix_requests_report_reuse() {
+        let s = test_server(1);
+        // 48-token shared head (3 full 16-token pages), distinct tails.
+        let head: Vec<u32> = (0..48).map(|x| (x * 5 + 2) % 64).collect();
+        let mk = |tail_seed: u32| {
+            let mut p = head.clone();
+            p.extend((0..32).map(|x| (x * 3 + tail_seed) % 64));
+            let mut req = GenRequest::new(0, p, 4);
+            req.session = Some("conv-1".into());
+            req
+        };
+        // 1st sighting: cold. 2nd: radix hit, but the engine only now
+        // snapshots the repeating head (no copy for one-off prompts).
+        // 3rd: the head is replayed from the snapshot.
+        let r1 = s.generate_blocking(mk(7), Duration::from_secs(60)).expect("r1");
+        assert_eq!(r1.reused_tokens, 0, "cold cache");
+        let r2 = s.generate_blocking(mk(19), Duration::from_secs(60)).expect("r2");
+        assert_eq!(r2.reused_tokens, 0, "head seen twice: snapshotted, not yet replayed");
+        let r3 = s.generate_blocking(mk(31), Duration::from_secs(60)).expect("r3");
+        assert_eq!(r3.reused_tokens, 48, "3 shared pages replayed");
+        assert_eq!(r1.tokens.len(), r3.tokens.len());
+
+        let snap = s.metrics.snapshot();
+        let parsed = Json::parse(&snap.encode()).unwrap();
+        assert_eq!(parsed.path("prefix_cache.hits").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(parsed.path("prefix_cache.misses").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(
+            parsed.path("prefix_cache.tokens_reused").unwrap().as_f64().unwrap(),
+            48.0
+        );
+        assert!(parsed.path("prefix_cache.cached_pages").unwrap().as_f64().unwrap() > 0.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn prefix_cache_disabled_never_reuses() {
+        let s = Server::start(ServerConfig {
+            model: ModelConfig::test(),
+            seed: 3,
+            workers: 1,
+            batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+            pool_tokens: 4096,
+            max_active: 4,
+            prefix_cache: false,
+        });
+        let prompt: Vec<u32> = (0..64).map(|x| x % 64).collect();
+        for _ in 0..2 {
+            let resp = s
+                .generate_blocking(GenRequest::new(0, prompt.clone(), 4), Duration::from_secs(60))
+                .expect("resp");
+            assert_eq!(resp.reused_tokens, 0);
+        }
+        let parsed = Json::parse(&s.metrics.snapshot().encode()).unwrap();
+        assert_eq!(parsed.path("prefix_cache.hits").unwrap().as_f64().unwrap(), 0.0);
         s.shutdown();
     }
 

@@ -1,21 +1,34 @@
 //! The worker: a [`StepEngine`] implementation backed by the native
 //! transformer + compressed per-sequence caches. One worker owns one model
 //! replica; the router spreads sequences across workers.
+//!
+//! The worker mirrors the scheduler's radix prefix cache with a
+//! materialized-KV snapshot store: page-aligned prompt prefixes map to
+//! their per-layer (RoPE-applied) K/V rows, so a radix hit turns into a
+//! [`Transformer::prefill_extend`] call that only runs the forward pass
+//! over the unseen suffix. Snapshots are content-addressed (token ids),
+//! method-independent (raw f32 rows, compressed per request afterwards),
+//! and LRU-evicted under a byte budget.
 
 use crate::coordinator::request::GenRequest;
 use crate::coordinator::scheduler::StepEngine;
 use crate::kvcache::sequence::{CacheConfig, SequenceCache};
 use crate::model::config::ModelConfig;
 use crate::model::sampler::Sampler;
-use crate::model::transformer::Transformer;
+use crate::model::transformer::{PastKv, PrefillOutput, Transformer, OBS_WINDOW};
 use crate::model::weights::Weights;
 use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Default byte budget for the prefix snapshot store (per worker).
+pub const PREFIX_STORE_DEFAULT_BYTES: usize = 64 << 20;
 
 /// Native-engine worker.
 pub struct NativeWorker {
     pub model: Transformer,
     next_id: u64,
     sessions: BTreeMap<u64, Session>,
+    prefix_store: PrefixKvStore,
 }
 
 struct Session {
@@ -23,9 +36,112 @@ struct Session {
     sampler: Sampler,
 }
 
+/// One cached prompt prefix: token ids + per-layer K/V rows.
+struct PrefixSnapshot {
+    tokens: Vec<u32>,
+    kv: Arc<Vec<PastKv>>,
+    bytes: usize,
+    last_use: u64,
+}
+
+/// Content-addressed store of prompt-prefix K/V snapshots.
+struct PrefixKvStore {
+    entries: Vec<PrefixSnapshot>,
+    clock: u64,
+    budget_bytes: usize,
+    bytes: usize,
+}
+
+impl PrefixKvStore {
+    fn new(budget_bytes: usize) -> Self {
+        Self { entries: Vec::new(), clock: 0, budget_bytes, bytes: 0 }
+    }
+
+    /// Is `tokens` already served by a stored snapshot (an entry at least
+    /// as long whose head matches)? Cheap pre-check so callers skip
+    /// materializing K/V copies that `insert` would discard.
+    fn covers(&self, tokens: &[u32]) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.tokens.len() >= tokens.len() && e.tokens[..tokens.len()] == *tokens)
+    }
+
+    /// Find a snapshot whose tokens start with `prefix` (any entry at
+    /// least as long works — `prefill_extend` truncates via `past_len`).
+    fn lookup(&mut self, prefix: &[u32]) -> Option<Arc<Vec<PastKv>>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self
+            .entries
+            .iter_mut()
+            .find(|e| e.tokens.len() >= prefix.len() && e.tokens[..prefix.len()] == *prefix)?;
+        e.last_use = clock;
+        Some(Arc::clone(&e.kv))
+    }
+
+    /// Insert a snapshot for `tokens`, deduplicating lineages: an entry
+    /// that is a prefix of `tokens` is replaced (the longer snapshot
+    /// serves both); if an existing entry already covers `tokens`, skip.
+    fn insert(&mut self, tokens: Vec<u32>, kv: Vec<PastKv>) {
+        if tokens.is_empty() || self.covers(&tokens) {
+            return;
+        }
+        self.clock += 1;
+        let bytes = kv
+            .iter()
+            .map(|l| (l.keys.len() + l.values.len()) * std::mem::size_of::<f32>())
+            .sum::<usize>()
+            + tokens.len() * std::mem::size_of::<u32>();
+        // A snapshot that alone exceeds the budget must not enter: the
+        // LRU loop below spares the newest entry, so admitting it would
+        // evict every other session's snapshot and still stay over
+        // budget — on every turn of that oversized conversation.
+        if bytes > self.budget_bytes {
+            return;
+        }
+        // Drop entries this one supersedes.
+        let clock = self.clock;
+        self.entries.retain(|e| {
+            let superseded =
+                e.tokens.len() < tokens.len() && tokens[..e.tokens.len()] == e.tokens[..];
+            !superseded
+        });
+        self.bytes = self.entries.iter().map(|e| e.bytes).sum();
+        self.entries.push(PrefixSnapshot {
+            tokens,
+            kv: Arc::new(kv),
+            bytes,
+            last_use: clock,
+        });
+        self.bytes += bytes;
+        // LRU eviction under the byte budget (never the entry just added).
+        while self.bytes > self.budget_bytes && self.entries.len() > 1 {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .take(self.entries.len() - 1)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .expect("non-empty");
+            let gone = self.entries.remove(lru);
+            self.bytes -= gone.bytes;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
 impl NativeWorker {
     pub fn new(weights: Weights) -> Self {
-        Self { model: Transformer::new(weights), next_id: 0, sessions: BTreeMap::new() }
+        Self {
+            model: Transformer::new(weights),
+            next_id: 0,
+            sessions: BTreeMap::new(),
+            prefix_store: PrefixKvStore::new(PREFIX_STORE_DEFAULT_BYTES),
+        }
     }
 
     pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
@@ -40,22 +156,99 @@ impl NativeWorker {
         self.sessions.len()
     }
 
+    /// Cap the prefix snapshot store (0 disables engine-side reuse).
+    pub fn set_prefix_store_budget(&mut self, bytes: usize) {
+        self.prefix_store.budget_bytes = bytes;
+    }
+
+    /// Snapshots currently held by the prefix store.
+    pub fn prefix_store_entries(&self) -> usize {
+        self.prefix_store.len()
+    }
+
     /// Total cache bytes across live sessions (for metrics/backpressure).
     pub fn total_cache_bytes(&self) -> usize {
         self.sessions.values().map(|s| s.cache.memory_bytes()).sum()
+    }
+
+    /// Shared tail of both prefill paths: compress the prefill output into
+    /// a per-sequence cache and sample the first token.
+    fn finish_prefill(&mut self, req: &GenRequest, pre: &PrefillOutput) -> (u64, u32) {
+        let cache_cfg = CacheConfig::new(&req.method, req.ratio);
+        let cache = SequenceCache::from_prefill(&self.model.cfg, &cache_cfg, pre);
+        let mut sampler = Sampler::new(req.sampler.clone());
+        let first = sampler.sample(pre.last_logits(self.model.cfg.vocab));
+        self.next_id += 1;
+        self.sessions.insert(self.next_id, Session { cache, sampler });
+        (self.next_id, first)
+    }
+
+    /// Snapshot the first `n` prompt tokens' K/V rows out of a prefill.
+    fn snapshot_prefix(&mut self, tokens: &[u32], pre: &PrefillOutput, n: usize) {
+        if n == 0 || self.prefix_store.budget_bytes == 0 || n > pre.seq_len {
+            return;
+        }
+        // Skip the (large) K/V copy when an existing snapshot already
+        // covers this prefix — the steady state for shared-prefix traffic.
+        if self.prefix_store.covers(&tokens[..n]) {
+            return;
+        }
+        let hd = self.model.cfg.n_heads * self.model.cfg.head_dim;
+        let kv: Vec<PastKv> = pre
+            .kv
+            .iter()
+            .map(|l| PastKv {
+                keys: l.keys[..n * hd].to_vec(),
+                values: l.values[..n * hd].to_vec(),
+            })
+            .collect();
+        self.prefix_store.insert(tokens[..n].to_vec(), kv);
     }
 }
 
 impl StepEngine for NativeWorker {
     fn prefill(&mut self, req: &GenRequest) -> (u64, u32) {
         let pre = self.model.prefill(&req.prompt);
-        let cache_cfg = CacheConfig::new(&req.method, req.ratio);
-        let cache = SequenceCache::from_prefill(&self.model.cfg, &cache_cfg, &pre);
-        let mut sampler = Sampler::new(req.sampler.clone());
-        let first = sampler.sample(pre.last_logits(self.model.cfg.vocab));
-        self.next_id += 1;
-        self.sessions.insert(self.next_id, Session { cache, sampler });
-        (self.next_id, first)
+        self.finish_prefill(req, &pre)
+    }
+
+    fn prefill_reuse(
+        &mut self,
+        req: &GenRequest,
+        reuse_tokens: usize,
+        store_tokens: usize,
+    ) -> (u64, u32, usize) {
+        let prompt = &req.prompt;
+        // The reuse path needs a non-empty suffix (for logits + first
+        // sample) long enough to carry the observation window that
+        // score-based eviction methods read at compression time. Rather
+        // than abandoning reuse when the hint leaves a shorter suffix
+        // (short follow-up turns, exact prompt repeats), clamp the reuse
+        // point back — snapshots serve any prefix of their tokens.
+        let reuse = reuse_tokens.min(prompt.len().saturating_sub(OBS_WINDOW));
+        let mut reused = 0;
+        let mut pre: Option<PrefillOutput> = None;
+        if reuse > 0 {
+            if let Some(past) = self.prefix_store.lookup(&prompt[..reuse]) {
+                let out = self.model.prefill_extend(past.as_slice(), reuse, &prompt[reuse..]);
+                reused = reuse;
+                pre = Some(out);
+            }
+        }
+        let pre = match pre {
+            Some(p) => p,
+            None => self.model.prefill(prompt),
+        };
+        // Snapshot only prefixes that demonstrably repeat: the
+        // scheduler's radix hint is nonzero from the second sighting of
+        // a prefix onward, so fully-unique traffic never pays the
+        // multi-megabyte K/V copy (at the cost of one extra cold prefill
+        // per repeating lineage before reuse kicks in).
+        if reuse_tokens > 0 {
+            self.snapshot_prefix(prompt, &pre, store_tokens);
+        }
+        let (id, first) = self.finish_prefill(req, &pre);
+        (id, first, reused)
     }
 
     fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32 {
@@ -138,6 +331,93 @@ mod tests {
         assert!(ratio < 0.4, "ratio {ratio}");
         let (eid2, _) = w.prefill(&req(2, "exact"));
         assert!(w.compression_ratio(eid2) > 0.9);
+    }
+
+    #[test]
+    fn prefill_reuse_matches_full_prefill_exactly() {
+        // The reuse path replays identical float ops → identical sampled
+        // tokens, for every cache method.
+        let prompt: Vec<u32> = (0..48).map(|i| (i * 11 + 3) % 64).collect();
+        for method in ["exact", "polarquant-r-offline", "snapkv"] {
+            let mut w_cold = worker();
+            let mut w_warm = worker();
+            let mut r = GenRequest::new(1, prompt.clone(), 4);
+            r.method = method.into();
+
+            let (ec, fc) = w_cold.prefill(&r);
+            // Warm path: a request whose prefix the scheduler has seen
+            // before (nonzero radix hint) snapshots the 32-token head; a
+            // later request with the same head reuses it.
+            let head = GenRequest::new(0, prompt[..32].to_vec(), 4);
+            let (_, _, r0) = w_warm.prefill_reuse(&head, 8, 32);
+            assert_eq!(r0, 0, "nothing stored to reuse yet");
+            assert_eq!(w_warm.prefix_store_entries(), 1);
+            let (ew, fw, rw) = w_warm.prefill_reuse(&r, 32, 48);
+            assert_eq!(rw, 32, "prefix served from the snapshot store");
+            assert_eq!(fc, fw, "first token identical ({method})");
+
+            let mut lc = fc;
+            let mut lw = fw;
+            for i in 0..4 {
+                lc = w_cold.decode(ec, lc, 48 + i);
+                lw = w_warm.decode(ew, lw, 48 + i);
+                assert_eq!(lc, lw, "decode step {i} identical ({method})");
+            }
+            assert_eq!(
+                w_cold.cache_bytes(ec),
+                w_warm.cache_bytes(ew),
+                "same compressed footprint ({method})"
+            );
+        }
+    }
+
+    #[test]
+    fn prefill_reuse_clamps_to_leave_observation_window() {
+        let prompt: Vec<u32> = (0..40).collect();
+        let mut w = worker();
+        let r = GenRequest::new(1, prompt.clone(), 4);
+        let (_, _, r0) = w.prefill_reuse(&r, 40, 40);
+        assert_eq!(r0, 0, "nothing stored yet: full prefill + snapshot");
+        // A 32-token hint would leave an 8-token suffix < OBS_WINDOW;
+        // reuse clamps back to 24 instead of being discarded.
+        let (_, _, r1) = w.prefill_reuse(&r.clone(), 32, 40);
+        assert_eq!(r1, 40 - OBS_WINDOW, "clamped, not abandoned");
+        // Exact prompt repeat (hint == prompt length) clamps the same way.
+        let (_, _, r2) = w.prefill_reuse(&r.clone(), 40, 40);
+        assert_eq!(r2, 40 - OBS_WINDOW);
+        // A hint already leaving ≥ OBS_WINDOW is used as-is.
+        let (_, _, r3) = w.prefill_reuse(&r.clone(), 16, 40);
+        assert_eq!(r3, 16);
+        // Outputs stay identical to a cold prefill.
+        let mut cold = worker();
+        let (ec, fc) = cold.prefill(&r);
+        let (ew, fw, _) = w.prefill_reuse(&r.clone(), 40, 40);
+        assert_eq!(fc, fw);
+        let (tc, tw) = (cold.decode(ec, fc, 40), w.decode(ew, fw, 40));
+        assert_eq!(tc, tw);
+    }
+
+    #[test]
+    fn prefix_store_dedupes_lineages_and_respects_budget() {
+        let mut w = worker();
+        let base: Vec<u32> = (0..32).collect();
+        let longer: Vec<u32> = (0..48).map(|i| i % 64).collect(); // extends base
+        let r1 = GenRequest::new(1, base.clone(), 4);
+        w.prefill_reuse(&r1, 32, 32); // repeating prefix → snapshot
+        assert_eq!(w.prefix_store_entries(), 1);
+        // A prompt extending the first replaces its snapshot.
+        let r2 = GenRequest::new(2, longer.clone(), 4);
+        w.prefill_reuse(&r2, 32, 48);
+        assert_eq!(w.prefix_store_entries(), 1, "lineage collapsed to the longest");
+        // Re-submitting the shorter prefix is served by the longer entry.
+        let r3 = GenRequest::new(3, base.iter().cloned().chain(100..132).collect(), 4);
+        let (_, _, reused) = w.prefill_reuse(&r3, 32, 64);
+        assert_eq!(reused, 32);
+        // Zero budget disables snapshotting entirely.
+        let mut w2 = worker();
+        w2.set_prefix_store_budget(0);
+        w2.prefill_reuse(&GenRequest::new(9, base, 4), 32, 32);
+        assert_eq!(w2.prefix_store_entries(), 0);
     }
 
     #[test]

@@ -254,6 +254,97 @@ impl ServingWorkload {
     }
 }
 
+/// Shared-prefix serving workload: a tunable fraction of requests open
+/// with one of a small set of fixed shared prefixes (system prompts /
+/// few-shot headers), the rest are fully unique — the traffic shape the
+/// radix prefix cache is built for.
+pub struct PrefixWorkload {
+    rng: Pcg64,
+    vocab: usize,
+    pub prefix_len: usize,
+    pub suffix_len: usize,
+    /// Probability a request reuses a shared prefix.
+    pub shared_fraction: f64,
+    prefixes: Vec<Vec<u32>>,
+}
+
+impl PrefixWorkload {
+    pub fn new(
+        vocab: usize,
+        n_prefixes: usize,
+        prefix_len: usize,
+        suffix_len: usize,
+        shared_fraction: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(vocab > 16 && n_prefixes > 0);
+        assert!((0.0..=1.0).contains(&shared_fraction));
+        let mut rng = Pcg64::new(seed ^ 0x505746); // "PWF"
+        let prefixes = (0..n_prefixes)
+            .map(|_| {
+                (0..prefix_len)
+                    .map(|_| 16 + rng.next_below((vocab - 16) as u64) as u32)
+                    .collect()
+            })
+            .collect();
+        Self { rng, vocab, prefix_len, suffix_len, shared_fraction, prefixes }
+    }
+
+    fn fresh(&mut self, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|_| 16 + self.rng.next_below((self.vocab - 16) as u64) as u32)
+            .collect()
+    }
+
+    /// Next prompt; `true` when it opens with a shared prefix.
+    pub fn next_prompt(&mut self) -> (Vec<u32>, bool) {
+        let shared = self.rng.next_f64() < self.shared_fraction;
+        let mut p = if shared {
+            let i = self.rng.next_below(self.prefixes.len() as u64) as usize;
+            self.prefixes[i].clone()
+        } else {
+            self.fresh(self.prefix_len)
+        };
+        let suffix = self.fresh(self.suffix_len);
+        p.extend(suffix);
+        (p, shared)
+    }
+}
+
+/// Multi-turn chat transcript: every turn's prompt is the whole history
+/// (system prompt + all prior turns and responses) plus the new user
+/// message — so each turn re-submits a strictly growing shared prefix.
+pub struct ChatSession {
+    pub transcript: Vec<u32>,
+    rng: Pcg64,
+    vocab: usize,
+}
+
+impl ChatSession {
+    pub fn new(vocab: usize, system_len: usize, seed: u64) -> Self {
+        assert!(vocab > 16);
+        let mut rng = Pcg64::new(seed ^ 0x434853); // "CHS"
+        let transcript = (0..system_len)
+            .map(|_| 16 + rng.next_below((vocab - 16) as u64) as u32)
+            .collect();
+        Self { transcript, rng, vocab }
+    }
+
+    /// Append a user turn of `n` tokens; returns the full prompt to send.
+    pub fn user_turn(&mut self, n: usize) -> Vec<u32> {
+        for _ in 0..n {
+            self.transcript
+                .push(16 + self.rng.next_below((self.vocab - 16) as u64) as u32);
+        }
+        self.transcript.clone()
+    }
+
+    /// Record the model's response so the next turn extends it.
+    pub fn note_response(&mut self, tokens: &[u32]) {
+        self.transcript.extend_from_slice(tokens);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,5 +424,40 @@ mod tests {
         let mut a = KvGenerator::new(KvGenConfig::realistic(32, 9));
         let mut b = KvGenerator::new(KvGenConfig::realistic(32, 9));
         assert_eq!(a.block(4).keys, b.block(4).keys);
+    }
+
+    #[test]
+    fn prefix_workload_shares_heads_at_given_rate() {
+        let mut w = PrefixWorkload::new(1024, 2, 64, 32, 0.9, 5);
+        let mut shared = 0;
+        let mut heads = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            let (p, s) = w.next_prompt();
+            assert_eq!(p.len(), 96);
+            assert!(p.iter().all(|&t| (16..1024).contains(&(t as usize))));
+            if s {
+                shared += 1;
+                heads.insert(p[..64].to_vec());
+            }
+        }
+        assert!((150..=200).contains(&shared), "≈90% shared, got {shared}");
+        assert!(heads.len() <= 2, "only 2 distinct shared prefixes");
+        // 0% sharing never reuses a head.
+        let mut w0 = PrefixWorkload::new(1024, 2, 64, 32, 0.0, 6);
+        for _ in 0..20 {
+            assert!(!w0.next_prompt().1);
+        }
+    }
+
+    #[test]
+    fn chat_session_grows_monotone_prefix() {
+        let mut c = ChatSession::new(1024, 48, 7);
+        let p1 = c.user_turn(32);
+        assert_eq!(p1.len(), 80);
+        c.note_response(&[20, 21, 22]);
+        let p2 = c.user_turn(32);
+        assert_eq!(p2.len(), 80 + 3 + 32);
+        assert_eq!(p2[..80], p1[..], "turn 2 extends turn 1's full prompt");
+        assert_eq!(p2[80..83], [20, 21, 22]);
     }
 }

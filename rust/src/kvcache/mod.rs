@@ -2,7 +2,8 @@
 //!
 //! * [`paged`] — a vLLM-style paged pool (fixed-size pages, free list,
 //!   per-sequence block tables, copy-on-write ref counts) used by the
-//!   coordinator for generation-tail storage and admission control.
+//!   coordinator for generation-tail storage and admission control, and
+//!   by [`crate::prefix`] for cross-request shared-prefix pages.
 //! * [`sequence`] — per-sequence cache: one [`CompressedKv`] per
 //!   (layer, head), built from prefill output by any compression method.
 //! * [`accounting`] — memory bookkeeping that regenerates the paper's §4

@@ -47,6 +47,8 @@ impl BlockTable {
 pub enum PoolError {
     OutOfPages,
     UnknownSequence,
+    /// A shared-page handle referenced a page that is not allocated.
+    BadSharedPage,
 }
 
 /// The pool: backing storage + free list + per-sequence block tables +
@@ -91,36 +93,23 @@ impl PagedPool {
 
     /// Register a sequence and allocate pages for its prefill length.
     pub fn register(&mut self, seq: u64, tokens: usize) -> Result<(), PoolError> {
-        let need = self.pages_for(tokens);
-        if need > self.free.len() {
-            return Err(PoolError::OutOfPages);
-        }
-        let mut table = BlockTable::default();
-        for _ in 0..need {
-            let p = self.free.pop().unwrap();
-            self.refcount[p as usize] = 1;
-            table.pages.push(p);
-        }
-        table.last_fill = if tokens == 0 {
-            0
-        } else {
-            let rem = tokens % self.cfg.page_tokens;
-            if rem == 0 {
-                self.cfg.page_tokens
-            } else {
-                rem
-            }
-        };
-        self.tables.insert(seq, table);
-        Ok(())
+        self.register_with_prefix(seq, &[], tokens)
     }
 
     /// Append one token slot to a sequence, allocating a page on boundary.
+    /// If the last page is shared (prefix fork / prefix-cache reuse) it is
+    /// made private first so the write cannot leak into other holders.
     pub fn append_token(&mut self, seq: u64) -> Result<(), PoolError> {
         // Determine if a new page is needed without holding a &mut borrow.
-        let needs_page = {
+        let (needs_page, last_shared) = {
             let table = self.tables.get(&seq).ok_or(PoolError::UnknownSequence)?;
-            table.pages.is_empty() || table.last_fill == self.cfg.page_tokens
+            let needs = table.pages.is_empty() || table.last_fill == self.cfg.page_tokens;
+            let shared = table
+                .pages
+                .last()
+                .map(|&p| self.refcount[p as usize] > 1)
+                .unwrap_or(false);
+            (needs, shared)
         };
         if needs_page {
             let p = self.free.pop().ok_or(PoolError::OutOfPages)?;
@@ -129,9 +118,97 @@ impl PagedPool {
             table.pages.push(p);
             table.last_fill = 1;
         } else {
+            if last_shared {
+                self.make_last_private(seq)?;
+            }
             let table = self.tables.get_mut(&seq).unwrap();
             table.last_fill += 1;
         }
+        Ok(())
+    }
+
+    /// Take an extra reference on an allocated page. Used by the prefix
+    /// cache to keep prompt pages resident after their sequence completes.
+    pub fn retain_page(&mut self, page: PageId) -> Result<(), PoolError> {
+        let rc = self
+            .refcount
+            .get_mut(page as usize)
+            .ok_or(PoolError::BadSharedPage)?;
+        if *rc == 0 {
+            return Err(PoolError::BadSharedPage);
+        }
+        *rc += 1;
+        Ok(())
+    }
+
+    /// Drop a reference taken with [`retain_page`](Self::retain_page) (or
+    /// held via a block table). Returns `true` if this was the last
+    /// reference and the page went back to the free list.
+    pub fn release_page(&mut self, page: PageId) -> Result<bool, PoolError> {
+        let rc = self
+            .refcount
+            .get_mut(page as usize)
+            .ok_or(PoolError::BadSharedPage)?;
+        if *rc == 0 {
+            return Err(PoolError::BadSharedPage);
+        }
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Current reference count of a page (0 = free).
+    pub fn page_refcount(&self, page: PageId) -> u32 {
+        self.refcount.get(page as usize).copied().unwrap_or(0)
+    }
+
+    /// Register a sequence whose first pages are existing shared pages
+    /// (longest-prefix hit in the prefix cache): the shared pages get an
+    /// extra reference and head the block table; fresh pages cover the
+    /// remaining `total_tokens`. All-or-nothing on failure.
+    pub fn register_with_prefix(
+        &mut self,
+        seq: u64,
+        shared: &[PageId],
+        total_tokens: usize,
+    ) -> Result<(), PoolError> {
+        let need = self.pages_for(total_tokens);
+        if shared.len() > need {
+            return Err(PoolError::BadSharedPage);
+        }
+        for &p in shared {
+            if self.refcount.get(p as usize).copied().unwrap_or(0) == 0 {
+                return Err(PoolError::BadSharedPage);
+            }
+        }
+        let fresh = need - shared.len();
+        if fresh > self.free.len() {
+            return Err(PoolError::OutOfPages);
+        }
+        let mut table = BlockTable::default();
+        for &p in shared {
+            self.refcount[p as usize] += 1;
+            table.pages.push(p);
+        }
+        for _ in 0..fresh {
+            let p = self.free.pop().unwrap();
+            self.refcount[p as usize] = 1;
+            table.pages.push(p);
+        }
+        table.last_fill = if total_tokens == 0 {
+            0
+        } else {
+            let rem = total_tokens % self.cfg.page_tokens;
+            if rem == 0 {
+                self.cfg.page_tokens
+            } else {
+                rem
+            }
+        };
+        self.tables.insert(seq, table);
         Ok(())
     }
 
@@ -318,6 +395,141 @@ mod tests {
         assert!(p.token_slot(1, 5).is_none(), "beyond fill");
         assert!(p.token_slot(1, 99).is_none());
         assert!(p.token_slot(9, 0).is_none());
+    }
+
+    #[test]
+    fn fork_then_release_parent_decrements_not_frees() {
+        let mut p = pool(6);
+        p.register(1, 12).unwrap(); // 3 pages
+        let pages = p.table(1).unwrap().pages.clone();
+        p.fork(1, 2).unwrap();
+        for &pg in &pages {
+            assert_eq!(p.page_refcount(pg), 2);
+        }
+        p.release(1).unwrap();
+        for &pg in &pages {
+            assert_eq!(p.page_refcount(pg), 1, "child still holds the page");
+        }
+        assert_eq!(p.free_pages(), 3);
+        p.release(2).unwrap();
+        assert_eq!(p.free_pages(), 6);
+        for &pg in &pages {
+            assert_eq!(p.page_refcount(pg), 0);
+        }
+    }
+
+    #[test]
+    fn make_last_private_is_noop_when_unshared() {
+        let mut p = pool(4);
+        p.register(1, 6).unwrap();
+        let before = p.table(1).unwrap().pages.clone();
+        p.make_last_private(1).unwrap();
+        assert_eq!(p.table(1).unwrap().pages, before, "no copy when refcount is 1");
+        assert_eq!(p.used_pages(), 2);
+    }
+
+    #[test]
+    fn make_last_private_out_of_pages_fails_cleanly() {
+        let mut p = pool(2);
+        p.register(1, 8).unwrap(); // both pages
+        p.fork(1, 2).unwrap();
+        assert_eq!(p.make_last_private(2), Err(PoolError::OutOfPages));
+        // Nothing leaked: both sequences still release cleanly.
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.free_pages(), 2);
+    }
+
+    #[test]
+    fn append_token_into_shared_last_page_copies_first() {
+        let mut p = pool(6);
+        p.register(1, 6).unwrap(); // 2 pages, last_fill = 2
+        p.token_slot_mut(1, 5).unwrap().fill(0x5A);
+        p.fork(1, 2).unwrap();
+        // Appending to the child must not grow into the parent's page.
+        p.append_token(2).unwrap();
+        let parent_last = *p.table(1).unwrap().pages.last().unwrap();
+        let child_last = *p.table(2).unwrap().pages.last().unwrap();
+        assert_ne!(parent_last, child_last, "shared last page split before write");
+        assert_eq!(p.table(2).unwrap().num_tokens(4), 7);
+        assert_eq!(p.table(1).unwrap().num_tokens(4), 6);
+        // Copied content preserved in the child's private page.
+        assert_eq!(p.token_slot(2, 5).unwrap(), &[0x5A; 8]);
+        // Parent's view untouched by further child writes.
+        p.token_slot_mut(2, 5).unwrap().fill(0x77);
+        assert_eq!(p.token_slot(1, 5).unwrap(), &[0x5A; 8]);
+    }
+
+    #[test]
+    fn retain_release_page_lifecycle() {
+        let mut p = pool(4);
+        p.register(1, 4).unwrap();
+        let pg = p.table(1).unwrap().pages[0];
+        p.retain_page(pg).unwrap();
+        assert_eq!(p.page_refcount(pg), 2);
+        p.release(1).unwrap();
+        assert_eq!(p.page_refcount(pg), 1, "external pin keeps the page");
+        assert_eq!(p.free_pages(), 3);
+        assert_eq!(p.release_page(pg), Ok(true));
+        assert_eq!(p.free_pages(), 4);
+        // Double release / retain of a free page are rejected.
+        assert_eq!(p.release_page(pg), Err(PoolError::BadSharedPage));
+        assert_eq!(p.retain_page(pg), Err(PoolError::BadSharedPage));
+        assert_eq!(p.retain_page(99), Err(PoolError::BadSharedPage));
+    }
+
+    #[test]
+    fn register_with_prefix_shares_and_allocates() {
+        let mut p = pool(8);
+        p.register(1, 8).unwrap(); // 2 full pages
+        for t in 0..8 {
+            p.token_slot_mut(1, t).unwrap().fill(t as u8);
+        }
+        let shared = p.table(1).unwrap().pages.clone();
+        // New sequence: same 8-token prefix + room for 6 more tokens.
+        p.register_with_prefix(2, &shared, 14).unwrap();
+        assert_eq!(p.used_pages(), 4, "2 shared + 2 fresh");
+        assert_eq!(p.table(2).unwrap().num_tokens(4), 14);
+        // Shared content is visible through the new table, zero-copy.
+        for t in 0..8 {
+            assert_eq!(p.token_slot(2, t).unwrap(), &[t as u8; 8]);
+        }
+        for &pg in &shared {
+            assert_eq!(p.page_refcount(pg), 2);
+        }
+        // Releasing the source keeps the prefix alive for the new sequence.
+        p.release(1).unwrap();
+        assert_eq!(p.token_slot(2, 3).unwrap(), &[3u8; 8]);
+        p.release(2).unwrap();
+        assert_eq!(p.free_pages(), 8);
+    }
+
+    #[test]
+    fn register_with_prefix_rejects_bad_input() {
+        let mut p = pool(4);
+        p.register(1, 8).unwrap(); // 2 of the 4 pages
+        let shared = p.table(1).unwrap().pages.clone();
+        assert_eq!(shared.len(), 2);
+        // More shared pages than the request needs.
+        assert_eq!(
+            p.register_with_prefix(2, &shared, 4),
+            Err(PoolError::BadSharedPage)
+        );
+        // A free page used as a shared handle.
+        let free_page = (0..4u32)
+            .find(|&pg| p.page_refcount(pg) == 0)
+            .expect("some page free");
+        assert_eq!(
+            p.register_with_prefix(2, &[free_page], 8),
+            Err(PoolError::BadSharedPage)
+        );
+        // Not enough fresh pages: nothing is leaked on failure.
+        assert_eq!(
+            p.register_with_prefix(2, &shared, 100),
+            Err(PoolError::OutOfPages)
+        );
+        assert_eq!(p.page_refcount(shared[0]), 1);
+        assert_eq!(p.free_pages(), 2);
     }
 
     #[test]

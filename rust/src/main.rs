@@ -93,7 +93,8 @@ fn cmd_serve(argv: Vec<String>) {
             .opt("workers", "1", "worker replicas")
             .opt("seed", "0", "weight seed")
             .opt("max-active", "8", "max concurrent sequences per worker")
-            .opt("pool-tokens", "65536", "KV page-pool size per worker (tokens)"),
+            .opt("pool-tokens", "65536", "KV page-pool size per worker (tokens)")
+            .opt("prefix-cache", "on", "radix prefix cache for shared prompts (on|off)"),
     );
     let cfg = ServerConfig {
         model: model_cfg(&a.get("model")),
@@ -101,6 +102,7 @@ fn cmd_serve(argv: Vec<String>) {
         workers: a.get_usize("workers"),
         pool_tokens: a.get_usize("pool-tokens"),
         max_active: a.get_usize("max-active"),
+        prefix_cache: a.get("prefix-cache") != "off",
         ..Default::default()
     };
     let addr = a.get("addr");

@@ -53,16 +53,29 @@ fn extract_head(flat: &[f32], h: usize, n_heads: usize, dh: usize) -> Vec<f32> {
 
 /// Prefill result.
 pub struct PrefillOutput {
-    /// (S × vocab) logits.
+    /// Logits for tokens `logits_start..seq_len`, (rows × vocab).
     pub logits: Vec<f32>,
     pub kv: Vec<LayerKv>,
     pub seq_len: usize,
+    /// First token index covered by `logits` (0 for a full prefill;
+    /// `past_len` for a prefix-reuse suffix prefill).
+    pub logits_start: usize,
 }
 
 impl PrefillOutput {
     pub fn last_logits(&self, vocab: usize) -> &[f32] {
-        &self.logits[(self.seq_len - 1) * vocab..]
+        let idx = self.seq_len - 1 - self.logits_start;
+        &self.logits[idx * vocab..(idx + 1) * vocab]
     }
+}
+
+/// Materialized past K/V for one layer (RoPE already applied), flattened
+/// (past_len × H·dh) — the engine-side snapshot a prefix-cache hit
+/// replays instead of re-running the forward pass.
+#[derive(Clone, Debug)]
+pub struct PastKv {
+    pub keys: Vec<f32>,
+    pub values: Vec<f32>,
 }
 
 /// The model: weights + RoPE table + scratch.
@@ -89,16 +102,45 @@ impl Transformer {
     }
 
     /// Full-prompt forward. O(S²) attention, materializes K/V per layer.
+    /// Implemented as [`prefill_extend`](Self::prefill_extend) with no
+    /// past, so the cold and prefix-reuse paths share one forward pass
+    /// and cannot drift apart numerically.
     pub fn prefill(&mut self, tokens: &[u32]) -> PrefillOutput {
+        let empty: Vec<PastKv> = (0..self.cfg.n_layers)
+            .map(|_| PastKv { keys: Vec::new(), values: Vec::new() })
+            .collect();
+        self.prefill_extend(&empty, 0, tokens)
+    }
+
+    /// Prefill only a suffix, reusing materialized past K/V for the first
+    /// `past_len` positions (the prefix-cache hit path): the forward pass
+    /// runs over `suffix` tokens only, attending over past + suffix K/V.
+    /// Per-row op order is independent of `past_len`, so the result is
+    /// bit-identical to a full prefill of the concatenated prompt
+    /// (`prefill` itself is this function with no past).
+    /// Returned `kv` covers the FULL sequence (past rows copied in
+    /// front of the new rows); `logits` covers the suffix only
+    /// (`logits_start = past_len`). Observation-window queries come from
+    /// the suffix, identical to a full prefill when
+    /// `suffix.len() >= OBS_WINDOW` (callers should fall back to a full
+    /// prefill below that).
+    pub fn prefill_extend(
+        &mut self,
+        past: &[PastKv],
+        past_len: usize,
+        suffix: &[u32],
+    ) -> PrefillOutput {
         let cfg = self.cfg.clone();
-        let (s, d, h, dh, f) = (tokens.len(), cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
+        let (s, d, h, dh, f) = (suffix.len(), cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
         let hd = h * dh;
         assert!(s > 0, "empty prompt");
+        assert_eq!(past.len(), cfg.n_layers, "past layers");
+        let total = past_len + s;
 
-        // Embed.
+        // Embed the suffix.
         let embed = self.weights.get("embed");
         let mut x = vec![0.0f32; s * d];
-        for (t, &tok) in tokens.iter().enumerate() {
+        for (t, &tok) in suffix.iter().enumerate() {
             let tok = tok as usize % cfg.vocab;
             x[t * d..(t + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
         }
@@ -112,10 +154,14 @@ impl Transformer {
         let scale = 1.0 / (dh as f32).sqrt();
 
         for l in 0..cfg.n_layers {
-            // Attention block.
+            assert!(past[l].keys.len() >= past_len * hd, "past keys too short");
+            assert!(past[l].values.len() >= past_len * hd, "past values too short");
+
+            // Attention block over the suffix rows.
             xin.copy_from_slice(&x);
             for t in 0..s {
-                rmsnorm(&mut xin[t * d..(t + 1) * d], self.weights.layer(l, "attn_norm"), cfg.rms_eps);
+                let row = &mut xin[t * d..(t + 1) * d];
+                rmsnorm(row, self.weights.layer(l, "attn_norm"), cfg.rms_eps);
             }
             let wq = self.weights.layer(l, "wq").to_vec();
             let wk = self.weights.layer(l, "wk").to_vec();
@@ -124,26 +170,36 @@ impl Transformer {
             matmul(&xin, &wk, s, d, hd, &mut k);
             matmul(&xin, &wv, s, d, hd, &mut v);
             for t in 0..s {
-                self.rope.apply_heads(&mut q[t * hd..(t + 1) * hd], t);
-                self.rope.apply_heads(&mut k[t * hd..(t + 1) * hd], t);
+                self.rope.apply_heads(&mut q[t * hd..(t + 1) * hd], past_len + t);
+                self.rope.apply_heads(&mut k[t * hd..(t + 1) * hd], past_len + t);
             }
 
-            // Per-head causal attention.
+            // Full K/V for the layer: past rows then suffix rows.
+            let mut k_full = Vec::with_capacity(total * hd);
+            k_full.extend_from_slice(&past[l].keys[..past_len * hd]);
+            k_full.extend_from_slice(&k);
+            let mut v_full = Vec::with_capacity(total * hd);
+            v_full.extend_from_slice(&past[l].values[..past_len * hd]);
+            v_full.extend_from_slice(&v);
+
+            // Per-head causal attention: suffix row t attends to positions
+            // 0..=past_len + t.
             for head in 0..h {
                 let qh = extract_head(&q, head, h, dh);
-                let kh = extract_head(&k, head, h, dh);
-                let vh = extract_head(&v, head, h, dh);
-                let mut probs = vec![0.0f32; s];
+                let kh = extract_head(&k_full, head, h, dh);
+                let vh = extract_head(&v_full, head, h, dh);
+                let mut probs = vec![0.0f32; total];
                 for t in 0..s {
+                    let lim = past_len + t;
                     let qrow = &qh[t * dh..(t + 1) * dh];
-                    for u in 0..=t {
+                    for u in 0..=lim {
                         probs[u] = crate::math::linalg::dot(qrow, &kh[u * dh..(u + 1) * dh])
                             * scale;
                     }
-                    softmax(&mut probs[..=t]);
+                    softmax(&mut probs[..=lim]);
                     let orow = &mut attn[t * hd + head * dh..t * hd + (head + 1) * dh];
                     orow.fill(0.0);
-                    for u in 0..=t {
+                    for u in 0..=lim {
                         let w = probs[u];
                         let vrow = &vh[u * dh..(u + 1) * dh];
                         for j in 0..dh {
@@ -163,7 +219,8 @@ impl Transformer {
             // MLP block.
             xin.copy_from_slice(&x);
             for t in 0..s {
-                rmsnorm(&mut xin[t * d..(t + 1) * d], self.weights.layer(l, "mlp_norm"), cfg.rms_eps);
+                let row = &mut xin[t * d..(t + 1) * d];
+                rmsnorm(row, self.weights.layer(l, "mlp_norm"), cfg.rms_eps);
             }
             let wg = self.weights.layer(l, "w_gate").to_vec();
             let wu = self.weights.layer(l, "w_up").to_vec();
@@ -181,16 +238,16 @@ impl Transformer {
                 x[i] += down[i];
             }
 
-            // Capture K/V + observation queries for this layer.
+            // Capture FULL-sequence K/V + suffix observation queries.
             let w = OBS_WINDOW.min(s);
             kv_out.push(LayerKv {
-                keys: k.clone(),
-                values: v.clone(),
+                keys: k_full,
+                values: v_full,
                 obs_queries: q[(s - w) * hd..].to_vec(),
             });
         }
 
-        // Final norm + tied head.
+        // Final norm + tied head over the suffix rows.
         for t in 0..s {
             rmsnorm(&mut x[t * d..(t + 1) * d], self.weights.get("final_norm"), cfg.rms_eps);
         }
@@ -204,7 +261,7 @@ impl Transformer {
                 &mut logits[t * cfg.vocab..(t + 1) * cfg.vocab],
             );
         }
-        PrefillOutput { logits, kv: kv_out, seq_len: s }
+        PrefillOutput { logits, kv: kv_out, seq_len: total, logits_start: past_len }
     }
 
     /// One generation step against per-layer/per-head compressed caches.
@@ -382,6 +439,61 @@ mod tests {
         let la = a.prefill(&[5, 6, 7]).logits;
         let lb = b.prefill(&[5, 6, 7]).logits;
         assert_eq!(la, lb);
+    }
+
+    /// Extract per-layer past K/V snapshots covering the first `n` tokens
+    /// of a prefill — what the engine's prefix store keeps.
+    fn snapshot(pre: &PrefillOutput, n: usize, hd: usize) -> Vec<PastKv> {
+        pre.kv
+            .iter()
+            .map(|l| PastKv {
+                keys: l.keys[..n * hd].to_vec(),
+                values: l.values[..n * hd].to_vec(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefill_extend_matches_full_prefill() {
+        let mut m = model();
+        let hd = m.cfg.n_heads * m.cfg.head_dim;
+        let tokens: Vec<u32> = (0..40).map(|i| (i * 13 + 5) % 64).collect();
+        let full = m.prefill(&tokens);
+        let split = 24;
+        let past = snapshot(&m.prefill(&tokens[..split]), split, hd);
+        let ext = m.prefill_extend(&past, split, &tokens[split..]);
+
+        assert_eq!(ext.seq_len, 40);
+        assert_eq!(ext.logits_start, split);
+        // Full-sequence K/V identical (the reuse path replays the same
+        // float ops in the same order → bitwise equality).
+        for l in 0..m.cfg.n_layers {
+            assert_eq!(ext.kv[l].keys, full.kv[l].keys, "layer {l} keys");
+            assert_eq!(ext.kv[l].values, full.kv[l].values, "layer {l} values");
+            assert_eq!(
+                ext.kv[l].obs_queries, full.kv[l].obs_queries,
+                "layer {l} obs queries (suffix 16 == OBS_WINDOW)"
+            );
+        }
+        // Suffix logits identical to the full prefill's suffix rows.
+        let vocab = m.cfg.vocab;
+        assert_eq!(ext.logits.len(), (40 - split) * vocab);
+        assert_eq!(ext.logits[..], full.logits[split * vocab..]);
+        assert_eq!(ext.last_logits(vocab), full.last_logits(vocab));
+    }
+
+    #[test]
+    fn prefill_extend_truncates_longer_past() {
+        // The store may hold a longer snapshot than the matched prefix;
+        // `past_len` selects the usable rows.
+        let mut m = model();
+        let hd = m.cfg.n_heads * m.cfg.head_dim;
+        let tokens: Vec<u32> = (0..36).map(|i| (i * 7 + 1) % 64).collect();
+        let full = m.prefill(&tokens);
+        let past = snapshot(&full, 32, hd); // longer than we will use
+        let ext = m.prefill_extend(&past, 16, &tokens[16..]);
+        assert_eq!(ext.seq_len, 36);
+        assert_eq!(ext.logits[..], full.logits[16 * m.cfg.vocab..]);
     }
 
     #[test]

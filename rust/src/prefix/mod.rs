@@ -1,0 +1,23 @@
+//! Prefix cache: cross-request reuse of quantized prompt pages.
+//!
+//! Serving traffic is dominated by shared prompt prefixes — system
+//! prompts, few-shot headers, growing multi-turn histories. Because
+//! PolarQuant pages are pure packed angle codes with no per-block
+//! scale/zero-point metadata, a cached prefix page is reusable as-is by
+//! any request whose prompt starts with those tokens, so a prefix cache
+//! holds strictly more reusable tokens per byte than scale/offset codecs.
+//!
+//! * [`radix`] — the radix tree keyed on token-id page chunks whose
+//!   leaves reference pages in [`crate::kvcache::paged::PagedPool`], with
+//!   per-node pins (active sequences), copy-on-write splits on
+//!   divergence, and LRU eviction of cold unreferenced nodes.
+//!
+//! The scheduler consults the tree at admission (longest cached prefix →
+//! shared pages + skipped prefill), inserts every admitted prompt, and
+//! pins the matched path for the sequence's lifetime; the engine layer
+//! mirrors the reuse decision with materialized K/V snapshots (see
+//! `coordinator::worker`).
+
+pub mod radix;
+
+pub use radix::{NodeId, PrefixConfig, PrefixMatch, PrefixStats, RadixPrefixCache};

@@ -1,0 +1,677 @@
+//! Radix tree over token-id page chunks, the core of the prefix cache.
+//!
+//! Every edge covers a whole number of pool pages (`page_tokens` tokens
+//! each) because a page is the smallest unit two sequences can share:
+//! PolarQuant pages are pure packed codes with no per-block metadata, so
+//! a cached page is reusable by any request whose prompt contains exactly
+//! those tokens at those positions. Children are keyed by their edge's
+//! first page chunk, which makes sibling edges that diverge inside their
+//! first page ordinary siblings instead of a split case.
+//!
+//! The tree holds one pool reference per cached page (taken via
+//! [`PagedPool::retain_page`]), so pages survive their originating
+//! sequence. Divergence splits an edge at the page boundary
+//! (copy-on-write at the tree level: both branches keep referencing the
+//! common pages, and each branch owns its private diverging tail).
+//! Nodes pinned by active sequences are never evicted; cold unpinned
+//! leaves go first, in LRU order.
+
+use crate::kvcache::paged::{PagedPool, PageId};
+use std::collections::BTreeMap;
+
+/// Slab index of a node. The root is always node 0 with an empty edge.
+pub type NodeId = usize;
+
+/// Prefix-cache configuration.
+#[derive(Clone, Debug)]
+pub struct PrefixConfig {
+    /// Must match the pool's `page_tokens`.
+    pub page_tokens: usize,
+    /// Soft budget on pool pages the cache keeps referenced; LRU eviction
+    /// trims back down after inserts.
+    pub max_pages: usize,
+}
+
+/// Cumulative cache statistics (monotonic counters).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub inserted_nodes: u64,
+    pub evicted_nodes: u64,
+}
+
+/// Result of a longest-prefix lookup.
+#[derive(Debug)]
+pub struct PrefixMatch {
+    /// Cached pages covering the matched prefix, in order.
+    pub pages: Vec<PageId>,
+    /// Matched token count (`pages.len() * page_tokens`).
+    pub tokens: usize,
+    /// Deepest node whose pages contributed to the match (pin this while
+    /// the requesting sequence is active). `None` when nothing matched.
+    pub node: Option<NodeId>,
+}
+
+struct Node {
+    /// Edge label: `pages.len() * page_tokens` token ids (root: empty).
+    tokens: Vec<u32>,
+    pages: Vec<PageId>,
+    /// Children keyed by the first page chunk of their edge.
+    children: BTreeMap<Vec<u32>, NodeId>,
+    parent: NodeId,
+    /// Active sequences currently relying on this node's pages.
+    pins: u32,
+    /// LRU clock value of the last lookup/insert that touched this node.
+    last_touch: u64,
+}
+
+/// The radix-tree prefix cache.
+pub struct RadixPrefixCache {
+    cfg: PrefixConfig,
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<NodeId>,
+    clock: u64,
+    cached_pages: usize,
+    stats: PrefixStats,
+}
+
+impl RadixPrefixCache {
+    pub fn new(cfg: PrefixConfig) -> Self {
+        assert!(cfg.page_tokens > 0);
+        let root = Node {
+            tokens: Vec::new(),
+            pages: Vec::new(),
+            children: BTreeMap::new(),
+            parent: 0,
+            pins: 0,
+            last_touch: 0,
+        };
+        Self {
+            cfg,
+            nodes: vec![Some(root)],
+            free_nodes: Vec::new(),
+            clock: 0,
+            cached_pages: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    /// Pool pages currently referenced by the tree.
+    pub fn cached_pages(&self) -> usize {
+        self.cached_pages
+    }
+
+    /// Live nodes, excluding the root.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count() - 1
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        self.nodes[id].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        self.nodes[id].as_mut().expect("live node")
+    }
+
+    fn alloc(&mut self, node: Node) -> NodeId {
+        self.stats.inserted_nodes += 1;
+        match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// How many whole pages of `edge` match `tokens` (compared page by
+    /// page from the start of both).
+    fn matching_pages(&self, edge: &[u32], tokens: &[u32]) -> usize {
+        let pt = self.cfg.page_tokens;
+        let mut k = 0;
+        while (k + 1) * pt <= edge.len()
+            && (k + 1) * pt <= tokens.len()
+            && edge[k * pt..(k + 1) * pt] == tokens[k * pt..(k + 1) * pt]
+        {
+            k += 1;
+        }
+        k
+    }
+
+    fn child_key(&self, edge: &[u32]) -> Vec<u32> {
+        edge[..self.cfg.page_tokens].to_vec()
+    }
+
+    /// Longest cached prefix of `tokens`, page-granular. Touches every
+    /// node on the matched path (LRU refresh) but takes no pins.
+    pub fn match_prefix(&mut self, tokens: &[u32]) -> PrefixMatch {
+        let pt = self.cfg.page_tokens;
+        self.clock += 1;
+        let clock = self.clock;
+        let mut cur: NodeId = 0;
+        let mut matched = 0usize;
+        let mut pages: Vec<PageId> = Vec::new();
+        loop {
+            self.node_mut(cur).last_touch = clock;
+            if tokens.len() - matched < pt {
+                break;
+            }
+            let key = tokens[matched..matched + pt].to_vec();
+            let child = match self.node(cur).children.get(&key) {
+                Some(&c) => c,
+                None => break,
+            };
+            let k = {
+                let c = self.node(child);
+                self.matching_pages(&c.tokens, &tokens[matched..])
+            };
+            debug_assert!(k >= 1, "child key matched but first page did not");
+            if k == 0 {
+                break;
+            }
+            self.node_mut(child).last_touch = clock;
+            pages.extend_from_slice(&self.node(child).pages[..k]);
+            matched += k * pt;
+            if k < self.node(child).pages.len() {
+                cur = child;
+                break;
+            }
+            cur = child;
+        }
+        PrefixMatch {
+            pages,
+            tokens: matched,
+            node: if matched == 0 { None } else { Some(cur) },
+        }
+    }
+
+    /// Pin a node for the lifetime of an active sequence: neither it nor
+    /// (transitively) any ancestor can be evicted while pinned.
+    pub fn pin(&mut self, node: NodeId) {
+        self.node_mut(node).pins += 1;
+    }
+
+    pub fn unpin(&mut self, node: NodeId) {
+        let n = self.node_mut(node);
+        debug_assert!(n.pins > 0, "unbalanced unpin");
+        n.pins = n.pins.saturating_sub(1);
+    }
+
+    /// Split `child` so its first `k` pages become a new intermediate node
+    /// (the shared part); `child` keeps the diverging tail. Pool refcounts
+    /// are untouched — pages just move between nodes. Returns the new
+    /// intermediate node.
+    fn split(&mut self, child: NodeId, k: usize) -> NodeId {
+        let pt = self.cfg.page_tokens;
+        let (parent, head_tokens, head_pages, tail_key, touch) = {
+            let c = self.node(child);
+            debug_assert!(k > 0 && k < c.pages.len());
+            (
+                c.parent,
+                c.tokens[..k * pt].to_vec(),
+                c.pages[..k].to_vec(),
+                c.tokens[k * pt..k * pt + pt].to_vec(),
+                c.last_touch,
+            )
+        };
+        let old_key = self.child_key(&head_tokens);
+        let mut children = BTreeMap::new();
+        children.insert(tail_key, child);
+        let mid = self.alloc(Node {
+            tokens: head_tokens,
+            pages: head_pages,
+            children,
+            parent,
+            pins: 0,
+            last_touch: touch,
+        });
+        {
+            let c = self.node_mut(child);
+            c.tokens.drain(..k * pt);
+            c.pages.drain(..k);
+            c.parent = mid;
+        }
+        self.node_mut(parent).children.insert(old_key, mid);
+        mid
+    }
+
+    /// Insert the page-aligned prefix of `tokens` into the tree, taking
+    /// page references from `src_seq`'s block table for any pages not
+    /// already cached. Returns the deepest node on the inserted path
+    /// (`None` when the prompt is shorter than one page or the sequence
+    /// is unknown). The caller typically pins the returned node.
+    pub fn insert(
+        &mut self,
+        tokens: &[u32],
+        pool: &mut PagedPool,
+        src_seq: u64,
+    ) -> Option<NodeId> {
+        let pt = self.cfg.page_tokens;
+        let aligned = tokens.len() / pt * pt;
+        if aligned == 0 {
+            return None;
+        }
+        let src_pages: Vec<PageId> = pool.table(src_seq)?.pages.clone();
+        if src_pages.len() < aligned / pt {
+            return None; // table shorter than the prompt — shouldn't happen
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let mut cur: NodeId = 0;
+        let mut off = 0usize;
+        loop {
+            self.node_mut(cur).last_touch = clock;
+            if off == aligned {
+                return Some(cur);
+            }
+            let key = tokens[off..off + pt].to_vec();
+            let child = match self.node(cur).children.get(&key) {
+                Some(&c) => c,
+                None => {
+                    // New leaf owning the remaining pages of this prompt.
+                    // The pages come from a live block table, so they are
+                    // allocated and retain cannot fail.
+                    let pages = src_pages[off / pt..aligned / pt].to_vec();
+                    for &p in &pages {
+                        pool.retain_page(p).expect("page live via src table");
+                    }
+                    self.cached_pages += pages.len();
+                    let leaf = self.alloc(Node {
+                        tokens: tokens[off..aligned].to_vec(),
+                        pages,
+                        children: BTreeMap::new(),
+                        parent: cur,
+                        pins: 0,
+                        last_touch: clock,
+                    });
+                    self.node_mut(cur).children.insert(key, leaf);
+                    return Some(leaf);
+                }
+            };
+            let k = {
+                let c = self.node(child);
+                self.matching_pages(&c.tokens, &tokens[off..aligned])
+            };
+            debug_assert!(k >= 1);
+            self.node_mut(child).last_touch = clock;
+            if k == self.node(child).pages.len() {
+                off += k * pt;
+                cur = child;
+                continue;
+            }
+            // Divergence inside the edge: split at the page boundary and
+            // continue from the shared intermediate node.
+            let mid = self.split(child, k);
+            self.node_mut(mid).last_touch = clock;
+            off += k * pt;
+            cur = mid;
+        }
+    }
+
+    /// Whether a node can be evicted right now.
+    fn evictable(&self, id: NodeId) -> bool {
+        if id == 0 {
+            return false;
+        }
+        let n = self.node(id);
+        n.pins == 0 && n.children.is_empty()
+    }
+
+    /// Evict one LRU unpinned leaf, returning how many pool pages were
+    /// actually freed (a page still referenced by an active sequence is
+    /// released from the tree but stays allocated). With `must_free`,
+    /// only victims holding at least one last-reference page are
+    /// considered — the make-room path, where evicting a still-shared
+    /// node would destroy reusable state while reclaiming nothing.
+    /// `None` when no eligible victim exists.
+    fn evict_one(&mut self, pool: &mut PagedPool, must_free: bool) -> Option<usize> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
+            .filter(|&(id, _)| self.evictable(id))
+            .filter(|(_, n)| {
+                !must_free || n.pages.iter().any(|&p| pool.page_refcount(p) == 1)
+            })
+            .min_by_key(|&(_, n)| n.last_touch)
+            .map(|(id, _)| id)?;
+        let node = self.nodes[victim].take().expect("live victim");
+        self.free_nodes.push(victim);
+        let key = self.child_key(&node.tokens);
+        self.node_mut(node.parent).children.remove(&key);
+        self.cached_pages -= node.pages.len();
+        let mut freed = 0;
+        for p in node.pages {
+            if pool.release_page(p).unwrap_or(false) {
+                freed += 1;
+            }
+        }
+        self.stats.evicted_nodes += 1;
+        Some(freed)
+    }
+
+    /// Evict LRU leaves until at least `pages_needed` pool pages have been
+    /// freed or no eviction can free anything. Victims that would free no
+    /// pages (all their pages still shared with active sequences) are
+    /// left cached. Returns pages freed.
+    pub fn evict_lru(&mut self, pool: &mut PagedPool, pages_needed: usize) -> usize {
+        let mut freed = 0;
+        while freed < pages_needed {
+            match self.evict_one(pool, true) {
+                Some(f) => freed += f,
+                None => break,
+            }
+        }
+        freed
+    }
+
+    /// Pool pages eviction could free right now: pages held only by the
+    /// cache (refcount 1) in nodes with no pinned node in their subtree.
+    /// Exactly the set a full bottom-up eviction cascade reaches, since a
+    /// pin protects itself and its ancestors but not siblings/descendants.
+    pub fn freeable_pages(&self, pool: &PagedPool) -> usize {
+        let mut protected = vec![false; self.nodes.len()];
+        protected[0] = true; // root
+        for (id, n) in self.nodes.iter().enumerate() {
+            if n.as_ref().map(|n| n.pins > 0).unwrap_or(false) {
+                let mut cur = id;
+                while !protected[cur] {
+                    protected[cur] = true;
+                    cur = self.node(cur).parent;
+                }
+            }
+        }
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
+            .filter(|&(id, _)| !protected[id])
+            .flat_map(|(_, n)| n.pages.iter())
+            .filter(|&&p| pool.page_refcount(p) == 1)
+            .count()
+    }
+
+    /// Free at least `pages_needed` pool pages by evicting cache entries —
+    /// or do nothing at all: when the cache cannot cover the shortfall,
+    /// returns `false` without evicting, so a hopeless admission doesn't
+    /// destroy reusable state on the way to failing anyway. Prefers
+    /// victims whose pages free immediately, then falls back to cascaded
+    /// eviction of unpinned subtrees.
+    pub fn make_room(&mut self, pool: &mut PagedPool, pages_needed: usize) -> bool {
+        if pages_needed == 0 {
+            return true;
+        }
+        if self.freeable_pages(pool) < pages_needed {
+            return false;
+        }
+        let mut freed = self.evict_lru(pool, pages_needed);
+        while freed < pages_needed {
+            match self.evict_one(pool, false) {
+                Some(f) => freed += f,
+                None => break,
+            }
+        }
+        freed >= pages_needed
+    }
+
+    /// Trim the cache back under its `max_pages` budget (memory
+    /// pressure); pinned chains are skipped.
+    pub fn enforce_budget(&mut self, pool: &mut PagedPool) {
+        while self.cached_pages > self.cfg.max_pages {
+            if self.evict_one(pool, false).is_none() {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::paged::PagedConfig;
+
+    const PT: usize = 4;
+
+    fn pool(pages: usize) -> PagedPool {
+        PagedPool::new(PagedConfig { page_tokens: PT, token_bytes: 2, num_pages: pages })
+    }
+
+    fn cache(max_pages: usize) -> RadixPrefixCache {
+        RadixPrefixCache::new(PrefixConfig { page_tokens: PT, max_pages })
+    }
+
+    /// Register a sequence for `tokens` (+`extra` growth room) sharing the
+    /// cache's longest matching prefix, then insert it — the scheduler's
+    /// admit flow distilled.
+    fn admit(
+        c: &mut RadixPrefixCache,
+        p: &mut PagedPool,
+        seq: u64,
+        tokens: &[u32],
+        extra: usize,
+    ) -> (usize, Option<NodeId>) {
+        let m = c.match_prefix(tokens);
+        p.register_with_prefix(seq, &m.pages, tokens.len() + extra).unwrap();
+        let node = c.insert(tokens, p, seq);
+        (m.tokens, node)
+    }
+
+    fn toks(spec: &[(u32, usize)]) -> Vec<u32> {
+        let mut v = Vec::new();
+        for &(val, n) in spec {
+            v.extend(std::iter::repeat(val).take(n));
+        }
+        v
+    }
+
+    #[test]
+    fn cold_miss_then_full_hit() {
+        let (mut c, mut p) = (cache(64), pool(32));
+        let prompt = toks(&[(7, 12)]); // 3 pages
+        let (m0, node) = admit(&mut c, &mut p, 1, &prompt, 4);
+        assert_eq!(m0, 0, "cold cache");
+        assert!(node.is_some());
+        assert_eq!(c.cached_pages(), 3);
+        // Same prompt again: all 3 full pages hit.
+        let m = c.match_prefix(&prompt);
+        assert_eq!(m.tokens, 12);
+        assert_eq!(m.pages.len(), 3);
+        assert_eq!(m.pages, p.table(1).unwrap().pages[..3].to_vec());
+    }
+
+    #[test]
+    fn partial_page_never_matches() {
+        let (mut c, mut p) = (cache(64), pool(32));
+        let prompt = toks(&[(7, 10)]); // 2 full pages + 2 tokens
+        admit(&mut c, &mut p, 1, &prompt, 0);
+        assert_eq!(c.cached_pages(), 2, "only full pages are cached");
+        let m = c.match_prefix(&prompt);
+        assert_eq!(m.tokens, 8);
+    }
+
+    #[test]
+    fn divergence_splits_edge_and_shares_common_pages() {
+        let (mut c, mut p) = (cache(64), pool(64));
+        // 4 shared pages, then divergent tails of 2 pages each.
+        let a = toks(&[(1, 16), (2, 8)]);
+        let b = toks(&[(1, 16), (3, 8)]);
+        admit(&mut c, &mut p, 1, &a, 0);
+        assert_eq!(c.num_nodes(), 1, "single edge before divergence");
+        let (mb, _) = admit(&mut c, &mut p, 2, &b, 0);
+        assert_eq!(mb, 16, "common 4 pages matched");
+        assert_eq!(c.num_nodes(), 3, "split: shared head + two tails");
+        // The shared pages are the SAME pool pages in both tables (COW).
+        let ta = p.table(1).unwrap().pages.clone();
+        let tb = p.table(2).unwrap().pages.clone();
+        assert_eq!(ta[..4], tb[..4]);
+        assert_ne!(ta[4..], tb[4..]);
+        // Cache now holds 4 shared + 2 + 2 divergent pages.
+        assert_eq!(c.cached_pages(), 8);
+        // Both tails still match end-to-end.
+        assert_eq!(c.match_prefix(&a).tokens, 24);
+        assert_eq!(c.match_prefix(&b).tokens, 24);
+    }
+
+    #[test]
+    fn diverge_within_first_page_makes_siblings() {
+        let (mut c, mut p) = (cache(64), pool(64));
+        let a = toks(&[(1, 3), (9, 5)]); // differs from b inside page 0
+        let b = toks(&[(1, 3), (8, 5)]);
+        admit(&mut c, &mut p, 1, &a, 0);
+        let (mb, _) = admit(&mut c, &mut p, 2, &b, 0);
+        assert_eq!(mb, 0, "no whole page in common");
+        assert_eq!(c.num_nodes(), 2, "siblings under the root, no split");
+        assert_eq!(c.match_prefix(&a).tokens, 8);
+        assert_eq!(c.match_prefix(&b).tokens, 8);
+    }
+
+    #[test]
+    fn shorter_prefix_insert_splits_and_matches() {
+        let (mut c, mut p) = (cache(64), pool(64));
+        let long = toks(&[(5, 16)]); // 4 pages
+        let short = toks(&[(5, 8)]); // first 2 of them
+        admit(&mut c, &mut p, 1, &long, 0);
+        let (m, node) = admit(&mut c, &mut p, 2, &short, 0);
+        assert_eq!(m, 8);
+        assert!(node.is_some());
+        assert_eq!(c.cached_pages(), 4, "no new pages: short is a prefix of long");
+        assert_eq!(c.match_prefix(&long).tokens, 16);
+    }
+
+    #[test]
+    fn pages_survive_source_sequence_release() {
+        let (mut c, mut p) = (cache(64), pool(16));
+        let prompt = toks(&[(4, 8)]);
+        admit(&mut c, &mut p, 1, &prompt, 4);
+        // Write recognizable bytes through seq 1, then release it.
+        p.token_slot_mut(1, 0).unwrap().fill(0xEE);
+        p.release(1).unwrap();
+        // The cached pages are still resident; a new sequence sees them.
+        let m = c.match_prefix(&prompt);
+        assert_eq!(m.tokens, 8);
+        p.register_with_prefix(2, &m.pages, 12).unwrap();
+        assert_eq!(p.token_slot(2, 0).unwrap(), &[0xEE; 2]);
+        p.release(2).unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_frees_cold_leaves_first() {
+        let (mut c, mut p) = (cache(64), pool(64));
+        let a = toks(&[(1, 8)]);
+        let b = toks(&[(2, 8)]);
+        admit(&mut c, &mut p, 1, &a, 0);
+        admit(&mut c, &mut p, 2, &b, 0);
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        // Touch `a` so `b` is the LRU entry.
+        c.match_prefix(&a);
+        let freed = c.evict_lru(&mut p, 2);
+        assert_eq!(freed, 2);
+        assert_eq!(c.match_prefix(&b).tokens, 0, "b evicted");
+        assert_eq!(c.match_prefix(&a).tokens, 8, "a survived");
+    }
+
+    #[test]
+    fn eviction_refuses_pinned_nodes() {
+        let (mut c, mut p) = (cache(64), pool(64));
+        let a = toks(&[(1, 16), (2, 8)]);
+        admit(&mut c, &mut p, 1, &a, 0);
+        let m = c.match_prefix(&a);
+        let node = m.node.unwrap();
+        c.pin(node);
+        p.release(1).unwrap();
+        // Pinned leaf (and transitively its ancestors) must survive.
+        assert_eq!(c.evict_lru(&mut p, 100), 0);
+        assert_eq!(c.match_prefix(&a).tokens, 24);
+        // Unpin → evictable (leaf first, then the freed-up parent chain).
+        c.unpin(node);
+        assert!(c.evict_lru(&mut p, 100) >= 6);
+        assert_eq!(c.match_prefix(&a).tokens, 0);
+        assert_eq!(c.cached_pages(), 0);
+    }
+
+    #[test]
+    fn pinned_inner_node_protects_ancestors_only() {
+        let (mut c, mut p) = (cache(64), pool(64));
+        let a = toks(&[(1, 16), (2, 8)]);
+        let b = toks(&[(1, 16), (3, 8)]);
+        admit(&mut c, &mut p, 1, &a, 0);
+        let (_, nb) = admit(&mut c, &mut p, 2, &b, 0);
+        c.pin(nb.unwrap());
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        // Evict everything possible: a's tail goes, b's chain stays.
+        c.evict_lru(&mut p, 100);
+        assert_eq!(c.match_prefix(&b).tokens, 24);
+        assert_eq!(c.match_prefix(&a).tokens, 16, "shared head survives via b");
+    }
+
+    #[test]
+    fn make_room_is_all_or_nothing() {
+        let (mut c, mut p) = (cache(64), pool(16));
+        // One cold entry (2 freeable pages) + one pinned entry.
+        let cold = toks(&[(1, 8)]);
+        let hot = toks(&[(2, 8)]);
+        admit(&mut c, &mut p, 1, &cold, 0);
+        let (_, hot_node) = admit(&mut c, &mut p, 2, &hot, 0);
+        c.pin(hot_node.unwrap());
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(c.freeable_pages(&p), 2, "only the cold entry is freeable");
+        // Asking for more than the cache can ever free: nothing evicted.
+        assert!(!c.make_room(&mut p, 3));
+        assert_eq!(c.match_prefix(&cold).tokens, 8, "cold entry untouched");
+        // Asking for what it can free succeeds and frees exactly enough.
+        assert!(c.make_room(&mut p, 2));
+        assert_eq!(c.match_prefix(&cold).tokens, 0);
+        assert_eq!(c.match_prefix(&hot).tokens, 8, "pinned entry survives");
+    }
+
+    #[test]
+    fn budget_enforcement_trims_lru() {
+        let (mut c, mut p) = (cache(4), pool(64));
+        for (i, t) in [1u32, 2, 3].iter().enumerate() {
+            let prompt = toks(&[(*t, 8)]); // 2 pages each
+            admit(&mut c, &mut p, i as u64 + 1, &prompt, 0);
+            p.release(i as u64 + 1).unwrap();
+            c.enforce_budget(&mut p);
+        }
+        assert!(c.cached_pages() <= 4, "budget enforced: {}", c.cached_pages());
+        // The most recent prompt is still cached.
+        assert_eq!(c.match_prefix(&toks(&[(3, 8)])).tokens, 8);
+    }
+
+    #[test]
+    fn make_room_eviction_skips_nodes_shared_with_active_seqs() {
+        let (mut c, mut p) = (cache(64), pool(16));
+        let prompt = toks(&[(6, 8)]);
+        admit(&mut c, &mut p, 1, &prompt, 0);
+        // Seq 1 is still active (its table shares the cached pages), so
+        // evicting this node would free nothing — it must be left cached
+        // rather than destroyed for no reclaimed room.
+        let freed = c.evict_lru(&mut p, 100);
+        assert_eq!(freed, 0, "nothing reclaimable while the sequence runs");
+        assert_eq!(c.match_prefix(&prompt).tokens, 8, "entry survives");
+        assert_eq!(p.used_pages(), 2);
+        // Once the sequence retires, the same eviction reclaims the pages.
+        p.release(1).unwrap();
+        assert_eq!(c.evict_lru(&mut p, 100), 2);
+        assert_eq!(p.used_pages(), 0);
+        // Budget enforcement, by contrast, may drop still-shared nodes.
+        admit(&mut c, &mut p, 2, &prompt, 0);
+        let mut tight = RadixPrefixCache::new(PrefixConfig { page_tokens: PT, max_pages: 0 });
+        let m = tight.insert(&prompt, &mut p, 2);
+        assert!(m.is_some());
+        tight.enforce_budget(&mut p);
+        assert_eq!(tight.cached_pages(), 0, "budget eviction drops shared nodes");
+        p.release(2).unwrap();
+    }
+}

@@ -17,6 +17,7 @@ fn server(workers: usize, pool_tokens: usize) -> Server {
         batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
         pool_tokens,
         max_active: 4,
+        prefix_cache: true,
     })
 }
 
