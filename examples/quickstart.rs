@@ -44,10 +44,11 @@ fn main() {
         model: ModelConfig::mini(),
         seed: 0,
         workers: 1,
-        // Off so the per-method prefill times below stay comparable: with
-        // the cache on, the second method would reuse the first method's
-        // prompt KV (the store is method-independent) and prefill ~6x
-        // less work. See examples/chat_prefix_reuse.rs for the cache.
+        // Off to keep this demo about the codecs themselves. Prefix
+        // caching is codec-keyed (pool pages hold encoded bytes, so
+        // methods never share each other's prefixes), but each method
+        // here runs once — there is nothing for the cache to do. See
+        // examples/chat_prefix_reuse.rs for the cache in action.
         prefix_cache: false,
         ..Default::default()
     });

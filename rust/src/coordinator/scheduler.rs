@@ -12,8 +12,9 @@
 //! the real model.
 
 use crate::coordinator::request::{GenRequest, GenResponse, Timing, Tracked};
-use crate::kvcache::paged::PagedPool;
-use crate::prefix::{NodeId, PrefixConfig, RadixPrefixCache};
+use crate::kvcache::codec::is_page_codec;
+use crate::kvcache::paged::{share, PagedPool, SharedPool};
+use crate::prefix::{NodeId, PrefixCacheSet, PrefixConfig, PrefixMatch};
 use std::time::Instant;
 
 /// One active sequence's scheduler state.
@@ -39,17 +40,14 @@ pub trait StepEngine {
     /// Prefill; returns (engine sequence id, first sampled token).
     fn prefill(&mut self, req: &GenRequest) -> (u64, u32);
     /// Prefill with a prefix-cache hint: the scheduler matched the first
-    /// `reuse_tokens` of the prompt in its radix cache and asks the engine
-    /// to skip recomputing them if it can, and to snapshot the first
-    /// `store_tokens` (the page-aligned prompt) for future reuse. Returns
-    /// (engine id, first token, tokens actually reused) — engines without
-    /// a reuse path fall back to a full prefill.
-    fn prefill_reuse(
-        &mut self,
-        req: &GenRequest,
-        _reuse_tokens: usize,
-        _store_tokens: usize,
-    ) -> (u64, u32, usize) {
+    /// `reuse_tokens` of the prompt in its radix cache — those tokens'
+    /// encoded KV already sit in the sequence's (shared) pool pages, so
+    /// the engine should skip recomputing them if it can. There is no
+    /// separate store step: the engine's prompt encoding writes the
+    /// pages the radix tree will reference. Returns (engine id, first
+    /// token, tokens actually reused) — engines without a reuse path
+    /// fall back to a full prefill.
+    fn prefill_reuse(&mut self, req: &GenRequest, _reuse_tokens: usize) -> (u64, u32, usize) {
         let (id, first) = self.prefill(req);
         (id, first, 0)
     }
@@ -65,15 +63,23 @@ pub trait StepEngine {
 
 /// A passed admission gate from [`Scheduler::gate_request`]: the serving
 /// loop gates each batch candidate (accumulating `pages` into the
-/// pending total), admits the batch, then releases every gate. While a
-/// gate is held, its matched radix path cannot be evicted, which is what
-/// makes the gate's promise sound: a gated request's page reservation in
-/// `admit` cannot fail.
+/// pending total), then feeds the gated pairs to
+/// [`Scheduler::admit_gated`], which consumes the gate — its radix
+/// match/pin is computed once here and reused at admission instead of
+/// re-running the match. While a gate is held, its matched radix path
+/// cannot be evicted, which is what makes the gate's promise sound: a
+/// gated request's page reservation at admission cannot fail.
 #[derive(Debug)]
 pub struct AdmitGate {
     /// Fresh pool pages the request will consume (prefix-credited).
     pub pages: usize,
-    pinned: Option<NodeId>,
+    /// The pinned radix match (page-aligned shared pages + pinned node).
+    m: PrefixMatch,
+    method: String,
+    /// Prefix-cache insert epoch at gate time: if the tree grew before
+    /// admission (an earlier batch member published its prompt),
+    /// admission re-matches so intra-batch shared prefixes still share.
+    epoch: u64,
 }
 
 /// Prefix-cache activity since the last [`Scheduler::take_prefix_events`]
@@ -100,17 +106,26 @@ pub struct StepOutcome {
 /// The scheduler.
 pub struct Scheduler {
     pub active: Vec<ActiveSeq>,
-    pub pool: PagedPool,
+    /// The single KV substrate, shared with the engine (which encodes
+    /// and scores page slots while the scheduler does admission,
+    /// sharing, and accounting on the same pages).
+    pub pool: SharedPool,
     /// Max sequences decoding simultaneously.
     pub max_active: usize,
-    /// Optional radix-tree prefix cache over the pool's pages.
-    pub prefix: Option<RadixPrefixCache>,
+    /// Optional per-codec radix-tree prefix caches over the pool's pages.
+    pub prefix: Option<PrefixCacheSet>,
     events: PrefixEvents,
     reported_evictions: u64,
 }
 
 impl Scheduler {
     pub fn new(pool: PagedPool, max_active: usize) -> Self {
+        Self::from_shared(share(pool), max_active)
+    }
+
+    /// A scheduler over an existing shared pool (the server hands the
+    /// same handle to the engine).
+    pub fn from_shared(pool: SharedPool, max_active: usize) -> Self {
         Self {
             active: Vec::new(),
             pool,
@@ -124,9 +139,19 @@ impl Scheduler {
     /// A scheduler with the radix-tree prefix cache enabled; the cache may
     /// keep up to `cache_pages` of the pool referenced for reuse.
     pub fn with_prefix_cache(pool: PagedPool, max_active: usize, cache_pages: usize) -> Self {
-        let cfg = PrefixConfig { page_tokens: pool.cfg.page_tokens, max_pages: cache_pages };
-        let mut s = Self::new(pool, max_active);
-        s.prefix = Some(RadixPrefixCache::new(cfg));
+        Self::with_prefix_cache_shared(share(pool), max_active, cache_pages)
+    }
+
+    /// Shared-pool variant of [`with_prefix_cache`](Self::with_prefix_cache).
+    pub fn with_prefix_cache_shared(
+        pool: SharedPool,
+        max_active: usize,
+        cache_pages: usize,
+    ) -> Self {
+        let page_tokens = pool.lock().unwrap().cfg.page_tokens;
+        let cfg = PrefixConfig { page_tokens, max_pages: cache_pages };
+        let mut s = Self::from_shared(pool, max_active);
+        s.prefix = Some(PrefixCacheSet::new(cfg));
         s
     }
 
@@ -137,64 +162,87 @@ impl Scheduler {
     /// [`gate_request`](Self::gate_request) to also credit prefix hits
     /// and evict cold cache entries to make the room.
     pub fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
-        self.active.len() < self.max_active && self.pool.can_admit(prompt_len + max_new)
+        self.active.len() < self.max_active
+            && self.pool.lock().unwrap().can_admit(prompt_len + max_new)
+    }
+
+    /// Match the longest cached prefix for a prompt and pin it. Prefixes
+    /// are codec-keyed: only page-codec methods can share pages, since
+    /// the pages hold that codec's encoded bytes.
+    fn match_and_pin(&mut self, method: &str, prompt: &[u32]) -> PrefixMatch {
+        if let Some(pc) = &mut self.prefix {
+            if is_page_codec(method) {
+                let m = pc.match_prefix(method, prompt);
+                if let Some(n) = m.node {
+                    pc.pin(method, n);
+                }
+                return m;
+            }
+        }
+        PrefixMatch::default()
     }
 
     /// Gate one request for admission: make room for it (evicting cold,
     /// freeable cache entries only when that covers the shortfall) and,
     /// on success, return an [`AdmitGate`] carrying its prefix-credited
-    /// page demand plus a pin on the matched radix path. The caller
-    /// accumulates `pages` into `pending_pages` for subsequent gate
-    /// calls and releases every gate after the batch is admitted.
+    /// page demand plus the pinned radix match itself — admission via
+    /// [`admit_gated`](Self::admit_gated) reuses it instead of matching
+    /// again. The caller accumulates `pages` into `pending_pages` for
+    /// subsequent gate calls.
     pub fn gate_request(
         &mut self,
         prompt: &[u32],
         max_new: usize,
+        method: &str,
         pending_seqs: usize,
         pending_pages: usize,
     ) -> Option<AdmitGate> {
         if self.active.len() + pending_seqs >= self.max_active {
             return None;
         }
-        let need = self.pool.pages_for(prompt.len() + max_new);
         // Credit the longest cached prefix: matched pages are shared into
         // the block table, not allocated — and pinning them here keeps
         // later gate evictions (and earlier admits' budget trims) from
         // destroying the very entry this request is about to hit.
-        let (credit, pinned) = match &mut self.prefix {
-            Some(pc) => {
-                let m = pc.match_prefix(prompt);
-                if let Some(n) = m.node {
-                    pc.pin(n);
+        let m = self.match_and_pin(method, prompt);
+        let epoch = self.prefix.as_ref().map(|pc| pc.epoch()).unwrap_or(0);
+        let fits = {
+            let mut pool = self.pool.lock().unwrap();
+            let need = pool.pages_for(prompt.len() + max_new);
+            let fresh = need.saturating_sub(m.pages.len());
+            let want = fresh + pending_pages;
+            if want > pool.free_pages() {
+                if let Some(pc) = &mut self.prefix {
+                    // All-or-nothing: a request the cache cannot make room
+                    // for must not destroy reusable entries while failing.
+                    let short = want - pool.free_pages();
+                    pc.make_room(&mut pool, short);
                 }
-                (m.pages.len(), m.node)
             }
-            None => (0, None),
+            if want <= pool.free_pages() {
+                Some(fresh)
+            } else {
+                None
+            }
         };
-        let fresh = need.saturating_sub(credit);
-        let want = fresh + pending_pages;
-        if want > self.pool.free_pages() {
-            if let Some(pc) = &mut self.prefix {
-                // All-or-nothing: a request the cache cannot make room
-                // for must not destroy reusable entries while failing.
-                let short = want - self.pool.free_pages();
-                pc.make_room(&mut self.pool, short);
+        match fits {
+            Some(fresh) => {
+                Some(AdmitGate { pages: fresh, m, method: method.to_string(), epoch })
             }
-        }
-        if want <= self.pool.free_pages() {
-            Some(AdmitGate { pages: fresh, pinned })
-        } else {
-            if let (Some(pc), Some(n)) = (&mut self.prefix, pinned) {
-                pc.unpin(n);
+            None => {
+                if let (Some(pc), Some(n)) = (&mut self.prefix, m.node) {
+                    pc.unpin(method, n);
+                }
+                None
             }
-            None
         }
     }
 
-    /// Drop a gate's pin after the batch it guarded has been admitted.
+    /// Drop a gate's pin without admitting it (the request was dropped
+    /// after gating).
     pub fn release_gate(&mut self, gate: AdmitGate) {
-        if let (Some(pc), Some(n)) = (&mut self.prefix, gate.pinned) {
-            pc.unpin(n);
+        if let (Some(pc), Some(n)) = (&mut self.prefix, gate.m.node) {
+            pc.unpin(&gate.method, n);
         }
     }
 
@@ -207,112 +255,136 @@ impl Scheduler {
     pub fn admit<E: StepEngine>(&mut self, batch: Vec<Tracked>, engine: &mut E) -> usize {
         let mut n = 0;
         for t in batch {
-            let now = Instant::now();
-            let queue_s = now.duration_since(t.arrived).as_secs_f64();
-            let prompt_len = t.req.prompt.len();
-            let total = prompt_len + t.req.max_new_tokens;
+            let m = self.match_and_pin(&t.req.method, &t.req.prompt);
+            n += self.admit_one(t, m, engine);
+        }
+        n
+    }
 
-            // Longest cached prefix (page-granular); pin it so eviction
-            // below cannot drop the matched pages mid-admission.
-            let (m_pages, m_tokens, m_node) = match &mut self.prefix {
-                Some(pc) => {
-                    let m = pc.match_prefix(&t.req.prompt);
-                    if let Some(nid) = m.node {
-                        pc.pin(nid);
-                    }
-                    (m.pages, m.tokens, m.node)
+    /// Admit a batch gated by [`gate_request`](Self::gate_request),
+    /// consuming each gate's pinned radix match — in the steady state
+    /// the match is computed once per request (at the gate). The one
+    /// exception: if the tree grew between gating and admission (an
+    /// earlier member of this batch published a shared prefix), the
+    /// stale match is swapped for a fresh one so intra-batch bursts of
+    /// a common prompt still share pages and skip prefill. A refreshed
+    /// match can only be longer than the gate's (its pinned path cannot
+    /// be evicted), so the gate's page reservation stays sound.
+    pub fn admit_gated<E: StepEngine>(
+        &mut self,
+        batch: Vec<(Tracked, AdmitGate)>,
+        engine: &mut E,
+    ) -> usize {
+        let mut n = 0;
+        for (t, g) in batch {
+            debug_assert_eq!(g.method, t.req.method, "gate paired with wrong request");
+            let stale = self
+                .prefix
+                .as_ref()
+                .map(|pc| pc.epoch() != g.epoch)
+                .unwrap_or(false);
+            let m = if stale {
+                if let (Some(pc), Some(nid)) = (&mut self.prefix, g.m.node) {
+                    pc.unpin(&g.method, nid);
                 }
-                None => (Vec::new(), 0, None),
+                self.match_and_pin(&t.req.method, &t.req.prompt)
+            } else {
+                g.m
             };
+            n += self.admit_one(t, m, engine);
+        }
+        n
+    }
 
-            // Make room by evicting cache entries — only if that can
-            // actually cover the shortfall (all-or-nothing).
-            let fresh_needed = self.pool.pages_for(total).saturating_sub(m_pages.len());
-            if fresh_needed > self.pool.free_pages() {
+    /// Admit one request whose radix match `m` is already pinned (or
+    /// empty). Returns 1 on admission, 0 on skip (pin released).
+    fn admit_one<E: StepEngine>(&mut self, t: Tracked, m: PrefixMatch, engine: &mut E) -> usize {
+        let now = Instant::now();
+        let queue_s = now.duration_since(t.arrived).as_secs_f64();
+        let total = t.req.prompt.len() + t.req.max_new_tokens;
+        let eligible = is_page_codec(&t.req.method);
+
+        // Reserve pages for prompt + full generation budget up front
+        // (conservative admission → fewer preemptions), sharing the
+        // matched prefix pages; make room first by evicting cache
+        // entries — only if that can actually cover the shortfall.
+        let registered = {
+            let mut pool = self.pool.lock().unwrap();
+            let fresh_needed = pool.pages_for(total).saturating_sub(m.pages.len());
+            if fresh_needed > pool.free_pages() {
                 if let Some(pc) = &mut self.prefix {
-                    let short = fresh_needed - self.pool.free_pages();
-                    pc.make_room(&mut self.pool, short);
+                    let short = fresh_needed - pool.free_pages();
+                    pc.make_room(&mut pool, short);
                 }
             }
-
-            // Reserve pages for prompt + full generation budget up front
-            // (conservative admission → fewer preemptions), sharing the
-            // matched prefix pages.
-            if self
-                .pool
-                .register_with_prefix(t.req.id, &m_pages, total)
-                .is_err()
-            {
-                if let (Some(pc), Some(nid)) = (&mut self.prefix, m_node) {
-                    pc.unpin(nid);
-                }
-                // Shouldn't happen if can_admit was checked; skip.
-                continue;
+            pool.register_with_prefix(t.req.id, &m.pages, total).is_ok()
+        };
+        if !registered {
+            if let (Some(pc), Some(nid)) = (&mut self.prefix, m.node) {
+                pc.unpin(&t.req.method, nid);
             }
+            // Shouldn't happen if the request was gated; skip.
+            return 0;
+        }
 
-            let store_tokens = if self.prefix.is_some() {
-                prompt_len - prompt_len % self.pool.cfg.page_tokens
-            } else {
-                0
-            };
-            let t0 = Instant::now();
-            let (engine_id, first, reused) = if self.prefix.is_some() {
-                engine.prefill_reuse(&t.req, m_tokens, store_tokens)
-            } else {
-                let (id, f) = engine.prefill(&t.req);
-                (id, f, 0)
-            };
-            let prefill_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let (engine_id, first, reused) = if self.prefix.is_some() && eligible {
+            engine.prefill_reuse(&t.req, m.tokens)
+        } else {
+            let (id, f) = engine.prefill(&t.req);
+            (id, f, 0)
+        };
+        let prefill_s = t0.elapsed().as_secs_f64();
 
-            // Publish this prompt for future requests; the pin moves from
-            // the matched node to the (deeper) inserted leaf.
-            let mut prefix_node = None;
-            if let Some(pc) = &mut self.prefix {
-                let leaf = pc.insert(&t.req.prompt, &mut self.pool, t.req.id);
+        // Publish this prompt for future requests; the pin moves from
+        // the matched node to the (deeper) inserted leaf. The engine's
+        // prefill already encoded the prompt into this sequence's pool
+        // pages, so the inserted leaf references ready-to-share bytes.
+        let mut prefix_node = None;
+        if let Some(pc) = &mut self.prefix {
+            if eligible {
+                let mut pool = self.pool.lock().unwrap();
+                let leaf = pc.insert(&t.req.method, &t.req.prompt, &mut pool, t.req.id);
                 if let Some(l) = leaf {
-                    pc.pin(l);
+                    pc.pin(&t.req.method, l);
                 }
-                if let Some(nid) = m_node {
-                    pc.unpin(nid);
+                if let Some(nid) = m.node {
+                    pc.unpin(&t.req.method, nid);
                 }
                 prefix_node = leaf;
-                // A hit means the engine actually skipped prefill work; a
-                // radix match whose KV snapshot was unavailable (evicted,
-                // or suffix too short to reuse) counts as a miss so
-                // hit_rate tracks real latency wins.
+                // A hit means the engine actually skipped prefill work.
                 if reused > 0 {
                     self.events.hits += 1;
                 } else {
                     self.events.misses += 1;
                 }
                 self.events.tokens_reused += reused as u64;
-                pc.enforce_budget(&mut self.pool);
+                pc.enforce_budget(&mut pool);
             }
-
-            let done = Instant::now();
-            self.active.push(ActiveSeq {
-                queue_s,
-                prefill_s,
-                prefill_done: done,
-                arrived: t.arrived,
-                generated: vec![first],
-                ttft_s: Some(done.duration_since(t.arrived).as_secs_f64()),
-                decode_s: 0.0,
-                engine_id,
-                reused_tokens: reused,
-                prefix_node,
-                req: t.req,
-            });
-            n += 1;
         }
-        n
+
+        let done = Instant::now();
+        self.active.push(ActiveSeq {
+            queue_s,
+            prefill_s,
+            prefill_done: done,
+            arrived: t.arrived,
+            generated: vec![first],
+            ttft_s: Some(done.duration_since(t.arrived).as_secs_f64()),
+            decode_s: 0.0,
+            engine_id,
+            reused_tokens: reused,
+            prefix_node,
+            req: t.req,
+        });
+        1
     }
 
     /// Drain prefix-cache activity since the last call (for metrics).
     pub fn take_prefix_events(&mut self) -> PrefixEvents {
         let mut ev = std::mem::take(&mut self.events);
         if let Some(pc) = &self.prefix {
-            let total = pc.stats().evicted_nodes;
+            let total = pc.evicted_nodes();
             ev.evicted_nodes = total - self.reported_evictions;
             self.reported_evictions = total;
             ev.cached_pages = pc.cached_pages();
@@ -357,7 +429,7 @@ impl Scheduler {
             };
             engine.release(seq.engine_id);
             self.retire_prefix_pin(&seq);
-            self.pool.release(seq.req.id).ok();
+            self.pool.lock().unwrap().release(seq.req.id).ok();
             outcome.finished.push(resp);
         }
         outcome
@@ -369,13 +441,13 @@ impl Scheduler {
         let seq = self.active.pop()?;
         engine.release(seq.engine_id);
         self.retire_prefix_pin(&seq);
-        self.pool.release(seq.req.id).ok();
+        self.pool.lock().unwrap().release(seq.req.id).ok();
         Some(seq.req)
     }
 
     fn retire_prefix_pin(&mut self, seq: &ActiveSeq) {
         if let (Some(pc), Some(nid)) = (&mut self.prefix, seq.prefix_node) {
-            pc.unpin(nid);
+            pc.unpin(&seq.req.method, nid);
         }
     }
 }
@@ -404,12 +476,7 @@ mod tests {
             self.prefills += 1;
             (self.next_id, 100)
         }
-        fn prefill_reuse(
-            &mut self,
-            req: &GenRequest,
-            reuse_tokens: usize,
-            _store_tokens: usize,
-        ) -> (u64, u32, usize) {
+        fn prefill_reuse(&mut self, req: &GenRequest, reuse_tokens: usize) -> (u64, u32, usize) {
             self.reuse_hints.push(reuse_tokens);
             let (id, first) = self.prefill(req);
             (id, first, reuse_tokens)
@@ -442,6 +509,9 @@ mod tests {
         Tracked::new(GenRequest::new(id, vec![1; prompt], max_new))
     }
 
+    /// Default request method in tests (page-codec eligible).
+    const M: &str = "polarquant-r-offline";
+
     #[test]
     fn admit_prefills_and_sets_ttft() {
         let mut s = sched(64, 4);
@@ -468,7 +538,7 @@ mod tests {
         assert_eq!(resp.tokens, vec![100, 101, 102]);
         assert!(s.active.is_empty());
         assert!(e.live.is_empty(), "engine released");
-        assert_eq!(s.pool.used_pages(), 0, "pages returned");
+        assert_eq!(s.pool.lock().unwrap().used_pages(), 0, "pages returned");
     }
 
     #[test]
@@ -494,10 +564,10 @@ mod tests {
         let mut s = sched(8, 4);
         let mut e = MockEngine::default();
         s.admit(vec![tracked(1, 16, 4), tracked(2, 16, 4)], &mut e);
-        let used = s.pool.used_pages();
+        let used = s.pool.lock().unwrap().used_pages();
         let req = s.preempt_newest(&mut e).unwrap();
         assert_eq!(req.id, 2);
-        assert!(s.pool.used_pages() < used);
+        assert!(s.pool.lock().unwrap().used_pages() < used);
         assert_eq!(s.active.len(), 1);
         assert_eq!(e.live.len(), 1);
     }
@@ -531,13 +601,13 @@ mod tests {
         s.admit(vec![tracked_prompt(1, prompt.clone(), 4)], &mut e);
         run_to_completion(&mut s, &mut e);
         // Prompt pages stay cached after the sequence retires.
-        assert_eq!(s.pool.used_pages(), 3);
+        assert_eq!(s.pool.lock().unwrap().used_pages(), 3);
 
         s.admit(vec![tracked_prompt(2, prompt.clone(), 4)], &mut e);
         assert_eq!(e.reuse_hints, vec![0, 12], "cold miss then 3-page hit");
         // Shared head: the new table starts with the cached pages.
-        let cached = s.prefix.as_mut().unwrap().match_prefix(&prompt).pages;
-        assert_eq!(s.pool.table(2).unwrap().pages[..3], cached[..]);
+        let cached = s.prefix.as_mut().unwrap().match_prefix(M, &prompt).pages;
+        assert_eq!(s.pool.lock().unwrap().table(2).unwrap().pages[..3], cached[..]);
         let resps = run_to_completion(&mut s, &mut e);
         assert_eq!(resps[0].reused_tokens, 12);
 
@@ -557,14 +627,14 @@ mod tests {
         let mut e = MockEngine::default();
         s.admit(vec![tracked_prompt(1, vec![1; 16], 4)], &mut e); // 5 pages
         run_to_completion(&mut s, &mut e);
-        assert_eq!(s.pool.free_pages(), 4, "4 prompt pages cached");
+        assert_eq!(s.pool.lock().unwrap().free_pages(), 4, "4 prompt pages cached");
         // A different prompt needing 5 pages: the cold entry is evicted.
         s.admit(vec![tracked_prompt(2, vec![2; 16], 4)], &mut e);
         assert_eq!(s.active.len(), 1);
         let ev = s.take_prefix_events();
         assert!(ev.evicted_nodes >= 1);
         assert_eq!(
-            s.prefix.as_mut().unwrap().match_prefix(&vec![1u32; 16]).tokens,
+            s.prefix.as_mut().unwrap().match_prefix(M, &vec![1u32; 16]).tokens,
             0,
             "cold entry gone"
         );
@@ -575,13 +645,13 @@ mod tests {
         let mut s = sched_prefix(8, 4, 100);
         let mut e = MockEngine::default();
         s.admit(vec![tracked_prompt(1, vec![1; 16], 4)], &mut e); // 5 pages, active
-        assert_eq!(s.pool.free_pages(), 3);
+        assert_eq!(s.pool.lock().unwrap().free_pages(), 3);
         // Next request cannot fit and the only cache entry is pinned by
         // the active sequence → admission skips it, nothing is broken.
         let n = s.admit(vec![tracked_prompt(2, vec![2; 16], 4)], &mut e);
         assert_eq!(n, 0);
         assert_eq!(
-            s.prefix.as_mut().unwrap().match_prefix(&vec![1u32; 16]).tokens,
+            s.prefix.as_mut().unwrap().match_prefix(M, &vec![1u32; 16]).tokens,
             16,
             "pinned pages survived the pressure"
         );
@@ -598,33 +668,116 @@ mod tests {
         let hot: Vec<u32> = vec![1; 16];
         s.admit(vec![tracked_prompt(1, hot.clone(), 4)], &mut e); // 5 pages
         // Active sequence pins its pages: no room to make for a stranger.
-        assert!(s.gate_request(&[2; 16], 4, 0, 0).is_none());
+        assert!(s.gate_request(&[2; 16], 4, M, 0, 0).is_none());
         run_to_completion(&mut s, &mut e);
         // Pool: 4 cached pages + 4 free. A request matching the cached
         // head needs only 1 fresh page — gated WITHOUT evicting the very
         // entry it is about to hit.
-        let g = s.gate_request(&hot, 4, 0, 0).expect("prefix-credited");
+        let g = s.gate_request(&hot, 4, M, 0, 0).expect("prefix-credited");
         assert_eq!(g.pages, 1, "5 needed minus 4 matched");
+        assert_eq!(g.m.tokens, 16, "gate carries the match itself");
+        assert_eq!(g.m.pages.len(), 4);
         assert_eq!(
-            s.prefix.as_mut().unwrap().match_prefix(&hot).tokens,
+            s.prefix.as_mut().unwrap().match_prefix(M, &hot).tokens,
             16,
             "matched entry survives the gate"
         );
         s.release_gate(g);
         // A non-matching request needs all 5 pages: now the cold entry
         // does get evicted to make room.
-        let g2 = s.gate_request(&[2u32; 16], 4, 0, 0).expect("room made");
+        let g2 = s.gate_request(&[2u32; 16], 4, M, 0, 0).expect("room made");
         assert_eq!(g2.pages, 5);
         s.release_gate(g2);
         assert_eq!(
-            s.prefix.as_mut().unwrap().match_prefix(&hot).tokens,
+            s.prefix.as_mut().unwrap().match_prefix(M, &hot).tokens,
             0,
             "cold entry evicted for the stranger"
         );
         // Batch-aware: pending pages count against free space.
-        assert!(s.gate_request(&[3u32; 16], 4, 1, 5).is_none());
+        assert!(s.gate_request(&[3u32; 16], 4, M, 1, 5).is_none());
         // The max_active bound is respected including pending seqs.
-        assert!(s.gate_request(&[3u32; 16], 4, 4, 0).is_none());
+        assert!(s.gate_request(&[3u32; 16], 4, M, 4, 0).is_none());
+    }
+
+    #[test]
+    fn admit_gated_consumes_the_gate_match() {
+        // The serving loop's path: gate → admit_gated. The radix match
+        // is computed once (at the gate); admission reuses it, shares
+        // the same pages, and retires the pin normally.
+        let mut s = sched_prefix(16, 4, 16);
+        let mut e = MockEngine::default();
+        let prompt: Vec<u32> = vec![9; 12]; // 3 full pages
+        let g = s.gate_request(&prompt, 4, M, 0, 0).expect("cold gate");
+        assert_eq!(g.pages, 4);
+        assert_eq!(g.m.tokens, 0);
+        s.admit_gated(vec![(tracked_prompt(1, prompt.clone(), 4), g)], &mut e);
+        run_to_completion(&mut s, &mut e);
+
+        let g2 = s.gate_request(&prompt, 4, M, 0, 0).expect("warm gate");
+        assert_eq!(g2.m.tokens, 12, "matched at the gate");
+        assert_eq!(g2.pages, 1, "4 needed minus 3 matched");
+        s.admit_gated(vec![(tracked_prompt(2, prompt.clone(), 4), g2)], &mut e);
+        assert_eq!(e.reuse_hints, vec![0, 12], "engine got the gate's match");
+        {
+            let pool = s.pool.lock().unwrap();
+            let t2 = pool.table(2).unwrap().pages.clone();
+            drop(pool);
+            let cached = s.prefix.as_mut().unwrap().match_prefix(M, &prompt).pages;
+            assert_eq!(t2[..3], cached[..], "gate's pages shared zero-copy");
+        }
+        let resps = run_to_completion(&mut s, &mut e);
+        assert_eq!(resps[0].reused_tokens, 12);
+        let ev = s.take_prefix_events();
+        assert_eq!((ev.hits, ev.misses), (1, 1));
+        // All pins retired: the cached entry is evictable again.
+        let freed = {
+            let mut pool = s.pool.lock().unwrap();
+            s.prefix.as_mut().unwrap().make_room(&mut pool, 3)
+        };
+        assert!(freed, "no pin leaked by the gate handoff");
+    }
+
+    #[test]
+    fn gated_batch_shares_intra_batch_prefixes() {
+        // Two identical prompts gated in the same (cold) batch: the
+        // second member's gate match is stale by admission time (the
+        // first member's insert bumped the epoch), so admission
+        // re-matches and the pair still shares pages + skips prefill.
+        let mut s = sched_prefix(32, 4, 32);
+        let mut e = MockEngine::default();
+        let prompt: Vec<u32> = vec![4; 12]; // 3 full pages
+        let mut pending = (0usize, 0usize);
+        let mut gates = Vec::new();
+        for _ in 0..2 {
+            let g = s.gate_request(&prompt, 4, M, pending.0, pending.1).expect("gated");
+            pending.0 += 1;
+            pending.1 += g.pages;
+            gates.push(g);
+        }
+        assert_eq!(gates[1].m.tokens, 0, "cold at gate time");
+        let batch: Vec<_> = (1..=2u64)
+            .map(|id| tracked_prompt(id, prompt.clone(), 4))
+            .zip(gates)
+            .collect();
+        s.admit_gated(batch, &mut e);
+        assert_eq!(e.reuse_hints, vec![0, 12], "2nd member re-matched after 1st insert");
+        {
+            let pool = s.pool.lock().unwrap();
+            assert_eq!(
+                pool.table(1).unwrap().pages[..3],
+                pool.table(2).unwrap().pages[..3],
+                "intra-batch shared head"
+            );
+        }
+        run_to_completion(&mut s, &mut e);
+        let ev = s.take_prefix_events();
+        assert_eq!((ev.hits, ev.misses), (1, 1));
+        // No pin leaked: the cached entry is fully evictable.
+        let ok = {
+            let mut pool = s.pool.lock().unwrap();
+            s.prefix.as_mut().unwrap().make_room(&mut pool, 3)
+        };
+        assert!(ok);
     }
 
     #[test]

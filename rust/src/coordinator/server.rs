@@ -13,9 +13,10 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResponse, Tracked};
 use crate::coordinator::router::Router;
-use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::scheduler::{AdmitGate, Scheduler};
 use crate::coordinator::worker::NativeWorker;
-use crate::kvcache::paged::{PagedConfig, PagedPool};
+use crate::kvcache::codec::max_slot_bytes;
+use crate::kvcache::paged::{share, PagedConfig, PagedPool};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::util::json::Json;
@@ -171,20 +172,24 @@ fn worker_loop(
     stopping: Arc<AtomicBool>,
 ) {
     let weights = Weights::synthetic(&cfg.model, cfg.seed);
-    let mut engine = NativeWorker::new(weights);
     let mut batcher = Batcher::new(cfg.batch.clone());
     let num_pages = cfg.pool_tokens / 16;
-    let pool = PagedPool::new(PagedConfig {
+    // One pool, two halves: the scheduler does admission/sharing on it,
+    // the engine encodes and scores KV inside its page slots. Slots are
+    // sized for the widest codec (exact f32); narrower codecs use a
+    // prefix of each slot.
+    let pool = share(PagedPool::new(PagedConfig {
         page_tokens: 16,
-        token_bytes: cfg.model.kv_bytes_per_token_fp16(),
+        token_bytes: max_slot_bytes(&cfg.model),
         num_pages,
-    });
+    }));
+    let mut engine = NativeWorker::with_pool(weights, Arc::clone(&pool));
     let mut sched = if cfg.prefix_cache {
         // The cache may pin up to half the pool; admission evicts cold
         // entries on demand, so this only bounds steady-state residency.
-        Scheduler::with_prefix_cache(pool, cfg.max_active, num_pages / 2)
+        Scheduler::with_prefix_cache_shared(pool, cfg.max_active, num_pages / 2)
     } else {
-        Scheduler::new(pool, cfg.max_active)
+        Scheduler::from_shared(pool, cfg.max_active)
     };
     let mut reported_cached_pages = 0usize;
 
@@ -219,11 +224,12 @@ fn worker_loop(
         // reservations cannot fail for a gated request.
         if batcher.ready(Instant::now()) || (!batcher.is_empty() && sched.active.is_empty()) {
             let mut pending = (0usize, 0usize); // (seqs, pages) gated so far
-            let mut gates = Vec::new();
+            let mut gates: Vec<AdmitGate> = Vec::new();
             let batch = batcher.next_batch(|t| {
                 match sched.gate_request(
                     &t.req.prompt,
                     t.req.max_new_tokens,
+                    &t.req.method,
                     pending.0,
                     pending.1,
                 ) {
@@ -238,10 +244,11 @@ fn worker_loop(
             });
             let admitted_any = !batch.is_empty();
             if admitted_any {
-                sched.admit(batch, &mut engine);
-            }
-            for g in gates {
-                sched.release_gate(g);
+                // Each gate carries its pinned radix match; admission
+                // consumes it — the match is computed once per request.
+                let paired: Vec<(Tracked, AdmitGate)> =
+                    batch.into_iter().zip(gates).collect();
+                sched.admit_gated(paired, &mut engine);
             }
             if !admitted_any && sched.active.is_empty() && !batcher.is_empty() {
                 // Head request cannot fit even an empty pool → reject it.
@@ -425,24 +432,24 @@ mod tests {
             req.session = Some("conv-1".into());
             req
         };
-        // 1st sighting: cold. 2nd: radix hit, but the engine only now
-        // snapshots the repeating head (no copy for one-off prompts).
-        // 3rd: the head is replayed from the snapshot.
+        // 1st sighting: cold prefill encodes the head into pool pages.
+        // Every later sighting replays those pages directly — the data
+        // plane IS the cache, so there is no snapshot lag.
         let r1 = s.generate_blocking(mk(7), Duration::from_secs(60)).expect("r1");
         assert_eq!(r1.reused_tokens, 0, "cold cache");
         let r2 = s.generate_blocking(mk(19), Duration::from_secs(60)).expect("r2");
-        assert_eq!(r2.reused_tokens, 0, "head seen twice: snapshotted, not yet replayed");
+        assert_eq!(r2.reused_tokens, 48, "encoded pages replayed on the 2nd sighting");
         let r3 = s.generate_blocking(mk(31), Duration::from_secs(60)).expect("r3");
         assert_eq!(r3.reused_tokens, 48, "3 shared pages replayed");
         assert_eq!(r1.tokens.len(), r3.tokens.len());
 
         let snap = s.metrics.snapshot();
         let parsed = Json::parse(&snap.encode()).unwrap();
-        assert_eq!(parsed.path("prefix_cache.hits").unwrap().as_f64().unwrap(), 1.0);
-        assert_eq!(parsed.path("prefix_cache.misses").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(parsed.path("prefix_cache.hits").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(parsed.path("prefix_cache.misses").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(
             parsed.path("prefix_cache.tokens_reused").unwrap().as_f64().unwrap(),
-            48.0
+            96.0
         );
         assert!(parsed.path("prefix_cache.cached_pages").unwrap().as_f64().unwrap() > 0.0);
         s.shutdown();

@@ -1,146 +1,89 @@
 //! The worker: a [`StepEngine`] implementation backed by the native
-//! transformer + compressed per-sequence caches. One worker owns one model
-//! replica; the router spreads sequences across workers.
+//! transformer with **pool-native KV**. One worker owns one model
+//! replica and shares one [`PagedPool`] with its scheduler: prefill
+//! encodes prompt KV straight into the sequence's page slots through a
+//! [`PageCodec`], decode scores/combines directly over those slots and
+//! appends its streamed pairs into them, and a radix prefix hit is
+//! served by *reading the shared pages back* — no separate snapshot
+//! store, no re-quantization, no second copy of any KV byte.
 //!
-//! The worker mirrors the scheduler's radix prefix cache with a
-//! materialized-KV snapshot store: page-aligned prompt prefixes map to
-//! their per-layer (RoPE-applied) K/V rows, so a radix hit turns into a
-//! [`Transformer::prefill_extend`] call that only runs the forward pass
-//! over the unseen suffix. Snapshots are content-addressed (token ids),
-//! method-independent (raw f32 rows, compressed per request afterwards),
-//! and LRU-evicted under a byte budget.
+//! Methods without a page codec (token-evicting SnapKV family,
+//! per-sequence-codebook `polarquant-r-online`) fall back to the legacy
+//! per-sequence [`SequenceCache`] heap path and do not participate in
+//! prefix reuse.
 
 use crate::coordinator::request::GenRequest;
 use crate::coordinator::scheduler::StepEngine;
+use crate::kvcache::codec::{max_slot_bytes, page_codec_for, KvLayout, PageCodec};
+use crate::kvcache::paged::{share, PagedConfig, PagedPool, SharedPool};
 use crate::kvcache::sequence::{CacheConfig, SequenceCache};
 use crate::model::config::ModelConfig;
 use crate::model::sampler::Sampler;
-use crate::model::transformer::{PastKv, PrefillOutput, Transformer, OBS_WINDOW};
+use crate::model::transformer::{PastKv, PrefillOutput, Transformer};
 use crate::model::weights::Weights;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-/// Default byte budget for the prefix snapshot store (per worker).
-pub const PREFIX_STORE_DEFAULT_BYTES: usize = 64 << 20;
+/// Default standalone pool size in tokens (a worker constructed without
+/// an external pool, e.g. in unit tests, gets its own).
+const STANDALONE_POOL_TOKENS: usize = 1 << 15;
 
 /// Native-engine worker.
 pub struct NativeWorker {
     pub model: Transformer,
+    pool: SharedPool,
     next_id: u64,
     sessions: BTreeMap<u64, Session>,
-    prefix_store: PrefixKvStore,
+    /// Memoized page codecs by method name.
+    codecs: BTreeMap<String, Arc<dyn PageCodec>>,
+    /// Bench/ablation toggle: `false` forces every method onto the
+    /// legacy heap path (no pool writes, no prefix reuse).
+    use_pool_substrate: bool,
+}
+
+enum SessionKv {
+    /// Pool-backed: encoded KV lives in the page slots of pool sequence
+    /// `seq` (the scheduler's request id).
+    Pooled {
+        seq: u64,
+        codec: Arc<dyn PageCodec>,
+        layout: KvLayout,
+        /// Whether this worker registered the pool sequence itself
+        /// (standalone use) and must release it.
+        owns_seq: bool,
+    },
+    /// Legacy per-sequence heap cache.
+    Legacy(SequenceCache),
 }
 
 struct Session {
-    cache: SequenceCache,
+    kv: SessionKv,
     sampler: Sampler,
-}
-
-/// One cached prompt prefix: token ids + per-layer K/V rows.
-struct PrefixSnapshot {
-    tokens: Vec<u32>,
-    kv: Arc<Vec<PastKv>>,
-    bytes: usize,
-    last_use: u64,
-}
-
-/// Content-addressed store of prompt-prefix K/V snapshots.
-struct PrefixKvStore {
-    entries: Vec<PrefixSnapshot>,
-    clock: u64,
-    budget_bytes: usize,
-    bytes: usize,
-}
-
-impl PrefixKvStore {
-    fn new(budget_bytes: usize) -> Self {
-        Self { entries: Vec::new(), clock: 0, budget_bytes, bytes: 0 }
-    }
-
-    /// Is `tokens` already served by a stored snapshot (an entry at least
-    /// as long whose head matches)? Cheap pre-check so callers skip
-    /// materializing K/V copies that `insert` would discard.
-    fn covers(&self, tokens: &[u32]) -> bool {
-        self.entries
-            .iter()
-            .any(|e| e.tokens.len() >= tokens.len() && e.tokens[..tokens.len()] == *tokens)
-    }
-
-    /// Find a snapshot whose tokens start with `prefix` (any entry at
-    /// least as long works — `prefill_extend` truncates via `past_len`).
-    fn lookup(&mut self, prefix: &[u32]) -> Option<Arc<Vec<PastKv>>> {
-        self.clock += 1;
-        let clock = self.clock;
-        let e = self
-            .entries
-            .iter_mut()
-            .find(|e| e.tokens.len() >= prefix.len() && e.tokens[..prefix.len()] == *prefix)?;
-        e.last_use = clock;
-        Some(Arc::clone(&e.kv))
-    }
-
-    /// Insert a snapshot for `tokens`, deduplicating lineages: an entry
-    /// that is a prefix of `tokens` is replaced (the longer snapshot
-    /// serves both); if an existing entry already covers `tokens`, skip.
-    fn insert(&mut self, tokens: Vec<u32>, kv: Vec<PastKv>) {
-        if tokens.is_empty() || self.covers(&tokens) {
-            return;
-        }
-        self.clock += 1;
-        let bytes = kv
-            .iter()
-            .map(|l| (l.keys.len() + l.values.len()) * std::mem::size_of::<f32>())
-            .sum::<usize>()
-            + tokens.len() * std::mem::size_of::<u32>();
-        // A snapshot that alone exceeds the budget must not enter: the
-        // LRU loop below spares the newest entry, so admitting it would
-        // evict every other session's snapshot and still stay over
-        // budget — on every turn of that oversized conversation.
-        if bytes > self.budget_bytes {
-            return;
-        }
-        // Drop entries this one supersedes.
-        let clock = self.clock;
-        self.entries.retain(|e| {
-            let superseded =
-                e.tokens.len() < tokens.len() && tokens[..e.tokens.len()] == e.tokens[..];
-            !superseded
-        });
-        self.bytes = self.entries.iter().map(|e| e.bytes).sum();
-        self.entries.push(PrefixSnapshot {
-            tokens,
-            kv: Arc::new(kv),
-            bytes,
-            last_use: clock,
-        });
-        self.bytes += bytes;
-        // LRU eviction under the byte budget (never the entry just added).
-        while self.bytes > self.budget_bytes && self.entries.len() > 1 {
-            let lru = self
-                .entries
-                .iter()
-                .enumerate()
-                .take(self.entries.len() - 1)
-                .min_by_key(|(_, e)| e.last_use)
-                .map(|(i, _)| i)
-                .expect("non-empty");
-            let gone = self.entries.remove(lru);
-            self.bytes -= gone.bytes;
-        }
-    }
-
-    fn len(&self) -> usize {
-        self.entries.len()
-    }
+    /// Tokens cached so far (prompt + decoded).
+    len: usize,
 }
 
 impl NativeWorker {
     pub fn new(weights: Weights) -> Self {
+        let cfg = weights.cfg.clone();
+        let pool = share(PagedPool::new(PagedConfig {
+            page_tokens: 16,
+            token_bytes: max_slot_bytes(&cfg),
+            num_pages: STANDALONE_POOL_TOKENS / 16,
+        }));
+        Self::with_pool(weights, pool)
+    }
+
+    /// A worker over an externally owned pool — the serving setup, where
+    /// the scheduler shares the same handle.
+    pub fn with_pool(weights: Weights, pool: SharedPool) -> Self {
         Self {
             model: Transformer::new(weights),
+            pool,
             next_id: 0,
             sessions: BTreeMap::new(),
-            prefix_store: PrefixKvStore::new(PREFIX_STORE_DEFAULT_BYTES),
+            codecs: BTreeMap::new(),
+            use_pool_substrate: true,
         }
     }
 
@@ -156,81 +99,178 @@ impl NativeWorker {
         self.sessions.len()
     }
 
-    /// Cap the prefix snapshot store (0 disables engine-side reuse).
-    pub fn set_prefix_store_budget(&mut self, bytes: usize) {
-        self.prefix_store.budget_bytes = bytes;
+    /// The KV substrate this worker encodes into.
+    pub fn shared_pool(&self) -> SharedPool {
+        Arc::clone(&self.pool)
     }
 
-    /// Snapshots currently held by the prefix store.
-    pub fn prefix_store_entries(&self) -> usize {
-        self.prefix_store.len()
+    /// Force the legacy heap path for every method (bench comparison).
+    pub fn set_pool_substrate(&mut self, on: bool) {
+        self.use_pool_substrate = on;
     }
 
     /// Total cache bytes across live sessions (for metrics/backpressure).
+    /// Pool-backed sessions report their slot footprint; with every
+    /// page-codec session resident in the pool, this tracks
+    /// `PagedPool::memory_bytes` instead of a shadow store.
     pub fn total_cache_bytes(&self) -> usize {
-        self.sessions.values().map(|s| s.cache.memory_bytes()).sum()
+        self.sessions.values().map(|s| self.session_bytes(s)).sum()
     }
 
-    /// Shared tail of both prefill paths: compress the prefill output into
-    /// a per-sequence cache and sample the first token.
-    fn finish_prefill(&mut self, req: &GenRequest, pre: &PrefillOutput) -> (u64, u32) {
+    fn session_bytes(&self, s: &Session) -> usize {
+        match &s.kv {
+            SessionKv::Pooled { layout, .. } => s.len * layout.slot_bytes(),
+            SessionKv::Legacy(c) => c.memory_bytes(),
+        }
+    }
+
+    fn codec_for(&mut self, method: &str) -> Option<Arc<dyn PageCodec>> {
+        if !self.use_pool_substrate {
+            return None;
+        }
+        if let Some(c) = self.codecs.get(method) {
+            return Some(Arc::clone(c));
+        }
+        let c = page_codec_for(method, self.model.cfg.head_dim)?;
+        self.codecs.insert(method.to_string(), Arc::clone(&c));
+        Some(c)
+    }
+
+    /// Pool-substrate tail of both prefill paths: encode prompt slots
+    /// `[encode_from..prompt_len)` (earlier slots are shared pages that
+    /// already hold this codec's bytes), sample the first token, and
+    /// open the session. Registers the pool sequence itself when no
+    /// block table exists (standalone use).
+    fn finish_prefill_pooled(
+        &mut self,
+        req: &GenRequest,
+        pre: &PrefillOutput,
+        codec: Arc<dyn PageCodec>,
+        encode_from: usize,
+    ) -> (u64, u32) {
+        let cfg = self.model.cfg.clone();
+        let layout = KvLayout::new(&cfg, codec.as_ref());
+        let prompt_len = req.prompt.len();
+        let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
+        let owns_seq = {
+            let mut pool = self.pool.lock().unwrap();
+            let owns = pool.table(req.id).is_none();
+            if owns {
+                pool.register(req.id, prompt_len + req.max_new_tokens)
+                    .expect("standalone worker pool has capacity");
+            }
+            for t in encode_from..prompt_len {
+                let slot = pool.token_slot_mut(req.id, t).expect("prompt slot allocated");
+                for (l, layer) in pre.kv.iter().enumerate() {
+                    for h in 0..cfg.n_heads {
+                        let off = layout.pair_offset(l, h);
+                        let k = &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh];
+                        let v = &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh];
+                        codec.encode_pair(k, v, &mut slot[off..off + layout.pair_bytes]);
+                    }
+                }
+            }
+            owns
+        };
+        let mut sampler = Sampler::new(req.sampler.clone());
+        let first = sampler.sample(pre.last_logits(cfg.vocab));
+        self.next_id += 1;
+        self.sessions.insert(
+            self.next_id,
+            Session {
+                kv: SessionKv::Pooled { seq: req.id, codec, layout, owns_seq },
+                sampler,
+                len: prompt_len,
+            },
+        );
+        (self.next_id, first)
+    }
+
+    /// Legacy tail: compress the prefill into per-(layer, head) boxes.
+    fn finish_prefill_legacy(&mut self, req: &GenRequest, pre: &PrefillOutput) -> (u64, u32) {
         let cache_cfg = CacheConfig::new(&req.method, req.ratio);
         let cache = SequenceCache::from_prefill(&self.model.cfg, &cache_cfg, pre);
         let mut sampler = Sampler::new(req.sampler.clone());
         let first = sampler.sample(pre.last_logits(self.model.cfg.vocab));
         self.next_id += 1;
-        self.sessions.insert(self.next_id, Session { cache, sampler });
+        self.sessions.insert(
+            self.next_id,
+            Session { kv: SessionKv::Legacy(cache), sampler, len: pre.seq_len },
+        );
         (self.next_id, first)
     }
 
-    /// Snapshot the first `n` prompt tokens' K/V rows out of a prefill.
-    fn snapshot_prefix(&mut self, tokens: &[u32], pre: &PrefillOutput, n: usize) {
-        if n == 0 || self.prefix_store.budget_bytes == 0 || n > pre.seq_len {
-            return;
+    /// Reconstruct the first `n` tokens' per-layer K/V rows from the
+    /// sequence's pool slots (a radix hit replays shared pages through
+    /// the codec — the only "store" is the pool itself). `None` when the
+    /// block table is missing or shorter than `n`.
+    fn read_past_from_pool(
+        &self,
+        seq: u64,
+        n: usize,
+        codec: &dyn PageCodec,
+    ) -> Option<Vec<PastKv>> {
+        let cfg = &self.model.cfg;
+        let layout = KvLayout::new(cfg, codec);
+        let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
+        let pool = self.pool.lock().unwrap();
+        let table = pool.table(seq)?;
+        if table.num_tokens(pool.cfg.page_tokens) < n {
+            return None;
         }
-        // Skip the (large) K/V copy when an existing snapshot already
-        // covers this prefix — the steady state for shared-prefix traffic.
-        if self.prefix_store.covers(&tokens[..n]) {
-            return;
-        }
-        let hd = self.model.cfg.n_heads * self.model.cfg.head_dim;
-        let kv: Vec<PastKv> = pre
-            .kv
-            .iter()
-            .map(|l| PastKv {
-                keys: l.keys[..n * hd].to_vec(),
-                values: l.values[..n * hd].to_vec(),
-            })
+        let mut past: Vec<PastKv> = (0..cfg.n_layers)
+            .map(|_| PastKv { keys: vec![0.0; n * hd], values: vec![0.0; n * hd] })
             .collect();
-        self.prefix_store.insert(tokens[..n].to_vec(), kv);
+        let mut k = vec![0.0f32; dh];
+        let mut v = vec![0.0f32; dh];
+        for t in 0..n {
+            let slot = pool.token_slot(seq, t)?;
+            for (l, layer) in past.iter_mut().enumerate() {
+                for h in 0..cfg.n_heads {
+                    let off = layout.pair_offset(l, h);
+                    codec.decode_pair(&slot[off..off + layout.pair_bytes], &mut k, &mut v);
+                    layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh].copy_from_slice(&k);
+                    layer.values[t * hd + h * dh..t * hd + (h + 1) * dh].copy_from_slice(&v);
+                }
+            }
+        }
+        Some(past)
     }
 }
 
 impl StepEngine for NativeWorker {
     fn prefill(&mut self, req: &GenRequest) -> (u64, u32) {
-        let pre = self.model.prefill(&req.prompt);
-        self.finish_prefill(req, &pre)
+        match self.codec_for(&req.method) {
+            Some(codec) => {
+                let pre = self.model.prefill(&req.prompt);
+                self.finish_prefill_pooled(req, &pre, codec, 0)
+            }
+            None => {
+                let pre = self.model.prefill(&req.prompt);
+                self.finish_prefill_legacy(req, &pre)
+            }
+        }
     }
 
-    fn prefill_reuse(
-        &mut self,
-        req: &GenRequest,
-        reuse_tokens: usize,
-        store_tokens: usize,
-    ) -> (u64, u32, usize) {
+    fn prefill_reuse(&mut self, req: &GenRequest, reuse_tokens: usize) -> (u64, u32, usize) {
+        let codec = match self.codec_for(&req.method) {
+            Some(c) => c,
+            None => {
+                // Legacy methods have no shareable page bytes to reuse.
+                let (id, first) = self.prefill(req);
+                return (id, first, 0);
+            }
+        };
         let prompt = &req.prompt;
-        // The reuse path needs a non-empty suffix (for logits + first
-        // sample) long enough to carry the observation window that
-        // score-based eviction methods read at compression time. Rather
-        // than abandoning reuse when the hint leaves a shorter suffix
-        // (short follow-up turns, exact prompt repeats), clamp the reuse
-        // point back — snapshots serve any prefix of their tokens.
-        let reuse = reuse_tokens.min(prompt.len().saturating_sub(OBS_WINDOW));
+        // The suffix forward pass needs at least one token to produce
+        // logits; an exact prompt repeat clamps back one token (its slot
+        // is already encoded in the shared pages, so nothing is lost).
+        let reuse = reuse_tokens.min(prompt.len().saturating_sub(1));
         let mut reused = 0;
         let mut pre: Option<PrefillOutput> = None;
         if reuse > 0 {
-            if let Some(past) = self.prefix_store.lookup(&prompt[..reuse]) {
-                let out = self.model.prefill_extend(past.as_slice(), reuse, &prompt[reuse..]);
+            if let Some(past) = self.read_past_from_pool(req.id, reuse, codec.as_ref()) {
+                let out = self.model.prefill_extend(&past, reuse, &prompt[reuse..]);
                 reused = reuse;
                 pre = Some(out);
             }
@@ -239,49 +279,72 @@ impl StepEngine for NativeWorker {
             Some(p) => p,
             None => self.model.prefill(prompt),
         };
-        // Snapshot only prefixes that demonstrably repeat: the
-        // scheduler's radix hint is nonzero from the second sighting of
-        // a prefix onward, so fully-unique traffic never pays the
-        // multi-megabyte K/V copy (at the cost of one extra cold prefill
-        // per repeating lineage before reuse kicks in).
-        if reuse_tokens > 0 {
-            self.snapshot_prefix(prompt, &pre, store_tokens);
-        }
-        let (id, first) = self.finish_prefill(req, &pre);
+        // Shared pages already hold the first `reuse_tokens` slots (the
+        // radix match is page-aligned); encode only what is new. A cold
+        // fallback owns all its pages and encodes everything.
+        let encode_from = if reused > 0 { reuse_tokens.min(prompt.len()) } else { 0 };
+        let (id, first) = self.finish_prefill_pooled(req, &pre, codec, encode_from);
         (id, first, reused)
     }
 
     fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32 {
         let session = self.sessions.get_mut(&engine_id).expect("live session");
-        let logits = self
-            .model
-            .decode_step(last_token, pos, &mut session.cache.caches);
-        session.cache.note_decoded();
+        let logits = match &mut session.kv {
+            SessionKv::Pooled { seq, codec, layout, .. } => {
+                debug_assert_eq!(session.len, pos, "pool slots must be contiguous");
+                let mut pool = self.pool.lock().unwrap();
+                self.model.decode_step_paged(
+                    last_token,
+                    pos,
+                    &mut pool,
+                    *seq,
+                    codec.as_ref(),
+                    layout,
+                )
+            }
+            SessionKv::Legacy(cache) => {
+                let logits = self.model.decode_step(last_token, pos, &mut cache.caches);
+                cache.note_decoded();
+                logits
+            }
+        };
+        session.len += 1;
         session.sampler.sample(&logits)
     }
 
     fn cache_bytes(&self, engine_id: u64) -> usize {
         self.sessions
             .get(&engine_id)
-            .map(|s| s.cache.memory_bytes())
+            .map(|s| self.session_bytes(s))
             .unwrap_or(0)
     }
 
     fn compression_ratio(&self, engine_id: u64) -> f64 {
+        let cfg = &self.model.cfg;
         self.sessions
             .get(&engine_id)
-            .map(|s| s.cache.compression_ratio(&self.model.cfg))
+            .map(|s| match &s.kv {
+                SessionKv::Pooled { layout, .. } => {
+                    layout.slot_bytes() as f64 / cfg.kv_bytes_per_token_fp16() as f64
+                }
+                SessionKv::Legacy(c) => c.compression_ratio(cfg),
+            })
             .unwrap_or(1.0)
     }
 
     fn release(&mut self, engine_id: u64) {
-        self.sessions.remove(&engine_id);
+        if let Some(s) = self.sessions.remove(&engine_id) {
+            if let SessionKv::Pooled { seq, owns_seq: true, .. } = s.kv {
+                self.pool.lock().unwrap().release(seq).ok();
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::paged::PagedConfig;
 
     fn worker() -> NativeWorker {
         NativeWorker::synthetic(&ModelConfig::test(), 5)
@@ -302,8 +365,11 @@ mod tests {
         let t1 = w.decode(eid, first, 24);
         assert!(t1 < 64);
         assert!(w.cache_bytes(eid) > 0);
+        // Standalone sessions own their pool pages and return them.
+        assert!(w.shared_pool().lock().unwrap().used_pages() > 0);
         w.release(eid);
         assert_eq!(w.live_sessions(), 0);
+        assert_eq!(w.shared_pool().lock().unwrap().used_pages(), 0);
     }
 
     #[test]
@@ -329,95 +395,146 @@ mod tests {
         let (eid, _) = w.prefill(&req(1, "polarquant-r-offline"));
         let ratio = w.compression_ratio(eid);
         assert!(ratio < 0.4, "ratio {ratio}");
-        let (eid2, _) = w.prefill(&req(2, "exact"));
-        assert!(w.compression_ratio(eid2) > 0.9);
+        // Pool-substrate "exact" is f32 (lossless), so its ratio vs the
+        // fp16 reference is 2.0; "fp16" sits at 1.0.
+        let (e2, _) = w.prefill(&req(2, "exact"));
+        assert!(w.compression_ratio(e2) > 1.5);
+        let (e3, _) = w.prefill(&req(3, "fp16"));
+        assert!((w.compression_ratio(e3) - 1.0).abs() < 1e-9);
     }
 
     #[test]
-    fn prefill_reuse_matches_full_prefill_exactly() {
-        // The reuse path replays identical float ops → identical sampled
-        // tokens, for every cache method.
+    fn pool_substrate_toggle_falls_back_to_legacy() {
+        let mut w = worker();
+        w.set_pool_substrate(false);
+        let (eid, first) = w.prefill(&req(1, "polarquant-r-offline"));
+        assert!(first < 64);
+        assert_eq!(
+            w.shared_pool().lock().unwrap().used_pages(),
+            0,
+            "legacy path never touches the pool"
+        );
+        let (_, _, reused) = w.prefill_reuse(&req(2, "polarquant-r-offline"), 16);
+        assert_eq!(reused, 0, "no pool pages → nothing to reuse");
+        w.release(eid);
+    }
+
+    #[test]
+    fn eviction_methods_stay_legacy_but_serve() {
+        let mut w = worker();
+        let (eid, first) = w.prefill(&req(1, "snapkv"));
+        assert!(first < 64);
+        assert_eq!(w.shared_pool().lock().unwrap().used_pages(), 0);
+        let t = w.decode(eid, first, 24);
+        assert!(t < 64);
+        let (_, _, reused) = w.prefill_reuse(&req(2, "snapkv"), 16);
+        assert_eq!(reused, 0, "eviction methods cannot share pages");
+    }
+
+    /// Scheduler-shaped reuse: seq 2's block table starts with seq 1's
+    /// already-encoded pages; the engine replays them through the codec.
+    fn share_prefix(w: &NativeWorker, from_seq: u64, to_seq: u64, pages: usize, total: usize) {
+        let pool = w.shared_pool();
+        let mut pool = pool.lock().unwrap();
+        let shared = pool.table(from_seq).unwrap().pages[..pages].to_vec();
+        pool.register_with_prefix(to_seq, &shared, total).unwrap();
+    }
+
+    #[test]
+    fn prefix_hit_from_shared_pages_matches_cold_exactly_for_exact() {
+        // The satellite invariant: with the lossless f32 codec, a radix
+        // hit (shared pages → decode_pair → prefill_extend) is
+        // bit-identical to a cold prefill, so greedy outputs match
+        // token-for-token. No snapshot store is involved — the past
+        // comes straight out of pool pages.
         let prompt: Vec<u32> = (0..48).map(|i| (i * 11 + 3) % 64).collect();
-        for method in ["exact", "polarquant-r-offline", "snapkv"] {
-            let mut w_cold = worker();
-            let mut w_warm = worker();
-            let mut r = GenRequest::new(1, prompt.clone(), 4);
-            r.method = method.into();
+        let mut w_cold = worker();
+        let mut w_warm = worker();
+        let mut r1 = GenRequest::new(1, prompt.clone(), 4);
+        r1.method = "exact".into();
+        let (ec, fc) = w_cold.prefill(&r1);
 
-            let (ec, fc) = w_cold.prefill(&r);
-            // Warm path: a request whose prefix the scheduler has seen
-            // before (nonzero radix hint) snapshots the 32-token head; a
-            // later request with the same head reuses it.
-            let head = GenRequest::new(0, prompt[..32].to_vec(), 4);
-            let (_, _, r0) = w_warm.prefill_reuse(&head, 8, 32);
-            assert_eq!(r0, 0, "nothing stored to reuse yet");
-            assert_eq!(w_warm.prefix_store_entries(), 1);
-            let (ew, fw, rw) = w_warm.prefill_reuse(&r, 32, 48);
-            assert_eq!(rw, 32, "prefix served from the snapshot store");
-            assert_eq!(fc, fw, "first token identical ({method})");
+        let (e0, _) = w_warm.prefill(&r1); // seeds pages for seq 1
+        share_prefix(&w_warm, 1, 2, 2, prompt.len() + 4); // 32-token head
+        let mut r2 = GenRequest::new(2, prompt.clone(), 4);
+        r2.method = "exact".into();
+        let (ew, fw, reused) = w_warm.prefill_reuse(&r2, 32);
+        assert_eq!(reused, 32, "past served from shared pool pages");
+        assert_eq!(fc, fw, "first token identical");
+        let mut lc = fc;
+        let mut lw = fw;
+        for i in 0..4 {
+            lc = w_cold.decode(ec, lc, 48 + i);
+            lw = w_warm.decode(ew, lw, 48 + i);
+            assert_eq!(lc, lw, "decode step {i} identical");
+        }
+        w_warm.release(e0);
+        w_warm.release(ew);
+        w_cold.release(ec);
+    }
 
-            let mut lc = fc;
-            let mut lw = fw;
-            for i in 0..4 {
-                lc = w_cold.decode(ec, lc, 48 + i);
-                lw = w_warm.decode(ew, lw, 48 + i);
-                assert_eq!(lc, lw, "decode step {i} identical ({method})");
-            }
-            assert_eq!(
-                w_cold.cache_bytes(ec),
-                w_warm.cache_bytes(ew),
-                "same compressed footprint ({method})"
+    #[test]
+    fn prefix_hit_reuses_quantized_pages_without_requantizing() {
+        // For lossy codecs the replayed past is the dequantized codes —
+        // the same bytes any decode step reads — and the shared head is
+        // not re-encoded (the slots are shared, zero-copy).
+        let prompt: Vec<u32> = (0..48).map(|i| (i * 7 + 1) % 64).collect();
+        for method in ["fp16", "kivi", "polarquant-r-offline"] {
+            let mut w = worker();
+            let mut r1 = GenRequest::new(1, prompt.clone(), 4);
+            r1.method = method.into();
+            let (e1, _) = w.prefill(&r1);
+            let used_before = w.shared_pool().lock().unwrap().used_pages();
+            share_prefix(&w, 1, 2, 2, prompt.len() + 4);
+            let mut r2 = GenRequest::new(2, prompt.clone(), 4);
+            r2.method = method.into();
+            let (e2, f2, reused) = w.prefill_reuse(&r2, 32);
+            assert_eq!(reused, 32, "{method}");
+            assert!(f2 < 64);
+            let used_after = w.shared_pool().lock().unwrap().used_pages();
+            // Only the unshared tail + generation room allocated fresh.
+            assert!(
+                used_after < 2 * used_before,
+                "{method}: shared head not duplicated ({used_before} → {used_after})"
             );
+            let t = w.decode(e2, f2, 48);
+            assert!(t < 64);
+            w.release(e1);
+            w.release(e2);
         }
     }
 
     #[test]
-    fn prefill_reuse_clamps_to_leave_observation_window() {
-        let prompt: Vec<u32> = (0..40).collect();
+    fn exact_repeat_clamps_reuse_to_leave_one_suffix_token() {
+        let prompt: Vec<u32> = (0..32).collect();
         let mut w = worker();
-        let r = GenRequest::new(1, prompt.clone(), 4);
-        let (_, _, r0) = w.prefill_reuse(&r, 40, 40);
-        assert_eq!(r0, 0, "nothing stored yet: full prefill + snapshot");
-        // A 32-token hint would leave an 8-token suffix < OBS_WINDOW;
-        // reuse clamps back to 24 instead of being discarded.
-        let (_, _, r1) = w.prefill_reuse(&r.clone(), 32, 40);
-        assert_eq!(r1, 40 - OBS_WINDOW, "clamped, not abandoned");
-        // Exact prompt repeat (hint == prompt length) clamps the same way.
-        let (_, _, r2) = w.prefill_reuse(&r.clone(), 40, 40);
-        assert_eq!(r2, 40 - OBS_WINDOW);
-        // A hint already leaving ≥ OBS_WINDOW is used as-is.
-        let (_, _, r3) = w.prefill_reuse(&r.clone(), 16, 40);
-        assert_eq!(r3, 16);
-        // Outputs stay identical to a cold prefill.
-        let mut cold = worker();
-        let (ec, fc) = cold.prefill(&r);
-        let (ew, fw, _) = w.prefill_reuse(&r.clone(), 40, 40);
-        assert_eq!(fc, fw);
-        let (tc, tw) = (cold.decode(ec, fc, 40), w.decode(ew, fw, 40));
-        assert_eq!(tc, tw);
+        let mut r1 = GenRequest::new(1, prompt.clone(), 4);
+        r1.method = "exact".into();
+        w.prefill(&r1);
+        // Share the whole (page-aligned) prompt: 32 tokens = 2 pages.
+        share_prefix(&w, 1, 2, 2, prompt.len() + 4);
+        let mut r2 = GenRequest::new(2, prompt.clone(), 4);
+        r2.method = "exact".into();
+        let (_, _, reused) = w.prefill_reuse(&r2, 32);
+        assert_eq!(reused, 31, "clamped so one suffix token yields logits");
     }
 
     #[test]
-    fn prefix_store_dedupes_lineages_and_respects_budget() {
+    fn pool_memory_accounting_matches_live_slots() {
+        // The acceptance invariant: pool bytes == every live page
+        // counted once — there is no second KV store to account.
         let mut w = worker();
-        let base: Vec<u32> = (0..32).collect();
-        let longer: Vec<u32> = (0..48).map(|i| i % 64).collect(); // extends base
-        let r1 = GenRequest::new(1, base.clone(), 4);
-        w.prefill_reuse(&r1, 32, 32); // repeating prefix → snapshot
-        assert_eq!(w.prefix_store_entries(), 1);
-        // A prompt extending the first replaces its snapshot.
-        let r2 = GenRequest::new(2, longer.clone(), 4);
-        w.prefill_reuse(&r2, 32, 48);
-        assert_eq!(w.prefix_store_entries(), 1, "lineage collapsed to the longest");
-        // Re-submitting the shorter prefix is served by the longer entry.
-        let r3 = GenRequest::new(3, base.iter().cloned().chain(100..132).collect(), 4);
-        let (_, _, reused) = w.prefill_reuse(&r3, 32, 64);
-        assert_eq!(reused, 32);
-        // Zero budget disables snapshotting entirely.
-        let mut w2 = worker();
-        w2.set_prefix_store_budget(0);
-        w2.prefill_reuse(&GenRequest::new(9, base, 4), 32, 32);
-        assert_eq!(w2.prefix_store_entries(), 0);
+        let (e1, _) = w.prefill(&req(1, "polarquant-r-offline"));
+        let (e2, _) = w.prefill(&req(2, "exact"));
+        let pool = w.shared_pool();
+        let pool = pool.lock().unwrap();
+        let live = pool.live_pages();
+        assert_eq!(pool.memory_bytes(), live.len() * pool.page_bytes());
+        assert!(pool.memory_bytes() > 0);
+        drop(pool);
+        w.release(e1);
+        w.release(e2);
+        assert_eq!(w.shared_pool().lock().unwrap().memory_bytes(), 0);
     }
 
     #[test]
@@ -431,8 +548,35 @@ mod tests {
         assert_eq!(fe, fq, "prefill logits identical (quantization starts at decode)");
         let t_e = we.decode(ee, fe, 24);
         let t_q = wq.decode(eq, fq, 24);
-        // Not guaranteed equal, but usually is on the test model; assert
-        // both valid tokens and report mismatch via message if it trips.
         assert!(t_e < 64 && t_q < 64);
+    }
+
+    #[test]
+    fn worker_shares_external_pool_with_scheduler_key() {
+        // Serving shape: the pool sequence is registered by the
+        // scheduler (request id) before the engine prefills; the worker
+        // must not re-register or release it.
+        let cfg = ModelConfig::test();
+        let pool = share(PagedPool::new(PagedConfig {
+            page_tokens: 16,
+            token_bytes: max_slot_bytes(&cfg),
+            num_pages: 16,
+        }));
+        let mut w = NativeWorker::with_pool(Weights::synthetic(&cfg, 5), Arc::clone(&pool));
+        pool.lock().unwrap().register(77, 24 + 4).unwrap();
+        let mut r = GenRequest::new(77, (0..24).collect(), 4);
+        r.method = "fp16".into();
+        let (eid, first) = w.prefill(&r);
+        let used = pool.lock().unwrap().used_pages();
+        assert!(used > 0);
+        w.decode(eid, first, 24);
+        w.release(eid);
+        assert_eq!(
+            pool.lock().unwrap().used_pages(),
+            used,
+            "scheduler-owned sequence not released by the engine"
+        );
+        pool.lock().unwrap().release(77).unwrap();
+        assert_eq!(pool.lock().unwrap().used_pages(), 0);
     }
 }

@@ -1,0 +1,900 @@
+//! Page-native KV codecs: the storage API that makes [`PagedPool`] the
+//! single KV substrate.
+//!
+//! A [`PageCodec`] encodes one head's (key, value) pair into a
+//! *fixed-size, self-contained byte slot* — everything needed to score
+//! or reconstruct the pair lives inside the slot, so pool pages can be
+//! shared zero-copy across sequences (prefix cache) with no side-channel
+//! state. This is exactly the contract PolarQuant's normalization-free
+//! design satisfies for free (pure packed angle codes + fp16 radii),
+//! and the contract that forces KIVI-style codecs to carry their
+//! per-group zero/scale constants *inside* the slot — making the
+//! paper's metadata-overhead claim visible in the byte layout itself.
+//!
+//! Slot layout (one pool token slot, `token_bytes` wide):
+//!
+//! ```text
+//! [ layer 0 head 0 pair | layer 0 head 1 pair | … | layer L-1 head H-1 pair | slack ]
+//! ```
+//!
+//! where each pair is `pair_bytes(d)` wide:
+//!
+//! | codec                  | pair layout (per head)                       | bits/coord |
+//! |------------------------|----------------------------------------------|------------|
+//! | `exact`                | k f32 · v f32                                | 32         |
+//! | `fp16`                 | k f16 · v f16                                | 16         |
+//! | `polarquant(-r-…)`     | (radii f16 + packed angles) ×2               | 3.875–4    |
+//! | `kivi`                 | (per-group zero/scale f16 + 2-bit codes) ×2  | 2 + 32/G   |
+//!
+//! The pool's `token_bytes` is sized for the largest codec
+//! ([`max_slot_bytes`]); smaller codecs use a prefix of the slot.
+//! Decode-streamed tokens are encoded with the same codec as the prompt
+//! (the current step's own (k, v) stays full precision in-register, per
+//! Eq. 6), so a sequence's entire KV life happens inside pool pages.
+
+use crate::kvcache::paged::{PageId, PagedPool};
+use crate::model::attention::AttentionSource;
+use crate::model::config::ModelConfig;
+use crate::polar::quantizer::{PolarConfig, PolarQuantizer};
+use crate::quant::fp16::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::quant::kivi::{dequant_code, quantize_group};
+use std::cell::RefCell;
+use std::sync::Arc;
+
+/// Reusable per-step scratch a codec may fill in
+/// [`PageCodec::prepare_query`] and read back while scoring (the polar
+/// codec keeps its rotated-query level-1 centroid table here).
+#[derive(Default)]
+pub struct CodecScratch {
+    /// Prepared-query table (codec-specific; polar: d/2 × k₁).
+    pub table: Vec<f32>,
+    /// Table row width (polar: level-1 codebook size).
+    pub k1: usize,
+    /// Generic f32 scratch (polar: score contraction buffer).
+    pub tmp: Vec<f32>,
+}
+
+/// A page-native KV codec: fixed-size self-contained token slots.
+///
+/// All addressing is explicit so implementations can score a whole run
+/// of contiguous slots (one pool page) per call: `slots` points at the
+/// first token slot, consecutive slots are `stride` bytes apart, and the
+/// head pair being read starts `offset` bytes into each slot.
+pub trait PageCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Bytes one head's encoded (k, v) pair occupies in a token slot.
+    fn pair_bytes(&self, d: usize) -> usize;
+
+    /// Encode one head's key and value rows (len `d` each) into `dst`
+    /// (len [`pair_bytes`](Self::pair_bytes)).
+    fn encode_pair(&self, k: &[f32], v: &[f32], dst: &mut [u8]);
+
+    /// Reconstruct the (lossy) key and value rows from an encoded pair —
+    /// the prefix-reuse path feeds these to `Transformer::prefill_extend`.
+    fn decode_pair(&self, src: &[u8], k_out: &mut [f32], v_out: &mut [f32]);
+
+    /// Prepare a query once per (step, head); default: nothing to do.
+    fn prepare_query(&self, _q: &[f32], _scratch: &mut CodecScratch) {}
+
+    /// Push `⟨K̂ᵢ, q⟩` for each of `count` token slots onto `scores`.
+    fn key_scores_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        q: &[f32],
+        scratch: &mut CodecScratch,
+        scores: &mut Vec<f32>,
+    );
+
+    /// `acc += Σᵢ weights[i]·V̂ᵢ` over `count` token slots, in the
+    /// codec's working basis (polar: the preconditioned basis).
+    fn value_accumulate_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        weights: &[f32],
+        acc: &mut [f32],
+    );
+
+    /// Fold the working-basis accumulator into the model basis:
+    /// `out += T(acc)`. Default: identity (`out += acc`).
+    fn value_finish(&self, acc: &[f32], out: &mut [f32]) {
+        for (o, a) in out.iter_mut().zip(acc) {
+            *o += *a;
+        }
+    }
+}
+
+/// Per-sequence slot geometry: where each (layer, head) pair lives
+/// inside a token slot.
+#[derive(Clone, Debug)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub pair_bytes: usize,
+}
+
+impl KvLayout {
+    pub fn new(cfg: &ModelConfig, codec: &dyn PageCodec) -> Self {
+        Self {
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            head_dim: cfg.head_dim,
+            pair_bytes: codec.pair_bytes(cfg.head_dim),
+        }
+    }
+
+    /// Bytes of one token slot actually used by this codec.
+    pub fn slot_bytes(&self) -> usize {
+        self.n_layers * self.n_heads * self.pair_bytes
+    }
+
+    /// Byte offset of the (layer, head) pair inside a token slot.
+    pub fn pair_offset(&self, l: usize, h: usize) -> usize {
+        (l * self.n_heads + h) * self.pair_bytes
+    }
+}
+
+/// Pool `token_bytes` needed to host every registered codec for this
+/// model: the exact-f32 codec is the widest (8 bytes/coordinate pair).
+pub fn max_slot_bytes(cfg: &ModelConfig) -> usize {
+    KvLayout::new(cfg, &ExactF32Codec).slot_bytes()
+}
+
+/// Whether `method` runs on the pool substrate. Eviction baselines
+/// (SnapKV family) drop tokens and so cannot live in fixed-size slots;
+/// `polarquant-r-online` fits per-sequence codebooks, which would be
+/// side-channel state a shared page cannot carry. Both stay on the
+/// legacy per-sequence [`crate::quant::compressor::CompressedKv`] path.
+///
+/// Consistent with [`page_codec_for`] for every RoPE-valid model: the
+/// polar codec adapts its recursion depth to any even head dimension
+/// (and RoPE requires head dims to be even). Engines must still treat
+/// [`page_codec_for`] as authoritative and fall back to the legacy path
+/// when it returns `None`.
+pub fn is_page_codec(method: &str) -> bool {
+    matches!(
+        method,
+        "exact" | "fp16" | "kivi" | "polarquant" | "polarquant-r-offline"
+    )
+}
+
+/// Paper layout adapted to head dimension `d`: recursion depth
+/// L = min(4, trailing zeros of d) with the matching prefix of the
+/// (4,2,2,2) bit allocation — the full paper layout whenever d is a
+/// multiple of 16, graceful shallower trees for other even dims.
+fn polar_cfg_for(d: usize, base: PolarConfig) -> Option<PolarConfig> {
+    if d == 0 {
+        return None;
+    }
+    let levels = (d.trailing_zeros() as usize).min(4);
+    if levels == 0 {
+        return None; // odd dims cannot pair coordinates (RoPE forbids them too)
+    }
+    let mut cfg = base;
+    cfg.levels = levels;
+    cfg.level_bits.truncate(levels);
+    if cfg.num_radii() > 64 {
+        return None; // beyond the slot kernels' stack bounds (d > 256-ish)
+    }
+    Some(cfg)
+}
+
+/// Build the page codec serving `method` at head dimension `d`, or
+/// `None` when the method is not page-native (legacy path).
+pub fn page_codec_for(method: &str, d: usize) -> Option<Arc<dyn PageCodec>> {
+    match method {
+        "exact" => Some(Arc::new(ExactF32Codec)),
+        "fp16" => Some(Arc::new(Fp16PageCodec)),
+        "kivi" => Some(Arc::new(KiviPageCodec::default())),
+        "polarquant" => {
+            let cfg = polar_cfg_for(d, PolarConfig::paper_default_no_precondition(d))?;
+            Some(Arc::new(PolarPageCodec::new(cfg, "polarquant")))
+        }
+        "polarquant-r-offline" => {
+            let cfg = polar_cfg_for(d, PolarConfig::paper_default(d))?;
+            Some(Arc::new(PolarPageCodec::new(cfg, "polarquant-r-offline")))
+        }
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// exact (f32)
+// ---------------------------------------------------------------------
+
+/// Lossless f32 slots — the substrate's reference codec. A prefix-cache
+/// hit replayed through `decode_pair` is bit-identical to the original
+/// prefill rows, so warm and cold prefills produce identical logits.
+pub struct ExactF32Codec;
+
+impl PageCodec for ExactF32Codec {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn pair_bytes(&self, d: usize) -> usize {
+        8 * d
+    }
+
+    fn encode_pair(&self, k: &[f32], v: &[f32], dst: &mut [u8]) {
+        let d = k.len();
+        for (j, &x) in k.iter().enumerate() {
+            dst[4 * j..4 * j + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        for (j, &x) in v.iter().enumerate() {
+            dst[4 * d + 4 * j..4 * d + 4 * j + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn decode_pair(&self, src: &[u8], k_out: &mut [f32], v_out: &mut [f32]) {
+        let d = k_out.len();
+        for j in 0..d {
+            k_out[j] = f32_from_le(src, 4 * j);
+            v_out[j] = f32_from_le(src, 4 * d + 4 * j);
+        }
+    }
+
+    fn key_scores_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        q: &[f32],
+        _scratch: &mut CodecScratch,
+        scores: &mut Vec<f32>,
+    ) {
+        for i in 0..count {
+            let pair = &slots[i * stride + offset..];
+            let mut s = 0.0f32;
+            for (j, &qj) in q.iter().enumerate() {
+                s += f32_from_le(pair, 4 * j) * qj;
+            }
+            scores.push(s);
+        }
+    }
+
+    fn value_accumulate_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        weights: &[f32],
+        acc: &mut [f32],
+    ) {
+        let d = acc.len();
+        for (i, &w) in weights.iter().take(count).enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let pair = &slots[i * stride + offset..];
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a += w * f32_from_le(pair, 4 * d + 4 * j);
+            }
+        }
+    }
+}
+
+#[inline]
+fn f32_from_le(bytes: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes([bytes[at], bytes[at + 1], bytes[at + 2], bytes[at + 3]])
+}
+
+// ---------------------------------------------------------------------
+// fp16
+// ---------------------------------------------------------------------
+
+/// fp16 slots — byte-for-byte the storage (and op order) of the legacy
+/// `ExactKv` heap cache, so pool-backed decode is bit-identical to it.
+pub struct Fp16PageCodec;
+
+impl PageCodec for Fp16PageCodec {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn pair_bytes(&self, d: usize) -> usize {
+        4 * d
+    }
+
+    fn encode_pair(&self, k: &[f32], v: &[f32], dst: &mut [u8]) {
+        let d = k.len();
+        for (j, &x) in k.iter().enumerate() {
+            dst[2 * j..2 * j + 2].copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+        for (j, &x) in v.iter().enumerate() {
+            dst[2 * d + 2 * j..2 * d + 2 * j + 2]
+                .copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+    }
+
+    fn decode_pair(&self, src: &[u8], k_out: &mut [f32], v_out: &mut [f32]) {
+        let d = k_out.len();
+        for j in 0..d {
+            k_out[j] = f16_from_le(src, 2 * j);
+            v_out[j] = f16_from_le(src, 2 * d + 2 * j);
+        }
+    }
+
+    fn key_scores_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        q: &[f32],
+        _scratch: &mut CodecScratch,
+        scores: &mut Vec<f32>,
+    ) {
+        for i in 0..count {
+            let pair = &slots[i * stride + offset..];
+            let mut s = 0.0f32;
+            for (j, &qj) in q.iter().enumerate() {
+                s += f16_from_le(pair, 2 * j) * qj;
+            }
+            scores.push(s);
+        }
+    }
+
+    fn value_accumulate_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        weights: &[f32],
+        acc: &mut [f32],
+    ) {
+        let d = acc.len();
+        for (i, &w) in weights.iter().take(count).enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let pair = &slots[i * stride + offset..];
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a += w * f16_from_le(pair, 2 * d + 2 * j);
+            }
+        }
+    }
+}
+
+#[inline]
+fn f16_from_le(bytes: &[u8], at: usize) -> f32 {
+    f16_bits_to_f32(u16::from_le_bytes([bytes[at], bytes[at + 1]]))
+}
+
+// ---------------------------------------------------------------------
+// polarquant
+// ---------------------------------------------------------------------
+
+/// PolarQuant slots: packed angle codes + fp16 radii, straight out of
+/// the paper's layout — no quantization constants anywhere, which is
+/// what makes the slots freely shareable. Scoring uses the fused
+/// tree-contraction path (`PolarQuantizer::score_slot`), numerically
+/// identical to the legacy heap cache's hot path.
+pub struct PolarPageCodec {
+    quantizer: PolarQuantizer,
+    name: &'static str,
+    vec_bytes: usize,
+}
+
+impl PolarPageCodec {
+    pub fn new(cfg: PolarConfig, name: &'static str) -> Self {
+        let quantizer = PolarQuantizer::new_offline(cfg);
+        let vec_bytes = quantizer.vec_slot_bytes();
+        Self { quantizer, name, vec_bytes }
+    }
+}
+
+impl PageCodec for PolarPageCodec {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn pair_bytes(&self, _d: usize) -> usize {
+        2 * self.vec_bytes
+    }
+
+    fn encode_pair(&self, k: &[f32], v: &[f32], dst: &mut [u8]) {
+        let vb = self.vec_bytes;
+        self.quantizer.encode_into(k, &mut dst[..vb]);
+        self.quantizer.encode_into(v, &mut dst[vb..2 * vb]);
+    }
+
+    fn decode_pair(&self, src: &[u8], k_out: &mut [f32], v_out: &mut [f32]) {
+        let vb = self.vec_bytes;
+        self.quantizer.decode_slot(&src[..vb], k_out);
+        self.quantizer.decode_slot(&src[vb..2 * vb], v_out);
+    }
+
+    fn prepare_query(&self, q: &[f32], scratch: &mut CodecScratch) {
+        scratch.k1 = self.quantizer.prepare_query_into(q, &mut scratch.table);
+    }
+
+    fn key_scores_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        _q: &[f32],
+        scratch: &mut CodecScratch,
+        scores: &mut Vec<f32>,
+    ) {
+        let vb = self.vec_bytes;
+        let CodecScratch { table, k1, tmp } = scratch;
+        for i in 0..count {
+            let pair = &slots[i * stride + offset..];
+            scores.push(self.quantizer.score_slot(table, *k1, &pair[..vb], tmp));
+        }
+    }
+
+    fn value_accumulate_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        weights: &[f32],
+        acc: &mut [f32],
+    ) {
+        let vb = self.vec_bytes;
+        for (i, &w) in weights.iter().take(count).enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let pair = &slots[i * stride + offset..];
+            self.quantizer.accumulate_slot(&pair[vb..2 * vb], w, acc);
+        }
+    }
+
+    /// The accumulator lives in the preconditioned basis; un-rotate once
+    /// per attention step (Σ wᵢRᵀyᵢ = Rᵀ Σ wᵢyᵢ), exactly like the
+    /// legacy `PolarKv::value_combine`.
+    fn value_finish(&self, acc: &[f32], out: &mut [f32]) {
+        let mut unrot = vec![0.0f32; acc.len()];
+        self.quantizer.rotation.apply_t(acc, &mut unrot);
+        crate::math::linalg::add_assign(out, &unrot);
+    }
+}
+
+// ---------------------------------------------------------------------
+// kivi (page-native variant)
+// ---------------------------------------------------------------------
+
+/// KIVI-style 2-bit asymmetric quantization, made page-native: both K
+/// and V are grouped *along channels within each token* so every
+/// group's fp16 zero/scale constants fit inside the token's own slot
+/// (the original per-channel key grouping spans tokens and cannot be
+/// slot-self-contained). The constants are the point: each vector pays
+/// `groups × 4` header bytes on top of its 2-bit codes — the
+/// normalization overhead PolarQuant's layout avoids, now visible in
+/// `pair_bytes` by construction (2 + 2·16/G bits per coordinate).
+pub struct KiviPageCodec {
+    /// Group size along channels (paper: 32).
+    pub group: usize,
+}
+
+impl Default for KiviPageCodec {
+    fn default() -> Self {
+        Self { group: 32 }
+    }
+}
+
+impl KiviPageCodec {
+    fn group_for(&self, d: usize) -> usize {
+        self.group.min(d).max(1)
+    }
+
+    /// Bytes one encoded vector occupies: per-group (zero, scale) f16
+    /// header, then 2-bit codes packed 4 per byte.
+    fn vec_bytes(&self, d: usize) -> usize {
+        let g = self.group_for(d);
+        d.div_ceil(g) * 4 + (2 * d).div_ceil(8)
+    }
+
+    fn encode_vec(&self, x: &[f32], dst: &mut [u8]) {
+        let d = x.len();
+        let g = self.group_for(d);
+        let groups = d.div_ceil(g);
+        let codes_at = groups * 4;
+        for b in dst[codes_at..codes_at + (2 * d).div_ceil(8)].iter_mut() {
+            *b = 0;
+        }
+        for gi in 0..groups {
+            let c0 = gi * g;
+            let c1 = ((gi + 1) * g).min(d);
+            let (grp, codes) = quantize_group(&x[c0..c1], 2);
+            dst[4 * gi..4 * gi + 2]
+                .copy_from_slice(&f32_to_f16_bits(grp.zero).to_le_bytes());
+            dst[4 * gi + 2..4 * gi + 4]
+                .copy_from_slice(&f32_to_f16_bits(grp.scale).to_le_bytes());
+            for (k, &code) in codes.iter().enumerate() {
+                let c = c0 + k;
+                dst[codes_at + c / 4] |= (code & 0x3) << (2 * (c % 4));
+            }
+        }
+    }
+
+    fn decode_vec(&self, src: &[u8], out: &mut [f32]) {
+        let d = out.len();
+        let g = self.group_for(d);
+        let groups = d.div_ceil(g);
+        let codes_at = groups * 4;
+        for (c, o) in out.iter_mut().enumerate() {
+            let gi = c / g;
+            let zero = f16_from_le(src, 4 * gi);
+            let scale = f16_from_le(src, 4 * gi + 2);
+            let code = (src[codes_at + c / 4] >> (2 * (c % 4))) & 0x3;
+            *o = dequant_code(code, zero, scale);
+        }
+    }
+}
+
+impl PageCodec for KiviPageCodec {
+    fn name(&self) -> &'static str {
+        "kivi"
+    }
+
+    fn pair_bytes(&self, d: usize) -> usize {
+        2 * self.vec_bytes(d)
+    }
+
+    fn encode_pair(&self, k: &[f32], v: &[f32], dst: &mut [u8]) {
+        let vb = self.vec_bytes(k.len());
+        self.encode_vec(k, &mut dst[..vb]);
+        self.encode_vec(v, &mut dst[vb..2 * vb]);
+    }
+
+    fn decode_pair(&self, src: &[u8], k_out: &mut [f32], v_out: &mut [f32]) {
+        let vb = self.vec_bytes(k_out.len());
+        self.decode_vec(&src[..vb], k_out);
+        self.decode_vec(&src[vb..2 * vb], v_out);
+    }
+
+    fn key_scores_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        q: &[f32],
+        _scratch: &mut CodecScratch,
+        scores: &mut Vec<f32>,
+    ) {
+        let d = q.len();
+        let g = self.group_for(d);
+        let codes_at = d.div_ceil(g) * 4;
+        for i in 0..count {
+            let key = &slots[i * stride + offset..];
+            let mut s = 0.0f32;
+            for (c, &qc) in q.iter().enumerate() {
+                let gi = c / g;
+                let zero = f16_from_le(key, 4 * gi);
+                let scale = f16_from_le(key, 4 * gi + 2);
+                let code = (key[codes_at + c / 4] >> (2 * (c % 4))) & 0x3;
+                s += qc * dequant_code(code, zero, scale);
+            }
+            scores.push(s);
+        }
+    }
+
+    fn value_accumulate_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        weights: &[f32],
+        acc: &mut [f32],
+    ) {
+        let d = acc.len();
+        let vb = self.vec_bytes(d);
+        let g = self.group_for(d);
+        let codes_at = d.div_ceil(g) * 4;
+        for (i, &w) in weights.iter().take(count).enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let val = &slots[i * stride + offset + vb..];
+            for (c, a) in acc.iter_mut().enumerate() {
+                let gi = c / g;
+                let zero = f16_from_le(val, 4 * gi);
+                let scale = f16_from_le(val, 4 * gi + 2);
+                let code = (val[codes_at + c / 4] >> (2 * (c % 4))) & 0x3;
+                *a += w * dequant_code(code, zero, scale);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-(layer, head) view over a sequence's pool pages
+// ---------------------------------------------------------------------
+
+/// Read-only attention view of one (layer, head) over a sequence's pool
+/// pages — what `Transformer::decode_step_paged` hands to
+/// `attend_cached` in place of a `CompressedKv` box. Scoring walks the
+/// block table page by page; slots inside a page are contiguous.
+pub struct HeadKvView<'a> {
+    pool: &'a PagedPool,
+    pages: &'a [PageId],
+    codec: &'a dyn PageCodec,
+    /// Byte offset of this (layer, head) pair inside each token slot.
+    offset: usize,
+    /// Head dimension.
+    d: usize,
+    /// Cached tokens visible to this step.
+    len: usize,
+    scratch: &'a RefCell<CodecScratch>,
+}
+
+impl<'a> HeadKvView<'a> {
+    pub fn new(
+        pool: &'a PagedPool,
+        pages: &'a [PageId],
+        codec: &'a dyn PageCodec,
+        layout: &KvLayout,
+        layer: usize,
+        head: usize,
+        len: usize,
+        scratch: &'a RefCell<CodecScratch>,
+    ) -> Self {
+        debug_assert!(layout.slot_bytes() <= pool.cfg.token_bytes);
+        debug_assert!(len <= pages.len() * pool.cfg.page_tokens);
+        Self {
+            pool,
+            pages,
+            codec,
+            offset: layout.pair_offset(layer, head),
+            d: layout.head_dim,
+            len,
+            scratch,
+        }
+    }
+
+    /// Call `f(page_bytes, start_token, count)` for every page run
+    /// covering tokens `0..len`.
+    fn for_each_page(&self, mut f: impl FnMut(&[u8], usize, usize)) {
+        let pt = self.pool.cfg.page_tokens;
+        let mut start = 0usize;
+        for &page in self.pages {
+            if start >= self.len {
+                break;
+            }
+            let count = pt.min(self.len - start);
+            f(self.pool.page_slice(page), start, count);
+            start += count;
+        }
+    }
+}
+
+impl AttentionSource for HeadKvView<'_> {
+    fn n_tokens(&self) -> usize {
+        self.len
+    }
+
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
+        scores.clear();
+        let stride = self.pool.cfg.token_bytes;
+        let mut scratch = self.scratch.borrow_mut();
+        self.codec.prepare_query(q, &mut scratch);
+        self.for_each_page(|bytes, _start, count| {
+            self.codec
+                .key_scores_page(bytes, stride, self.offset, count, q, &mut scratch, scores);
+        });
+    }
+
+    fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
+        let stride = self.pool.cfg.token_bytes;
+        let mut acc = vec![0.0f32; self.d];
+        self.for_each_page(|bytes, start, count| {
+            self.codec.value_accumulate_page(
+                bytes,
+                stride,
+                self.offset,
+                count,
+                &weights[start..start + count],
+                &mut acc,
+            );
+        });
+        self.codec.value_finish(&acc, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::paged::PagedConfig;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian(&mut v);
+        v
+    }
+
+    fn codecs(d: usize) -> Vec<Arc<dyn PageCodec>> {
+        ["exact", "fp16", "kivi", "polarquant", "polarquant-r-offline"]
+            .iter()
+            .filter_map(|m| page_codec_for(m, d))
+            .collect()
+    }
+
+    #[test]
+    fn registry_covers_page_methods_and_rejects_others() {
+        assert!(is_page_codec("exact"));
+        assert!(is_page_codec("polarquant-r-offline"));
+        assert!(!is_page_codec("snapkv"));
+        assert!(!is_page_codec("polarquant-r-online"));
+        assert!(page_codec_for("snapkv", 64).is_none());
+        // Non-16-divisible even dims get a shallower polar tree (the
+        // paper layout's prefix), keeping eligibility consistent with
+        // is_page_codec for every RoPE-valid head dim; odd dims cannot
+        // pair coordinates and have no codec.
+        let shallow = page_codec_for("polarquant", 24).expect("L=3 layout");
+        assert!(shallow.pair_bytes(24) < Fp16PageCodec.pair_bytes(24));
+        assert!(page_codec_for("polarquant", 25).is_none(), "odd dim");
+        assert_eq!(codecs(64).len(), 5);
+    }
+
+    #[test]
+    fn pair_roundtrip_within_codec_tolerance() {
+        let d = 64;
+        let k = gaussian(d, 1);
+        let v = gaussian(d, 2);
+        for codec in codecs(d) {
+            let mut slot = vec![0u8; codec.pair_bytes(d)];
+            codec.encode_pair(&k, &v, &mut slot);
+            let mut ko = vec![0.0f32; d];
+            let mut vo = vec![0.0f32; d];
+            codec.decode_pair(&slot, &mut ko, &mut vo);
+            let rk = crate::util::stats::rel_l2_error(&ko, &k);
+            let rv = crate::util::stats::rel_l2_error(&vo, &v);
+            let tol = match codec.name() {
+                "exact" => 0.0,
+                "fp16" => 1e-3,
+                _ => 0.6, // 2–4 bit codecs
+            };
+            assert!(rk <= tol, "{}: key err {rk}", codec.name());
+            assert!(rv <= tol, "{}: value err {rv}", codec.name());
+        }
+    }
+
+    #[test]
+    fn slot_scores_match_decode_pair_dot() {
+        // key_scores_page must agree with ⟨decode_pair(slot).k, q⟩ for
+        // every codec (polar scores in the rotated basis; the identity
+        // ⟨Rᵀy, q⟩ = ⟨y, Rq⟩ makes the comparison exact up to fp noise).
+        let d = 64;
+        let n = 8;
+        for codec in codecs(d) {
+            let pb = codec.pair_bytes(d);
+            let mut slots = vec![0u8; n * pb];
+            let mut rows = Vec::new();
+            for i in 0..n {
+                let k = gaussian(d, 100 + i as u64);
+                let v = gaussian(d, 200 + i as u64);
+                codec.encode_pair(&k, &v, &mut slots[i * pb..(i + 1) * pb]);
+                rows.push((k, v));
+            }
+            let q = gaussian(d, 3);
+            let mut scratch = CodecScratch::default();
+            let mut scores = Vec::new();
+            codec.prepare_query(&q, &mut scratch);
+            codec.key_scores_page(&slots, pb, 0, n, &q, &mut scratch, &mut scores);
+            assert_eq!(scores.len(), n);
+            let mut ko = vec![0.0f32; d];
+            let mut vo = vec![0.0f32; d];
+            for i in 0..n {
+                codec.decode_pair(&slots[i * pb..(i + 1) * pb], &mut ko, &mut vo);
+                let want = crate::math::linalg::dot(&ko, &q);
+                assert!(
+                    (scores[i] - want).abs() < 1e-2 * want.abs().max(1.0),
+                    "{} token {i}: {} vs {want}",
+                    codec.name(),
+                    scores[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn value_combine_matches_decoded_weighted_sum() {
+        let d = 64;
+        let n = 6;
+        for codec in codecs(d) {
+            let pb = codec.pair_bytes(d);
+            let mut slots = vec![0u8; n * pb];
+            let mut vals = Vec::new();
+            for i in 0..n {
+                let k = gaussian(d, 300 + i as u64);
+                let v = gaussian(d, 400 + i as u64);
+                codec.encode_pair(&k, &v, &mut slots[i * pb..(i + 1) * pb]);
+                vals.push(v);
+            }
+            let w: Vec<f32> = (0..n).map(|i| 0.1 + 0.05 * i as f32).collect();
+            let mut acc = vec![0.0f32; d];
+            codec.value_accumulate_page(&slots, pb, 0, n, &w, &mut acc);
+            let mut got = vec![0.0f32; d];
+            codec.value_finish(&acc, &mut got);
+            // Reference: weighted sum of decode_pair values.
+            let mut ko = vec![0.0f32; d];
+            let mut vo = vec![0.0f32; d];
+            let mut want = vec![0.0f32; d];
+            for i in 0..n {
+                codec.decode_pair(&slots[i * pb..(i + 1) * pb], &mut ko, &mut vo);
+                for j in 0..d {
+                    want[j] += w[i] * vo[j];
+                }
+            }
+            let rel = crate::util::stats::rel_l2_error(&got, &want);
+            assert!(rel < 1e-3, "{}: rel {rel}", codec.name());
+        }
+    }
+
+    #[test]
+    fn kivi_overhead_visible_in_pair_bytes() {
+        // 2 + 2·16/32 = 3 bits/coordinate at G=32 — the in-slot
+        // zero/scale headers ARE the paper's overhead claim.
+        let d = 64;
+        let kivi = KiviPageCodec::default();
+        let bits_per_coord = kivi.pair_bytes(d) as f64 * 8.0 / (2 * d) as f64;
+        assert!((bits_per_coord - 3.0).abs() < 1e-9, "got {bits_per_coord}");
+        // Polar at the same dim: 4.0 bits with byte-rounded angles, no
+        // per-block constants at all.
+        let polar = page_codec_for("polarquant-r-offline", d).unwrap();
+        let polar_bits = polar.pair_bytes(d) as f64 * 8.0 / (2 * d) as f64;
+        assert!(polar_bits <= 4.0 + 1e-9, "got {polar_bits}");
+    }
+
+    #[test]
+    fn head_view_scores_across_page_boundaries() {
+        let cfg = ModelConfig::test();
+        let codec = page_codec_for("fp16", cfg.head_dim).unwrap();
+        let layout = KvLayout::new(&cfg, codec.as_ref());
+        let mut pool = PagedPool::new(PagedConfig {
+            page_tokens: 4,
+            token_bytes: max_slot_bytes(&cfg),
+            num_pages: 8,
+        });
+        let n = 10; // spans 3 pages
+        pool.register(7, n).unwrap();
+        let d = cfg.head_dim;
+        let mut keys = Vec::new();
+        for t in 0..n {
+            let slot = pool.token_slot_mut(7, t).unwrap();
+            for l in 0..cfg.n_layers {
+                for h in 0..cfg.n_heads {
+                    let k = gaussian(d, (1000 + t * 17 + l * 3 + h) as u64);
+                    let v = gaussian(d, (2000 + t * 17 + l * 3 + h) as u64);
+                    let off = layout.pair_offset(l, h);
+                    codec.encode_pair(&k, &v, &mut slot[off..off + layout.pair_bytes]);
+                    if l == 1 && h == 1 {
+                        keys.push(k);
+                    }
+                }
+            }
+        }
+        let q = gaussian(d, 9);
+        let scratch = RefCell::new(CodecScratch::default());
+        let pages = pool.table(7).unwrap().pages.clone();
+        let view = HeadKvView::new(&pool, &pages, codec.as_ref(), &layout, 1, 1, n, &scratch);
+        let mut scores = Vec::new();
+        view.key_scores(&q, &mut scores);
+        assert_eq!(scores.len(), n);
+        for t in 0..n {
+            let want = crate::math::linalg::dot(&keys[t], &q);
+            assert!((scores[t] - want).abs() < 0.05, "t={t}: {} vs {want}", scores[t]);
+        }
+    }
+}

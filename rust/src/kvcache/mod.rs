@@ -1,14 +1,24 @@
-//! KV-cache management: the serving-side substrate around the codec.
+//! KV-cache management: the single pool substrate and its codecs.
 //!
-//! * [`paged`] — a vLLM-style paged pool (fixed-size pages, free list,
-//!   per-sequence block tables, copy-on-write ref counts) used by the
-//!   coordinator for generation-tail storage and admission control, and
-//!   by [`crate::prefix`] for cross-request shared-prefix pages.
-//! * [`sequence`] — per-sequence cache: one [`CompressedKv`] per
-//!   (layer, head), built from prefill output by any compression method.
+//! * [`paged`] — the vLLM-style paged pool (fixed-size pages, free
+//!   list, per-sequence block tables, copy-on-write ref counts). Since
+//!   the page-native codec redesign this is the **only KV data plane**
+//!   for the serving engine: encoded prompt and decode-streamed KV live
+//!   in page slots, shared zero-copy across sequences by the prefix
+//!   cache, and `PagedPool::memory_bytes` is the true KV footprint.
+//! * [`codec`] — the [`codec::PageCodec`] trait and its codecs (exact
+//!   f32, fp16, polarquant, kivi): fixed-size self-contained token
+//!   slots, per-method slot layouts, and the [`codec::HeadKvView`] the
+//!   decode attention path reads pages through.
+//! * [`sequence`] — the legacy per-sequence heap cache (one
+//!   [`CompressedKv`](crate::quant::compressor::CompressedKv) box per
+//!   layer/head), still used by the eval
+//!   harnesses and by methods that cannot be page-native (token-evicting
+//!   SnapKV family, per-sequence-codebook `polarquant-r-online`).
 //! * [`accounting`] — memory bookkeeping that regenerates the paper's §4
 //!   compression-ratio claims.
 
 pub mod accounting;
+pub mod codec;
 pub mod paged;
 pub mod sequence;

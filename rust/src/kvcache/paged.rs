@@ -8,6 +8,19 @@
 //! store fp16, so `token_bytes` is method-dependent.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// The pool handle shared between the control plane (scheduler:
+/// admission, prefix cache, accounting) and the data plane (engine:
+/// encode/score page slots). One worker thread owns both halves, so the
+/// mutex is uncontended; it exists to satisfy `Send` across the worker
+/// spawn.
+pub type SharedPool = Arc<Mutex<PagedPool>>;
+
+/// Wrap a pool for sharing between scheduler and engine.
+pub fn share(pool: PagedPool) -> SharedPool {
+    Arc::new(Mutex::new(pool))
+}
 
 /// Pool configuration.
 #[derive(Clone, Debug)]
@@ -79,6 +92,35 @@ impl PagedPool {
 
     pub fn used_pages(&self) -> usize {
         self.cfg.num_pages - self.free.len()
+    }
+
+    /// Bytes of one page (`page_tokens × token_bytes`).
+    pub fn page_bytes(&self) -> usize {
+        self.cfg.page_tokens * self.cfg.token_bytes
+    }
+
+    /// Bytes of pool storage currently holding live KV: every allocated
+    /// page counted once, regardless of how many block tables or cache
+    /// nodes reference it. Since the engine writes encoded KV straight
+    /// into page slots, this IS the KV footprint — there is no second
+    /// store to account for.
+    pub fn memory_bytes(&self) -> usize {
+        self.used_pages() * self.page_bytes()
+    }
+
+    /// Raw bytes of one allocated page (token slots are contiguous,
+    /// `token_bytes` apart). Panics on an out-of-range page id.
+    pub fn page_slice(&self, page: PageId) -> &[u8] {
+        let pb = self.page_bytes();
+        let base = page as usize * pb;
+        &self.storage[base..base + pb]
+    }
+
+    /// Page ids currently allocated (refcount > 0), for accounting tests.
+    pub fn live_pages(&self) -> Vec<PageId> {
+        (0..self.cfg.num_pages as PageId)
+            .filter(|&p| self.refcount[p as usize] > 0)
+            .collect()
     }
 
     /// Pages needed to hold `tokens` tokens.
@@ -530,6 +572,34 @@ mod tests {
         );
         assert_eq!(p.page_refcount(shared[0]), 1);
         assert_eq!(p.free_pages(), 2);
+    }
+
+    #[test]
+    fn memory_bytes_counts_each_live_page_once() {
+        let mut p = pool(8);
+        p.register(1, 8).unwrap(); // 2 pages
+        let shared = p.table(1).unwrap().pages.clone();
+        p.register_with_prefix(2, &shared, 12).unwrap(); // shares 2, adds 1
+        assert_eq!(p.used_pages(), 3);
+        assert_eq!(p.memory_bytes(), 3 * p.page_bytes());
+        let live = p.live_pages();
+        assert_eq!(live.len(), 3, "shared pages appear once");
+        assert_eq!(live.len() * p.page_bytes(), p.memory_bytes());
+        p.release(1).unwrap();
+        assert_eq!(p.memory_bytes(), 3 * p.page_bytes(), "pages still shared");
+        p.release(2).unwrap();
+        assert_eq!(p.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn page_slice_covers_token_slots() {
+        let mut p = pool(4);
+        p.register(1, 4).unwrap();
+        p.token_slot_mut(1, 1).unwrap().fill(0x42);
+        let pg = p.table(1).unwrap().pages[0];
+        let bytes = p.page_slice(pg);
+        assert_eq!(bytes.len(), p.page_bytes());
+        assert_eq!(&bytes[8..16], &[0x42; 8], "slot 1 at token_bytes offset");
     }
 
     #[test]

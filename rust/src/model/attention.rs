@@ -2,6 +2,11 @@
 //! path. Mirrors `python/compile/model.py::decode_step`'s attention:
 //! scores over cached tokens plus the current token's own (k, v), one
 //! stable softmax across both.
+//!
+//! The cache is abstracted behind [`AttentionSource`], which both the
+//! legacy per-sequence [`CompressedKv`] boxes and the pool-backed
+//! [`crate::kvcache::codec::HeadKvView`] implement — one attention
+//! kernel, two substrates.
 
 use crate::math::linalg::dot;
 use crate::quant::compressor::CompressedKv;
@@ -11,6 +16,29 @@ use crate::quant::compressor::CompressedKv;
 pub struct AttnScratch {
     pub scores: Vec<f32>,
     pub out_pre: Vec<f32>,
+}
+
+/// What the decode attention kernel needs from any KV store: raw key
+/// scores and a weighted value combine over the cached tokens.
+pub trait AttentionSource {
+    fn n_tokens(&self) -> usize;
+    /// scores ← ⟨K̂ᵢ, q⟩ for every cached token i (unscaled).
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>);
+    /// out += Σᵢ weights[i]·V̂ᵢ (out pre-zeroed by the caller).
+    fn value_combine(&self, weights: &[f32], out: &mut [f32]);
+}
+
+/// Every compressed-cache box is an attention source as-is.
+impl<T: CompressedKv + ?Sized> AttentionSource for T {
+    fn n_tokens(&self) -> usize {
+        CompressedKv::n_tokens(self)
+    }
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
+        CompressedKv::key_scores(self, q, scores)
+    }
+    fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
+        CompressedKv::value_combine(self, weights, out)
+    }
 }
 
 /// Exact attention for one head over materialized f32 K/V rows
@@ -33,11 +61,11 @@ pub fn attend_exact(q: &[f32], keys: &[f32], values: &[f32], n: usize, out: &mut
     }
 }
 
-/// Attention for one head over a compressed cache plus the current token's
-/// own (k, v) — the generation-step path (paper Eq. 6 with the streamed
-/// pair in full precision).
-pub fn attend_cached(
-    cache: &dyn CompressedKv,
+/// Attention for one head over a cached KV source plus the current
+/// token's own (k, v) — the generation-step path (paper Eq. 6 with the
+/// streamed pair in full precision).
+pub fn attend_cached<S: AttentionSource + ?Sized>(
+    cache: &S,
     q: &[f32],
     self_k: &[f32],
     self_v: &[f32],

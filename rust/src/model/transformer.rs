@@ -7,12 +7,15 @@
 //! handed to a compression method); decode attends through the
 //! [`CompressedKv`] interface so every method pays its real decode cost.
 
+use crate::kvcache::codec::{CodecScratch, HeadKvView, KvLayout, PageCodec};
+use crate::kvcache::paged::PagedPool;
 use crate::math::linalg::{matmul, matvec, matvec_t, rmsnorm, silu, softmax};
 use crate::model::attention::{attend_cached, AttnScratch};
 use crate::model::config::ModelConfig;
 use crate::model::rope::RopeTable;
 use crate::model::weights::Weights;
 use crate::quant::compressor::CompressedKv;
+use std::cell::RefCell;
 
 /// Per-layer prefill output: K/V rows plus the observation-window queries
 /// that score-based eviction methods need.
@@ -312,6 +315,104 @@ impl Transformer {
                     pos as u32,
                     &k[head * dh..(head + 1) * dh],
                     &v[head * dh..(head + 1) * dh],
+                );
+            }
+
+            matvec_t(self.weights.layer(l, "wo"), &attn, hd, d, &mut proj);
+            crate::math::linalg::add_assign(&mut x, &proj);
+
+            xin.copy_from_slice(&x);
+            rmsnorm(&mut xin, self.weights.layer(l, "mlp_norm"), cfg.rms_eps);
+            matvec_t(self.weights.layer(l, "w_gate"), &xin, d, f, &mut gate);
+            matvec_t(self.weights.layer(l, "w_up"), &xin, d, f, &mut up);
+            for i in 0..f {
+                gate[i] = silu(gate[i]) * up[i];
+            }
+            matvec_t(self.weights.layer(l, "w_down"), &gate, f, d, &mut proj);
+            crate::math::linalg::add_assign(&mut x, &proj);
+        }
+
+        rmsnorm(&mut x, self.weights.get("final_norm"), cfg.rms_eps);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        matvec(embed, &x, cfg.vocab, d, &mut logits);
+        logits
+    }
+
+    /// One generation step against pool-resident encoded KV (the page
+    /// substrate): each head scores and combines directly over the
+    /// sequence's page slots through a [`HeadKvView`], then the step's
+    /// own (k, v) pairs are encoded into slot `pos` — the pool is the
+    /// only KV store this path ever touches. The `pos` cached tokens at
+    /// slots `0..pos` must already be encoded (prefill or prior steps).
+    pub fn decode_step_paged(
+        &mut self,
+        token: u32,
+        pos: usize,
+        pool: &mut PagedPool,
+        seq: u64,
+        codec: &dyn PageCodec,
+        layout: &KvLayout,
+    ) -> Vec<f32> {
+        let cfg = self.cfg.clone();
+        let (d, h, dh, f) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
+        let hd = h * dh;
+        assert_eq!(layout.n_layers, cfg.n_layers);
+        assert_eq!(layout.n_heads, h);
+
+        let embed = self.weights.get("embed");
+        let tok = token as usize % cfg.vocab;
+        let mut x = embed[tok * d..(tok + 1) * d].to_vec();
+
+        let mut xin = vec![0.0f32; d];
+        let mut q = vec![0.0f32; hd];
+        let mut k = vec![0.0f32; hd];
+        let mut v = vec![0.0f32; hd];
+        let mut attn = vec![0.0f32; hd];
+        let mut proj = vec![0.0f32; d];
+        let mut gate = vec![0.0f32; f];
+        let mut up = vec![0.0f32; f];
+        let codec_scratch = RefCell::new(CodecScratch::default());
+
+        for l in 0..cfg.n_layers {
+            xin.copy_from_slice(&x);
+            rmsnorm(&mut xin, self.weights.layer(l, "attn_norm"), cfg.rms_eps);
+            matvec_t(self.weights.layer(l, "wq"), &xin, d, hd, &mut q);
+            matvec_t(self.weights.layer(l, "wk"), &xin, d, hd, &mut k);
+            matvec_t(self.weights.layer(l, "wv"), &xin, d, hd, &mut v);
+            self.rope.apply_heads(&mut q, pos);
+            self.rope.apply_heads(&mut k, pos);
+
+            {
+                let table = pool.table(seq).expect("pool sequence registered");
+                let pages = &table.pages;
+                for head in 0..h {
+                    let view = HeadKvView::new(
+                        pool,
+                        pages,
+                        codec,
+                        layout,
+                        l,
+                        head,
+                        pos,
+                        &codec_scratch,
+                    );
+                    let qh = &q[head * dh..(head + 1) * dh];
+                    let kh = &k[head * dh..(head + 1) * dh];
+                    let vh = &v[head * dh..(head + 1) * dh];
+                    let out = &mut attn[head * dh..(head + 1) * dh];
+                    attend_cached(&view, qh, kh, vh, &mut self.scratch, out);
+                }
+            }
+            // Encode the streamed pair into this token's slot. Matched
+            // prefix pages are page-aligned and slot `pos` lies past the
+            // prompt, so the write never lands in a shared page.
+            let slot = pool.token_slot_mut(seq, pos).expect("decode slot allocated");
+            for head in 0..h {
+                let off = layout.pair_offset(l, head);
+                codec.encode_pair(
+                    &k[head * dh..(head + 1) * dh],
+                    &v[head * dh..(head + 1) * dh],
+                    &mut slot[off..off + layout.pair_bytes],
                 );
             }
 

@@ -112,6 +112,10 @@ impl QuantizedVector {
     }
 }
 
+/// Upper bound on residual radii per vector (dim ≤ 256, levels ≥ 4 in
+/// every layout we run; generous for ablations with fewer levels).
+const MAX_RADII: usize = 64;
+
 /// The codec: configuration + preconditioner + per-level codebooks.
 ///
 /// Decode-side acceleration (§Perf): the only angles a decoder ever sees
@@ -217,19 +221,66 @@ impl PolarQuantizer {
         QuantizedVector { radii, codes: w.into_bytes() }
     }
 
+    /// Bytes one encoded vector occupies in a page slot: fp16 radii (LE)
+    /// followed by the packed angle codes.
+    pub fn vec_slot_bytes(&self) -> usize {
+        self.cfg.num_radii() * 2 + self.cfg.angle_bits().div_ceil(8)
+    }
+
+    /// Encode one vector straight into a page slot (`dst` sized
+    /// [`vec_slot_bytes`](Self::vec_slot_bytes)): radii as little-endian
+    /// f16 bits, then the packed codes. Byte-for-byte the same layout
+    /// [`encode`](Self::encode) produces, so slot readers and
+    /// [`QuantizedVector`] readers see identical streams.
+    pub fn encode_into(&self, x: &[f32], dst: &mut [u8]) {
+        let q = self.encode(x);
+        let nr = q.radii.len();
+        debug_assert_eq!(dst.len(), self.vec_slot_bytes());
+        for (j, &r) in q.radii.iter().enumerate() {
+            dst[2 * j..2 * j + 2].copy_from_slice(&r.to_le_bytes());
+        }
+        dst[2 * nr..2 * nr + q.codes.len()].copy_from_slice(&q.codes);
+        // Zero any slack byte so shared pages compare deterministically.
+        for b in dst[2 * nr + q.codes.len()..].iter_mut() {
+            *b = 0;
+        }
+    }
+
+    /// Split a slot written by [`encode_into`](Self::encode_into) into
+    /// its (radii, codes) halves, radii decoded to u16 on the stack.
+    #[inline]
+    fn split_slot<'s>(&self, slot: &'s [u8], rbuf: &mut [u16; MAX_RADII]) -> (usize, &'s [u8]) {
+        let nr = self.cfg.num_radii();
+        debug_assert!(nr <= MAX_RADII);
+        for (j, r) in rbuf[..nr].iter_mut().enumerate() {
+            *r = u16::from_le_bytes([slot[2 * j], slot[2 * j + 1]]);
+        }
+        (nr, &slot[2 * nr..])
+    }
+
     /// Decode into the *preconditioned* basis (no Rᵀ). Hot path for fused
     /// attention: dot this against R·q.
-    ///
-    /// Allocation- and trig-free (§Perf): radii land in `out[0..nr]`, then
-    /// each level expands in place back-to-front using the centroid
-    /// (cos, sin) LUTs — `out[2j] = r·cos`, `out[2j+1] = r·sin` is safe
-    /// descending because 2j ≥ j.
     pub fn decode_preconditioned(&self, q: &QuantizedVector, out: &mut [f32]) {
+        self.decode_pre_with(&q.radii, &q.codes, out);
+    }
+
+    /// Slot variant of [`decode_preconditioned`](Self::decode_preconditioned).
+    pub fn decode_preconditioned_slot(&self, slot: &[u8], out: &mut [f32]) {
+        let mut rbuf = [0u16; MAX_RADII];
+        let (nr, codes) = self.split_slot(slot, &mut rbuf);
+        self.decode_pre_with(&rbuf[..nr], codes, out);
+    }
+
+    /// Shared decode core. Allocation- and trig-free (§Perf): radii land
+    /// in `out[0..nr]`, then each level expands in place back-to-front
+    /// using the centroid (cos, sin) LUTs — `out[2j] = r·cos`,
+    /// `out[2j+1] = r·sin` is safe descending because 2j ≥ j.
+    fn decode_pre_with(&self, radii: &[u16], codes: &[u8], out: &mut [f32]) {
         let cfg = &self.cfg;
         debug_assert_eq!(out.len(), cfg.dim);
         let nr = cfg.num_radii();
         for j in 0..nr {
-            out[j] = f16_bits_to_f32(q.radii[j]);
+            out[j] = f16_bits_to_f32(radii[j]);
         }
         let mut scratch = [0u16; 256];
         let mut m = nr;
@@ -239,7 +290,7 @@ impl PolarQuantizer {
             debug_assert!(m <= scratch.len());
             let bits = cfg.level_bits[l];
             let lut = &self.trig_luts[l];
-            self.read_level_codes(&q.codes, l, bits, m, &mut scratch);
+            self.read_level_codes(codes, l, bits, m, &mut scratch);
             for j in (0..m).rev() {
                 let r = out[j];
                 let (co, si) = lut[scratch[j] as usize];
@@ -273,20 +324,31 @@ impl PolarQuantizer {
     /// expansion with w-scaled radii and writes the last level directly
     /// into the accumulator — one fewer full-width pass than decode+axpy.
     pub fn decode_scaled_accumulate(&self, q: &QuantizedVector, w: f32, acc: &mut [f32]) {
+        self.accumulate_with(&q.radii, &q.codes, w, acc);
+    }
+
+    /// Slot variant of [`decode_scaled_accumulate`](Self::decode_scaled_accumulate).
+    pub fn accumulate_slot(&self, slot: &[u8], w: f32, acc: &mut [f32]) {
+        let mut rbuf = [0u16; MAX_RADII];
+        let (nr, codes) = self.split_slot(slot, &mut rbuf);
+        self.accumulate_with(&rbuf[..nr], codes, w, acc);
+    }
+
+    fn accumulate_with(&self, radii: &[u16], codes: &[u8], w: f32, acc: &mut [f32]) {
         let cfg = &self.cfg;
         debug_assert_eq!(acc.len(), cfg.dim);
         let nr = cfg.num_radii();
         let mut tmp = [0.0f32; 128];
         debug_assert!(cfg.dim / 2 <= tmp.len());
         for j in 0..nr {
-            tmp[j] = w * f16_bits_to_f32(q.radii[j]);
+            tmp[j] = w * f16_bits_to_f32(radii[j]);
         }
         let mut scratch = [0u16; 256];
         let mut m = nr;
         for l in (1..cfg.levels).rev() {
             let bits = cfg.level_bits[l];
             let lut = &self.trig_luts[l];
-            self.read_level_codes(&q.codes, l, bits, m, &mut scratch);
+            self.read_level_codes(codes, l, bits, m, &mut scratch);
             for j in (0..m).rev() {
                 let r = tmp[j];
                 let (co, si) = lut[scratch[j] as usize];
@@ -298,7 +360,7 @@ impl PolarQuantizer {
         // Last level expands straight into the accumulator.
         let bits = cfg.level_bits[0];
         let lut = &self.trig_luts[0];
-        self.read_level_codes(&q.codes, 0, bits, m, &mut scratch);
+        self.read_level_codes(codes, 0, bits, m, &mut scratch);
         for j in 0..m {
             let (co, si) = lut[scratch[j] as usize];
             let r = tmp[j];
@@ -311,6 +373,15 @@ impl PolarQuantizer {
     /// the level-1 pair contractions per centroid (d/2 × k₁ fmas, done
     /// once per attention step instead of once per cached token).
     pub fn prepare_query(&self, q: &[f32]) -> PreparedQuery {
+        let mut table = Vec::new();
+        let k1 = self.prepare_query_into(q, &mut table);
+        PreparedQuery { level1_table: table, k1 }
+    }
+
+    /// Reusable-buffer variant of [`prepare_query`](Self::prepare_query):
+    /// fills `table` (resized to d/2 × k₁) and returns k₁. The page-codec
+    /// scratch uses this to avoid a fresh allocation per head per step.
+    pub fn prepare_query_into(&self, q: &[f32], table: &mut Vec<f32>) -> usize {
         let d = self.cfg.dim;
         assert_eq!(q.len(), d);
         let mut rq = vec![0.0f32; d];
@@ -318,7 +389,8 @@ impl PolarQuantizer {
         let lut1 = &self.trig_luts[0];
         let k1 = lut1.len();
         let pairs = d / 2;
-        let mut table = vec![0.0f32; pairs * k1];
+        table.clear();
+        table.resize(pairs * k1, 0.0);
         for j in 0..pairs {
             let (a, b) = (rq[2 * j], rq[2 * j + 1]);
             let row = &mut table[j * k1..(j + 1) * k1];
@@ -326,7 +398,7 @@ impl PolarQuantizer {
                 row[c] = a * co + b * si;
             }
         }
-        PreparedQuery { level1_table: table, k1 }
+        k1
     }
 
     /// Fused score ⟨decode_preconditioned(code), R·q⟩ without materializing
@@ -334,6 +406,26 @@ impl PolarQuantizer {
     /// bottom-up (level-1 via the prepared table, deeper levels via the
     /// trig LUTs), finishing with a dot against the fp16 radii.
     pub fn score(&self, prepared: &PreparedQuery, code: &QuantizedVector, scratch: &mut Vec<f32>) -> f32 {
+        self.score_with(&prepared.level1_table, prepared.k1, &code.radii, &code.codes, scratch)
+    }
+
+    /// Slot variant of [`score`](Self::score): the prepared level-1 table
+    /// is passed as raw (table, k₁) so callers can keep it in reusable
+    /// scratch instead of a [`PreparedQuery`].
+    pub fn score_slot(&self, table: &[f32], k1: usize, slot: &[u8], scratch: &mut Vec<f32>) -> f32 {
+        let mut rbuf = [0u16; MAX_RADII];
+        let (nr, codes) = self.split_slot(slot, &mut rbuf);
+        self.score_with(table, k1, &rbuf[..nr], codes, scratch)
+    }
+
+    fn score_with(
+        &self,
+        table: &[f32],
+        k1: usize,
+        radii: &[u16],
+        codes: &[u8],
+        scratch: &mut Vec<f32>,
+    ) -> f32 {
         let cfg = &self.cfg;
         let d = cfg.dim;
         let mut m = d / 2;
@@ -344,10 +436,9 @@ impl PolarQuantizer {
         // Level 1: pure lookups.
         {
             let bits = cfg.level_bits[0];
-            let k1 = prepared.k1;
-            self.read_level_codes(&code.codes, 0, bits, m, &mut codes_buf);
+            self.read_level_codes(codes, 0, bits, m, &mut codes_buf);
             for j in 0..m {
-                scratch[j] = prepared.level1_table[j * k1 + codes_buf[j] as usize];
+                scratch[j] = table[j * k1 + codes_buf[j] as usize];
             }
         }
         // Levels 2..L: contract pairs with centroid trig.
@@ -355,7 +446,7 @@ impl PolarQuantizer {
             m /= 2;
             let bits = cfg.level_bits[l];
             let lut = &self.trig_luts[l];
-            self.read_level_codes(&code.codes, l, bits, m, &mut codes_buf);
+            self.read_level_codes(codes, l, bits, m, &mut codes_buf);
             for j in 0..m {
                 let (co, si) = lut[codes_buf[j] as usize];
                 scratch[j] = scratch[2 * j] * co + scratch[2 * j + 1] * si;
@@ -363,7 +454,7 @@ impl PolarQuantizer {
         }
         // Final: dot with radii.
         let mut s = 0.0f32;
-        for (j, &h) in code.radii.iter().enumerate() {
+        for (j, &h) in radii.iter().enumerate() {
             s += f16_bits_to_f32(h) * scratch[j];
         }
         s
@@ -375,6 +466,16 @@ impl PolarQuantizer {
         assert_eq!(out.len(), d);
         let mut pre = vec![0.0f32; d];
         self.decode_preconditioned(q, &mut pre);
+        self.rotation.apply_t(&pre, out);
+    }
+
+    /// Full decode (applies Rᵀ) from a page slot written by
+    /// [`encode_into`](Self::encode_into).
+    pub fn decode_slot(&self, slot: &[u8], out: &mut [f32]) {
+        let d = self.cfg.dim;
+        assert_eq!(out.len(), d);
+        let mut pre = vec![0.0f32; d];
+        self.decode_preconditioned_slot(slot, &mut pre);
         self.rotation.apply_t(&pre, out);
     }
 
@@ -603,6 +704,47 @@ mod tests {
                     (fast - slow).abs() < 1e-3 * slow.abs().max(1.0),
                     "d={d}: fused {fast} vs materialized {slow}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn slot_paths_bitwise_match_vector_paths() {
+        // The page-slot readers must be numerically indistinguishable
+        // from the QuantizedVector readers — the pool substrate's
+        // parity with the legacy heap cache rests on this.
+        for d in [32usize, 64, 128] {
+            let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(d));
+            let rows = gaussian_rows(6, d, 41);
+            let q = gaussian_rows(1, d, 42);
+            let prepared = pq.prepare_query(&q);
+            let mut table = Vec::new();
+            let k1 = pq.prepare_query_into(&q, &mut table);
+            assert_eq!(k1, prepared.k1);
+            assert_eq!(table, prepared.level1_table);
+            let mut slot = vec![0u8; pq.vec_slot_bytes()];
+            let mut s1 = Vec::new();
+            let mut s2 = Vec::new();
+            let mut acc_a = vec![0.0f32; d];
+            let mut acc_b = vec![0.0f32; d];
+            let mut dec_a = vec![0.0f32; d];
+            let mut dec_b = vec![0.0f32; d];
+            for (i, row) in rows.chunks(d).enumerate() {
+                let c = pq.encode(row);
+                pq.encode_into(row, &mut slot);
+                assert_eq!(slot.len(), c.storage_bytes());
+                let via_vec = pq.score(&prepared, &c, &mut s1);
+                let via_slot = pq.score_slot(&table, k1, &slot, &mut s2);
+                assert_eq!(via_vec.to_bits(), via_slot.to_bits(), "d={d}");
+                let w = 0.3 + 0.1 * i as f32;
+                pq.decode_scaled_accumulate(&c, w, &mut acc_a);
+                pq.accumulate_slot(&slot, w, &mut acc_b);
+                pq.decode(&c, &mut dec_a);
+                pq.decode_slot(&slot, &mut dec_b);
+                assert_eq!(dec_a, dec_b, "d={d}");
+            }
+            for (a, b) in acc_a.iter().zip(&acc_b) {
+                assert_eq!(a.to_bits(), b.to_bits(), "d={d}");
             }
         }
     }

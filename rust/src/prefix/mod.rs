@@ -1,23 +1,234 @@
-//! Prefix cache: cross-request reuse of quantized prompt pages.
+//! Prefix cache: cross-request zero-copy reuse of encoded prompt pages.
 //!
 //! Serving traffic is dominated by shared prompt prefixes — system
 //! prompts, few-shot headers, growing multi-turn histories. Because
-//! PolarQuant pages are pure packed angle codes with no per-block
-//! scale/zero-point metadata, a cached prefix page is reusable as-is by
-//! any request whose prompt starts with those tokens, so a prefix cache
-//! holds strictly more reusable tokens per byte than scale/offset codecs.
+//! page-native codec slots are self-contained (PolarQuant pages are pure
+//! packed angle codes with no per-block scale/zero-point metadata), a
+//! cached prefix page is reusable as-is by any request whose prompt
+//! starts with those tokens, so a prefix cache holds strictly more
+//! reusable tokens per byte than scale/offset codecs.
 //!
 //! * [`radix`] — the radix tree keyed on token-id page chunks whose
 //!   leaves reference pages in [`crate::kvcache::paged::PagedPool`], with
 //!   per-node pins (active sequences), copy-on-write splits on
-//!   divergence, and LRU eviction of cold unreferenced nodes.
+//!   divergence, and an O(log n) LRU eviction index over cold
+//!   unreferenced leaves.
+//! * [`PrefixCacheSet`] — one radix tree **per page codec**: pool pages
+//!   hold encoded bytes now, so a prefix written by `polarquant` must
+//!   never be matched by an `exact` request. The set routes
+//!   match/insert/pin by method name and spreads eviction pressure
+//!   across trees.
 //!
-//! The scheduler consults the tree at admission (longest cached prefix →
-//! shared pages + skipped prefill), inserts every admitted prompt, and
-//! pins the matched path for the sequence's lifetime; the engine layer
-//! mirrors the reuse decision with materialized K/V snapshots (see
-//! `coordinator::worker`).
+//! The scheduler consults the set at admission (longest cached prefix →
+//! shared pages + skipped prefill), inserts every admitted page-codec
+//! prompt, and pins the matched path for the sequence's lifetime. There
+//! is no second engine-side store: a radix hit hands the engine already-
+//! encoded pool pages, which it reads back through the codec — control
+//! plane and data plane reference the same bytes.
 
 pub mod radix;
 
 pub use radix::{NodeId, PrefixConfig, PrefixMatch, PrefixStats, RadixPrefixCache};
+
+use crate::kvcache::paged::PagedPool;
+use std::collections::BTreeMap;
+
+/// Per-codec radix trees behind one facade. `max_pages` in the config is
+/// a **global** budget across all trees; [`enforce_budget`] trims the
+/// fattest tree first. LRU is per-tree (each tree keeps its own clock),
+/// which is exact for single-method traffic and a fair round-robin
+/// approximation across methods.
+///
+/// [`enforce_budget`]: PrefixCacheSet::enforce_budget
+pub struct PrefixCacheSet {
+    cfg: PrefixConfig,
+    trees: BTreeMap<String, RadixPrefixCache>,
+    /// Bumped on every insert; lets a gated admission detect that the
+    /// tree grew between gating and admission (another batch member
+    /// published its prompt) and re-match instead of using the stale
+    /// gate-time match.
+    epoch: u64,
+}
+
+impl PrefixCacheSet {
+    pub fn new(cfg: PrefixConfig) -> Self {
+        Self { cfg, trees: BTreeMap::new(), epoch: 0 }
+    }
+
+    /// Monotonic insert counter (see the `epoch` field).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn tree_mut(&mut self, method: &str) -> &mut RadixPrefixCache {
+        let cfg = self.cfg.clone();
+        self.trees
+            .entry(method.to_string())
+            .or_insert_with(|| RadixPrefixCache::new(cfg))
+    }
+
+    /// Longest cached prefix of `tokens` among pages encoded by
+    /// `method`'s codec. An empty match when the method has no tree yet.
+    pub fn match_prefix(&mut self, method: &str, tokens: &[u32]) -> PrefixMatch {
+        match self.trees.get_mut(method) {
+            Some(t) => t.match_prefix(tokens),
+            None => PrefixMatch { pages: Vec::new(), tokens: 0, node: None },
+        }
+    }
+
+    pub fn pin(&mut self, method: &str, node: NodeId) {
+        if let Some(t) = self.trees.get_mut(method) {
+            t.pin(node);
+        }
+    }
+
+    pub fn unpin(&mut self, method: &str, node: NodeId) {
+        if let Some(t) = self.trees.get_mut(method) {
+            t.unpin(node);
+        }
+    }
+
+    /// Insert the page-aligned prefix of `tokens` into `method`'s tree.
+    pub fn insert(
+        &mut self,
+        method: &str,
+        tokens: &[u32],
+        pool: &mut PagedPool,
+        src_seq: u64,
+    ) -> Option<NodeId> {
+        self.epoch += 1;
+        self.tree_mut(method).insert(tokens, pool, src_seq)
+    }
+
+    /// Pool pages referenced across all trees.
+    pub fn cached_pages(&self) -> usize {
+        self.trees.values().map(|t| t.cached_pages()).sum()
+    }
+
+    /// Cumulative evicted nodes across all trees (monotonic).
+    pub fn evicted_nodes(&self) -> u64 {
+        self.trees.values().map(|t| t.stats().evicted_nodes).sum()
+    }
+
+    /// Pool pages eviction could free right now, across all trees.
+    pub fn freeable_pages(&self, pool: &PagedPool) -> usize {
+        self.trees.values().map(|t| t.freeable_pages(pool)).sum()
+    }
+
+    /// Free at least `pages_needed` pool pages by evicting cache entries
+    /// across trees — or do nothing at all (all-or-nothing, like
+    /// [`RadixPrefixCache::make_room`]).
+    pub fn make_room(&mut self, pool: &mut PagedPool, pages_needed: usize) -> bool {
+        if pages_needed == 0 {
+            return true;
+        }
+        if self.freeable_pages(pool) < pages_needed {
+            return false;
+        }
+        let mut freed = 0;
+        for t in self.trees.values_mut() {
+            if freed >= pages_needed {
+                break;
+            }
+            freed += t.evict_lru(pool, pages_needed - freed);
+        }
+        // Fallback: cascaded eviction of unpinned subtrees whose pages
+        // only free once their last sharer retires.
+        while freed < pages_needed {
+            let mut any = false;
+            for t in self.trees.values_mut() {
+                if freed >= pages_needed {
+                    break;
+                }
+                if let Some(f) = t.evict_one_node(pool) {
+                    freed += f;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        freed >= pages_needed
+    }
+
+    /// Trim back under the global `max_pages` budget, evicting from the
+    /// tree holding the most pages first.
+    pub fn enforce_budget(&mut self, pool: &mut PagedPool) {
+        while self.cached_pages() > self.cfg.max_pages {
+            let mut order: Vec<&mut RadixPrefixCache> = self.trees.values_mut().collect();
+            order.sort_by_key(|t| std::cmp::Reverse(t.cached_pages()));
+            let mut evicted = false;
+            for t in order {
+                if t.evict_one_node(pool).is_some() {
+                    evicted = true;
+                    break;
+                }
+            }
+            if !evicted {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::paged::PagedConfig;
+
+    fn pool(pages: usize) -> PagedPool {
+        PagedPool::new(PagedConfig { page_tokens: 4, token_bytes: 2, num_pages: pages })
+    }
+
+    fn set(max_pages: usize) -> PrefixCacheSet {
+        PrefixCacheSet::new(PrefixConfig { page_tokens: 4, max_pages })
+    }
+
+    #[test]
+    fn methods_never_share_prefixes() {
+        let (mut s, mut p) = (set(64), pool(32));
+        let prompt: Vec<u32> = vec![7; 8];
+        p.register(1, 8).unwrap();
+        s.insert("polarquant", &prompt, &mut p, 1);
+        assert_eq!(s.match_prefix("polarquant", &prompt).tokens, 8);
+        assert_eq!(
+            s.match_prefix("exact", &prompt).tokens,
+            0,
+            "codec-mismatched pages must not match"
+        );
+        p.release(1).unwrap();
+    }
+
+    #[test]
+    fn global_budget_spans_trees() {
+        let (mut s, mut p) = (set(2), pool(32));
+        p.register(1, 8).unwrap();
+        p.register(2, 8).unwrap();
+        s.insert("exact", &[1; 8], &mut p, 1);
+        s.insert("fp16", &[2; 8], &mut p, 2);
+        assert_eq!(s.cached_pages(), 4);
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        s.enforce_budget(&mut p);
+        assert!(s.cached_pages() <= 2, "global budget: {}", s.cached_pages());
+    }
+
+    #[test]
+    fn make_room_is_all_or_nothing_across_trees() {
+        let (mut s, mut p) = (set(64), pool(16));
+        p.register(1, 8).unwrap();
+        p.register(2, 8).unwrap();
+        let na = s.insert("exact", &[1; 8], &mut p, 1);
+        s.insert("kivi", &[2; 8], &mut p, 2);
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        s.pin("exact", na.unwrap());
+        assert_eq!(s.freeable_pages(&p), 2, "only the kivi entry is free");
+        assert!(!s.make_room(&mut p, 3), "cannot cover: nothing evicted");
+        assert_eq!(s.cached_pages(), 4);
+        assert!(s.make_room(&mut p, 2));
+        assert_eq!(s.match_prefix("kivi", &[2; 8]).tokens, 0);
+        assert_eq!(s.match_prefix("exact", &[1; 8]).tokens, 8, "pinned survives");
+    }
+}

@@ -14,10 +14,14 @@
 //! (copy-on-write at the tree level: both branches keep referencing the
 //! common pages, and each branch owns its private diverging tail).
 //! Nodes pinned by active sequences are never evicted; cold unpinned
-//! leaves go first, in LRU order.
+//! leaves go first, in LRU order. Victim selection is O(log n): the
+//! tree maintains an index of evictable leaves ordered by
+//! (last_touch, id) — a `BTreeSet` standing in for an intrusive LRU
+//! list — kept in sync at every touch/pin/link mutation, so `make_room`
+//! bursts no longer rescan the whole node slab per eviction.
 
 use crate::kvcache::paged::{PagedPool, PageId};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Slab index of a node. The root is always node 0 with an empty edge.
 pub type NodeId = usize;
@@ -40,7 +44,7 @@ pub struct PrefixStats {
 }
 
 /// Result of a longest-prefix lookup.
-#[derive(Debug)]
+#[derive(Debug, Default)]
 pub struct PrefixMatch {
     /// Cached pages covering the matched prefix, in order.
     pub pages: Vec<PageId>,
@@ -72,6 +76,9 @@ pub struct RadixPrefixCache {
     clock: u64,
     cached_pages: usize,
     stats: PrefixStats,
+    /// Eviction index: exactly the evictable nodes (unpinned leaves),
+    /// keyed by (last_touch, id) so `iter().next()` is the LRU victim.
+    evictable_index: BTreeSet<(u64, NodeId)>,
 }
 
 impl RadixPrefixCache {
@@ -92,6 +99,7 @@ impl RadixPrefixCache {
             clock: 0,
             cached_pages: 0,
             stats: PrefixStats::default(),
+            evictable_index: BTreeSet::new(),
         }
     }
 
@@ -119,7 +127,7 @@ impl RadixPrefixCache {
 
     fn alloc(&mut self, node: Node) -> NodeId {
         self.stats.inserted_nodes += 1;
-        match self.free_nodes.pop() {
+        let id = match self.free_nodes.pop() {
             Some(id) => {
                 self.nodes[id] = Some(node);
                 id
@@ -128,6 +136,35 @@ impl RadixPrefixCache {
                 self.nodes.push(Some(node));
                 self.nodes.len() - 1
             }
+        };
+        self.sync_index(id);
+        id
+    }
+
+    /// Re-derive `id`'s membership in the eviction index from its
+    /// current evictability. Call after any pin/children mutation.
+    fn sync_index(&mut self, id: NodeId) {
+        if id == 0 {
+            return;
+        }
+        let key = (self.node(id).last_touch, id);
+        if self.evictable(id) {
+            self.evictable_index.insert(key);
+        } else {
+            self.evictable_index.remove(&key);
+        }
+    }
+
+    /// LRU-refresh `id` to `clock`, re-keying its index entry.
+    fn touch(&mut self, id: NodeId, clock: u64) {
+        let old = self.node(id).last_touch;
+        if old == clock {
+            return;
+        }
+        self.evictable_index.remove(&(old, id));
+        self.node_mut(id).last_touch = clock;
+        if self.evictable(id) {
+            self.evictable_index.insert((clock, id));
         }
     }
 
@@ -159,7 +196,7 @@ impl RadixPrefixCache {
         let mut matched = 0usize;
         let mut pages: Vec<PageId> = Vec::new();
         loop {
-            self.node_mut(cur).last_touch = clock;
+            self.touch(cur, clock);
             if tokens.len() - matched < pt {
                 break;
             }
@@ -176,7 +213,7 @@ impl RadixPrefixCache {
             if k == 0 {
                 break;
             }
-            self.node_mut(child).last_touch = clock;
+            self.touch(child, clock);
             pages.extend_from_slice(&self.node(child).pages[..k]);
             matched += k * pt;
             if k < self.node(child).pages.len() {
@@ -196,12 +233,14 @@ impl RadixPrefixCache {
     /// (transitively) any ancestor can be evicted while pinned.
     pub fn pin(&mut self, node: NodeId) {
         self.node_mut(node).pins += 1;
+        self.sync_index(node);
     }
 
     pub fn unpin(&mut self, node: NodeId) {
         let n = self.node_mut(node);
         debug_assert!(n.pins > 0, "unbalanced unpin");
         n.pins = n.pins.saturating_sub(1);
+        self.sync_index(node);
     }
 
     /// Split `child` so its first `k` pages become a new intermediate node
@@ -267,7 +306,7 @@ impl RadixPrefixCache {
         let mut cur: NodeId = 0;
         let mut off = 0usize;
         loop {
-            self.node_mut(cur).last_touch = clock;
+            self.touch(cur, clock);
             if off == aligned {
                 return Some(cur);
             }
@@ -292,6 +331,7 @@ impl RadixPrefixCache {
                         last_touch: clock,
                     });
                     self.node_mut(cur).children.insert(key, leaf);
+                    self.sync_index(cur); // cur is no longer a leaf
                     return Some(leaf);
                 }
             };
@@ -300,7 +340,7 @@ impl RadixPrefixCache {
                 self.matching_pages(&c.tokens, &tokens[off..aligned])
             };
             debug_assert!(k >= 1);
-            self.node_mut(child).last_touch = clock;
+            self.touch(child, clock);
             if k == self.node(child).pages.len() {
                 off += k * pt;
                 cur = child;
@@ -309,7 +349,7 @@ impl RadixPrefixCache {
             // Divergence inside the edge: split at the page boundary and
             // continue from the shared intermediate node.
             let mid = self.split(child, k);
-            self.node_mut(mid).last_touch = clock;
+            self.touch(mid, clock);
             off += k * pt;
             cur = mid;
         }
@@ -332,21 +372,29 @@ impl RadixPrefixCache {
     /// node would destroy reusable state while reclaiming nothing.
     /// `None` when no eligible victim exists.
     fn evict_one(&mut self, pool: &mut PagedPool, must_free: bool) -> Option<usize> {
+        // O(log n) victim pop from the eviction index, which holds
+        // exactly the unpinned leaves ordered LRU-first (ties broken by
+        // slab id, matching the old full-slab `min_by_key` scan). The
+        // `must_free` walk skips still-shared victims in LRU order and
+        // is O(1) in the common case.
         let victim = self
-            .nodes
+            .evictable_index
             .iter()
-            .enumerate()
-            .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
-            .filter(|&(id, _)| self.evictable(id))
-            .filter(|(_, n)| {
-                !must_free || n.pages.iter().any(|&p| pool.page_refcount(p) == 1)
+            .find(|&&(_, id)| {
+                !must_free
+                    || self
+                        .node(id)
+                        .pages
+                        .iter()
+                        .any(|&p| pool.page_refcount(p) == 1)
             })
-            .min_by_key(|&(_, n)| n.last_touch)
-            .map(|(id, _)| id)?;
+            .map(|&(_, id)| id)?;
         let node = self.nodes[victim].take().expect("live victim");
+        self.evictable_index.remove(&(node.last_touch, victim));
         self.free_nodes.push(victim);
         let key = self.child_key(&node.tokens);
         self.node_mut(node.parent).children.remove(&key);
+        self.sync_index(node.parent); // parent may have become a leaf
         self.cached_pages -= node.pages.len();
         let mut freed = 0;
         for p in node.pages {
@@ -356,6 +404,27 @@ impl RadixPrefixCache {
         }
         self.stats.evicted_nodes += 1;
         Some(freed)
+    }
+
+    /// Index/evictability consistency check (tests): the index must hold
+    /// exactly the evictable nodes, keyed by their current last_touch.
+    #[cfg(test)]
+    fn check_eviction_index(&self) {
+        let brute: BTreeSet<(u64, NodeId)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
+            .filter(|&(id, _)| self.evictable(id))
+            .map(|(id, n)| (n.last_touch, id))
+            .collect();
+        assert_eq!(self.evictable_index, brute, "eviction index out of sync");
+    }
+
+    /// Evict one LRU unpinned leaf regardless of whether its pages free
+    /// immediately (budget-pressure path). Returns pages actually freed.
+    pub fn evict_one_node(&mut self, pool: &mut PagedPool) -> Option<usize> {
+        self.evict_one(pool, false)
     }
 
     /// Evict LRU leaves until at least `pages_needed` pool pages have been
@@ -405,6 +474,12 @@ impl RadixPrefixCache {
     /// destroy reusable state on the way to failing anyway. Prefers
     /// victims whose pages free immediately, then falls back to cascaded
     /// eviction of unpinned subtrees.
+    ///
+    /// NOTE: the serving path goes through the multi-codec
+    /// [`crate::prefix::PrefixCacheSet::make_room`], which applies this
+    /// same policy (freeable precheck → `evict_lru` → `evict_one`
+    /// fallback) globally across trees — keep the two in lockstep when
+    /// changing the all-or-nothing semantics.
     pub fn make_room(&mut self, pool: &mut PagedPool, pages_needed: usize) -> bool {
         if pages_needed == 0 {
             return true;
@@ -647,6 +722,39 @@ mod tests {
         assert!(c.cached_pages() <= 4, "budget enforced: {}", c.cached_pages());
         // The most recent prompt is still cached.
         assert_eq!(c.match_prefix(&toks(&[(3, 8)])).tokens, 8);
+    }
+
+    #[test]
+    fn eviction_index_stays_consistent_under_churn() {
+        // Property check: after every mutating operation the O(log n)
+        // eviction index must equal the brute-force evictable scan it
+        // replaced.
+        let (mut c, mut p) = (cache(64), pool(64));
+        let mut seq = 0u64;
+        for round in 0u32..30 {
+            let prompt = toks(&[(round % 7, 4 + 4 * (round as usize % 3)), (round, 4)]);
+            seq += 1;
+            let m = c.match_prefix(&prompt);
+            c.check_eviction_index();
+            if p.register_with_prefix(seq, &m.pages, prompt.len()).is_ok() {
+                let node = c.insert(&prompt, &mut p, seq);
+                c.check_eviction_index();
+                if let Some(n) = node {
+                    c.pin(n);
+                    c.check_eviction_index();
+                    c.unpin(n);
+                    c.check_eviction_index();
+                }
+                p.release(seq).unwrap();
+            }
+            if round % 5 == 4 {
+                c.evict_lru(&mut p, 3);
+                c.check_eviction_index();
+            }
+        }
+        c.evict_lru(&mut p, 1000);
+        c.check_eviction_index();
+        assert_eq!(c.cached_pages(), 0, "everything unpinned was evictable");
     }
 
     #[test]

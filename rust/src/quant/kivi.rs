@@ -41,16 +41,18 @@ impl KiviCompressor {
     }
 }
 
-/// One quantized group: codes plus fp16 zero/scale.
+/// One quantized group: codes plus fp16 zero/scale. Shared with the
+/// page-native KIVI codec (`kvcache::codec::KiviPageCodec`), which
+/// stores these constants inside each token slot.
 #[derive(Clone, Debug)]
-struct Group {
+pub(crate) struct Group {
     /// zero point (minimum), fp16-rounded.
-    zero: f32,
+    pub(crate) zero: f32,
     /// scale = (max−min)/(2^b−1), fp16-rounded.
-    scale: f32,
+    pub(crate) scale: f32,
 }
 
-fn quantize_group(xs: &[f32], bits: u8) -> (Group, Vec<u8>) {
+pub(crate) fn quantize_group(xs: &[f32], bits: u8) -> (Group, Vec<u8>) {
     let mut lo = f32::INFINITY;
     let mut hi = f32::NEG_INFINITY;
     for &x in xs {
@@ -73,7 +75,14 @@ fn quantize_group(xs: &[f32], bits: u8) -> (Group, Vec<u8>) {
 
 #[inline]
 fn dequant(code: u8, g: &Group) -> f32 {
-    g.zero + g.scale * code as f32
+    dequant_code(code, g.zero, g.scale)
+}
+
+/// Dequantize one code against explicit (zero, scale) constants — the
+/// slot-resident form the page codec reads back from fp16 headers.
+#[inline]
+pub(crate) fn dequant_code(code: u8, zero: f32, scale: f32) -> f32 {
+    zero + scale * code as f32
 }
 
 impl KvCompressor for KiviCompressor {

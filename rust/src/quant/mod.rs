@@ -2,6 +2,19 @@
 //! interface, the fp16 substrate, and every baseline the paper compares
 //! against (Table 1 / Fig. 3): KIVI, QJL, SnapKV, PyramidKV, StreamingLLM,
 //! HeadKV, plus Exact-FP16 and PolarQuant itself behind the same trait.
+//!
+//! Two cache substrates build on these primitives:
+//!
+//! * the **page-native** serving path
+//!   ([`crate::kvcache::codec::PageCodec`]): quantization methods whose
+//!   encoded token is a fixed, self-contained byte slot (polarquant,
+//!   exact/fp16, a per-token KIVI variant) live directly in
+//!   [`crate::kvcache::paged::PagedPool`] pages and are shared
+//!   zero-copy across requests;
+//! * the **legacy heap** path ([`compressor::CompressedKv`] boxes, used
+//!   by the eval harnesses and by methods that cannot be slot-shaped:
+//!   the token-evicting SnapKV family and the per-sequence-codebook
+//!   online PolarQuant variant).
 
 pub mod compressor;
 pub mod eviction;

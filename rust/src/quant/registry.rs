@@ -57,6 +57,9 @@ pub fn build_method(name: &str, ratio: f64, ctx: MethodContext) -> Box<dyn KvCom
     let d = ctx.head_dim;
     match name {
         "exact" => Box::new(ExactCompressor),
+        // The legacy heap cache stores fp16 either way; "fp16" exists as
+        // a distinct name for the page substrate, where "exact" is f32.
+        "fp16" => Box::new(ExactCompressor),
         "snapkv" => Box::new(EvictionCompressor::snapkv(ratio)),
         "pyramidkv" => Box::new(EvictionCompressor::pyramidkv(ratio, ctx.layer, ctx.num_layers)),
         "streamingllm" => Box::new(EvictionCompressor::streamingllm(ratio)),

@@ -1,0 +1,228 @@
+//! Cross-substrate parity: decode over pool-backed page slots must
+//! reproduce the legacy per-sequence `CompressedKv` heap path —
+//! bit-identically for fp16, within codec tolerance for polarquant —
+//! and a prefix-cache hit must reproduce a cold prefill exactly. Also
+//! pins the accounting invariant: `PagedPool::memory_bytes` equals
+//! every live page counted once (the pool is the only KV store).
+
+use polarquant::coordinator::request::{GenRequest, Tracked};
+use polarquant::coordinator::scheduler::Scheduler;
+use polarquant::coordinator::worker::NativeWorker;
+use polarquant::kvcache::codec::{max_slot_bytes, page_codec_for, KvLayout, PageCodec};
+use polarquant::kvcache::paged::{share, PageId, PagedConfig, PagedPool};
+use polarquant::kvcache::sequence::{CacheConfig, SequenceCache};
+use polarquant::model::config::ModelConfig;
+use polarquant::model::transformer::{PrefillOutput, Transformer};
+use polarquant::model::weights::Weights;
+use std::collections::BTreeSet;
+
+/// Encode a prefill's K/V rows into a sequence's pool slots — the same
+/// write the engine's pooled prefill performs.
+fn encode_prompt(
+    pool: &mut PagedPool,
+    seq: u64,
+    codec: &dyn PageCodec,
+    layout: &KvLayout,
+    cfg: &ModelConfig,
+    pre: &PrefillOutput,
+    upto: usize,
+) {
+    let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
+    for t in 0..upto {
+        let slot = pool.token_slot_mut(seq, t).expect("slot");
+        for (l, layer) in pre.kv.iter().enumerate() {
+            for h in 0..cfg.n_heads {
+                let off = layout.pair_offset(l, h);
+                codec.encode_pair(
+                    &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh],
+                    &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh],
+                    &mut slot[off..off + layout.pair_bytes],
+                );
+            }
+        }
+    }
+}
+
+fn test_pool(cfg: &ModelConfig, tokens: usize) -> PagedPool {
+    PagedPool::new(PagedConfig {
+        page_tokens: 4,
+        token_bytes: max_slot_bytes(cfg),
+        num_pages: tokens.div_ceil(4) + 8,
+    })
+}
+
+#[test]
+fn fp16_pool_decode_bit_identical_to_legacy_heap() {
+    // The fp16 page codec stores exactly what the legacy `ExactKv` heap
+    // cache stores, and the slot readers replay the same op order —
+    // teacher-forced decode logits must match bit for bit, including
+    // the decode-appended tail (fp16 in both substrates).
+    let cfg = ModelConfig::test();
+    let mut m = Transformer::synthetic(&cfg, 42);
+    let tokens: Vec<u32> = (0..40).map(|i| (i * 13 + 5) % 64).collect();
+    let split = 32;
+    let pre = m.prefill(&tokens[..split]);
+
+    let mut legacy = SequenceCache::from_prefill(&cfg, &CacheConfig::new("exact", 1.0), &pre);
+    let codec = page_codec_for("fp16", cfg.head_dim).unwrap();
+    let layout = KvLayout::new(&cfg, codec.as_ref());
+    let mut pool = test_pool(&cfg, tokens.len() + 4);
+    pool.register(1, tokens.len() + 4).unwrap();
+    encode_prompt(&mut pool, 1, codec.as_ref(), &layout, &cfg, &pre, split);
+
+    for (i, &t) in tokens[split..].iter().enumerate() {
+        let pos = split + i;
+        let a = m.decode_step(t, pos, &mut legacy.caches);
+        let b = m.decode_step_paged(t, pos, &mut pool, 1, codec.as_ref(), &layout);
+        assert_eq!(a, b, "step {pos}: fp16 pool logits must be bit-identical");
+    }
+}
+
+#[test]
+fn polar_pool_decode_matches_legacy_heap() {
+    // Same encoded codes, same fused score/accumulate kernels → the
+    // first decode step (no appended tail yet) is bit-identical. Later
+    // steps diverge only in tail storage (legacy keeps an fp16 tail per
+    // paper §5.3; the pool encodes streamed tokens with the codec) and
+    // must stay within quantization tolerance.
+    let cfg = ModelConfig::test();
+    let mut m = Transformer::synthetic(&cfg, 7);
+    let tokens: Vec<u32> = (0..36).map(|i| (i * 7 + 1) % 64).collect();
+    let split = 32;
+    let pre = m.prefill(&tokens[..split]);
+
+    let mut legacy = SequenceCache::from_prefill(
+        &cfg,
+        &CacheConfig::new("polarquant-r-offline", 0.25),
+        &pre,
+    );
+    let codec = page_codec_for("polarquant-r-offline", cfg.head_dim).unwrap();
+    let layout = KvLayout::new(&cfg, codec.as_ref());
+    let mut pool = test_pool(&cfg, tokens.len() + 4);
+    pool.register(1, tokens.len() + 4).unwrap();
+    encode_prompt(&mut pool, 1, codec.as_ref(), &layout, &cfg, &pre, split);
+
+    for (i, &t) in tokens[split..].iter().enumerate() {
+        let pos = split + i;
+        let a = m.decode_step(t, pos, &mut legacy.caches);
+        let b = m.decode_step_paged(t, pos, &mut pool, 1, codec.as_ref(), &layout);
+        if i == 0 {
+            assert_eq!(a, b, "step {pos}: identical codes → identical logits");
+        } else {
+            let rel = polarquant::util::stats::rel_l2_error(&b, &a);
+            assert!(rel < 0.5, "step {pos}: rel divergence {rel}");
+        }
+    }
+}
+
+fn run_to_done(
+    s: &mut Scheduler,
+    e: &mut NativeWorker,
+) -> Vec<polarquant::coordinator::request::GenResponse> {
+    let mut done = Vec::new();
+    while !s.active.is_empty() {
+        done.extend(s.decode_round(e).finished);
+    }
+    done
+}
+
+fn exact_req(id: u64, prompt: &[u32]) -> Tracked {
+    let mut r = GenRequest::new(id, prompt.to_vec(), 4);
+    r.method = "exact".into();
+    Tracked::new(r)
+}
+
+#[test]
+fn scheduler_prefix_hit_then_decode_matches_cold_prefill_exactly() {
+    // End-to-end acceptance: a radix hit serves decode directly from
+    // shared pool pages (no snapshot store exists anymore), and with
+    // the lossless exact codec the warm generation is token-identical
+    // to a cold one. Also asserts the pool-bytes invariant while
+    // sequences and cache share pages.
+    let cfg = ModelConfig::test();
+    let prompt: Vec<u32> = (0..48).map(|i| (i * 5 + 2) % 64).collect();
+    let mk = || {
+        let pool = share(PagedPool::new(PagedConfig {
+            page_tokens: 16,
+            token_bytes: max_slot_bytes(&cfg),
+            num_pages: 128,
+        }));
+        let engine = NativeWorker::with_pool(Weights::synthetic(&cfg, 9), pool.clone());
+        (Scheduler::with_prefix_cache_shared(pool, 4, 64), engine)
+    };
+
+    // Cold reference on a fresh stack.
+    let (mut s0, mut e0) = mk();
+    s0.admit(vec![exact_req(1, &prompt)], &mut e0);
+    let cold = run_to_done(&mut s0, &mut e0).remove(0);
+    assert_eq!(cold.reused_tokens, 0);
+
+    // Warm: same stack, second sighting hits the radix cache.
+    let (mut s1, mut e1) = mk();
+    s1.admit(vec![exact_req(1, &prompt)], &mut e1);
+    run_to_done(&mut s1, &mut e1);
+    s1.admit(vec![exact_req(2, &prompt)], &mut e1);
+
+    // Accounting invariant while the warm sequence is active and shares
+    // its head with the cache: every live page counted once.
+    {
+        let pool = s1.pool.lock().unwrap();
+        let mut unique: BTreeSet<PageId> = BTreeSet::new();
+        if let Some(t) = pool.table(2) {
+            unique.extend(t.pages.iter().copied());
+        }
+        // The cache's pages are exactly the shared head of table 2 here,
+        // so the union of live block tables covers every live page.
+        assert_eq!(
+            unique.len() * pool.page_bytes(),
+            pool.memory_bytes(),
+            "pool bytes must equal live slot bytes, shared pages once"
+        );
+        assert_eq!(pool.live_pages().len(), unique.len());
+    }
+
+    let warm = run_to_done(&mut s1, &mut e1).remove(0);
+    // 48 tokens = 3 full pages; an exact repeat clamps one token back so
+    // the suffix forward pass has a row to produce logits from.
+    assert_eq!(warm.reused_tokens, 47);
+    assert_eq!(
+        warm.tokens, cold.tokens,
+        "prefix hit + decode must reproduce the cold generation exactly"
+    );
+
+    let ev = s1.take_prefix_events();
+    assert_eq!((ev.hits, ev.misses), (1, 1));
+    assert_eq!(ev.tokens_reused, 47);
+}
+
+#[test]
+fn kivi_and_polar_pool_scores_stay_finite_end_to_end() {
+    // Smoke parity for the remaining page codecs through the real
+    // scheduler: generations complete, report their true slot footprint,
+    // and decode never produces non-finite logits (sampled ids in
+    // vocab). Both quantized slot layouts must undercut fp16.
+    let cfg = ModelConfig::test();
+    let pool = share(PagedPool::new(PagedConfig {
+        page_tokens: 16,
+        token_bytes: max_slot_bytes(&cfg),
+        num_pages: 256,
+    }));
+    let mut engine = NativeWorker::with_pool(Weights::synthetic(&cfg, 3), pool.clone());
+    let mut sched = Scheduler::with_prefix_cache_shared(pool, 4, 64);
+    let prompt: Vec<u32> = (0..32).map(|i| (i * 3 + 2) % 64).collect();
+    let mut bytes = std::collections::BTreeMap::new();
+    for (id, method) in ["polarquant-r-offline", "kivi", "fp16"].iter().enumerate() {
+        let mut r = GenRequest::new(id as u64 + 1, prompt.clone(), 4);
+        r.method = (*method).to_string();
+        sched.admit(vec![Tracked::new(r)], &mut engine);
+        let resp = run_to_done(&mut sched, &mut engine).remove(0);
+        assert_eq!(resp.tokens.len(), 4, "{method}");
+        assert!(resp.tokens.iter().all(|&t| (t as usize) < cfg.vocab), "{method}");
+        assert!(resp.cache_bytes > 0, "{method}");
+        bytes.insert(*method, resp.cache_bytes);
+    }
+    assert!(
+        bytes["polarquant-r-offline"] < bytes["fp16"] && bytes["kivi"] < bytes["fp16"],
+        "quantized slots must undercut fp16: {bytes:?}"
+    );
+}

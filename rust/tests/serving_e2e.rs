@@ -26,6 +26,7 @@ fn mixed_methods_under_load() {
     let s = server(2, 1 << 14);
     let methods = [
         "exact",
+        "fp16",
         "kivi",
         "snapkv",
         "streamingllm",
@@ -56,14 +57,45 @@ fn mixed_methods_under_load() {
 }
 
 #[test]
+fn page_codecs_serve_end_to_end() {
+    // Every page-native codec (polarquant variants, exact f32, fp16,
+    // kivi) serves through the pool substrate: prompt codes written to
+    // page slots at prefill, decode scoring straight off the pages, and
+    // repeat prompts reusing the encoded pages zero-copy.
+    let s = server(1, 1 << 14);
+    let prompt: Vec<u32> = (0..40).map(|x| (x * 3 + 1) % 64).collect();
+    for method in ["polarquant", "polarquant-r-offline", "exact", "fp16", "kivi"] {
+        let mut req = GenRequest::new(0, prompt.clone(), 4);
+        req.method = method.into();
+        let first = s.generate_blocking(req, Duration::from_secs(60)).expect("cold");
+        assert_eq!(first.tokens.len(), 4, "{method}");
+        assert_eq!(first.reused_tokens, 0, "{method}: cold");
+        assert!(first.cache_bytes > 0, "{method}");
+        // Second sighting reuses this codec's own encoded pages — the
+        // 40-token prompt has 2 full 16-token pages to share.
+        let mut req = GenRequest::new(0, prompt.clone(), 4);
+        req.method = method.into();
+        let again = s.generate_blocking(req, Duration::from_secs(60)).expect("warm");
+        assert_eq!(again.reused_tokens, 32, "{method}: page-aligned reuse");
+        assert_eq!(again.tokens.len(), 4, "{method}");
+    }
+    s.shutdown();
+}
+
+#[test]
 fn deterministic_generation_across_replicas() {
     // Same prompt + greedy sampling must produce identical tokens on any
-    // worker (weights seeded identically) — the router can spread freely.
+    // worker (weights seeded identically), cold or prefix-warm — the
+    // router can spread freely. Pinned to the lossless `exact` codec:
+    // warm requests replay the codec's own pool pages, so for lossy
+    // codecs a hit reproduces the quantized cache (tolerance-tested in
+    // codec_parity), while `exact` is bit-identical by construction.
     let s = server(3, 1 << 14);
     let prompt: Vec<u32> = (0..24).map(|x| x % 64).collect();
     let mut outputs = Vec::new();
     for _ in 0..6 {
-        let req = GenRequest::new(0, prompt.clone(), 5);
+        let mut req = GenRequest::new(0, prompt.clone(), 5);
+        req.method = "exact".into();
         let resp = s.generate_blocking(req, Duration::from_secs(60)).unwrap();
         outputs.push(resp.tokens);
     }
