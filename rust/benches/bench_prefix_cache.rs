@@ -10,9 +10,13 @@
 //!                snapshot copies, no re-quantization).
 //!
 //! Besides requests/s and prompt-tokens/s, each row reports **resident
-//! KV bytes** (pool storage + engine heap caches, peak over the run):
-//! the substrate rows show pool bytes only — the pool IS the KV store —
-//! while the legacy row pays heap caches on top of pool accounting.
+//! KV bytes** (codec-sized pool storage + engine heap caches, peak over
+//! the run): the substrate rows show pool bytes only — the pool IS the
+//! KV store, and since pools are sized per codec the column now reads
+//! the paper-shaped gap (polarquant ≈ 3.9 bits/coord resident vs exact's
+//! 32) — while the legacy row pays heap caches on top of its admission
+//! accounting. A second table sweeps every page codec at 50% sharing so
+//! the per-codec residency gap is printed side by side.
 //! The 90%-shared acceptance bar is ≥2x throughput over cold prefill.
 
 mod common;
@@ -23,8 +27,7 @@ use polarquant::coordinator::scheduler::Scheduler;
 use polarquant::coordinator::worker::NativeWorker;
 use polarquant::eval::report;
 use polarquant::eval::workload::PrefixWorkload;
-use polarquant::kvcache::codec::max_slot_bytes;
-use polarquant::kvcache::paged::{share, PagedConfig, PagedPool};
+use polarquant::kvcache::pools::{share_pools, PoolSet};
 use polarquant::model::config::ModelConfig;
 use polarquant::model::weights::Weights;
 use polarquant::util::timer::Timer;
@@ -35,6 +38,9 @@ struct RunStats {
     requests: usize,
     prompt_tokens: usize,
     peak_resident_bytes: usize,
+    /// Achieved storage width of the peak resident KV (0 for legacy
+    /// rows, whose KV lives on the heap).
+    peak_bits_per_coord: f64,
 }
 
 fn run(
@@ -43,51 +49,59 @@ fn run(
     enable_cache: bool,
     n_req: usize,
     model: &ModelConfig,
+    method: &str,
 ) -> RunStats {
-    // Substrate configs size slots for the widest codec (as the server
-    // does); the legacy config keeps the pre-substrate fp16 accounting
-    // width so its resident-KV baseline is what that engine actually
-    // reserved.
-    let token_bytes = if substrate {
-        max_slot_bytes(model)
-    } else {
-        model.kv_bytes_per_token_fp16()
-    };
-    let pool = share(PagedPool::new(PagedConfig {
-        page_tokens: 16,
-        token_bytes,
-        num_pages: 1024,
-    }));
-    let mut engine = NativeWorker::with_pool(Weights::synthetic(model, 7), pool.clone());
+    // Codec-sized pools: each method's pages are exactly its
+    // `slot_bytes()` wide, so the resident column measures the codec's
+    // true byte cost. The legacy config keeps its admission page
+    // reservations in the same set but stores KV on the heap, so its
+    // row pays heap caches on top of the reservations.
+    let pools = share_pools(PoolSet::for_model(model, 16, 16 * 1024));
+    let mut engine = NativeWorker::with_pools(Weights::synthetic(model, 7), pools.clone());
     engine.set_pool_substrate(substrate);
     let mut sched = if enable_cache {
-        Scheduler::with_prefix_cache_shared(pool.clone(), 8, 512)
+        // Byte budget ≈ half the pool's tokens at fp16 reference width.
+        let cache_bytes = 8 * 1024 * model.kv_bytes_per_token_fp16();
+        Scheduler::with_prefix_cache_shared(pools.clone(), 8, cache_bytes)
     } else {
-        Scheduler::from_shared(pool.clone(), 8)
+        Scheduler::from_shared(pools.clone(), 8)
     };
     // 192-token shared head (12 pages) + 32-token unique tail.
     let mut wl = PrefixWorkload::new(model.vocab, 1, 192, 32, shared, 11);
+    let coords_per_token = model.kv_coords_per_token();
 
     let mut tokens_reused = 0u64;
     let mut prompt_tokens = 0usize;
     let mut peak = 0usize;
+    let mut peak_bits = 0.0f64;
     let t = Timer::start();
     for i in 0..n_req {
         let (prompt, _) = wl.next_prompt();
         prompt_tokens += prompt.len();
         let mut req = GenRequest::new(i as u64, prompt, 4);
-        req.method = "polarquant-r-offline".into();
+        req.method = method.into();
         sched.admit(vec![Tracked::new(req)], &mut engine);
         // Substrate rows: the pool IS the KV store (session slot bytes
         // live inside the counted pages — adding them would double
         // count). Legacy rows pay heap caches on top of the pool pages
         // the scheduler reserves for accounting.
-        let resident = if substrate {
-            pool.lock().unwrap().memory_bytes()
-        } else {
-            pool.lock().unwrap().memory_bytes() + engine.total_cache_bytes()
+        let (kv_bytes, kv_slots) = {
+            let pools = pools.lock().unwrap();
+            pools.occupancy()
         };
-        peak = peak.max(resident);
+        let resident = if substrate {
+            kv_bytes
+        } else {
+            pools.lock().unwrap().memory_bytes() + engine.total_cache_bytes()
+        };
+        if resident > peak {
+            peak = resident;
+            peak_bits = if substrate && kv_slots > 0 {
+                kv_bytes as f64 * 8.0 / (kv_slots * coords_per_token) as f64
+            } else {
+                0.0
+            };
+        }
         while !sched.active.is_empty() {
             sched.decode_round(&mut engine);
         }
@@ -99,6 +113,7 @@ fn run(
         requests: n_req,
         prompt_tokens,
         peak_resident_bytes: peak,
+        peak_bits_per_coord: peak_bits,
     }
 }
 
@@ -130,7 +145,7 @@ fn main() {
             ("pool+pfx", true, true),
         ];
         for (name, substrate, cache) in configs {
-            let st = run(shared, substrate, cache, n_req, &model);
+            let st = run(shared, substrate, cache, n_req, &model, "polarquant-r-offline");
             let rps = st.requests as f64 / st.elapsed_s;
             let tps = st.prompt_tokens as f64 / st.elapsed_s;
             if shared == 0.0 && name == "pool" {
@@ -150,6 +165,51 @@ fn main() {
         }
     }
     table.print();
+
+    // Per-codec residency at 50% sharing: the same workload under each
+    // page codec, pool+prefix config. With codec-sized pools, no codec
+    // reports exact-width residency — the column IS the paper's
+    // compression table, in resident bytes.
+    let mut codec_table = report::Table::new(
+        "bench_prefix_cache — per-codec peak resident KV (pool+pfx, 50% shared)",
+        &[
+            "method",
+            "req/s",
+            "peak resident KV (KiB)",
+            "bits/coord",
+            "vs exact",
+        ],
+    );
+    let methods = polarquant::kvcache::codec::PAGE_CODEC_METHODS;
+    let mut peaks = Vec::new();
+    for method in methods {
+        let st = run(0.5, true, true, n_req, &model, method);
+        peaks.push((method, st));
+    }
+    let exact_peak = peaks
+        .iter()
+        .find(|(m, _)| *m == "exact")
+        .map(|(_, st)| st.peak_resident_bytes)
+        .unwrap_or(0);
+    for (method, st) in &peaks {
+        codec_table.row(vec![
+            method.to_string(),
+            format!("{:.2}", st.requests as f64 / st.elapsed_s),
+            format!("{}", st.peak_resident_bytes / 1024),
+            format!("{:.3}", st.peak_bits_per_coord),
+            format!("{:.2}x", exact_peak as f64 / st.peak_resident_bytes.max(1) as f64),
+        ]);
+    }
+    codec_table.print();
+    for (method, st) in &peaks {
+        if *method != "exact" {
+            assert!(
+                st.peak_resident_bytes < exact_peak,
+                "{method} must not report exact-width residency"
+            );
+        }
+    }
+
     println!(
         "\n90%-shared pool+prefix speedup over cold pool substrate: {:.2}x \
          (target ≥ 2x over cold prefill)",

@@ -29,9 +29,23 @@ fn main() {
         }
     };
     let rows = runtime_bench::run(TABLE1_METHODS, &cfg);
+    let exact_resident = rows
+        .iter()
+        .find(|r| r.method == "exact")
+        .map(|r| r.resident_kv_bytes)
+        .unwrap_or(0);
     let mut t = report::Table::new(
         &format!("Table 2 (n={}, {} generated)", cfg.prompt_len, cfg.gen_tokens),
-        &["Method", "Prefill (s)", "compress (s)", "Generation (s)", "tok/s", "cache MB"],
+        &[
+            "Method",
+            "Prefill (s)",
+            "compress (s)",
+            "Generation (s)",
+            "tok/s",
+            "cache MB",
+            "peak resident KV MB",
+            "vs exact",
+        ],
     );
     for r in &rows {
         t.row(vec![
@@ -41,6 +55,11 @@ fn main() {
             report::f(r.generation_s, 3),
             report::f(r.tokens_per_s, 1),
             report::f(r.cache_bytes as f64 / 1e6, 3),
+            report::f(r.resident_kv_bytes as f64 / 1e6, 3),
+            format!(
+                "{:.2}x",
+                exact_resident as f64 / r.resident_kv_bytes.max(1) as f64
+            ),
         ]);
     }
     t.print();
@@ -75,5 +94,13 @@ fn main() {
     println!(
         "  polar decode overhead vs exact: ×{:.2} (paper: ×1.14 with CUDA kernels; see EXPERIMENTS.md §Perf)",
         polar.generation_s / exact.generation_s
+    );
+    println!(
+        "  resident KV, codec-sized pools: polar {:.3} MB vs exact {:.3} MB → ×{:.2} \
+         (paper: ×4.2 vs fp16) → {}",
+        polar.resident_kv_bytes as f64 / 1e6,
+        exact.resident_kv_bytes as f64 / 1e6,
+        exact.resident_kv_bytes as f64 / polar.resident_kv_bytes.max(1) as f64,
+        if polar.resident_kv_bytes * 4 <= exact.resident_kv_bytes { "PASS" } else { "CHECK" }
     );
 }

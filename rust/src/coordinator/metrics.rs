@@ -33,6 +33,14 @@ pub struct Metrics {
     pub prefix_evictions: AtomicU64,
     /// Gauge: pool pages currently pinned by prefix caches (all workers).
     pub prefix_cached_pages: AtomicU64,
+    /// Gauge: resident encoded-KV bytes across the codec-sized pools of
+    /// all workers (legacy accounting pools excluded).
+    pub kv_resident_bytes: AtomicU64,
+    /// Gauge: coordinates those bytes encode (resident token slots ×
+    /// 2·layers·heads·head_dim). Together with `kv_resident_bytes` this
+    /// yields the achieved bits/coordinate and the compression ratio vs
+    /// the exact-f32 reference in the snapshot.
+    pub kv_resident_coords: AtomicU64,
     lat: Mutex<Latencies>,
     started: Instant,
 }
@@ -58,9 +66,26 @@ impl Metrics {
             prefix_tokens_reused: AtomicU64::new(0),
             prefix_evictions: AtomicU64::new(0),
             prefix_cached_pages: AtomicU64::new(0),
+            kv_resident_bytes: AtomicU64::new(0),
+            kv_resident_coords: AtomicU64::new(0),
             lat: Mutex::new(Latencies::default()),
             started: Instant::now(),
         }
+    }
+
+    /// Fold one worker's resident-KV gauge into the hub. Like
+    /// `cached_pages`, residency is a per-worker gauge, so the caller
+    /// passes its previous contribution and we apply the delta.
+    pub fn record_kv_residency(&self, bytes: u64, coords: u64, prev: (u64, u64)) {
+        let delta = |gauge: &AtomicU64, now: u64, was: u64| {
+            if now >= was {
+                gauge.fetch_add(now - was, Ordering::Relaxed);
+            } else {
+                gauge.fetch_sub(was - now, Ordering::Relaxed);
+            }
+        };
+        delta(&self.kv_resident_bytes, bytes, prev.0);
+        delta(&self.kv_resident_coords, coords, prev.1);
     }
 
     /// Fold one worker's drained prefix-cache events into the hub.
@@ -146,6 +171,21 @@ impl Metrics {
             ),
             ("throughput_tok_s", Json::num(self.throughput())),
             ("cache_bytes", Json::num(self.cache_bytes.load(Ordering::Relaxed) as f64)),
+            // Achieved storage width of the resident KV, straight from
+            // codec-sized pool accounting: bits per stored coordinate
+            // and the compression ratio vs the exact-f32 reference
+            // (32 bits/coord). PolarQuant traffic reads ≈3.9–4.0 bits
+            // and ≈8x; fp16 reads 16 bits and 2x.
+            ("kv_bits_per_coord", {
+                let bytes = self.kv_resident_bytes.load(Ordering::Relaxed);
+                let coords = self.kv_resident_coords.load(Ordering::Relaxed);
+                Json::num(if coords == 0 { 0.0 } else { bytes as f64 * 8.0 / coords as f64 })
+            }),
+            ("kv_compression_vs_exact", {
+                let bytes = self.kv_resident_bytes.load(Ordering::Relaxed);
+                let coords = self.kv_resident_coords.load(Ordering::Relaxed);
+                Json::num(if bytes == 0 { 0.0 } else { coords as f64 * 4.0 / bytes as f64 })
+            }),
             ("preemptions", Json::num(self.preemptions.load(Ordering::Relaxed) as f64)),
             ("prefix_cache", {
                 let hits = self.prefix_hits.load(Ordering::Relaxed);
@@ -249,6 +289,33 @@ mod tests {
         assert_eq!(
             parsed.path("prefix_cache.cached_pages").unwrap().as_f64().unwrap(),
             9.0
+        );
+    }
+
+    #[test]
+    fn kv_residency_gauges_derive_bits_and_compression() {
+        let m = Metrics::new();
+        // Worker 1: 1024 coords resident at 4 bits/coord (512 bytes).
+        m.record_kv_residency(512, 1024, (0, 0));
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        assert_eq!(parsed.path("kv_bits_per_coord").unwrap().as_f64().unwrap(), 4.0);
+        // Compression vs exact f32 (4 bytes/coord): 4096 / 512 = 8x.
+        assert_eq!(
+            parsed.path("kv_compression_vs_exact").unwrap().as_f64().unwrap(),
+            8.0
+        );
+        // Worker 2 reports fp16-width residency; the blend moves both.
+        m.record_kv_residency(2048, 1024, (0, 0));
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        let bits = parsed.path("kv_bits_per_coord").unwrap().as_f64().unwrap();
+        assert!((bits - 10.0).abs() < 1e-9, "2560 B over 2048 coords: {bits}");
+        // Worker 1 drains: gauges shrink by its previous contribution.
+        m.record_kv_residency(0, 0, (512, 1024));
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        assert_eq!(parsed.path("kv_bits_per_coord").unwrap().as_f64().unwrap(), 16.0);
+        assert_eq!(
+            parsed.path("kv_compression_vs_exact").unwrap().as_f64().unwrap(),
+            2.0
         );
     }
 }

@@ -1,11 +1,16 @@
 //! Continuous-batching scheduler (vLLM/Orca-style).
 //!
 //! Maintains the set of *active* sequences; each scheduler step either
-//! (a) admits new requests from the batcher when the page pool has room —
-//! running their prefills — or (b) runs one decode round across all
-//! active sequences. Decode-starved rounds preempt the newest sequence
-//! back to the queue when the pool runs dry mid-generation (recompute-on-
-//! resume policy, the simpler of vLLM's two).
+//! (a) admits new requests from the batcher when the page pools have
+//! room — running their prefills — or (b) runs one decode round across
+//! all active sequences. Decode-starved rounds preempt the newest
+//! sequence back to the queue when its pool runs dry mid-generation
+//! (recompute-on-resume policy, the simpler of vLLM's two).
+//!
+//! Admission accounting is per-codec: the scheduler owns a
+//! [`PoolSet`] whose pools are sized from each codec's `slot_bytes()`,
+//! so a request's page demand — and the bytes it will keep resident —
+//! reflect its method's true encoded width, not a global worst case.
 //!
 //! The scheduler is engine-agnostic: it drives a [`StepEngine`] trait so
 //! tests exercise the policy with a mock engine and the worker plugs in
@@ -13,8 +18,9 @@
 
 use crate::coordinator::request::{GenRequest, GenResponse, Timing, Tracked};
 use crate::kvcache::codec::is_page_codec;
-use crate::kvcache::paged::{share, PagedPool, SharedPool};
-use crate::prefix::{NodeId, PrefixCacheSet, PrefixConfig, PrefixMatch};
+use crate::kvcache::pools::{share_pools, PoolSet, SharedPools};
+use crate::prefix::{NodeId, PrefixCacheSet, PrefixMatch};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// One active sequence's scheduler state.
@@ -61,9 +67,15 @@ pub trait StepEngine {
     fn release(&mut self, engine_id: u64);
 }
 
+/// Pages a gated-but-not-yet-admitted batch will consume, keyed by pool
+/// (pools are per-codec, so pending demand must not be pooled into one
+/// number). The serving loop threads this through consecutive
+/// [`Scheduler::gate_request`] calls.
+pub type PendingPages = BTreeMap<String, usize>;
+
 /// A passed admission gate from [`Scheduler::gate_request`]: the serving
 /// loop gates each batch candidate (accumulating `pages` into the
-/// pending total), then feeds the gated pairs to
+/// per-pool pending totals), then feeds the gated pairs to
 /// [`Scheduler::admit_gated`], which consumes the gate — its radix
 /// match/pin is computed once here and reused at admission instead of
 /// re-running the match. While a gate is held, its matched radix path
@@ -71,8 +83,12 @@ pub trait StepEngine {
 /// gated request's page reservation at admission cannot fail.
 #[derive(Debug)]
 pub struct AdmitGate {
-    /// Fresh pool pages the request will consume (prefix-credited).
+    /// Fresh pages (in this request's codec pool) the request will
+    /// consume (prefix-credited).
     pub pages: usize,
+    /// Key of the pool those pages come from — accumulate `pages` under
+    /// this key in the [`PendingPages`] map.
+    pub pool_key: String,
     /// The pinned radix match (page-aligned shared pages + pinned node).
     m: PrefixMatch,
     method: String,
@@ -108,27 +124,28 @@ pub struct Scheduler {
     pub active: Vec<ActiveSeq>,
     /// The single KV substrate, shared with the engine (which encodes
     /// and scores page slots while the scheduler does admission,
-    /// sharing, and accounting on the same pages).
-    pub pool: SharedPool,
+    /// sharing, and accounting on the same pages): one codec-sized pool
+    /// per page codec plus a legacy accounting pool.
+    pub pools: SharedPools,
     /// Max sequences decoding simultaneously.
     pub max_active: usize,
-    /// Optional per-codec radix-tree prefix caches over the pool's pages.
+    /// Optional per-codec radix-tree prefix caches over the pools' pages.
     pub prefix: Option<PrefixCacheSet>,
     events: PrefixEvents,
     reported_evictions: u64,
 }
 
 impl Scheduler {
-    pub fn new(pool: PagedPool, max_active: usize) -> Self {
-        Self::from_shared(share(pool), max_active)
+    pub fn new(pools: PoolSet, max_active: usize) -> Self {
+        Self::from_shared(share_pools(pools), max_active)
     }
 
-    /// A scheduler over an existing shared pool (the server hands the
-    /// same handle to the engine).
-    pub fn from_shared(pool: SharedPool, max_active: usize) -> Self {
+    /// A scheduler over an existing shared pool set (the server hands
+    /// the same handle to the engine).
+    pub fn from_shared(pools: SharedPools, max_active: usize) -> Self {
         Self {
             active: Vec::new(),
-            pool,
+            pools,
             max_active,
             prefix: None,
             events: PrefixEvents::default(),
@@ -136,34 +153,40 @@ impl Scheduler {
         }
     }
 
-    /// A scheduler with the radix-tree prefix cache enabled; the cache may
-    /// keep up to `cache_pages` of the pool referenced for reuse.
-    pub fn with_prefix_cache(pool: PagedPool, max_active: usize, cache_pages: usize) -> Self {
-        Self::with_prefix_cache_shared(share(pool), max_active, cache_pages)
+    /// A scheduler with the radix-tree prefix cache enabled; the cache
+    /// may keep up to `cache_bytes` of pool storage referenced for reuse
+    /// (a byte budget — cached pages of different codecs have different
+    /// sizes).
+    pub fn with_prefix_cache(pools: PoolSet, max_active: usize, cache_bytes: usize) -> Self {
+        Self::with_prefix_cache_shared(share_pools(pools), max_active, cache_bytes)
     }
 
     /// Shared-pool variant of [`with_prefix_cache`](Self::with_prefix_cache).
     pub fn with_prefix_cache_shared(
-        pool: SharedPool,
+        pools: SharedPools,
         max_active: usize,
-        cache_pages: usize,
+        cache_bytes: usize,
     ) -> Self {
-        let page_tokens = pool.lock().unwrap().cfg.page_tokens;
-        let cfg = PrefixConfig { page_tokens, max_pages: cache_pages };
-        let mut s = Self::from_shared(pool, max_active);
-        s.prefix = Some(PrefixCacheSet::new(cfg));
+        let page_tokens = pools.lock().unwrap().page_tokens();
+        let mut s = Self::from_shared(pools, max_active);
+        s.prefix = Some(PrefixCacheSet::new(page_tokens, cache_bytes));
         s
     }
 
-    /// Can a request of this prompt length be admitted right now, without
-    /// touching any state? Conservative: a `true` here guarantees the
-    /// page reservation in [`admit`](Self::admit) succeeds. It does not
-    /// count cache-held pages — use
+    /// Can a request of this prompt length and method be admitted right
+    /// now, without touching any state? Conservative: a `true` here
+    /// guarantees the page reservation in [`admit`](Self::admit)
+    /// succeeds. It does not count cache-held pages — use
     /// [`gate_request`](Self::gate_request) to also credit prefix hits
     /// and evict cold cache entries to make the room.
-    pub fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+    pub fn can_admit(&self, prompt_len: usize, max_new: usize, method: &str) -> bool {
         self.active.len() < self.max_active
-            && self.pool.lock().unwrap().can_admit(prompt_len + max_new)
+            && self
+                .pools
+                .lock()
+                .unwrap()
+                .pool_mut(method)
+                .can_admit(prompt_len + max_new)
     }
 
     /// Match the longest cached prefix for a prompt and pin it. Prefixes
@@ -182,20 +205,21 @@ impl Scheduler {
         PrefixMatch::default()
     }
 
-    /// Gate one request for admission: make room for it (evicting cold,
-    /// freeable cache entries only when that covers the shortfall) and,
-    /// on success, return an [`AdmitGate`] carrying its prefix-credited
-    /// page demand plus the pinned radix match itself — admission via
+    /// Gate one request for admission: make room for it in its method's
+    /// pool (evicting cold, freeable cache entries of that same codec
+    /// only when that covers the shortfall) and, on success, return an
+    /// [`AdmitGate`] carrying its prefix-credited page demand plus the
+    /// pinned radix match itself — admission via
     /// [`admit_gated`](Self::admit_gated) reuses it instead of matching
-    /// again. The caller accumulates `pages` into `pending_pages` for
-    /// subsequent gate calls.
+    /// again. The caller accumulates `pages` under `pool_key` in the
+    /// [`PendingPages`] map for subsequent gate calls.
     pub fn gate_request(
         &mut self,
         prompt: &[u32],
         max_new: usize,
         method: &str,
         pending_seqs: usize,
-        pending_pages: usize,
+        pending: &PendingPages,
     ) -> Option<AdmitGate> {
         if self.active.len() + pending_seqs >= self.max_active {
             return None;
@@ -207,28 +231,34 @@ impl Scheduler {
         let m = self.match_and_pin(method, prompt);
         let epoch = self.prefix.as_ref().map(|pc| pc.epoch()).unwrap_or(0);
         let fits = {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pools = self.pools.lock().unwrap();
+            let key = pools.pool_key(method);
+            let pool = pools.pool_mut(method);
             let need = pool.pages_for(prompt.len() + max_new);
             let fresh = need.saturating_sub(m.pages.len());
-            let want = fresh + pending_pages;
+            let want = fresh + pending.get(&key).copied().unwrap_or(0);
             if want > pool.free_pages() {
                 if let Some(pc) = &mut self.prefix {
                     // All-or-nothing: a request the cache cannot make room
                     // for must not destroy reusable entries while failing.
                     let short = want - pool.free_pages();
-                    pc.make_room(&mut pool, short);
+                    pc.make_room(method, pool, short);
                 }
             }
             if want <= pool.free_pages() {
-                Some(fresh)
+                Some((fresh, key))
             } else {
                 None
             }
         };
         match fits {
-            Some(fresh) => {
-                Some(AdmitGate { pages: fresh, m, method: method.to_string(), epoch })
-            }
+            Some((fresh, pool_key)) => Some(AdmitGate {
+                pages: fresh,
+                pool_key,
+                m,
+                method: method.to_string(),
+                epoch,
+            }),
             None => {
                 if let (Some(pc), Some(n)) = (&mut self.prefix, m.node) {
                     pc.unpin(method, n);
@@ -304,17 +334,19 @@ impl Scheduler {
         let total = t.req.prompt.len() + t.req.max_new_tokens;
         let eligible = is_page_codec(&t.req.method);
 
-        // Reserve pages for prompt + full generation budget up front
-        // (conservative admission → fewer preemptions), sharing the
-        // matched prefix pages; make room first by evicting cache
-        // entries — only if that can actually cover the shortfall.
+        // Reserve pages (in this method's codec-sized pool) for prompt +
+        // full generation budget up front (conservative admission →
+        // fewer preemptions), sharing the matched prefix pages; make
+        // room first by evicting same-codec cache entries — only if that
+        // can actually cover the shortfall.
         let registered = {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pools = self.pools.lock().unwrap();
+            let pool = pools.pool_mut(&t.req.method);
             let fresh_needed = pool.pages_for(total).saturating_sub(m.pages.len());
             if fresh_needed > pool.free_pages() {
                 if let Some(pc) = &mut self.prefix {
                     let short = fresh_needed - pool.free_pages();
-                    pc.make_room(&mut pool, short);
+                    pc.make_room(&t.req.method, pool, short);
                 }
             }
             pool.register_with_prefix(t.req.id, &m.pages, total).is_ok()
@@ -343,8 +375,11 @@ impl Scheduler {
         let mut prefix_node = None;
         if let Some(pc) = &mut self.prefix {
             if eligible {
-                let mut pool = self.pool.lock().unwrap();
-                let leaf = pc.insert(&t.req.method, &t.req.prompt, &mut pool, t.req.id);
+                let mut pools = self.pools.lock().unwrap();
+                let leaf = {
+                    let pool = pools.pool_mut(&t.req.method);
+                    pc.insert(&t.req.method, &t.req.prompt, pool, t.req.id)
+                };
                 if let Some(l) = leaf {
                     pc.pin(&t.req.method, l);
                 }
@@ -359,7 +394,7 @@ impl Scheduler {
                     self.events.misses += 1;
                 }
                 self.events.tokens_reused += reused as u64;
-                pc.enforce_budget(&mut pool);
+                pc.enforce_budget(&mut pools);
             }
         }
 
@@ -429,7 +464,11 @@ impl Scheduler {
             };
             engine.release(seq.engine_id);
             self.retire_prefix_pin(&seq);
-            self.pool.lock().unwrap().release(seq.req.id).ok();
+            self.pools
+                .lock()
+                .unwrap()
+                .release(&seq.req.method, seq.req.id)
+                .ok();
             outcome.finished.push(resp);
         }
         outcome
@@ -441,7 +480,11 @@ impl Scheduler {
         let seq = self.active.pop()?;
         engine.release(seq.engine_id);
         self.retire_prefix_pin(&seq);
-        self.pool.lock().unwrap().release(seq.req.id).ok();
+        self.pools
+            .lock()
+            .unwrap()
+            .release(&seq.req.method, seq.req.id)
+            .ok();
         Some(seq.req)
     }
 
@@ -455,7 +498,6 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::paged::PagedConfig;
     use std::collections::BTreeMap;
 
     /// Mock engine: next token = last + 1; tracks live sequences and the
@@ -497,12 +539,7 @@ mod tests {
     }
 
     fn sched(pages: usize, max_active: usize) -> Scheduler {
-        let pool = PagedPool::new(PagedConfig {
-            page_tokens: 16,
-            token_bytes: 64,
-            num_pages: pages,
-        });
-        Scheduler::new(pool, max_active)
+        Scheduler::new(PoolSet::fixed(16, 64, pages), max_active)
     }
 
     fn tracked(id: u64, prompt: usize, max_new: usize) -> Tracked {
@@ -511,6 +548,10 @@ mod tests {
 
     /// Default request method in tests (page-codec eligible).
     const M: &str = "polarquant-r-offline";
+
+    fn used_pages(s: &Scheduler) -> usize {
+        s.pools.lock().unwrap().used_pages()
+    }
 
     #[test]
     fn admit_prefills_and_sets_ttft() {
@@ -538,17 +579,17 @@ mod tests {
         assert_eq!(resp.tokens, vec![100, 101, 102]);
         assert!(s.active.is_empty());
         assert!(e.live.is_empty(), "engine released");
-        assert_eq!(s.pool.lock().unwrap().used_pages(), 0, "pages returned");
+        assert_eq!(used_pages(&s), 0, "pages returned");
     }
 
     #[test]
     fn admission_respects_pool_capacity() {
         let mut s = sched(2, 8); // 2 pages × 16 tokens = 32 token budget
-        assert!(s.can_admit(16, 8)); // needs 2 pages
-        assert!(!s.can_admit(40, 8));
+        assert!(s.can_admit(16, 8, M)); // needs 2 pages
+        assert!(!s.can_admit(40, 8, M));
         let mut e = MockEngine::default();
         s.admit(vec![tracked(1, 16, 8)], &mut e);
-        assert!(!s.can_admit(16, 8), "pool exhausted");
+        assert!(!s.can_admit(16, 8, M), "pool exhausted");
     }
 
     #[test]
@@ -556,7 +597,7 @@ mod tests {
         let mut s = sched(1024, 2);
         let mut e = MockEngine::default();
         s.admit(vec![tracked(1, 4, 8), tracked(2, 4, 8)], &mut e);
-        assert!(!s.can_admit(4, 8), "max_active reached");
+        assert!(!s.can_admit(4, 8, M), "max_active reached");
     }
 
     #[test]
@@ -564,21 +605,18 @@ mod tests {
         let mut s = sched(8, 4);
         let mut e = MockEngine::default();
         s.admit(vec![tracked(1, 16, 4), tracked(2, 16, 4)], &mut e);
-        let used = s.pool.lock().unwrap().used_pages();
+        let used = used_pages(&s);
         let req = s.preempt_newest(&mut e).unwrap();
         assert_eq!(req.id, 2);
-        assert!(s.pool.lock().unwrap().used_pages() < used);
+        assert!(used_pages(&s) < used);
         assert_eq!(s.active.len(), 1);
         assert_eq!(e.live.len(), 1);
     }
 
+    /// Fixed-geometry prefix scheduler: page_tokens 4, token slots 8 B
+    /// (page = 32 B), `cache_pages` expressed as a byte budget.
     fn sched_prefix(pages: usize, max_active: usize, cache_pages: usize) -> Scheduler {
-        let pool = PagedPool::new(PagedConfig {
-            page_tokens: 4,
-            token_bytes: 8,
-            num_pages: pages,
-        });
-        Scheduler::with_prefix_cache(pool, max_active, cache_pages)
+        Scheduler::with_prefix_cache(PoolSet::fixed(4, 8, pages), max_active, cache_pages * 32)
     }
 
     fn tracked_prompt(id: u64, prompt: Vec<u32>, max_new: usize) -> Tracked {
@@ -593,6 +631,22 @@ mod tests {
         done
     }
 
+    /// Gate with no pending pages (single-request convenience).
+    fn gate(
+        s: &mut Scheduler,
+        prompt: &[u32],
+        max_new: usize,
+        pending_seqs: usize,
+        pending_pages: usize,
+    ) -> Option<AdmitGate> {
+        let mut pending = PendingPages::new();
+        if pending_pages > 0 {
+            let key = s.pools.lock().unwrap().pool_key(M);
+            pending.insert(key, pending_pages);
+        }
+        s.gate_request(prompt, max_new, M, pending_seqs, &pending)
+    }
+
     #[test]
     fn prefix_hit_shares_pages_and_reports_reuse() {
         let mut s = sched_prefix(16, 4, 16);
@@ -601,13 +655,16 @@ mod tests {
         s.admit(vec![tracked_prompt(1, prompt.clone(), 4)], &mut e);
         run_to_completion(&mut s, &mut e);
         // Prompt pages stay cached after the sequence retires.
-        assert_eq!(s.pool.lock().unwrap().used_pages(), 3);
+        assert_eq!(used_pages(&s), 3);
 
         s.admit(vec![tracked_prompt(2, prompt.clone(), 4)], &mut e);
         assert_eq!(e.reuse_hints, vec![0, 12], "cold miss then 3-page hit");
         // Shared head: the new table starts with the cached pages.
         let cached = s.prefix.as_mut().unwrap().match_prefix(M, &prompt).pages;
-        assert_eq!(s.pool.lock().unwrap().table(2).unwrap().pages[..3], cached[..]);
+        assert_eq!(
+            s.pools.lock().unwrap().pool(M).unwrap().table(2).unwrap().pages[..3],
+            cached[..]
+        );
         let resps = run_to_completion(&mut s, &mut e);
         assert_eq!(resps[0].reused_tokens, 12);
 
@@ -627,7 +684,11 @@ mod tests {
         let mut e = MockEngine::default();
         s.admit(vec![tracked_prompt(1, vec![1; 16], 4)], &mut e); // 5 pages
         run_to_completion(&mut s, &mut e);
-        assert_eq!(s.pool.lock().unwrap().free_pages(), 4, "4 prompt pages cached");
+        assert_eq!(
+            s.pools.lock().unwrap().pool(M).unwrap().free_pages(),
+            4,
+            "4 prompt pages cached"
+        );
         // A different prompt needing 5 pages: the cold entry is evicted.
         s.admit(vec![tracked_prompt(2, vec![2; 16], 4)], &mut e);
         assert_eq!(s.active.len(), 1);
@@ -645,7 +706,7 @@ mod tests {
         let mut s = sched_prefix(8, 4, 100);
         let mut e = MockEngine::default();
         s.admit(vec![tracked_prompt(1, vec![1; 16], 4)], &mut e); // 5 pages, active
-        assert_eq!(s.pool.lock().unwrap().free_pages(), 3);
+        assert_eq!(s.pools.lock().unwrap().pool(M).unwrap().free_pages(), 3);
         // Next request cannot fit and the only cache entry is pinned by
         // the active sequence → admission skips it, nothing is broken.
         let n = s.admit(vec![tracked_prompt(2, vec![2; 16], 4)], &mut e);
@@ -668,12 +729,12 @@ mod tests {
         let hot: Vec<u32> = vec![1; 16];
         s.admit(vec![tracked_prompt(1, hot.clone(), 4)], &mut e); // 5 pages
         // Active sequence pins its pages: no room to make for a stranger.
-        assert!(s.gate_request(&[2; 16], 4, M, 0, 0).is_none());
+        assert!(gate(&mut s, &[2; 16], 4, 0, 0).is_none());
         run_to_completion(&mut s, &mut e);
         // Pool: 4 cached pages + 4 free. A request matching the cached
         // head needs only 1 fresh page — gated WITHOUT evicting the very
         // entry it is about to hit.
-        let g = s.gate_request(&hot, 4, M, 0, 0).expect("prefix-credited");
+        let g = gate(&mut s, &hot, 4, 0, 0).expect("prefix-credited");
         assert_eq!(g.pages, 1, "5 needed minus 4 matched");
         assert_eq!(g.m.tokens, 16, "gate carries the match itself");
         assert_eq!(g.m.pages.len(), 4);
@@ -685,7 +746,7 @@ mod tests {
         s.release_gate(g);
         // A non-matching request needs all 5 pages: now the cold entry
         // does get evicted to make room.
-        let g2 = s.gate_request(&[2u32; 16], 4, M, 0, 0).expect("room made");
+        let g2 = gate(&mut s, &[2u32; 16], 4, 0, 0).expect("room made");
         assert_eq!(g2.pages, 5);
         s.release_gate(g2);
         assert_eq!(
@@ -693,10 +754,11 @@ mod tests {
             0,
             "cold entry evicted for the stranger"
         );
-        // Batch-aware: pending pages count against free space.
-        assert!(s.gate_request(&[3u32; 16], 4, M, 1, 5).is_none());
+        // Batch-aware: pending pages (in this pool) count against free
+        // space.
+        assert!(gate(&mut s, &[3u32; 16], 4, 1, 5).is_none());
         // The max_active bound is respected including pending seqs.
-        assert!(s.gate_request(&[3u32; 16], 4, M, 4, 0).is_none());
+        assert!(gate(&mut s, &[3u32; 16], 4, 4, 0).is_none());
     }
 
     #[test]
@@ -707,21 +769,21 @@ mod tests {
         let mut s = sched_prefix(16, 4, 16);
         let mut e = MockEngine::default();
         let prompt: Vec<u32> = vec![9; 12]; // 3 full pages
-        let g = s.gate_request(&prompt, 4, M, 0, 0).expect("cold gate");
+        let g = gate(&mut s, &prompt, 4, 0, 0).expect("cold gate");
         assert_eq!(g.pages, 4);
         assert_eq!(g.m.tokens, 0);
         s.admit_gated(vec![(tracked_prompt(1, prompt.clone(), 4), g)], &mut e);
         run_to_completion(&mut s, &mut e);
 
-        let g2 = s.gate_request(&prompt, 4, M, 0, 0).expect("warm gate");
+        let g2 = gate(&mut s, &prompt, 4, 0, 0).expect("warm gate");
         assert_eq!(g2.m.tokens, 12, "matched at the gate");
         assert_eq!(g2.pages, 1, "4 needed minus 3 matched");
         s.admit_gated(vec![(tracked_prompt(2, prompt.clone(), 4), g2)], &mut e);
         assert_eq!(e.reuse_hints, vec![0, 12], "engine got the gate's match");
         {
-            let pool = s.pool.lock().unwrap();
-            let t2 = pool.table(2).unwrap().pages.clone();
-            drop(pool);
+            let pools = s.pools.lock().unwrap();
+            let t2 = pools.pool(M).unwrap().table(2).unwrap().pages.clone();
+            drop(pools);
             let cached = s.prefix.as_mut().unwrap().match_prefix(M, &prompt).pages;
             assert_eq!(t2[..3], cached[..], "gate's pages shared zero-copy");
         }
@@ -731,8 +793,9 @@ mod tests {
         assert_eq!((ev.hits, ev.misses), (1, 1));
         // All pins retired: the cached entry is evictable again.
         let freed = {
-            let mut pool = s.pool.lock().unwrap();
-            s.prefix.as_mut().unwrap().make_room(&mut pool, 3)
+            let mut pools = s.pools.lock().unwrap();
+            let pool = pools.pool_mut(M);
+            s.prefix.as_mut().unwrap().make_room(M, pool, 3)
         };
         assert!(freed, "no pin leaked by the gate handoff");
     }
@@ -746,12 +809,15 @@ mod tests {
         let mut s = sched_prefix(32, 4, 32);
         let mut e = MockEngine::default();
         let prompt: Vec<u32> = vec![4; 12]; // 3 full pages
-        let mut pending = (0usize, 0usize);
+        let mut pending_seqs = 0usize;
+        let mut pending = PendingPages::new();
         let mut gates = Vec::new();
         for _ in 0..2 {
-            let g = s.gate_request(&prompt, 4, M, pending.0, pending.1).expect("gated");
-            pending.0 += 1;
-            pending.1 += g.pages;
+            let g = s
+                .gate_request(&prompt, 4, M, pending_seqs, &pending)
+                .expect("gated");
+            pending_seqs += 1;
+            *pending.entry(g.pool_key.clone()).or_insert(0) += g.pages;
             gates.push(g);
         }
         assert_eq!(gates[1].m.tokens, 0, "cold at gate time");
@@ -762,7 +828,8 @@ mod tests {
         s.admit_gated(batch, &mut e);
         assert_eq!(e.reuse_hints, vec![0, 12], "2nd member re-matched after 1st insert");
         {
-            let pool = s.pool.lock().unwrap();
+            let pools = s.pools.lock().unwrap();
+            let pool = pools.pool(M).unwrap();
             assert_eq!(
                 pool.table(1).unwrap().pages[..3],
                 pool.table(2).unwrap().pages[..3],
@@ -774,8 +841,9 @@ mod tests {
         assert_eq!((ev.hits, ev.misses), (1, 1));
         // No pin leaked: the cached entry is fully evictable.
         let ok = {
-            let mut pool = s.pool.lock().unwrap();
-            s.prefix.as_mut().unwrap().make_room(&mut pool, 3)
+            let mut pools = s.pools.lock().unwrap();
+            let pool = pools.pool_mut(M);
+            s.prefix.as_mut().unwrap().make_room(M, pool, 3)
         };
         assert!(ok);
     }
@@ -791,6 +859,38 @@ mod tests {
         // Only the 12 page-aligned tokens can match; the partial page is
         // always re-prefetched.
         assert_eq!(e.reuse_hints, vec![0, 12]);
+    }
+
+    #[test]
+    fn methods_account_in_their_own_pools() {
+        // Model geometry: an exact request and a polar request of the
+        // same token count land in different pools with very different
+        // byte footprints — the tentpole invariant at the scheduler
+        // level.
+        use crate::model::config::ModelConfig;
+        let cfg = ModelConfig::test();
+        let mut s = Scheduler::new(PoolSet::for_model(&cfg, 4, 256), 4);
+        let mut e = MockEngine::default();
+        let mk = |id: u64, method: &str| {
+            let mut r = GenRequest::new(id, vec![3; 12], 4);
+            r.method = method.into();
+            Tracked::new(r)
+        };
+        s.admit(vec![mk(1, "exact"), mk(2, "polarquant-r-offline")], &mut e);
+        let pools = s.pools.lock().unwrap();
+        let pe = pools.pool("exact").unwrap();
+        let pp = pools.pool("polarquant-r-offline").unwrap();
+        assert_eq!(pe.used_pages(), 4, "16 tokens / 4 per page");
+        assert_eq!(pp.used_pages(), 4);
+        assert!(
+            pe.memory_bytes() >= 4 * pp.memory_bytes(),
+            "same tokens, ≥4x fewer resident bytes for polar: exact {} vs polar {}",
+            pe.memory_bytes(),
+            pp.memory_bytes()
+        );
+        drop(pools);
+        run_to_completion(&mut s, &mut e);
+        assert_eq!(s.pools.lock().unwrap().memory_bytes(), 0);
     }
 
     #[test]

@@ -13,10 +13,9 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResponse, Tracked};
 use crate::coordinator::router::Router;
-use crate::coordinator::scheduler::{AdmitGate, Scheduler};
+use crate::coordinator::scheduler::{AdmitGate, PendingPages, Scheduler};
 use crate::coordinator::worker::NativeWorker;
-use crate::kvcache::codec::max_slot_bytes;
-use crate::kvcache::paged::{share, PagedConfig, PagedPool};
+use crate::kvcache::pools::{share_pools, PoolSet};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::util::json::Json;
@@ -35,7 +34,10 @@ pub struct ServerConfig {
     pub seed: u64,
     pub workers: usize,
     pub batch: BatchPolicy,
-    /// Page-pool size per worker, in tokens.
+    /// Token capacity of each per-codec page pool, per worker. Pools
+    /// are codec-sized ([`PoolSet`]): a pool's byte cost is
+    /// `pool_tokens × slot_bytes(codec)`, so narrow codecs keep the
+    /// same token capacity at a fraction of the resident bytes.
     pub pool_tokens: usize,
     pub max_active: usize,
     /// Radix-tree prefix cache: shared system prompts / few-shot headers /
@@ -173,25 +175,28 @@ fn worker_loop(
 ) {
     let weights = Weights::synthetic(&cfg.model, cfg.seed);
     let mut batcher = Batcher::new(cfg.batch.clone());
-    let num_pages = cfg.pool_tokens / 16;
-    // One pool, two halves: the scheduler does admission/sharing on it,
-    // the engine encodes and scores KV inside its page slots. Slots are
-    // sized for the widest codec (exact f32); narrower codecs use a
-    // prefix of each slot.
-    let pool = share(PagedPool::new(PagedConfig {
-        page_tokens: 16,
-        token_bytes: max_slot_bytes(&cfg.model),
-        num_pages,
-    }));
-    let mut engine = NativeWorker::with_pool(weights, Arc::clone(&pool));
+    // One pool set, two halves: the scheduler does admission/sharing on
+    // it, the engine encodes and scores KV inside its page slots. Pools
+    // are per-codec, each with token slots exactly that codec's
+    // `slot_bytes()` wide — resident bytes track the method's true
+    // encoded width (PolarQuant ≈4 bits/coord vs exact's 32).
+    let pools = share_pools(PoolSet::for_model(&cfg.model, 16, cfg.pool_tokens));
+    let mut engine = NativeWorker::with_pools(weights, Arc::clone(&pools));
     let mut sched = if cfg.prefix_cache {
-        // The cache may pin up to half the pool; admission evicts cold
-        // entries on demand, so this only bounds steady-state residency.
-        Scheduler::with_prefix_cache_shared(pool, cfg.max_active, num_pages / 2)
+        // The cache may keep up to half the pool's token capacity at
+        // the fp16 reference width resident across all codec trees (a
+        // byte budget — cached pages of different codecs have different
+        // sizes); admission evicts cold entries on demand, so this only
+        // bounds steady-state residency.
+        let cache_bytes = cfg.pool_tokens / 2 * cfg.model.kv_bytes_per_token_fp16();
+        Scheduler::with_prefix_cache_shared(Arc::clone(&pools), cfg.max_active, cache_bytes)
     } else {
-        Scheduler::from_shared(pool, cfg.max_active)
+        Scheduler::from_shared(Arc::clone(&pools), cfg.max_active)
     };
     let mut reported_cached_pages = 0usize;
+    // Per-worker resident-KV gauge contribution (bytes, coords).
+    let mut reported_kv = (0u64, 0u64);
+    let coords_per_token = cfg.model.kv_coords_per_token() as u64;
 
     loop {
         // Drain the inbox (non-blocking when busy, blocking when idle).
@@ -223,19 +228,22 @@ fn worker_loop(
         // earlier members of the same batch — so `admit`'s page
         // reservations cannot fail for a gated request.
         if batcher.ready(Instant::now()) || (!batcher.is_empty() && sched.active.is_empty()) {
-            let mut pending = (0usize, 0usize); // (seqs, pages) gated so far
+            let mut pending_seqs = 0usize;
+            // Pages gated so far, per codec pool — demand in one codec's
+            // pool must not count against another's free list.
+            let mut pending_pages = PendingPages::new();
             let mut gates: Vec<AdmitGate> = Vec::new();
             let batch = batcher.next_batch(|t| {
                 match sched.gate_request(
                     &t.req.prompt,
                     t.req.max_new_tokens,
                     &t.req.method,
-                    pending.0,
-                    pending.1,
+                    pending_seqs,
+                    &pending_pages,
                 ) {
                     Some(g) => {
-                        pending.0 += 1;
-                        pending.1 += g.pages;
+                        pending_seqs += 1;
+                        *pending_pages.entry(g.pool_key.clone()).or_insert(0) += g.pages;
                         gates.push(g);
                         true
                     }
@@ -293,6 +301,16 @@ fn worker_loop(
                 let _ = resp_tx.send((worker_idx, resp));
             }
         }
+
+        // Resident-KV gauge: codec-sized pool occupancy → achieved
+        // bits/coordinate and compression vs exact in the snapshot.
+        // Recorded AFTER the decode round so pages freed by retiring
+        // sequences drain out of the gauge before the worker idles
+        // (only prefix-cache-held pages stay resident).
+        let (kv_bytes, kv_slots) = pools.lock().unwrap().occupancy();
+        let kv_now = (kv_bytes as u64, kv_slots as u64 * coords_per_token);
+        metrics.record_kv_residency(kv_now.0, kv_now.1, reported_kv);
+        reported_kv = kv_now;
     }
 }
 
@@ -452,6 +470,24 @@ mod tests {
             96.0
         );
         assert!(parsed.path("prefix_cache.cached_pages").unwrap().as_f64().unwrap() > 0.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn snapshot_reports_codec_width_kv_residency() {
+        // Polar-only traffic through codec-sized pools: the snapshot's
+        // achieved storage width must read the codec's true bits/coord
+        // (4.0 for the test model's d=16 polar layout), not the old
+        // worst-case exact width — and compression vs exact f32 is 8x.
+        let s = test_server(1);
+        let mut req = GenRequest::new(0, (0..32).map(|x| x % 64).collect(), 4);
+        req.method = "polarquant-r-offline".into();
+        s.generate_blocking(req, Duration::from_secs(60)).expect("response");
+        let parsed = Json::parse(&s.metrics.snapshot().encode()).unwrap();
+        let bits = parsed.path("kv_bits_per_coord").unwrap().as_f64().unwrap();
+        assert!((bits - 4.0).abs() < 1e-6, "polar bits/coord: {bits}");
+        let ratio = parsed.path("kv_compression_vs_exact").unwrap().as_f64().unwrap();
+        assert!((ratio - 8.0).abs() < 1e-6, "polar compression vs exact: {ratio}");
         s.shutdown();
     }
 

@@ -1,11 +1,13 @@
 //! The worker: a [`StepEngine`] implementation backed by the native
 //! transformer with **pool-native KV**. One worker owns one model
-//! replica and shares one [`PagedPool`] with its scheduler: prefill
-//! encodes prompt KV straight into the sequence's page slots through a
-//! [`PageCodec`], decode scores/combines directly over those slots and
-//! appends its streamed pairs into them, and a radix prefix hit is
-//! served by *reading the shared pages back* — no separate snapshot
-//! store, no re-quantization, no second copy of any KV byte.
+//! replica and shares one codec-sized [`PoolSet`] with its scheduler:
+//! prefill encodes prompt KV straight into the sequence's page slots
+//! through a [`PageCodec`] (in the pool whose token slots are exactly
+//! that codec's `slot_bytes()` wide), decode scores/combines directly
+//! over those slots and appends its streamed pairs into them, and a
+//! radix prefix hit is served by *reading the shared pages back* — no
+//! separate snapshot store, no re-quantization, no second copy of any
+//! KV byte.
 //!
 //! Methods without a page codec (token-evicting SnapKV family,
 //! per-sequence-codebook `polarquant-r-online`) fall back to the legacy
@@ -14,8 +16,8 @@
 
 use crate::coordinator::request::GenRequest;
 use crate::coordinator::scheduler::StepEngine;
-use crate::kvcache::codec::{max_slot_bytes, page_codec_for, KvLayout, PageCodec};
-use crate::kvcache::paged::{share, PagedConfig, PagedPool, SharedPool};
+use crate::kvcache::codec::{page_codec_for, KvLayout, PageCodec};
+use crate::kvcache::pools::{share_pools, PoolSet, SharedPools};
 use crate::kvcache::sequence::{CacheConfig, SequenceCache};
 use crate::model::config::ModelConfig;
 use crate::model::sampler::Sampler;
@@ -24,14 +26,15 @@ use crate::model::weights::Weights;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-/// Default standalone pool size in tokens (a worker constructed without
-/// an external pool, e.g. in unit tests, gets its own).
+/// Default standalone per-codec pool size in tokens (a worker
+/// constructed without an external pool set, e.g. in unit tests, gets
+/// its own).
 const STANDALONE_POOL_TOKENS: usize = 1 << 15;
 
 /// Native-engine worker.
 pub struct NativeWorker {
     pub model: Transformer,
-    pool: SharedPool,
+    pools: SharedPools,
     next_id: u64,
     sessions: BTreeMap<u64, Session>,
     /// Memoized page codecs by method name.
@@ -43,9 +46,10 @@ pub struct NativeWorker {
 
 enum SessionKv {
     /// Pool-backed: encoded KV lives in the page slots of pool sequence
-    /// `seq` (the scheduler's request id).
+    /// `seq` (the scheduler's request id) in `method`'s codec-sized pool.
     Pooled {
         seq: u64,
+        method: String,
         codec: Arc<dyn PageCodec>,
         layout: KvLayout,
         /// Whether this worker registered the pool sequence itself
@@ -66,20 +70,16 @@ struct Session {
 impl NativeWorker {
     pub fn new(weights: Weights) -> Self {
         let cfg = weights.cfg.clone();
-        let pool = share(PagedPool::new(PagedConfig {
-            page_tokens: 16,
-            token_bytes: max_slot_bytes(&cfg),
-            num_pages: STANDALONE_POOL_TOKENS / 16,
-        }));
-        Self::with_pool(weights, pool)
+        let pools = share_pools(PoolSet::for_model(&cfg, 16, STANDALONE_POOL_TOKENS));
+        Self::with_pools(weights, pools)
     }
 
-    /// A worker over an externally owned pool — the serving setup, where
-    /// the scheduler shares the same handle.
-    pub fn with_pool(weights: Weights, pool: SharedPool) -> Self {
+    /// A worker over an externally owned pool set — the serving setup,
+    /// where the scheduler shares the same handle.
+    pub fn with_pools(weights: Weights, pools: SharedPools) -> Self {
         Self {
             model: Transformer::new(weights),
-            pool,
+            pools,
             next_id: 0,
             sessions: BTreeMap::new(),
             codecs: BTreeMap::new(),
@@ -100,8 +100,8 @@ impl NativeWorker {
     }
 
     /// The KV substrate this worker encodes into.
-    pub fn shared_pool(&self) -> SharedPool {
-        Arc::clone(&self.pool)
+    pub fn shared_pools(&self) -> SharedPools {
+        Arc::clone(&self.pools)
     }
 
     /// Force the legacy heap path for every method (bench comparison).
@@ -111,8 +111,8 @@ impl NativeWorker {
 
     /// Total cache bytes across live sessions (for metrics/backpressure).
     /// Pool-backed sessions report their slot footprint; with every
-    /// page-codec session resident in the pool, this tracks
-    /// `PagedPool::memory_bytes` instead of a shadow store.
+    /// page-codec session resident in its codec's pool, this tracks
+    /// `PoolSet::memory_bytes` instead of a shadow store.
     pub fn total_cache_bytes(&self) -> usize {
         self.sessions.values().map(|s| self.session_bytes(s)).sum()
     }
@@ -153,7 +153,8 @@ impl NativeWorker {
         let prompt_len = req.prompt.len();
         let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
         let owns_seq = {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pools = self.pools.lock().unwrap();
+            let pool = pools.pool_mut(&req.method);
             let owns = pool.table(req.id).is_none();
             if owns {
                 pool.register(req.id, prompt_len + req.max_new_tokens)
@@ -178,7 +179,13 @@ impl NativeWorker {
         self.sessions.insert(
             self.next_id,
             Session {
-                kv: SessionKv::Pooled { seq: req.id, codec, layout, owns_seq },
+                kv: SessionKv::Pooled {
+                    seq: req.id,
+                    method: req.method.clone(),
+                    codec,
+                    layout,
+                    owns_seq,
+                },
                 sampler,
                 len: prompt_len,
             },
@@ -206,6 +213,7 @@ impl NativeWorker {
     /// block table is missing or shorter than `n`.
     fn read_past_from_pool(
         &self,
+        method: &str,
         seq: u64,
         n: usize,
         codec: &dyn PageCodec,
@@ -213,7 +221,8 @@ impl NativeWorker {
         let cfg = &self.model.cfg;
         let layout = KvLayout::new(cfg, codec);
         let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
-        let pool = self.pool.lock().unwrap();
+        let pools = self.pools.lock().unwrap();
+        let pool = pools.pool(method)?;
         let table = pool.table(seq)?;
         if table.num_tokens(pool.cfg.page_tokens) < n {
             return None;
@@ -269,7 +278,9 @@ impl StepEngine for NativeWorker {
         let mut reused = 0;
         let mut pre: Option<PrefillOutput> = None;
         if reuse > 0 {
-            if let Some(past) = self.read_past_from_pool(req.id, reuse, codec.as_ref()) {
+            if let Some(past) =
+                self.read_past_from_pool(&req.method, req.id, reuse, codec.as_ref())
+            {
                 let out = self.model.prefill_extend(&past, reuse, &prompt[reuse..]);
                 reused = reuse;
                 pre = Some(out);
@@ -290,13 +301,14 @@ impl StepEngine for NativeWorker {
     fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32 {
         let session = self.sessions.get_mut(&engine_id).expect("live session");
         let logits = match &mut session.kv {
-            SessionKv::Pooled { seq, codec, layout, .. } => {
+            SessionKv::Pooled { seq, method, codec, layout, .. } => {
                 debug_assert_eq!(session.len, pos, "pool slots must be contiguous");
-                let mut pool = self.pool.lock().unwrap();
+                let mut pools = self.pools.lock().unwrap();
+                let pool = pools.pool_mut(method);
                 self.model.decode_step_paged(
                     last_token,
                     pos,
-                    &mut pool,
+                    pool,
                     *seq,
                     codec.as_ref(),
                     layout,
@@ -334,8 +346,8 @@ impl StepEngine for NativeWorker {
 
     fn release(&mut self, engine_id: u64) {
         if let Some(s) = self.sessions.remove(&engine_id) {
-            if let SessionKv::Pooled { seq, owns_seq: true, .. } = s.kv {
-                self.pool.lock().unwrap().release(seq).ok();
+            if let SessionKv::Pooled { seq, method, owns_seq: true, .. } = s.kv {
+                self.pools.lock().unwrap().release(&method, seq).ok();
             }
         }
     }
@@ -344,7 +356,6 @@ impl StepEngine for NativeWorker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::paged::PagedConfig;
 
     fn worker() -> NativeWorker {
         NativeWorker::synthetic(&ModelConfig::test(), 5)
@@ -354,6 +365,10 @@ mod tests {
         let mut r = GenRequest::new(id, (0..24).map(|i| i % 64).collect(), 4);
         r.method = method.into();
         r
+    }
+
+    fn used_pages(w: &NativeWorker) -> usize {
+        w.shared_pools().lock().unwrap().used_pages()
     }
 
     #[test]
@@ -366,10 +381,10 @@ mod tests {
         assert!(t1 < 64);
         assert!(w.cache_bytes(eid) > 0);
         // Standalone sessions own their pool pages and return them.
-        assert!(w.shared_pool().lock().unwrap().used_pages() > 0);
+        assert!(used_pages(&w) > 0);
         w.release(eid);
         assert_eq!(w.live_sessions(), 0);
-        assert_eq!(w.shared_pool().lock().unwrap().used_pages(), 0);
+        assert_eq!(used_pages(&w), 0);
     }
 
     #[test]
@@ -404,16 +419,44 @@ mod tests {
     }
 
     #[test]
+    fn sessions_reside_in_codec_sized_pools() {
+        // The tentpole invariant at the engine level: the same request
+        // through different codecs lands in pools whose resident bytes
+        // differ by the codecs' slot widths — no more worst-case slots.
+        let mut w = worker();
+        let (e1, _) = w.prefill(&req(1, "exact"));
+        let (e2, _) = w.prefill(&req(2, "polarquant-r-offline"));
+        {
+            let pools = w.shared_pools();
+            let pools = pools.lock().unwrap();
+            let pe = pools.pool("exact").unwrap();
+            let pp = pools.pool("polarquant-r-offline").unwrap();
+            assert_eq!(pe.used_pages(), pp.used_pages(), "same token count");
+            assert!(
+                pe.memory_bytes() >= 4 * pp.memory_bytes(),
+                "exact {} B vs polar {} B",
+                pe.memory_bytes(),
+                pp.memory_bytes()
+            );
+            // Slot width equals the codec layout exactly — no slack.
+            assert_eq!(
+                pe.cfg.token_bytes * pe.cfg.page_tokens,
+                pe.page_bytes(),
+                "page = page_tokens × token_bytes"
+            );
+        }
+        w.release(e1);
+        w.release(e2);
+        assert_eq!(w.shared_pools().lock().unwrap().memory_bytes(), 0);
+    }
+
+    #[test]
     fn pool_substrate_toggle_falls_back_to_legacy() {
         let mut w = worker();
         w.set_pool_substrate(false);
         let (eid, first) = w.prefill(&req(1, "polarquant-r-offline"));
         assert!(first < 64);
-        assert_eq!(
-            w.shared_pool().lock().unwrap().used_pages(),
-            0,
-            "legacy path never touches the pool"
-        );
+        assert_eq!(used_pages(&w), 0, "legacy path never touches the pool");
         let (_, _, reused) = w.prefill_reuse(&req(2, "polarquant-r-offline"), 16);
         assert_eq!(reused, 0, "no pool pages → nothing to reuse");
         w.release(eid);
@@ -424,18 +467,27 @@ mod tests {
         let mut w = worker();
         let (eid, first) = w.prefill(&req(1, "snapkv"));
         assert!(first < 64);
-        assert_eq!(w.shared_pool().lock().unwrap().used_pages(), 0);
+        assert_eq!(used_pages(&w), 0);
         let t = w.decode(eid, first, 24);
         assert!(t < 64);
         let (_, _, reused) = w.prefill_reuse(&req(2, "snapkv"), 16);
         assert_eq!(reused, 0, "eviction methods cannot share pages");
     }
 
-    /// Scheduler-shaped reuse: seq 2's block table starts with seq 1's
-    /// already-encoded pages; the engine replays them through the codec.
-    fn share_prefix(w: &NativeWorker, from_seq: u64, to_seq: u64, pages: usize, total: usize) {
-        let pool = w.shared_pool();
-        let mut pool = pool.lock().unwrap();
+    /// Scheduler-shaped reuse: seq 2's block table (in `method`'s pool)
+    /// starts with seq 1's already-encoded pages; the engine replays
+    /// them through the codec.
+    fn share_prefix(
+        w: &NativeWorker,
+        method: &str,
+        from_seq: u64,
+        to_seq: u64,
+        pages: usize,
+        total: usize,
+    ) {
+        let pools = w.shared_pools();
+        let mut pools = pools.lock().unwrap();
+        let pool = pools.pool_mut(method);
         let shared = pool.table(from_seq).unwrap().pages[..pages].to_vec();
         pool.register_with_prefix(to_seq, &shared, total).unwrap();
     }
@@ -455,7 +507,7 @@ mod tests {
         let (ec, fc) = w_cold.prefill(&r1);
 
         let (e0, _) = w_warm.prefill(&r1); // seeds pages for seq 1
-        share_prefix(&w_warm, 1, 2, 2, prompt.len() + 4); // 32-token head
+        share_prefix(&w_warm, "exact", 1, 2, 2, prompt.len() + 4); // 32-token head
         let mut r2 = GenRequest::new(2, prompt.clone(), 4);
         r2.method = "exact".into();
         let (ew, fw, reused) = w_warm.prefill_reuse(&r2, 32);
@@ -484,14 +536,14 @@ mod tests {
             let mut r1 = GenRequest::new(1, prompt.clone(), 4);
             r1.method = method.into();
             let (e1, _) = w.prefill(&r1);
-            let used_before = w.shared_pool().lock().unwrap().used_pages();
-            share_prefix(&w, 1, 2, 2, prompt.len() + 4);
+            let used_before = used_pages(&w);
+            share_prefix(&w, method, 1, 2, 2, prompt.len() + 4);
             let mut r2 = GenRequest::new(2, prompt.clone(), 4);
             r2.method = method.into();
             let (e2, f2, reused) = w.prefill_reuse(&r2, 32);
             assert_eq!(reused, 32, "{method}");
             assert!(f2 < 64);
-            let used_after = w.shared_pool().lock().unwrap().used_pages();
+            let used_after = used_pages(&w);
             // Only the unshared tail + generation room allocated fresh.
             assert!(
                 used_after < 2 * used_before,
@@ -512,7 +564,7 @@ mod tests {
         r1.method = "exact".into();
         w.prefill(&r1);
         // Share the whole (page-aligned) prompt: 32 tokens = 2 pages.
-        share_prefix(&w, 1, 2, 2, prompt.len() + 4);
+        share_prefix(&w, "exact", 1, 2, 2, prompt.len() + 4);
         let mut r2 = GenRequest::new(2, prompt.clone(), 4);
         r2.method = "exact".into();
         let (_, _, reused) = w.prefill_reuse(&r2, 32);
@@ -521,20 +573,27 @@ mod tests {
 
     #[test]
     fn pool_memory_accounting_matches_live_slots() {
-        // The acceptance invariant: pool bytes == every live page
-        // counted once — there is no second KV store to account.
+        // The acceptance invariant: per-pool bytes == every live page
+        // counted once at its own codec's width — there is no second KV
+        // store to account.
         let mut w = worker();
         let (e1, _) = w.prefill(&req(1, "polarquant-r-offline"));
         let (e2, _) = w.prefill(&req(2, "exact"));
-        let pool = w.shared_pool();
-        let pool = pool.lock().unwrap();
-        let live = pool.live_pages();
-        assert_eq!(pool.memory_bytes(), live.len() * pool.page_bytes());
-        assert!(pool.memory_bytes() > 0);
-        drop(pool);
+        {
+            let pools = w.shared_pools();
+            let pools = pools.lock().unwrap();
+            let mut total = 0;
+            for (_, pool) in pools.iter() {
+                let live = pool.live_pages();
+                assert_eq!(pool.memory_bytes(), live.len() * pool.page_bytes());
+                total += pool.memory_bytes();
+            }
+            assert_eq!(pools.memory_bytes(), total);
+            assert!(total > 0);
+        }
         w.release(e1);
         w.release(e2);
-        assert_eq!(w.shared_pool().lock().unwrap().memory_bytes(), 0);
+        assert_eq!(w.shared_pools().lock().unwrap().memory_bytes(), 0);
     }
 
     #[test]
@@ -554,29 +613,25 @@ mod tests {
     #[test]
     fn worker_shares_external_pool_with_scheduler_key() {
         // Serving shape: the pool sequence is registered by the
-        // scheduler (request id) before the engine prefills; the worker
-        // must not re-register or release it.
+        // scheduler (request id, in the method's codec pool) before the
+        // engine prefills; the worker must not re-register or release it.
         let cfg = ModelConfig::test();
-        let pool = share(PagedPool::new(PagedConfig {
-            page_tokens: 16,
-            token_bytes: max_slot_bytes(&cfg),
-            num_pages: 16,
-        }));
-        let mut w = NativeWorker::with_pool(Weights::synthetic(&cfg, 5), Arc::clone(&pool));
-        pool.lock().unwrap().register(77, 24 + 4).unwrap();
+        let pools = share_pools(PoolSet::for_model(&cfg, 16, 256));
+        let mut w = NativeWorker::with_pools(Weights::synthetic(&cfg, 5), Arc::clone(&pools));
+        pools.lock().unwrap().pool_mut("fp16").register(77, 24 + 4).unwrap();
         let mut r = GenRequest::new(77, (0..24).collect(), 4);
         r.method = "fp16".into();
         let (eid, first) = w.prefill(&r);
-        let used = pool.lock().unwrap().used_pages();
+        let used = pools.lock().unwrap().used_pages();
         assert!(used > 0);
         w.decode(eid, first, 24);
         w.release(eid);
         assert_eq!(
-            pool.lock().unwrap().used_pages(),
+            pools.lock().unwrap().used_pages(),
             used,
             "scheduler-owned sequence not released by the engine"
         );
-        pool.lock().unwrap().release(77).unwrap();
-        assert_eq!(pool.lock().unwrap().used_pages(), 0);
+        pools.lock().unwrap().release("fp16", 77).unwrap();
+        assert_eq!(pools.lock().unwrap().used_pages(), 0);
     }
 }

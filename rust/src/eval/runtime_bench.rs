@@ -7,6 +7,7 @@
 //! generation; online-codebook prefill ≫ offline), which comes from op
 //! counts and survives the hardware swap (DESIGN.md substitutions).
 
+use crate::kvcache::pools::PoolSet;
 use crate::kvcache::sequence::{CacheConfig, SequenceCache};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::Transformer;
@@ -46,6 +47,10 @@ pub struct RuntimeRow {
     pub generation_s: f64,
     pub tokens_per_s: f64,
     pub cache_bytes: usize,
+    /// KV bytes the serving substrate keeps resident for this sequence:
+    /// page codecs pay their codec-sized pool pages (slot width exactly
+    /// the codec's `slot_bytes()`), legacy methods their heap cache.
+    pub resident_kv_bytes: usize,
 }
 
 /// Measure one method.
@@ -77,6 +82,21 @@ pub fn run_method(model: &mut Transformer, method: &str, cfg: &RuntimeBenchConfi
     }
     let generation_s = t_gen.secs();
 
+    // Resident-KV accounting under the codec-sized pool geometry: what
+    // the serving pool would keep allocated for this sequence. Page
+    // codecs register in a pool whose slots are exactly their codec's
+    // width; legacy methods have no pool KV and pay their heap bytes.
+    let total_tokens = cfg.prompt_len + cfg.gen_tokens;
+    let resident_kv_bytes = if crate::kvcache::codec::is_page_codec(method) {
+        let mut pools =
+            PoolSet::for_model(&model.cfg, 16, total_tokens.div_ceil(16) * 16 + 16);
+        let pool = pools.pool_mut(method);
+        pool.register(1, total_tokens).expect("bench pool sized to fit");
+        pool.memory_bytes()
+    } else {
+        cache_bytes
+    };
+
     RuntimeRow {
         method: method.to_string(),
         prefill_s,
@@ -84,6 +104,7 @@ pub fn run_method(model: &mut Transformer, method: &str, cfg: &RuntimeBenchConfi
         generation_s,
         tokens_per_s: cfg.gen_tokens as f64 / generation_s,
         cache_bytes,
+        resident_kv_bytes,
     }
 }
 
@@ -119,6 +140,15 @@ mod tests {
         assert!(snap.generation_s < exact.generation_s * 2.0);
         // Quantized decode costs more than exact per token (KIVI/Polar > Exact).
         assert!(polar.generation_s > exact.generation_s * 0.5);
+        // Resident-KV column shows the paper-shaped gap under the
+        // codec-sized pool geometry: polar ≥4x under exact f32.
+        assert!(
+            polar.resident_kv_bytes * 4 <= exact.resident_kv_bytes,
+            "polar {} vs exact {}",
+            polar.resident_kv_bytes,
+            exact.resident_kv_bytes
+        );
+        assert!(snap.resident_kv_bytes > 0, "legacy methods report heap bytes");
     }
 
     #[test]

@@ -26,8 +26,10 @@
 //! | `polarquant(-r-…)`     | (radii f16 + packed angles) ×2               | 3.875–4    |
 //! | `kivi`                 | (per-group zero/scale f16 + 2-bit codes) ×2  | 2 + 32/G   |
 //!
-//! The pool's `token_bytes` is sized for the largest codec
-//! ([`max_slot_bytes`]); smaller codecs use a prefix of the slot.
+//! Each codec's pool (see [`crate::kvcache::pools::PoolSet`]) sizes its
+//! `token_bytes` to exactly this codec's [`KvLayout::slot_bytes`] — no
+//! slack, so resident pool bytes are the codec's true encoded cost
+//! ([`max_slot_bytes`] survives as the exact-f32 analytic reference).
 //! Decode-streamed tokens are encoded with the same codec as the prompt
 //! (the current step's own (k, v) stays full precision in-register, per
 //! Eq. 6), so a sequence's entire KV life happens inside pool pages.
@@ -52,6 +54,12 @@ pub struct CodecScratch {
     pub k1: usize,
     /// Generic f32 scratch (polar: score contraction buffer).
     pub tmp: Vec<f32>,
+    /// Working-basis value accumulator reused across (layer, head, step)
+    /// — [`HeadKvView::value_combine`] used to allocate this per call.
+    pub acc: Vec<f32>,
+    /// Basis-change scratch for [`PageCodec::value_finish`] (polar: the
+    /// un-rotated accumulator), likewise reused across calls.
+    pub unrot: Vec<f32>,
 }
 
 /// A page-native KV codec: fixed-size self-contained token slots.
@@ -102,8 +110,9 @@ pub trait PageCodec: Send + Sync {
     );
 
     /// Fold the working-basis accumulator into the model basis:
-    /// `out += T(acc)`. Default: identity (`out += acc`).
-    fn value_finish(&self, acc: &[f32], out: &mut [f32]) {
+    /// `out += T(acc)`, using `unrot` as reusable basis-change scratch.
+    /// Default: identity (`out += acc`, scratch untouched).
+    fn value_finish(&self, acc: &[f32], out: &mut [f32], _unrot: &mut Vec<f32>) {
         for (o, a) in out.iter_mut().zip(acc) {
             *o += *a;
         }
@@ -141,11 +150,22 @@ impl KvLayout {
     }
 }
 
-/// Pool `token_bytes` needed to host every registered codec for this
-/// model: the exact-f32 codec is the widest (8 bytes/coordinate pair).
+/// Token-slot bytes of the widest codec (exact f32, 8 bytes/coordinate
+/// pair) — the analytic reference width compression ratios are measured
+/// against. Pools themselves are codec-sized
+/// ([`crate::kvcache::pools::PoolSet`]); no pool reserves this width
+/// unless it actually stores the exact codec.
 pub fn max_slot_bytes(cfg: &ModelConfig) -> usize {
     KvLayout::new(cfg, &ExactF32Codec).slot_bytes()
 }
+
+/// Every page-native method, in one place: the compression-invariant
+/// test suite and the residency benches iterate this list, so a codec
+/// added to [`page_codec_for`] without extending it here fails the
+/// `registry` unit test below instead of silently escaping the ratio
+/// invariants.
+pub const PAGE_CODEC_METHODS: [&str; 5] =
+    ["exact", "fp16", "kivi", "polarquant", "polarquant-r-offline"];
 
 /// Whether `method` runs on the pool substrate. Eviction baselines
 /// (SnapKV family) drop tokens and so cannot live in fixed-size slots;
@@ -159,10 +179,7 @@ pub fn max_slot_bytes(cfg: &ModelConfig) -> usize {
 /// [`page_codec_for`] as authoritative and fall back to the legacy path
 /// when it returns `None`.
 pub fn is_page_codec(method: &str) -> bool {
-    matches!(
-        method,
-        "exact" | "fp16" | "kivi" | "polarquant" | "polarquant-r-offline"
-    )
+    PAGE_CODEC_METHODS.contains(&method)
 }
 
 /// Paper layout adapted to head dimension `d`: recursion depth
@@ -430,7 +447,7 @@ impl PageCodec for PolarPageCodec {
         scores: &mut Vec<f32>,
     ) {
         let vb = self.vec_bytes;
-        let CodecScratch { table, k1, tmp } = scratch;
+        let CodecScratch { table, k1, tmp, .. } = scratch;
         for i in 0..count {
             let pair = &slots[i * stride + offset..];
             scores.push(self.quantizer.score_slot(table, *k1, &pair[..vb], tmp));
@@ -458,11 +475,13 @@ impl PageCodec for PolarPageCodec {
 
     /// The accumulator lives in the preconditioned basis; un-rotate once
     /// per attention step (Σ wᵢRᵀyᵢ = Rᵀ Σ wᵢyᵢ), exactly like the
-    /// legacy `PolarKv::value_combine`.
-    fn value_finish(&self, acc: &[f32], out: &mut [f32]) {
-        let mut unrot = vec![0.0f32; acc.len()];
-        self.quantizer.rotation.apply_t(acc, &mut unrot);
-        crate::math::linalg::add_assign(out, &unrot);
+    /// legacy `PolarKv::value_combine` — into caller-owned scratch, so
+    /// the hot path allocates nothing.
+    fn value_finish(&self, acc: &[f32], out: &mut [f32], unrot: &mut Vec<f32>) {
+        unrot.clear();
+        unrot.resize(acc.len(), 0.0);
+        self.quantizer.rotation.apply_t(acc, unrot);
+        crate::math::linalg::add_assign(out, unrot);
     }
 }
 
@@ -648,7 +667,16 @@ impl<'a> HeadKvView<'a> {
         len: usize,
         scratch: &'a RefCell<CodecScratch>,
     ) -> Self {
-        debug_assert!(layout.slot_bytes() <= pool.cfg.token_bytes);
+        // Hard invariant, not a debug check: a codec whose slot layout
+        // exceeds the pool's token width would silently truncate encoded
+        // KV — data corruption, so a mis-sized pool must abort even in
+        // release builds.
+        assert!(
+            layout.slot_bytes() <= pool.cfg.token_bytes,
+            "codec slot ({} B) exceeds pool token slot ({} B): pool sized for a different codec",
+            layout.slot_bytes(),
+            pool.cfg.token_bytes
+        );
         debug_assert!(len <= pages.len() * pool.cfg.page_tokens);
         Self {
             pool,
@@ -695,7 +723,13 @@ impl AttentionSource for HeadKvView<'_> {
 
     fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
         let stride = self.pool.cfg.token_bytes;
-        let mut acc = vec![0.0f32; self.d];
+        // Accumulate into reusable scratch: this used to allocate a
+        // fresh Vec per (layer, head, step), the decode path's last
+        // hot-loop allocation.
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.acc.clear();
+        s.acc.resize(self.d, 0.0);
         self.for_each_page(|bytes, start, count| {
             self.codec.value_accumulate_page(
                 bytes,
@@ -703,10 +737,10 @@ impl AttentionSource for HeadKvView<'_> {
                 self.offset,
                 count,
                 &weights[start..start + count],
-                &mut acc,
+                &mut s.acc,
             );
         });
-        self.codec.value_finish(&acc, out);
+        self.codec.value_finish(&s.acc, out, &mut s.unrot);
     }
 }
 
@@ -724,7 +758,7 @@ mod tests {
     }
 
     fn codecs(d: usize) -> Vec<Arc<dyn PageCodec>> {
-        ["exact", "fp16", "kivi", "polarquant", "polarquant-r-offline"]
+        PAGE_CODEC_METHODS
             .iter()
             .filter_map(|m| page_codec_for(m, d))
             .collect()
@@ -744,7 +778,18 @@ mod tests {
         let shallow = page_codec_for("polarquant", 24).expect("L=3 layout");
         assert!(shallow.pair_bytes(24) < Fp16PageCodec.pair_bytes(24));
         assert!(page_codec_for("polarquant", 25).is_none(), "odd dim");
-        assert_eq!(codecs(64).len(), 5);
+        // PAGE_CODEC_METHODS is the canonical list: every entry must
+        // build at the paper dim, and every entry must agree with
+        // is_page_codec (so the ratio suites iterate the full set).
+        assert_eq!(codecs(64).len(), PAGE_CODEC_METHODS.len());
+        for m in PAGE_CODEC_METHODS {
+            assert!(is_page_codec(m), "{m} missing from is_page_codec");
+            assert_eq!(
+                page_codec_for(m, 64).unwrap().name(),
+                m,
+                "codec name must match its registry key"
+            );
+        }
     }
 
     #[test]
@@ -826,7 +871,7 @@ mod tests {
             let mut acc = vec![0.0f32; d];
             codec.value_accumulate_page(&slots, pb, 0, n, &w, &mut acc);
             let mut got = vec![0.0f32; d];
-            codec.value_finish(&acc, &mut got);
+            codec.value_finish(&acc, &mut got, &mut Vec::new());
             // Reference: weighted sum of decode_pair values.
             let mut ko = vec![0.0f32; d];
             let mut vo = vec![0.0f32; d];

@@ -10,6 +10,10 @@
 //!   f32, fp16, polarquant, kivi): fixed-size self-contained token
 //!   slots, per-method slot layouts, and the [`codec::HeadKvView`] the
 //!   decode attention path reads pages through.
+//! * [`pools`] — the [`pools::PoolSet`]: one codec-sized pool per page
+//!   codec (token slots exactly `KvLayout::slot_bytes()` wide), so
+//!   resident bytes track each method's true encoded width instead of
+//!   the widest codec's.
 //! * [`sequence`] — the legacy per-sequence heap cache (one
 //!   [`CompressedKv`](crate::quant::compressor::CompressedKv) box per
 //!   layer/head), still used by the eval
@@ -21,4 +25,5 @@
 pub mod accounting;
 pub mod codec;
 pub mod paged;
+pub mod pools;
 pub mod sequence;

@@ -1,0 +1,289 @@
+//! Codec-sized page pools: one [`PagedPool`] per page codec, each with
+//! page geometry derived from that codec's [`KvLayout::slot_bytes`].
+//!
+//! The original substrate sized every token slot for the widest codec
+//! (exact f32), so a PolarQuant page resided in memory at 8× its encoded
+//! width and `memory_bytes` overstated the paper's ×4.2 compression away
+//! entirely. A [`PoolSet`] instead keys pools by codec: a `polarquant`
+//! page is `page_tokens × slot_bytes(polarquant)` bytes, an `exact` page
+//! `page_tokens × slot_bytes(exact)` — so the pool accounting *is* the
+//! compression claim, measured in resident bytes. Prefix radix trees
+//! already never cross-match codecs, so each per-codec tree references
+//! pages of its own size class and zero-copy sharing is unchanged.
+//!
+//! Methods without a page codec (token-evicting SnapKV family,
+//! per-sequence-codebook `polarquant-r-online`) store KV on the legacy
+//! heap path; they share one *accounting* pool (fp16 reference width)
+//! used purely for admission control — its pages hold no KV bytes and
+//! are excluded from [`PoolSet::occupancy`].
+
+use crate::kvcache::codec::{is_page_codec, page_codec_for, KvLayout};
+use crate::kvcache::paged::{PagedConfig, PagedPool, PoolError};
+use crate::model::config::ModelConfig;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Pool key routing every legacy (non-page-codec) method to the shared
+/// admission-accounting pool.
+const LEGACY_KEY: &str = "::legacy";
+/// Pool key for [`PoolSet::fixed`] sets, where every method shares one
+/// pool of uniform width (unit tests / policy benches).
+const FIXED_KEY: &str = "*";
+
+/// The pool-set handle shared between the control plane (scheduler) and
+/// the data plane (engine), replacing the old single-pool `SharedPool`.
+/// One worker thread owns both halves, so the mutex is uncontended; it
+/// exists to satisfy `Send` across the worker spawn.
+pub type SharedPools = Arc<Mutex<PoolSet>>;
+
+/// Wrap a pool set for sharing between scheduler and engine.
+pub fn share_pools(set: PoolSet) -> SharedPools {
+    Arc::new(Mutex::new(set))
+}
+
+/// How a set derives each method's token-slot width.
+enum Geometry {
+    /// Codec-sized: `KvLayout::new(cfg, codec).slot_bytes()` per page
+    /// codec, fp16 reference width for the legacy accounting pool.
+    Model(ModelConfig),
+    /// One fixed width for every method (tests and policy benches that
+    /// don't care about byte layouts).
+    Fixed(usize),
+}
+
+/// A family of codec-sized [`PagedPool`]s behind one handle. Pools are
+/// created lazily on first use of a method, each holding `pool_tokens`
+/// token slots — so the *byte* cost of a pool scales with its codec's
+/// slot width, and `memory_bytes` reports true resident KV.
+pub struct PoolSet {
+    page_tokens: usize,
+    /// Token-slot capacity of each per-codec pool.
+    pool_tokens: usize,
+    geometry: Geometry,
+    pools: BTreeMap<String, PagedPool>,
+    /// Memoized (pool key → token_bytes) so routing doesn't rebuild
+    /// codecs on every request.
+    widths: BTreeMap<String, usize>,
+}
+
+impl PoolSet {
+    /// Codec-sized pools for `model`: each page codec gets pages of its
+    /// own `slot_bytes()` width, `pool_tokens` slots per pool.
+    pub fn for_model(model: &ModelConfig, page_tokens: usize, pool_tokens: usize) -> Self {
+        assert!(page_tokens > 0 && pool_tokens >= page_tokens);
+        Self {
+            page_tokens,
+            pool_tokens,
+            geometry: Geometry::Model(model.clone()),
+            pools: BTreeMap::new(),
+            widths: BTreeMap::new(),
+        }
+    }
+
+    /// A single fixed-width pool shared by every method (unit tests and
+    /// policy benches exercising admission, not byte layouts).
+    pub fn fixed(page_tokens: usize, token_bytes: usize, num_pages: usize) -> Self {
+        assert!(page_tokens > 0 && token_bytes > 0);
+        Self {
+            page_tokens,
+            pool_tokens: num_pages * page_tokens,
+            geometry: Geometry::Fixed(token_bytes),
+            pools: BTreeMap::new(),
+            widths: BTreeMap::new(),
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Pages each per-codec pool holds.
+    pub fn num_pages(&self) -> usize {
+        self.pool_tokens / self.page_tokens
+    }
+
+    /// The pool key `method` routes to, allocation-free: its own codec
+    /// key for page-native methods, the shared accounting pool for
+    /// legacy methods. Routing is by method *name* (`is_page_codec`) —
+    /// O(1), called on every decode step — while slot widths
+    /// ([`token_bytes_for`](Self::token_bytes_for)) consult the actual
+    /// codec once and are memoized.
+    fn route<'a>(&self, method: &'a str) -> &'a str {
+        match &self.geometry {
+            Geometry::Fixed(_) => FIXED_KEY,
+            Geometry::Model(_) => {
+                if is_page_codec(method) {
+                    method
+                } else {
+                    LEGACY_KEY
+                }
+            }
+        }
+    }
+
+    /// Owned variant of the routing key (for pending-page maps etc.).
+    pub fn pool_key(&self, method: &str) -> String {
+        self.route(method).to_string()
+    }
+
+    /// Token-slot bytes of the pool `method` routes to — the codec's
+    /// exact `slot_bytes()` under model geometry, no slack. The codec
+    /// is constructed once per routing key; later calls hit the memo.
+    pub fn token_bytes_for(&mut self, method: &str) -> usize {
+        let key = self.route(method);
+        if let Some(&w) = self.widths.get(key) {
+            return w;
+        }
+        let w = match &self.geometry {
+            Geometry::Fixed(w) => *w,
+            Geometry::Model(cfg) => match page_codec_for(method, cfg.head_dim) {
+                Some(codec) => KvLayout::new(cfg, codec.as_ref()).slot_bytes(),
+                // Legacy accounting width: the fp16 reference cost the
+                // heap path approximately pays per token.
+                None => cfg.kv_bytes_per_token_fp16(),
+            },
+        };
+        self.widths.insert(key.to_string(), w);
+        w
+    }
+
+    /// The (lazily created) pool backing `method`. Always succeeds:
+    /// legacy methods share the accounting pool. After creation this is
+    /// two map lookups — no codec construction, no allocation — so it
+    /// sits on the per-token decode path without cost.
+    pub fn pool_mut(&mut self, method: &str) -> &mut PagedPool {
+        let key = self.route(method);
+        if !self.pools.contains_key(key) {
+            let token_bytes = self.token_bytes_for(method);
+            let cfg = PagedConfig {
+                page_tokens: self.page_tokens,
+                token_bytes,
+                num_pages: self.num_pages(),
+            };
+            self.pools.insert(key.to_string(), PagedPool::new(cfg));
+        }
+        self.pools.get_mut(key).unwrap()
+    }
+
+    /// The pool backing `method`, if it has been created.
+    pub fn pool(&self, method: &str) -> Option<&PagedPool> {
+        self.pools.get(self.route(method))
+    }
+
+    /// Iterate created pools as (key, pool).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &PagedPool)> {
+        self.pools.iter().map(|(k, p)| (k.as_str(), p))
+    }
+
+    /// Release a sequence's pages from the pool its method routes to.
+    pub fn release(&mut self, method: &str, seq: u64) -> Result<(), PoolError> {
+        let key = self.route(method);
+        match self.pools.get_mut(key) {
+            Some(p) => p.release(seq),
+            None => Err(PoolError::UnknownSequence),
+        }
+    }
+
+    /// Resident bytes across every pool: each allocated page counted
+    /// once at its own codec's width. Includes the legacy accounting
+    /// pool (admission reservations); use [`occupancy`](Self::occupancy)
+    /// for encoded-KV-only numbers.
+    pub fn memory_bytes(&self) -> usize {
+        self.pools.values().map(|p| p.memory_bytes()).sum()
+    }
+
+    /// Allocated pages across every pool (sizes differ per pool).
+    pub fn used_pages(&self) -> usize {
+        self.pools.values().map(|p| p.used_pages()).sum()
+    }
+
+    /// (resident KV bytes, resident token slots) across the pools that
+    /// actually hold encoded KV — the legacy accounting pool is
+    /// excluded, since its pages are admission reservations for KV that
+    /// lives on the per-sequence heap. Both counts are page-granular
+    /// (a partially filled page is resident in full), so
+    /// `bytes / (slots × coords_per_token)` is exactly the codec's
+    /// bits-per-coordinate for single-method traffic.
+    pub fn occupancy(&self) -> (usize, usize) {
+        let mut bytes = 0usize;
+        let mut slots = 0usize;
+        for (key, p) in &self.pools {
+            if key == LEGACY_KEY {
+                continue;
+            }
+            bytes += p.memory_bytes();
+            slots += p.used_pages() * self.page_tokens;
+        }
+        (bytes, slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::codec::max_slot_bytes;
+
+    #[test]
+    fn model_geometry_sizes_pools_per_codec() {
+        let cfg = ModelConfig::mini();
+        let mut set = PoolSet::for_model(&cfg, 16, 1024);
+        let exact = set.token_bytes_for("exact");
+        let fp16 = set.token_bytes_for("fp16");
+        let polar = set.token_bytes_for("polarquant-r-offline");
+        let kivi = set.token_bytes_for("kivi");
+        assert_eq!(exact, max_slot_bytes(&cfg), "exact is the widest codec");
+        assert_eq!(fp16 * 2, exact);
+        // The paper-shaped gap, structural: polar slots are at least 4×
+        // narrower than exact f32 and kivi narrower still at d=64.
+        assert!(polar * 4 <= exact, "polar {polar} vs exact {exact}");
+        assert!(kivi < fp16);
+        // Each pool's page_bytes reflects its own width.
+        set.pool_mut("exact").register(1, 16).unwrap();
+        set.pool_mut("polarquant-r-offline").register(1, 16).unwrap();
+        let pe = set.pool("exact").unwrap().page_bytes();
+        let pp = set.pool("polarquant-r-offline").unwrap().page_bytes();
+        assert_eq!(pe, 16 * exact);
+        assert_eq!(pp, 16 * polar);
+        assert_eq!(set.memory_bytes(), pe + pp);
+    }
+
+    #[test]
+    fn legacy_methods_share_the_accounting_pool() {
+        let cfg = ModelConfig::test();
+        let mut set = PoolSet::for_model(&cfg, 4, 64);
+        assert_eq!(set.pool_key("snapkv"), set.pool_key("polarquant-r-online"));
+        assert_ne!(set.pool_key("snapkv"), set.pool_key("polarquant"));
+        assert_eq!(set.token_bytes_for("snapkv"), cfg.kv_bytes_per_token_fp16());
+        set.pool_mut("snapkv").register(1, 8).unwrap();
+        set.pool_mut("polarquant-r-online").register(2, 8).unwrap();
+        assert_eq!(set.pool("snapkv").unwrap().used_pages(), 4);
+        // Reservations are admission accounting, not resident KV.
+        assert_eq!(set.occupancy(), (0, 0));
+        assert!(set.memory_bytes() > 0);
+        set.release("snapkv", 1).unwrap();
+        set.release("qjl", 2).unwrap(); // any legacy method routes there
+        assert_eq!(set.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn fixed_geometry_uses_one_pool_for_all_methods() {
+        let mut set = PoolSet::fixed(4, 8, 8);
+        set.pool_mut("exact").register(1, 4).unwrap();
+        assert_eq!(set.pool("polarquant").unwrap().used_pages(), 1);
+        assert_eq!(set.token_bytes_for("anything"), 8);
+        assert_eq!(set.num_pages(), 8);
+        set.release("kivi", 1).unwrap();
+        assert_eq!(set.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn occupancy_is_page_granular_and_codec_exact() {
+        let cfg = ModelConfig::mini();
+        let mut set = PoolSet::for_model(&cfg, 16, 512);
+        set.pool_mut("polarquant-r-offline").register(7, 40).unwrap(); // 3 pages
+        let (bytes, slots) = set.occupancy();
+        assert_eq!(slots, 48, "partial page resident in full");
+        let width = set.token_bytes_for("polarquant-r-offline");
+        assert_eq!(bytes, 48 * width);
+    }
+}

@@ -112,6 +112,13 @@ impl ModelConfig {
     pub fn kv_bytes_per_token_fp16(&self) -> usize {
         2 * 2 * self.n_layers * self.n_heads * self.head_dim
     }
+
+    /// Coordinates one token's KV stores across all layers/heads
+    /// (K and V rows of `head_dim` each) — the denominator of
+    /// bits-per-coordinate accounting over pool occupancy.
+    pub fn kv_coords_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_heads * self.head_dim
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +156,9 @@ mod tests {
         let cfg = ModelConfig::mini();
         // 4 layers × 4 heads × 64 dims × 2 (K+V) × 2 bytes = 4096.
         assert_eq!(cfg.kv_bytes_per_token_fp16(), 4096);
+        // Same shape in coordinates: 2048/token, 2 bytes each at fp16.
+        assert_eq!(cfg.kv_coords_per_token(), 2048);
+        assert_eq!(cfg.kv_coords_per_token() * 2, cfg.kv_bytes_per_token_fp16());
     }
 
     #[test]

@@ -87,6 +87,10 @@ pub struct Transformer {
     pub weights: Weights,
     rope: RopeTable,
     scratch: AttnScratch,
+    /// Codec-side decode scratch (prepared-query tables, value
+    /// accumulators) reused across paged decode steps — RefCell because
+    /// [`HeadKvView`] borrows it behind a shared reference.
+    codec_scratch: RefCell<CodecScratch>,
 }
 
 /// Observation-window length captured at prefill (SnapKV's default is 16–64;
@@ -97,7 +101,13 @@ impl Transformer {
     pub fn new(weights: Weights) -> Self {
         let cfg = weights.cfg.clone();
         let rope = RopeTable::new(&cfg, 256);
-        Self { cfg, weights, rope, scratch: AttnScratch::default() }
+        Self {
+            cfg,
+            weights,
+            rope,
+            scratch: AttnScratch::default(),
+            codec_scratch: RefCell::new(CodecScratch::default()),
+        }
     }
 
     pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
@@ -371,7 +381,6 @@ impl Transformer {
         let mut proj = vec![0.0f32; d];
         let mut gate = vec![0.0f32; f];
         let mut up = vec![0.0f32; f];
-        let codec_scratch = RefCell::new(CodecScratch::default());
 
         for l in 0..cfg.n_layers {
             xin.copy_from_slice(&x);
@@ -394,7 +403,7 @@ impl Transformer {
                         l,
                         head,
                         pos,
-                        &codec_scratch,
+                        &self.codec_scratch,
                     );
                     let qh = &q[head * dh..(head + 1) * dh];
                     let kh = &k[head * dh..(head + 1) * dh];

@@ -13,11 +13,16 @@
 //!   per-node pins (active sequences), copy-on-write splits on
 //!   divergence, and an O(log n) LRU eviction index over cold
 //!   unreferenced leaves.
-//! * [`PrefixCacheSet`] — one radix tree **per page codec**: pool pages
-//!   hold encoded bytes now, so a prefix written by `polarquant` must
-//!   never be matched by an `exact` request. The set routes
-//!   match/insert/pin by method name and spreads eviction pressure
-//!   across trees.
+//! * [`PrefixCacheSet`] — one radix tree **per page codec**, each over
+//!   its codec's own codec-sized pool
+//!   ([`crate::kvcache::pools::PoolSet`]): pages hold encoded bytes, so
+//!   a prefix written by `polarquant` must never be matched by an
+//!   `exact` request — and since pools are now per-codec, each tree
+//!   references pages of its own size class. The set routes
+//!   match/insert/pin/make-room by method name and enforces a **global
+//!   byte budget** across trees (pages of different trees have
+//!   different byte sizes, so a page-count budget would be
+//!   apples-to-oranges).
 //!
 //! The scheduler consults the set at admission (longest cached prefix →
 //! shared pages + skipped prefill), inserts every admitted page-codec
@@ -31,17 +36,20 @@ pub mod radix;
 pub use radix::{NodeId, PrefixConfig, PrefixMatch, PrefixStats, RadixPrefixCache};
 
 use crate::kvcache::paged::PagedPool;
+use crate::kvcache::pools::PoolSet;
 use std::collections::BTreeMap;
 
-/// Per-codec radix trees behind one facade. `max_pages` in the config is
-/// a **global** budget across all trees; [`enforce_budget`] trims the
-/// fattest tree first. LRU is per-tree (each tree keeps its own clock),
-/// which is exact for single-method traffic and a fair round-robin
-/// approximation across methods.
+/// Per-codec radix trees behind one facade. The budget is in **bytes**
+/// across all trees; [`enforce_budget`] trims the tree holding the most
+/// resident bytes first. LRU is per-tree (each tree keeps its own
+/// clock), which is exact for single-method traffic and a fair
+/// round-robin approximation across methods.
 ///
 /// [`enforce_budget`]: PrefixCacheSet::enforce_budget
 pub struct PrefixCacheSet {
-    cfg: PrefixConfig,
+    page_tokens: usize,
+    /// Global budget on pool bytes the cache keeps referenced.
+    max_bytes: usize,
     trees: BTreeMap<String, RadixPrefixCache>,
     /// Bumped on every insert; lets a gated admission detect that the
     /// tree grew between gating and admission (another batch member
@@ -51,8 +59,8 @@ pub struct PrefixCacheSet {
 }
 
 impl PrefixCacheSet {
-    pub fn new(cfg: PrefixConfig) -> Self {
-        Self { cfg, trees: BTreeMap::new(), epoch: 0 }
+    pub fn new(page_tokens: usize, max_bytes: usize) -> Self {
+        Self { page_tokens, max_bytes, trees: BTreeMap::new(), epoch: 0 }
     }
 
     /// Monotonic insert counter (see the `epoch` field).
@@ -61,7 +69,12 @@ impl PrefixCacheSet {
     }
 
     fn tree_mut(&mut self, method: &str) -> &mut RadixPrefixCache {
-        let cfg = self.cfg.clone();
+        let cfg = PrefixConfig {
+            page_tokens: self.page_tokens,
+            // Per-tree page budgets are meaningless across size classes;
+            // the set enforces the global byte budget instead.
+            max_pages: usize::MAX,
+        };
         self.trees
             .entry(method.to_string())
             .or_insert_with(|| RadixPrefixCache::new(cfg))
@@ -88,7 +101,8 @@ impl PrefixCacheSet {
         }
     }
 
-    /// Insert the page-aligned prefix of `tokens` into `method`'s tree.
+    /// Insert the page-aligned prefix of `tokens` into `method`'s tree,
+    /// referencing pages of `method`'s own pool.
     pub fn insert(
         &mut self,
         method: &str,
@@ -100,9 +114,19 @@ impl PrefixCacheSet {
         self.tree_mut(method).insert(tokens, pool, src_seq)
     }
 
-    /// Pool pages referenced across all trees.
+    /// Pool pages referenced across all trees (pages of different trees
+    /// have different byte sizes; see [`cached_bytes`](Self::cached_bytes)).
     pub fn cached_pages(&self) -> usize {
         self.trees.values().map(|t| t.cached_pages()).sum()
+    }
+
+    /// Resident bytes the cache references across all trees, each tree
+    /// priced at its own pool's page size.
+    pub fn cached_bytes(&self, pools: &PoolSet) -> usize {
+        self.trees
+            .iter()
+            .map(|(m, t)| t.cached_pages() * pools.pool(m).map_or(0, |p| p.page_bytes()))
+            .sum()
     }
 
     /// Cumulative evicted nodes across all trees (monotonic).
@@ -110,57 +134,50 @@ impl PrefixCacheSet {
         self.trees.values().map(|t| t.stats().evicted_nodes).sum()
     }
 
-    /// Pool pages eviction could free right now, across all trees.
-    pub fn freeable_pages(&self, pool: &PagedPool) -> usize {
-        self.trees.values().map(|t| t.freeable_pages(pool)).sum()
+    /// Pool pages eviction could free right now in `method`'s pool.
+    /// Only `method`'s own tree holds pages there — trees never cross
+    /// codecs and every codec has its own pool — so cross-tree eviction
+    /// cannot help a same-pool shortfall.
+    pub fn freeable_pages(&self, method: &str, pool: &PagedPool) -> usize {
+        self.trees.get(method).map_or(0, |t| t.freeable_pages(pool))
     }
 
-    /// Free at least `pages_needed` pool pages by evicting cache entries
-    /// across trees — or do nothing at all (all-or-nothing, like
-    /// [`RadixPrefixCache::make_room`]).
-    pub fn make_room(&mut self, pool: &mut PagedPool, pages_needed: usize) -> bool {
+    /// Free at least `pages_needed` pages in `method`'s pool by evicting
+    /// that method's cache entries — or do nothing at all (all-or-
+    /// nothing, like [`RadixPrefixCache::make_room`]).
+    pub fn make_room(
+        &mut self,
+        method: &str,
+        pool: &mut PagedPool,
+        pages_needed: usize,
+    ) -> bool {
         if pages_needed == 0 {
             return true;
         }
-        if self.freeable_pages(pool) < pages_needed {
-            return false;
+        match self.trees.get_mut(method) {
+            Some(t) => t.make_room(pool, pages_needed),
+            None => false,
         }
-        let mut freed = 0;
-        for t in self.trees.values_mut() {
-            if freed >= pages_needed {
-                break;
-            }
-            freed += t.evict_lru(pool, pages_needed - freed);
-        }
-        // Fallback: cascaded eviction of unpinned subtrees whose pages
-        // only free once their last sharer retires.
-        while freed < pages_needed {
-            let mut any = false;
-            for t in self.trees.values_mut() {
-                if freed >= pages_needed {
-                    break;
-                }
-                if let Some(f) = t.evict_one_node(pool) {
-                    freed += f;
-                    any = true;
-                }
-            }
-            if !any {
-                break;
-            }
-        }
-        freed >= pages_needed
     }
 
-    /// Trim back under the global `max_pages` budget, evicting from the
-    /// tree holding the most pages first.
-    pub fn enforce_budget(&mut self, pool: &mut PagedPool) {
-        while self.cached_pages() > self.cfg.max_pages {
-            let mut order: Vec<&mut RadixPrefixCache> = self.trees.values_mut().collect();
-            order.sort_by_key(|t| std::cmp::Reverse(t.cached_pages()));
+    /// Trim back under the global byte budget, evicting from the tree
+    /// holding the most resident bytes first (falling back to any tree
+    /// that can evict when the fattest is fully pinned).
+    pub fn enforce_budget(&mut self, pools: &mut PoolSet) {
+        while self.cached_bytes(pools) > self.max_bytes {
+            let mut order: Vec<(usize, String)> = self
+                .trees
+                .iter()
+                .map(|(m, t)| {
+                    let pb = pools.pool(m).map_or(0, |p| p.page_bytes());
+                    (t.cached_pages() * pb, m.clone())
+                })
+                .collect();
+            order.sort_by(|a, b| b.0.cmp(&a.0));
             let mut evicted = false;
-            for t in order {
-                if t.evict_one_node(pool).is_some() {
+            for (_, m) in order {
+                let pool = pools.pool_mut(&m);
+                if self.trees.get_mut(&m).unwrap().evict_one_node(pool).is_some() {
                     evicted = true;
                     break;
                 }
@@ -175,59 +192,87 @@ impl PrefixCacheSet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::paged::PagedConfig;
+    use crate::model::config::ModelConfig;
 
-    fn pool(pages: usize) -> PagedPool {
-        PagedPool::new(PagedConfig { page_tokens: 4, token_bytes: 2, num_pages: pages })
+    /// A codec-sized pool set over the tiny test model (page codecs get
+    /// genuinely different page byte sizes).
+    fn pools(pool_tokens: usize) -> PoolSet {
+        PoolSet::for_model(&ModelConfig::test(), 4, pool_tokens)
     }
 
-    fn set(max_pages: usize) -> PrefixCacheSet {
-        PrefixCacheSet::new(PrefixConfig { page_tokens: 4, max_pages })
+    fn set(max_bytes: usize) -> PrefixCacheSet {
+        PrefixCacheSet::new(4, max_bytes)
     }
 
     #[test]
     fn methods_never_share_prefixes() {
-        let (mut s, mut p) = (set(64), pool(32));
+        let mut s = set(1 << 20);
+        let mut p = pools(128);
         let prompt: Vec<u32> = vec![7; 8];
-        p.register(1, 8).unwrap();
-        s.insert("polarquant", &prompt, &mut p, 1);
+        p.pool_mut("polarquant").register(1, 8).unwrap();
+        let pool = p.pool_mut("polarquant");
+        s.insert("polarquant", &prompt, pool, 1);
         assert_eq!(s.match_prefix("polarquant", &prompt).tokens, 8);
         assert_eq!(
             s.match_prefix("exact", &prompt).tokens,
             0,
             "codec-mismatched pages must not match"
         );
-        p.release(1).unwrap();
+        p.release("polarquant", 1).unwrap();
     }
 
     #[test]
-    fn global_budget_spans_trees() {
-        let (mut s, mut p) = (set(2), pool(32));
-        p.register(1, 8).unwrap();
-        p.register(2, 8).unwrap();
-        s.insert("exact", &[1; 8], &mut p, 1);
-        s.insert("fp16", &[2; 8], &mut p, 2);
-        assert_eq!(s.cached_pages(), 4);
-        p.release(1).unwrap();
-        p.release(2).unwrap();
+    fn budget_is_in_bytes_across_size_classes() {
+        // Two trees over pools of different page sizes: the global
+        // budget compares bytes, so the wide (exact) tree is trimmed
+        // before the narrow (polar) one even with equal page counts.
+        let mut p = pools(128);
+        p.pool_mut("exact").register(1, 8).unwrap();
+        p.pool_mut("polarquant").register(2, 8).unwrap();
+        let exact_page = p.pool("exact").unwrap().page_bytes();
+        let polar_page = p.pool("polarquant").unwrap().page_bytes();
+        assert!(exact_page > polar_page, "size classes must differ");
+        // Budget: exactly the polar entry's bytes.
+        let mut s = set(2 * polar_page);
+        s.insert("exact", &[1; 8], p.pool_mut("exact"), 1);
+        s.insert("polarquant", &[2; 8], p.pool_mut("polarquant"), 2);
+        assert_eq!(s.cached_bytes(&p), 2 * exact_page + 2 * polar_page);
+        p.release("exact", 1).unwrap();
+        p.release("polarquant", 2).unwrap();
         s.enforce_budget(&mut p);
-        assert!(s.cached_pages() <= 2, "global budget: {}", s.cached_pages());
+        assert!(s.cached_bytes(&p) <= 2 * polar_page);
+        assert_eq!(
+            s.match_prefix("polarquant", &[2; 8]).tokens,
+            8,
+            "narrow entry survives; the wide one paid for the budget"
+        );
+        assert_eq!(s.match_prefix("exact", &[1; 8]).tokens, 0);
     }
 
     #[test]
-    fn make_room_is_all_or_nothing_across_trees() {
-        let (mut s, mut p) = (set(64), pool(16));
-        p.register(1, 8).unwrap();
-        p.register(2, 8).unwrap();
-        let na = s.insert("exact", &[1; 8], &mut p, 1);
-        s.insert("kivi", &[2; 8], &mut p, 2);
-        p.release(1).unwrap();
-        p.release(2).unwrap();
+    fn make_room_is_all_or_nothing_per_method_pool() {
+        let mut s = set(1 << 20);
+        let mut p = pools(64);
+        p.pool_mut("exact").register(1, 8).unwrap();
+        p.pool_mut("kivi").register(2, 8).unwrap();
+        let na = s.insert("exact", &[1; 8], p.pool_mut("exact"), 1);
+        s.insert("kivi", &[2; 8], p.pool_mut("kivi"), 2);
+        p.release("exact", 1).unwrap();
+        p.release("kivi", 2).unwrap();
         s.pin("exact", na.unwrap());
-        assert_eq!(s.freeable_pages(&p), 2, "only the kivi entry is free");
-        assert!(!s.make_room(&mut p, 3), "cannot cover: nothing evicted");
-        assert_eq!(s.cached_pages(), 4);
-        assert!(s.make_room(&mut p, 2));
+        // Each pool only answers to its own tree now.
+        assert_eq!(s.freeable_pages("kivi", p.pool("kivi").unwrap()), 2);
+        assert_eq!(
+            s.freeable_pages("exact", p.pool("exact").unwrap()),
+            0,
+            "pinned exact entry is not freeable"
+        );
+        assert!(
+            !s.make_room("exact", p.pool_mut("exact"), 1),
+            "kivi pages cannot cover an exact-pool shortfall"
+        );
+        assert_eq!(s.match_prefix("kivi", &[2; 8]).tokens, 8, "untouched");
+        assert!(s.make_room("kivi", p.pool_mut("kivi"), 2));
         assert_eq!(s.match_prefix("kivi", &[2; 8]).tokens, 0);
         assert_eq!(s.match_prefix("exact", &[1; 8]).tokens, 8, "pinned survives");
     }

@@ -1,15 +1,21 @@
-//! Cross-substrate parity: decode over pool-backed page slots must
-//! reproduce the legacy per-sequence `CompressedKv` heap path —
-//! bit-identically for fp16, within codec tolerance for polarquant —
-//! and a prefix-cache hit must reproduce a cold prefill exactly. Also
-//! pins the accounting invariant: `PagedPool::memory_bytes` equals
-//! every live page counted once (the pool is the only KV store).
+//! Cross-substrate parity under codec-sized page geometry: decode over
+//! pool-backed page slots must reproduce the legacy per-sequence
+//! `CompressedKv` heap path — bit-identically for fp16, within codec
+//! tolerance for polarquant — and a prefix-cache hit must reproduce a
+//! cold prefill exactly, for both page-aligned and mid-page divergence
+//! splits. Pools here are sized to each codec's exact `slot_bytes()`
+//! (no slack bytes), so these tests also pin that the new geometry
+//! changes nothing about the bytes any kernel reads. Also pins the
+//! accounting invariant: every pool's `memory_bytes` equals its live
+//! pages counted once at that codec's width (the pools are the only KV
+//! store).
 
 use polarquant::coordinator::request::{GenRequest, Tracked};
 use polarquant::coordinator::scheduler::Scheduler;
 use polarquant::coordinator::worker::NativeWorker;
-use polarquant::kvcache::codec::{max_slot_bytes, page_codec_for, KvLayout, PageCodec};
-use polarquant::kvcache::paged::{share, PageId, PagedConfig, PagedPool};
+use polarquant::kvcache::codec::{page_codec_for, KvLayout, PageCodec};
+use polarquant::kvcache::paged::{PageId, PagedConfig, PagedPool};
+use polarquant::kvcache::pools::{share_pools, PoolSet};
 use polarquant::kvcache::sequence::{CacheConfig, SequenceCache};
 use polarquant::model::config::ModelConfig;
 use polarquant::model::transformer::{PrefillOutput, Transformer};
@@ -43,10 +49,12 @@ fn encode_prompt(
     }
 }
 
-fn test_pool(cfg: &ModelConfig, tokens: usize) -> PagedPool {
+/// A standalone pool sized to exactly this codec's slot width — the new
+/// geometry every serving pool now uses.
+fn sized_pool(layout: &KvLayout, tokens: usize) -> PagedPool {
     PagedPool::new(PagedConfig {
         page_tokens: 4,
-        token_bytes: max_slot_bytes(cfg),
+        token_bytes: layout.slot_bytes(),
         num_pages: tokens.div_ceil(4) + 8,
     })
 }
@@ -56,7 +64,8 @@ fn fp16_pool_decode_bit_identical_to_legacy_heap() {
     // The fp16 page codec stores exactly what the legacy `ExactKv` heap
     // cache stores, and the slot readers replay the same op order —
     // teacher-forced decode logits must match bit for bit, including
-    // the decode-appended tail (fp16 in both substrates).
+    // the decode-appended tail (fp16 in both substrates). The pool's
+    // token slots are exactly fp16-wide: no slack region exists at all.
     let cfg = ModelConfig::test();
     let mut m = Transformer::synthetic(&cfg, 42);
     let tokens: Vec<u32> = (0..40).map(|i| (i * 13 + 5) % 64).collect();
@@ -66,7 +75,8 @@ fn fp16_pool_decode_bit_identical_to_legacy_heap() {
     let mut legacy = SequenceCache::from_prefill(&cfg, &CacheConfig::new("exact", 1.0), &pre);
     let codec = page_codec_for("fp16", cfg.head_dim).unwrap();
     let layout = KvLayout::new(&cfg, codec.as_ref());
-    let mut pool = test_pool(&cfg, tokens.len() + 4);
+    let mut pool = sized_pool(&layout, tokens.len() + 4);
+    assert_eq!(pool.cfg.token_bytes, layout.slot_bytes(), "no slack bytes");
     pool.register(1, tokens.len() + 4).unwrap();
     encode_prompt(&mut pool, 1, codec.as_ref(), &layout, &cfg, &pre, split);
 
@@ -84,7 +94,8 @@ fn polar_pool_decode_matches_legacy_heap() {
     // first decode step (no appended tail yet) is bit-identical. Later
     // steps diverge only in tail storage (legacy keeps an fp16 tail per
     // paper §5.3; the pool encodes streamed tokens with the codec) and
-    // must stay within quantization tolerance.
+    // must stay within quantization tolerance. Pool slots are exactly
+    // polar-wide (≈4 bits/coord) — the geometry the server now runs.
     let cfg = ModelConfig::test();
     let mut m = Transformer::synthetic(&cfg, 7);
     let tokens: Vec<u32> = (0..36).map(|i| (i * 7 + 1) % 64).collect();
@@ -98,7 +109,7 @@ fn polar_pool_decode_matches_legacy_heap() {
     );
     let codec = page_codec_for("polarquant-r-offline", cfg.head_dim).unwrap();
     let layout = KvLayout::new(&cfg, codec.as_ref());
-    let mut pool = test_pool(&cfg, tokens.len() + 4);
+    let mut pool = sized_pool(&layout, tokens.len() + 4);
     pool.register(1, tokens.len() + 4).unwrap();
     encode_prompt(&mut pool, 1, codec.as_ref(), &layout, &cfg, &pre, split);
 
@@ -132,41 +143,42 @@ fn exact_req(id: u64, prompt: &[u32]) -> Tracked {
     Tracked::new(r)
 }
 
+/// A fresh prefix-caching stack over codec-sized pools.
+fn stack(cfg: &ModelConfig) -> (Scheduler, NativeWorker) {
+    let pools = share_pools(PoolSet::for_model(cfg, 16, 2048));
+    let engine = NativeWorker::with_pools(Weights::synthetic(cfg, 9), pools.clone());
+    (Scheduler::with_prefix_cache_shared(pools, 4, 1 << 20), engine)
+}
+
 #[test]
 fn scheduler_prefix_hit_then_decode_matches_cold_prefill_exactly() {
     // End-to-end acceptance: a radix hit serves decode directly from
     // shared pool pages (no snapshot store exists anymore), and with
     // the lossless exact codec the warm generation is token-identical
-    // to a cold one. Also asserts the pool-bytes invariant while
+    // to a cold one — now over a pool whose slots are exactly the
+    // codec's width. Also asserts the pool-bytes invariant while
     // sequences and cache share pages.
     let cfg = ModelConfig::test();
     let prompt: Vec<u32> = (0..48).map(|i| (i * 5 + 2) % 64).collect();
-    let mk = || {
-        let pool = share(PagedPool::new(PagedConfig {
-            page_tokens: 16,
-            token_bytes: max_slot_bytes(&cfg),
-            num_pages: 128,
-        }));
-        let engine = NativeWorker::with_pool(Weights::synthetic(&cfg, 9), pool.clone());
-        (Scheduler::with_prefix_cache_shared(pool, 4, 64), engine)
-    };
 
     // Cold reference on a fresh stack.
-    let (mut s0, mut e0) = mk();
+    let (mut s0, mut e0) = stack(&cfg);
     s0.admit(vec![exact_req(1, &prompt)], &mut e0);
     let cold = run_to_done(&mut s0, &mut e0).remove(0);
     assert_eq!(cold.reused_tokens, 0);
 
     // Warm: same stack, second sighting hits the radix cache.
-    let (mut s1, mut e1) = mk();
+    let (mut s1, mut e1) = stack(&cfg);
     s1.admit(vec![exact_req(1, &prompt)], &mut e1);
     run_to_done(&mut s1, &mut e1);
     s1.admit(vec![exact_req(2, &prompt)], &mut e1);
 
     // Accounting invariant while the warm sequence is active and shares
-    // its head with the cache: every live page counted once.
+    // its head with the cache: every live page counted once, at the
+    // exact codec's own width.
     {
-        let pool = s1.pool.lock().unwrap();
+        let pools = s1.pools.lock().unwrap();
+        let pool = pools.pool("exact").unwrap();
         let mut unique: BTreeSet<PageId> = BTreeSet::new();
         if let Some(t) = pool.table(2) {
             unique.extend(t.pages.iter().copied());
@@ -196,19 +208,52 @@ fn scheduler_prefix_hit_then_decode_matches_cold_prefill_exactly() {
 }
 
 #[test]
+fn mid_page_divergence_split_matches_cold_prefill_exactly() {
+    // The divergence-split path under sized pages: prompt B shares a
+    // page-aligned head with cached prompt A but diverges mid-page
+    // (token 24 of a 16-token page grid), so only the first full page
+    // can be reused and the partial page is re-prefilled. The warm B
+    // generation must still be token-identical to a cold B run.
+    let cfg = ModelConfig::test();
+    let head: Vec<u32> = (0..24).map(|i| (i * 3 + 1) % 64).collect();
+    let mut a = head.clone();
+    a.extend((24..48).map(|i| (i * 5 + 2) % 64));
+    let mut b = head;
+    b.extend((24..48).map(|i| (i * 7 + 5) % 64)); // diverges at token 24
+
+    // Cold reference for B.
+    let (mut s0, mut e0) = stack(&cfg);
+    s0.admit(vec![exact_req(1, &b)], &mut e0);
+    let cold_b = run_to_done(&mut s0, &mut e0).remove(0);
+
+    // Warm: A seeds the cache, then B hits only the aligned head.
+    let (mut s1, mut e1) = stack(&cfg);
+    s1.admit(vec![exact_req(1, &a)], &mut e1);
+    run_to_done(&mut s1, &mut e1);
+    s1.admit(vec![exact_req(2, &b)], &mut e1);
+    let warm_b = run_to_done(&mut s1, &mut e1).remove(0);
+    assert_eq!(
+        warm_b.reused_tokens, 16,
+        "divergence inside page 2 caps reuse at the page boundary"
+    );
+    assert_eq!(warm_b.tokens, cold_b.tokens, "mid-page split must not change output");
+
+    // And a later full-A repeat still gets the page-aligned A match.
+    s1.admit(vec![exact_req(3, &a)], &mut e1);
+    let warm_a = run_to_done(&mut s1, &mut e1).remove(0);
+    assert_eq!(warm_a.reused_tokens, 47, "A's own path survives the split");
+}
+
+#[test]
 fn kivi_and_polar_pool_scores_stay_finite_end_to_end() {
     // Smoke parity for the remaining page codecs through the real
     // scheduler: generations complete, report their true slot footprint,
     // and decode never produces non-finite logits (sampled ids in
     // vocab). Both quantized slot layouts must undercut fp16.
     let cfg = ModelConfig::test();
-    let pool = share(PagedPool::new(PagedConfig {
-        page_tokens: 16,
-        token_bytes: max_slot_bytes(&cfg),
-        num_pages: 256,
-    }));
-    let mut engine = NativeWorker::with_pool(Weights::synthetic(&cfg, 3), pool.clone());
-    let mut sched = Scheduler::with_prefix_cache_shared(pool, 4, 64);
+    let pools = share_pools(PoolSet::for_model(&cfg, 16, 4096));
+    let mut engine = NativeWorker::with_pools(Weights::synthetic(&cfg, 3), pools.clone());
+    let mut sched = Scheduler::with_prefix_cache_shared(pools, 4, 1 << 20);
     let prompt: Vec<u32> = (0..32).map(|i| (i * 3 + 2) % 64).collect();
     let mut bytes = std::collections::BTreeMap::new();
     for (id, method) in ["polarquant-r-offline", "kivi", "fp16"].iter().enumerate() {
@@ -225,4 +270,10 @@ fn kivi_and_polar_pool_scores_stay_finite_end_to_end() {
         bytes["polarquant-r-offline"] < bytes["fp16"] && bytes["kivi"] < bytes["fp16"],
         "quantized slots must undercut fp16: {bytes:?}"
     );
+    // Under codec-sized geometry the *pools* show the same ordering in
+    // actual resident bytes (the cache still references prompt pages).
+    let pools = sched.pools.lock().unwrap();
+    let page = |m: &str| pools.pool(m).unwrap().page_bytes();
+    assert!(page("polarquant-r-offline") < page("fp16"));
+    assert!(page("kivi") < page("fp16"));
 }

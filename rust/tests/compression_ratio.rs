@@ -1,0 +1,169 @@
+//! Compression-ratio regression suite: pins that PolarQuant's headline
+//! memory claim is real in **resident bytes**, not just in code width.
+//!
+//! With codec-sized pools ([`PoolSet`]), a pool's `memory_bytes` is the
+//! analytic slot cost of its codec — so these tests turn the paper's
+//! numbers into enforced invariants:
+//!
+//! * every page codec's pool bytes match `pages × page_tokens ×
+//!   slot_bytes(codec)` exactly (no slack, no worst-case sizing);
+//! * polarquant keeps the same token stream resident in ≤ 1/4 the bytes
+//!   of the exact f32 codec (measured: ≈8.3x vs exact, ≈4.1x vs fp16 —
+//!   the paper's ×4.2);
+//! * KIVI's in-slot zero/scale constants are visible as bits/coord
+//!   strictly above its 2-bit code width (2 + 32/G), while PolarQuant's
+//!   normalization-free layout stays ≤ 4 bits with no constants at all.
+
+use polarquant::coordinator::request::{GenRequest, Tracked};
+use polarquant::coordinator::scheduler::Scheduler;
+use polarquant::coordinator::worker::NativeWorker;
+use polarquant::kvcache::codec::{max_slot_bytes, page_codec_for, KvLayout, PAGE_CODEC_METHODS};
+use polarquant::kvcache::pools::{share_pools, PoolSet};
+use polarquant::model::config::ModelConfig;
+use polarquant::model::weights::Weights;
+
+const PAGE_TOKENS: usize = 16;
+
+fn layout_for(cfg: &ModelConfig, method: &str) -> KvLayout {
+    let codec = page_codec_for(method, cfg.head_dim).expect("page codec");
+    KvLayout::new(cfg, codec.as_ref())
+}
+
+#[test]
+fn memory_bytes_matches_analytic_slot_cost_exactly() {
+    // Fixed workload: 3 sequences of 40, 55 and 64 tokens. For every
+    // page codec, the pool's resident bytes must equal the analytic
+    // page cost at that codec's exact slot width — byte for byte.
+    let cfg = ModelConfig::mini();
+    for method in PAGE_CODEC_METHODS {
+        let mut pools = PoolSet::for_model(&cfg, PAGE_TOKENS, 4096);
+        let layout = layout_for(&cfg, method);
+        assert_eq!(
+            pools.token_bytes_for(method),
+            layout.slot_bytes(),
+            "{method}: slot width is the codec layout, no slack"
+        );
+        let pool = pools.pool_mut(method);
+        let mut expect_pages = 0usize;
+        for (seq, tokens) in [(1u64, 40usize), (2, 55), (3, 64)] {
+            pool.register(seq, tokens).unwrap();
+            expect_pages += tokens.div_ceil(PAGE_TOKENS);
+        }
+        let analytic = expect_pages * PAGE_TOKENS * layout.slot_bytes();
+        assert_eq!(
+            pool.memory_bytes(),
+            analytic,
+            "{method}: resident bytes must equal the analytic slot cost"
+        );
+        // And through the set-level occupancy, bits/coord is the
+        // codec's achieved width exactly.
+        let (bytes, slots) = pools.occupancy();
+        let cpt = cfg.kv_coords_per_token();
+        let bits = bytes as f64 * 8.0 / (slots * cpt) as f64;
+        let want = layout.slot_bytes() as f64 * 8.0 / cpt as f64;
+        assert!((bits - want).abs() < 1e-9, "{method}: {bits} vs {want}");
+    }
+}
+
+#[test]
+fn achieved_bits_per_coord_match_the_paper_layouts() {
+    // The slot-layout table as regression-checked numbers (d=64, the
+    // mini model): exact 32, fp16 16, kivi 2 + 32/G = 3.0 at G=32,
+    // polarquant 3.875 (fp16 radii + byte-rounded packed angles).
+    let cfg = ModelConfig::mini();
+    let cpt = cfg.kv_coords_per_token() as f64;
+    let bits = |method: &str| layout_for(&cfg, method).slot_bytes() as f64 * 8.0 / cpt;
+    assert_eq!(bits("exact"), 32.0);
+    assert_eq!(bits("fp16"), 16.0);
+    assert_eq!(bits("kivi"), 3.0, "2-bit codes + in-slot zero/scale headers");
+    assert_eq!(bits("polarquant"), 3.875);
+    assert_eq!(bits("polarquant-r-offline"), 3.875);
+    // KIVI's overhead claim as an inequality: strictly above its pure
+    // code width (2 bits) — the in-slot constants ARE the difference —
+    // while polar carries no constants and stays ≤ 4 bits.
+    assert!(bits("kivi") > 2.0);
+    assert!(bits("polarquant-r-offline") <= 4.0);
+}
+
+/// Encode the same prompt through the real engine for `method` and
+/// return the resident encoded-KV bytes its pool holds.
+fn resident_after_prefill(cfg: &ModelConfig, method: &str, prompt: &[u32]) -> usize {
+    let pools = share_pools(PoolSet::for_model(cfg, PAGE_TOKENS, 2048));
+    let mut w = NativeWorker::with_pools(Weights::synthetic(cfg, 11), pools.clone());
+    let mut req = GenRequest::new(1, prompt.to_vec(), 2);
+    req.method = method.into();
+    let (eid, first) = w.prefill(&req);
+    let t = w.decode(eid, first, prompt.len());
+    assert!((t as usize) < cfg.vocab, "{method}: decode stays sane");
+    let (bytes, slots) = pools.lock().unwrap().occupancy();
+    assert!(slots > 0, "{method}: prompt resident");
+    bytes
+}
+
+#[test]
+fn polarquant_resident_bytes_at_most_quarter_of_exact() {
+    // The acceptance criterion, end to end through the engine: the same
+    // token stream (prompt + decode budget) resides in ≤ 1/4 the bytes
+    // under polarquant vs the exact codec — and every codec's residency
+    // undercuts exact (no codec pays the old worst-case width anymore).
+    let cfg = ModelConfig::test();
+    let prompt: Vec<u32> = (0..48).map(|i| (i * 13 + 3) % 64).collect();
+    let exact = resident_after_prefill(&cfg, "exact", &prompt);
+    let polar = resident_after_prefill(&cfg, "polarquant-r-offline", &prompt);
+    let fp16 = resident_after_prefill(&cfg, "fp16", &prompt);
+    let kivi = resident_after_prefill(&cfg, "kivi", &prompt);
+    assert!(
+        polar * 4 <= exact,
+        "polarquant must be ≥4x smaller resident: polar {polar} vs exact {exact}"
+    );
+    assert_eq!(fp16 * 2, exact, "fp16 residency is exactly half of f32");
+    assert!(kivi < fp16, "kivi undercuts fp16");
+    for (name, b) in [("fp16", fp16), ("kivi", kivi), ("polar", polar)] {
+        assert!(b < exact, "{name} must not report exact-width residency");
+    }
+}
+
+#[test]
+fn mixed_codec_serving_accounts_each_method_at_its_own_width() {
+    // The serving-shaped version: one scheduler + engine over shared
+    // codec-sized pools, the same fixed workload admitted under each
+    // codec. Per-codec pool residency must reproduce the analytic
+    // ratios vs exact — with pages (not just slots) as the unit, since
+    // both pools see identical token counts and page geometry.
+    let cfg = ModelConfig::test();
+    let pools = share_pools(PoolSet::for_model(&cfg, PAGE_TOKENS, 4096));
+    let mut engine = NativeWorker::with_pools(Weights::synthetic(&cfg, 5), pools.clone());
+    let mut sched = Scheduler::with_prefix_cache_shared(pools.clone(), 8, 1 << 20);
+    let prompt: Vec<u32> = (0..40).map(|i| (i * 7 + 2) % 64).collect();
+    for (id, method) in PAGE_CODEC_METHODS.iter().enumerate() {
+        let mut r = GenRequest::new(id as u64 + 1, prompt.clone(), 4);
+        r.method = (*method).to_string();
+        sched.admit(vec![Tracked::new(r)], &mut engine);
+    }
+    while !sched.active.is_empty() {
+        sched.decode_round(&mut engine);
+    }
+    // All sequences retired; the prefix cache keeps each codec's prompt
+    // pages resident — the same page count per codec, priced at each
+    // codec's own width.
+    let pools = pools.lock().unwrap();
+    let exact = pools.pool("exact").unwrap();
+    let polar = pools.pool("polarquant-r-offline").unwrap();
+    assert_eq!(exact.used_pages(), polar.used_pages(), "same cached pages");
+    assert!(exact.used_pages() > 0);
+    assert!(
+        polar.memory_bytes() * 4 <= exact.memory_bytes(),
+        "polar cache residency ≥4x under exact: {} vs {}",
+        polar.memory_bytes(),
+        exact.memory_bytes()
+    );
+    // The exact pool is the only one at reference width.
+    for method in PAGE_CODEC_METHODS.iter().filter(|m| **m != "exact") {
+        let p = pools.pool(method).unwrap();
+        assert!(
+            p.memory_bytes() < exact.memory_bytes(),
+            "{method} must not report exact-width residency"
+        );
+        assert!(p.cfg.token_bytes < max_slot_bytes(&cfg));
+    }
+}

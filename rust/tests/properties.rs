@@ -3,7 +3,9 @@
 //! several hundred random cases each, all seeded and deterministic.
 
 use polarquant::kvcache::paged::{PagedConfig, PagedPool};
+use polarquant::kvcache::pools::PoolSet;
 use polarquant::math::linalg::norm2;
+use polarquant::model::config::ModelConfig;
 use polarquant::math::rotation::{PreconditionKind, Rotation};
 use polarquant::polar::codebook::Codebook;
 use polarquant::polar::distribution::AngleDistribution;
@@ -191,6 +193,144 @@ fn prop_paged_pool_consistency() {
             pool.release(seq).unwrap();
         }
         assert_eq!(pool.free_pages(), pages, "trial {trial}: pool must drain");
+    }
+}
+
+/// Property: two codec-sized pools of different slot widths (exact f32
+/// vs polarquant) never alias each other's data, and per-pool byte
+/// accounting holds at every step, under arbitrary interleavings of
+/// `register_with_prefix` / `append_token` / `retain_page` /
+/// `release_page` / `release` across both pools — the prefix-cache op
+/// mix over the new pool-per-codec geometry.
+#[test]
+fn prop_sized_pools_never_alias_and_account_exactly() {
+    let methods = ["exact", "polarquant-r-offline"];
+    let mut rng = Pcg64::new(1007);
+    for trial in 0..25 {
+        let cfg = ModelConfig::test();
+        let pool_tokens = 4 * (8 + rng.next_below(24) as usize);
+        let mut pools = PoolSet::for_model(&cfg, 4, pool_tokens);
+        let widths: Vec<usize> = methods
+            .iter()
+            .map(|m| pools.token_bytes_for(m))
+            .collect();
+        assert!(widths[0] >= 4 * widths[1], "size classes must differ");
+        // Per-method live sequences and cache-style retained pages.
+        let mut live: Vec<Vec<u64>> = vec![Vec::new(), Vec::new()];
+        let mut retained: Vec<Vec<u32>> = vec![Vec::new(), Vec::new()];
+        // Sentinel writes: (method idx, seq, token) → byte value.
+        let mut written: Vec<(usize, u64, usize, u8)> = Vec::new();
+        let mut next_seq = 0u64;
+        for op in 0..250 {
+            let mi = rng.next_below(2) as usize;
+            let method = methods[mi];
+            match rng.next_below(5) {
+                0 => {
+                    // Register, sharing a prefix of a live same-method
+                    // sequence when possible (zero-copy head).
+                    let tokens = 4 + rng.next_below(16) as usize;
+                    let shared: Vec<u32> = if let Some(&src) = live[mi].first() {
+                        let pool = pools.pool_mut(method);
+                        let t = pool.table(src).unwrap();
+                        let n = (t.pages.len().saturating_sub(1))
+                            .min(pool.pages_for(tokens).saturating_sub(1));
+                        t.pages[..n].to_vec()
+                    } else {
+                        Vec::new()
+                    };
+                    next_seq += 1;
+                    let pool = pools.pool_mut(method);
+                    if pool
+                        .register_with_prefix(next_seq, &shared, tokens)
+                        .is_ok()
+                    {
+                        live[mi].push(next_seq);
+                        // Stamp a sentinel into the first private token
+                        // slot (past the shared head).
+                        let t0 = shared.len() * 4;
+                        if let Some(slot) = pool.token_slot_mut(next_seq, t0) {
+                            let v = (op as u8).wrapping_mul(31).wrapping_add(mi as u8);
+                            slot.fill(v);
+                            written.retain(|&(m, s, t, _)| {
+                                !(m == mi && s == next_seq && t == t0)
+                            });
+                            written.push((mi, next_seq, t0, v));
+                        }
+                    }
+                }
+                1 => {
+                    if !live[mi].is_empty() {
+                        let i = rng.next_below(live[mi].len() as u64) as usize;
+                        let seq = live[mi].swap_remove(i);
+                        pools.pool_mut(method).release(seq).unwrap();
+                        written.retain(|&(m, s, _, _)| !(m == mi && s == seq));
+                    }
+                }
+                2 => {
+                    if !live[mi].is_empty() {
+                        let i = rng.next_below(live[mi].len() as u64) as usize;
+                        let seq = live[mi][i];
+                        let _ = pools.pool_mut(method).append_token(seq);
+                    }
+                }
+                3 => {
+                    // Cache-style pin: retain the first page of a live
+                    // sequence.
+                    if let Some(&seq) = live[mi].last() {
+                        let pool = pools.pool_mut(method);
+                        let pg = pool.table(seq).unwrap().pages[0];
+                        pool.retain_page(pg).unwrap();
+                        retained[mi].push(pg);
+                    }
+                }
+                _ => {
+                    if !retained[mi].is_empty() {
+                        let i = rng.next_below(retained[mi].len() as u64) as usize;
+                        let pg = retained[mi].swap_remove(i);
+                        pools.pool_mut(method).release_page(pg).unwrap();
+                    }
+                }
+            }
+            // Invariants at EVERY step, per pool: bytes == live pages ×
+            // this pool's own page size; used + free == capacity.
+            let mut total = 0usize;
+            for (_, pool) in pools.iter() {
+                assert_eq!(
+                    pool.memory_bytes(),
+                    pool.live_pages().len() * pool.page_bytes(),
+                    "trial {trial} op {op}"
+                );
+                assert_eq!(
+                    pool.used_pages() + pool.free_pages(),
+                    pool.cfg.num_pages,
+                    "trial {trial} op {op}"
+                );
+                total += pool.memory_bytes();
+            }
+            assert_eq!(pools.memory_bytes(), total);
+            // No aliasing: every sentinel readable and intact — a write
+            // through one pool/sequence never bleeds into another.
+            for &(m, s, t, v) in &written {
+                let pool = pools.pool(methods[m]).unwrap();
+                let slot = pool.token_slot(s, t).expect("sentinel slot live");
+                assert!(
+                    slot.iter().all(|&b| b == v),
+                    "trial {trial} op {op}: sentinel clobbered in {} seq {s}",
+                    methods[m]
+                );
+                assert_eq!(slot.len(), pool.cfg.token_bytes);
+            }
+        }
+        // Drain: releasing everything returns both pools to empty.
+        for (mi, method) in methods.iter().enumerate() {
+            for seq in live[mi].drain(..) {
+                pools.pool_mut(method).release(seq).unwrap();
+            }
+            for pg in retained[mi].drain(..) {
+                pools.pool_mut(method).release_page(pg).unwrap();
+            }
+        }
+        assert_eq!(pools.memory_bytes(), 0, "trial {trial}: pools must drain");
     }
 }
 
