@@ -41,6 +41,18 @@ pub struct Metrics {
     /// yields the achieved bits/coordinate and the compression ratio vs
     /// the exact-f32 reference in the snapshot.
     pub kv_resident_coords: AtomicU64,
+    /// Tiered KV store counters: pages demoted to the disk tier,
+    /// promoted back on radix hits, admission time spent reading
+    /// spilled pages, and spilled pages discarded without promotion
+    /// (the only true losses under the tier).
+    pub tier_demoted_pages: AtomicU64,
+    pub tier_promoted_pages: AtomicU64,
+    pub tier_promote_stall_us: AtomicU64,
+    pub tier_true_evictions: AtomicU64,
+    /// Gauges: the two tiers' footprints (RAM = encoded-KV pool
+    /// occupancy, disk = live spilled extents), across all workers.
+    pub tier_ram_bytes: AtomicU64,
+    pub tier_disk_bytes: AtomicU64,
     lat: Mutex<Latencies>,
     started: Instant,
 }
@@ -48,6 +60,16 @@ pub struct Metrics {
 impl Default for Metrics {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Apply a per-worker gauge delta: workers report absolute values plus
+/// their previous contribution, and the hub moves by the difference.
+fn gauge_delta(gauge: &AtomicU64, now: u64, was: u64) {
+    if now >= was {
+        gauge.fetch_add(now - was, Ordering::Relaxed);
+    } else {
+        gauge.fetch_sub(was - now, Ordering::Relaxed);
     }
 }
 
@@ -68,24 +90,41 @@ impl Metrics {
             prefix_cached_pages: AtomicU64::new(0),
             kv_resident_bytes: AtomicU64::new(0),
             kv_resident_coords: AtomicU64::new(0),
+            tier_demoted_pages: AtomicU64::new(0),
+            tier_promoted_pages: AtomicU64::new(0),
+            tier_promote_stall_us: AtomicU64::new(0),
+            tier_true_evictions: AtomicU64::new(0),
+            tier_ram_bytes: AtomicU64::new(0),
+            tier_disk_bytes: AtomicU64::new(0),
             lat: Mutex::new(Latencies::default()),
             started: Instant::now(),
         }
+    }
+
+    /// Fold one worker's drained tier events into the hub. The byte
+    /// gauges follow the per-worker delta protocol of the other gauges;
+    /// the rest are cumulative counters.
+    pub fn record_tier_events(
+        &self,
+        ev: &crate::coordinator::scheduler::TierEvents,
+        prev: (u64, u64),
+    ) {
+        self.tier_demoted_pages.fetch_add(ev.demoted_pages, Ordering::Relaxed);
+        self.tier_promoted_pages.fetch_add(ev.promoted_pages, Ordering::Relaxed);
+        self.tier_promote_stall_us
+            .fetch_add(ev.promote_stall_us, Ordering::Relaxed);
+        self.tier_true_evictions
+            .fetch_add(ev.true_evictions, Ordering::Relaxed);
+        gauge_delta(&self.tier_ram_bytes, ev.ram_bytes as u64, prev.0);
+        gauge_delta(&self.tier_disk_bytes, ev.disk_bytes as u64, prev.1);
     }
 
     /// Fold one worker's resident-KV gauge into the hub. Like
     /// `cached_pages`, residency is a per-worker gauge, so the caller
     /// passes its previous contribution and we apply the delta.
     pub fn record_kv_residency(&self, bytes: u64, coords: u64, prev: (u64, u64)) {
-        let delta = |gauge: &AtomicU64, now: u64, was: u64| {
-            if now >= was {
-                gauge.fetch_add(now - was, Ordering::Relaxed);
-            } else {
-                gauge.fetch_sub(was - now, Ordering::Relaxed);
-            }
-        };
-        delta(&self.kv_resident_bytes, bytes, prev.0);
-        delta(&self.kv_resident_coords, coords, prev.1);
+        gauge_delta(&self.kv_resident_bytes, bytes, prev.0);
+        gauge_delta(&self.kv_resident_coords, coords, prev.1);
     }
 
     /// Fold one worker's drained prefix-cache events into the hub.
@@ -212,6 +251,17 @@ impl Metrics {
                     ),
                 ])
             }),
+            ("kv_tier", {
+                let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+                Json::from_pairs(vec![
+                    ("ram_bytes", Json::num(load(&self.tier_ram_bytes))),
+                    ("disk_bytes", Json::num(load(&self.tier_disk_bytes))),
+                    ("demoted_pages", Json::num(load(&self.tier_demoted_pages))),
+                    ("promoted_pages", Json::num(load(&self.tier_promoted_pages))),
+                    ("promote_stall_us", Json::num(load(&self.tier_promote_stall_us))),
+                    ("true_evictions", Json::num(load(&self.tier_true_evictions))),
+                ])
+            }),
             ("ttft", pct(&lat.ttft)),
             ("total", pct(&lat.total)),
             ("prefill", pct(&lat.prefill)),
@@ -290,6 +340,43 @@ mod tests {
             parsed.path("prefix_cache.cached_pages").unwrap().as_f64().unwrap(),
             9.0
         );
+    }
+
+    #[test]
+    fn tier_events_aggregate_with_gauge_deltas() {
+        use crate::coordinator::scheduler::TierEvents;
+        let m = Metrics::new();
+        m.record_tier_events(
+            &TierEvents {
+                demoted_pages: 6,
+                promoted_pages: 2,
+                promote_stall_us: 120,
+                true_evictions: 1,
+                ram_bytes: 4096,
+                disk_bytes: 2048,
+            },
+            (0, 0),
+        );
+        // Same worker reports again: counters add, gauges move by delta.
+        m.record_tier_events(
+            &TierEvents {
+                demoted_pages: 0,
+                promoted_pages: 4,
+                promote_stall_us: 30,
+                true_evictions: 0,
+                ram_bytes: 8192,
+                disk_bytes: 0,
+            },
+            (4096, 2048),
+        );
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        let get = |k: &str| parsed.path(&format!("kv_tier.{k}")).unwrap().as_f64().unwrap();
+        assert_eq!(get("demoted_pages"), 6.0);
+        assert_eq!(get("promoted_pages"), 6.0);
+        assert_eq!(get("promote_stall_us"), 150.0);
+        assert_eq!(get("true_evictions"), 1.0);
+        assert_eq!(get("ram_bytes"), 8192.0);
+        assert_eq!(get("disk_bytes"), 0.0);
     }
 
     #[test]

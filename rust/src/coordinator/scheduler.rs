@@ -18,9 +18,11 @@
 
 use crate::coordinator::request::{GenRequest, GenResponse, Timing, Tracked};
 use crate::kvcache::codec::is_page_codec;
+use crate::kvcache::paged::PagedPool;
 use crate::kvcache::pools::{share_pools, PoolSet, SharedPools};
+use crate::kvcache::tier::{TierManager, TierStats};
 use crate::prefix::{NodeId, PrefixCacheSet, PrefixMatch};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
 /// One active sequence's scheduler state.
@@ -110,6 +112,22 @@ pub struct PrefixEvents {
     pub cached_pages: usize,
 }
 
+/// Disk-tier activity since the last [`Scheduler::take_tier_events`]
+/// drain, for the metrics hub's `kv_tier` block.
+#[derive(Clone, Debug, Default)]
+pub struct TierEvents {
+    pub demoted_pages: u64,
+    pub promoted_pages: u64,
+    /// Time admission spent reading spilled pages back into RAM.
+    pub promote_stall_us: u64,
+    /// Spilled pages discarded without promotion (reusable KV lost).
+    pub true_evictions: u64,
+    /// Absolute gauge: resident encoded-KV bytes across the pools.
+    pub ram_bytes: usize,
+    /// Absolute gauge: live spilled bytes across the segment files.
+    pub disk_bytes: usize,
+}
+
 /// Scheduler outcome of one `step`.
 #[derive(Debug, Default)]
 pub struct StepOutcome {
@@ -131,8 +149,17 @@ pub struct Scheduler {
     pub max_active: usize,
     /// Optional per-codec radix-tree prefix caches over the pools' pages.
     pub prefix: Option<PrefixCacheSet>,
+    /// Optional disk tier under the prefix cache: cold unpinned leaves
+    /// demote their pages into per-codec segment files under RAM
+    /// pressure and promote back on a radix match, so eviction only
+    /// truly drops KV once the disk budget is exhausted too.
+    pub tier: Option<TierManager>,
     events: PrefixEvents,
     reported_evictions: u64,
+    /// Promotion wall time accumulated since the last tier-events drain.
+    pending_promote_stall_us: u64,
+    /// Tier counters already reported (drains are deltas).
+    reported_tier: TierStats,
 }
 
 impl Scheduler {
@@ -148,9 +175,19 @@ impl Scheduler {
             pools,
             max_active,
             prefix: None,
+            tier: None,
             events: PrefixEvents::default(),
             reported_evictions: 0,
+            pending_promote_stall_us: 0,
+            reported_tier: TierStats::default(),
         }
+    }
+
+    /// Attach the disk spill tier (requires the prefix cache — the tier
+    /// stores spilled radix leaves, nothing else).
+    pub fn set_tier(&mut self, tier: TierManager) {
+        debug_assert!(self.prefix.is_some(), "tier spills prefix-cache leaves");
+        self.tier = Some(tier);
     }
 
     /// A scheduler with the radix-tree prefix cache enabled; the cache
@@ -180,29 +217,101 @@ impl Scheduler {
     /// [`gate_request`](Self::gate_request) to also credit prefix hits
     /// and evict cold cache entries to make the room.
     pub fn can_admit(&self, prompt_len: usize, max_new: usize, method: &str) -> bool {
-        self.active.len() < self.max_active
-            && self
-                .pools
-                .lock()
-                .unwrap()
-                .pool_mut(method)
-                .can_admit(prompt_len + max_new)
+        if self.active.len() >= self.max_active {
+            return false;
+        }
+        let mut pools = self.pools.lock().unwrap();
+        let page_bytes = pools.page_bytes_for(method);
+        let pool = pools.pool_mut(method);
+        let tokens = prompt_len + max_new;
+        let fits_pages = pool.can_admit(tokens);
+        let bytes = pool.pages_for(tokens) * page_bytes;
+        fits_pages && bytes <= pools.byte_headroom()
     }
 
     /// Match the longest cached prefix for a prompt and pin it. Prefixes
     /// are codec-keyed: only page-codec methods can share pages, since
-    /// the pages hold that codec's encoded bytes.
+    /// the pages hold that codec's encoded bytes. When the match runs
+    /// into spilled nodes and a disk tier is attached, their extents
+    /// are promoted back into fresh pool pages here — before admission
+    /// accounting, so the gate's page arithmetic and everything
+    /// downstream (pinning, sharing, the engine) see plain RAM pages.
     fn match_and_pin(&mut self, method: &str, prompt: &[u32]) -> PrefixMatch {
-        if let Some(pc) = &mut self.prefix {
-            if is_page_codec(method) {
-                let m = pc.match_prefix(method, prompt);
-                if let Some(n) = m.node {
-                    pc.pin(method, n);
+        let Some(pc) = &mut self.prefix else {
+            return PrefixMatch::default();
+        };
+        if !is_page_codec(method) {
+            return PrefixMatch::default();
+        }
+        let mut m = pc.match_prefix(method, prompt);
+        // Pin first: the pinned deepest node protects the whole matched
+        // path (ancestors are inner nodes, never demotion/eviction
+        // victims), so room-making below cannot cannibalize this match.
+        if let Some(n) = m.node {
+            pc.pin(method, n);
+        }
+        let Some(tier) = self.tier.as_mut() else {
+            return m;
+        };
+        if m.disk.is_empty() {
+            return m;
+        }
+        let t0 = Instant::now();
+        let mut promoted = 0usize;
+        {
+            let mut pools = self.pools.lock().unwrap();
+            let page_bytes = pools.page_bytes_for(method);
+            'promote: for id in m.disk.clone() {
+                // Make room for the extents if the pool is tight — in
+                // free pages AND under the global byte cap (promoted
+                // pages are resident bytes like any others): demote
+                // colder leaves of this same tree first (cold out,
+                // warm in — demotion frees both pages and cap bytes).
+                let need = pc.node_page_count(method, id);
+                loop {
+                    let fits = pools.pool_mut(method).free_pages() >= need
+                        && pools.byte_headroom() >= need * page_bytes;
+                    if fits {
+                        break;
+                    }
+                    let pool = pools.pool_mut(method);
+                    let Some((_, victim)) = pc.coldest_demotable(method, pool) else {
+                        break 'promote;
+                    };
+                    if Self::demote_whole(pc, tier, method, pool, victim).is_none() {
+                        break 'promote;
+                    }
                 }
-                return m;
+                let pool = pools.pool_mut(method);
+                match pc.promote_node(method, id, pool, &mut |e, buf| {
+                    tier.promote_page(method, e, buf)
+                }) {
+                    Some(exts) => {
+                        promoted += exts.len();
+                        for e in exts {
+                            tier.free_promoted(method, e);
+                        }
+                    }
+                    // Read failure (or a raced node): truncate to the
+                    // RAM head promoted so far.
+                    None => break 'promote,
+                }
             }
         }
-        PrefixMatch::default()
+        self.pending_promote_stall_us += t0.elapsed().as_micros() as u64;
+        if promoted > 0 {
+            // Re-match over the now-RAM path; move the pin to the
+            // (at least as deep) re-matched node.
+            let m2 = pc.match_prefix(method, prompt);
+            if let Some(n2) = m2.node {
+                pc.pin(method, n2);
+            }
+            if let Some(n) = m.node {
+                pc.unpin(method, n);
+            }
+            m = m2;
+        }
+        m
     }
 
     /// Gate one request for admission: make room for it in its method's
@@ -227,25 +336,50 @@ impl Scheduler {
         // Credit the longest cached prefix: matched pages are shared into
         // the block table, not allocated — and pinning them here keeps
         // later gate evictions (and earlier admits' budget trims) from
-        // destroying the very entry this request is about to hit.
+        // destroying the very entry this request is about to hit. With a
+        // disk tier attached the match also promotes spilled pages back
+        // into RAM, so promotable entries count exactly like resident
+        // ones.
         let m = self.match_and_pin(method, prompt);
         let epoch = self.prefix.as_ref().map(|pc| pc.epoch()).unwrap_or(0);
         let fits = {
             let mut pools = self.pools.lock().unwrap();
             let key = pools.pool_key(method);
-            let pool = pools.pool_mut(method);
-            let need = pool.pages_for(prompt.len() + max_new);
-            let fresh = need.saturating_sub(m.pages.len());
-            let want = fresh + pending.get(&key).copied().unwrap_or(0);
-            if want > pool.free_pages() {
+            // Price the whole batch's pending demand in bytes for the
+            // global cap, each pool at its own page width.
+            let pending_bytes: usize = pending
+                .iter()
+                .map(|(k, &n)| n * pools.page_bytes_for(k))
+                .sum();
+            let page_bytes = pools.page_bytes_for(method);
+            let (fresh, want) = {
+                let pool = pools.pool_mut(method);
+                let need = pool.pages_for(prompt.len() + max_new);
+                let fresh = need.saturating_sub(m.pages.len());
+                let want = fresh + pending.get(&key).copied().unwrap_or(0);
+                if want > pool.free_pages() {
+                    if let Some(pc) = &mut self.prefix {
+                        // Demotion first (nothing is lost), then the
+                        // all-or-nothing eviction fallback: a request
+                        // the cache cannot make room for must not
+                        // destroy reusable entries while failing.
+                        let short = want - pool.free_pages();
+                        Self::make_room_tiered(pc, &mut self.tier, method, pool, short);
+                    }
+                }
+                (fresh, want)
+            };
+            // Global cross-pool byte cap: fresh pages here plus every
+            // pool's pending pages must fit the resident-byte headroom.
+            let bytes_need = fresh * page_bytes + pending_bytes;
+            if bytes_need > pools.byte_headroom() {
                 if let Some(pc) = &mut self.prefix {
-                    // All-or-nothing: a request the cache cannot make room
-                    // for must not destroy reusable entries while failing.
-                    let short = want - pool.free_pages();
-                    pc.make_room(method, pool, short);
+                    let short = bytes_need - pools.byte_headroom();
+                    Self::reclaim_resident_bytes(pc, &mut self.tier, &mut pools, short);
                 }
             }
-            if want <= pool.free_pages() {
+            let ok_bytes = bytes_need <= pools.byte_headroom();
+            if ok_bytes && want <= pools.pool_mut(method).free_pages() {
                 Some((fresh, key))
             } else {
                 None
@@ -288,6 +422,7 @@ impl Scheduler {
             let m = self.match_and_pin(&t.req.method, &t.req.prompt);
             n += self.admit_one(t, m, engine);
         }
+        self.run_demotion();
         n
     }
 
@@ -323,6 +458,9 @@ impl Scheduler {
             };
             n += self.admit_one(t, m, engine);
         }
+        // Admission is when pools gain pages: drain any that crossed
+        // their high-water occupancy back down by demoting cold leaves.
+        self.run_demotion();
         n
     }
 
@@ -346,7 +484,7 @@ impl Scheduler {
             if fresh_needed > pool.free_pages() {
                 if let Some(pc) = &mut self.prefix {
                     let short = fresh_needed - pool.free_pages();
-                    pc.make_room(&t.req.method, pool, short);
+                    Self::make_room_tiered(pc, &mut self.tier, &t.req.method, pool, short);
                 }
             }
             pool.register_with_prefix(t.req.id, &m.pages, total).is_ok()
@@ -413,6 +551,216 @@ impl Scheduler {
             req: t.req,
         });
         1
+    }
+
+    /// Tier-aware make-room in `method`'s pool: demote this tree's
+    /// coldest leaves to the disk tier first (nothing is lost), then
+    /// fall back to the classic all-or-nothing eviction for whatever
+    /// remains — true drops happen only when the tier is absent or its
+    /// disk budget exhausted. Extents surrendered by fallback evictions
+    /// of spilled nodes are freed in the tier store before returning.
+    fn make_room_tiered(
+        pc: &mut PrefixCacheSet,
+        tier: &mut Option<TierManager>,
+        method: &str,
+        pool: &mut PagedPool,
+        pages_needed: usize,
+    ) -> bool {
+        if pages_needed == 0 {
+            return true;
+        }
+        let mut freed = 0usize;
+        if let Some(t) = tier.as_mut() {
+            while freed < pages_needed {
+                let Some((_, id)) = pc.coldest_demotable(method, pool) else {
+                    break;
+                };
+                match Self::demote_whole(pc, t, method, pool, id) {
+                    Some(n) => freed += n,
+                    None => break, // disk budget exhausted
+                }
+            }
+        }
+        let ok = freed >= pages_needed || pc.make_room(method, pool, pages_needed - freed);
+        if let Some(t) = tier.as_mut() {
+            for e in pc.take_dropped_extents(method) {
+                t.discard(method, e);
+            }
+        }
+        ok
+    }
+
+    /// Globally coldest demotable leaf across every tree under the
+    /// set's shared clock. Returns `(method, node)`.
+    fn global_coldest_demotable(
+        pc: &PrefixCacheSet,
+        pools: &PoolSet,
+    ) -> Option<(String, NodeId)> {
+        let mut best: Option<(u64, String, NodeId)> = None;
+        for method in pc.tree_methods() {
+            let cand = pools.pool(&method).and_then(|p| pc.coldest_demotable(&method, p));
+            if let Some((touch, id)) = cand {
+                if best.as_ref().map_or(true, |(t, _, _)| touch < *t) {
+                    best = Some((touch, method, id));
+                }
+            }
+        }
+        best.map(|(_, m, id)| (m, id))
+    }
+
+    /// Demote leaf `id` only when the disk budget can take the whole
+    /// leaf: a partial spill rolls back (the node keeps its RAM pages)
+    /// and its orphaned extents would then be discarded, misreporting
+    /// `true_evictions` for KV that was never lost.
+    fn demote_whole(
+        pc: &mut PrefixCacheSet,
+        tier: &mut TierManager,
+        method: &str,
+        pool: &mut PagedPool,
+        id: NodeId,
+    ) -> Option<usize> {
+        let bytes = pc.node_page_count(method, id) * pool.page_bytes();
+        if !tier.has_room(bytes) {
+            return None;
+        }
+        pc.demote_node(method, id, pool, &mut |b| tier.spill_page(method, b))
+    }
+
+    /// Free at least `bytes_needed` resident pool bytes for the global
+    /// byte cap by demoting (tier attached) then evicting the globally
+    /// coldest cache leaves across every tree — the shared clock makes
+    /// cross-codec coldness exact. Best effort; eviction is must-free
+    /// (victims whose pages are all shared with active sequences are
+    /// skipped — destroying them would reclaim nothing).
+    fn reclaim_resident_bytes(
+        pc: &mut PrefixCacheSet,
+        tier: &mut Option<TierManager>,
+        pools: &mut PoolSet,
+        bytes_needed: usize,
+    ) {
+        let mut freed = 0usize;
+        if let Some(t) = tier.as_mut() {
+            while freed < bytes_needed {
+                let Some((method, id)) = Self::global_coldest_demotable(pc, pools) else {
+                    break;
+                };
+                let pool = pools.pool_mut(&method);
+                let pb = pool.page_bytes();
+                match Self::demote_whole(pc, t, &method, pool, id) {
+                    Some(n) => freed += n * pb,
+                    None => break,
+                }
+            }
+        }
+        while freed < bytes_needed {
+            // Trees ordered coldest-first by their LRU evictable leaf;
+            // take the first one whose eviction actually frees pages.
+            let mut order: Vec<(u64, String)> = pc
+                .tree_methods()
+                .into_iter()
+                .filter_map(|m| pc.coldest_evictable(&m).map(|(touch, _)| (touch, m)))
+                .collect();
+            order.sort();
+            let mut progressed = false;
+            for (_, method) in order {
+                let pool = pools.pool_mut(&method);
+                let pb = pool.page_bytes();
+                let n = pc.evict_lru(&method, pool, 1);
+                if n > 0 {
+                    freed += n * pb;
+                    progressed = true;
+                    break;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        if let Some(t) = tier.as_mut() {
+            for method in pc.tree_methods() {
+                for e in pc.take_dropped_extents(&method) {
+                    t.discard(&method, e);
+                }
+            }
+        }
+    }
+
+    /// Watermark-driven demotion, run after every admission round: for
+    /// each per-codec pool above the tier's high-water occupancy,
+    /// demote the globally coldest demotable leaves (shared-clock order
+    /// across trees) until the pool drains to the low-water mark or no
+    /// victim remains. No-op without a tier. Public so benches and
+    /// tests can force a demotion pass at a known point.
+    pub fn run_demotion(&mut self) {
+        let (Some(pc), Some(tier)) = (&mut self.prefix, &mut self.tier) else {
+            return;
+        };
+        let (high, low) = (tier.cfg().high_water, tier.cfg().low_water);
+        let mut pools = self.pools.lock().unwrap();
+        // Hysteresis: pools over HIGH enter the draining set and demote
+        // down to LOW.
+        let mut draining: BTreeSet<String> = pc
+            .tree_methods()
+            .into_iter()
+            .filter(|m| {
+                pools.pool(m).map_or(false, |p| p.occupancy_fraction() > high)
+            })
+            .collect();
+        while !draining.is_empty() {
+            // Among draining pools, demote the globally coldest victim.
+            let mut best: Option<(u64, String, NodeId)> = None;
+            for method in draining.clone() {
+                let pool = pools.pool(&method).expect("draining pool exists");
+                if pool.occupancy_fraction() <= low {
+                    draining.remove(&method);
+                    continue;
+                }
+                match pc.coldest_demotable(&method, pool) {
+                    Some((touch, id)) => {
+                        if best.as_ref().map_or(true, |(t, _, _)| touch < *t) {
+                            best = Some((touch, method, id));
+                        }
+                    }
+                    None => {
+                        // Nothing left to demote here (active/pinned
+                        // pages can hold occupancy above the mark).
+                        draining.remove(&method);
+                    }
+                }
+            }
+            let Some((_, method, id)) = best else { break };
+            let pool = pools.pool_mut(&method);
+            if Self::demote_whole(pc, tier, &method, pool, id).is_none() {
+                break; // disk budget exhausted
+            }
+        }
+    }
+
+    /// Drain disk-tier activity since the last call (for metrics).
+    /// Also reclaims extents surrendered by budget evictions of spilled
+    /// nodes (the one eviction path that runs without tier access).
+    pub fn take_tier_events(&mut self) -> TierEvents {
+        let mut ev = TierEvents {
+            promote_stall_us: std::mem::take(&mut self.pending_promote_stall_us),
+            ..TierEvents::default()
+        };
+        if let (Some(pc), Some(t)) = (&mut self.prefix, &mut self.tier) {
+            for method in pc.tree_methods() {
+                for e in pc.take_dropped_extents(&method) {
+                    t.discard(&method, e);
+                }
+            }
+        }
+        if let Some(t) = &self.tier {
+            let s = t.stats().clone();
+            ev.demoted_pages = s.demoted_pages - self.reported_tier.demoted_pages;
+            ev.promoted_pages = s.promoted_pages - self.reported_tier.promoted_pages;
+            ev.true_evictions = s.true_evictions - self.reported_tier.true_evictions;
+            self.reported_tier = s;
+            ev.disk_bytes = t.disk_bytes();
+        }
+        ev.ram_bytes = self.pools.lock().unwrap().occupancy().0;
+        ev
     }
 
     /// Drain prefix-cache activity since the last call (for metrics).
@@ -891,6 +1239,133 @@ mod tests {
         drop(pools);
         run_to_completion(&mut s, &mut e);
         assert_eq!(s.pools.lock().unwrap().memory_bytes(), 0);
+    }
+
+    #[test]
+    fn global_byte_cap_gates_admission_across_pools() {
+        use crate::model::config::ModelConfig;
+        let cfg = ModelConfig::test();
+        let mut set = PoolSet::for_model(&cfg, 4, 256);
+        let exact_page = set.page_bytes_for("exact");
+        let polar_page = set.page_bytes_for(M);
+        // Cap: two exact pages + one polar page, total across pools.
+        set.set_byte_cap(Some(2 * exact_page + polar_page));
+        let mut s = Scheduler::new(set, 8);
+        let g1 = s
+            .gate_request(&[1; 8], 0, "exact", 0, &PendingPages::new())
+            .expect("2 exact pages fit the cap");
+        assert_eq!(g1.pages, 2);
+        let mut pending = PendingPages::new();
+        pending.insert(g1.pool_key.clone(), g1.pages);
+        // Each pool has plenty of free PAGES — only the global byte cap
+        // can reject, and it prices pending demand per-codec.
+        assert!(
+            s.gate_request(&[2; 8], 0, "exact", 1, &pending).is_none(),
+            "2 more exact pages would overshoot the byte cap"
+        );
+        let g2 = s
+            .gate_request(&[3; 4], 0, M, 1, &pending)
+            .expect("one narrow polar page still fits");
+        assert_eq!(g2.pages, 1);
+        // Uncapped control: the identical second exact gate passes.
+        let set = PoolSet::for_model(&cfg, 4, 256);
+        let mut s2 = Scheduler::new(set, 8);
+        let g = s2.gate_request(&[1; 8], 0, "exact", 0, &PendingPages::new()).unwrap();
+        let mut pending = PendingPages::new();
+        pending.insert(g.pool_key.clone(), g.pages);
+        assert!(s2.gate_request(&[2; 8], 0, "exact", 1, &pending).is_some());
+    }
+
+    #[test]
+    fn byte_cap_counts_resident_bytes_after_admission() {
+        use crate::model::config::ModelConfig;
+        let cfg = ModelConfig::test();
+        let mut set = PoolSet::for_model(&cfg, 4, 256);
+        let exact_page = set.page_bytes_for("exact");
+        set.set_byte_cap(Some(3 * exact_page));
+        let mut s = Scheduler::new(set, 8);
+        let mut e = MockEngine::default();
+        let mk = |id: u64| {
+            let mut r = GenRequest::new(id, vec![3; 8], 4);
+            r.method = "exact".into();
+            Tracked::new(r)
+        };
+        assert!(s.can_admit(8, 4, "exact"), "3 pages fit a 3-page cap");
+        s.admit(vec![mk(1)], &mut e);
+        assert!(!s.can_admit(8, 4, "exact"), "resident bytes consumed the cap");
+        assert!(s.gate_request(&[9; 8], 4, "exact", 0, &PendingPages::new()).is_none());
+        run_to_completion(&mut s, &mut e);
+        assert!(s.can_admit(8, 4, "exact"), "cap headroom returns with the pages");
+    }
+
+    #[test]
+    fn gate_demotes_to_disk_and_promotes_on_rematch() {
+        use crate::kvcache::tier::{temp_spill_dir, TierConfig, TierManager};
+        let mut s = sched_prefix(8, 4, 100);
+        s.set_tier(
+            TierManager::new(TierConfig::new(temp_spill_dir("sched-gate"))).unwrap(),
+        );
+        let mut e = MockEngine::default();
+        let hot: Vec<u32> = vec![1; 16];
+        s.admit(vec![tracked_prompt(1, hot.clone(), 4)], &mut e); // 5 pages
+        run_to_completion(&mut s, &mut e);
+        // A stranger needing all 5 pages: the cold entry is DEMOTED for
+        // room, not destroyed.
+        let g = gate(&mut s, &[2u32; 16], 4, 0, 0).expect("room made by demotion");
+        assert_eq!(g.pages, 5);
+        s.release_gate(g);
+        {
+            let pc = s.prefix.as_mut().unwrap();
+            let m = pc.match_prefix(M, &hot);
+            assert_eq!(m.tokens, 0, "RAM head gone");
+            assert_eq!(m.disk_tokens, 16, "entry preserved on disk");
+        }
+        let ev = s.take_tier_events();
+        assert_eq!(ev.demoted_pages, 4);
+        assert_eq!(ev.true_evictions, 0);
+        assert!(ev.disk_bytes > 0);
+        // Gating the hot prompt again promotes the spilled pages and
+        // credits them exactly like a RAM-warm hit.
+        let g = gate(&mut s, &hot, 4, 0, 0).expect("promoted and credited");
+        assert_eq!(g.m.tokens, 16, "served from promoted pages");
+        assert_eq!(g.pages, 1, "5 needed minus 4 promoted");
+        s.release_gate(g);
+        let ev = s.take_tier_events();
+        assert_eq!(ev.promoted_pages, 4);
+        assert_eq!(ev.disk_bytes, 0, "extents freed after promotion");
+        assert_eq!(s.prefix.as_mut().unwrap().match_prefix(M, &hot).tokens, 16);
+    }
+
+    #[test]
+    fn watermark_demotion_drains_pools_to_low_water() {
+        use crate::kvcache::tier::{temp_spill_dir, TierConfig, TierManager};
+        // 16 pages; demote above 50% occupancy down to 25%.
+        let mut s = sched_prefix(16, 4, 1000);
+        let mut cfg = TierConfig::new(temp_spill_dir("sched-watermark"));
+        cfg.high_water = 0.5;
+        cfg.low_water = 0.25;
+        s.set_tier(TierManager::new(cfg).unwrap());
+        let mut e = MockEngine::default();
+        // Four retired prompts × 2 cached pages = 8 pages (50%); the
+        // fifth admission pushes past high water and `admit` runs the
+        // demotion pass afterwards.
+        for i in 0..5u64 {
+            s.admit(vec![tracked_prompt(i + 1, vec![i as u32 + 1; 8], 4)], &mut e);
+            run_to_completion(&mut s, &mut e);
+        }
+        s.run_demotion();
+        let used = s.pools.lock().unwrap().pool(M).unwrap().used_pages();
+        assert!(used <= 8, "occupancy back under the high-water mark: {used}");
+        assert!(used <= 4, "drained to the low-water mark: {used}");
+        let ev = s.take_tier_events();
+        assert!(ev.demoted_pages >= 6, "cold leaves spilled: {}", ev.demoted_pages);
+        assert_eq!(ev.true_evictions, 0, "nothing was lost");
+        // Every demoted prompt is still promotable.
+        let pc = s.prefix.as_mut().unwrap();
+        for i in 0..5u32 {
+            let m = pc.match_prefix(M, &vec![i + 1; 8]);
+            assert_eq!(m.tokens + m.disk_tokens, 8, "prompt {i} still matchable");
+        }
     }
 
     #[test]

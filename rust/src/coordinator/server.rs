@@ -16,6 +16,7 @@ use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{AdmitGate, PendingPages, Scheduler};
 use crate::coordinator::worker::NativeWorker;
 use crate::kvcache::pools::{share_pools, PoolSet};
+use crate::kvcache::tier::{TierConfig, TierManager};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::util::json::Json;
@@ -44,10 +45,31 @@ pub struct ServerConfig {
     /// multi-turn histories skip re-prefill (and keep their quantized
     /// pages resident) across requests on the same worker.
     pub prefix_cache: bool,
+    /// Disk spill tier for cold prefix-cache pages: when set, each
+    /// worker spills demoted pages into per-codec segment files under
+    /// `<spill_dir>/worker-<idx>/` and promotes them back on radix
+    /// hits. `None` = eviction-only (the previous behavior). Requires
+    /// `prefix_cache` — the tier stores spilled radix leaves.
+    pub spill_dir: Option<std::path::PathBuf>,
+    /// Byte budget across one worker's segment files; spills beyond it
+    /// fall back to true eviction.
+    pub disk_budget_bytes: usize,
+    /// Per-codec pool occupancy fraction that triggers demotion after
+    /// an admission round…
+    pub ram_high_water: f64,
+    /// …and the fraction demotion drains each pressured pool down to.
+    pub ram_low_water: f64,
+    /// Global cross-pool resident-byte admission cap per worker
+    /// (`None` = per-pool page budgets only). Bounds what a
+    /// mixed-method burst can keep resident across all codec pools.
+    pub kv_byte_cap: Option<usize>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        // Tier knobs come from TierConfig's own defaults so the two
+        // never diverge (worker_loop copies them back into the tier).
+        let tier = TierConfig::new(std::path::PathBuf::new());
         Self {
             model: ModelConfig::mini(),
             seed: 0,
@@ -56,6 +78,11 @@ impl Default for ServerConfig {
             pool_tokens: 1 << 16,
             max_active: 8,
             prefix_cache: true,
+            spill_dir: None,
+            disk_budget_bytes: tier.disk_budget_bytes,
+            ram_high_water: tier.high_water,
+            ram_low_water: tier.low_water,
+            kv_byte_cap: None,
         }
     }
 }
@@ -180,7 +207,9 @@ fn worker_loop(
     // are per-codec, each with token slots exactly that codec's
     // `slot_bytes()` wide — resident bytes track the method's true
     // encoded width (PolarQuant ≈4 bits/coord vs exact's 32).
-    let pools = share_pools(PoolSet::for_model(&cfg.model, 16, cfg.pool_tokens));
+    let mut pool_set = PoolSet::for_model(&cfg.model, 16, cfg.pool_tokens);
+    pool_set.set_byte_cap(cfg.kv_byte_cap);
+    let pools = share_pools(pool_set);
     let mut engine = NativeWorker::with_pools(weights, Arc::clone(&pools));
     let mut sched = if cfg.prefix_cache {
         // The cache may keep up to half the pool's token capacity at
@@ -193,9 +222,30 @@ fn worker_loop(
     } else {
         Scheduler::from_shared(Arc::clone(&pools), cfg.max_active)
     };
+    if cfg.prefix_cache {
+        if let Some(dir) = &cfg.spill_dir {
+            // Per-pid subdir: two server processes pointed at the same
+            // spill dir must never truncate each other's live segments
+            // (extents carry no checksums — a collision would be
+            // silently-wrong promoted KV, not an error).
+            let sub = format!("pq-{}-worker-{worker_idx}", std::process::id());
+            let mut tier_cfg = TierConfig::new(dir.join(sub));
+            tier_cfg.disk_budget_bytes = cfg.disk_budget_bytes;
+            tier_cfg.high_water = cfg.ram_high_water;
+            tier_cfg.low_water = cfg.ram_low_water;
+            match TierManager::new(tier_cfg) {
+                Ok(t) => sched.set_tier(t),
+                // A worker without its spill dir degrades to
+                // eviction-only instead of dying.
+                Err(e) => eprintln!("worker {worker_idx}: spill tier disabled: {e}"),
+            }
+        }
+    }
     let mut reported_cached_pages = 0usize;
     // Per-worker resident-KV gauge contribution (bytes, coords).
     let mut reported_kv = (0u64, 0u64);
+    // Per-worker tier gauge contribution (ram_bytes, disk_bytes).
+    let mut reported_tier = (0u64, 0u64);
     let coords_per_token = cfg.model.kv_coords_per_token() as u64;
 
     loop {
@@ -283,6 +333,13 @@ fn worker_loop(
         let ev = sched.take_prefix_events();
         metrics.record_prefix_events(&ev, reported_cached_pages);
         reported_cached_pages = ev.cached_pages;
+
+        // Tier activity (demotions from admission watermarks, promote
+        // stalls from gates) folds into the hub the same way; without a
+        // tier this is all zeros except the RAM gauge.
+        let tev = sched.take_tier_events();
+        metrics.record_tier_events(&tev, reported_tier);
+        reported_tier = (tev.ram_bytes as u64, tev.disk_bytes as u64);
 
         // One decode round.
         if !sched.active.is_empty() {
@@ -385,6 +442,7 @@ mod tests {
             pool_tokens: 4096,
             max_active: 4,
             prefix_cache: true,
+            ..Default::default()
         })
     }
 
@@ -430,6 +488,7 @@ mod tests {
             pool_tokens: 64, // tiny pool
             max_active: 4,
             prefix_cache: true,
+            ..Default::default()
         });
         let req = GenRequest::new(0, vec![1; 512], 4);
         let resp = s.generate_blocking(req, Duration::from_secs(30)).expect("reply");
@@ -492,6 +551,53 @@ mod tests {
     }
 
     #[test]
+    fn spill_tier_preserves_prefixes_that_eviction_only_loses() {
+        use crate::kvcache::tier::temp_spill_dir;
+        let run = |spill: bool| {
+            let s = Server::start(ServerConfig {
+                model: ModelConfig::test(),
+                seed: 3,
+                workers: 1,
+                batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+                pool_tokens: 128, // 8 pages of 16 tokens — tight on purpose
+                max_active: 2,
+                prefix_cache: true,
+                spill_dir: spill.then(|| temp_spill_dir("server-e2e")),
+                ..Default::default()
+            });
+            let a: Vec<u32> = (0..48).map(|x| (x * 5 + 2) % 64).collect();
+            let b: Vec<u32> = (0..80).map(|x| (x * 3 + 1) % 64).collect();
+            let r1 = s.generate_blocking(GenRequest::new(0, a.clone(), 4), Duration::from_secs(60)).expect("a cold");
+            assert_eq!(r1.reused_tokens, 0);
+            // B needs more pages than are free: A's cold pages make room
+            // (evicted without the tier, demoted to disk with it).
+            let rb = s.generate_blocking(GenRequest::new(0, b, 4), Duration::from_secs(60)).expect("b");
+            assert!(!rb.tokens.is_empty());
+            let r2 = s.generate_blocking(GenRequest::new(0, a, 4), Duration::from_secs(60)).expect("a again");
+            let snap = Json::parse(&s.metrics.snapshot().encode()).unwrap();
+            let tier = |k: &str| snap.path(&format!("kv_tier.{k}")).unwrap().as_f64().unwrap();
+            let stats = (
+                r2.reused_tokens,
+                tier("demoted_pages"),
+                tier("promoted_pages"),
+                tier("disk_bytes"),
+                r2.tokens.clone(),
+            );
+            s.shutdown();
+            stats
+        };
+        let (reused_evict, d0, p0, db0, _) = run(false);
+        assert_eq!(reused_evict, 0, "eviction-only loses the prefix under pressure");
+        assert_eq!((d0, p0, db0), (0.0, 0.0, 0.0), "no tier, no tier stats");
+        let (reused_spill, demoted, promoted, disk_bytes, tokens) = run(true);
+        assert_eq!(reused_spill, 47, "disk-warmed hit: 48-token match, 1-token suffix");
+        assert!(demoted >= 3.0, "A's pages were demoted: {demoted}");
+        assert!(promoted >= 3.0, "and promoted back: {promoted}");
+        assert!(disk_bytes > 0.0, "B's cold pages remain spilled");
+        assert_eq!(tokens.len(), 4, "generation unaffected by the tier");
+    }
+
+    #[test]
     fn prefix_cache_disabled_never_reuses() {
         let s = Server::start(ServerConfig {
             model: ModelConfig::test(),
@@ -501,6 +607,7 @@ mod tests {
             pool_tokens: 4096,
             max_active: 4,
             prefix_cache: false,
+            ..Default::default()
         });
         let prompt: Vec<u32> = (0..64).map(|x| x % 64).collect();
         for _ in 0..2 {

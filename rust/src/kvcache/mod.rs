@@ -14,6 +14,11 @@
 //!   codec (token slots exactly `KvLayout::slot_bytes()` wide), so
 //!   resident bytes track each method's true encoded width instead of
 //!   the widest codec's.
+//! * [`tier`] — the disk tier of the two-tier page store: cold prefix-
+//!   cache leaves demote their pages into per-codec segment files
+//!   (free-extent allocator, fsync-free writes) instead of being
+//!   evicted, and promote back into pool pages on a radix match — pages
+//!   are self-contained byte blobs, so tier moves are pure copies.
 //! * [`sequence`] — the legacy per-sequence heap cache (one
 //!   [`CompressedKv`](crate::quant::compressor::CompressedKv) box per
 //!   layer/head), still used by the eval
@@ -27,3 +32,4 @@ pub mod codec;
 pub mod paged;
 pub mod pools;
 pub mod sequence;
+pub mod tier;

@@ -116,11 +116,35 @@ impl PagedPool {
         &self.storage[base..base + pb]
     }
 
+    /// Mutable raw bytes of one page (tier promotion fills a freshly
+    /// allocated page with spilled bytes). Panics on an out-of-range id.
+    pub fn page_slice_mut(&mut self, page: PageId) -> &mut [u8] {
+        let pb = self.page_bytes();
+        let base = page as usize * pb;
+        &mut self.storage[base..base + pb]
+    }
+
+    /// Allocate one page with refcount 1 and no block table — the tier
+    /// store's promotion path, which installs spilled bytes and hands
+    /// the reference to the prefix cache. Pair with
+    /// [`release_page`](Self::release_page).
+    pub fn alloc_page(&mut self) -> Option<PageId> {
+        let p = self.free.pop()?;
+        self.refcount[p as usize] = 1;
+        Some(p)
+    }
+
     /// Page ids currently allocated (refcount > 0), for accounting tests.
     pub fn live_pages(&self) -> Vec<PageId> {
         (0..self.cfg.num_pages as PageId)
             .filter(|&p| self.refcount[p as usize] > 0)
             .collect()
+    }
+
+    /// Fraction of this pool's pages currently allocated (the tier
+    /// store's watermark input).
+    pub fn occupancy_fraction(&self) -> f64 {
+        self.used_pages() as f64 / self.cfg.num_pages.max(1) as f64
     }
 
     /// Pages needed to hold `tokens` tokens.
@@ -518,6 +542,27 @@ mod tests {
         assert_eq!(p.release_page(pg), Err(PoolError::BadSharedPage));
         assert_eq!(p.retain_page(pg), Err(PoolError::BadSharedPage));
         assert_eq!(p.retain_page(99), Err(PoolError::BadSharedPage));
+    }
+
+    #[test]
+    fn alloc_page_lifecycle_for_tier_promotion() {
+        let mut p = pool(4);
+        let pg = p.alloc_page().unwrap();
+        assert_eq!(p.page_refcount(pg), 1);
+        assert_eq!(p.used_pages(), 1);
+        assert!((p.occupancy_fraction() - 0.25).abs() < 1e-12);
+        p.page_slice_mut(pg).fill(0x3C);
+        assert_eq!(p.page_slice(pg), &[0x3C; 32][..]);
+        // A raw page participates in normal sharing/refcounting.
+        p.retain_page(pg).unwrap();
+        assert_eq!(p.release_page(pg), Ok(false));
+        assert_eq!(p.release_page(pg), Ok(true));
+        assert_eq!(p.free_pages(), 4);
+        // Exhaustion returns None, not a panic.
+        for _ in 0..4 {
+            p.alloc_page().unwrap();
+        }
+        assert!(p.alloc_page().is_none());
     }
 
     #[test]

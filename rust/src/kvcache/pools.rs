@@ -64,6 +64,13 @@ pub struct PoolSet {
     /// Memoized (pool key → token_bytes) so routing doesn't rebuild
     /// codecs on every request.
     widths: BTreeMap<String, usize>,
+    /// Global cross-pool admission cap on resident **bytes**. Per-codec
+    /// token budgets alone let a mixed-method burst reserve up to
+    /// Σ-codecs × budget of virtual storage; the scheduler gates
+    /// admission on [`byte_headroom`](Self::byte_headroom) so the total
+    /// resident footprint stays bounded no matter how many codecs run
+    /// hot at once. `None` = uncapped (per-pool page budgets only).
+    byte_cap: Option<usize>,
 }
 
 impl PoolSet {
@@ -77,6 +84,7 @@ impl PoolSet {
             geometry: Geometry::Model(model.clone()),
             pools: BTreeMap::new(),
             widths: BTreeMap::new(),
+            byte_cap: None,
         }
     }
 
@@ -90,7 +98,39 @@ impl PoolSet {
             geometry: Geometry::Fixed(token_bytes),
             pools: BTreeMap::new(),
             widths: BTreeMap::new(),
+            byte_cap: None,
         }
+    }
+
+    /// Builder: attach a global cross-pool resident-byte admission cap.
+    pub fn with_byte_cap(mut self, cap: usize) -> Self {
+        self.byte_cap = Some(cap);
+        self
+    }
+
+    pub fn set_byte_cap(&mut self, cap: Option<usize>) {
+        self.byte_cap = cap;
+    }
+
+    pub fn byte_cap(&self) -> Option<usize> {
+        self.byte_cap
+    }
+
+    /// Resident bytes still admittable under the global byte cap
+    /// (`usize::MAX` when uncapped). Counts every pool, including the
+    /// legacy accounting pool — its reservations are exactly the
+    /// admission exposure the cap bounds.
+    pub fn byte_headroom(&self) -> usize {
+        match self.byte_cap {
+            Some(cap) => cap.saturating_sub(self.memory_bytes()),
+            None => usize::MAX,
+        }
+    }
+
+    /// Bytes of one page in the pool `method` (or a pool key) routes
+    /// to — width memoized, no pool created.
+    pub fn page_bytes_for(&mut self, method: &str) -> usize {
+        self.page_tokens * self.token_bytes_for(method)
     }
 
     pub fn page_tokens(&self) -> usize {
@@ -274,6 +314,29 @@ mod tests {
         assert_eq!(set.num_pages(), 8);
         set.release("kivi", 1).unwrap();
         assert_eq!(set.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn byte_cap_headroom_tracks_cross_pool_residency() {
+        let cfg = ModelConfig::test();
+        let mut set = PoolSet::for_model(&cfg, 4, 256);
+        assert_eq!(set.byte_headroom(), usize::MAX, "uncapped by default");
+        let exact_page = set.page_bytes_for("exact");
+        let polar_page = set.page_bytes_for("polarquant");
+        assert!(exact_page > polar_page);
+        set.set_byte_cap(Some(2 * exact_page + polar_page));
+        assert_eq!(set.byte_cap(), Some(2 * exact_page + polar_page));
+        set.pool_mut("exact").register(1, 8).unwrap(); // 2 exact pages
+        assert_eq!(set.byte_headroom(), polar_page);
+        // A polar page fits where another exact page would not — the
+        // cap compares true per-codec byte widths, not page counts.
+        assert!(set.byte_headroom() < exact_page);
+        set.pool_mut("polarquant").register(2, 4).unwrap();
+        assert_eq!(set.byte_headroom(), 0);
+        set.release("exact", 1).unwrap();
+        assert_eq!(set.byte_headroom(), 2 * exact_page);
+        set.set_byte_cap(None);
+        assert_eq!(set.byte_headroom(), usize::MAX);
     }
 
     #[test]

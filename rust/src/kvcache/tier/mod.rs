@@ -1,0 +1,238 @@
+//! The disk tier of the two-tier KV page store.
+//!
+//! PolarQuant's self-contained slots — no per-block zero/scale side
+//! channel — make an encoded page a freely relocatable byte blob:
+//! demoting a cold page to disk and promoting it back is a pure byte
+//! copy with no quantization-state bookkeeping. The tier gives the
+//! prefix cache a second level below RAM: when a per-codec pool crosses
+//! its high-water occupancy, cold unpinned radix leaves are *demoted*
+//! (their page bytes spilled into that codec's [`SegmentFile`], the RAM
+//! pages freed, the leaf re-pointed at
+//! [`PageRef::Disk`](crate::prefix::radix::PageRef)) instead of being
+//! evicted outright; a later radix match *promotes* the extents back
+//! into fresh pool pages before admission, so decode and prefill only
+//! ever see RAM pages and the transformer hot path is untouched. True
+//! eviction — actually losing reusable KV — happens only when the disk
+//! budget is also exhausted.
+//!
+//! * [`segment`] — per-codec segment files with a coalescing
+//!   free-extent allocator and fsync-free writes (spilled KV is
+//!   reconstructible, so durability buys nothing).
+//! * [`TierManager`] — one segment per codec under a spill directory,
+//!   a global disk-byte budget across them, and the demote/promote/
+//!   discard counters the `/stats` `kv_tier` block reports.
+
+pub mod segment;
+
+pub use segment::{DiskExtent, SegmentFile};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Disk-tier configuration.
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    /// Directory holding one segment file per codec. Created on
+    /// construction; removed (best effort) when the manager drops.
+    pub spill_dir: PathBuf,
+    /// Byte budget across all segment files; spills beyond it fail and
+    /// the caller falls back to true eviction.
+    pub disk_budget_bytes: usize,
+    /// Per-codec pool occupancy fraction that triggers demotion.
+    pub high_water: f64,
+    /// Occupancy fraction demotion drains each pressured pool down to.
+    pub low_water: f64,
+}
+
+impl TierConfig {
+    /// Defaults: 256 MiB of disk, demote above 90% pool occupancy down
+    /// to 75%.
+    pub fn new(spill_dir: PathBuf) -> Self {
+        Self { spill_dir, disk_budget_bytes: 256 << 20, high_water: 0.90, low_water: 0.75 }
+    }
+}
+
+/// Cumulative tier counters (monotonic).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Pages written to disk (RAM freed, entry preserved).
+    pub demoted_pages: u64,
+    /// Pages read back into RAM on a radix match.
+    pub promoted_pages: u64,
+    /// Spilled pages discarded without promotion — the only place the
+    /// tiered store actually loses reusable KV.
+    pub true_evictions: u64,
+}
+
+/// The disk tier: per-codec segment files behind one handle, plus the
+/// shared byte budget. Owned by the scheduler (control plane); the
+/// engine never sees it — promotion happens before admission, so the
+/// data plane reads RAM pages exactly as before.
+pub struct TierManager {
+    cfg: TierConfig,
+    segments: BTreeMap<String, SegmentFile>,
+    stats: TierStats,
+}
+
+impl TierManager {
+    pub fn new(cfg: TierConfig) -> std::io::Result<Self> {
+        std::fs::create_dir_all(&cfg.spill_dir)?;
+        Ok(Self { cfg, segments: BTreeMap::new(), stats: TierStats::default() })
+    }
+
+    pub fn cfg(&self) -> &TierConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &TierStats {
+        &self.stats
+    }
+
+    /// Bytes of live spilled extents across every segment.
+    pub fn disk_bytes(&self) -> usize {
+        self.segments.values().map(|s| s.used_bytes() as usize).sum()
+    }
+
+    /// Would a spill of `bytes` stay within the disk budget?
+    pub fn has_room(&self, bytes: usize) -> bool {
+        self.disk_bytes().saturating_add(bytes) <= self.cfg.disk_budget_bytes
+    }
+
+    fn segment_mut(&mut self, method: &str) -> std::io::Result<&mut SegmentFile> {
+        if !self.segments.contains_key(method) {
+            // Method names are codec names ("polarquant-r-offline");
+            // sanitize defensively so a key can never escape the dir.
+            let file: String = method
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+                .collect();
+            let seg = SegmentFile::create(self.cfg.spill_dir.join(format!("{file}.seg")))?;
+            self.segments.insert(method.to_string(), seg);
+        }
+        Ok(self.segments.get_mut(method).unwrap())
+    }
+
+    /// Spill one page's bytes into `method`'s segment. `None` when the
+    /// disk budget is exhausted or the write fails — the caller treats
+    /// both as "no disk tier available" and falls back to eviction.
+    pub fn spill_page(&mut self, method: &str, bytes: &[u8]) -> Option<DiskExtent> {
+        if !self.has_room(bytes.len()) {
+            return None;
+        }
+        let seg = self.segment_mut(method).ok()?;
+        match seg.write_extent(bytes) {
+            Ok(ext) => {
+                self.stats.demoted_pages += 1;
+                Some(ext)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Read a spilled page into `buf` (promotion). The extent stays
+    /// allocated until [`free_promoted`](Self::free_promoted) — a failed
+    /// read loses nothing.
+    pub fn promote_page(&mut self, method: &str, ext: DiskExtent, buf: &mut [u8]) -> bool {
+        match self.segments.get_mut(method) {
+            Some(seg) => seg.read_extent(ext, buf).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Free an extent whose bytes were installed into a RAM page.
+    pub fn free_promoted(&mut self, method: &str, ext: DiskExtent) {
+        if let Some(seg) = self.segments.get_mut(method) {
+            seg.free_extent(ext);
+            self.stats.promoted_pages += 1;
+        }
+    }
+
+    /// Free an extent without reading it back — a spilled page lost to
+    /// disk-budget pressure or a dropped radix node (true eviction).
+    pub fn discard(&mut self, method: &str, ext: DiskExtent) {
+        if let Some(seg) = self.segments.get_mut(method) {
+            seg.free_extent(ext);
+            self.stats.true_evictions += 1;
+        }
+    }
+}
+
+impl Drop for TierManager {
+    fn drop(&mut self) {
+        // Segment drops remove their files; then the (now empty) spill
+        // dir goes too. Best effort — a shared dir with other workers'
+        // subdirs simply stays.
+        self.segments.clear();
+        let _ = std::fs::remove_dir(&self.cfg.spill_dir);
+    }
+}
+
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh per-process temp spill directory for tests and benches; the
+/// `TierManager` (and its segments) remove their contents on drop, so
+/// no cleanup is needed.
+pub fn temp_spill_dir(tag: &str) -> PathBuf {
+    let n = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let d = std::env::temp_dir().join(format!("pq-spill-{}-{tag}-{n}", std::process::id()));
+    std::fs::create_dir_all(&d).expect("create temp spill dir");
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tier(tag: &str, budget: usize) -> TierManager {
+        let mut cfg = TierConfig::new(temp_spill_dir(tag));
+        cfg.disk_budget_bytes = budget;
+        TierManager::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn spill_promote_roundtrip_per_method_segments() {
+        let mut t = tier("roundtrip", 1 << 20);
+        let a: Vec<u8> = (0..128u8).collect();
+        let b: Vec<u8> = (0..128u8).map(|x| x.wrapping_mul(3)).collect();
+        let ea = t.spill_page("exact", &a).unwrap();
+        let eb = t.spill_page("polarquant", &b).unwrap();
+        assert_eq!(t.disk_bytes(), 256);
+        assert_eq!(t.stats().demoted_pages, 2);
+        let mut buf = vec![0u8; 128];
+        assert!(t.promote_page("exact", ea, &mut buf));
+        assert_eq!(buf, a);
+        assert!(t.promote_page("polarquant", eb, &mut buf));
+        assert_eq!(buf, b);
+        t.free_promoted("exact", ea);
+        t.free_promoted("polarquant", eb);
+        assert_eq!(t.disk_bytes(), 0);
+        assert_eq!(t.stats().promoted_pages, 2);
+        assert_eq!(t.stats().true_evictions, 0);
+    }
+
+    #[test]
+    fn budget_exhaustion_refuses_spills() {
+        let mut t = tier("budget", 96);
+        assert!(t.spill_page("exact", &[1; 64]).is_some());
+        assert!(t.spill_page("exact", &[2; 64]).is_none(), "over budget");
+        assert_eq!(t.stats().demoted_pages, 1);
+        // Discard frees room again (and counts the loss).
+        let e = t.spill_page("exact", &[3; 32]).unwrap();
+        t.discard("exact", e);
+        assert_eq!(t.stats().true_evictions, 1);
+        assert!(t.spill_page("exact", &[4; 64]).is_none(), "64 + 64 > 96");
+        assert!(t.spill_page("exact", &[5; 32]).is_some());
+    }
+
+    #[test]
+    fn drop_removes_spill_dir() {
+        let dir = temp_spill_dir("droptest");
+        {
+            let mut t = TierManager::new(TierConfig::new(dir.clone())).unwrap();
+            t.spill_page("kivi", &[7; 32]).unwrap();
+            assert!(dir.join("kivi.seg").exists());
+        }
+        assert!(!dir.exists(), "segments and dir removed on drop");
+    }
+}

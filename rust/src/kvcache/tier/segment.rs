@@ -1,0 +1,224 @@
+//! One per-codec segment file of the disk tier: spilled pages live as
+//! extents in a flat file managed by a free-extent allocator.
+//!
+//! Writes are append-friendly and **fsync-free**: spilled KV is
+//! reconstructible (re-prefill recreates it bit-identically from the
+//! tokens), so durability buys nothing and the page cache may keep hot
+//! extents entirely in RAM. Extents freed by promotion or true eviction
+//! go back into a coalescing free list; a freed run that touches the
+//! append frontier shrinks the logical file instead of fragmenting it.
+//! Page codecs have fixed page byte sizes, so within one segment every
+//! extent is the same length and first-fit allocation is exact-fit in
+//! practice — the allocator still splits and coalesces so geometry
+//! changes (or future variable-length payloads) stay correct.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+/// A spilled page's location inside its codec's segment file. The
+/// extent is the entire identity of a disk-resident page — PolarQuant
+/// slots carry no out-of-band quantization state, so relocating a page
+/// to disk and back is a pure byte copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DiskExtent {
+    pub offset: u64,
+    pub len: u32,
+}
+
+/// A segment file plus its free-extent allocator.
+pub struct SegmentFile {
+    file: File,
+    path: PathBuf,
+    /// Logical end of file: extents at or past this offset were never
+    /// allocated. Frees touching the frontier pull it back down.
+    frontier: u64,
+    /// Free extents, offset → length, coalesced on insert.
+    free: BTreeMap<u64, u64>,
+    used_bytes: u64,
+}
+
+impl SegmentFile {
+    /// Create (truncating any stale file — spilled KV never outlives
+    /// the process that wrote it).
+    pub fn create(path: PathBuf) -> std::io::Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(Self { file, path, frontier: 0, free: BTreeMap::new(), used_bytes: 0 })
+    }
+
+    /// Bytes currently held by live extents.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// Logical file length (live extents + free holes).
+    pub fn file_bytes(&self) -> u64 {
+        self.frontier
+    }
+
+    /// First-fit allocation from the free list, appending at the
+    /// frontier when no hole is large enough.
+    fn alloc(&mut self, len: u64) -> u64 {
+        let hit = self
+            .free
+            .iter()
+            .find(|(_, &flen)| flen >= len)
+            .map(|(&off, &flen)| (off, flen));
+        match hit {
+            Some((off, flen)) => {
+                self.free.remove(&off);
+                if flen > len {
+                    self.free.insert(off + len, flen - len);
+                }
+                off
+            }
+            None => {
+                let off = self.frontier;
+                self.frontier += len;
+                off
+            }
+        }
+    }
+
+    /// Return `[off, off+len)` to the free list, coalescing with both
+    /// neighbours; a run ending at the frontier shrinks the file.
+    fn insert_free(&mut self, mut off: u64, mut len: u64) {
+        if let Some((&po, &pl)) = self.free.range(..off).next_back() {
+            if po + pl == off {
+                self.free.remove(&po);
+                off = po;
+                len += pl;
+            }
+        }
+        if let Some((&no, &nl)) = self.free.range(off..).next() {
+            if off + len == no {
+                self.free.remove(&no);
+                len += nl;
+            }
+        }
+        if off + len == self.frontier {
+            self.frontier = off;
+        } else {
+            self.free.insert(off, len);
+        }
+    }
+
+    /// Write one page's bytes into a fresh extent. No fsync (see module
+    /// docs). On an I/O error the allocation is rolled back and nothing
+    /// is leaked.
+    pub fn write_extent(&mut self, bytes: &[u8]) -> std::io::Result<DiskExtent> {
+        let len = bytes.len() as u64;
+        let off = self.alloc(len);
+        let res = self
+            .file
+            .seek(SeekFrom::Start(off))
+            .and_then(|_| self.file.write_all(bytes));
+        match res {
+            Ok(()) => {
+                self.used_bytes += len;
+                Ok(DiskExtent { offset: off, len: bytes.len() as u32 })
+            }
+            Err(e) => {
+                self.insert_free(off, len);
+                Err(e)
+            }
+        }
+    }
+
+    /// Read an extent back (promotion). The extent stays allocated —
+    /// the caller frees it once the RAM copy is installed, so a failed
+    /// promotion loses nothing.
+    pub fn read_extent(&mut self, ext: DiskExtent, buf: &mut [u8]) -> std::io::Result<()> {
+        debug_assert_eq!(buf.len(), ext.len as usize, "extent/buffer size mismatch");
+        self.file.seek(SeekFrom::Start(ext.offset))?;
+        self.file.read_exact(buf)
+    }
+
+    /// Free an extent (after promotion, or on true eviction).
+    pub fn free_extent(&mut self, ext: DiskExtent) {
+        debug_assert!(self.used_bytes >= ext.len as u64, "double free");
+        self.used_bytes = self.used_bytes.saturating_sub(ext.len as u64);
+        self.insert_free(ext.offset, ext.len as u64);
+    }
+}
+
+impl Drop for SegmentFile {
+    fn drop(&mut self) {
+        // Spilled KV is reconstructible; never leave segment files behind.
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(tag: &str) -> SegmentFile {
+        let dir = crate::kvcache::tier::temp_spill_dir(&format!("segtest-{tag}"));
+        SegmentFile::create(dir.join("t.seg")).unwrap()
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut s = seg("rt");
+        let a: Vec<u8> = (0..64u8).collect();
+        let b: Vec<u8> = (0..64u8).map(|x| x ^ 0xFF).collect();
+        let ea = s.write_extent(&a).unwrap();
+        let eb = s.write_extent(&b).unwrap();
+        assert_eq!(s.used_bytes(), 128);
+        let mut buf = vec![0u8; 64];
+        s.read_extent(ea, &mut buf).unwrap();
+        assert_eq!(buf, a);
+        s.read_extent(eb, &mut buf).unwrap();
+        assert_eq!(buf, b);
+    }
+
+    #[test]
+    fn free_reuses_space_and_coalesces() {
+        let mut s = seg("coalesce");
+        let exts: Vec<DiskExtent> =
+            (0..4).map(|i| s.write_extent(&[i as u8; 32]).unwrap()).collect();
+        assert_eq!(s.file_bytes(), 128);
+        // Free the middle two out of order: they coalesce into one hole.
+        s.free_extent(exts[2]);
+        s.free_extent(exts[1]);
+        assert_eq!(s.used_bytes(), 64);
+        assert_eq!(s.free.len(), 1, "adjacent holes coalesced");
+        // A 64-byte write exact-fits the hole; the file does not grow.
+        let big = s.write_extent(&[9u8; 64]).unwrap();
+        assert_eq!(big.offset, 32);
+        assert_eq!(s.file_bytes(), 128);
+        // Freeing the tail extent shrinks the frontier.
+        s.free_extent(exts[3]);
+        assert_eq!(s.file_bytes(), 96);
+    }
+
+    #[test]
+    fn free_all_returns_file_to_empty() {
+        let mut s = seg("empty");
+        let e1 = s.write_extent(&[1; 16]).unwrap();
+        let e2 = s.write_extent(&[2; 16]).unwrap();
+        s.free_extent(e1);
+        s.free_extent(e2);
+        assert_eq!(s.used_bytes(), 0);
+        assert_eq!(s.file_bytes(), 0, "frontier pulled all the way back");
+        assert!(s.free.is_empty());
+    }
+
+    #[test]
+    fn split_then_partial_reuse() {
+        let mut s = seg("split");
+        let big = s.write_extent(&[7u8; 96]).unwrap();
+        s.free_extent(big);
+        // Frontier shrank to 0; small writes re-append.
+        let small = s.write_extent(&[1u8; 32]).unwrap();
+        assert_eq!(small.offset, 0);
+        assert_eq!(s.file_bytes(), 32);
+    }
+}

@@ -94,8 +94,15 @@ fn cmd_serve(argv: Vec<String>) {
             .opt("seed", "0", "weight seed")
             .opt("max-active", "8", "max concurrent sequences per worker")
             .opt("pool-tokens", "65536", "KV page-pool size per worker (tokens)")
-            .opt("prefix-cache", "on", "radix prefix cache for shared prompts (on|off)"),
+            .opt("prefix-cache", "on", "radix prefix cache for shared prompts (on|off)")
+            .opt("spill-dir", "", "disk spill dir for cold KV pages (empty = eviction-only)")
+            .opt("disk-budget-mb", "256", "spill-tier byte budget per worker (MiB)")
+            .opt("ram-high-water", "0.90", "pool occupancy fraction that triggers demotion")
+            .opt("ram-low-water", "0.75", "occupancy fraction demotion drains down to")
+            .opt("kv-byte-cap-mb", "0", "global resident-KV byte cap per worker (MiB, 0 = off)"),
     );
+    let spill = a.get("spill-dir");
+    let byte_cap_mb = a.get_usize("kv-byte-cap-mb");
     let cfg = ServerConfig {
         model: model_cfg(&a.get("model")),
         seed: a.get_u64("seed"),
@@ -103,6 +110,11 @@ fn cmd_serve(argv: Vec<String>) {
         pool_tokens: a.get_usize("pool-tokens"),
         max_active: a.get_usize("max-active"),
         prefix_cache: a.get("prefix-cache") != "off",
+        spill_dir: (!spill.is_empty()).then(|| spill.clone().into()),
+        disk_budget_bytes: a.get_usize("disk-budget-mb") << 20,
+        ram_high_water: a.get_f64("ram-high-water"),
+        ram_low_water: a.get_f64("ram-low-water"),
+        kv_byte_cap: (byte_cap_mb > 0).then_some(byte_cap_mb << 20),
         ..Default::default()
     };
     let addr = a.get("addr");

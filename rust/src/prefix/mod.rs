@@ -33,17 +33,20 @@
 
 pub mod radix;
 
-pub use radix::{NodeId, PrefixConfig, PrefixMatch, PrefixStats, RadixPrefixCache};
+pub use radix::{NodeId, PageRef, PrefixConfig, PrefixMatch, PrefixStats, RadixPrefixCache};
 
 use crate::kvcache::paged::PagedPool;
 use crate::kvcache::pools::PoolSet;
+use crate::kvcache::tier::DiskExtent;
 use std::collections::BTreeMap;
 
 /// Per-codec radix trees behind one facade. The budget is in **bytes**
 /// across all trees; [`enforce_budget`] trims the tree holding the most
-/// resident bytes first. LRU is per-tree (each tree keeps its own
-/// clock), which is exact for single-method traffic and a fair
-/// round-robin approximation across methods.
+/// resident bytes first. The set owns one **shared monotonic LRU
+/// clock**: every match/insert stamps nodes from the same counter
+/// regardless of tree, so cross-codec recency comparisons — in
+/// particular the disk tier's "globally coldest first" demotion order —
+/// are exact rather than per-tree approximate.
 ///
 /// [`enforce_budget`]: PrefixCacheSet::enforce_budget
 pub struct PrefixCacheSet {
@@ -56,16 +59,23 @@ pub struct PrefixCacheSet {
     /// published its prompt) and re-match instead of using the stale
     /// gate-time match.
     epoch: u64,
+    /// The shared LRU clock spanning all trees.
+    clock: u64,
 }
 
 impl PrefixCacheSet {
     pub fn new(page_tokens: usize, max_bytes: usize) -> Self {
-        Self { page_tokens, max_bytes, trees: BTreeMap::new(), epoch: 0 }
+        Self { page_tokens, max_bytes, trees: BTreeMap::new(), epoch: 0, clock: 0 }
     }
 
     /// Monotonic insert counter (see the `epoch` field).
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
     }
 
     fn tree_mut(&mut self, method: &str) -> &mut RadixPrefixCache {
@@ -83,9 +93,10 @@ impl PrefixCacheSet {
     /// Longest cached prefix of `tokens` among pages encoded by
     /// `method`'s codec. An empty match when the method has no tree yet.
     pub fn match_prefix(&mut self, method: &str, tokens: &[u32]) -> PrefixMatch {
+        let clock = self.tick();
         match self.trees.get_mut(method) {
-            Some(t) => t.match_prefix(tokens),
-            None => PrefixMatch { pages: Vec::new(), tokens: 0, node: None },
+            Some(t) => t.match_prefix_at(tokens, clock),
+            None => PrefixMatch::default(),
         }
     }
 
@@ -111,13 +122,90 @@ impl PrefixCacheSet {
         src_seq: u64,
     ) -> Option<NodeId> {
         self.epoch += 1;
-        self.tree_mut(method).insert(tokens, pool, src_seq)
+        let clock = self.tick();
+        self.tree_mut(method).insert_at(tokens, pool, src_seq, clock)
     }
 
-    /// Pool pages referenced across all trees (pages of different trees
-    /// have different byte sizes; see [`cached_bytes`](Self::cached_bytes)).
+    /// RAM pool pages referenced across all trees (pages of different
+    /// trees have different byte sizes; see
+    /// [`cached_bytes`](Self::cached_bytes)).
     pub fn cached_pages(&self) -> usize {
         self.trees.values().map(|t| t.cached_pages()).sum()
+    }
+
+    /// Pages spilled to the disk tier across all trees.
+    pub fn disk_pages(&self) -> usize {
+        self.trees.values().map(|t| t.disk_pages()).sum()
+    }
+
+    /// Methods that currently have a tree (the scheduler's iteration
+    /// surface for watermark demotion).
+    pub fn tree_methods(&self) -> Vec<String> {
+        self.trees.keys().cloned().collect()
+    }
+
+    /// Coldest evictable leaf of `method`'s tree (shared-clock stamp).
+    pub fn coldest_evictable(&self, method: &str) -> Option<(u64, NodeId)> {
+        self.trees.get(method).and_then(|t| t.coldest_evictable())
+    }
+
+    /// Coldest demotable leaf of `method`'s tree (see
+    /// [`RadixPrefixCache::coldest_demotable`]).
+    pub fn coldest_demotable(&self, method: &str, pool: &PagedPool) -> Option<(u64, NodeId)> {
+        self.trees.get(method).and_then(|t| t.coldest_demotable(pool))
+    }
+
+    /// Demote one leaf of `method`'s tree to the disk tier.
+    pub fn demote_node(
+        &mut self,
+        method: &str,
+        id: NodeId,
+        pool: &mut PagedPool,
+        write: &mut dyn FnMut(&[u8]) -> Option<DiskExtent>,
+    ) -> Option<usize> {
+        self.trees.get_mut(method)?.demote_node(id, pool, write)
+    }
+
+    /// Promote one spilled node of `method`'s tree back into RAM pages;
+    /// returns the extents for the caller to free in its tier store.
+    pub fn promote_node(
+        &mut self,
+        method: &str,
+        id: NodeId,
+        pool: &mut PagedPool,
+        read: &mut dyn FnMut(DiskExtent, &mut [u8]) -> bool,
+    ) -> Option<Vec<DiskExtent>> {
+        self.trees.get_mut(method)?.promote_node(id, pool, read)
+    }
+
+    /// Pages (RAM or disk) node `id` of `method`'s tree references.
+    pub fn node_page_count(&self, method: &str, id: NodeId) -> usize {
+        self.trees.get(method).map_or(0, |t| t.node_page_count(id))
+    }
+
+    /// Drain the extents of true-evicted disk nodes in `method`'s tree.
+    pub fn take_dropped_extents(&mut self, method: &str) -> Vec<DiskExtent> {
+        self.trees
+            .get_mut(method)
+            .map(|t| t.take_dropped_extents())
+            .unwrap_or_default()
+    }
+
+    /// Evict one LRU leaf from `method`'s tree regardless of what it
+    /// frees (budget pressure path). Returns pages freed.
+    pub fn evict_one_node(&mut self, method: &str, pool: &mut PagedPool) -> Option<usize> {
+        self.trees.get_mut(method)?.evict_one_node(pool)
+    }
+
+    /// Must-free eviction in `method`'s tree: evict LRU leaves until at
+    /// least `pages_needed` pool pages are actually freed, skipping
+    /// victims whose pages are all still shared with active sequences
+    /// (evicting those would destroy reuse while reclaiming nothing).
+    /// Returns pages freed.
+    pub fn evict_lru(&mut self, method: &str, pool: &mut PagedPool, pages_needed: usize) -> usize {
+        self.trees
+            .get_mut(method)
+            .map_or(0, |t| t.evict_lru(pool, pages_needed))
     }
 
     /// Resident bytes the cache references across all trees, each tree
@@ -162,7 +250,10 @@ impl PrefixCacheSet {
 
     /// Trim back under the global byte budget, evicting from the tree
     /// holding the most resident bytes first (falling back to any tree
-    /// that can evict when the fattest is fully pinned).
+    /// that can evict when the fattest is fully pinned). Victims must
+    /// hold RAM pages: the budget counts RAM bytes, so true-evicting a
+    /// spilled (disk-resident) node would destroy tier-preserved state
+    /// without freeing a single budget byte.
     pub fn enforce_budget(&mut self, pools: &mut PoolSet) {
         while self.cached_bytes(pools) > self.max_bytes {
             let mut order: Vec<(usize, String)> = self
@@ -177,7 +268,7 @@ impl PrefixCacheSet {
             let mut evicted = false;
             for (_, m) in order {
                 let pool = pools.pool_mut(&m);
-                if self.trees.get_mut(&m).unwrap().evict_one_node(pool).is_some() {
+                if self.trees.get_mut(&m).unwrap().evict_one_ram_node(pool).is_some() {
                     evicted = true;
                     break;
                 }
@@ -247,6 +338,36 @@ mod tests {
             "narrow entry survives; the wide one paid for the budget"
         );
         assert_eq!(s.match_prefix("exact", &[1; 8]).tokens, 0);
+    }
+
+    #[test]
+    fn shared_clock_makes_cross_tree_coldness_comparable() {
+        // One clock spans all trees: after touching the exact entry
+        // last, the polar entry is the globally coldest — the per-tree
+        // clocks this replaced could not order victims across codecs.
+        let mut s = set(1 << 20);
+        let mut p = pools(128);
+        p.pool_mut("exact").register(1, 8).unwrap();
+        p.pool_mut("polarquant").register(2, 8).unwrap();
+        s.insert("exact", &[1; 8], p.pool_mut("exact"), 1);
+        s.insert("polarquant", &[2; 8], p.pool_mut("polarquant"), 2);
+        p.release("exact", 1).unwrap();
+        p.release("polarquant", 2).unwrap();
+        let (t_polar0, _) = s.coldest_evictable("polarquant").unwrap();
+        let (t_exact0, _) = s.coldest_evictable("exact").unwrap();
+        assert!(t_polar0 > t_exact0, "inserted later on the shared clock");
+        // A lookup on the exact tree re-warms it past the polar entry.
+        s.match_prefix("exact", &[1; 8]);
+        let (t_exact, _) = s.coldest_evictable("exact").unwrap();
+        let (t_polar, _) = s.coldest_evictable("polarquant").unwrap();
+        assert!(
+            t_polar < t_exact,
+            "polar entry is globally coldest ({t_polar} vs {t_exact})"
+        );
+        // Demotability uses the same global stamps.
+        let (t_demote, _) =
+            s.coldest_demotable("polarquant", p.pool("polarquant").unwrap()).unwrap();
+        assert_eq!(t_demote, t_polar);
     }
 
     #[test]

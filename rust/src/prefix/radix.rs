@@ -20,7 +20,16 @@
 //! list — kept in sync at every touch/pin/link mutation, so `make_room`
 //! bursts no longer rescan the whole node slab per eviction.
 
+//! Tiered residency: a leaf's pages can be *demoted* to the disk tier
+//! ([`PageRef::Disk`]) — bytes spilled, RAM pages freed, the entry kept
+//! matchable — and *promoted* back into fresh pool pages on a match.
+//! A node's pages are always uniformly RAM or uniformly disk (tier
+//! moves are whole-leaf), so a match never stitches half-resident
+//! edges; the tree never does I/O itself — demote/promote thread byte
+//! closures from whoever owns the tier store.
+
 use crate::kvcache::paged::{PagedPool, PageId};
+use crate::kvcache::tier::DiskExtent;
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Slab index of a node. The root is always node 0 with an empty edge.
@@ -43,22 +52,42 @@ pub struct PrefixStats {
     pub evicted_nodes: u64,
 }
 
+/// A cached page's residency: a RAM pool page, or an extent spilled
+/// into that codec's disk-tier segment. Slots are self-contained byte
+/// blobs (PolarQuant carries no out-of-slot quantization state), so a
+/// page moves between the variants by pure byte copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageRef {
+    Ram(PageId),
+    Disk(DiskExtent),
+}
+
 /// Result of a longest-prefix lookup.
 #[derive(Debug, Default)]
 pub struct PrefixMatch {
-    /// Cached pages covering the matched prefix, in order.
+    /// Cached RAM pages covering the immediately usable head of the
+    /// match, in order.
     pub pages: Vec<PageId>,
-    /// Matched token count (`pages.len() * page_tokens`).
+    /// Matched token count of the RAM head (`pages.len() * page_tokens`).
     pub tokens: usize,
-    /// Deepest node whose pages contributed to the match (pin this while
-    /// the requesting sequence is active). `None` when nothing matched.
+    /// Deepest matched node — RAM or disk — to pin while the requesting
+    /// sequence (or gate) is live; pinning it protects the whole path,
+    /// demotion included, since tier moves only take unpinned leaves.
+    /// `None` when nothing matched.
     pub node: Option<NodeId>,
+    /// Matched-path nodes whose pages are spilled to the disk tier, in
+    /// path order. Promote these (then re-match) to extend the usable
+    /// head; without a tier they are unreachable bytes and the match
+    /// truncates to `pages`.
+    pub disk: Vec<NodeId>,
+    /// Tokens the match additionally covers once `disk` is promoted.
+    pub disk_tokens: usize,
 }
 
 struct Node {
     /// Edge label: `pages.len() * page_tokens` token ids (root: empty).
     tokens: Vec<u32>,
-    pages: Vec<PageId>,
+    pages: Vec<PageRef>,
     /// Children keyed by the first page chunk of their edge.
     children: BTreeMap<Vec<u32>, NodeId>,
     parent: NodeId,
@@ -68,6 +97,21 @@ struct Node {
     last_touch: u64,
 }
 
+/// Which evictable leaves an eviction pass may take.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum VictimFilter {
+    /// Any evictable leaf — the true-drop path of last resort.
+    Any,
+    /// Only victims with at least one last-reference RAM page (the
+    /// make-room path: evicting a still-shared node destroys reusable
+    /// state while reclaiming nothing).
+    FreesRam,
+    /// Only victims holding RAM pages (RAM-budget trims: a disk node
+    /// costs no pool bytes, so destroying it cannot help the budget —
+    /// it would only throw away spilled state the tier preserved).
+    HoldsRam,
+}
+
 /// The radix-tree prefix cache.
 pub struct RadixPrefixCache {
     cfg: PrefixConfig,
@@ -75,7 +119,15 @@ pub struct RadixPrefixCache {
     free_nodes: Vec<NodeId>,
     clock: u64,
     cached_pages: usize,
+    /// Pages currently spilled to the disk tier (extents referenced by
+    /// nodes); disjoint from `cached_pages`, which counts RAM pages.
+    disk_pages: usize,
     stats: PrefixStats,
+    /// Extents of true-evicted disk nodes, held until the tier owner
+    /// drains and frees them ([`take_dropped_extents`]).
+    ///
+    /// [`take_dropped_extents`]: Self::take_dropped_extents
+    dropped_extents: Vec<DiskExtent>,
     /// Eviction index: exactly the evictable nodes (unpinned leaves),
     /// keyed by (last_touch, id) so `iter().next()` is the LRU victim.
     evictable_index: BTreeSet<(u64, NodeId)>,
@@ -98,7 +150,9 @@ impl RadixPrefixCache {
             free_nodes: Vec::new(),
             clock: 0,
             cached_pages: 0,
+            disk_pages: 0,
             stats: PrefixStats::default(),
+            dropped_extents: Vec::new(),
             evictable_index: BTreeSet::new(),
         }
     }
@@ -107,9 +161,20 @@ impl RadixPrefixCache {
         &self.stats
     }
 
-    /// Pool pages currently referenced by the tree.
+    /// RAM pool pages currently referenced by the tree.
     pub fn cached_pages(&self) -> usize {
         self.cached_pages
+    }
+
+    /// Pages currently spilled to the disk tier (still matchable).
+    pub fn disk_pages(&self) -> usize {
+        self.disk_pages
+    }
+
+    /// Extents dropped by true evictions since the last drain; the
+    /// caller (whoever owns the tier store) frees them.
+    pub fn take_dropped_extents(&mut self) -> Vec<DiskExtent> {
+        std::mem::take(&mut self.dropped_extents)
     }
 
     /// Live nodes, excluding the root.
@@ -155,10 +220,12 @@ impl RadixPrefixCache {
         }
     }
 
-    /// LRU-refresh `id` to `clock`, re-keying its index entry.
+    /// LRU-refresh `id` to `clock`, re-keying its index entry. A clock
+    /// at or behind the node's stamp is a no-op — under the shared set
+    /// clock a tree must never move a node's recency backward.
     fn touch(&mut self, id: NodeId, clock: u64) {
         let old = self.node(id).last_touch;
-        if old == clock {
+        if old >= clock {
             return;
         }
         self.evictable_index.remove(&(old, id));
@@ -189,43 +256,73 @@ impl RadixPrefixCache {
     /// Longest cached prefix of `tokens`, page-granular. Touches every
     /// node on the matched path (LRU refresh) but takes no pins.
     pub fn match_prefix(&mut self, tokens: &[u32]) -> PrefixMatch {
-        let pt = self.cfg.page_tokens;
         self.clock += 1;
         let clock = self.clock;
+        self.match_prefix_at(tokens, clock)
+    }
+
+    /// Shared-clock variant: [`crate::prefix::PrefixCacheSet`] owns one
+    /// monotonic clock across all trees so cross-codec LRU order
+    /// (eviction *and* tier demotion) is globally coldest-first rather
+    /// than per-tree approximate.
+    pub fn match_prefix_at(&mut self, tokens: &[u32], clock: u64) -> PrefixMatch {
+        let pt = self.cfg.page_tokens;
+        self.clock = self.clock.max(clock);
         let mut cur: NodeId = 0;
-        let mut matched = 0usize;
+        let mut walked = 0usize; // total matched tokens, disk tail included
+        let mut matched = 0usize; // RAM-head tokens
         let mut pages: Vec<PageId> = Vec::new();
+        let mut disk: Vec<NodeId> = Vec::new();
         loop {
             self.touch(cur, clock);
-            if tokens.len() - matched < pt {
+            if tokens.len() - walked < pt {
                 break;
             }
-            let key = tokens[matched..matched + pt].to_vec();
+            let key = tokens[walked..walked + pt].to_vec();
             let child = match self.node(cur).children.get(&key) {
                 Some(&c) => c,
                 None => break,
             };
             let k = {
                 let c = self.node(child);
-                self.matching_pages(&c.tokens, &tokens[matched..])
+                self.matching_pages(&c.tokens, &tokens[walked..])
             };
             debug_assert!(k >= 1, "child key matched but first page did not");
             if k == 0 {
                 break;
             }
             self.touch(child, clock);
-            pages.extend_from_slice(&self.node(child).pages[..k]);
-            matched += k * pt;
-            if k < self.node(child).pages.len() {
-                cur = child;
+            let c = self.node(child);
+            let on_disk = matches!(c.pages.first(), Some(PageRef::Disk(_)));
+            let edge_pages = c.pages.len();
+            if on_disk || !disk.is_empty() {
+                // Past the first spilled node everything is promotable-
+                // only: the head handed to `register_with_prefix` must
+                // be one contiguous run of RAM pages.
+                if on_disk {
+                    disk.push(child);
+                }
+            } else {
+                for r in &c.pages[..k] {
+                    match r {
+                        PageRef::Ram(p) => pages.push(*p),
+                        PageRef::Disk(_) => unreachable!("node pages are uniform"),
+                    }
+                }
+                matched += k * pt;
+            }
+            walked += k * pt;
+            cur = child;
+            if k < edge_pages {
                 break;
             }
-            cur = child;
         }
         PrefixMatch {
             pages,
             tokens: matched,
-            node: if matched == 0 { None } else { Some(cur) },
+            node: if walked == 0 { None } else { Some(cur) },
+            disk,
+            disk_tokens: walked - matched,
         }
     }
 
@@ -292,6 +389,20 @@ impl RadixPrefixCache {
         pool: &mut PagedPool,
         src_seq: u64,
     ) -> Option<NodeId> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.insert_at(tokens, pool, src_seq, clock)
+    }
+
+    /// Shared-clock variant of [`insert`](Self::insert) (see
+    /// [`match_prefix_at`](Self::match_prefix_at)).
+    pub fn insert_at(
+        &mut self,
+        tokens: &[u32],
+        pool: &mut PagedPool,
+        src_seq: u64,
+        clock: u64,
+    ) -> Option<NodeId> {
         let pt = self.cfg.page_tokens;
         let aligned = tokens.len() / pt * pt;
         if aligned == 0 {
@@ -301,8 +412,7 @@ impl RadixPrefixCache {
         if src_pages.len() < aligned / pt {
             return None; // table shorter than the prompt — shouldn't happen
         }
-        self.clock += 1;
-        let clock = self.clock;
+        self.clock = self.clock.max(clock);
         let mut cur: NodeId = 0;
         let mut off = 0usize;
         loop {
@@ -317,11 +427,12 @@ impl RadixPrefixCache {
                     // New leaf owning the remaining pages of this prompt.
                     // The pages come from a live block table, so they are
                     // allocated and retain cannot fail.
-                    let pages = src_pages[off / pt..aligned / pt].to_vec();
-                    for &p in &pages {
+                    let shared = &src_pages[off / pt..aligned / pt];
+                    for &p in shared {
                         pool.retain_page(p).expect("page live via src table");
                     }
-                    self.cached_pages += pages.len();
+                    self.cached_pages += shared.len();
+                    let pages = shared.iter().map(|&p| PageRef::Ram(p)).collect();
                     let leaf = self.alloc(Node {
                         tokens: tokens[off..aligned].to_vec(),
                         pages,
@@ -364,29 +475,31 @@ impl RadixPrefixCache {
         n.pins == 0 && n.children.is_empty()
     }
 
-    /// Evict one LRU unpinned leaf, returning how many pool pages were
-    /// actually freed (a page still referenced by an active sequence is
-    /// released from the tree but stays allocated). With `must_free`,
-    /// only victims holding at least one last-reference page are
-    /// considered — the make-room path, where evicting a still-shared
-    /// node would destroy reusable state while reclaiming nothing.
+    /// Evict one LRU unpinned leaf passing `filter`, returning how many
+    /// pool pages were actually freed (a page still referenced by an
+    /// active sequence is released from the tree but stays allocated).
     /// `None` when no eligible victim exists.
-    fn evict_one(&mut self, pool: &mut PagedPool, must_free: bool) -> Option<usize> {
+    fn evict_one(&mut self, pool: &mut PagedPool, filter: VictimFilter) -> Option<usize> {
         // O(log n) victim pop from the eviction index, which holds
         // exactly the unpinned leaves ordered LRU-first (ties broken by
         // slab id, matching the old full-slab `min_by_key` scan). The
-        // `must_free` walk skips still-shared victims in LRU order and
-        // is O(1) in the common case.
+        // filtered walk skips ineligible victims in LRU order and is
+        // O(1) in the common case.
         let victim = self
             .evictable_index
             .iter()
             .find(|&&(_, id)| {
-                !must_free
-                    || self
-                        .node(id)
+                let n = self.node(id);
+                match filter {
+                    VictimFilter::Any => true,
+                    VictimFilter::FreesRam => n
                         .pages
                         .iter()
-                        .any(|&p| pool.page_refcount(p) == 1)
+                        .any(|r| matches!(r, PageRef::Ram(p) if pool.page_refcount(*p) == 1)),
+                    VictimFilter::HoldsRam => {
+                        matches!(n.pages.first(), Some(PageRef::Ram(_)))
+                    }
+                }
             })
             .map(|&(_, id)| id)?;
         let node = self.nodes[victim].take().expect("live victim");
@@ -395,11 +508,21 @@ impl RadixPrefixCache {
         let key = self.child_key(&node.tokens);
         self.node_mut(node.parent).children.remove(&key);
         self.sync_index(node.parent); // parent may have become a leaf
-        self.cached_pages -= node.pages.len();
         let mut freed = 0;
-        for p in node.pages {
-            if pool.release_page(p).unwrap_or(false) {
-                freed += 1;
+        for r in node.pages {
+            match r {
+                PageRef::Ram(p) => {
+                    self.cached_pages -= 1;
+                    if pool.release_page(p).unwrap_or(false) {
+                        freed += 1;
+                    }
+                }
+                PageRef::Disk(ext) => {
+                    // True eviction of a spilled page: hold the extent
+                    // for the tier owner to free.
+                    self.disk_pages -= 1;
+                    self.dropped_extents.push(ext);
+                }
             }
         }
         self.stats.evicted_nodes += 1;
@@ -421,10 +544,150 @@ impl RadixPrefixCache {
         assert_eq!(self.evictable_index, brute, "eviction index out of sync");
     }
 
-    /// Evict one LRU unpinned leaf regardless of whether its pages free
-    /// immediately (budget-pressure path). Returns pages actually freed.
+    /// Evict one LRU unpinned leaf regardless of residency or whether
+    /// its pages free immediately (last-resort pressure path). Returns
+    /// pages actually freed.
     pub fn evict_one_node(&mut self, pool: &mut PagedPool) -> Option<usize> {
-        self.evict_one(pool, false)
+        self.evict_one(pool, VictimFilter::Any)
+    }
+
+    /// Evict the LRU unpinned leaf that holds RAM pages (RAM-budget
+    /// trims: disk nodes cost no pool bytes, so destroying them cannot
+    /// help — see [`VictimFilter::HoldsRam`]). Returns pages freed.
+    pub fn evict_one_ram_node(&mut self, pool: &mut PagedPool) -> Option<usize> {
+        self.evict_one(pool, VictimFilter::HoldsRam)
+    }
+
+    /// Coldest evictable leaf (any residency) as `(last_touch, id)` —
+    /// global-LRU victim selection across trees under the shared clock.
+    pub fn coldest_evictable(&self) -> Option<(u64, NodeId)> {
+        self.evictable_index.iter().next().copied()
+    }
+
+    /// Coldest leaf eligible for demotion: unpinned, childless, and all
+    /// pages RAM-resident *and* cache-exclusive (refcount 1) — so
+    /// releasing them after the spill frees real room. LRU order via
+    /// the eviction index.
+    pub fn coldest_demotable(&self, pool: &PagedPool) -> Option<(u64, NodeId)> {
+        self.evictable_index
+            .iter()
+            .find(|&&(_, id)| {
+                let n = self.node(id);
+                !n.pages.is_empty()
+                    && n.pages
+                        .iter()
+                        .all(|r| matches!(r, PageRef::Ram(p) if pool.page_refcount(*p) == 1))
+            })
+            .copied()
+    }
+
+    /// Pages (RAM or disk) referenced by node `id`; 0 for dead ids.
+    pub fn node_page_count(&self, id: NodeId) -> usize {
+        self.nodes
+            .get(id)
+            .and_then(|n| n.as_ref())
+            .map_or(0, |n| n.pages.len())
+    }
+
+    /// Demote leaf `id` to the disk tier: write each page's bytes
+    /// through `write`, release the RAM pages, and re-point the node at
+    /// the returned extents. Eligibility is exactly
+    /// [`coldest_demotable`](Self::coldest_demotable)'s — an unpinned,
+    /// childless node whose pages are all cache-exclusive RAM. On a
+    /// failed write (disk budget exhausted) the node keeps its RAM
+    /// pages and the already-written extents land in the dropped list
+    /// for the caller to free. Returns pages demoted.
+    pub fn demote_node(
+        &mut self,
+        id: NodeId,
+        pool: &mut PagedPool,
+        write: &mut dyn FnMut(&[u8]) -> Option<DiskExtent>,
+    ) -> Option<usize> {
+        if !self.evictable(id) {
+            return None;
+        }
+        let ram: Vec<PageId> = {
+            let n = self.node(id);
+            if n.pages.is_empty() {
+                return None;
+            }
+            let mut ram = Vec::with_capacity(n.pages.len());
+            for r in &n.pages {
+                match r {
+                    PageRef::Ram(p) if pool.page_refcount(*p) == 1 => ram.push(*p),
+                    _ => return None,
+                }
+            }
+            ram
+        };
+        let mut exts = Vec::with_capacity(ram.len());
+        for &p in &ram {
+            match write(pool.page_slice(p)) {
+                Some(e) => exts.push(e),
+                None => {
+                    self.dropped_extents.extend(exts);
+                    return None;
+                }
+            }
+        }
+        for &p in &ram {
+            pool.release_page(p).expect("demotable page live");
+        }
+        let n_pages = exts.len();
+        self.cached_pages -= n_pages;
+        self.disk_pages += n_pages;
+        self.node_mut(id).pages = exts.into_iter().map(PageRef::Disk).collect();
+        Some(n_pages)
+    }
+
+    /// Promote node `id` back into RAM: allocate one pool page per
+    /// extent, fill it through `read` (which must not free the extent),
+    /// and re-point the node. Fails without side effects when the node
+    /// is not fully on disk, the pool lacks room, or a read fails; on
+    /// success returns the extents for the caller to free in its tier
+    /// store. Works on inner disk nodes too (a demoted leaf that later
+    /// gained children).
+    pub fn promote_node(
+        &mut self,
+        id: NodeId,
+        pool: &mut PagedPool,
+        read: &mut dyn FnMut(DiskExtent, &mut [u8]) -> bool,
+    ) -> Option<Vec<DiskExtent>> {
+        let exts: Vec<DiskExtent> = {
+            let n = self.nodes.get(id)?.as_ref()?;
+            if n.pages.is_empty() {
+                return None;
+            }
+            let mut exts = Vec::with_capacity(n.pages.len());
+            for r in &n.pages {
+                match r {
+                    PageRef::Disk(e) => exts.push(*e),
+                    PageRef::Ram(_) => return None,
+                }
+            }
+            exts
+        };
+        if pool.free_pages() < exts.len() {
+            return None;
+        }
+        let mut pages: Vec<PageId> = Vec::with_capacity(exts.len());
+        for &e in &exts {
+            let p = pool.alloc_page().expect("free pages pre-checked");
+            if !read(e, pool.page_slice_mut(p)) {
+                // Roll back: nothing was freed on disk, so the node's
+                // extents stay valid.
+                pool.release_page(p).ok();
+                for &q in &pages {
+                    pool.release_page(q).ok();
+                }
+                return None;
+            }
+            pages.push(p);
+        }
+        self.disk_pages -= exts.len();
+        self.cached_pages += exts.len();
+        self.node_mut(id).pages = pages.into_iter().map(PageRef::Ram).collect();
+        Some(exts)
     }
 
     /// Evict LRU leaves until at least `pages_needed` pool pages have been
@@ -434,7 +697,7 @@ impl RadixPrefixCache {
     pub fn evict_lru(&mut self, pool: &mut PagedPool, pages_needed: usize) -> usize {
         let mut freed = 0;
         while freed < pages_needed {
-            match self.evict_one(pool, true) {
+            match self.evict_one(pool, VictimFilter::FreesRam) {
                 Some(f) => freed += f,
                 None => break,
             }
@@ -464,7 +727,7 @@ impl RadixPrefixCache {
             .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
             .filter(|&(id, _)| !protected[id])
             .flat_map(|(_, n)| n.pages.iter())
-            .filter(|&&p| pool.page_refcount(p) == 1)
+            .filter(|r| matches!(r, PageRef::Ram(p) if pool.page_refcount(*p) == 1))
             .count()
     }
 
@@ -489,7 +752,7 @@ impl RadixPrefixCache {
         }
         let mut freed = self.evict_lru(pool, pages_needed);
         while freed < pages_needed {
-            match self.evict_one(pool, false) {
+            match self.evict_one(pool, VictimFilter::Any) {
                 Some(f) => freed += f,
                 None => break,
             }
@@ -498,10 +761,12 @@ impl RadixPrefixCache {
     }
 
     /// Trim the cache back under its `max_pages` budget (memory
-    /// pressure); pinned chains are skipped.
+    /// pressure); pinned chains are skipped. Victims must hold RAM
+    /// pages — the budget counts RAM, so true-evicting a spilled node
+    /// would destroy tier-preserved state without freeing a byte.
     pub fn enforce_budget(&mut self, pool: &mut PagedPool) {
         while self.cached_pages > self.cfg.max_pages {
-            if self.evict_one(pool, false).is_none() {
+            if self.evict_one(pool, VictimFilter::HoldsRam).is_none() {
                 break;
             }
         }
@@ -755,6 +1020,203 @@ mod tests {
         c.evict_lru(&mut p, 1000);
         c.check_eviction_index();
         assert_eq!(c.cached_pages(), 0, "everything unpinned was evictable");
+    }
+
+    /// An in-memory stand-in for the disk tier's segment file: extents
+    /// index into a Vec of page-byte blobs.
+    struct MemTier {
+        blobs: Vec<Vec<u8>>,
+    }
+
+    impl MemTier {
+        fn new() -> Self {
+            Self { blobs: Vec::new() }
+        }
+        fn write(&mut self, bytes: &[u8]) -> Option<DiskExtent> {
+            self.blobs.push(bytes.to_vec());
+            Some(DiskExtent { offset: (self.blobs.len() - 1) as u64, len: bytes.len() as u32 })
+        }
+        fn read(&self, ext: DiskExtent, buf: &mut [u8]) -> bool {
+            buf.copy_from_slice(&self.blobs[ext.offset as usize]);
+            true
+        }
+    }
+
+    #[test]
+    fn demote_then_promote_restores_bytes_and_match() {
+        let (mut c, mut p) = (cache(64), pool(16));
+        let prompt = toks(&[(3, 8)]); // 2 pages
+        let (_, node) = admit(&mut c, &mut p, 1, &prompt, 0);
+        let node = node.unwrap();
+        for t in 0..8 {
+            p.token_slot_mut(1, t).unwrap().fill(0xA0 | t as u8);
+        }
+        let snapshot: Vec<Vec<u8>> = c
+            .match_prefix(&prompt)
+            .pages
+            .iter()
+            .map(|&pg| p.page_slice(pg).to_vec())
+            .collect();
+        p.release(1).unwrap();
+        let mut tier = MemTier::new();
+        assert_eq!(
+            c.demote_node(node, &mut p, &mut |b| tier.write(b)),
+            Some(2),
+            "both pages spilled"
+        );
+        c.check_eviction_index();
+        assert_eq!(p.used_pages(), 0, "RAM freed by demotion");
+        assert_eq!((c.cached_pages(), c.disk_pages()), (0, 2));
+        // The entry still matches, but as promotable-only tokens.
+        let m = c.match_prefix(&prompt);
+        assert_eq!(m.tokens, 0);
+        assert_eq!(m.disk, vec![node]);
+        assert_eq!(m.disk_tokens, 8);
+        assert_eq!(m.node, Some(node));
+        // Promote: fresh pages, byte-identical content.
+        let exts = c
+            .promote_node(node, &mut p, &mut |e, buf| tier.read(e, buf))
+            .expect("promoted");
+        assert_eq!(exts.len(), 2);
+        assert_eq!((c.cached_pages(), c.disk_pages()), (2, 0));
+        let m = c.match_prefix(&prompt);
+        assert_eq!(m.tokens, 8);
+        assert!(m.disk.is_empty());
+        for (i, &pg) in m.pages.iter().enumerate() {
+            assert_eq!(p.page_slice(pg), &snapshot[i][..], "page {i} byte-identical");
+        }
+        c.check_eviction_index();
+    }
+
+    #[test]
+    fn demotion_refuses_pinned_shared_and_disk_nodes() {
+        let (mut c, mut p) = (cache(64), pool(16));
+        let prompt = toks(&[(4, 8)]);
+        let (_, node) = admit(&mut c, &mut p, 1, &prompt, 0);
+        let node = node.unwrap();
+        let mut tier = MemTier::new();
+        // Pages still shared with the active sequence: not demotable.
+        assert!(c.coldest_demotable(&p).is_none());
+        assert!(c.demote_node(node, &mut p, &mut |b| tier.write(b)).is_none());
+        p.release(1).unwrap();
+        // Pinned: not demotable.
+        c.pin(node);
+        assert!(c.demote_node(node, &mut p, &mut |b| tier.write(b)).is_none());
+        c.unpin(node);
+        assert_eq!(c.coldest_demotable(&p), Some((c.node(node).last_touch, node)));
+        assert_eq!(c.demote_node(node, &mut p, &mut |b| tier.write(b)), Some(2));
+        // Already on disk: demoting again is a no-op failure.
+        assert!(c.demote_node(node, &mut p, &mut |b| tier.write(b)).is_none());
+        assert!(c.coldest_demotable(&p).is_none(), "disk nodes are not demotable");
+    }
+
+    #[test]
+    fn failed_spill_keeps_ram_pages_and_drops_partial_extents() {
+        let (mut c, mut p) = (cache(64), pool(16));
+        let prompt = toks(&[(5, 12)]); // 3 pages
+        let (_, node) = admit(&mut c, &mut p, 1, &prompt, 0);
+        let node = node.unwrap();
+        p.release(1).unwrap();
+        // Budget admits one page, then fails: all-or-nothing demotion.
+        let mut wrote = 0;
+        let res = c.demote_node(node, &mut p, &mut |b| {
+            wrote += 1;
+            if wrote == 1 {
+                Some(DiskExtent { offset: 0, len: b.len() as u32 })
+            } else {
+                None
+            }
+        });
+        assert!(res.is_none());
+        assert_eq!(p.used_pages(), 3, "RAM pages untouched");
+        assert_eq!(c.match_prefix(&prompt).tokens, 12, "entry still RAM-served");
+        assert_eq!(c.take_dropped_extents().len(), 1, "partial extent surrendered");
+    }
+
+    #[test]
+    fn evicting_a_disk_node_surrenders_its_extents() {
+        let (mut c, mut p) = (cache(64), pool(16));
+        let prompt = toks(&[(6, 8)]);
+        let (_, node) = admit(&mut c, &mut p, 1, &prompt, 0);
+        p.release(1).unwrap();
+        let mut tier = MemTier::new();
+        c.demote_node(node.unwrap(), &mut p, &mut |b| tier.write(b)).unwrap();
+        // Budget-pressure eviction true-drops the spilled entry.
+        assert_eq!(c.evict_one_node(&mut p), Some(0), "no RAM pages to free");
+        assert_eq!(c.disk_pages(), 0);
+        assert_eq!(c.take_dropped_extents().len(), 2);
+        assert_eq!(c.match_prefix(&prompt).tokens, 0);
+        assert_eq!(c.match_prefix(&prompt).disk_tokens, 0);
+        c.check_eviction_index();
+    }
+
+    #[test]
+    fn budget_trims_never_true_evict_disk_nodes() {
+        // The RAM budget counts RAM pages, so its eviction pass must
+        // skip spilled nodes: destroying them frees nothing and loses
+        // exactly the state the tier preserved.
+        let (mut c, mut p) = (cache(2), pool(16)); // budget: 2 RAM pages
+        let cold = toks(&[(1, 8)]); // 2 pages, spilled below
+        let warm = toks(&[(2, 16)]); // 4 RAM pages, over budget
+        let (_, cold_node) = admit(&mut c, &mut p, 1, &cold, 0);
+        p.release(1).unwrap();
+        let mut tier = MemTier::new();
+        c.demote_node(cold_node.unwrap(), &mut p, &mut |b| tier.write(b)).unwrap();
+        admit(&mut c, &mut p, 2, &warm, 0);
+        p.release(2).unwrap();
+        c.enforce_budget(&mut p);
+        assert!(c.cached_pages() <= 2, "budget enforced on RAM pages");
+        assert_eq!(c.disk_pages(), 2, "spilled entry untouched by the trim");
+        assert_eq!(c.match_prefix(&cold).disk_tokens, 8, "still promotable");
+        assert!(c.take_dropped_extents().is_empty(), "no true evictions");
+        // Once every RAM victim is gone the trim stops rather than
+        // falling through to disk nodes.
+        c.enforce_budget(&mut p);
+        assert_eq!(c.disk_pages(), 2);
+    }
+
+    #[test]
+    fn promote_requires_room_and_fails_cleanly() {
+        let (mut c, mut p) = (cache(64), pool(2));
+        let prompt = toks(&[(7, 8)]); // exactly the whole pool
+        let (_, node) = admit(&mut c, &mut p, 1, &prompt, 0);
+        let node = node.unwrap();
+        p.release(1).unwrap();
+        let mut tier = MemTier::new();
+        c.demote_node(node, &mut p, &mut |b| tier.write(b)).unwrap();
+        // Fill the pool with someone else's pages: no room to promote.
+        p.register(2, 8).unwrap();
+        assert!(c.promote_node(node, &mut p, &mut |e, buf| tier.read(e, buf)).is_none());
+        assert_eq!(c.disk_pages(), 2, "extents untouched by the failed attempt");
+        p.release(2).unwrap();
+        // A failing read rolls back the allocated pages.
+        assert!(c.promote_node(node, &mut p, &mut |_, _| false).is_none());
+        assert_eq!(p.used_pages(), 0);
+        // And a clean retry still works afterwards.
+        assert!(c.promote_node(node, &mut p, &mut |e, buf| tier.read(e, buf)).is_some());
+        assert_eq!(c.match_prefix(&prompt).tokens, 8);
+    }
+
+    #[test]
+    fn match_truncates_ram_head_at_first_disk_node() {
+        let (mut c, mut p) = (cache(64), pool(64));
+        // Shared 2-page head, divergent 2-page tails → head + 2 leaves.
+        let a = toks(&[(1, 8), (2, 8)]);
+        let b = toks(&[(1, 8), (3, 8)]);
+        admit(&mut c, &mut p, 1, &a, 0);
+        let (_, nb) = admit(&mut c, &mut p, 2, &b, 0);
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        let mut tier = MemTier::new();
+        // Demote only b's tail leaf: the RAM head still serves 8 tokens.
+        c.demote_node(nb.unwrap(), &mut p, &mut |bts| tier.write(bts)).unwrap();
+        let m = c.match_prefix(&b);
+        assert_eq!(m.tokens, 8, "RAM head");
+        assert_eq!(m.pages.len(), 2);
+        assert_eq!(m.disk_tokens, 8, "tail promotable");
+        assert_eq!(m.disk, vec![nb.unwrap()]);
+        // a's path is untouched.
+        assert_eq!(c.match_prefix(&a).tokens, 16);
     }
 
     #[test]

@@ -18,6 +18,7 @@ fn server(workers: usize, pool_tokens: usize) -> Server {
         pool_tokens,
         max_active: 4,
         prefix_cache: true,
+        ..Default::default()
     })
 }
 

@@ -1,0 +1,379 @@
+//! Tiered KV page store invariants: demote→promote round-trips are
+//! byte-identical for every registered page codec, spilled prefixes are
+//! served back bit-identically after promotion, and watermark demotion
+//! keeps RAM occupancy bounded.
+//!
+//! The RAM high-water mark is overridable via `PQ_TIER_HIGH_WATER`
+//! (fraction; low water is half of it) — CI's `tier-spill` job sets a
+//! deliberately tiny value so demotion fires on every test. Spill dirs
+//! are per-process tempdirs removed by `TierManager` on drop; no
+//! cleanup is needed.
+
+use polarquant::coordinator::request::{GenRequest, GenResponse, Tracked};
+use polarquant::coordinator::scheduler::Scheduler;
+use polarquant::coordinator::worker::NativeWorker;
+use polarquant::kvcache::codec::PAGE_CODEC_METHODS;
+use polarquant::kvcache::pools::{share_pools, PoolSet};
+use polarquant::kvcache::tier::{temp_spill_dir, TierConfig, TierManager};
+use polarquant::model::config::ModelConfig;
+use polarquant::model::weights::Weights;
+use polarquant::prefix::PrefixCacheSet;
+use polarquant::util::rng::{Pcg64, Rng};
+
+const PT: usize = 4;
+
+fn watermarks() -> (f64, f64) {
+    let high: f64 = std::env::var("PQ_TIER_HIGH_WATER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.5);
+    (high, high / 2.0)
+}
+
+fn tier(tag: &str) -> TierManager {
+    let (high, low) = watermarks();
+    let mut cfg = TierConfig::new(temp_spill_dir(tag));
+    cfg.high_water = high;
+    cfg.low_water = low;
+    TierManager::new(cfg).unwrap()
+}
+
+/// Deterministic byte pattern for the token slot at position `t` of a
+/// prompt: a hash of the method and the token prefix up to and
+/// including `t`. Two sequences agree on a slot's pattern exactly when
+/// they agree on the whole prefix — the same condition under which the
+/// radix tree shares the page — so the model stays consistent under
+/// arbitrary sharing.
+fn slot_pattern(method: &str, prefix: &[u32], slot_bytes: usize) -> Vec<u8> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in method.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    for &t in prefix {
+        h = (h ^ (t as u64 + 1)).wrapping_mul(0x1000_0000_01b3);
+    }
+    (0..slot_bytes)
+        .map(|i| (h.wrapping_mul(2 * i as u64 + 1) >> 24) as u8)
+        .collect()
+}
+
+fn expected_page(method: &str, prompt: &[u32], page_idx: usize, slot_bytes: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(PT * slot_bytes);
+    for t in page_idx * PT..(page_idx + 1) * PT {
+        out.extend(slot_pattern(method, &prompt[..t + 1], slot_bytes));
+    }
+    out
+}
+
+#[test]
+fn demote_promote_roundtrip_is_byte_identical_for_every_codec() {
+    let cfg = ModelConfig::test();
+    for method in PAGE_CODEC_METHODS {
+        let mut pools = PoolSet::for_model(&cfg, PT, 256);
+        let mut pc = PrefixCacheSet::new(PT, usize::MAX);
+        let mut t = tier(&format!("roundtrip-{method}"));
+        let slot_bytes = pools.token_bytes_for(method);
+        let prompt: Vec<u32> = (0..12).map(|i| (i * 7 + 1) % 64).collect();
+        pools.pool_mut(method).register(1, 12).unwrap();
+        for i in 0..12 {
+            pools.pool_mut(method).token_slot_mut(1, i).unwrap().copy_from_slice(
+                &slot_pattern(method, &prompt[..i + 1], slot_bytes),
+            );
+        }
+        let node = pc.insert(method, &prompt, pools.pool_mut(method), 1).unwrap();
+        pools.release(method, 1).unwrap();
+
+        let pool = pools.pool_mut(method);
+        let (_, victim) = pc.coldest_demotable(method, pool).expect("cold leaf");
+        assert_eq!(victim, node);
+        let n = pc
+            .demote_node(method, victim, pool, &mut |b| t.spill_page(method, b))
+            .expect("demoted");
+        assert_eq!(n, 3, "{method}: all three pages spilled");
+        assert_eq!(pool.used_pages(), 0, "{method}: RAM fully released");
+        assert_eq!(t.disk_bytes(), 3 * pool.page_bytes(), "{method}: disk priced per codec");
+
+        let exts = pc
+            .promote_node(method, victim, pool, &mut |e, buf| t.promote_page(method, e, buf))
+            .expect("promoted");
+        for e in exts {
+            t.free_promoted(method, e);
+        }
+        assert_eq!(t.disk_bytes(), 0);
+        let m = pc.match_prefix(method, &prompt);
+        assert_eq!(m.tokens, 12, "{method}: full match after promotion");
+        let pool = pools.pool(method).unwrap();
+        for (i, &pg) in m.pages.iter().enumerate() {
+            assert_eq!(
+                pool.page_slice(pg),
+                &expected_page(method, &prompt, i, slot_bytes)[..],
+                "{method}: page {i} byte-identical after the disk round-trip"
+            );
+        }
+    }
+}
+
+/// Random interleavings of admit (append/retain via
+/// `register_with_prefix` + slot writes + insert), release, demote,
+/// promote, and true eviction — after every round each cached prompt's
+/// matchable pages must hold exactly the bytes written at encode time,
+/// and disk accounting must equal the tree's spilled page count.
+#[test]
+fn prop_spill_roundtrips_survive_random_interleavings() {
+    let cfg = ModelConfig::test();
+    for method in PAGE_CODEC_METHODS {
+        let mut pools = PoolSet::for_model(&cfg, PT, 128); // 32 pages
+        let mut pc = PrefixCacheSet::new(PT, usize::MAX);
+        let mut t = tier(&format!("prop-{method}"));
+        let slot_bytes = pools.token_bytes_for(method);
+        let mut rng = Pcg64::new(0xC0FFEE ^ method.len() as u64);
+        let mut next_seq: u64 = 0;
+        let mut live: Vec<(u64, usize)> = Vec::new(); // (seq, tokens)
+        let mut prompts: Vec<Vec<u32>> = Vec::new();
+
+        // Prefix-sharing families: prompts of one family agree on every
+        // position, so shorter members are prefixes of longer ones.
+        let mut mk_prompt = |rng: &mut Pcg64| -> Vec<u32> {
+            let fam = rng.next_below(3) as u32;
+            let len = (1 + rng.next_below(4) as usize) * PT;
+            (0..len).map(|i| (fam * 31 + i as u32 * 5 + 1) % 64).collect()
+        };
+
+        for round in 0..80 {
+            match rng.next_below(10) {
+                0..=4 => {
+                    // Admit: match (promoting any spilled path nodes the
+                    // way the scheduler gate does), share, write, insert.
+                    let prompt = mk_prompt(&mut rng);
+                    let mut m = pc.match_prefix(method, &prompt);
+                    if !m.disk.is_empty() {
+                        let pool = pools.pool_mut(method);
+                        for id in m.disk.clone() {
+                            let exts = pc.promote_node(method, id, pool, &mut |e, buf| {
+                                t.promote_page(method, e, buf)
+                            });
+                            match exts {
+                                Some(exts) => {
+                                    for e in exts {
+                                        t.free_promoted(method, e);
+                                    }
+                                }
+                                None => break, // pool full: truncated match
+                            }
+                        }
+                        m = pc.match_prefix(method, &prompt);
+                    }
+                    next_seq += 1;
+                    let seq = next_seq;
+                    let pool = pools.pool_mut(method);
+                    if pool.register_with_prefix(seq, &m.pages, prompt.len()).is_err() {
+                        continue; // pool too full this round — fine
+                    }
+                    for i in m.tokens..prompt.len() {
+                        pool.token_slot_mut(seq, i).unwrap().copy_from_slice(&slot_pattern(
+                            method,
+                            &prompt[..i + 1],
+                            slot_bytes,
+                        ));
+                    }
+                    pc.insert(method, &prompt, pool, seq);
+                    if !prompts.contains(&prompt) {
+                        prompts.push(prompt);
+                    }
+                    if rng.next_below(2) == 0 {
+                        pools.release(method, seq).unwrap();
+                    } else {
+                        live.push((seq, 0));
+                    }
+                }
+                5 => {
+                    if let Some(i) = (!live.is_empty()).then(|| rng.next_below(live.len() as u64)) {
+                        let (seq, _) = live.swap_remove(i as usize);
+                        pools.release(method, seq).unwrap();
+                    }
+                }
+                6..=7 => {
+                    let pool = pools.pool_mut(method);
+                    if let Some((_, id)) = pc.coldest_demotable(method, pool) {
+                        pc.demote_node(method, id, pool, &mut |b| t.spill_page(method, b));
+                    }
+                }
+                8 => {
+                    // Append into a live sequence: boundary allocations
+                    // and COW splits must never corrupt cached pages.
+                    if let Some(i) = (!live.is_empty()).then(|| rng.next_below(live.len() as u64)) {
+                        let (seq, extra) = &mut live[i as usize];
+                        if pools.pool_mut(method).append_token(*seq).is_ok() {
+                            *extra += 1;
+                        }
+                    }
+                }
+                _ => {
+                    let pool = pools.pool_mut(method);
+                    pc.evict_one_node(method, pool);
+                    for e in pc.take_dropped_extents(method) {
+                        t.discard(method, e);
+                    }
+                }
+            }
+
+            // Invariants, every round.
+            assert_eq!(
+                t.disk_bytes(),
+                pc.disk_pages() * pools.pool(method).unwrap().page_bytes(),
+                "round {round}: disk accounting tracks spilled pages exactly"
+            );
+            for prompt in &prompts {
+                let m = pc.match_prefix(method, prompt);
+                let pool = pools.pool(method).unwrap();
+                for (i, &pg) in m.pages.iter().enumerate() {
+                    assert_eq!(
+                        pool.page_slice(pg),
+                        &expected_page(method, prompt, i, slot_bytes)[..],
+                        "round {round}: {method} prompt page {i} corrupted"
+                    );
+                }
+            }
+        }
+        // Drain: retire the remaining live sequences, promote everything
+        // back, and verify the full working set.
+        for (seq, _) in live.drain(..) {
+            pools.release(method, seq).unwrap();
+        }
+        loop {
+            let mut promoted_any = false;
+            for prompt in prompts.clone() {
+                let m = pc.match_prefix(method, &prompt);
+                let pool = pools.pool_mut(method);
+                for id in m.disk {
+                    if let Some(exts) =
+                        pc.promote_node(method, id, pool, &mut |e, buf| t.promote_page(method, e, buf))
+                    {
+                        for e in exts {
+                            t.free_promoted(method, e);
+                        }
+                        promoted_any = true;
+                    }
+                }
+            }
+            if !promoted_any {
+                break;
+            }
+        }
+        for prompt in &prompts {
+            let m = pc.match_prefix(method, prompt);
+            assert_eq!(m.disk_tokens, 0, "everything promotable was promoted");
+            let pool = pools.pool(method).unwrap();
+            for (i, &pg) in m.pages.iter().enumerate() {
+                assert_eq!(
+                    pool.page_slice(pg),
+                    &expected_page(method, prompt, i, slot_bytes)[..],
+                    "final: {method} prompt page {i}"
+                );
+            }
+        }
+    }
+}
+
+fn run_to_completion(s: &mut Scheduler, e: &mut NativeWorker) -> Vec<GenResponse> {
+    let mut done = Vec::new();
+    while !s.active.is_empty() {
+        done.extend(s.decode_round(e).finished);
+    }
+    done
+}
+
+/// Warm-hit generation for `method`: request once cold, optionally
+/// force the cached prefix through a disk round-trip, request again.
+/// Returns (second response, promoted_pages, reused_tokens).
+fn warm_hit(cfg: &ModelConfig, method: &str, prompt: &[u32], spill: bool) -> (Vec<u32>, u64, usize) {
+    // 4 pool pages of 16 tokens: the 48-token prompt + generation room
+    // exactly fits, and its 3 cached pages sit far above any high-water
+    // fraction, so `run_demotion` always spills them when a tier is on.
+    let pools = share_pools(PoolSet::for_model(cfg, 16, 64));
+    let mut engine = NativeWorker::with_pools(Weights::synthetic(cfg, 5), pools.clone());
+    let mut sched = Scheduler::with_prefix_cache_shared(pools, 4, 1 << 30);
+    if spill {
+        sched.set_tier(tier(&format!("e2e-{method}")));
+    }
+    let mk = |id: u64| {
+        let mut r = GenRequest::new(id, prompt.to_vec(), 4);
+        r.method = method.into();
+        Tracked::new(r)
+    };
+    assert_eq!(sched.admit(vec![mk(1)], &mut engine), 1, "{method}: cold admit");
+    run_to_completion(&mut sched, &mut engine);
+    if spill {
+        sched.run_demotion();
+        let pc = sched.prefix.as_ref().unwrap();
+        assert!(pc.disk_pages() >= 3, "{method}: prefix spilled before the re-request");
+        assert_eq!(pc.cached_pages(), 0);
+    }
+    assert_eq!(sched.admit(vec![mk(2)], &mut engine), 1, "{method}: warm admit");
+    let resp = run_to_completion(&mut sched, &mut engine).remove(0);
+    let promoted = sched.take_tier_events().promoted_pages;
+    (resp.tokens, promoted, resp.reused_tokens)
+}
+
+/// The end-to-end acceptance invariant: a prefix hit served from
+/// promoted (disk-warmed) pages generates output identical to a
+/// RAM-warm hit — bit-identical page bytes make this hold for every
+/// page codec, and for `exact` the warm path is itself pinned
+/// bit-identical to a cold prefill by `codec_parity`.
+#[test]
+fn promoted_hit_generates_identically_to_ram_warm_hit() {
+    let cfg = ModelConfig::test();
+    let prompt: Vec<u32> = (0..48).map(|i| (i * 11 + 3) % 64).collect();
+    for method in PAGE_CODEC_METHODS {
+        let (ram_tokens, ram_promoted, ram_reused) = warm_hit(&cfg, method, &prompt, false);
+        let (disk_tokens, promoted, disk_reused) = warm_hit(&cfg, method, &prompt, true);
+        assert_eq!(ram_promoted, 0);
+        assert!(promoted >= 3, "{method}: hit was served from promoted pages");
+        assert_eq!(ram_reused, 47, "{method}: RAM-warm hit reuses the clamped prefix");
+        assert_eq!(disk_reused, ram_reused, "{method}: same reuse after the disk round-trip");
+        assert_eq!(disk_tokens, ram_tokens, "{method}: generations identical");
+    }
+}
+
+/// Acceptance: after a demotion pass runs, RAM occupancy sits at or
+/// under the high-water mark (the pass drains to low water, which is
+/// stricter), while every spilled prompt stays matchable.
+#[test]
+fn ram_occupancy_bounded_by_watermark_after_demotion() {
+    let cfg = ModelConfig::test();
+    let (high, _) = watermarks();
+    let pools = share_pools(PoolSet::for_model(&cfg, 4, 64)); // 16 pages
+    let mut engine = NativeWorker::with_pools(Weights::synthetic(&cfg, 5), pools.clone());
+    let mut sched = Scheduler::with_prefix_cache_shared(pools.clone(), 4, 1 << 30);
+    sched.set_tier(tier("watermark"));
+    let method = "polarquant-r-offline";
+    let mut prompts = Vec::new();
+    for i in 0..6u64 {
+        let prompt: Vec<u32> = (0..8).map(|x| (x * 3 + i as u32 * 17 + 1) % 64).collect();
+        let mut r = GenRequest::new(i + 1, prompt.clone(), 4);
+        r.method = method.into();
+        // `admit` runs a demotion pass after every round; completed
+        // prompts from earlier rounds are the demotable mass.
+        sched.admit(vec![Tracked::new(r)], &mut engine);
+        run_to_completion(&mut sched, &mut engine);
+        prompts.push(prompt);
+    }
+    sched.run_demotion();
+    let (used, num) = {
+        let pools = pools.lock().unwrap();
+        let p = pools.pool(method).unwrap();
+        (p.used_pages(), 16usize)
+    };
+    assert!(
+        used as f64 <= (high * num as f64).max(1.0),
+        "occupancy {used}/{num} exceeds the high-water mark {high}"
+    );
+    let ev = sched.take_tier_events();
+    assert!(ev.demoted_pages > 0, "pressure actually demoted pages");
+    assert_eq!(ev.true_evictions, 0, "nothing was dropped for good");
+    let pc = sched.prefix.as_mut().unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        let m = pc.match_prefix(method, p);
+        assert_eq!(m.tokens + m.disk_tokens, 8, "prompt {i} still matchable");
+    }
+}
