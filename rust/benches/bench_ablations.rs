@@ -29,10 +29,14 @@ fn main() {
         "levels, bit allocation, preconditioner, codebooks, memory accounting",
     );
     let d = 64;
-    let n = if common::full_scale() { 512 } else { 128 };
+    let n = common::scaled(32, 128, 512);
     let rows = ablation::test_rows(d, n, 3);
 
-    print_points("recursion depth L (bits 4,2,…)", &ablation::sweep_levels(d, &rows), "ablation_levels");
+    print_points(
+        "recursion depth L (bits 4,2,…)",
+        &ablation::sweep_levels(d, &rows),
+        "ablation_levels",
+    );
     print_points(
         "bit allocation at L=4",
         &ablation::sweep_bit_allocation(d, &rows),

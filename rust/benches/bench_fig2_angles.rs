@@ -12,7 +12,7 @@ fn main() {
         "preconditioning flattens level-1 and drives all levels to the analytic law",
     );
     let d = 64;
-    let n = if common::full_scale() { 4096 } else { 512 };
+    let n = common::scaled(96, 512, 4096);
     let mut gen = workload::KvGenerator::new(workload::KvGenConfig::realistic(d, 7));
     let keys = gen.block(n).keys;
     let exp = angles::run(&keys, d, 4, 48, 7);
@@ -43,5 +43,6 @@ fn main() {
     let ok = (0..4).all(|l| {
         exp.with_precondition[l].tv_to_analytic < exp.without_precondition[l].tv_to_analytic
     });
-    println!("\nshape check — preconditioning improves every level: {}", if ok { "PASS" } else { "FAIL" });
+    let verdict = if ok { "PASS" } else { "FAIL" };
+    println!("\nshape check — preconditioning improves every level: {verdict}");
 }

@@ -12,7 +12,14 @@ fn main() {
         "Fig. 3 — Needle-In-A-Haystack (attention-retrieval recall)",
         "quantization methods beat token eviction; PolarQuant best; streaming loses mid-depth",
     );
-    let cfg = if common::full_scale() {
+    let cfg = if common::smoke() {
+        niah::NiahConfig {
+            contexts: vec![256],
+            depths: 2,
+            trials: 1,
+            ..Default::default()
+        }
+    } else if common::full_scale() {
         niah::NiahConfig {
             contexts: vec![256, 512, 1024, 2048, 4096, 8192, 16384],
             depths: 10,
@@ -45,10 +52,8 @@ fn main() {
     for m in &methods {
         let t = std::time::Instant::now();
         let r = niah::run_method(m, &cfg);
-        print!(
-            "{}",
-            report::heatmap(&format!("Fig. 3 — {m} ({:.1}s)", t.elapsed().as_secs_f64()), &col, &rows_l, &r.recall)
-        );
+        let title = format!("Fig. 3 — {m} ({:.1}s)", t.elapsed().as_secs_f64());
+        print!("{}", report::heatmap(&title, &col, &rows_l, &r.recall));
         summary.row(vec![m.to_string(), report::f(r.mean_recall, 3)]);
         results.push(r);
     }

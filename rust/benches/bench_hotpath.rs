@@ -27,7 +27,13 @@ fn main() {
     let d = 64;
     let n = 1024;
     let rows = gaussian(n * d, 1);
-    let target = if common::full_scale() { 2.0 } else { 0.4 };
+    let target = if common::smoke() {
+        0.02
+    } else if common::full_scale() {
+        2.0
+    } else {
+        0.4
+    };
 
     // Encode.
     let pq = PolarQuantizer::new_offline(PolarConfig::paper_default(d));

@@ -25,12 +25,21 @@
 //! their second-pass hit-rate (cold pages demote to disk and promote
 //! back) where eviction-only forgets; the table also reports the
 //! promote latency that buys.
+//!
+//! A fourth table covers **prefix routing** (anonymous mixed-prefix
+//! traffic over 4 workers through the real server): round-robin
+//! scatters each prompt family across replicas and re-prefills cold;
+//! the cross-worker prefix directory lands repeats on the replica that
+//! already holds the pages. The acceptance bar is a strictly better
+//! prefix hit rate for directed routing.
 
 mod common;
 
+use polarquant::coordinator::batcher::BatchPolicy;
 use polarquant::coordinator::request::GenRequest;
 use polarquant::coordinator::request::Tracked;
 use polarquant::coordinator::scheduler::{PendingPages, Scheduler};
+use polarquant::coordinator::server::{Server, ServerConfig};
 use polarquant::coordinator::worker::NativeWorker;
 use polarquant::eval::report;
 use polarquant::eval::workload::PrefixWorkload;
@@ -38,7 +47,9 @@ use polarquant::kvcache::pools::{share_pools, PoolSet};
 use polarquant::kvcache::tier::{temp_spill_dir, TierConfig, TierManager};
 use polarquant::model::config::ModelConfig;
 use polarquant::model::weights::Weights;
+use polarquant::util::json::Json;
 use polarquant::util::timer::Timer;
+use std::time::Duration;
 
 struct RunStats {
     elapsed_s: f64,
@@ -131,7 +142,7 @@ fn main() {
         "scheduler + native engine over 0%/50%/90% shared-prefix workloads",
     );
     let model = ModelConfig::mini();
-    let n_req = if common::full_scale() { 48 } else { 12 };
+    let n_req = common::scaled(4, 12, 48);
 
     let mut table = report::Table::new(
         "bench_prefix_cache — legacy heap vs pool substrate vs pool+prefix",
@@ -225,6 +236,7 @@ fn main() {
     );
 
     pressure_table(&model);
+    routing_table(&model);
 }
 
 struct PressureStats {
@@ -306,7 +318,9 @@ fn run_pressure(spill: bool, model: &ModelConfig, n_sessions: usize) -> Pressure
 }
 
 fn pressure_table(model: &ModelConfig) {
-    let n_sessions = if common::full_scale() { 16 } else { 8 };
+    // The smoke floor stays at 8 sessions: fewer would fit the pool and
+    // the spill-beats-eviction acceptance bar needs real pressure.
+    let n_sessions = common::scaled(8, 8, 16);
     let mut table = report::Table::new(
         "bench_prefix_cache — memory pressure (RAM budget < working set, 2 passes)",
         &[
@@ -350,5 +364,111 @@ fn pressure_table(model: &ModelConfig) {
         evict.hit_rate * 100.0,
         spill.promote_us_per_page,
         spill.peak_disk_kib
+    );
+}
+
+struct RoutingStats {
+    req_s: f64,
+    prompt_tok_s: f64,
+    hit_rate: f64,
+    tokens_reused: f64,
+    directed: f64,
+    fallback: f64,
+}
+
+/// One routing configuration over the full server: anonymous traffic,
+/// `families` shared 64-token prompt heads (4 pages) with per-round
+/// unique tails, submitted in identical order either round-robin or
+/// directed by the cross-worker prefix directory.
+fn run_routing(model: &ModelConfig, directed: bool, families: u32, rounds: u32) -> RoutingStats {
+    let workers = 4;
+    let s = Server::start(ServerConfig {
+        model: model.clone(),
+        seed: 7,
+        workers,
+        batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        pool_tokens: 16 * 1024,
+        max_active: 8,
+        prefix_cache: true,
+        prefix_routing: directed,
+        round_robin: !directed,
+        ..Default::default()
+    });
+    let mut prompt_tokens = 0usize;
+    let mut requests = 0usize;
+    let t = Timer::start();
+    for round in 0..rounds {
+        for fam in 0..families {
+            let mut p: Vec<u32> = (0..64).map(|x| (x * 7 + fam * 17 + 3) % 64).collect();
+            p.extend((0..16).map(|x| (x * 5 + round * 3 + fam) % 64));
+            prompt_tokens += p.len();
+            requests += 1;
+            let resp = s
+                .generate_blocking(GenRequest::new(0, p, 4), Duration::from_secs(300))
+                .expect("response");
+            assert_eq!(resp.tokens.len(), 4);
+        }
+    }
+    let elapsed = t.secs();
+    let snap = Json::parse(&s.metrics.snapshot().encode()).unwrap();
+    let get = |k: &str| snap.path(k).unwrap().as_f64().unwrap();
+    let stats = RoutingStats {
+        req_s: requests as f64 / elapsed,
+        prompt_tok_s: prompt_tokens as f64 / elapsed,
+        hit_rate: get("prefix_cache.hit_rate"),
+        tokens_reused: get("prefix_cache.tokens_reused"),
+        directed: get("prefix_routing.directed"),
+        fallback: get("prefix_routing.fallback"),
+    };
+    s.shutdown();
+    stats
+}
+
+fn routing_table(model: &ModelConfig) {
+    let families = 3;
+    let rounds = common::scaled(2, 4, 8) as u32;
+    let mut table = report::Table::new(
+        "bench_prefix_cache — prefix routing (anonymous traffic, 4 workers)",
+        &[
+            "config",
+            "req/s",
+            "prompt tok/s",
+            "hit rate",
+            "tokens reused",
+            "directed",
+            "fallback",
+        ],
+    );
+    let rr = run_routing(model, false, families, rounds);
+    let dir = run_routing(model, true, families, rounds);
+    for (name, st) in [("round-robin", &rr), ("directed", &dir)] {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", st.req_s),
+            format!("{:.0}", st.prompt_tok_s),
+            format!("{:.0}%", st.hit_rate * 100.0),
+            format!("{}", st.tokens_reused),
+            format!("{}", st.directed),
+            format!("{}", st.fallback),
+        ]);
+    }
+    table.print();
+    // The acceptance bar: anonymous shared-prefix traffic must hit
+    // strictly more often when the directory directs it.
+    assert!(
+        dir.hit_rate > rr.hit_rate,
+        "directed routing must beat round-robin hit rate ({:.2} vs {:.2})",
+        dir.hit_rate,
+        rr.hit_rate
+    );
+    assert!(dir.directed > 0.0, "no request was ever directed");
+    assert_eq!(rr.directed, 0.0, "round-robin baseline must not direct");
+    println!(
+        "\nprefix routing: directed hit-rate {:.0}% vs round-robin {:.0}% \
+         ({} directed, {} fallback)",
+        dir.hit_rate * 100.0,
+        rr.hit_rate * 100.0,
+        dir.directed,
+        dir.fallback
     );
 }

@@ -13,20 +13,11 @@ fn main() {
         "Table 1 — LongBench-sim scores",
         "token agreement ×100 vs exact-cache generation; paper ordering: PolarQuant-R ≥ PolarQuant > KIVI > eviction",
     );
-    let cfg = if common::full_scale() {
-        longbench::LongBenchConfig {
-            model: ModelConfig::mini(),
-            prompt_len: 384,
-            episodes_per_family: 6,
-            ..Default::default()
-        }
-    } else {
-        longbench::LongBenchConfig {
-            model: ModelConfig::mini(),
-            prompt_len: 160,
-            episodes_per_family: 2,
-            ..Default::default()
-        }
+    let cfg = longbench::LongBenchConfig {
+        model: ModelConfig::mini(),
+        prompt_len: common::scaled(96, 160, 384),
+        episodes_per_family: common::scaled(1, 2, 6),
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let rows = longbench::run(TABLE1_METHODS, &cfg);

@@ -13,20 +13,11 @@ fn main() {
         "Table 2 — prefill / generation wall-clock",
         "eviction ≤ exact < quantized decode; online-codebook prefill ≫ offline",
     );
-    let cfg = if common::full_scale() {
-        runtime_bench::RuntimeBenchConfig {
-            model: ModelConfig::mini(),
-            prompt_len: 4096,
-            gen_tokens: 256,
-            ..Default::default()
-        }
-    } else {
-        runtime_bench::RuntimeBenchConfig {
-            model: ModelConfig::mini(),
-            prompt_len: 768,
-            gen_tokens: 32,
-            ..Default::default()
-        }
+    let cfg = runtime_bench::RuntimeBenchConfig {
+        model: ModelConfig::mini(),
+        prompt_len: common::scaled(192, 768, 4096),
+        gen_tokens: common::scaled(8, 32, 256),
+        ..Default::default()
     };
     let rows = runtime_bench::run(TABLE1_METHODS, &cfg);
     let exact_resident = rows

@@ -12,7 +12,7 @@ fn main() {
         "Theorem 1 — rate-distortion of the polar codec",
         "ε decays geometrically per bit (O(log 1/ε) bits/coordinate)",
     );
-    let n = if common::full_scale() { 400 } else { 100 };
+    let n = common::scaled(25, 100, 400);
     for d in [32usize, 64, 128] {
         let pts = rate_distortion_curve(d, 4, &[1, 2, 3, 4, 5, 6], n, 42);
         let mut t = report::Table::new(

@@ -6,17 +6,47 @@
 //! Scale: `PQ_BENCH_SCALE=full` runs paper-scale sweeps (minutes);
 //! default is a reduced grid that keeps `cargo bench` under a few
 //! minutes end-to-end while preserving every qualitative comparison.
+//! `PQ_BENCH_SMOKE=1` shrinks every bench to seconds: CI executes each
+//! bench binary end-to-end (tables, asserts, reports) so they cannot
+//! bit-rot, without paying for statistically meaningful timings.
 
 #[allow(dead_code)]
 pub fn full_scale() -> bool {
     std::env::var("PQ_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
 }
 
+/// CI smoke mode: run every code path with trivial iteration counts.
+/// Overrides `full_scale` — a smoke run is never a paper-scale run.
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::var("PQ_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pick an iteration-style count by scale: smoke → `tiny`, paper scale →
+/// `full`, default otherwise.
+#[allow(dead_code)]
+pub fn scaled(tiny: usize, default: usize, full: usize) -> usize {
+    if smoke() {
+        tiny
+    } else if full_scale() {
+        full
+    } else {
+        default
+    }
+}
+
 #[allow(dead_code)]
 pub fn banner(name: &str, what: &str) {
+    let scale = if smoke() {
+        "smoke (PQ_BENCH_SMOKE=1 — execution check, timings meaningless)"
+    } else if full_scale() {
+        "full (PQ_BENCH_SCALE=full)"
+    } else {
+        "reduced (set PQ_BENCH_SCALE=full for paper-scale)"
+    };
     println!("\n################################################################");
     println!("# {name}");
     println!("# {what}");
-    println!("# scale: {}", if full_scale() { "full (PQ_BENCH_SCALE=full)" } else { "reduced (set PQ_BENCH_SCALE=full for paper-scale)" });
+    println!("# scale: {scale}");
     println!("################################################################");
 }

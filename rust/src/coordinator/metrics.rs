@@ -33,6 +33,18 @@ pub struct Metrics {
     pub prefix_evictions: AtomicU64,
     /// Gauge: pool pages currently pinned by prefix caches (all workers).
     pub prefix_cached_pages: AtomicU64,
+    /// Prefix-routing counters: session-less requests directed onto a
+    /// worker advertising their prefix, requests that fell back to the
+    /// spread policy (directory miss or imbalance guard), and directed
+    /// requests whose radix match fell short of the advertised depth by
+    /// gate time — the shortfall prefilled cold (a partial shortfall
+    /// still counts, so `stale_hits` can overlap `prefix_cache.hits`).
+    pub routing_directed: AtomicU64,
+    pub routing_fallback: AtomicU64,
+    pub routing_stale_hits: AtomicU64,
+    /// Gauge: live `(method, fingerprint)` entries in the cross-worker
+    /// prefix directory.
+    pub routing_directory_entries: AtomicU64,
     /// Gauge: resident encoded-KV bytes across the codec-sized pools of
     /// all workers (legacy accounting pools excluded).
     pub kv_resident_bytes: AtomicU64,
@@ -88,6 +100,10 @@ impl Metrics {
             prefix_tokens_reused: AtomicU64::new(0),
             prefix_evictions: AtomicU64::new(0),
             prefix_cached_pages: AtomicU64::new(0),
+            routing_directed: AtomicU64::new(0),
+            routing_fallback: AtomicU64::new(0),
+            routing_stale_hits: AtomicU64::new(0),
+            routing_directory_entries: AtomicU64::new(0),
             kv_resident_bytes: AtomicU64::new(0),
             kv_resident_coords: AtomicU64::new(0),
             tier_demoted_pages: AtomicU64::new(0),
@@ -141,6 +157,8 @@ impl Metrics {
             .fetch_add(ev.tokens_reused, Ordering::Relaxed);
         self.prefix_evictions
             .fetch_add(ev.evicted_nodes, Ordering::Relaxed);
+        self.routing_stale_hits
+            .fetch_add(ev.stale_hits, Ordering::Relaxed);
         if ev.cached_pages >= prev_cached_pages {
             self.prefix_cached_pages
                 .fetch_add((ev.cached_pages - prev_cached_pages) as u64, Ordering::Relaxed);
@@ -251,6 +269,18 @@ impl Metrics {
                     ),
                 ])
             }),
+            ("prefix_routing", {
+                let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+                Json::from_pairs(vec![
+                    ("directed", Json::num(load(&self.routing_directed))),
+                    ("fallback", Json::num(load(&self.routing_fallback))),
+                    ("stale_hits", Json::num(load(&self.routing_stale_hits))),
+                    (
+                        "directory_entries",
+                        Json::num(load(&self.routing_directory_entries)),
+                    ),
+                ])
+            }),
             ("kv_tier", {
                 let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
                 Json::from_pairs(vec![
@@ -316,6 +346,7 @@ mod tests {
             misses,
             tokens_reused,
             evicted_nodes,
+            stale_hits: 0,
             cached_pages,
         };
         m.record_prefix_events(&ev(3, 1, 96, 2, 7), 0);
@@ -340,6 +371,28 @@ mod tests {
             parsed.path("prefix_cache.cached_pages").unwrap().as_f64().unwrap(),
             9.0
         );
+    }
+
+    #[test]
+    fn routing_counters_surface_in_snapshot() {
+        use crate::coordinator::scheduler::PrefixEvents;
+        let m = Metrics::new();
+        m.routing_directed.fetch_add(5, Ordering::Relaxed);
+        m.routing_fallback.fetch_add(2, Ordering::Relaxed);
+        m.routing_directory_entries.store(9, Ordering::Relaxed);
+        // Stale hits arrive through the workers' prefix-event drain.
+        m.record_prefix_events(
+            &PrefixEvents { stale_hits: 1, ..Default::default() },
+            0,
+        );
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        let get = |k: &str| {
+            parsed.path(&format!("prefix_routing.{k}")).unwrap().as_f64().unwrap()
+        };
+        assert_eq!(get("directed"), 5.0);
+        assert_eq!(get("fallback"), 2.0);
+        assert_eq!(get("stale_hits"), 1.0);
+        assert_eq!(get("directory_entries"), 9.0);
     }
 
     #[test]

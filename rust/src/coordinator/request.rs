@@ -17,6 +17,13 @@ pub struct GenRequest {
     pub sampler: SamplerConfig,
     /// Session key for router affinity (e.g. a conversation id).
     pub session: Option<String>,
+    /// Prompt tokens the prefix-routing direction expects to find warm
+    /// on the routed worker (0 = not directed). Set by the server from
+    /// the router's directory match, never by clients; the scheduler
+    /// counts a stale hit when the actual radix match falls short of
+    /// this — the direction raced an eviction and the shortfall
+    /// prefilled cold, exactly like a (possibly partial) plain miss.
+    pub route_hint_tokens: usize,
 }
 
 impl GenRequest {
@@ -29,6 +36,7 @@ impl GenRequest {
             ratio: 0.25,
             sampler: SamplerConfig::greedy(),
             session: None,
+            route_hint_tokens: 0,
         }
     }
 
@@ -84,6 +92,9 @@ pub struct GenResponse {
     pub compression_ratio: f64,
     /// Prompt tokens served from the prefix cache instead of prefilled.
     pub reused_tokens: usize,
+    /// Prompt length of the originating request — lets the server drain
+    /// the router's outstanding-token load by what it actually charged.
+    pub prompt_tokens: usize,
     pub method: String,
 }
 
@@ -162,6 +173,7 @@ mod tests {
             cache_bytes: 1024,
             compression_ratio: 0.24,
             reused_tokens: 48,
+            prompt_tokens: 96,
             method: "polarquant".into(),
         };
         let j = resp.to_json();

@@ -1,57 +1,167 @@
 //! Request router: spreads requests across worker replicas.
 //!
-//! Policy: session affinity when a session key is present (consistent
-//! hashing so a conversation's prefix cache stays on one replica), else
-//! least-loaded by outstanding token count.
+//! Policy, in order:
+//! * **Session affinity** when a session key is present (consistent
+//!   hashing so a conversation's prefix cache stays on one replica).
+//! * **Prefix direction** for session-less page-codec requests when a
+//!   [`PrefixDirectory`] is attached: route to the worker advertising
+//!   the longest matching fingerprint chain — its radix tree already
+//!   holds (or can promote) the encoded prefix pages. A max-imbalance
+//!   guard keeps a hot prefix from starving the other replicas: a
+//!   directed worker more than `guard_tokens` outstanding tokens above
+//!   the least-loaded one is skipped.
+//! * **Spread** otherwise: least-loaded by outstanding prompt tokens
+//!   (or round-robin, the bench baseline).
+//!
+//! Directions are advisory. The directory can lag the workers' radix
+//! trees in both directions (publish happens per scheduler tick), so a
+//! directed request may find its prefix already evicted — the worker
+//! then misses and prefills cold, counting a `stale_hits`; it is never
+//! an error. The router records the expected match length on the
+//! [`Route`] so the scheduler can detect exactly that.
 
+use crate::kvcache::codec::is_page_codec;
+use crate::prefix::directory::PrefixDirectory;
+use crate::util::hash::fnv1a_str;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// How a worker was chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteKind {
+    /// Session-key consistent hash.
+    Session,
+    /// Prefix directory hit within the imbalance guard.
+    Directed,
+    /// Directory consulted but no usable direction (miss, unknown
+    /// workers, or guard tripped) — spread instead.
+    Fallback,
+    /// No directory in play (none attached, or not a page codec).
+    Spread,
+}
+
+/// A routing decision.
+#[derive(Clone, Copy, Debug)]
+pub struct Route {
+    pub worker: usize,
+    pub kind: RouteKind,
+    /// Prompt tokens the directory claims are warm on `worker`
+    /// (page-aligned); 0 unless `kind == Directed`. Carried to the
+    /// worker as the request's route hint so a vanished prefix is
+    /// observable as a stale hit.
+    pub expected_tokens: usize,
+}
 
 /// Router over `n` workers.
 pub struct Router {
     /// Outstanding prompt tokens per worker (updated by the server).
     load: Vec<AtomicU64>,
+    /// Cross-worker prefix directory for session-less direction.
+    directory: Option<Arc<PrefixDirectory>>,
+    /// Outstanding-token gap over the least-loaded worker beyond which
+    /// a directed worker is skipped (the max-imbalance guard).
+    guard_tokens: u64,
+    /// Spread policy: round-robin instead of least-loaded (benchmark
+    /// baseline for directed routing).
+    round_robin: bool,
+    rr_next: AtomicU64,
 }
 
 impl Router {
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
-        Self { load: (0..n).map(|_| AtomicU64::new(0)).collect() }
+        Self {
+            load: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            directory: None,
+            guard_tokens: 0,
+            round_robin: false,
+            rr_next: AtomicU64::new(0),
+        }
+    }
+
+    /// A router that directs session-less traffic via the shared prefix
+    /// directory, guarded by `guard_tokens` of tolerated imbalance.
+    pub fn with_directory(n: usize, dir: Arc<PrefixDirectory>, guard_tokens: u64) -> Self {
+        let mut r = Self::new(n);
+        r.directory = Some(dir);
+        r.guard_tokens = guard_tokens;
+        r
+    }
+
+    /// Switch the spread policy to round-robin (bench baseline). Call
+    /// before sharing the router.
+    pub fn set_round_robin(&mut self, on: bool) {
+        self.round_robin = on;
     }
 
     pub fn n_workers(&self) -> usize {
         self.load.len()
     }
 
-    /// FNV-1a hash for session affinity.
-    fn hash(s: &str) -> u64 {
-        let mut h = 0xcbf29ce484222325u64;
-        for b in s.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x100000001b3);
+    fn least_loaded(&self) -> (usize, u64) {
+        let mut best = 0;
+        let mut best_load = u64::MAX;
+        for (i, l) in self.load.iter().enumerate() {
+            let v = l.load(Ordering::Relaxed);
+            if v < best_load {
+                best_load = v;
+                best = i;
+            }
         }
-        h
+        (best, best_load)
     }
 
-    /// Pick a worker for a request.
-    pub fn route(&self, session: Option<&str>, tokens: usize) -> usize {
-        let idx = match session {
-            Some(s) => (Self::hash(s) % self.load.len() as u64) as usize,
-            None => {
-                // Least loaded.
-                let mut best = 0;
-                let mut best_load = u64::MAX;
-                for (i, l) in self.load.iter().enumerate() {
-                    let v = l.load(Ordering::Relaxed);
-                    if v < best_load {
-                        best_load = v;
-                        best = i;
-                    }
+    fn spread(&self) -> usize {
+        if self.round_robin {
+            (self.rr_next.fetch_add(1, Ordering::Relaxed) % self.load.len() as u64) as usize
+        } else {
+            self.least_loaded().0
+        }
+    }
+
+    fn decide(&self, session: Option<&str>, method: &str, prompt: &[u32]) -> Route {
+        if let Some(s) = session {
+            // FNV-1a consistent hashing for session affinity.
+            let w = (fnv1a_str(s) % self.load.len() as u64) as usize;
+            return Route { worker: w, kind: RouteKind::Session, expected_tokens: 0 };
+        }
+        let dir = match &self.directory {
+            Some(d) if is_page_codec(method) => d,
+            _ => {
+                return Route {
+                    worker: self.spread(),
+                    kind: RouteKind::Spread,
+                    expected_tokens: 0,
                 }
-                best
             }
         };
-        self.load[idx].fetch_add(tokens as u64, Ordering::Relaxed);
-        idx
+        if let Some((tokens, workers)) = dir.lookup(method, prompt) {
+            // Least-loaded advertiser, then the imbalance guard against
+            // the globally least-loaded worker.
+            let cand = workers
+                .into_iter()
+                .filter(|&w| w < self.load.len())
+                .min_by_key(|&w| self.load[w].load(Ordering::Relaxed));
+            if let Some(w) = cand {
+                let (_, min_load) = self.least_loaded();
+                if self.load[w].load(Ordering::Relaxed) <= min_load + self.guard_tokens {
+                    return Route {
+                        worker: w,
+                        kind: RouteKind::Directed,
+                        expected_tokens: tokens,
+                    };
+                }
+            }
+        }
+        Route { worker: self.spread(), kind: RouteKind::Fallback, expected_tokens: 0 }
+    }
+
+    /// Pick a worker for a request and charge its prompt tokens to that
+    /// worker's outstanding load.
+    pub fn route(&self, session: Option<&str>, method: &str, prompt: &[u32]) -> Route {
+        let r = self.decide(session, method, prompt);
+        self.load[r.worker].fetch_add(prompt.len() as u64, Ordering::Relaxed);
+        r
     }
 
     /// Mark a request's tokens as drained from a worker.
@@ -71,12 +181,20 @@ impl Router {
 mod tests {
     use super::*;
 
+    const M: &str = "polarquant-r-offline";
+
+    fn prompt(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
     #[test]
     fn session_affinity_is_stable() {
         let r = Router::new(4);
-        let w1 = r.route(Some("conversation-42"), 10);
+        let w1 = r.route(Some("conversation-42"), M, &prompt(10)).worker;
         for _ in 0..10 {
-            assert_eq!(r.route(Some("conversation-42"), 10), w1);
+            let rt = r.route(Some("conversation-42"), M, &prompt(10));
+            assert_eq!(rt.worker, w1);
+            assert_eq!(rt.kind, RouteKind::Session);
         }
     }
 
@@ -85,7 +203,7 @@ mod tests {
         let r = Router::new(4);
         let mut seen = [false; 4];
         for i in 0..64 {
-            let w = r.route(Some(&format!("s{i}")), 1);
+            let w = r.route(Some(&format!("s{i}")), M, &prompt(1)).worker;
             seen[w] = true;
         }
         assert!(seen.iter().filter(|&&b| b).count() >= 3, "hash should spread");
@@ -94,16 +212,70 @@ mod tests {
     #[test]
     fn least_loaded_balances() {
         let r = Router::new(3);
-        let a = r.route(None, 100);
-        let b = r.route(None, 100);
-        let c = r.route(None, 100);
-        let mut ws = vec![a, b, c];
+        let a = r.route(None, M, &prompt(100));
+        let b = r.route(None, M, &prompt(100));
+        let c = r.route(None, M, &prompt(100));
+        assert_eq!(a.kind, RouteKind::Spread, "no directory attached");
+        let mut ws = vec![a.worker, b.worker, c.worker];
         ws.sort_unstable();
         ws.dedup();
         assert_eq!(ws.len(), 3, "each new request goes to the emptiest worker");
         // After completions, load drains.
-        r.complete(a, 100);
-        assert_eq!(r.load_of(a), 0);
-        assert_eq!(r.route(None, 1), a);
+        r.complete(a.worker, 100);
+        assert_eq!(r.load_of(a.worker), 0);
+        assert_eq!(r.route(None, M, &prompt(1)).worker, a.worker);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3);
+        r.set_round_robin(true);
+        let ws: Vec<usize> = (0..6).map(|_| r.route(None, M, &prompt(5)).worker).collect();
+        assert_eq!(ws, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn directory_directs_anonymous_page_codec_traffic() {
+        let dir = Arc::new(PrefixDirectory::new(4));
+        let r = Router::with_directory(4, Arc::clone(&dir), 1 << 20);
+        let p = prompt(12); // 3 pages
+        // Miss → fallback spread.
+        let rt = r.route(None, M, &p);
+        assert_eq!(rt.kind, RouteKind::Fallback);
+        assert_eq!(rt.expected_tokens, 0);
+        // Worker 2 advertises the full prefix → directed with the depth.
+        dir.advertise(2, M, &p, 3);
+        let rt = r.route(None, M, &p);
+        assert_eq!((rt.worker, rt.kind), (2, RouteKind::Directed));
+        assert_eq!(rt.expected_tokens, 12);
+        // Sessions and non-page codecs bypass the directory.
+        assert_eq!(r.route(Some("s"), M, &p).kind, RouteKind::Session);
+        assert_eq!(r.route(None, "snapkv", &p).kind, RouteKind::Spread);
+        // A retracted entry stops directing.
+        dir.retract(2, M, &p, 3);
+        assert_eq!(r.route(None, M, &p).kind, RouteKind::Fallback);
+    }
+
+    #[test]
+    fn imbalance_guard_spills_hot_prefixes() {
+        let dir = Arc::new(PrefixDirectory::new(4));
+        let r = Router::with_directory(2, Arc::clone(&dir), 30);
+        let p = prompt(8);
+        dir.advertise(0, M, &p, 2);
+        // First hits stay directed while worker 0 is within the guard.
+        assert_eq!(r.route(None, M, &p).kind, RouteKind::Directed);
+        assert_eq!(r.route(None, M, &p).kind, RouteKind::Directed);
+        assert_eq!(r.load_of(0), 16);
+        // 16 > 0 + guard? No (guard 30). Pile on until it trips.
+        assert_eq!(r.route(None, M, &p).kind, RouteKind::Directed);
+        assert_eq!(r.load_of(0), 24);
+        assert_eq!(r.route(None, M, &p).kind, RouteKind::Directed);
+        assert_eq!(r.load_of(0), 32);
+        let rt = r.route(None, M, &p);
+        assert_eq!(rt.kind, RouteKind::Fallback, "guard tripped at 32 > 0 + 30");
+        assert_eq!(rt.worker, 1, "spilled to the least-loaded replica");
+        // Advertisers beyond the worker set are ignored.
+        dir.advertise(9, M, &prompt(4), 1);
+        assert_eq!(r.route(None, M, &prompt(4)).kind, RouteKind::Fallback);
     }
 }

@@ -21,8 +21,9 @@ use crate::kvcache::codec::is_page_codec;
 use crate::kvcache::paged::PagedPool;
 use crate::kvcache::pools::{share_pools, PoolSet, SharedPools};
 use crate::kvcache::tier::{TierManager, TierStats};
-use crate::prefix::{NodeId, PrefixCacheSet, PrefixMatch};
+use crate::prefix::{NodeId, PrefixCacheSet, PrefixDirectory, PrefixMatch};
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One active sequence's scheduler state.
@@ -108,6 +109,11 @@ pub struct PrefixEvents {
     pub misses: u64,
     pub tokens_reused: u64,
     pub evicted_nodes: u64,
+    /// Directed requests whose radix match fell short of the advertised
+    /// depth by gate time (the direction raced an eviction). The
+    /// shortfall prefilled cold like any miss — possibly partially, so
+    /// a stale hit can coexist with a (shallower) prefix hit.
+    pub stale_hits: u64,
     /// Absolute gauge (not a delta): pool pages the cache holds now.
     pub cached_pages: usize,
 }
@@ -154,6 +160,10 @@ pub struct Scheduler {
     /// pressure and promote back on a radix match, so eviction only
     /// truly drops KV once the disk budget is exhausted too.
     pub tier: Option<TierManager>,
+    /// Cross-worker prefix directory plus this worker's index: radix
+    /// insert/evict events drain into it via
+    /// [`publish_directory`](Self::publish_directory).
+    directory: Option<(Arc<PrefixDirectory>, usize)>,
     events: PrefixEvents,
     reported_evictions: u64,
     /// Promotion wall time accumulated since the last tier-events drain.
@@ -176,6 +186,7 @@ impl Scheduler {
             max_active,
             prefix: None,
             tier: None,
+            directory: None,
             events: PrefixEvents::default(),
             reported_evictions: 0,
             pending_promote_stall_us: 0,
@@ -188,6 +199,37 @@ impl Scheduler {
     pub fn set_tier(&mut self, tier: TierManager) {
         debug_assert!(self.prefix.is_some(), "tier spills prefix-cache leaves");
         self.tier = Some(tier);
+    }
+
+    /// Attach the cross-worker prefix directory: this scheduler's radix
+    /// trees start logging insert/evict events, which
+    /// [`publish_directory`](Self::publish_directory) drains into the
+    /// shared directory under `worker`'s name. Requires the prefix
+    /// cache (the directory advertises radix paths, nothing else).
+    pub fn set_directory(&mut self, dir: Arc<PrefixDirectory>, worker: usize) {
+        debug_assert!(self.prefix.is_some(), "directory advertises radix paths");
+        if let Some(pc) = &mut self.prefix {
+            pc.set_publish(true);
+        }
+        self.directory = Some((dir, worker));
+    }
+
+    /// Flush radix insert/evict events to the prefix directory; returns
+    /// the directory's live entry count (the gauge), or `None` when no
+    /// directory is attached or there was nothing to flush (idle ticks
+    /// must not touch the lock the routing path contends on). Called
+    /// once per serving tick — between two flushes the directory may
+    /// lag the trees, which routing tolerates by design (a stale
+    /// direction is a plain miss).
+    pub fn publish_directory(&mut self) -> Option<usize> {
+        let (dir, worker) = self.directory.as_ref()?;
+        let events = self.prefix.as_mut().map(|pc| pc.take_dir_events())?;
+        if events.is_empty() {
+            return None;
+        }
+        // One lock acquisition for the whole tick's events — the router
+        // contends on the same directory lock.
+        Some(dir.apply_batch(*worker, &events))
     }
 
     /// A scheduler with the radix-tree prefix cache enabled; the cache
@@ -532,6 +574,13 @@ impl Scheduler {
                     self.events.misses += 1;
                 }
                 self.events.tokens_reused += reused as u64;
+                // A directed request whose advertised prefix shrank
+                // before the gate (direction raced an eviction): it was
+                // just served as the plain (partial) miss above — count
+                // the staleness so routing lag is observable.
+                if t.req.route_hint_tokens > 0 && m.tokens < t.req.route_hint_tokens {
+                    self.events.stale_hits += 1;
+                }
                 pc.enforce_budget(&mut pools);
             }
         }
@@ -703,7 +752,7 @@ impl Scheduler {
             .tree_methods()
             .into_iter()
             .filter(|m| {
-                pools.pool(m).map_or(false, |p| p.occupancy_fraction() > high)
+                pools.pool(m).is_some_and(|p| p.occupancy_fraction() > high)
             })
             .collect();
         while !draining.is_empty() {
@@ -808,6 +857,7 @@ impl Scheduler {
                 cache_bytes: engine.cache_bytes(seq.engine_id),
                 compression_ratio: engine.compression_ratio(seq.engine_id),
                 reused_tokens: seq.reused_tokens,
+                prompt_tokens: seq.req.prompt.len(),
                 method: seq.req.method.clone(),
             };
             engine.release(seq.engine_id);
@@ -1366,6 +1416,48 @@ mod tests {
             let m = pc.match_prefix(M, &vec![i + 1; 8]);
             assert_eq!(m.tokens + m.disk_tokens, 8, "prompt {i} still matchable");
         }
+    }
+
+    #[test]
+    fn stale_route_hint_counts_and_degrades_to_plain_miss() {
+        let mut s = sched_prefix(16, 4, 16);
+        let mut e = MockEngine::default();
+        // The router claimed 12 warm tokens, but nothing is cached (the
+        // advertised entry was evicted between direction and gate):
+        // admission serves a plain cold miss and counts the staleness.
+        let mut t = tracked_prompt(1, vec![7; 12], 4);
+        t.req.route_hint_tokens = 12;
+        s.admit(vec![t], &mut e);
+        assert_eq!(e.reuse_hints, vec![0], "clean cold prefill, no panic");
+        run_to_completion(&mut s, &mut e);
+        let ev = s.take_prefix_events();
+        assert_eq!((ev.hits, ev.misses, ev.stale_hits), (0, 1, 1));
+        // A satisfied direction is not stale.
+        let mut t = tracked_prompt(2, vec![7; 12], 4);
+        t.req.route_hint_tokens = 12;
+        s.admit(vec![t], &mut e);
+        run_to_completion(&mut s, &mut e);
+        let ev = s.take_prefix_events();
+        assert_eq!((ev.hits, ev.stale_hits), (1, 0));
+    }
+
+    #[test]
+    fn scheduler_publishes_inserts_and_evictions_to_directory() {
+        let mut s = sched_prefix(8, 4, 100);
+        let dir = Arc::new(PrefixDirectory::new(4));
+        s.set_directory(Arc::clone(&dir), 3);
+        let mut e = MockEngine::default();
+        let hot: Vec<u32> = vec![1; 16];
+        s.admit(vec![tracked_prompt(1, hot.clone(), 4)], &mut e);
+        run_to_completion(&mut s, &mut e);
+        assert_eq!(s.publish_directory(), Some(4), "4 page depths advertised");
+        assert_eq!(dir.lookup(M, &hot), Some((16, vec![3])));
+        // A stranger's gate evicts the cold entry → retraction on flush.
+        let g = gate(&mut s, &[2u32; 16], 4, 0, 0).expect("room made");
+        s.release_gate(g);
+        s.publish_directory();
+        assert_eq!(dir.lookup(M, &hot), None, "evicted entries die with their pages");
+        assert_eq!(dir.entries(), 0);
     }
 
     #[test]

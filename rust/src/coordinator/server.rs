@@ -12,11 +12,12 @@
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResponse, Tracked};
-use crate::coordinator::router::Router;
+use crate::coordinator::router::{RouteKind, Router};
 use crate::coordinator::scheduler::{AdmitGate, PendingPages, Scheduler};
 use crate::coordinator::worker::NativeWorker;
 use crate::kvcache::pools::{share_pools, PoolSet};
 use crate::kvcache::tier::{TierConfig, TierManager};
+use crate::prefix::PrefixDirectory;
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::util::json::Json;
@@ -27,6 +28,11 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
+
+/// Page size (tokens) of every worker's per-codec pools — and therefore
+/// the chunk size of the prefix directory's fingerprints, which must
+/// match or directed requests would never line up with radix paths.
+pub const POOL_PAGE_TOKENS: usize = 16;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -63,6 +69,19 @@ pub struct ServerConfig {
     /// (`None` = per-pool page budgets only). Bounds what a
     /// mixed-method burst can keep resident across all codec pools.
     pub kv_byte_cap: Option<usize>,
+    /// Cross-worker prefix routing: workers advertise their radix
+    /// paths in a shared [`PrefixDirectory`] and the router sends
+    /// session-less page-codec requests to the worker holding the
+    /// longest advertised prefix. Requires `prefix_cache`; no-op with
+    /// one worker (the directory still feeds the `/stats` gauges).
+    pub prefix_routing: bool,
+    /// Outstanding-token imbalance the router tolerates on a directed
+    /// worker before spilling the request to the spread policy (keeps a
+    /// hot prefix from starving the other replicas).
+    pub route_guard_tokens: usize,
+    /// Spread session-less traffic round-robin instead of least-loaded
+    /// (the benchmark baseline for directed routing).
+    pub round_robin: bool,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +102,9 @@ impl Default for ServerConfig {
             ram_high_water: tier.high_water,
             ram_low_water: tier.low_water,
             kv_byte_cap: None,
+            prefix_routing: true,
+            route_guard_tokens: 4096,
+            round_robin: false,
         }
     }
 }
@@ -95,6 +117,8 @@ enum WorkerMsg {
 /// The in-process serving handle.
 pub struct Server {
     router: Arc<Router>,
+    /// Cross-worker prefix directory when prefix routing is on.
+    directory: Option<Arc<PrefixDirectory>>,
     worker_txs: Vec<Sender<WorkerMsg>>,
     resp_rx: Mutex<Receiver<(usize, GenResponse)>>,
     pub metrics: Arc<Metrics>,
@@ -107,7 +131,18 @@ impl Server {
     /// Start worker threads, each with its own model replica.
     pub fn start(cfg: ServerConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let router = Arc::new(Router::new(cfg.workers));
+        let directory = (cfg.prefix_cache && cfg.prefix_routing)
+            .then(|| Arc::new(PrefixDirectory::new(POOL_PAGE_TOKENS)));
+        let mut router = match &directory {
+            Some(d) => Router::with_directory(
+                cfg.workers,
+                Arc::clone(d),
+                cfg.route_guard_tokens as u64,
+            ),
+            None => Router::new(cfg.workers),
+        };
+        router.set_round_robin(cfg.round_robin);
+        let router = Arc::new(router);
         let (resp_tx, resp_rx) = mpsc::channel();
         let stopping = Arc::new(AtomicBool::new(false));
         let mut worker_txs = Vec::new();
@@ -119,17 +154,19 @@ impl Server {
             let resp_tx = resp_tx.clone();
             let metrics = Arc::clone(&metrics);
             let stopping = Arc::clone(&stopping);
+            let dir = directory.clone();
             handles.push(
                 thread::Builder::new()
                     .name(format!("pq-serve-{w}"))
                     .spawn(move || {
-                        worker_loop(w, cfg_c, rx, resp_tx, metrics, stopping);
+                        worker_loop(w, cfg_c, rx, resp_tx, metrics, stopping, dir);
                     })
                     .expect("spawn worker"),
             );
         }
         Self {
             router,
+            directory,
             worker_txs,
             resp_rx: Mutex::new(resp_rx),
             metrics,
@@ -137,6 +174,12 @@ impl Server {
             next_id: AtomicU64::new(0),
             stopping,
         }
+    }
+
+    /// The shared prefix directory (present when prefix routing is on);
+    /// exposed for tests and staleness injection.
+    pub fn directory(&self) -> Option<Arc<PrefixDirectory>> {
+        self.directory.clone()
     }
 
     /// Submit a request; returns its assigned id.
@@ -147,8 +190,20 @@ impl Server {
         self.metrics
             .tokens_prefilled
             .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
-        let w = self.router.route(req.session.as_deref(), req.prompt.len());
-        self.worker_txs[w]
+        let r = self
+            .router
+            .route(req.session.as_deref(), &req.method, &req.prompt);
+        req.route_hint_tokens = r.expected_tokens;
+        match r.kind {
+            RouteKind::Directed => {
+                self.metrics.routing_directed.fetch_add(1, Ordering::Relaxed);
+            }
+            RouteKind::Fallback => {
+                self.metrics.routing_fallback.fetch_add(1, Ordering::Relaxed);
+            }
+            RouteKind::Session | RouteKind::Spread => {}
+        }
+        self.worker_txs[r.worker]
             .send(WorkerMsg::Submit(Tracked::new(req)))
             .expect("worker alive");
         id
@@ -158,7 +213,8 @@ impl Server {
     pub fn recv_timeout(&self, timeout: Duration) -> Option<GenResponse> {
         match self.resp_rx.lock().unwrap().recv_timeout(timeout) {
             Ok((w, resp)) => {
-                self.router.complete(w, resp.tokens.len());
+                // Drain what `submit` charged: the prompt tokens.
+                self.router.complete(w, resp.prompt_tokens);
                 Some(resp)
             }
             Err(_) => None,
@@ -199,6 +255,7 @@ fn worker_loop(
     resp_tx: Sender<(usize, GenResponse)>,
     metrics: Arc<Metrics>,
     stopping: Arc<AtomicBool>,
+    directory: Option<Arc<PrefixDirectory>>,
 ) {
     let weights = Weights::synthetic(&cfg.model, cfg.seed);
     let mut batcher = Batcher::new(cfg.batch.clone());
@@ -207,7 +264,7 @@ fn worker_loop(
     // are per-codec, each with token slots exactly that codec's
     // `slot_bytes()` wide — resident bytes track the method's true
     // encoded width (PolarQuant ≈4 bits/coord vs exact's 32).
-    let mut pool_set = PoolSet::for_model(&cfg.model, 16, cfg.pool_tokens);
+    let mut pool_set = PoolSet::for_model(&cfg.model, POOL_PAGE_TOKENS, cfg.pool_tokens);
     pool_set.set_byte_cap(cfg.kv_byte_cap);
     let pools = share_pools(pool_set);
     let mut engine = NativeWorker::with_pools(weights, Arc::clone(&pools));
@@ -223,6 +280,12 @@ fn worker_loop(
         Scheduler::from_shared(Arc::clone(&pools), cfg.max_active)
     };
     if cfg.prefix_cache {
+        if let Some(dir) = directory {
+            // Publish this worker's radix paths so the router can send
+            // anonymous shared-prefix traffic here instead of
+            // re-prefilling cold on whichever replica the spread picks.
+            sched.set_directory(dir, worker_idx);
+        }
         if let Some(dir) = &cfg.spill_dir {
             // Per-pid subdir: two server processes pointed at the same
             // spill dir must never truncate each other's live segments
@@ -320,6 +383,7 @@ fn worker_loop(
                         cache_bytes: 0,
                         compression_ratio: 1.0,
                         reused_tokens: 0,
+                        prompt_tokens: t.req.prompt.len(),
                         method: t.req.method,
                     };
                     let _ = resp_tx.send((worker_idx, resp));
@@ -340,6 +404,17 @@ fn worker_loop(
         let tev = sched.take_tier_events();
         metrics.record_tier_events(&tev, reported_tier);
         reported_tier = (tev.ram_bytes as u64, tev.disk_bytes as u64);
+
+        // Flush radix insert/evict events to the prefix directory BEFORE
+        // the decode round: a finished response therefore implies its
+        // prompt is advertised, so a follow-up sharing the prefix routes
+        // warm. (The directory may still lag mid-flight — a stale
+        // direction degrades to a plain miss and `stale_hits` counts it.)
+        if let Some(entries) = sched.publish_directory() {
+            metrics
+                .routing_directory_entries
+                .store(entries as u64, Ordering::Relaxed);
+        }
 
         // One decode round.
         if !sched.active.is_empty() {
@@ -408,7 +483,8 @@ fn handle_conn(
                 Some("stats") => server.metrics.snapshot(),
                 Some("shutdown") => {
                     shutdown.store(true, Ordering::SeqCst);
-                    writeln!(writer, "{}", Json::from_pairs(vec![("ok", Json::Bool(true))]).encode())?;
+                    let ok = Json::from_pairs(vec![("ok", Json::Bool(true))]);
+                    writeln!(writer, "{}", ok.encode())?;
                     break;
                 }
                 Some(other) => {
@@ -567,13 +643,16 @@ mod tests {
             });
             let a: Vec<u32> = (0..48).map(|x| (x * 5 + 2) % 64).collect();
             let b: Vec<u32> = (0..80).map(|x| (x * 3 + 1) % 64).collect();
-            let r1 = s.generate_blocking(GenRequest::new(0, a.clone(), 4), Duration::from_secs(60)).expect("a cold");
+            let ask = |p: Vec<u32>| {
+                s.generate_blocking(GenRequest::new(0, p, 4), Duration::from_secs(60))
+            };
+            let r1 = ask(a.clone()).expect("a cold");
             assert_eq!(r1.reused_tokens, 0);
             // B needs more pages than are free: A's cold pages make room
             // (evicted without the tier, demoted to disk with it).
-            let rb = s.generate_blocking(GenRequest::new(0, b, 4), Duration::from_secs(60)).expect("b");
+            let rb = ask(b).expect("b");
             assert!(!rb.tokens.is_empty());
-            let r2 = s.generate_blocking(GenRequest::new(0, a, 4), Duration::from_secs(60)).expect("a again");
+            let r2 = ask(a).expect("a again");
             let snap = Json::parse(&s.metrics.snapshot().encode()).unwrap();
             let tier = |k: &str| snap.path(&format!("kv_tier.{k}")).unwrap().as_f64().unwrap();
             let stats = (
@@ -595,6 +674,64 @@ mod tests {
         assert!(promoted >= 3.0, "and promoted back: {promoted}");
         assert!(disk_bytes > 0.0, "B's cold pages remain spilled");
         assert_eq!(tokens.len(), 4, "generation unaffected by the tier");
+    }
+
+    #[test]
+    fn anonymous_traffic_routes_onto_warm_pages() {
+        // Two workers, no session keys: the first sighting spreads cold;
+        // once its worker publishes, the repeat is DIRECTED to the same
+        // replica and reuses the encoded pages instead of re-prefilling.
+        let s = test_server(2);
+        let prompt: Vec<u32> = (0..48).map(|x| (x * 5 + 2) % 64).collect();
+        let r1 = s
+            .generate_blocking(GenRequest::new(0, prompt.clone(), 4), Duration::from_secs(60))
+            .expect("cold");
+        assert_eq!(r1.reused_tokens, 0);
+        let r2 = s
+            .generate_blocking(GenRequest::new(0, prompt.clone(), 4), Duration::from_secs(60))
+            .expect("warm");
+        // Full-prompt match: the engine keeps one token to prefill.
+        assert_eq!(r2.reused_tokens, 47, "directed onto the warm replica");
+        let snap = Json::parse(&s.metrics.snapshot().encode()).unwrap();
+        let get = |k: &str| snap.path(&format!("prefix_routing.{k}")).unwrap().as_f64().unwrap();
+        assert_eq!(get("directed"), 1.0);
+        assert_eq!(get("fallback"), 1.0, "the cold sighting fell back");
+        assert_eq!(get("stale_hits"), 0.0);
+        assert!(get("directory_entries") >= 3.0, "3 page depths advertised");
+        s.shutdown();
+    }
+
+    #[test]
+    fn stale_direction_degrades_to_clean_miss() {
+        // Staleness injection: the directory advertises a prefix for a
+        // worker whose radix tree does not hold it (as after an eviction
+        // the router has not yet seen). The request is directed, misses
+        // cleanly at the gate, prefills cold, and counts a stale hit —
+        // with exactly the tokens a never-directed request produces.
+        let reference = {
+            let s = test_server(1);
+            let mut req = GenRequest::new(0, (0..48).map(|x| x % 64).collect(), 4);
+            req.session = Some("pin".into());
+            let r = s.generate_blocking(req, Duration::from_secs(60)).expect("ref");
+            s.shutdown();
+            r.tokens
+        };
+        let s = test_server(2);
+        let prompt: Vec<u32> = (0..48).map(|x| x % 64).collect();
+        let dir = s.directory().expect("routing on by default");
+        for w in 0..2 {
+            dir.advertise(w, "polarquant-r-offline", &prompt, 3);
+        }
+        let resp = s
+            .generate_blocking(GenRequest::new(0, prompt, 4), Duration::from_secs(60))
+            .expect("directed");
+        assert_eq!(resp.reused_tokens, 0, "nothing was actually cached");
+        assert_eq!(resp.tokens, reference, "no wrong tokens from the stale direction");
+        let snap = Json::parse(&s.metrics.snapshot().encode()).unwrap();
+        let get = |k: &str| snap.path(&format!("prefix_routing.{k}")).unwrap().as_f64().unwrap();
+        assert_eq!(get("directed"), 1.0);
+        assert_eq!(get("stale_hits"), 1.0);
+        s.shutdown();
     }
 
     #[test]

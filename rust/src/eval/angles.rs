@@ -86,7 +86,13 @@ fn collect(
             let mean = crate::util::stats::mean(&angles);
             let var = angles.iter().map(|a| (a - mean).powi(2)).sum::<f64>()
                 / angles.len().max(1) as f64;
-            AngleLevelReport { level: l + 1, histogram: h, tv_to_analytic: tv, mean, std: var.sqrt() }
+            AngleLevelReport {
+                level: l + 1,
+                histogram: h,
+                tv_to_analytic: tv,
+                mean,
+                std: var.sqrt(),
+            }
         })
         .collect()
 }
@@ -141,7 +147,12 @@ mod tests {
         // covers the shared-rotation anisotropy residual).
         for l in 1..4 {
             let r = &exp.with_precondition[l];
-            assert!((r.mean - std::f64::consts::FRAC_PI_4).abs() < 0.15, "level {} mean {}", l + 1, r.mean);
+            assert!(
+                (r.mean - std::f64::consts::FRAC_PI_4).abs() < 0.15,
+                "level {} mean {}",
+                l + 1,
+                r.mean
+            );
         }
         assert!(
             exp.with_precondition[3].std < exp.with_precondition[1].std,

@@ -84,7 +84,12 @@ pub fn f(x: f64, decimals: usize) -> String {
 
 /// Render a recall grid (Fig. 3 style) as a text heatmap: rows = depths,
 /// cols = context lengths, cells = 0–9 recall deciles.
-pub fn heatmap(title: &str, col_labels: &[String], row_labels: &[String], grid: &[Vec<f64>]) -> String {
+pub fn heatmap(
+    title: &str,
+    col_labels: &[String],
+    row_labels: &[String],
+    grid: &[Vec<f64>],
+) -> String {
     let mut out = String::new();
     let _ = writeln!(out, "\n== {title} ==  (cells: recall 0–9, 9≈1.0)");
     let _ = write!(out, "{:>10} ", "depth\\ctx");
@@ -115,7 +120,8 @@ mod tests {
         let s = t.render();
         assert!(s.contains("Demo"));
         assert!(s.contains("| polarquant |"));
-        let widths: Vec<usize> = s.lines().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
+        let widths: Vec<usize> =
+            s.lines().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
         assert!(widths.windows(2).all(|w| w[0] == w[1]), "aligned rows");
     }
 

@@ -84,6 +84,20 @@ fn model_cfg(name: &str) -> ModelConfig {
     })
 }
 
+/// Strict on|off flag parsing — a typo'd value must fail fast, not
+/// silently pick a default (an A/B run with `--prefix-routing false`
+/// silently measuring routed-vs-routed would be worse than an error).
+fn on_off(args: &Args, key: &str) -> bool {
+    match args.get(key).as_str() {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("--{key} must be on|off, got {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_serve(argv: Vec<String>) {
     let a = parse(
         argv,
@@ -99,7 +113,17 @@ fn cmd_serve(argv: Vec<String>) {
             .opt("disk-budget-mb", "256", "spill-tier byte budget per worker (MiB)")
             .opt("ram-high-water", "0.90", "pool occupancy fraction that triggers demotion")
             .opt("ram-low-water", "0.75", "occupancy fraction demotion drains down to")
-            .opt("kv-byte-cap-mb", "0", "global resident-KV byte cap per worker (MiB, 0 = off)"),
+            .opt("kv-byte-cap-mb", "0", "global resident-KV byte cap per worker (MiB, 0 = off)")
+            .opt(
+                "prefix-routing",
+                "on",
+                "route anonymous traffic to the worker holding its prefix (on|off)",
+            )
+            .opt(
+                "route-guard-tokens",
+                "4096",
+                "max outstanding-token imbalance a directed worker may carry",
+            ),
     );
     let spill = a.get("spill-dir");
     let byte_cap_mb = a.get_usize("kv-byte-cap-mb");
@@ -109,12 +133,14 @@ fn cmd_serve(argv: Vec<String>) {
         workers: a.get_usize("workers"),
         pool_tokens: a.get_usize("pool-tokens"),
         max_active: a.get_usize("max-active"),
-        prefix_cache: a.get("prefix-cache") != "off",
+        prefix_cache: on_off(&a, "prefix-cache"),
         spill_dir: (!spill.is_empty()).then(|| spill.clone().into()),
         disk_budget_bytes: a.get_usize("disk-budget-mb") << 20,
         ram_high_water: a.get_f64("ram-high-water"),
         ram_low_water: a.get_f64("ram-low-water"),
         kv_byte_cap: (byte_cap_mb > 0).then_some(byte_cap_mb << 20),
+        prefix_routing: on_off(&a, "prefix-routing"),
+        route_guard_tokens: a.get_usize("route-guard-tokens"),
         ..Default::default()
     };
     let addr = a.get("addr");
@@ -142,7 +168,11 @@ fn cmd_generate(argv: Vec<String>) {
             .opt("method", "polarquant-r-offline", "cache method")
             .opt("ratio", "0.25", "compression ratio"),
     );
-    let cfg = ServerConfig { model: model_cfg(&a.get("model")), seed: a.get_u64("seed"), ..Default::default() };
+    let cfg = ServerConfig {
+        model: model_cfg(&a.get("model")),
+        seed: a.get_u64("seed"),
+        ..Default::default()
+    };
     let vocab = cfg.model.vocab;
     let prompt: Vec<u32> = if a.get_usize("prompt-len") > 0 {
         use polarquant::util::rng::{Pcg64, Rng};
@@ -211,7 +241,8 @@ fn cmd_angles(argv: Vec<String>) {
         }
     }
     let mut t = report::Table::new("Fig2 summary", &["level", "setting", "mean", "std", "TV"]);
-    for (tag, reports) in [("precond", &exp.with_precondition), ("raw", &exp.without_precondition)] {
+    let tagged = [("precond", &exp.with_precondition), ("raw", &exp.without_precondition)];
+    for (tag, reports) in tagged {
         for r in reports {
             t.row(vec![
                 r.level.to_string(),
@@ -264,7 +295,8 @@ fn cmd_niah(argv: Vec<String>) {
     let mut summary = report::Table::new("Fig3 mean recall", &["method", "mean recall"]);
     for m in &methods {
         let r = niah::run_method(m, &cfg);
-        print!("{}", report::heatmap(&format!("Fig 3 — {m}"), &col_labels, &row_labels, &r.recall));
+        let map = report::heatmap(&format!("Fig 3 — {m}"), &col_labels, &row_labels, &r.recall);
+        print!("{map}");
         summary.row(vec![m.to_string(), report::f(r.mean_recall, 3)]);
     }
     summary.print();

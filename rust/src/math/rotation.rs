@@ -185,7 +185,9 @@ impl Rotation {
 
     pub fn dim(&self) -> usize {
         match self {
-            Rotation::Identity { d } | Rotation::Dense { d, .. } | Rotation::FastHadamard { d, .. } => *d,
+            Rotation::Identity { d }
+            | Rotation::Dense { d, .. }
+            | Rotation::FastHadamard { d, .. } => *d,
         }
     }
 

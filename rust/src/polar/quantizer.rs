@@ -405,7 +405,12 @@ impl PolarQuantizer {
     /// the reconstruction: contract the expansion tree against the query
     /// bottom-up (level-1 via the prepared table, deeper levels via the
     /// trig LUTs), finishing with a dot against the fp16 radii.
-    pub fn score(&self, prepared: &PreparedQuery, code: &QuantizedVector, scratch: &mut Vec<f32>) -> f32 {
+    pub fn score(
+        &self,
+        prepared: &PreparedQuery,
+        code: &QuantizedVector,
+        scratch: &mut Vec<f32>,
+    ) -> f32 {
         self.score_with(&prepared.level1_table, prepared.k1, &code.radii, &code.codes, scratch)
     }
 

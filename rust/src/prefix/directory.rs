@@ -1,0 +1,283 @@
+//! Cross-worker prefix directory: route anonymous traffic onto warm pages.
+//!
+//! Router session-affinity only helps requests that carry a session key;
+//! anonymous traffic sharing a system prompt or few-shot preamble lands
+//! on whichever replica the spread policy picks and re-prefills cold.
+//! PolarQuant's normalization-free slots make cached pages freely
+//! shareable, so the only missing piece is *knowing where they are*:
+//! each worker's scheduler publishes compact fingerprints of its radix
+//! paths here, and the [`Router`](crate::coordinator::router::Router)
+//! consults the directory to send a session-less request to the worker
+//! advertising the longest matching fingerprint chain.
+//!
+//! Fingerprints are chained rolling hashes, one per page-aligned token
+//! chunk: the hash state carries across chunks, so the fingerprint at
+//! depth `d` identifies the entire `d`-page prefix, and one
+//! `(method, fingerprint)` key is all a lookup needs per depth. Entries
+//! are per-codec (`method`-keyed) because pages hold encoded bytes and
+//! never match across codecs.
+//!
+//! Consistency model: the directory is *advisory*. Advertisements are
+//! reference-counted per worker against radix-node lifetimes — a node
+//! advertises exactly the depths its own edge covers when it gains
+//! fresh pages, and retracts them when it is truly evicted; splits move
+//! pages between nodes without changing coverage, and tier demotion
+//! keeps the entry advertised (a spilled leaf is still matchable — it
+//! promotes back on the hit). Workers flush publish events after every
+//! scheduler tick, so the directory may briefly lag the trees in either
+//! direction. A stale direction is therefore *never* an error: the
+//! routed worker just misses (or part-misses) in its radix tree and
+//! prefills the difference, exactly like any cold request — the
+//! scheduler counts those as `stale_hits` so the lag is observable.
+
+use crate::util::hash::{fnv1a, FNV1A_SEED};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One radix-tree mutation to replay into the directory: a node gained
+/// fresh pages (`retract == false`) or was truly evicted
+/// (`retract == true`). `tokens` is the full root-to-node token path
+/// (page-aligned by construction) and `pages` the node's own edge pages
+/// — the event covers the deepest `pages` page-depths of `tokens`.
+#[derive(Clone, Debug)]
+pub struct DirEvent {
+    pub retract: bool,
+    pub tokens: Vec<u32>,
+    pub pages: usize,
+}
+
+/// Per-fingerprint advertisers: worker index → reference count. Counts
+/// are per radix node, so a worker's entry dies exactly when its last
+/// node covering that prefix depth does.
+type WorkerCounts = BTreeMap<usize, u32>;
+
+/// All advertised fingerprints of one codec's trees.
+type FpTable = BTreeMap<u64, WorkerCounts>;
+
+/// The shared cross-worker prefix directory. Thread-safe; one instance
+/// is shared by the router and every worker's scheduler.
+pub struct PrefixDirectory {
+    page_tokens: usize,
+    tables: Mutex<BTreeMap<String, FpTable>>,
+}
+
+impl PrefixDirectory {
+    pub fn new(page_tokens: usize) -> Self {
+        assert!(page_tokens > 0);
+        Self { page_tokens, tables: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Chained FNV-1a fingerprints, one per *full* page chunk of
+    /// `tokens`. The hash state rolls across chunks, so `fps[d-1]`
+    /// commits to the whole `d`-page prefix.
+    pub fn fingerprints(&self, tokens: &[u32]) -> Vec<u64> {
+        let mut fps = Vec::with_capacity(tokens.len() / self.page_tokens);
+        let mut h = FNV1A_SEED;
+        for chunk in tokens.chunks_exact(self.page_tokens) {
+            for t in chunk {
+                h = fnv1a(h, &t.to_le_bytes());
+            }
+            fps.push(h);
+        }
+        fps
+    }
+
+    /// Advertise/retract under an already-held table lock (the flush
+    /// path batches a whole tick's events into one acquisition).
+    fn apply_locked(
+        &self,
+        tables: &mut BTreeMap<String, FpTable>,
+        worker: usize,
+        method: &str,
+        tokens: &[u32],
+        own_pages: usize,
+        retract: bool,
+    ) {
+        let fps = self.fingerprints(tokens);
+        let total = fps.len();
+        let own = own_pages.min(total);
+        if !retract {
+            let table = tables.entry(method.to_string()).or_default();
+            for fp in &fps[total - own..] {
+                *table.entry(*fp).or_default().entry(worker).or_insert(0) += 1;
+            }
+            return;
+        }
+        // Unknown entries are ignored on retract (the directory may
+        // have been created after the node was).
+        let Some(table) = tables.get_mut(method) else {
+            return;
+        };
+        for fp in &fps[total - own..] {
+            if let Some(counts) = table.get_mut(fp) {
+                if let Some(c) = counts.get_mut(&worker) {
+                    *c -= 1;
+                    if *c == 0 {
+                        counts.remove(&worker);
+                    }
+                }
+                if counts.is_empty() {
+                    table.remove(fp);
+                }
+            }
+        }
+        if table.is_empty() {
+            tables.remove(method);
+        }
+    }
+
+    /// Advertise the deepest `own_pages` page-depths of `tokens` for
+    /// `worker` (the depths a freshly inserted radix node covers; its
+    /// ancestors advertised theirs at their own insert).
+    pub fn advertise(&self, worker: usize, method: &str, tokens: &[u32], own_pages: usize) {
+        let mut tables = self.tables.lock().unwrap();
+        self.apply_locked(&mut tables, worker, method, tokens, own_pages, false);
+    }
+
+    /// Retract what [`advertise`](Self::advertise) published for a now
+    /// truly-evicted node.
+    pub fn retract(&self, worker: usize, method: &str, tokens: &[u32], own_pages: usize) {
+        let mut tables = self.tables.lock().unwrap();
+        self.apply_locked(&mut tables, worker, method, tokens, own_pages, true);
+    }
+
+    /// Replay one drained radix event for `worker`.
+    pub fn apply(&self, worker: usize, method: &str, ev: &DirEvent) {
+        let mut tables = self.tables.lock().unwrap();
+        self.apply_locked(&mut tables, worker, method, &ev.tokens, ev.pages, ev.retract);
+    }
+
+    /// Replay a whole tick's drained events for `worker` under ONE lock
+    /// acquisition; returns the live entry count (the gauge) so the
+    /// caller doesn't need a second acquisition either. The routing
+    /// path contends on this same lock, so the flush must not take it
+    /// once per event.
+    pub fn apply_batch(&self, worker: usize, events: &[(String, DirEvent)]) -> usize {
+        let mut tables = self.tables.lock().unwrap();
+        for (method, ev) in events {
+            self.apply_locked(&mut tables, worker, method, &ev.tokens, ev.pages, ev.retract);
+        }
+        tables.values().map(|t| t.len()).sum()
+    }
+
+    /// Deepest advertised prefix of `prompt` under `method`'s codec:
+    /// `(matched_tokens, advertising workers)`, or `None` on a miss.
+    /// Walked deepest-first so the first hit is the longest chain.
+    pub fn lookup(&self, method: &str, prompt: &[u32]) -> Option<(usize, Vec<usize>)> {
+        let fps = self.fingerprints(prompt);
+        let tables = self.tables.lock().unwrap();
+        let table = tables.get(method)?;
+        for (d, fp) in fps.iter().enumerate().rev() {
+            if let Some(counts) = table.get(fp) {
+                if !counts.is_empty() {
+                    let workers = counts.keys().copied().collect();
+                    return Some(((d + 1) * self.page_tokens, workers));
+                }
+            }
+        }
+        None
+    }
+
+    /// Live `(method, fingerprint)` entries across all codecs — the
+    /// `prefix_routing.directory_entries` gauge.
+    pub fn entries(&self) -> usize {
+        self.tables.lock().unwrap().values().map(|t| t.len()).sum()
+    }
+
+    /// Test/debug view of one codec's table: fingerprint → advertising
+    /// workers, refcounts collapsed.
+    pub fn table_snapshot(&self, method: &str) -> BTreeMap<u64, Vec<usize>> {
+        self.tables
+            .lock()
+            .unwrap()
+            .get(method)
+            .map(|t| {
+                t.iter()
+                    .map(|(fp, counts)| (*fp, counts.keys().copied().collect()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: &str = "polarquant-r-offline";
+
+    fn prompt(head: u32, pages: usize, pt: usize) -> Vec<u32> {
+        (0..pages * pt).map(|i| head * 1000 + i as u32).collect()
+    }
+
+    #[test]
+    fn fingerprints_chain_across_pages() {
+        let d = PrefixDirectory::new(4);
+        let a = d.fingerprints(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = d.fingerprints(&[1, 2, 3, 4, 9, 9, 9, 9]);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0], b[0], "same first page, same depth-1 fp");
+        assert_ne!(a[1], b[1], "depth-2 fp commits to both pages");
+        // Partial pages contribute nothing.
+        assert_eq!(d.fingerprints(&[1, 2, 3]).len(), 0);
+        assert_eq!(d.fingerprints(&[1, 2, 3, 4, 5]).len(), 1);
+    }
+
+    #[test]
+    fn longest_chain_wins_and_misses_are_none() {
+        let d = PrefixDirectory::new(4);
+        let p = prompt(1, 3, 4);
+        d.advertise(0, M, &p[..8], 2); // worker 0: 2 pages deep
+        d.advertise(1, M, &p, 3); // worker 1: all 3 pages
+        let (tokens, workers) = d.lookup(M, &p).unwrap();
+        assert_eq!(tokens, 12);
+        assert_eq!(workers, vec![1], "deepest advertiser wins");
+        // A prompt sharing only the first page matches at depth 1.
+        let mut q = p[..4].to_vec();
+        q.extend([7; 8]);
+        let (tokens, workers) = d.lookup(M, &q).unwrap();
+        assert_eq!(tokens, 4);
+        assert_eq!(workers, vec![0, 1]);
+        assert!(d.lookup(M, &prompt(9, 2, 4)).is_none(), "unknown prefix");
+        assert!(d.lookup("exact", &p).is_none(), "codecs never cross-match");
+    }
+
+    #[test]
+    fn own_pages_scopes_the_advertisement_to_one_node() {
+        // A child node inserted under a 2-page ancestor advertises only
+        // its own deeper depths; the ancestor's depths came from its own
+        // insert. Retracting the child leaves the ancestor advertised.
+        let d = PrefixDirectory::new(4);
+        let p = prompt(3, 3, 4);
+        d.advertise(0, M, &p[..8], 2); // ancestor: depths 1..=2
+        d.advertise(0, M, &p, 1); // leaf: depth 3 only
+        assert_eq!(d.entries(), 3);
+        d.retract(0, M, &p, 1);
+        let (tokens, _) = d.lookup(M, &p).unwrap();
+        assert_eq!(tokens, 8, "ancestor depths survive the leaf retract");
+        d.retract(0, M, &p[..8], 2);
+        assert!(d.lookup(M, &p).is_none());
+        assert_eq!(d.entries(), 0, "fully retracted");
+    }
+
+    #[test]
+    fn refcounts_survive_double_advertise() {
+        // Two nodes of the same worker can cover the same depth only via
+        // hash collision, but other workers routinely share depths; the
+        // per-worker counts keep retraction exact either way.
+        let d = PrefixDirectory::new(4);
+        let p = prompt(5, 2, 4);
+        d.advertise(0, M, &p, 2);
+        d.advertise(1, M, &p, 2);
+        d.retract(0, M, &p, 2);
+        let (_, workers) = d.lookup(M, &p).unwrap();
+        assert_eq!(workers, vec![1]);
+        // Retracting something never advertised is a no-op.
+        d.retract(3, M, &prompt(8, 2, 4), 2);
+        assert_eq!(d.entries(), 2);
+    }
+}

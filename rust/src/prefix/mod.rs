@@ -31,8 +31,10 @@
 //! encoded pool pages, which it reads back through the codec — control
 //! plane and data plane reference the same bytes.
 
+pub mod directory;
 pub mod radix;
 
+pub use directory::{DirEvent, PrefixDirectory};
 pub use radix::{NodeId, PageRef, PrefixConfig, PrefixMatch, PrefixStats, RadixPrefixCache};
 
 use crate::kvcache::paged::PagedPool;
@@ -61,11 +63,41 @@ pub struct PrefixCacheSet {
     epoch: u64,
     /// The shared LRU clock spanning all trees.
     clock: u64,
+    /// Whether trees log [`DirEvent`]s for the cross-worker prefix
+    /// directory (set when the scheduler attaches one).
+    publish: bool,
 }
 
 impl PrefixCacheSet {
     pub fn new(page_tokens: usize, max_bytes: usize) -> Self {
-        Self { page_tokens, max_bytes, trees: BTreeMap::new(), epoch: 0, clock: 0 }
+        Self {
+            page_tokens,
+            max_bytes,
+            trees: BTreeMap::new(),
+            epoch: 0,
+            clock: 0,
+            publish: false,
+        }
+    }
+
+    /// Enable directory-event logging on every tree, present and future.
+    pub fn set_publish(&mut self, on: bool) {
+        self.publish = on;
+        for t in self.trees.values_mut() {
+            t.set_publish(on);
+        }
+    }
+
+    /// Drain `(method, event)` pairs accumulated across all trees since
+    /// the last call, for replay into a [`PrefixDirectory`].
+    pub fn take_dir_events(&mut self) -> Vec<(String, DirEvent)> {
+        let mut out = Vec::new();
+        for (m, t) in self.trees.iter_mut() {
+            for ev in t.take_dir_events() {
+                out.push((m.clone(), ev));
+            }
+        }
+        out
     }
 
     /// Monotonic insert counter (see the `epoch` field).
@@ -85,9 +117,12 @@ impl PrefixCacheSet {
             // the set enforces the global byte budget instead.
             max_pages: usize::MAX,
         };
-        self.trees
-            .entry(method.to_string())
-            .or_insert_with(|| RadixPrefixCache::new(cfg))
+        let publish = self.publish;
+        self.trees.entry(method.to_string()).or_insert_with(|| {
+            let mut t = RadixPrefixCache::new(cfg);
+            t.set_publish(publish);
+            t
+        })
     }
 
     /// Longest cached prefix of `tokens` among pages encoded by

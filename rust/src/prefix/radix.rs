@@ -30,6 +30,7 @@
 
 use crate::kvcache::paged::{PagedPool, PageId};
 use crate::kvcache::tier::DiskExtent;
+use crate::prefix::directory::DirEvent;
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Slab index of a node. The root is always node 0 with an empty edge.
@@ -131,6 +132,14 @@ pub struct RadixPrefixCache {
     /// Eviction index: exactly the evictable nodes (unpinned leaves),
     /// keyed by (last_touch, id) so `iter().next()` is the LRU victim.
     evictable_index: BTreeSet<(u64, NodeId)>,
+    /// When set, node-lifetime changes are logged as [`DirEvent`]s for
+    /// the cross-worker prefix directory: a node advertises the depths
+    /// its own edge covers when it gains fresh pages and retracts them
+    /// on true eviction. Splits move pages between nodes without
+    /// changing total coverage (no event), and tier demotion keeps the
+    /// entry advertised — a spilled leaf is still matchable.
+    publish: bool,
+    dir_events: Vec<DirEvent>,
 }
 
 impl RadixPrefixCache {
@@ -154,7 +163,47 @@ impl RadixPrefixCache {
             stats: PrefixStats::default(),
             dropped_extents: Vec::new(),
             evictable_index: BTreeSet::new(),
+            publish: false,
+            dir_events: Vec::new(),
         }
+    }
+
+    /// Enable (or disable) directory-event logging. Off by default so
+    /// trees without a directory attached pay nothing and leak nothing.
+    pub fn set_publish(&mut self, on: bool) {
+        self.publish = on;
+        if !on {
+            self.dir_events.clear();
+        }
+    }
+
+    /// Drain the directory events accumulated since the last call.
+    pub fn take_dir_events(&mut self) -> Vec<DirEvent> {
+        std::mem::take(&mut self.dir_events)
+    }
+
+    /// Full root-to-`id` token path (the concatenated edge labels);
+    /// page-aligned by construction.
+    pub fn token_path(&self, id: NodeId) -> Vec<u32> {
+        let mut edges = Vec::new();
+        let mut cur = id;
+        while cur != 0 {
+            let n = self.node(cur);
+            edges.push(n.tokens.clone());
+            cur = n.parent;
+        }
+        edges.reverse();
+        edges.concat()
+    }
+
+    /// Live node ids, root excluded (test enumeration surface).
+    pub fn live_node_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter_map(|(id, n)| n.as_ref().map(|_| id))
+            .collect()
     }
 
     pub fn stats(&self) -> &PrefixStats {
@@ -433,6 +482,7 @@ impl RadixPrefixCache {
                     }
                     self.cached_pages += shared.len();
                     let pages = shared.iter().map(|&p| PageRef::Ram(p)).collect();
+                    let own_pages = shared.len();
                     let leaf = self.alloc(Node {
                         tokens: tokens[off..aligned].to_vec(),
                         pages,
@@ -443,6 +493,16 @@ impl RadixPrefixCache {
                     });
                     self.node_mut(cur).children.insert(key, leaf);
                     self.sync_index(cur); // cur is no longer a leaf
+                    if self.publish {
+                        // The new leaf covers the deepest `own_pages`
+                        // depths of the inserted prefix; its ancestors
+                        // advertised theirs when they were created.
+                        self.dir_events.push(DirEvent {
+                            retract: false,
+                            tokens: tokens[..aligned].to_vec(),
+                            pages: own_pages,
+                        });
+                    }
                     return Some(leaf);
                 }
             };
@@ -502,6 +562,16 @@ impl RadixPrefixCache {
                 }
             })
             .map(|&(_, id)| id)?;
+        if self.publish {
+            // Retract exactly what this node's creation advertised: the
+            // deepest `pages.len()` depths of its full token path.
+            let ev = DirEvent {
+                retract: true,
+                tokens: self.token_path(victim),
+                pages: self.node(victim).pages.len(),
+            };
+            self.dir_events.push(ev);
+        }
         let node = self.nodes[victim].take().expect("live victim");
         self.evictable_index.remove(&(node.last_touch, victim));
         self.free_nodes.push(victim);
@@ -858,6 +928,45 @@ mod tests {
         // Both tails still match end-to-end.
         assert_eq!(c.match_prefix(&a).tokens, 24);
         assert_eq!(c.match_prefix(&b).tokens, 24);
+    }
+
+    #[test]
+    fn dir_events_mirror_node_lifetimes() {
+        use crate::prefix::directory::PrefixDirectory;
+        let (mut c, mut p) = (cache(64), pool(64));
+        c.set_publish(true);
+        let dir = PrefixDirectory::new(PT);
+        // 4 shared pages, then divergent tails of 2 pages each.
+        let a = toks(&[(1, 16), (2, 8)]);
+        let b = toks(&[(1, 16), (3, 8)]);
+        admit(&mut c, &mut p, 1, &a, 0);
+        let ev = c.take_dir_events();
+        assert_eq!(ev.len(), 1, "one new leaf");
+        assert!(!ev[0].retract);
+        assert_eq!((&ev[0].tokens, ev[0].pages), (&a, 6));
+        dir.apply(0, "m", &ev[0]);
+        assert_eq!(dir.lookup("m", &a), Some((24, vec![0])));
+        // Divergence: the split moves pages between nodes (no event);
+        // only b's fresh 2-page tail advertises.
+        admit(&mut c, &mut p, 2, &b, 0);
+        let ev = c.take_dir_events();
+        assert_eq!(ev.len(), 1, "split itself publishes nothing");
+        assert_eq!((&ev[0].tokens, ev[0].pages), (&b, 2));
+        dir.apply(0, "m", &ev[0]);
+        assert_eq!(dir.lookup("m", &b), Some((24, vec![0])));
+        // Token paths reconstruct through the split.
+        let mb = c.match_prefix(&b);
+        assert_eq!(c.token_path(mb.node.unwrap()), b);
+        // Evicting the whole tree retracts exactly what was advertised.
+        while c.evict_one_node(&mut p).is_some() {}
+        let ev = c.take_dir_events();
+        assert_eq!(ev.len(), 3, "two tails + the shared head");
+        assert!(ev.iter().all(|e| e.retract));
+        for e in &ev {
+            dir.apply(0, "m", e);
+        }
+        assert_eq!(dir.entries(), 0, "advertise/retract balance exactly");
+        assert!(dir.lookup("m", &a).is_none());
     }
 
     #[test]

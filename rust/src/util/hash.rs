@@ -1,0 +1,43 @@
+//! Shared non-cryptographic hashing: FNV-1a, the one hash the serving
+//! stack uses for both session affinity and prefix-directory
+//! fingerprints. One implementation so the two can never drift.
+
+pub const FNV1A_SEED: u64 = 0xcbf29ce484222325;
+const FNV1A_PRIME: u64 = 0x100000001b3;
+
+/// Fold `bytes` into FNV-1a state `h` (start from [`FNV1A_SEED`]).
+/// Returning the state makes the hash rollable: feeding chunks one at a
+/// time yields a chain where each intermediate state commits to the
+/// whole byte stream so far.
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV1A_PRIME);
+    }
+    h
+}
+
+/// One-shot FNV-1a of a string (session-affinity hashing).
+pub fn fnv1a_str(s: &str) -> u64 {
+    fnv1a(FNV1A_SEED, s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_known_fnv1a_vectors() {
+        // Reference values of the standard 64-bit FNV-1a.
+        assert_eq!(fnv1a_str(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_str("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_str("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn rolling_equals_one_shot() {
+        let whole = fnv1a(FNV1A_SEED, b"polar quant");
+        let rolled = fnv1a(fnv1a(FNV1A_SEED, b"polar "), b"quant");
+        assert_eq!(whole, rolled);
+    }
+}

@@ -3,6 +3,7 @@
 //! stats, timing and thread pools are implemented from scratch here).
 
 pub mod args;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -359,3 +359,265 @@ fn prop_bits_accounting_matches_storage() {
         assert_eq!(c.storage_bytes() * 8, cfg.bits_per_vector(), "cfg {cfg:?}");
     }
 }
+
+/// Property: whenever the router directs a request at a prefix-directory
+/// advertiser, that worker's outstanding load is within the imbalance
+/// guard of the least-loaded replica (measured before the request's own
+/// tokens are charged) — under arbitrary interleavings of advertise /
+/// retract / route / complete. Directions only ever point at a current
+/// advertiser, and retracted entries stop directing immediately.
+#[test]
+fn prop_directed_routing_never_exceeds_imbalance_guard() {
+    use polarquant::coordinator::router::{RouteKind, Router};
+    use polarquant::prefix::PrefixDirectory;
+    use std::sync::Arc;
+    const M: &str = "polarquant-r-offline";
+    let mut rng = Pcg64::new(1011);
+    for trial in 0..20 {
+        let n = 2 + rng.next_below(4) as usize;
+        let guard = 8 * (1 + rng.next_below(16));
+        let dir = Arc::new(PrefixDirectory::new(4));
+        let r = Router::with_directory(n, Arc::clone(&dir), guard);
+        let families: Vec<Vec<u32>> = (0..4)
+            .map(|f| (0..16).map(|i| f * 100 + i).collect())
+            .collect();
+        // Which worker currently advertises each family (at most one in
+        // this model, so a directed route has exactly one valid target).
+        let mut advertised: Vec<Option<usize>> = vec![None; families.len()];
+        let mut inflight: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..300 {
+            let f = rng.next_below(families.len() as u64) as usize;
+            match rng.next_below(4) {
+                0 => {
+                    if advertised[f].is_none() {
+                        let w = rng.next_below(n as u64) as usize;
+                        dir.advertise(w, M, &families[f], 4);
+                        advertised[f] = Some(w);
+                    }
+                }
+                1 => {
+                    if let Some(w) = advertised[f].take() {
+                        dir.retract(w, M, &families[f], 4);
+                    }
+                }
+                2 => {
+                    let mut p = families[f].clone();
+                    p.extend(std::iter::repeat(999).take(rng.next_below(8) as usize));
+                    let loads: Vec<u64> = (0..n).map(|w| r.load_of(w)).collect();
+                    let rt = r.route(None, M, &p);
+                    if rt.kind == RouteKind::Directed {
+                        let min = *loads.iter().min().unwrap();
+                        assert!(
+                            loads[rt.worker] <= min + guard,
+                            "trial {trial}: directed load {} vs min {min} + guard {guard}",
+                            loads[rt.worker]
+                        );
+                        assert_eq!(
+                            Some(rt.worker),
+                            advertised[f],
+                            "directions only point at a live advertiser"
+                        );
+                        assert_eq!(rt.expected_tokens, 16);
+                    } else if advertised[f].is_none() {
+                        assert_ne!(
+                            rt.kind,
+                            RouteKind::Directed,
+                            "retracted entries must stop directing"
+                        );
+                    }
+                    inflight.push((rt.worker, p.len()));
+                }
+                _ => {
+                    if !inflight.is_empty() {
+                        let i = rng.next_below(inflight.len() as u64) as usize;
+                        let (w, t) = inflight.swap_remove(i);
+                        r.complete(w, t);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: the prefix directory is an exact mirror of radix-node
+/// lifetimes. After any interleaving of insert / true-evict / demote /
+/// promote, replaying the published events leaves the directory holding
+/// exactly the fingerprints of the tree's live page-aligned prefixes —
+/// demoted leaves included (they are still matchable via promotion) —
+/// and retraction on evict leaves no dangling worker references.
+#[test]
+fn prop_directory_mirrors_radix_tree_exactly() {
+    use polarquant::kvcache::paged::{PagedConfig, PagedPool};
+    use polarquant::kvcache::tier::DiskExtent;
+    use polarquant::prefix::{PrefixConfig, PrefixDirectory, RadixPrefixCache};
+    use std::collections::BTreeSet;
+    const M: &str = "polarquant-r-offline";
+    const PT: usize = 4;
+
+    /// In-memory extent store for demote/promote closures.
+    struct MemTier {
+        blobs: Vec<Vec<u8>>,
+    }
+    impl MemTier {
+        fn write(&mut self, b: &[u8]) -> Option<DiskExtent> {
+            self.blobs.push(b.to_vec());
+            Some(DiskExtent { offset: self.blobs.len() as u64 - 1, len: b.len() as u32 })
+        }
+        fn read(&self, e: DiskExtent, buf: &mut [u8]) -> bool {
+            let blob = &self.blobs[e.offset as usize];
+            buf.copy_from_slice(blob);
+            true
+        }
+    }
+
+    let check = |c: &RadixPrefixCache, dir: &PrefixDirectory, trial: usize| {
+        let snap = dir.table_snapshot(M);
+        let mut expected = BTreeSet::new();
+        for id in c.live_node_ids() {
+            let path = c.token_path(id);
+            let fps = dir.fingerprints(&path);
+            let own = c.node_page_count(id);
+            assert_eq!(fps.len() * PT, path.len(), "paths are page-aligned");
+            for fp in &fps[fps.len() - own..] {
+                assert!(expected.insert(*fp), "fp collision would need 64-bit luck");
+            }
+        }
+        let got: BTreeSet<u64> = snap.keys().copied().collect();
+        assert_eq!(got, expected, "trial {trial}: directory != tree coverage");
+        for workers in snap.values() {
+            assert_eq!(workers[..], [0], "trial {trial}: dangling worker ref");
+        }
+    };
+
+    let mut rng = Pcg64::new(1012);
+    for trial in 0..12 {
+        let mut pool = PagedPool::new(PagedConfig {
+            page_tokens: PT,
+            token_bytes: 2,
+            num_pages: 512,
+        });
+        let mut c =
+            RadixPrefixCache::new(PrefixConfig { page_tokens: PT, max_pages: usize::MAX });
+        c.set_publish(true);
+        let dir = PrefixDirectory::new(PT);
+        let mut tier = MemTier { blobs: Vec::new() };
+        let mut disk_nodes: Vec<usize> = Vec::new();
+        let mut next_seq = 0u64;
+        for _ in 0..150 {
+            match rng.next_below(5) {
+                0 | 1 => {
+                    // Insert: family head (2 pages) + random tail, so
+                    // runs share heads and split on divergence.
+                    let fam = rng.next_below(3) as u32;
+                    let mut p: Vec<u32> = (0..2 * PT as u32).map(|i| fam * 50 + i).collect();
+                    let tail_pages = rng.next_below(3) as usize;
+                    for t in 0..tail_pages * PT {
+                        p.push(1000 + fam * 7 + rng.next_below(2) as u32 * 31 + t as u32 % 2);
+                    }
+                    let m = c.match_prefix(&p);
+                    next_seq += 1;
+                    if pool.register_with_prefix(next_seq, &m.pages, p.len()).is_ok() {
+                        c.insert(&p, &mut pool, next_seq);
+                        pool.release(next_seq).unwrap();
+                    }
+                }
+                2 => {
+                    let _ = c.evict_one_node(&mut pool);
+                    let _ = c.take_dropped_extents(); // extents die with the fake tier
+                }
+                3 => {
+                    if let Some((_, id)) = c.coldest_demotable(&pool) {
+                        if c.demote_node(id, &mut pool, &mut |b| tier.write(b)).is_some() {
+                            disk_nodes.push(id);
+                        }
+                    }
+                }
+                _ => {
+                    if !disk_nodes.is_empty() {
+                        let i = rng.next_below(disk_nodes.len() as u64) as usize;
+                        let id = disk_nodes.swap_remove(i);
+                        // May fail (node since evicted, id reused) — the
+                        // tree rejects it without side effects.
+                        let _ = c.promote_node(id, &mut pool, &mut |e, buf| tier.read(e, buf));
+                    }
+                }
+            }
+            for ev in c.take_dir_events() {
+                dir.apply(0, M, &ev);
+            }
+            check(&c, &dir, trial);
+        }
+        // Drain the tree completely: every advertisement must retract.
+        while c.evict_one_node(&mut pool).is_some() {}
+        for ev in c.take_dir_events() {
+            dir.apply(0, M, &ev);
+        }
+        assert_eq!(dir.entries(), 0, "trial {trial}: leaked advertisement");
+        assert_eq!(pool.used_pages(), 0, "trial {trial}: leaked pages");
+    }
+}
+
+/// Property: stale directions always fall back cleanly. Random traffic
+/// with route hints that are sometimes honest and sometimes fabricated
+/// (the advertised entry never existed or was evicted): every request
+/// completes with the right number of tokens, and `stale_hits`
+/// increments exactly when the hint exceeded what the radix tree
+/// actually held.
+#[test]
+fn prop_stale_directions_fall_back_cleanly() {
+    use polarquant::coordinator::request::{GenRequest, Tracked};
+    use polarquant::coordinator::scheduler::{PendingPages, Scheduler};
+    use polarquant::coordinator::worker::NativeWorker;
+    use polarquant::kvcache::pools::{share_pools, PoolSet};
+    use polarquant::model::weights::Weights;
+    use std::collections::BTreeSet;
+    const M: &str = "polarquant-r-offline";
+    let cfg = ModelConfig::test();
+    let mut rng = Pcg64::new(1013);
+    let pools = share_pools(PoolSet::for_model(&cfg, 16, 4096));
+    let mut engine = NativeWorker::with_pools(Weights::synthetic(&cfg, 7), pools.clone());
+    let mut sched = Scheduler::with_prefix_cache_shared(pools, 4, usize::MAX / 2);
+    // Model of the cache: page-aligned heads known to be inserted. The
+    // pool is big enough that nothing is ever evicted, so the model is
+    // exact and the expected match length is computable.
+    let mut cached: BTreeSet<Vec<u32>> = BTreeSet::new();
+    for i in 0..40u64 {
+        let fam = rng.next_below(4) as u32;
+        let pages = 1 + rng.next_below(3) as usize; // 1..=3 full pages
+        let prompt: Vec<u32> = (0..pages * 16).map(|x| (fam * 13 + x as u32) % 64).collect();
+        let aligned = prompt.len() / 16 * 16;
+        let expect_match = (1..=pages)
+            .rev()
+            .map(|k| prompt[..k * 16].to_vec())
+            .find(|head| cached.contains(head))
+            .map(|head| head.len())
+            .unwrap_or(0);
+        let hint = match rng.next_below(3) {
+            // Undirected, honestly directed (may be 0), or a possibly
+            // stale claim of a full match.
+            0 => 0,
+            1 => expect_match,
+            _ => aligned,
+        };
+        let mut req = GenRequest::new(i, prompt.clone(), 2);
+        req.method = M.into();
+        req.route_hint_tokens = hint;
+        let gate = sched
+            .gate_request(&prompt, 2, M, 0, &PendingPages::new())
+            .expect("pool never fills");
+        sched.admit_gated(vec![(Tracked::new(req), gate)], &mut engine);
+        while !sched.active.is_empty() {
+            sched.decode_round(&mut engine);
+        }
+        for k in 1..=pages {
+            cached.insert(prompt[..k * 16].to_vec());
+        }
+        let ev = sched.take_prefix_events();
+        let expected_stale = u64::from(hint > 0 && expect_match < hint);
+        assert_eq!(
+            ev.stale_hits, expected_stale,
+            "request {i}: hint {hint}, cached head {expect_match}"
+        );
+        assert_eq!(ev.hits + ev.misses, 1, "every request gated and served");
+    }
+}

@@ -6,6 +6,7 @@ use polarquant::coordinator::batcher::BatchPolicy;
 use polarquant::coordinator::request::GenRequest;
 use polarquant::coordinator::server::{Server, ServerConfig};
 use polarquant::model::config::ModelConfig;
+use polarquant::util::json::Json;
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
@@ -147,6 +148,77 @@ fn pool_exhaustion_rejects_cleanly_then_recovers() {
     assert_eq!(again.tokens.len(), 3);
     assert_eq!(s.metrics.requests_rejected.load(Ordering::Relaxed), 1);
     s.shutdown();
+}
+
+/// Worker count for the multi-worker routing comparison; the CI
+/// `multi-worker-e2e` job pins it to 4 via `PQ_E2E_WORKERS`.
+fn e2e_workers() -> usize {
+    std::env::var("PQ_E2E_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(2)
+}
+
+#[test]
+fn directed_routing_beats_round_robin_for_anonymous_traffic() {
+    // Anonymous mixed-prefix traffic: `workers + 1` prompt families
+    // sharing 64-token heads (4 full pages), distinct tails, no session
+    // keys, submitted in the same order to both configurations.
+    // Round-robin scatters each family across replicas (the family
+    // count is coprime with the worker count, so a family never camps
+    // on one worker by accident) and re-prefills cold; directed routing
+    // lands repeats on the replica that already holds the pages.
+    let families = e2e_workers() as u32 + 1;
+    let run = |directed: bool| {
+        let s = Server::start(ServerConfig {
+            model: ModelConfig::test(),
+            seed: 1,
+            workers: e2e_workers(),
+            batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+            pool_tokens: 1 << 14,
+            max_active: 4,
+            prefix_cache: true,
+            prefix_routing: directed,
+            round_robin: !directed,
+            ..Default::default()
+        });
+        let mut reused = 0usize;
+        for round in 0..4u32 {
+            for fam in 0..families {
+                let mut p: Vec<u32> = (0..64).map(|x| (x * 7 + fam * 17 + 3) % 64).collect();
+                p.extend((0..8).map(|x| (x * 5 + round) % 64));
+                let resp = s
+                    .generate_blocking(GenRequest::new(0, p, 4), Duration::from_secs(120))
+                    .expect("response");
+                assert_eq!(resp.tokens.len(), 4);
+                reused += resp.reused_tokens;
+            }
+        }
+        let snap = Json::parse(&s.metrics.snapshot().encode()).unwrap();
+        let get = |k: &str| snap.path(k).unwrap().as_f64().unwrap();
+        let stats = (
+            get("prefix_cache.hits"),
+            reused,
+            get("prefix_routing.directed"),
+            get("prefix_routing.stale_hits"),
+        );
+        s.shutdown();
+        stats
+    };
+    let (hits_rr, reused_rr, directed_rr, _) = run(false);
+    let (hits_dir, reused_dir, directed_n, stale) = run(true);
+    assert_eq!(directed_rr, 0.0, "no directory when routing is off");
+    assert!(directed_n > 0.0, "directed count must be positive: {directed_n}");
+    assert!(
+        hits_dir > hits_rr,
+        "directed hit count must beat round-robin: {hits_dir} vs {hits_rr}"
+    );
+    assert!(
+        reused_dir > reused_rr,
+        "directed reuse must beat round-robin: {reused_dir} vs {reused_rr}"
+    );
+    assert_eq!(stale, 0.0, "sequential blocking traffic cannot go stale");
 }
 
 #[test]

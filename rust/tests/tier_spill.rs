@@ -246,9 +246,8 @@ fn prop_spill_roundtrips_survive_random_interleavings() {
                 let m = pc.match_prefix(method, &prompt);
                 let pool = pools.pool_mut(method);
                 for id in m.disk {
-                    if let Some(exts) =
-                        pc.promote_node(method, id, pool, &mut |e, buf| t.promote_page(method, e, buf))
-                    {
+                    let read = &mut |e, buf: &mut [u8]| t.promote_page(method, e, buf);
+                    if let Some(exts) = pc.promote_node(method, id, pool, read) {
                         for e in exts {
                             t.free_promoted(method, e);
                         }
@@ -286,7 +285,12 @@ fn run_to_completion(s: &mut Scheduler, e: &mut NativeWorker) -> Vec<GenResponse
 /// Warm-hit generation for `method`: request once cold, optionally
 /// force the cached prefix through a disk round-trip, request again.
 /// Returns (second response, promoted_pages, reused_tokens).
-fn warm_hit(cfg: &ModelConfig, method: &str, prompt: &[u32], spill: bool) -> (Vec<u32>, u64, usize) {
+fn warm_hit(
+    cfg: &ModelConfig,
+    method: &str,
+    prompt: &[u32],
+    spill: bool,
+) -> (Vec<u32>, u64, usize) {
     // 4 pool pages of 16 tokens: the 48-token prompt + generation room
     // exactly fits, and its 3 cached pages sit far above any high-water
     // fraction, so `run_demotion` always spills them when a tier is on.
