@@ -42,7 +42,7 @@ fn main() {
     });
 
     let mut table = report::Table::new(
-        "chat_prefix_reuse — per-turn prefill vs. reuse",
+        "chat_prefix_reuse — per-turn prefill vs. reuse, with latency breakdown",
         &[
             "session",
             "turn",
@@ -50,6 +50,10 @@ fn main() {
             "reused",
             "prefilled",
             "reuse %",
+            "queue (ms)",
+            "promote (ms)",
+            "prefill (ms)",
+            "decode (ms)",
             "ttft (ms)",
         ],
     );
@@ -80,6 +84,10 @@ fn main() {
                 format!("{}", resp.reused_tokens),
                 format!("{}", prompt_len - resp.reused_tokens),
                 format!("{:.1}", 100.0 * resp.reused_tokens as f64 / prompt_len as f64),
+                format!("{:.2}", resp.timing.queue_s * 1e3),
+                format!("{:.2}", resp.timing.promote_s * 1e3),
+                format!("{:.2}", resp.timing.prefill_s * 1e3),
+                format!("{:.2}", resp.timing.decode_s * 1e3),
                 format!("{:.2}", resp.timing.ttft_s * 1e3),
             ]);
         }

@@ -5,12 +5,17 @@
 
 mod common;
 
+use polarquant::coordinator::batcher::BatchPolicy;
+use polarquant::coordinator::request::GenRequest;
+use polarquant::coordinator::server::{Server, ServerConfig};
 use polarquant::math::rotation::PreconditionKind;
+use polarquant::model::config::ModelConfig;
 use polarquant::polar::quantizer::{PolarConfig, PolarQuantizer};
 use polarquant::quant::compressor::KvBlock;
 use polarquant::quant::registry::{build_method, MethodContext};
 use polarquant::util::rng::{Pcg64, Rng};
 use polarquant::util::timer::{bench, print_result};
+use std::time::{Duration, Instant};
 
 fn gaussian(n: usize, seed: u64) -> Vec<f32> {
     let mut rng = Pcg64::new(seed);
@@ -87,4 +92,65 @@ fn main() {
         });
         print_result(&r);
     }
+
+    // Tracing overhead gate (CI `trace-overhead` job): a decode-heavy
+    // serving run with request tracing on must keep at least 97% of the
+    // trace-off decode throughput. Best-of-3 pairs, so a one-off
+    // scheduler hiccup on a busy CI box can't fail the gate; a real
+    // regression slows every run.
+    let mut best_ratio = 0.0f64;
+    let (mut off_best, mut on_best) = (0.0f64, 0.0f64);
+    for _ in 0..3 {
+        let off = serve_decode_tok_s(false);
+        let on = serve_decode_tok_s(true);
+        off_best = off_best.max(off);
+        on_best = on_best.max(on);
+        best_ratio = best_ratio.max(on / off);
+    }
+    best_ratio = best_ratio.max(on_best / off_best);
+    println!(
+        "\ntrace overhead: decode {:.0} tok/s (trace off) vs {:.0} tok/s (trace on), \
+         best on/off ratio {:.3}",
+        off_best, on_best, best_ratio
+    );
+    assert!(
+        best_ratio > 0.97,
+        "tracing must cost < 3% decode throughput (best on/off ratio {best_ratio:.3})"
+    );
+}
+
+/// Decode throughput (generated tokens per wall-clock second) of a
+/// single-worker server under a small continuous batch, with tracing on
+/// or off. Ring pushes, per-tick drains and phase folding are all on the
+/// measured path when `trace_on`.
+fn serve_decode_tok_s(trace_on: bool) -> f64 {
+    let s = Server::start(ServerConfig {
+        model: ModelConfig::test(),
+        seed: 5,
+        workers: 1,
+        batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        pool_tokens: 8192,
+        max_active: 4,
+        trace: trace_on,
+        ..Default::default()
+    });
+    let gen_tokens = if common::smoke() { 12 } else { 48 };
+    let n_reqs = if common::smoke() { 6 } else { 16 };
+    let mk = |i: u32| {
+        let p: Vec<u32> = (0..32).map(|x| (x * 5 + i * 7 + 1) % 64).collect();
+        GenRequest::new(0, p, gen_tokens)
+    };
+    // Warm one request outside the timed window (weights, pools, pages).
+    s.generate_blocking(mk(999), Duration::from_secs(120)).expect("warmup");
+    let t = Instant::now();
+    for i in 0..n_reqs {
+        s.submit(mk(i));
+    }
+    let mut toks = 0usize;
+    for _ in 0..n_reqs {
+        toks += s.recv_timeout(Duration::from_secs(120)).expect("bench response").tokens.len();
+    }
+    let tok_s = toks as f64 / t.elapsed().as_secs_f64();
+    s.shutdown();
+    tok_s
 }

@@ -374,6 +374,11 @@ struct RoutingStats {
     tokens_reused: f64,
     directed: f64,
     fallback: f64,
+    /// Mean per-request phase times (ms), from the response timing
+    /// breakdown — shows where directed routing buys its latency.
+    queue_ms: f64,
+    prefill_ms: f64,
+    decode_ms: f64,
 }
 
 /// One routing configuration over the full server: anonymous traffic,
@@ -396,6 +401,7 @@ fn run_routing(model: &ModelConfig, directed: bool, families: u32, rounds: u32) 
     });
     let mut prompt_tokens = 0usize;
     let mut requests = 0usize;
+    let (mut queue_s, mut prefill_s, mut decode_s) = (0.0f64, 0.0f64, 0.0f64);
     let t = Timer::start();
     for round in 0..rounds {
         for fam in 0..families {
@@ -407,11 +413,15 @@ fn run_routing(model: &ModelConfig, directed: bool, families: u32, rounds: u32) 
                 .generate_blocking(GenRequest::new(0, p, 4), Duration::from_secs(300))
                 .expect("response");
             assert_eq!(resp.tokens.len(), 4);
+            queue_s += resp.timing.queue_s;
+            prefill_s += resp.timing.prefill_s;
+            decode_s += resp.timing.decode_s;
         }
     }
     let elapsed = t.secs();
     let snap = Json::parse(&s.metrics.snapshot().encode()).unwrap();
     let get = |k: &str| snap.path(k).unwrap().as_f64().unwrap();
+    let per_req_ms = 1e3 / requests as f64;
     let stats = RoutingStats {
         req_s: requests as f64 / elapsed,
         prompt_tok_s: prompt_tokens as f64 / elapsed,
@@ -419,6 +429,9 @@ fn run_routing(model: &ModelConfig, directed: bool, families: u32, rounds: u32) 
         tokens_reused: get("prefix_cache.tokens_reused"),
         directed: get("prefix_routing.directed"),
         fallback: get("prefix_routing.fallback"),
+        queue_ms: queue_s * per_req_ms,
+        prefill_ms: prefill_s * per_req_ms,
+        decode_ms: decode_s * per_req_ms,
     };
     s.shutdown();
     stats
@@ -437,6 +450,9 @@ fn routing_table(model: &ModelConfig) {
             "tokens reused",
             "directed",
             "fallback",
+            "queue ms",
+            "prefill ms",
+            "decode ms",
         ],
     );
     let rr = run_routing(model, false, families, rounds);
@@ -450,6 +466,9 @@ fn routing_table(model: &ModelConfig) {
             format!("{}", st.tokens_reused),
             format!("{}", st.directed),
             format!("{}", st.fallback),
+            format!("{:.2}", st.queue_ms),
+            format!("{:.2}", st.prefill_ms),
+            format!("{:.2}", st.decode_ms),
         ]);
     }
     table.print();

@@ -2,6 +2,7 @@
 //! Thread-safe (shared by workers + server); snapshots encode to JSON for
 //! the `/stats` endpoint and the bench reporters.
 
+use crate::obs::{RequestTrace, TickTrace};
 use crate::util::json::Json;
 use crate::util::stats::Percentiles;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -14,6 +15,46 @@ struct Latencies {
     total: Percentiles,
     prefill: Percentiles,
     per_token: Percentiles,
+    queue: Percentiles,
+}
+
+/// Per-phase latency distributions, fed from drained request traces
+/// (span durations) and scheduler tick timings. Surfaces in `/stats`
+/// under `phases.*`.
+#[derive(Default)]
+struct PhaseLats {
+    route: Percentiles,
+    queue: Percentiles,
+    gate: Percentiles,
+    promote: Percentiles,
+    prefill: Percentiles,
+    decode: Percentiles,
+    finish: Percentiles,
+    tick_gate: Percentiles,
+    tick_demote: Percentiles,
+    tick_flush: Percentiles,
+    tick_decode: Percentiles,
+}
+
+/// One worker's slice of the serving load: request latencies, batch
+/// occupancy per busy tick, and the trace-ring drop gauge. Surfaces in
+/// `/stats` under `workers[]`.
+#[derive(Default)]
+struct WorkerLat {
+    requests_done: u64,
+    ttft: Percentiles,
+    queue: Percentiles,
+    occ_sum: u64,
+    occ_ticks: u64,
+    decode_rounds: u64,
+    dropped_spans: u64,
+}
+
+fn worker_slot(ws: &mut Vec<WorkerLat>, idx: usize) -> &mut WorkerLat {
+    if ws.len() <= idx {
+        ws.resize_with(idx + 1, WorkerLat::default);
+    }
+    &mut ws[idx]
 }
 
 /// Shared metrics hub.
@@ -66,6 +107,8 @@ pub struct Metrics {
     pub tier_ram_bytes: AtomicU64,
     pub tier_disk_bytes: AtomicU64,
     lat: Mutex<Latencies>,
+    phases: Mutex<PhaseLats>,
+    workers: Mutex<Vec<WorkerLat>>,
     started: Instant,
 }
 
@@ -113,6 +156,8 @@ impl Metrics {
             tier_ram_bytes: AtomicU64::new(0),
             tier_disk_bytes: AtomicU64::new(0),
             lat: Mutex::new(Latencies::default()),
+            phases: Mutex::new(PhaseLats::default()),
+            workers: Mutex::new(Vec::new()),
             started: Instant::now(),
         }
     }
@@ -176,9 +221,66 @@ impl Metrics {
         lat.ttft.add(timing.ttft_s);
         lat.total.add(timing.total_s);
         lat.prefill.add(timing.prefill_s);
+        lat.queue.add(timing.queue_s);
         if gen_tokens > 0 {
             lat.per_token.add(timing.decode_s / gen_tokens as f64);
         }
+    }
+
+    /// Fold one drained request trace into the per-phase distributions
+    /// and its worker's decode-round tally.
+    pub fn record_trace(&self, t: &RequestTrace) {
+        let mut ph = self.phases.lock().unwrap();
+        for s in &t.spans {
+            let d = s.dur_us as f64 * 1e-6;
+            match s.name {
+                "route" => ph.route.add(d),
+                "queue" => ph.queue.add(d),
+                "gate" => ph.gate.add(d),
+                "promote" => ph.promote.add(d),
+                "prefill" => ph.prefill.add(d),
+                "decode" => ph.decode.add(d),
+                "finish" => ph.finish.add(d),
+                _ => {}
+            }
+        }
+        drop(ph);
+        let mut ws = self.workers.lock().unwrap();
+        worker_slot(&mut ws, t.worker).decode_rounds += t.decode_rounds as u64;
+    }
+
+    /// Fold one busy scheduler tick into the tick-phase distributions and
+    /// the worker's occupancy stats. `dropped_spans` is the worker ring's
+    /// cumulative drop count (a gauge — latest value wins).
+    pub fn record_tick(&self, t: &TickTrace, dropped_spans: u64) {
+        let mut ph = self.phases.lock().unwrap();
+        if t.gate_us > 0 {
+            ph.tick_gate.add(t.gate_us as f64 * 1e-6);
+        }
+        if t.demote_us > 0 {
+            ph.tick_demote.add(t.demote_us as f64 * 1e-6);
+        }
+        if t.flush_us > 0 {
+            ph.tick_flush.add(t.flush_us as f64 * 1e-6);
+        }
+        if t.decode_us > 0 {
+            ph.tick_decode.add(t.decode_us as f64 * 1e-6);
+        }
+        drop(ph);
+        let mut ws = self.workers.lock().unwrap();
+        let w = worker_slot(&mut ws, t.worker);
+        w.occ_sum += t.active as u64;
+        w.occ_ticks += 1;
+        w.dropped_spans = dropped_spans;
+    }
+
+    /// Attribute one finished request's latency to its worker.
+    pub fn record_worker_finish(&self, idx: usize, timing: &crate::coordinator::request::Timing) {
+        let mut ws = self.workers.lock().unwrap();
+        let w = worker_slot(&mut ws, idx);
+        w.requests_done += 1;
+        w.ttft.add(timing.ttft_s);
+        w.queue.add(timing.queue_s);
     }
 
     pub fn uptime_s(&self) -> f64 {
@@ -191,14 +293,55 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
-        let lat = self.lat.lock().unwrap();
-        let pct = |p: &Percentiles| {
+        let mut lat = self.lat.lock().unwrap();
+        let pct = |p: &mut Percentiles| {
             Json::from_pairs(vec![
                 ("p50", Json::num(p.pct(50.0))),
                 ("p90", Json::num(p.pct(90.0))),
                 ("p99", Json::num(p.pct(99.0))),
                 ("mean", Json::num(p.mean())),
             ])
+        };
+        let phases = {
+            let mut ph = self.phases.lock().unwrap();
+            Json::from_pairs(vec![
+                ("route", pct(&mut ph.route)),
+                ("queue", pct(&mut ph.queue)),
+                ("gate", pct(&mut ph.gate)),
+                ("promote", pct(&mut ph.promote)),
+                ("prefill", pct(&mut ph.prefill)),
+                ("decode", pct(&mut ph.decode)),
+                ("finish", pct(&mut ph.finish)),
+                ("tick_gate", pct(&mut ph.tick_gate)),
+                ("tick_demote", pct(&mut ph.tick_demote)),
+                ("tick_flush", pct(&mut ph.tick_flush)),
+                ("tick_decode", pct(&mut ph.tick_decode)),
+            ])
+        };
+        let workers = {
+            let mut ws = self.workers.lock().unwrap();
+            Json::Arr(
+                ws.iter_mut()
+                    .enumerate()
+                    .map(|(i, w)| {
+                        let occ = if w.occ_ticks == 0 {
+                            0.0
+                        } else {
+                            w.occ_sum as f64 / w.occ_ticks as f64
+                        };
+                        Json::from_pairs(vec![
+                            ("id", Json::num(i as f64)),
+                            ("requests_done", Json::num(w.requests_done as f64)),
+                            ("ttft_p50", Json::num(w.ttft.pct(50.0))),
+                            ("ttft_p99", Json::num(w.ttft.pct(99.0))),
+                            ("queue_p50", Json::num(w.queue.pct(50.0))),
+                            ("batch_occupancy", Json::num(occ)),
+                            ("decode_rounds", Json::num(w.decode_rounds as f64)),
+                            ("dropped_spans", Json::num(w.dropped_spans as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
         };
         Json::from_pairs(vec![
             ("uptime_s", Json::num(self.uptime_s())),
@@ -292,10 +435,13 @@ impl Metrics {
                     ("true_evictions", Json::num(load(&self.tier_true_evictions))),
                 ])
             }),
-            ("ttft", pct(&lat.ttft)),
-            ("total", pct(&lat.total)),
-            ("prefill", pct(&lat.prefill)),
-            ("per_token", pct(&lat.per_token)),
+            ("ttft", pct(&mut lat.ttft)),
+            ("total", pct(&mut lat.total)),
+            ("prefill", pct(&mut lat.prefill)),
+            ("per_token", pct(&mut lat.per_token)),
+            ("queue", pct(&mut lat.queue)),
+            ("phases", phases),
+            ("workers", workers),
         ])
     }
 }
@@ -309,7 +455,13 @@ mod tests {
     fn counters_accumulate() {
         let m = Metrics::new();
         m.requests_in.fetch_add(3, Ordering::Relaxed);
-        let t = Timing { ttft_s: 0.1, total_s: 0.5, prefill_s: 0.05, decode_s: 0.4, queue_s: 0.0 };
+        let t = Timing {
+            ttft_s: 0.1,
+            total_s: 0.5,
+            prefill_s: 0.05,
+            decode_s: 0.4,
+            ..Default::default()
+        };
         m.record_done(&t, 10);
         m.record_done(&t, 20);
         assert_eq!(m.requests_done.load(Ordering::Relaxed), 2);
@@ -326,7 +478,8 @@ mod tests {
                 total_s: 0.1 * i as f64,
                 prefill_s: 0.005,
                 decode_s: 0.09,
-                queue_s: 0.0,
+                queue_s: 0.002 * i as f64,
+                ..Default::default()
             };
             m.record_done(&t, 5);
         }
@@ -335,6 +488,70 @@ mod tests {
         let p50 = parsed.path("ttft.p50").unwrap().as_f64().unwrap();
         assert!(p50 > 0.0 && p50 < 0.1);
         assert_eq!(parsed.path("requests.done").unwrap().as_f64().unwrap(), 10.0);
+        // Queue wait surfaces as its own percentile block next to ttft.
+        let q50 = parsed.path("queue.p50").unwrap().as_f64().unwrap();
+        assert!(q50 > 0.0 && q50 < 0.02, "queue p50 from 0.002*i samples: {q50}");
+        let qm = parsed.path("queue.mean").unwrap().as_f64().unwrap();
+        assert!((qm - 0.009).abs() < 1e-12);
+    }
+
+    #[test]
+    fn traces_and_ticks_feed_phases_and_worker_breakdown() {
+        use crate::obs::{build_spans, PhaseTimes, RequestTrace, TickTrace};
+        let m = Metrics::new();
+        let t = PhaseTimes {
+            route_us: 5,
+            queue_us: 100,
+            gate_us: 40,
+            promote_us: 10,
+            prefill_us: 500,
+            decode_us: 2000,
+            finish_us: 20,
+        };
+        let tr = RequestTrace {
+            id: 1,
+            worker: 1,
+            method: "polarquant-r-offline".into(),
+            route_kind: "directed",
+            route_hint_tokens: 48,
+            prompt_tokens: 64,
+            reused_tokens: 48,
+            promoted_pages: 1,
+            gen_tokens: 4,
+            decode_rounds: 3,
+            start_us: 0,
+            total_s: 2620e-6,
+            spans: build_spans(&t),
+        };
+        m.record_trace(&tr);
+        m.record_tick(
+            &TickTrace {
+                worker: 1,
+                gate_us: 40,
+                decode_us: 2000,
+                decoded: 1,
+                active: 2,
+                ..Default::default()
+            },
+            7,
+        );
+        m.record_worker_finish(1, &Timing { ttft_s: 0.3, queue_s: 1e-4, ..Default::default() });
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        let ph = |k: &str| parsed.path(&format!("phases.{k}")).unwrap().as_f64().unwrap();
+        assert!((ph("decode.p50") - 2e-3).abs() < 1e-12);
+        assert!((ph("promote.mean") - 1e-5).abs() < 1e-12);
+        assert!((ph("gate.p50") - 4e-5).abs() < 1e-12);
+        assert!((ph("tick_decode.p50") - 2e-3).abs() < 1e-12);
+        let ws = parsed.path("workers").unwrap().as_arr().unwrap();
+        assert_eq!(ws.len(), 2, "worker slots grow to cover the highest index seen");
+        let get = |k: &str| ws[1].get(k).unwrap().as_f64().unwrap();
+        assert_eq!(get("id"), 1.0);
+        assert_eq!(get("requests_done"), 1.0);
+        assert_eq!(get("decode_rounds"), 3.0);
+        assert_eq!(get("batch_occupancy"), 2.0);
+        assert_eq!(get("dropped_spans"), 7.0);
+        assert!((get("ttft_p50") - 0.3).abs() < 1e-12);
+        assert!((get("queue_p50") - 1e-4).abs() < 1e-12);
     }
 
     #[test]

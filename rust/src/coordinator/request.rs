@@ -69,10 +69,17 @@ impl GenRequest {
     }
 }
 
-/// Timing breakdown for one finished request.
+/// Timing breakdown for one finished request. `gate_s` and `promote_s`
+/// are sub-phases of `queue_s` (the gate pass runs at the tail of the
+/// queue wait, promotion inside the gate), so they explain the queue time
+/// rather than adding to the total.
 #[derive(Clone, Debug, Default)]
 pub struct Timing {
     pub queue_s: f64,
+    /// Gate pass: prefix match + pin + admission accounting (⊆ queue_s).
+    pub gate_s: f64,
+    /// Disk→RAM promotion inside the gate (⊆ gate_s; 0 = warm match).
+    pub promote_s: f64,
     pub prefill_s: f64,
     /// Time to first generated token (queue + prefill + first step).
     pub ttft_s: f64,
@@ -110,6 +117,9 @@ impl GenResponse {
             ("cache_bytes", Json::num(self.cache_bytes as f64)),
             ("compression_ratio", Json::num(self.compression_ratio)),
             ("reused_tokens", Json::num(self.reused_tokens as f64)),
+            ("queue_s", Json::num(self.timing.queue_s)),
+            ("gate_s", Json::num(self.timing.gate_s)),
+            ("promote_s", Json::num(self.timing.promote_s)),
             ("prefill_s", Json::num(self.timing.prefill_s)),
             ("decode_s", Json::num(self.timing.decode_s)),
             ("ttft_s", Json::num(self.timing.ttft_s)),
@@ -122,11 +132,16 @@ impl GenResponse {
 pub struct Tracked {
     pub req: GenRequest,
     pub arrived: Instant,
+    /// How the router placed this request ("session" | "directed" |
+    /// "fallback" | "spread"; "local" when it bypassed the router).
+    pub route_kind: &'static str,
+    /// Router decision time, microseconds (0 when it bypassed the router).
+    pub route_us: u64,
 }
 
 impl Tracked {
     pub fn new(req: GenRequest) -> Self {
-        Self { req, arrived: Instant::now() }
+        Self { req, arrived: Instant::now(), route_kind: "local", route_us: 0 }
     }
 }
 

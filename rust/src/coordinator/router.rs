@@ -40,6 +40,18 @@ pub enum RouteKind {
     Spread,
 }
 
+impl RouteKind {
+    /// Stable label used by trace spans and the `/trace` export.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouteKind::Session => "session",
+            RouteKind::Directed => "directed",
+            RouteKind::Fallback => "fallback",
+            RouteKind::Spread => "spread",
+        }
+    }
+}
+
 /// A routing decision.
 #[derive(Clone, Copy, Debug)]
 pub struct Route {

@@ -21,6 +21,7 @@ use crate::kvcache::codec::is_page_codec;
 use crate::kvcache::paged::PagedPool;
 use crate::kvcache::pools::{share_pools, PoolSet, SharedPools};
 use crate::kvcache::tier::{TierManager, TierStats};
+use crate::obs::{build_spans, PhaseTimes, RequestTrace, WorkerTraces};
 use crate::prefix::{NodeId, PrefixCacheSet, PrefixDirectory, PrefixMatch};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -41,6 +42,16 @@ pub struct ActiveSeq {
     pub reused_tokens: usize,
     /// Radix node pinned for this sequence's lifetime.
     pub prefix_node: Option<NodeId>,
+    /// Gate pass duration (match + pin + admission accounting), µs.
+    pub gate_us: u64,
+    /// Disk→RAM promotion time inside the gate, µs (0 = warm match).
+    pub promote_us: u64,
+    /// Pages the gate promoted from the disk tier for this request.
+    pub promoted_pages: usize,
+    /// Router placement label carried from [`Tracked`].
+    pub route_kind: &'static str,
+    /// Router decision time carried from [`Tracked`], µs.
+    pub route_us: u64,
 }
 
 /// What the engine must provide: prefill a sequence (returning its first
@@ -99,6 +110,18 @@ pub struct AdmitGate {
     /// admission (an earlier batch member published its prompt),
     /// admission re-matches so intra-batch shared prefixes still share.
     epoch: u64,
+    /// What the gate pass cost, for the request's trace spans.
+    cost: GateCost,
+}
+
+/// Measured cost of one gate pass, threaded from
+/// [`Scheduler::gate_request`] through admission into the sequence's
+/// lifecycle trace.
+#[derive(Clone, Copy, Debug, Default)]
+struct GateCost {
+    gate_us: u64,
+    promote_us: u64,
+    promoted_pages: usize,
 }
 
 /// Prefix-cache activity since the last [`Scheduler::take_prefix_events`]
@@ -170,6 +193,15 @@ pub struct Scheduler {
     pending_promote_stall_us: u64,
     /// Tier counters already reported (drains are deltas).
     reported_tier: TierStats,
+    /// What the most recent [`match_and_pin`](Self::match_and_pin) cost
+    /// in promotion work, for the caller's [`GateCost`].
+    last_promote: (u64, usize),
+    /// Demotion-pass wall time since the last
+    /// [`take_demote_us`](Self::take_demote_us) drain.
+    pending_demote_us: u64,
+    /// Per-worker trace sink: retiring sequences push their lifecycle
+    /// trace here (never blocking — see [`WorkerTraces::push`]).
+    trace: Option<Arc<WorkerTraces>>,
 }
 
 impl Scheduler {
@@ -191,7 +223,16 @@ impl Scheduler {
             reported_evictions: 0,
             pending_promote_stall_us: 0,
             reported_tier: TierStats::default(),
+            last_promote: (0, 0),
+            pending_demote_us: 0,
+            trace: None,
         }
+    }
+
+    /// Attach the per-worker trace sink: every retiring sequence records
+    /// its lifecycle spans into it.
+    pub fn set_trace(&mut self, trace: Arc<WorkerTraces>) {
+        self.trace = Some(trace);
     }
 
     /// Attach the disk spill tier (requires the prefix cache — the tier
@@ -279,6 +320,7 @@ impl Scheduler {
     /// accounting, so the gate's page arithmetic and everything
     /// downstream (pinning, sharing, the engine) see plain RAM pages.
     fn match_and_pin(&mut self, method: &str, prompt: &[u32]) -> PrefixMatch {
+        self.last_promote = (0, 0);
         let Some(pc) = &mut self.prefix else {
             return PrefixMatch::default();
         };
@@ -340,7 +382,9 @@ impl Scheduler {
                 }
             }
         }
-        self.pending_promote_stall_us += t0.elapsed().as_micros() as u64;
+        let stall_us = t0.elapsed().as_micros() as u64;
+        self.pending_promote_stall_us += stall_us;
+        self.last_promote = (stall_us, promoted);
         if promoted > 0 {
             // Re-match over the now-RAM path; move the pin to the
             // (at least as deep) re-matched node.
@@ -375,6 +419,7 @@ impl Scheduler {
         if self.active.len() + pending_seqs >= self.max_active {
             return None;
         }
+        let t_gate = Instant::now();
         // Credit the longest cached prefix: matched pages are shared into
         // the block table, not allocated — and pinning them here keeps
         // later gate evictions (and earlier admits' budget trims) from
@@ -383,6 +428,7 @@ impl Scheduler {
         // into RAM, so promotable entries count exactly like resident
         // ones.
         let m = self.match_and_pin(method, prompt);
+        let (promote_us, promoted_pages) = self.last_promote;
         let epoch = self.prefix.as_ref().map(|pc| pc.epoch()).unwrap_or(0);
         let fits = {
             let mut pools = self.pools.lock().unwrap();
@@ -434,6 +480,11 @@ impl Scheduler {
                 m,
                 method: method.to_string(),
                 epoch,
+                cost: GateCost {
+                    gate_us: t_gate.elapsed().as_micros() as u64,
+                    promote_us,
+                    promoted_pages,
+                },
             }),
             None => {
                 if let (Some(pc), Some(n)) = (&mut self.prefix, m.node) {
@@ -461,8 +512,15 @@ impl Scheduler {
     pub fn admit<E: StepEngine>(&mut self, batch: Vec<Tracked>, engine: &mut E) -> usize {
         let mut n = 0;
         for t in batch {
+            let t_gate = Instant::now();
             let m = self.match_and_pin(&t.req.method, &t.req.prompt);
-            n += self.admit_one(t, m, engine);
+            let (promote_us, promoted_pages) = self.last_promote;
+            let cost = GateCost {
+                gate_us: t_gate.elapsed().as_micros() as u64,
+                promote_us,
+                promoted_pages,
+            };
+            n += self.admit_one(t, m, cost, engine);
         }
         self.run_demotion();
         n
@@ -490,15 +548,21 @@ impl Scheduler {
                 .as_ref()
                 .map(|pc| pc.epoch() != g.epoch)
                 .unwrap_or(false);
+            let mut cost = g.cost;
             let m = if stale {
                 if let (Some(pc), Some(nid)) = (&mut self.prefix, g.m.node) {
                     pc.unpin(&g.method, nid);
                 }
-                self.match_and_pin(&t.req.method, &t.req.prompt)
+                let t_rematch = Instant::now();
+                let m = self.match_and_pin(&t.req.method, &t.req.prompt);
+                cost.gate_us += t_rematch.elapsed().as_micros() as u64;
+                cost.promote_us += self.last_promote.0;
+                cost.promoted_pages += self.last_promote.1;
+                m
             } else {
                 g.m
             };
-            n += self.admit_one(t, m, engine);
+            n += self.admit_one(t, m, cost, engine);
         }
         // Admission is when pools gain pages: drain any that crossed
         // their high-water occupancy back down by demoting cold leaves.
@@ -508,7 +572,13 @@ impl Scheduler {
 
     /// Admit one request whose radix match `m` is already pinned (or
     /// empty). Returns 1 on admission, 0 on skip (pin released).
-    fn admit_one<E: StepEngine>(&mut self, t: Tracked, m: PrefixMatch, engine: &mut E) -> usize {
+    fn admit_one<E: StepEngine>(
+        &mut self,
+        t: Tracked,
+        m: PrefixMatch,
+        cost: GateCost,
+        engine: &mut E,
+    ) -> usize {
         let now = Instant::now();
         let queue_s = now.duration_since(t.arrived).as_secs_f64();
         let total = t.req.prompt.len() + t.req.max_new_tokens;
@@ -597,6 +667,11 @@ impl Scheduler {
             engine_id,
             reused_tokens: reused,
             prefix_node,
+            gate_us: cost.gate_us,
+            promote_us: cost.promote_us,
+            promoted_pages: cost.promoted_pages,
+            route_kind: t.route_kind,
+            route_us: t.route_us,
             req: t.req,
         });
         1
@@ -741,6 +816,12 @@ impl Scheduler {
     /// victim remains. No-op without a tier. Public so benches and
     /// tests can force a demotion pass at a known point.
     pub fn run_demotion(&mut self) {
+        let t0 = Instant::now();
+        self.run_demotion_inner();
+        self.pending_demote_us += t0.elapsed().as_micros() as u64;
+    }
+
+    fn run_demotion_inner(&mut self) {
         let (Some(pc), Some(tier)) = (&mut self.prefix, &mut self.tier) else {
             return;
         };
@@ -783,6 +864,12 @@ impl Scheduler {
                 break; // disk budget exhausted
             }
         }
+    }
+
+    /// Drain the demotion-pass wall time since the last call (for the
+    /// per-tick `tick:demote` phase).
+    pub fn take_demote_us(&mut self) -> u64 {
+        std::mem::take(&mut self.pending_demote_us)
     }
 
     /// Drain disk-tier activity since the last call (for metrics).
@@ -843,23 +930,12 @@ impl Scheduler {
         // Retire finished sequences (reverse order keeps indices valid).
         for &i in finished_idx.iter().rev() {
             let seq = self.active.remove(i);
-            let total_s = seq.arrived.elapsed().as_secs_f64();
-            let resp = GenResponse {
-                id: seq.req.id,
-                tokens: seq.generated.clone(),
-                timing: Timing {
-                    queue_s: seq.queue_s,
-                    prefill_s: seq.prefill_s,
-                    ttft_s: seq.ttft_s.unwrap_or(total_s),
-                    decode_s: seq.decode_s,
-                    total_s,
-                },
-                cache_bytes: engine.cache_bytes(seq.engine_id),
-                compression_ratio: engine.compression_ratio(seq.engine_id),
-                reused_tokens: seq.reused_tokens,
-                prompt_tokens: seq.req.prompt.len(),
-                method: seq.req.method.clone(),
-            };
+            let cache_bytes = engine.cache_bytes(seq.engine_id);
+            let compression_ratio = engine.compression_ratio(seq.engine_id);
+            // Time the teardown (release pages, unpin the prefix path) as
+            // the `finish` span, then stamp total_s after it so the span
+            // chain tiles the request's wall-clock exactly.
+            let t_finish = Instant::now();
             engine.release(seq.engine_id);
             self.retire_prefix_pin(&seq);
             self.pools
@@ -867,9 +943,69 @@ impl Scheduler {
                 .unwrap()
                 .release(&seq.req.method, seq.req.id)
                 .ok();
+            let finish_us = t_finish.elapsed().as_micros() as u64;
+            let total_s = seq.arrived.elapsed().as_secs_f64();
+            let timing = Timing {
+                queue_s: seq.queue_s,
+                gate_s: seq.gate_us as f64 * 1e-6,
+                promote_s: seq.promote_us as f64 * 1e-6,
+                prefill_s: seq.prefill_s,
+                ttft_s: seq.ttft_s.unwrap_or(total_s),
+                decode_s: seq.decode_s,
+                total_s,
+            };
+            self.record_trace(&seq, total_s, finish_us);
+            let resp = GenResponse {
+                id: seq.req.id,
+                tokens: seq.generated.clone(),
+                timing,
+                cache_bytes,
+                compression_ratio,
+                reused_tokens: seq.reused_tokens,
+                prompt_tokens: seq.req.prompt.len(),
+                method: seq.req.method.clone(),
+            };
             outcome.finished.push(resp);
         }
         outcome
+    }
+
+    /// Assemble and push the retiring sequence's lifecycle trace. The
+    /// decode span is the residual wall time (total − queue − prefill −
+    /// finish), so the top-level chain sums to `total_s` by construction;
+    /// `decode_s` (busy time summed over rounds) is smaller under
+    /// continuous batching and lives in `Timing`, not the span.
+    fn record_trace(&self, seq: &ActiveSeq, total_s: f64, finish_us: u64) {
+        let Some(tr) = &self.trace else {
+            return;
+        };
+        let total_us = (total_s * 1e6) as u64;
+        let queue_us = (seq.queue_s * 1e6) as u64;
+        let prefill_us = (seq.prefill_s * 1e6) as u64;
+        let phases = PhaseTimes {
+            route_us: seq.route_us,
+            queue_us,
+            gate_us: seq.gate_us,
+            promote_us: seq.promote_us,
+            prefill_us,
+            decode_us: total_us.saturating_sub(queue_us + prefill_us + finish_us),
+            finish_us,
+        };
+        tr.push(RequestTrace {
+            id: seq.req.id,
+            worker: tr.worker,
+            method: seq.req.method.clone(),
+            route_kind: seq.route_kind,
+            route_hint_tokens: seq.req.route_hint_tokens,
+            prompt_tokens: seq.req.prompt.len(),
+            reused_tokens: seq.reused_tokens,
+            promoted_pages: seq.promoted_pages,
+            gen_tokens: seq.generated.len(),
+            decode_rounds: seq.generated.len().saturating_sub(1) as u32,
+            start_us: tr.epoch_us(seq.arrived).saturating_sub(seq.route_us),
+            total_s,
+            spans: build_spans(&phases),
+        });
     }
 
     /// Preempt the newest sequence (recompute-on-resume): its pages are
@@ -1074,6 +1210,55 @@ mod tests {
         // Drain is a delta: immediately draining again is empty.
         let ev2 = s.take_prefix_events();
         assert_eq!(ev2.hits + ev2.misses + ev2.tokens_reused, 0);
+    }
+
+    #[test]
+    fn trace_spans_close_and_nest_through_gate_admission() {
+        let mut s = sched_prefix(16, 4, 16);
+        let sink = WorkerTraces::local(8);
+        s.set_trace(Arc::clone(&sink));
+        let mut e = MockEngine::default();
+        let prompt: Vec<u32> = vec![7; 12];
+        // Tracked first, then gate — the server stamps arrival at submit,
+        // so the gate pass always falls inside the queue window.
+        let mut t = tracked_prompt(1, prompt.clone(), 4);
+        t.route_kind = "directed";
+        t.route_us = 3;
+        let g = gate(&mut s, &prompt, 4, 0, 0).expect("gates");
+        s.admit_gated(vec![(t, g)], &mut e);
+        let resps = run_to_completion(&mut s, &mut e);
+        assert_eq!(resps.len(), 1);
+        let traces = sink.last(8);
+        assert_eq!(traces.len(), 1);
+        let tr = &traces[0];
+        assert_eq!(tr.id, 1);
+        assert_eq!(tr.route_kind, "directed");
+        assert_eq!(tr.gen_tokens, 4);
+        assert_eq!(tr.decode_rounds, 3, "prefill emits token 1, decodes the rest");
+        // The chain is closed: every top-level phase present and abutting.
+        for name in ["route", "queue", "gate", "prefill", "decode", "finish"] {
+            assert!(tr.span(name).is_some(), "span {name} missing");
+        }
+        let chain: Vec<_> =
+            tr.spans.iter().filter(|sp| !matches!(sp.name, "gate" | "promote")).collect();
+        for w in chain.windows(2) {
+            assert_eq!(w[0].end_us(), w[1].start_us, "{}→{} must abut", w[0].name, w[1].name);
+        }
+        // Gate nests inside queue; chain sums to total + route (route sits
+        // before the arrival stamp total_s starts at). Clamping on the
+        // derived decode span can shift the sum by timer granularity only.
+        let (queue, gate_sp) = (tr.span("queue").unwrap(), tr.span("gate").unwrap());
+        assert!(gate_sp.start_us >= queue.start_us && gate_sp.end_us() <= queue.end_us());
+        let want = tr.total_s + 3e-6;
+        assert!(
+            (tr.chain_sum_s() - want).abs() < 1e-4,
+            "chain {} vs total+route {want}",
+            tr.chain_sum_s()
+        );
+        // Timing mirrors the span durations it came from.
+        let timing = &resps[0].timing;
+        assert!((timing.gate_s - gate_sp.dur_us as f64 * 1e-6).abs() < 1e-9);
+        assert!(timing.gate_s <= timing.queue_s + 1e-6, "gate is part of the queue wait");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!   → {"prompt": [1,2,3], "max_new_tokens": 8, "method": "kivi"}
 //!   ← {"id": 0, "tokens": [...], "prefill_s": ..., ...}
 //!   → {"cmd": "stats"}   ← metrics snapshot
+//!   → {"cmd": "trace"}   ← last N completed request traces
 //!   → {"cmd": "shutdown"}
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
@@ -17,6 +18,8 @@ use crate::coordinator::scheduler::{AdmitGate, PendingPages, Scheduler};
 use crate::coordinator::worker::NativeWorker;
 use crate::kvcache::pools::{share_pools, PoolSet};
 use crate::kvcache::tier::{TierConfig, TierManager};
+use crate::obs::{chrome_request_events, chrome_tick_events, ChromeTraceWriter};
+use crate::obs::{TickTrace, TraceHub, WorkerTraces};
 use crate::prefix::PrefixDirectory;
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
@@ -82,6 +85,18 @@ pub struct ServerConfig {
     /// Spread session-less traffic round-robin instead of least-loaded
     /// (the benchmark baseline for directed routing).
     pub round_robin: bool,
+    /// Request-lifecycle tracing: retired sequences leave a span trace
+    /// in a bounded per-worker ring, drained per tick into the `/stats`
+    /// phase percentiles and served raw by the `/trace` command. Cheap
+    /// (one try-lock push per retired request), on by default.
+    pub trace: bool,
+    /// Completed traces each worker ring retains for `/trace`; older
+    /// traces are overwritten and counted in `dropped_spans`.
+    pub trace_last: usize,
+    /// When set, each worker also streams Chrome trace-event JSON to
+    /// `<trace_dir>/trace-worker<idx>.json` — loadable in Perfetto /
+    /// chrome://tracing. The file is valid JSON after every append.
+    pub trace_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -105,6 +120,9 @@ impl Default for ServerConfig {
             prefix_routing: true,
             route_guard_tokens: 4096,
             round_robin: false,
+            trace: true,
+            trace_last: 256,
+            trace_dir: None,
         }
     }
 }
@@ -122,9 +140,19 @@ pub struct Server {
     worker_txs: Vec<Sender<WorkerMsg>>,
     resp_rx: Mutex<Receiver<(usize, GenResponse)>>,
     pub metrics: Arc<Metrics>,
+    /// Per-worker trace rings behind one shared epoch (None = tracing off).
+    traces: Option<Arc<TraceHub>>,
     handles: Vec<thread::JoinHandle<()>>,
     next_id: AtomicU64,
     stopping: Arc<AtomicBool>,
+}
+
+/// Shared handles a worker thread needs besides its own channels.
+struct WorkerShared {
+    metrics: Arc<Metrics>,
+    stopping: Arc<AtomicBool>,
+    directory: Option<Arc<PrefixDirectory>>,
+    trace: Option<Arc<WorkerTraces>>,
 }
 
 impl Server {
@@ -145,6 +173,9 @@ impl Server {
         let router = Arc::new(router);
         let (resp_tx, resp_rx) = mpsc::channel();
         let stopping = Arc::new(AtomicBool::new(false));
+        let traces = cfg
+            .trace
+            .then(|| Arc::new(TraceHub::new(cfg.workers, cfg.trace_last.max(16))));
         let mut worker_txs = Vec::new();
         let mut handles = Vec::new();
         for w in 0..cfg.workers {
@@ -152,14 +183,17 @@ impl Server {
             worker_txs.push(tx);
             let cfg_c = cfg.clone();
             let resp_tx = resp_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            let stopping = Arc::clone(&stopping);
-            let dir = directory.clone();
+            let shared = WorkerShared {
+                metrics: Arc::clone(&metrics),
+                stopping: Arc::clone(&stopping),
+                directory: directory.clone(),
+                trace: traces.as_ref().map(|h| h.worker(w)),
+            };
             handles.push(
                 thread::Builder::new()
                     .name(format!("pq-serve-{w}"))
                     .spawn(move || {
-                        worker_loop(w, cfg_c, rx, resp_tx, metrics, stopping, dir);
+                        worker_loop(w, cfg_c, rx, resp_tx, shared);
                     })
                     .expect("spawn worker"),
             );
@@ -170,9 +204,19 @@ impl Server {
             worker_txs,
             resp_rx: Mutex::new(resp_rx),
             metrics,
+            traces,
             handles,
             next_id: AtomicU64::new(0),
             stopping,
+        }
+    }
+
+    /// The `/trace` payload: last `last` completed request traces across
+    /// all workers, merged on the shared timeline.
+    pub fn trace_json(&self, last: usize) -> Json {
+        match &self.traces {
+            Some(h) => h.to_json(last),
+            None => Json::from_pairs(vec![("error", Json::str("tracing disabled"))]),
         }
     }
 
@@ -190,9 +234,11 @@ impl Server {
         self.metrics
             .tokens_prefilled
             .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+        let t_route = Instant::now();
         let r = self
             .router
             .route(req.session.as_deref(), &req.method, &req.prompt);
+        let route_us = t_route.elapsed().as_micros() as u64;
         req.route_hint_tokens = r.expected_tokens;
         match r.kind {
             RouteKind::Directed => {
@@ -203,8 +249,13 @@ impl Server {
             }
             RouteKind::Session | RouteKind::Spread => {}
         }
+        // Stamp the routing decision on the tracked request so its trace
+        // opens with a `route` span ahead of the queue wait.
+        let mut tracked = Tracked::new(req);
+        tracked.route_kind = r.kind.as_str();
+        tracked.route_us = route_us;
         self.worker_txs[r.worker]
-            .send(WorkerMsg::Submit(Tracked::new(req)))
+            .send(WorkerMsg::Submit(tracked))
             .expect("worker alive");
         id
     }
@@ -248,15 +299,66 @@ impl Server {
     }
 }
 
+/// One worker's trace plumbing: the ring the scheduler pushes retired
+/// traces into, the drain watermark, and the optional Chrome trace file.
+/// Drained once per tick — after the decode round, off the decode path.
+struct TraceSink {
+    sink: Arc<WorkerTraces>,
+    seen: u64,
+    writer: Option<ChromeTraceWriter>,
+}
+
+impl TraceSink {
+    /// Drain traces the scheduler pushed since the last tick into the
+    /// metrics phase percentiles and the Chrome file. Non-destructive:
+    /// the ring keeps them for `/trace`.
+    fn flush(&mut self, metrics: &Metrics) {
+        let (fresh, mark) = self.sink.since(self.seen);
+        self.seen = mark;
+        if fresh.is_empty() {
+            return;
+        }
+        let mut events = Vec::new();
+        for t in &fresh {
+            metrics.record_trace(t);
+            if self.writer.is_some() {
+                events.extend(chrome_request_events(t));
+            }
+        }
+        self.append(&events);
+    }
+
+    /// Record one busy scheduler tick (lane 0 of the worker's track).
+    fn tick(&mut self, metrics: &Metrics, t: &TickTrace) {
+        if !t.is_busy() {
+            return;
+        }
+        metrics.record_tick(t, self.sink.dropped_spans());
+        if self.writer.is_some() {
+            self.append(&chrome_tick_events(t));
+        }
+    }
+
+    fn append(&mut self, events: &[Json]) {
+        if let Some(w) = &mut self.writer {
+            if let Err(e) = w.append(events) {
+                // File tracing degrades without killing the worker; the
+                // ring and /stats phases keep working.
+                eprintln!("worker {}: trace write failed ({e}); file export off", self.sink.worker);
+                self.writer = None;
+            }
+        }
+    }
+}
+
 fn worker_loop(
     worker_idx: usize,
     cfg: ServerConfig,
     rx: Receiver<WorkerMsg>,
     resp_tx: Sender<(usize, GenResponse)>,
-    metrics: Arc<Metrics>,
-    stopping: Arc<AtomicBool>,
-    directory: Option<Arc<PrefixDirectory>>,
+    shared: WorkerShared,
 ) {
+    let WorkerShared { metrics, stopping, directory, trace } = shared;
     let weights = Weights::synthetic(&cfg.model, cfg.seed);
     let mut batcher = Batcher::new(cfg.batch.clone());
     // One pool set, two halves: the scheduler does admission/sharing on
@@ -304,6 +406,22 @@ fn worker_loop(
             }
         }
     }
+    // Trace plumbing: hand the scheduler its ring arm, open the Chrome
+    // file if a trace dir was configured.
+    let mut tracer = trace.map(|sink| {
+        sched.set_trace(Arc::clone(&sink));
+        let writer = cfg.trace_dir.as_ref().and_then(|d| {
+            let path = d.join(format!("trace-worker{worker_idx}.json"));
+            match ChromeTraceWriter::create(path) {
+                Ok(w) => Some(w),
+                Err(e) => {
+                    eprintln!("worker {worker_idx}: trace dir unusable ({e}); file export off");
+                    None
+                }
+            }
+        });
+        TraceSink { sink, seen: 0, writer }
+    });
     let mut reported_cached_pages = 0usize;
     // Per-worker resident-KV gauge contribution (bytes, coords).
     let mut reported_kv = (0u64, 0u64);
@@ -311,28 +429,35 @@ fn worker_loop(
     let mut reported_tier = (0u64, 0u64);
     let coords_per_token = cfg.model.kv_coords_per_token() as u64;
 
-    loop {
+    'serve: loop {
         // Drain the inbox (non-blocking when busy, blocking when idle).
         let idle = sched.active.is_empty() && batcher.is_empty();
         if idle {
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(WorkerMsg::Submit(t)) => batcher.push(t),
-                Ok(WorkerMsg::Stop) => return,
+                Ok(WorkerMsg::Stop) => break 'serve,
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     if stopping.load(Ordering::SeqCst) {
-                        return;
+                        break 'serve;
                     }
                     continue;
                 }
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
             }
         }
         loop {
             match rx.try_recv() {
                 Ok(WorkerMsg::Submit(t)) => batcher.push(t),
-                Ok(WorkerMsg::Stop) => return,
+                Ok(WorkerMsg::Stop) => break 'serve,
                 Err(_) => break,
             }
+        }
+
+        // This tick's phase timings (exported on the worker's lane 0).
+        let tick_start = Instant::now();
+        let mut tick = TickTrace { worker: worker_idx, ..Default::default() };
+        if let Some(tr) = &tracer {
+            tick.start_us = tr.sink.epoch_us(tick_start);
         }
 
         // Admit when the batcher releases and capacity allows. The gate
@@ -346,6 +471,7 @@ fn worker_loop(
             // pool must not count against another's free list.
             let mut pending_pages = PendingPages::new();
             let mut gates: Vec<AdmitGate> = Vec::new();
+            let t_gate = Instant::now();
             let batch = batcher.next_batch(|t| {
                 match sched.gate_request(
                     &t.req.prompt,
@@ -363,6 +489,8 @@ fn worker_loop(
                     None => false,
                 }
             });
+            tick.gate_us = t_gate.elapsed().as_micros() as u64;
+            tick.admitted = batch.len();
             let admitted_any = !batch.is_empty();
             if admitted_any {
                 // Each gate carries its pinned radix match; admission
@@ -404,23 +532,32 @@ fn worker_loop(
         let tev = sched.take_tier_events();
         metrics.record_tier_events(&tev, reported_tier);
         reported_tier = (tev.ram_bytes as u64, tev.disk_bytes as u64);
+        // Demotion passes ran inside admission; the scheduler accumulated
+        // their wall time for this tick's trace lane.
+        tick.demote_us = sched.take_demote_us();
 
         // Flush radix insert/evict events to the prefix directory BEFORE
         // the decode round: a finished response therefore implies its
         // prompt is advertised, so a follow-up sharing the prefix routes
         // warm. (The directory may still lag mid-flight — a stale
         // direction degrades to a plain miss and `stale_hits` counts it.)
+        let t_flush = Instant::now();
         if let Some(entries) = sched.publish_directory() {
             metrics
                 .routing_directory_entries
                 .store(entries as u64, Ordering::Relaxed);
         }
+        tick.flush_us = t_flush.elapsed().as_micros() as u64;
 
         // One decode round.
         if !sched.active.is_empty() {
+            tick.decoded = sched.active.len();
+            let t_decode = Instant::now();
             let outcome = sched.decode_round(&mut engine);
+            tick.decode_us = t_decode.elapsed().as_micros() as u64;
             for resp in outcome.finished {
                 metrics.record_done(&resp.timing, resp.tokens.len());
+                metrics.record_worker_finish(worker_idx, &resp.timing);
                 // `tokens_prefilled` was bumped by the full prompt at
                 // submit; settle it down to what was actually prefilled
                 // now that the reuse count is known.
@@ -443,6 +580,19 @@ fn worker_loop(
         let kv_now = (kv_bytes as u64, kv_slots as u64 * coords_per_token);
         metrics.record_kv_residency(kv_now.0, kv_now.1, reported_kv);
         reported_kv = kv_now;
+
+        // Drain freshly retired traces and record the tick — after the
+        // decode round, so tracing cost never sits on the decode path.
+        if let Some(tr) = &mut tracer {
+            tick.active = sched.active.len();
+            tr.flush(&metrics);
+            tr.tick(&metrics, &tick);
+        }
+    }
+    // Retirements between the last drain and Stop still reach the file
+    // and the phase percentiles.
+    if let Some(tr) = &mut tracer {
+        tr.flush(&metrics);
     }
 }
 
@@ -481,6 +631,10 @@ fn handle_conn(
             Err(e) => Json::from_pairs(vec![("error", Json::str(format!("bad json: {e}")))]),
             Ok(j) => match j.get("cmd").and_then(|c| c.as_str()) {
                 Some("stats") => server.metrics.snapshot(),
+                Some("trace") => {
+                    let last = j.get("last").and_then(|v| v.as_usize()).unwrap_or(32);
+                    server.trace_json(last)
+                }
                 Some("shutdown") => {
                     shutdown.store(true, Ordering::SeqCst);
                     let ok = Json::from_pairs(vec![("ok", Json::Bool(true))]);
@@ -624,6 +778,55 @@ mod tests {
         let ratio = parsed.path("kv_compression_vs_exact").unwrap().as_f64().unwrap();
         assert!((ratio - 8.0).abs() < 1e-6, "polar compression vs exact: {ratio}");
         s.shutdown();
+    }
+
+    #[test]
+    fn trace_export_covers_finished_requests() {
+        let s = test_server(1);
+        let r = s
+            .generate_blocking(
+                GenRequest::new(0, (0..32).map(|x| x % 64).collect(), 4),
+                Duration::from_secs(30),
+            )
+            .expect("resp");
+        // The scheduler pushes the trace at retire, before the response is
+        // sent — so it is visible to `/trace` as soon as we hold the reply.
+        let j = Json::parse(&s.trace_json(8).encode()).unwrap();
+        let traces = j.path("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.path("id").unwrap().as_f64().unwrap(), r.id as f64);
+        assert_eq!(t.path("gen_tokens").unwrap().as_f64().unwrap(), 4.0);
+        let spans = t.path("spans").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            spans.iter().map(|s| s.path("name").unwrap().as_str().unwrap()).collect();
+        for need in ["queue", "prefill", "decode", "finish"] {
+            assert!(names.contains(&need), "span {need} missing from {names:?}");
+        }
+        // The top-level chain closes: it sums to total_s plus at most the
+        // (microsecond-scale) routing decision.
+        let total = t.path("total_s").unwrap().as_f64().unwrap();
+        let sum: f64 = spans
+            .iter()
+            .filter(|s| {
+                let n = s.path("name").unwrap().as_str().unwrap();
+                n != "gate" && n != "promote"
+            })
+            .map(|s| s.path("dur_us").unwrap().as_f64().unwrap() * 1e-6)
+            .sum();
+        assert!(
+            sum >= total - 5e-6 && sum <= total + 1e-3,
+            "chain {sum} vs total {total}"
+        );
+        // After shutdown (final drain), the phases feed /stats.
+        let metrics = Arc::clone(&s.metrics);
+        s.shutdown();
+        let snap = Json::parse(&metrics.snapshot().encode()).unwrap();
+        assert!(snap.path("phases.decode.p50").unwrap().as_f64().unwrap() > 0.0);
+        assert!(snap.path("queue.p50").unwrap().as_f64().unwrap() >= 0.0);
+        let ws = snap.path("workers").unwrap().as_arr().unwrap();
+        assert_eq!(ws[0].get("requests_done").unwrap().as_f64().unwrap(), 1.0);
+        assert!(ws[0].get("batch_occupancy").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod math;
 pub mod model;
+pub mod obs;
 pub mod prefix;
 pub mod runtime;
 pub mod polar;

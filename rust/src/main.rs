@@ -123,9 +123,17 @@ fn cmd_serve(argv: Vec<String>) {
                 "route-guard-tokens",
                 "4096",
                 "max outstanding-token imbalance a directed worker may carry",
+            )
+            .opt("trace", "on", "request-lifecycle tracing + /trace command (on|off)")
+            .opt("trace-last", "256", "completed traces each worker ring retains")
+            .opt(
+                "trace-dir",
+                "",
+                "dump Chrome trace-event JSON per worker here (empty = off)",
             ),
     );
     let spill = a.get("spill-dir");
+    let trace_dir = a.get("trace-dir");
     let byte_cap_mb = a.get_usize("kv-byte-cap-mb");
     let cfg = ServerConfig {
         model: model_cfg(&a.get("model")),
@@ -141,6 +149,9 @@ fn cmd_serve(argv: Vec<String>) {
         kv_byte_cap: (byte_cap_mb > 0).then_some(byte_cap_mb << 20),
         prefix_routing: on_off(&a, "prefix-routing"),
         route_guard_tokens: a.get_usize("route-guard-tokens"),
+        trace: on_off(&a, "trace"),
+        trace_last: a.get_usize("trace-last"),
+        trace_dir: (!trace_dir.is_empty()).then(|| trace_dir.clone().into()),
         ..Default::default()
     };
     let addr = a.get("addr");

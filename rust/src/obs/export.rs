@@ -1,0 +1,230 @@
+//! Chrome trace-event export: turn [`RequestTrace`]s and [`TickTrace`]s
+//! into the JSON array format Perfetto / `chrome://tracing` load directly
+//! (`[{"name","ph":"X","ts","dur","pid","tid","args"}, ...]`).
+//!
+//! Lane layout: `pid` is the worker, `tid` is the request id + 1 so each
+//! request gets its own row; `tid` 0 is reserved for the worker's
+//! scheduler-tick lane. All timestamps are microseconds on the hub epoch.
+//!
+//! [`ChromeTraceWriter`] appends incrementally while keeping the file a
+//! well-formed JSON array at every instant: the file always ends in `]`,
+//! and each append seeks one byte back and overwrites that bracket with
+//! `,<events>]`. A crash mid-run therefore still leaves a loadable trace.
+
+use super::span::{RequestTrace, TickTrace};
+use crate::util::json::Json;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+/// Chrome complete-events (`ph: "X"`) for one request: one event per span,
+/// every event carrying the request's identity tags in `args`.
+pub fn chrome_request_events(t: &RequestTrace) -> Vec<Json> {
+    t.spans
+        .iter()
+        .map(|s| {
+            let mut args = Json::from_pairs(vec![
+                ("method", Json::str(t.method.as_str())),
+                ("route_kind", Json::str(t.route_kind)),
+                ("route_hint_tokens", Json::num(t.route_hint_tokens as f64)),
+                ("prompt_tokens", Json::num(t.prompt_tokens as f64)),
+                ("reused_tokens", Json::num(t.reused_tokens as f64)),
+                ("promoted_pages", Json::num(t.promoted_pages as f64)),
+                ("gen_tokens", Json::num(t.gen_tokens as f64)),
+                ("total_s", Json::num(t.total_s)),
+            ]);
+            if s.name == "decode" {
+                args.set("rounds", Json::num(t.decode_rounds as f64));
+            }
+            Json::from_pairs(vec![
+                ("name", Json::str(s.name)),
+                ("ph", Json::str("X")),
+                ("ts", Json::num((t.start_us + s.start_us) as f64)),
+                ("dur", Json::num(s.dur_us as f64)),
+                ("pid", Json::num(t.worker as f64)),
+                ("tid", Json::num((t.id + 1) as f64)),
+                ("args", args),
+            ])
+        })
+        .collect()
+}
+
+/// Chrome complete-events for one scheduler tick on the worker's `tid` 0
+/// lane. Zero-duration phases are skipped; phases are laid out back to
+/// back from the tick start (gate → demote → flush → decode, matching
+/// execution order inside the worker loop).
+pub fn chrome_tick_events(t: &TickTrace) -> Vec<Json> {
+    let phases = [
+        ("tick:gate", t.gate_us),
+        ("tick:demote", t.demote_us),
+        ("tick:flush", t.flush_us),
+        ("tick:decode", t.decode_us),
+    ];
+    let mut cursor = t.start_us;
+    let mut out = Vec::new();
+    for (name, dur) in phases {
+        if dur == 0 {
+            continue;
+        }
+        out.push(Json::from_pairs(vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(cursor as f64)),
+            ("dur", Json::num(dur as f64)),
+            ("pid", Json::num(t.worker as f64)),
+            ("tid", Json::num(0.0)),
+            (
+                "args",
+                Json::from_pairs(vec![
+                    ("admitted", Json::num(t.admitted as f64)),
+                    ("decoded", Json::num(t.decoded as f64)),
+                    ("active", Json::num(t.active as f64)),
+                ]),
+            ),
+        ]));
+        cursor += dur;
+    }
+    out
+}
+
+/// Incremental writer for one worker's Chrome trace file. The file is a
+/// valid JSON array after `create` and after every `append`.
+#[derive(Debug)]
+pub struct ChromeTraceWriter {
+    path: PathBuf,
+    written: u64,
+}
+
+impl ChromeTraceWriter {
+    pub fn create(path: PathBuf) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, "[]")?;
+        Ok(Self { path, written: 0 })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Splice `events` in before the closing bracket.
+    pub fn append(&mut self, events: &[Json]) -> std::io::Result<()> {
+        if events.is_empty() {
+            return Ok(());
+        }
+        let mut f = std::fs::OpenOptions::new().write(true).open(&self.path)?;
+        f.seek(SeekFrom::End(-1))?; // sit on the closing `]`
+        let mut chunk = String::new();
+        for (i, e) in events.iter().enumerate() {
+            if self.written > 0 || i > 0 {
+                chunk.push_str(",\n");
+            }
+            chunk.push_str(&e.encode());
+        }
+        chunk.push(']');
+        f.write_all(chunk.as_bytes())?;
+        self.written += events.len() as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{build_spans, PhaseTimes};
+
+    fn trace() -> RequestTrace {
+        let t = PhaseTimes {
+            route_us: 2,
+            queue_us: 40,
+            gate_us: 15,
+            promote_us: 5,
+            prefill_us: 300,
+            decode_us: 900,
+            finish_us: 8,
+        };
+        RequestTrace {
+            id: 3,
+            worker: 1,
+            method: "polarquant".into(),
+            route_kind: "session",
+            route_hint_tokens: 0,
+            prompt_tokens: 32,
+            reused_tokens: 16,
+            promoted_pages: 1,
+            gen_tokens: 4,
+            decode_rounds: 4,
+            start_us: 1000,
+            total_s: 1.248e-3,
+            spans: build_spans(&t),
+        }
+    }
+
+    #[test]
+    fn request_events_are_wellformed() {
+        let evs = chrome_request_events(&trace());
+        assert_eq!(evs.len(), 7);
+        for e in &evs {
+            assert_eq!(e.path("ph").unwrap().as_str().unwrap(), "X");
+            assert_eq!(e.path("pid").unwrap().as_f64().unwrap(), 1.0);
+            assert_eq!(e.path("tid").unwrap().as_f64().unwrap(), 4.0);
+            assert!(e.path("ts").unwrap().as_f64().unwrap() >= 1000.0);
+            assert_eq!(e.path("args.method").unwrap().as_str().unwrap(), "polarquant");
+        }
+        let decode = evs
+            .iter()
+            .find(|e| e.path("name").unwrap().as_str().unwrap() == "decode")
+            .unwrap();
+        assert_eq!(decode.path("args.rounds").unwrap().as_f64().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn tick_events_use_lane_zero_and_skip_idle_phases() {
+        let t = TickTrace {
+            worker: 2,
+            start_us: 500,
+            gate_us: 10,
+            demote_us: 0,
+            flush_us: 3,
+            decode_us: 70,
+            admitted: 1,
+            decoded: 2,
+            active: 2,
+        };
+        let evs = chrome_tick_events(&t);
+        let names: Vec<&str> =
+            evs.iter().map(|e| e.path("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(names, ["tick:gate", "tick:flush", "tick:decode"]);
+        for e in &evs {
+            assert_eq!(e.path("tid").unwrap().as_f64().unwrap(), 0.0);
+            assert_eq!(e.path("pid").unwrap().as_f64().unwrap(), 2.0);
+        }
+        // Back-to-back layout from the tick start.
+        assert_eq!(evs[0].path("ts").unwrap().as_f64().unwrap(), 500.0);
+        assert_eq!(evs[1].path("ts").unwrap().as_f64().unwrap(), 510.0);
+        assert_eq!(evs[2].path("ts").unwrap().as_f64().unwrap(), 513.0);
+    }
+
+    #[test]
+    fn writer_stays_valid_json_across_appends() {
+        let dir = crate::kvcache::tier::temp_spill_dir("chrome-writer");
+        let path = dir.join("trace.json");
+        let mut w = ChromeTraceWriter::create(path.clone()).unwrap();
+        // Valid (empty) before any append.
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 0);
+        w.append(&chrome_request_events(&trace())).unwrap();
+        w.append(&[]).unwrap(); // no-op append must not corrupt
+        w.append(&chrome_tick_events(&TickTrace {
+            decode_us: 5,
+            decoded: 1,
+            ..Default::default()
+        }))
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let evs = j.as_arr().unwrap();
+        assert_eq!(evs.len(), 8, "7 request spans + 1 tick phase");
+        assert!(evs.iter().all(|e| e.path("ph").unwrap().as_str().unwrap() == "X"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,23 @@
+//! Observability: per-request lifecycle spans, per-tick scheduler phase
+//! timings, bounded per-worker trace rings, and Chrome trace export.
+//!
+//! Flow: the scheduler assembles a [`RequestTrace`] when a sequence
+//! retires and pushes it into its worker's [`WorkerTraces`] ring (try-lock,
+//! overwrite-oldest — the hot path never stalls or grows). Once per worker
+//! tick the server drains new traces by watermark, folds their span
+//! durations into the `/stats` `phases` percentiles, and appends Chrome
+//! complete-events to the `--trace-dir` file. The [`TraceHub`] serves the
+//! `/trace` command from the same rings.
+//!
+//! Three export surfaces:
+//! * `/trace` — last N completed request traces as JSON (`TraceHub::to_json`).
+//! * `--trace-dir` — one Perfetto-loadable Chrome trace file per worker.
+//! * `/stats` — aggregated `phases.*` percentiles + per-worker breakdown.
+
+pub mod export;
+pub mod ring;
+pub mod span;
+
+pub use export::{chrome_request_events, chrome_tick_events, ChromeTraceWriter};
+pub use ring::{TraceHub, WorkerTraces};
+pub use span::{build_spans, PhaseTimes, RequestTrace, Span, TickTrace};

@@ -1,0 +1,241 @@
+//! Bounded per-worker trace storage.
+//!
+//! Each worker owns one [`WorkerTraces`]: a `Mutex<TraceRing>` holding the
+//! last `cap` completed [`RequestTrace`]s. The hot path (scheduler retire)
+//! pushes with `try_lock` — if a `/trace` reader holds the lock at that
+//! instant, the trace is *dropped and counted*, never waited for; tracing
+//! must not stall decode. Overflow overwrites oldest-first and bumps the
+//! same `dropped_spans` counter, so memory is bounded regardless of load.
+//!
+//! Drains are watermark-based: [`WorkerTraces::since`] returns traces with
+//! sequence numbers ≥ the caller's watermark *without removing them*, so
+//! the per-tick metrics/Chrome-file drain and the `/trace` command can both
+//! read the same ring.
+
+use super::span::RequestTrace;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Fixed-capacity overwrite-oldest ring with monotonic sequence numbers.
+#[derive(Debug)]
+struct TraceRing {
+    buf: VecDeque<RequestTrace>,
+    cap: usize,
+    /// Sequence number the *next* push will get; the front of `buf` holds
+    /// sequence `next_seq - buf.len()`.
+    next_seq: u64,
+    dropped: u64,
+}
+
+impl TraceRing {
+    fn new(cap: usize) -> Self {
+        Self { buf: VecDeque::with_capacity(cap.min(1024)), cap, next_seq: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, t: RequestTrace) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(t);
+        self.next_seq += 1;
+    }
+
+    /// Traces with sequence ≥ `seq`, oldest first, plus the new watermark.
+    fn since(&self, seq: u64) -> (Vec<RequestTrace>, u64) {
+        let front = self.next_seq - self.buf.len() as u64;
+        let skip = (seq.saturating_sub(front) as usize).min(self.buf.len());
+        (self.buf.iter().skip(skip).cloned().collect(), self.next_seq)
+    }
+
+    fn last(&self, n: usize) -> Vec<RequestTrace> {
+        let skip = self.buf.len().saturating_sub(n);
+        self.buf.iter().skip(skip).cloned().collect()
+    }
+}
+
+/// One worker's trace sink: bounded ring + contention counter, sharing the
+/// hub's epoch so cross-worker timestamps are comparable.
+#[derive(Debug)]
+pub struct WorkerTraces {
+    pub worker: usize,
+    epoch: Instant,
+    ring: Mutex<TraceRing>,
+    /// Pushes abandoned because a reader held the lock.
+    contended: AtomicU64,
+}
+
+impl WorkerTraces {
+    fn new(worker: usize, epoch: Instant, cap: usize) -> Self {
+        Self { worker, epoch, ring: Mutex::new(TraceRing::new(cap)), contended: AtomicU64::new(0) }
+    }
+
+    /// Standalone sink for unit tests and single-worker harnesses.
+    pub fn local(cap: usize) -> Arc<Self> {
+        Arc::new(Self::new(0, Instant::now(), cap))
+    }
+
+    /// Microseconds from the hub epoch to `t` (clamped at zero).
+    pub fn epoch_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a completed trace. Never blocks: a held lock means the trace
+    /// is dropped and counted in [`WorkerTraces::dropped_spans`].
+    pub fn push(&self, t: RequestTrace) {
+        match self.ring.try_lock() {
+            Ok(mut ring) => ring.push(t),
+            Err(_) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain-by-watermark: traces with sequence ≥ `seq` and the next
+    /// watermark to pass back in. Traces stay in the ring for `/trace`.
+    pub fn since(&self, seq: u64) -> (Vec<RequestTrace>, u64) {
+        self.ring.lock().unwrap().since(seq)
+    }
+
+    pub fn last(&self, n: usize) -> Vec<RequestTrace> {
+        self.ring.lock().unwrap().last(n)
+    }
+
+    /// Traces lost to overflow plus pushes lost to lock contention.
+    pub fn dropped_spans(&self) -> u64 {
+        self.ring.lock().unwrap().dropped + self.contended.load(Ordering::Relaxed)
+    }
+}
+
+/// The fleet-wide registry: one [`WorkerTraces`] per worker on a shared
+/// epoch. The server holds it for `/trace`; each worker holds its own arm.
+#[derive(Debug)]
+pub struct TraceHub {
+    workers: Vec<Arc<WorkerTraces>>,
+}
+
+impl TraceHub {
+    pub fn new(n_workers: usize, cap_per_worker: usize) -> Self {
+        let epoch = Instant::now();
+        let workers =
+            (0..n_workers).map(|w| Arc::new(WorkerTraces::new(w, epoch, cap_per_worker))).collect();
+        Self { workers }
+    }
+
+    pub fn worker(&self, i: usize) -> Arc<WorkerTraces> {
+        Arc::clone(&self.workers[i])
+    }
+
+    /// Last `n` completed traces across all workers, merged oldest-first
+    /// on the shared timeline.
+    pub fn last(&self, n: usize) -> Vec<RequestTrace> {
+        let mut all: Vec<RequestTrace> = self.workers.iter().flat_map(|w| w.last(n)).collect();
+        all.sort_by_key(|t| t.start_us);
+        let skip = all.len().saturating_sub(n);
+        all.drain(..skip);
+        all
+    }
+
+    pub fn dropped_spans(&self) -> u64 {
+        self.workers.iter().map(|w| w.dropped_spans()).sum()
+    }
+
+    /// The `/trace` payload: `{"traces": [...], "dropped_spans": n}`.
+    pub fn to_json(&self, last_n: usize) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let traces = self.last(last_n).iter().map(|t| t.to_json()).collect();
+        Json::from_pairs(vec![
+            ("traces", Json::Arr(traces)),
+            ("dropped_spans", Json::num(self.dropped_spans() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(id: u64, start_us: u64) -> RequestTrace {
+        RequestTrace {
+            id,
+            worker: 0,
+            method: "exact".into(),
+            route_kind: "local",
+            route_hint_tokens: 0,
+            prompt_tokens: 8,
+            reused_tokens: 0,
+            promoted_pages: 0,
+            gen_tokens: 1,
+            decode_rounds: 1,
+            start_us,
+            total_s: 0.001,
+            spans: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let wt = WorkerTraces::local(4);
+        for i in 0..7 {
+            wt.push(trace(i, i * 10));
+        }
+        assert_eq!(wt.dropped_spans(), 3);
+        // Earlier traces are gone but the survivors are uncorrupted and in
+        // order — overwrite must not scramble the retained window.
+        let got = wt.last(10);
+        let ids: Vec<u64> = got.iter().map(|t| t.id).collect();
+        assert_eq!(ids, [3, 4, 5, 6]);
+        assert_eq!(got[0].start_us, 30);
+    }
+
+    #[test]
+    fn since_watermark_sees_each_trace_once() {
+        let wt = WorkerTraces::local(4);
+        wt.push(trace(0, 0));
+        wt.push(trace(1, 10));
+        let (batch, mark) = wt.since(0);
+        assert_eq!(batch.len(), 2);
+        // No new pushes: drain from the watermark is empty.
+        let (none, mark2) = wt.since(mark);
+        assert!(none.is_empty());
+        assert_eq!(mark2, mark);
+        // Push past capacity so entries BELOW the watermark are also
+        // overwritten: the drain must resync to the ring front, returning
+        // only live entries (never duplicates, never stale slots).
+        for i in 2..9 {
+            wt.push(trace(i, i * 10));
+        }
+        let (rest, _) = wt.since(mark);
+        let ids: Vec<u64> = rest.iter().map(|t| t.id).collect();
+        assert_eq!(ids, [5, 6, 7, 8]);
+        // Traces remain available to `/trace` after the drain.
+        assert_eq!(wt.last(2).len(), 2);
+    }
+
+    #[test]
+    fn contended_push_drops_instead_of_blocking() {
+        let wt = WorkerTraces::local(4);
+        wt.push(trace(0, 0));
+        {
+            let _reader = wt.ring.lock().unwrap();
+            wt.push(trace(1, 10)); // try_lock fails → counted drop
+        }
+        assert_eq!(wt.dropped_spans(), 1);
+        assert_eq!(wt.last(10).len(), 1);
+    }
+
+    #[test]
+    fn hub_merges_workers_on_shared_timeline() {
+        let hub = TraceHub::new(2, 8);
+        hub.worker(0).push(trace(0, 50));
+        hub.worker(1).push(trace(1, 10));
+        hub.worker(0).push(trace(2, 90));
+        let ids: Vec<u64> = hub.last(2).iter().map(|t| t.id).collect();
+        assert_eq!(ids, [0, 2], "merged tail, ordered by shared-epoch start");
+        let j = crate::util::json::Json::parse(&hub.to_json(8).encode()).unwrap();
+        assert_eq!(j.path("traces").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.path("dropped_spans").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Request-lifecycle spans and scheduler-tick phase timings.
+//!
+//! A completed request is summarized as a [`RequestTrace`]: a flat list of
+//! [`Span`]s covering `route→queue→gate→promote→prefill→decode→finish`,
+//! where `gate` nests inside the tail of `queue` and `promote` nests inside
+//! `gate` (promotion happens while the gate holds the match). The top-level
+//! chain — route, queue, prefill, decode, finish — tiles the request's
+//! wall-clock exactly by construction: the decode span is derived as the
+//! residual (`total − queue − prefill − finish`), so the chain always sums
+//! to `total_s` plus the (microsecond-scale) routing decision.
+//!
+//! Spans carry offsets relative to the trace's own start; the trace itself
+//! carries `start_us` relative to the owning [`super::TraceHub`] epoch, so
+//! traces from different workers land on one shared timeline.
+
+use crate::util::json::Json;
+
+/// One phase of a request's lifetime. `start_us` is the offset from the
+/// trace's start (the routing decision), `dur_us` the phase's duration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Span {
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+}
+
+/// Measured phase durations for one request, in microseconds. The span
+/// timeline is derived from these by [`build_spans`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// Router decision time (before the request entered the worker queue).
+    pub route_us: u64,
+    /// Arrival at the worker to admission (includes the gate pass).
+    pub queue_us: u64,
+    /// Gate pass: prefix match + pin + admission accounting.
+    pub gate_us: u64,
+    /// Disk→RAM promotion inside the gate (zero when the match was warm).
+    pub promote_us: u64,
+    /// Prefill over the unseen suffix.
+    pub prefill_us: u64,
+    /// Prefill end to last decoded token (continuous-batch wall time).
+    pub decode_us: u64,
+    /// Retirement: release pages, unpin the prefix path, build response.
+    pub finish_us: u64,
+}
+
+/// Derive the span timeline. Top-level spans tile `[0, route+queue+prefill
+/// +decode+finish]` back to back; `gate` is clamped into the tail of
+/// `queue` and `promote` into the head of `gate`, so nesting holds even
+/// when timer granularity makes a child reading exceed its parent.
+pub fn build_spans(t: &PhaseTimes) -> Vec<Span> {
+    let mut spans = Vec::with_capacity(7);
+    let mut cursor = 0u64;
+    if t.route_us > 0 {
+        spans.push(Span { name: "route", start_us: 0, dur_us: t.route_us });
+    }
+    cursor += t.route_us;
+    spans.push(Span { name: "queue", start_us: cursor, dur_us: t.queue_us });
+    let gate_us = t.gate_us.min(t.queue_us);
+    if gate_us > 0 {
+        let gate_start = cursor + t.queue_us - gate_us;
+        spans.push(Span { name: "gate", start_us: gate_start, dur_us: gate_us });
+        let promote_us = t.promote_us.min(gate_us);
+        if promote_us > 0 {
+            spans.push(Span { name: "promote", start_us: gate_start, dur_us: promote_us });
+        }
+    }
+    cursor += t.queue_us;
+    spans.push(Span { name: "prefill", start_us: cursor, dur_us: t.prefill_us });
+    cursor += t.prefill_us;
+    spans.push(Span { name: "decode", start_us: cursor, dur_us: t.decode_us });
+    cursor += t.decode_us;
+    spans.push(Span { name: "finish", start_us: cursor, dur_us: t.finish_us });
+    spans
+}
+
+/// A completed request's lifecycle: identity tags plus the span chain.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub worker: usize,
+    pub method: String,
+    pub route_kind: &'static str,
+    pub route_hint_tokens: usize,
+    pub prompt_tokens: usize,
+    pub reused_tokens: usize,
+    pub promoted_pages: usize,
+    pub gen_tokens: usize,
+    pub decode_rounds: u32,
+    /// Trace start (routing decision), microseconds since the hub epoch.
+    pub start_us: u64,
+    /// Wall-clock from worker arrival to retirement, seconds.
+    pub total_s: f64,
+    pub spans: Vec<Span>,
+}
+
+impl RequestTrace {
+    /// First span with the given name, if the phase occurred.
+    pub fn span(&self, name: &str) -> Option<&Span> {
+        self.spans.iter().find(|s| s.name == name)
+    }
+
+    /// Sum of the top-level chain (route+queue+prefill+decode+finish);
+    /// nested spans (gate, promote) are excluded. Equals `total_s` plus
+    /// the routing decision by construction.
+    pub fn chain_sum_s(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| !matches!(s.name, "gate" | "promote"))
+            .map(|s| s.dur_us as f64 * 1e-6)
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::from_pairs(vec![
+                    ("name", Json::str(s.name)),
+                    ("start_us", Json::num(s.start_us as f64)),
+                    ("dur_us", Json::num(s.dur_us as f64)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("id", Json::num(self.id as f64)),
+            ("worker", Json::num(self.worker as f64)),
+            ("method", Json::str(self.method.as_str())),
+            ("route_kind", Json::str(self.route_kind)),
+            ("route_hint_tokens", Json::num(self.route_hint_tokens as f64)),
+            ("prompt_tokens", Json::num(self.prompt_tokens as f64)),
+            ("reused_tokens", Json::num(self.reused_tokens as f64)),
+            ("promoted_pages", Json::num(self.promoted_pages as f64)),
+            ("gen_tokens", Json::num(self.gen_tokens as f64)),
+            ("decode_rounds", Json::num(self.decode_rounds as f64)),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("total_s", Json::num(self.total_s)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+}
+
+/// One scheduler tick's phase timings on a worker: the gate pass over the
+/// pending batch, the watermark demotion pass, the directory flush, and
+/// the decode round. Zero-duration phases are skipped on export.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TickTrace {
+    pub worker: usize,
+    /// Tick start, microseconds since the hub epoch.
+    pub start_us: u64,
+    pub gate_us: u64,
+    pub demote_us: u64,
+    pub flush_us: u64,
+    pub decode_us: u64,
+    pub admitted: usize,
+    pub decoded: usize,
+    /// Active sequences after the tick (batch occupancy).
+    pub active: usize,
+}
+
+impl TickTrace {
+    /// True when the tick did any measurable work worth exporting.
+    pub fn is_busy(&self) -> bool {
+        self.admitted > 0
+            || self.decoded > 0
+            || self.gate_us + self.demote_us + self.flush_us + self.decode_us > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phases() -> PhaseTimes {
+        PhaseTimes {
+            route_us: 3,
+            queue_us: 100,
+            gate_us: 40,
+            promote_us: 25,
+            prefill_us: 500,
+            decode_us: 2000,
+            finish_us: 10,
+        }
+    }
+
+    fn trace(t: &PhaseTimes) -> RequestTrace {
+        RequestTrace {
+            id: 7,
+            worker: 1,
+            method: "polarquant".into(),
+            route_kind: "directed",
+            route_hint_tokens: 48,
+            prompt_tokens: 64,
+            reused_tokens: 47,
+            promoted_pages: 2,
+            gen_tokens: 4,
+            decode_rounds: 4,
+            start_us: 1234,
+            total_s: (t.queue_us + t.prefill_us + t.decode_us + t.finish_us) as f64 * 1e-6,
+            spans: build_spans(t),
+        }
+    }
+
+    #[test]
+    fn spans_tile_and_nest() {
+        let t = phases();
+        let tr = trace(&t);
+        // Top-level chain tiles the timeline back to back.
+        let chain: Vec<&Span> =
+            tr.spans.iter().filter(|s| !matches!(s.name, "gate" | "promote")).collect();
+        let names: Vec<&str> = chain.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["route", "queue", "prefill", "decode", "finish"]);
+        for w in chain.windows(2) {
+            assert_eq!(w[0].end_us(), w[1].start_us, "{} must abut {}", w[0].name, w[1].name);
+        }
+        // Gate nests inside queue; promote nests inside gate.
+        let queue = tr.span("queue").unwrap();
+        let gate = tr.span("gate").unwrap();
+        let promote = tr.span("promote").unwrap();
+        assert!(gate.start_us >= queue.start_us && gate.end_us() <= queue.end_us());
+        assert!(promote.start_us >= gate.start_us && promote.end_us() <= gate.end_us());
+        // Chain sums to total plus the routing decision.
+        let want = tr.total_s + t.route_us as f64 * 1e-6;
+        assert!((tr.chain_sum_s() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_children_are_clamped() {
+        // Timer granularity can make gate > queue or promote > gate; the
+        // builder must clamp rather than emit an escaping child span.
+        let t = PhaseTimes { queue_us: 10, gate_us: 50, promote_us: 80, ..Default::default() };
+        let spans = build_spans(&t);
+        let queue = spans.iter().find(|s| s.name == "queue").unwrap();
+        let gate = spans.iter().find(|s| s.name == "gate").unwrap();
+        let promote = spans.iter().find(|s| s.name == "promote").unwrap();
+        assert_eq!(gate.dur_us, 10);
+        assert!(gate.start_us >= queue.start_us && gate.end_us() <= queue.end_us());
+        assert_eq!(promote.dur_us, 10);
+        assert!(promote.end_us() <= gate.end_us());
+    }
+
+    #[test]
+    fn zero_phases_are_omitted() {
+        let t = PhaseTimes { queue_us: 5, prefill_us: 9, decode_us: 11, ..Default::default() };
+        let spans = build_spans(&t);
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["queue", "prefill", "decode", "finish"]);
+    }
+
+    #[test]
+    fn trace_json_roundtrips() {
+        let t = phases();
+        let tr = trace(&t);
+        let j = crate::util::json::Json::parse(&tr.to_json().encode()).unwrap();
+        assert_eq!(j.path("method").unwrap().as_str().unwrap(), "polarquant");
+        assert_eq!(j.path("route_kind").unwrap().as_str().unwrap(), "directed");
+        assert_eq!(j.path("route_hint_tokens").unwrap().as_f64().unwrap(), 48.0);
+        assert_eq!(j.path("spans").unwrap().as_arr().unwrap().len(), 7);
+    }
+
+    #[test]
+    fn tick_busy_detection() {
+        assert!(!TickTrace::default().is_busy());
+        assert!(TickTrace { decoded: 1, ..Default::default() }.is_busy());
+        assert!(TickTrace { flush_us: 2, ..Default::default() }.is_busy());
+    }
+}

@@ -5,6 +5,7 @@
 use polarquant::coordinator::batcher::BatchPolicy;
 use polarquant::coordinator::request::GenRequest;
 use polarquant::coordinator::server::{Server, ServerConfig};
+use polarquant::kvcache::tier::temp_spill_dir;
 use polarquant::model::config::ModelConfig;
 use polarquant::util::json::Json;
 use std::sync::atomic::Ordering;
@@ -233,5 +234,156 @@ fn ttft_less_than_total_and_metrics_consistent() {
     let snap = s.metrics.snapshot();
     assert_eq!(snap.path("requests.done").unwrap().as_f64().unwrap(), 1.0);
     assert_eq!(snap.path("tokens.generated").unwrap().as_f64().unwrap(), 6.0);
+    s.shutdown();
+}
+
+#[test]
+fn trace_dir_emits_wellformed_chrome_json() {
+    // Every worker writes `trace-worker<idx>.json` under --trace-dir; each
+    // file must be a well-formed JSON array of Chrome complete-events, and
+    // every completed request must leave a closed span chain whose
+    // top-level phases (queue/prefill/decode/finish) tile `total_s`.
+    let dir = temp_spill_dir("trace-e2e");
+    let workers = e2e_workers();
+    let s = Server::start(ServerConfig {
+        model: ModelConfig::test(),
+        seed: 1,
+        workers,
+        batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        pool_tokens: 1 << 14,
+        max_active: 4,
+        prefix_cache: true,
+        trace_dir: Some(dir.clone()),
+        ..Default::default()
+    });
+    let n = 8usize;
+    for i in 0..n {
+        let mut req = GenRequest::new(0, (0..32).map(|x| (x * 7 + i as u32) % 64).collect(), 4);
+        req.session = Some(format!("trace-{i}"));
+        s.submit(req);
+    }
+    for _ in 0..n {
+        let resp = s.recv_timeout(Duration::from_secs(120)).expect("complete");
+        assert_eq!(resp.tokens.len(), 4);
+    }
+    s.shutdown(); // the final flush drains every worker's ring into its file
+    let mut seen_ids = std::collections::BTreeSet::new();
+    for w in 0..workers {
+        let path = dir.join(format!("trace-worker{w}.json"));
+        let text = std::fs::read_to_string(&path).expect("per-worker trace file");
+        let events = Json::parse(&text).expect("well-formed JSON");
+        // (chain-summed non-nested durations, total_s) per request lane.
+        let mut chains: std::collections::BTreeMap<u64, (f64, f64)> = Default::default();
+        for e in events.as_arr().expect("trace-event array") {
+            assert_eq!(e.path("ph").unwrap().as_str().unwrap(), "X");
+            assert_eq!(e.path("pid").unwrap().as_f64().unwrap() as usize, w);
+            let tid = e.path("tid").unwrap().as_f64().unwrap() as u64;
+            if tid == 0 {
+                continue; // scheduler tick lane
+            }
+            let name = e.path("name").unwrap().as_str().unwrap();
+            let slot = chains.entry(tid).or_insert((0.0, 0.0));
+            slot.1 = e.path("args.total_s").unwrap().as_f64().unwrap();
+            // gate nests inside queue and promote inside gate; route
+            // precedes arrival. The rest tiles the request wall-clock.
+            if !matches!(name, "route" | "gate" | "promote") {
+                slot.0 += e.path("dur").unwrap().as_f64().unwrap() * 1e-6;
+            }
+        }
+        for (tid, (sum, total)) in &chains {
+            seen_ids.insert(tid - 1);
+            assert!(
+                (sum - total).abs() <= 0.05 * total + 20e-6,
+                "worker {w} request {}: span chain {sum:.6}s vs total {total:.6}s",
+                tid - 1
+            );
+        }
+    }
+    assert_eq!(seen_ids.len(), n, "every request left a trace: {seen_ids:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_promote_span_matches_tier_stall() {
+    // A promoted prefix hit must carry a `promote` span whose duration is
+    // exactly the disk stall the tier metrics account for (same timer,
+    // one promotion in the whole run).
+    let s = Server::start(ServerConfig {
+        model: ModelConfig::test(),
+        seed: 3,
+        workers: 1,
+        batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        pool_tokens: 128, // 8 pages of 16 tokens — tight on purpose
+        max_active: 2,
+        prefix_cache: true,
+        spill_dir: Some(temp_spill_dir("trace-promote")),
+        ..Default::default()
+    });
+    let a: Vec<u32> = (0..48).map(|x| (x * 5 + 2) % 64).collect();
+    let b: Vec<u32> = (0..80).map(|x| (x * 3 + 1) % 64).collect();
+    let ask =
+        |p: Vec<u32>| s.generate_blocking(GenRequest::new(0, p, 4), Duration::from_secs(60));
+    assert_eq!(ask(a.clone()).expect("a cold").reused_tokens, 0);
+    ask(b).expect("b evicts a's pages to disk");
+    let warm = ask(a).expect("a warm");
+    assert_eq!(warm.reused_tokens, 47, "disk-warmed hit");
+    let snap = s.metrics.snapshot();
+    let stall = snap.path("kv_tier.promote_stall_us").unwrap().as_f64().unwrap();
+    assert!(stall > 0.0, "promotion reads disk; the stall must be measurable");
+    let traces = s.trace_json(8);
+    let tr = traces
+        .path("traces")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|t| t.path("id").unwrap().as_f64().unwrap() as u64 == warm.id)
+        .expect("warm request's trace");
+    assert!(tr.path("promoted_pages").unwrap().as_f64().unwrap() >= 3.0);
+    let spans = tr.path("spans").unwrap().as_arr().unwrap();
+    let promote = spans
+        .iter()
+        .find(|sp| sp.path("name").unwrap().as_str().unwrap() == "promote")
+        .expect("promote span on the disk-warmed trace");
+    assert_eq!(
+        promote.path("dur_us").unwrap().as_f64().unwrap(),
+        stall,
+        "the promote span is the tier's promote stall"
+    );
+    assert!((warm.timing.promote_s - stall * 1e-6).abs() < 1e-9, "Timing agrees");
+    s.shutdown();
+}
+
+#[test]
+fn trace_directed_request_carries_route_hint() {
+    // Anonymous repeat of a published prefix: the router directs it and
+    // stamps the advertised depth, and both survive into the trace.
+    let s = server(2, 1 << 14);
+    let prompt: Vec<u32> = (0..48).map(|x| (x * 5 + 2) % 64).collect();
+    let cold = s
+        .generate_blocking(GenRequest::new(0, prompt.clone(), 4), Duration::from_secs(60))
+        .expect("cold");
+    assert_eq!(cold.reused_tokens, 0);
+    let warm = s
+        .generate_blocking(GenRequest::new(0, prompt, 4), Duration::from_secs(60))
+        .expect("warm");
+    assert_eq!(warm.reused_tokens, 47, "directed onto the warm replica");
+    let traces = s.trace_json(8);
+    let traces = traces.path("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 2);
+    let by_id = |id: u64| {
+        traces
+            .iter()
+            .find(|t| t.path("id").unwrap().as_f64().unwrap() as u64 == id)
+            .expect("trace present")
+    };
+    let warm_tr = by_id(warm.id);
+    assert_eq!(warm_tr.path("route_kind").unwrap().as_str().unwrap(), "directed");
+    // 3 full 16-token pages advertised → the hint covers the whole prompt.
+    assert_eq!(warm_tr.path("route_hint_tokens").unwrap().as_f64().unwrap(), 48.0);
+    assert_eq!(warm_tr.path("reused_tokens").unwrap().as_f64().unwrap(), 47.0);
+    let cold_tr = by_id(cold.id);
+    assert_eq!(cold_tr.path("route_kind").unwrap().as_str().unwrap(), "fallback");
+    assert_eq!(cold_tr.path("route_hint_tokens").unwrap().as_f64().unwrap(), 0.0);
     s.shutdown();
 }
