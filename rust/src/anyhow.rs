@@ -1,0 +1,141 @@
+//! Minimal self-contained stand-in for the `anyhow` crate.
+//!
+//! This repo builds fully offline with zero external crates, so the
+//! modules written against the `anyhow` API (the weights loader and the
+//! PJRT artifact/runtime loaders) compile against this shim instead: a
+//! string-backed error type, the `anyhow!`/`bail!`/`ensure!` macros, and
+//! the `Context` extension trait. Call sites import
+//! `crate::anyhow::...` and keep the upstream spelling otherwise, so
+//! swapping the real crate back in is a one-line import change.
+
+use std::fmt;
+
+/// String-backed error carrying the formatted message (and any context
+/// prefixes folded in at attach time).
+///
+/// Deliberately does NOT implement `std::error::Error`: that keeps the
+/// blanket `From<E: std::error::Error>` impl below coherent with the
+/// language's reflexive `impl From<T> for T`, which is what lets `?`
+/// convert `io::Error` (and friends) into this type automatically.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`: attach a message to the error path of a `Result`
+/// or turn an `Option` into a `Result` with a message.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+// macro_rules! items are only nameable through a re-export, so each macro
+// gets an `_impl` name and a `pub(crate) use ... as ...` alias that makes
+// `crate::anyhow::anyhow!` / `bail!` / `ensure!` resolve like the real
+// crate's exports.
+macro_rules! anyhow_impl {
+    ($($arg:tt)*) => {
+        $crate::anyhow::Error::msg(format!($($arg)*))
+    };
+}
+macro_rules! bail_impl {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow::Error::msg(format!($($arg)*)))
+    };
+}
+macro_rules! ensure_impl {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+pub(crate) use anyhow_impl as anyhow;
+pub(crate) use bail_impl as bail;
+pub(crate) use ensure_impl as ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/pq-anyhow-shim")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: u32) -> Result<u32> {
+            crate::anyhow::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::anyhow::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let e: Error = crate::anyhow::anyhow!("code {}", 7);
+        assert_eq!(format!("{e:?}"), "code 7");
+    }
+}

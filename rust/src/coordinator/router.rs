@@ -110,6 +110,12 @@ impl Router {
         self.load.len()
     }
 
+    // Atomics note: every `load` access in this router is Relaxed on
+    // purpose. The counters are load *estimates* — routing reads race with
+    // concurrent route/complete updates by design, and a stale read can
+    // only produce a slightly imbalanced placement, never a correctness
+    // violation. No other data is published through these atomics, so no
+    // acquire/release pairing is needed anywhere in this impl.
     fn least_loaded(&self) -> (usize, u64) {
         let mut best = 0;
         let mut best_load = u64::MAX;
@@ -125,6 +131,8 @@ impl Router {
 
     fn spread(&self) -> usize {
         if self.round_robin {
+            // Relaxed fetch_add still hands out unique ticket numbers; the
+            // round-robin order across threads is unspecified anyway.
             (self.rr_next.fetch_add(1, Ordering::Relaxed) % self.load.len() as u64) as usize
         } else {
             self.least_loaded().0
@@ -178,6 +186,10 @@ impl Router {
 
     /// Mark a request's tokens as drained from a worker.
     pub fn complete(&self, worker: usize, tokens: usize) {
+        // The load-then-sub pair is not atomic as a unit: a racing `route`
+        // can interleave, making the clamp approximate. The clamp only
+        // guards against u64 underflow from double-completion; an estimate
+        // that is transiently low is acceptable (see note above).
         self.load[worker].fetch_sub(
             (tokens as u64).min(self.load[worker].load(Ordering::Relaxed)),
             Ordering::Relaxed,

@@ -20,6 +20,7 @@ use crate::kvcache::pools::{share_pools, PoolSet};
 use crate::kvcache::tier::{TierConfig, TierManager};
 use crate::obs::{chrome_request_events, chrome_tick_events, ChromeTraceWriter};
 use crate::obs::{TickTrace, TraceHub, WorkerTraces};
+use crate::util::sync::lock_recover;
 use crate::prefix::PrefixDirectory;
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
@@ -195,6 +196,7 @@ impl Server {
                     .spawn(move || {
                         worker_loop(w, cfg_c, rx, resp_tx, shared);
                     })
+                    // analyze: allow(panic_free_module, "startup-time spawn failure is fatal by design: no requests are in flight yet and a server without its worker fleet cannot serve")
                     .expect("spawn worker"),
             );
         }
@@ -254,15 +256,19 @@ impl Server {
         let mut tracked = Tracked::new(req);
         tracked.route_kind = r.kind.as_str();
         tracked.route_us = route_us;
-        self.worker_txs[r.worker]
-            .send(WorkerMsg::Submit(tracked))
-            .expect("worker alive");
+        // Degrade, never die: a dead worker (its thread panicked and the
+        // channel closed) drops this request — the caller times out and
+        // the server keeps serving on the remaining workers.
+        if self.worker_txs[r.worker].send(WorkerMsg::Submit(tracked)).is_err() {
+            eprintln!("server: worker {} is gone; dropping request {id}", r.worker);
+            self.metrics.requests_in.fetch_sub(1, Ordering::Relaxed);
+        }
         id
     }
 
     /// Receive the next finished response (blocking with timeout).
     pub fn recv_timeout(&self, timeout: Duration) -> Option<GenResponse> {
-        match self.resp_rx.lock().unwrap().recv_timeout(timeout) {
+        match lock_recover(&self.resp_rx).recv_timeout(timeout) {
             Ok((w, resp)) => {
                 // Drain what `submit` charged: the prompt tokens.
                 self.router.complete(w, resp.prompt_tokens);
@@ -576,7 +582,7 @@ fn worker_loop(
         // Recorded AFTER the decode round so pages freed by retiring
         // sequences drain out of the gauge before the worker idles
         // (only prefix-cache-held pages stay resident).
-        let (kv_bytes, kv_slots) = pools.lock().unwrap().occupancy();
+        let (kv_bytes, kv_slots) = lock_recover(&pools).occupancy();
         let kv_now = (kv_bytes as u64, kv_slots as u64 * coords_per_token);
         metrics.record_kv_residency(kv_now.0, kv_now.1, reported_kv);
         reported_kv = kv_now;

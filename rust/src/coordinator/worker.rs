@@ -23,6 +23,7 @@ use crate::model::config::ModelConfig;
 use crate::model::sampler::Sampler;
 use crate::model::transformer::{PastKv, PrefillOutput, Transformer};
 use crate::model::weights::Weights;
+use crate::util::sync::lock_recover;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -152,16 +153,24 @@ impl NativeWorker {
         let layout = KvLayout::new(&cfg, codec.as_ref());
         let prompt_len = req.prompt.len();
         let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
-        let owns_seq = {
-            let mut pools = self.pools.lock().unwrap();
+        // Degrade, never die: a full pool (standalone use without the
+        // scheduler's admission gate) or a missing slot falls back to the
+        // legacy heap cache for this session instead of panicking the
+        // worker thread.
+        let owns_seq = 'pool: {
+            let mut pools = lock_recover(&self.pools);
             let pool = pools.pool_mut(&req.method);
             let owns = pool.table(req.id).is_none();
-            if owns {
-                pool.register(req.id, prompt_len + req.max_new_tokens)
-                    .expect("standalone worker pool has capacity");
+            if owns && pool.register(req.id, prompt_len + req.max_new_tokens).is_err() {
+                break 'pool None;
             }
             for t in encode_from..prompt_len {
-                let slot = pool.token_slot_mut(req.id, t).expect("prompt slot allocated");
+                let Some(slot) = pool.token_slot_mut(req.id, t) else {
+                    if owns {
+                        pool.release(req.id).ok();
+                    }
+                    break 'pool None;
+                };
                 for (l, layer) in pre.kv.iter().enumerate() {
                     for h in 0..cfg.n_heads {
                         let off = layout.pair_offset(l, h);
@@ -171,7 +180,15 @@ impl NativeWorker {
                     }
                 }
             }
-            owns
+            Some(owns)
+        };
+        let Some(owns_seq) = owns_seq else {
+            eprintln!(
+                "worker: pool admission failed for request {} ({}); \
+                 serving via legacy heap cache",
+                req.id, req.method
+            );
+            return self.finish_prefill_legacy(req, pre);
         };
         let mut sampler = Sampler::new(req.sampler.clone());
         let first = sampler.sample(pre.last_logits(cfg.vocab));
@@ -221,7 +238,7 @@ impl NativeWorker {
         let cfg = &self.model.cfg;
         let layout = KvLayout::new(cfg, codec);
         let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
-        let pools = self.pools.lock().unwrap();
+        let pools = lock_recover(&self.pools);
         let pool = pools.pool(method)?;
         let table = pool.table(seq)?;
         if table.num_tokens(pool.cfg.page_tokens) < n {
@@ -299,29 +316,36 @@ impl StepEngine for NativeWorker {
     }
 
     fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32 {
-        let session = self.sessions.get_mut(&engine_id).expect("live session");
-        let logits = match &mut session.kv {
+        // Degrade, never die: a missing session means scheduler/worker
+        // state diverged — emit the last token again (the request ends as
+        // garbage, visibly) instead of killing the worker thread.
+        let Some(session) = self.sessions.get_mut(&engine_id) else {
+            eprintln!("worker: decode on unknown session {engine_id}; echoing last token");
+            return last_token;
+        };
+        let next = match &mut session.kv {
             SessionKv::Pooled { seq, method, codec, layout, .. } => {
                 debug_assert_eq!(session.len, pos, "pool slots must be contiguous");
-                let mut pools = self.pools.lock().unwrap();
+                let mut pools = lock_recover(&self.pools);
                 let pool = pools.pool_mut(method);
-                self.model.decode_step_paged(
+                let logits = self.model.decode_step_paged(
                     last_token,
                     pos,
                     pool,
                     *seq,
                     codec.as_ref(),
                     layout,
-                )
+                );
+                session.sampler.sample(logits)
             }
             SessionKv::Legacy(cache) => {
                 let logits = self.model.decode_step(last_token, pos, &mut cache.caches);
                 cache.note_decoded();
-                logits
+                session.sampler.sample(&logits)
             }
         };
         session.len += 1;
-        session.sampler.sample(&logits)
+        next
     }
 
     fn cache_bytes(&self, engine_id: u64) -> usize {
@@ -347,7 +371,7 @@ impl StepEngine for NativeWorker {
     fn release(&mut self, engine_id: u64) {
         if let Some(s) = self.sessions.remove(&engine_id) {
             if let SessionKv::Pooled { seq, method, owns_seq: true, .. } = s.kv {
-                self.pools.lock().unwrap().release(&method, seq).ok();
+                lock_recover(&self.pools).release(&method, seq).ok();
             }
         }
     }

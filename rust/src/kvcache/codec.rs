@@ -60,6 +60,9 @@ pub struct CodecScratch {
     /// Basis-change scratch for [`PageCodec::value_finish`] (polar: the
     /// un-rotated accumulator), likewise reused across calls.
     pub unrot: Vec<f32>,
+    /// Rotated-query scratch for [`PageCodec::prepare_query`] (polar:
+    /// the randomized-rotation output), likewise reused across calls.
+    pub rot: Vec<f32>,
 }
 
 /// A page-native KV codec: fixed-size self-contained token slots.
@@ -274,6 +277,7 @@ impl PageCodec for ExactF32Codec {
             for (j, &qj) in q.iter().enumerate() {
                 s += f32_from_le(pair, 4 * j) * qj;
             }
+            // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
             scores.push(s);
         }
     }
@@ -357,6 +361,7 @@ impl PageCodec for Fp16PageCodec {
             for (j, &qj) in q.iter().enumerate() {
                 s += f16_from_le(pair, 2 * j) * qj;
             }
+            // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
             scores.push(s);
         }
     }
@@ -433,7 +438,8 @@ impl PageCodec for PolarPageCodec {
     }
 
     fn prepare_query(&self, q: &[f32], scratch: &mut CodecScratch) {
-        scratch.k1 = self.quantizer.prepare_query_into(q, &mut scratch.table);
+        let CodecScratch { table, rot, k1, .. } = scratch;
+        *k1 = self.quantizer.prepare_query_into(q, table, rot);
     }
 
     fn key_scores_page(
@@ -450,6 +456,7 @@ impl PageCodec for PolarPageCodec {
         let CodecScratch { table, k1, tmp, .. } = scratch;
         for i in 0..count {
             let pair = &slots[i * stride + offset..];
+            // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
             scores.push(self.quantizer.score_slot(table, *k1, &pair[..vb], tmp));
         }
     }
@@ -602,6 +609,7 @@ impl PageCodec for KiviPageCodec {
                 let code = (key[codes_at + c / 4] >> (2 * (c % 4))) & 0x3;
                 s += qc * dequant_code(code, zero, scale);
             }
+            // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
             scores.push(s);
         }
     }

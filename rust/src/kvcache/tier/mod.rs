@@ -174,6 +174,8 @@ static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
 /// `TierManager` (and its segments) remove their contents on drop, so
 /// no cleanup is needed.
 pub fn temp_spill_dir(tag: &str) -> PathBuf {
+    // Relaxed: the fetch_add's atomicity alone guarantees unique suffixes;
+    // nothing is published between threads through this counter.
     let n = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
     let d = std::env::temp_dir().join(format!("pq-spill-{}-{tag}-{n}", std::process::id()));
     std::fs::create_dir_all(&d).expect("create temp spill dir");

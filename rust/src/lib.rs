@@ -10,6 +10,12 @@
 //! The Rust binary loads the HLO artifacts through the PJRT C API and never
 //! touches Python at request time.
 
+// The tree is unsafe-free by construction (no FFI on the default build,
+// no hand-rolled sync primitives) — pin that so a future `unsafe` block
+// is a deliberate, reviewed decision rather than drift.
+#![forbid(unsafe_code)]
+
+pub mod anyhow;
 pub mod coordinator;
 pub mod eval;
 pub mod kvcache;

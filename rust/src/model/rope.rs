@@ -32,6 +32,7 @@ impl RopeTable {
     }
 
     /// Grow the table if `pos` exceeds capacity (amortized doubling).
+    // analyze: allow(hot_path_alloc, "one-time amortized table growth past the prewarmed 256 positions; steady-state decode never enters the grow branch")
     fn ensure(&mut self, pos: usize) {
         if pos < self.max_pos {
             return;
@@ -69,10 +70,11 @@ impl RopeTable {
         let dh = self.head_dim;
         assert_eq!(x.len() % dh, 0);
         self.ensure(pos);
-        // Split per-head without re-borrowing self mutably inside.
+        // `x` is a caller buffer, so the table rows can stay borrowed
+        // (shared) across the whole per-head sweep — no copies.
         let half = dh / 2;
-        let c = self.cos[pos * half..(pos + 1) * half].to_vec();
-        let s = self.sin[pos * half..(pos + 1) * half].to_vec();
+        let c = &self.cos[pos * half..(pos + 1) * half];
+        let s = &self.sin[pos * half..(pos + 1) * half];
         for head in x.chunks_mut(dh) {
             for j in 0..half {
                 let x0 = head[2 * j];

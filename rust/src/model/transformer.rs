@@ -91,6 +91,35 @@ pub struct Transformer {
     /// accumulators) reused across paged decode steps — RefCell because
     /// [`HeadKvView`] borrows it behind a shared reference.
     codec_scratch: RefCell<CodecScratch>,
+    /// Model-side decode buffers, reused across paged decode steps.
+    decode: DecodeScratch,
+}
+
+/// Reusable per-step buffers for [`Transformer::decode_step_paged`]:
+/// sized on the first step, after which steady-state decode performs no
+/// heap allocation (`cargo xtask analyze`'s hot_path_alloc lint keeps it
+/// that way).
+#[derive(Default)]
+struct DecodeScratch {
+    x: Vec<f32>,
+    xin: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// Amortized sizing: resizes only when the requested length changes
+/// (first step, or a weights swap), so steady-state decode never touches
+/// the allocator.
+fn ensure_len(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() != n {
+        buf.resize(n, 0.0);
+    }
 }
 
 /// Observation-window length captured at prefill (SnapKV's default is 16–64;
@@ -107,6 +136,7 @@ impl Transformer {
             rope,
             scratch: AttnScratch::default(),
             codec_scratch: RefCell::new(CodecScratch::default()),
+            decode: DecodeScratch::default(),
         }
     }
 
@@ -362,36 +392,43 @@ impl Transformer {
         seq: u64,
         codec: &dyn PageCodec,
         layout: &KvLayout,
-    ) -> Vec<f32> {
-        let cfg = self.cfg.clone();
+    ) -> &[f32] {
+        // Field-split the &mut self borrow: weights, the RoPE table, the
+        // attention scratch and the decode buffers are disjoint, which is
+        // what lets every per-step buffer live on the struct (no per-token
+        // allocation, no cfg clone) while the step mutates them all.
+        let Transformer { cfg, weights, rope, scratch, codec_scratch, decode } = self;
         let (d, h, dh, f) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
         let hd = h * dh;
         assert_eq!(layout.n_layers, cfg.n_layers);
         assert_eq!(layout.n_heads, h);
 
-        let embed = self.weights.get("embed");
+        let embed = weights.get("embed");
         let tok = token as usize % cfg.vocab;
-        let mut x = embed[tok * d..(tok + 1) * d].to_vec();
-
-        let mut xin = vec![0.0f32; d];
-        let mut q = vec![0.0f32; hd];
-        let mut k = vec![0.0f32; hd];
-        let mut v = vec![0.0f32; hd];
-        let mut attn = vec![0.0f32; hd];
-        let mut proj = vec![0.0f32; d];
-        let mut gate = vec![0.0f32; f];
-        let mut up = vec![0.0f32; f];
+        let DecodeScratch { x, xin, q, k, v, attn, proj, gate, up, logits } = decode;
+        ensure_len(x, d);
+        ensure_len(xin, d);
+        ensure_len(q, hd);
+        ensure_len(k, hd);
+        ensure_len(v, hd);
+        ensure_len(attn, hd);
+        ensure_len(proj, d);
+        ensure_len(gate, f);
+        ensure_len(up, f);
+        ensure_len(logits, cfg.vocab);
+        x.copy_from_slice(&embed[tok * d..(tok + 1) * d]);
 
         for l in 0..cfg.n_layers {
-            xin.copy_from_slice(&x);
-            rmsnorm(&mut xin, self.weights.layer(l, "attn_norm"), cfg.rms_eps);
-            matvec_t(self.weights.layer(l, "wq"), &xin, d, hd, &mut q);
-            matvec_t(self.weights.layer(l, "wk"), &xin, d, hd, &mut k);
-            matvec_t(self.weights.layer(l, "wv"), &xin, d, hd, &mut v);
-            self.rope.apply_heads(&mut q, pos);
-            self.rope.apply_heads(&mut k, pos);
+            xin.copy_from_slice(x);
+            rmsnorm(xin, weights.layer(l, "attn_norm"), cfg.rms_eps);
+            matvec_t(weights.layer(l, "wq"), xin, d, hd, q);
+            matvec_t(weights.layer(l, "wk"), xin, d, hd, k);
+            matvec_t(weights.layer(l, "wv"), xin, d, hd, v);
+            rope.apply_heads(q, pos);
+            rope.apply_heads(k, pos);
 
             {
+                // analyze: allow(hot_path_panic, "pool-slot invariants are enforced at admission; a missing table here is unrecoverable state corruption, not an input error")
                 let table = pool.table(seq).expect("pool sequence registered");
                 let pages = &table.pages;
                 for head in 0..h {
@@ -403,18 +440,19 @@ impl Transformer {
                         l,
                         head,
                         pos,
-                        &self.codec_scratch,
+                        codec_scratch,
                     );
                     let qh = &q[head * dh..(head + 1) * dh];
                     let kh = &k[head * dh..(head + 1) * dh];
                     let vh = &v[head * dh..(head + 1) * dh];
                     let out = &mut attn[head * dh..(head + 1) * dh];
-                    attend_cached(&view, qh, kh, vh, &mut self.scratch, out);
+                    attend_cached(&view, qh, kh, vh, scratch, out);
                 }
             }
             // Encode the streamed pair into this token's slot. Matched
             // prefix pages are page-aligned and slot `pos` lies past the
             // prompt, so the write never lands in a shared page.
+            // analyze: allow(hot_path_panic, "slot pos was allocated when the scheduler admitted the request; absence is unrecoverable state corruption, not an input error")
             let slot = pool.token_slot_mut(seq, pos).expect("decode slot allocated");
             for head in 0..h {
                 let off = layout.pair_offset(l, head);
@@ -425,23 +463,22 @@ impl Transformer {
                 );
             }
 
-            matvec_t(self.weights.layer(l, "wo"), &attn, hd, d, &mut proj);
-            crate::math::linalg::add_assign(&mut x, &proj);
+            matvec_t(weights.layer(l, "wo"), attn, hd, d, proj);
+            crate::math::linalg::add_assign(x, proj);
 
-            xin.copy_from_slice(&x);
-            rmsnorm(&mut xin, self.weights.layer(l, "mlp_norm"), cfg.rms_eps);
-            matvec_t(self.weights.layer(l, "w_gate"), &xin, d, f, &mut gate);
-            matvec_t(self.weights.layer(l, "w_up"), &xin, d, f, &mut up);
+            xin.copy_from_slice(x);
+            rmsnorm(xin, weights.layer(l, "mlp_norm"), cfg.rms_eps);
+            matvec_t(weights.layer(l, "w_gate"), xin, d, f, gate);
+            matvec_t(weights.layer(l, "w_up"), xin, d, f, up);
             for i in 0..f {
                 gate[i] = silu(gate[i]) * up[i];
             }
-            matvec_t(self.weights.layer(l, "w_down"), &gate, f, d, &mut proj);
-            crate::math::linalg::add_assign(&mut x, &proj);
+            matvec_t(weights.layer(l, "w_down"), gate, f, d, proj);
+            crate::math::linalg::add_assign(x, proj);
         }
 
-        rmsnorm(&mut x, self.weights.get("final_norm"), cfg.rms_eps);
-        let mut logits = vec![0.0f32; cfg.vocab];
-        matvec(embed, &x, cfg.vocab, d, &mut logits);
+        rmsnorm(x, weights.get("final_norm"), cfg.rms_eps);
+        matvec(embed, x, cfg.vocab, d, logits);
         logits
     }
 }

@@ -7,7 +7,7 @@
 
 use crate::model::config::ModelConfig;
 use crate::util::rng::{Pcg64, Rng};
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 
@@ -18,6 +18,25 @@ pub const WEIGHTS_MAGIC: u32 = 0x5051_4D31; // "PQM1"
 pub struct Weights {
     pub cfg: ModelConfig,
     params: BTreeMap<String, Vec<f32>>,
+    /// Per-layer leaf → full key (`"wq"` → `"l2.wq"`), precomputed so the
+    /// decode path never formats key strings.
+    layer_keys: Vec<BTreeMap<String, String>>,
+}
+
+fn build_layer_keys(
+    n_layers: usize,
+    params: &BTreeMap<String, Vec<f32>>,
+) -> Vec<BTreeMap<String, String>> {
+    let mut keys = vec![BTreeMap::new(); n_layers];
+    for name in params.keys() {
+        let Some(rest) = name.strip_prefix('l') else { continue };
+        let Some((num, leaf)) = rest.split_once('.') else { continue };
+        let Ok(l) = num.parse::<usize>() else { continue };
+        if l < n_layers {
+            keys[l].insert(leaf.to_string(), name.clone());
+        }
+    }
+    keys
 }
 
 impl Weights {
@@ -38,18 +57,27 @@ impl Weights {
             };
             params.insert(name, data);
         }
-        Self { cfg: cfg.clone(), params }
+        let layer_keys = build_layer_keys(cfg.n_layers, &params);
+        Self { cfg: cfg.clone(), params, layer_keys }
     }
 
+    // analyze: allow(hot_path_panic, "weight names are static; a missing parameter is unrecoverable construction corruption, not an input error")
     pub fn get(&self, name: &str) -> &[f32] {
         self.params
             .get(name)
             .unwrap_or_else(|| panic!("missing param {name}"))
     }
 
-    /// Layer-scoped accessor: `layer(2, "wq")` → `l2.wq`.
+    /// Layer-scoped accessor: `layer(2, "wq")` → `l2.wq` (key lookup,
+    /// no string formatting — this runs per layer per decode step).
+    // analyze: allow(hot_path_panic, "weight names are static; a missing layer key is unrecoverable construction corruption, not an input error")
     pub fn layer(&self, l: usize, leaf: &str) -> &[f32] {
-        self.get(&format!("l{l}.{leaf}"))
+        let key = self
+            .layer_keys
+            .get(l)
+            .and_then(|m| m.get(leaf))
+            .unwrap_or_else(|| panic!("missing param l{l}.{leaf}"));
+        self.get(key)
     }
 
     /// Parameters flattened in canonical order (the AOT graph arg order).
@@ -122,7 +150,8 @@ impl Weights {
                 .collect();
             params.insert(name, data);
         }
-        Ok(Self { cfg, params })
+        let layer_keys = build_layer_keys(cfg.n_layers, &params);
+        Ok(Self { cfg, params, layer_keys })
     }
 }
 

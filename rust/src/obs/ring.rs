@@ -31,7 +31,9 @@ struct TraceRing {
 
 impl TraceRing {
     fn new(cap: usize) -> Self {
-        Self { buf: VecDeque::with_capacity(cap.min(1024)), cap, next_seq: 0, dropped: 0 }
+        // Full preallocation: push never grows the deque, so the retire
+        // hot path stays allocation-free (caps are small, set at startup).
+        Self { buf: VecDeque::with_capacity(cap), cap, next_seq: 0, dropped: 0 }
     }
 
     fn push(&mut self, t: RequestTrace) {
@@ -39,6 +41,7 @@ impl TraceRing {
             self.buf.pop_front();
             self.dropped += 1;
         }
+        // analyze: allow(hot_path_alloc, "len < cap here and the deque is preallocated to cap, so this push never reallocates")
         self.buf.push_back(t);
         self.next_seq += 1;
     }
@@ -86,8 +89,12 @@ impl WorkerTraces {
     /// is dropped and counted in [`WorkerTraces::dropped_spans`].
     pub fn push(&self, t: RequestTrace) {
         match self.ring.try_lock() {
+            // analyze: allow(hot_path_alloc, "TraceRing::push on the guard, not Vec::push; the ring itself is preallocated")
             Ok(mut ring) => ring.push(t),
             Err(_) => {
+                // Relaxed is sufficient: `contended` is a monotonic counter
+                // read only through `dropped_spans`, which takes the ring
+                // lock first — that acquire orders any prior increments.
                 self.contended.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -105,6 +112,8 @@ impl WorkerTraces {
 
     /// Traces lost to overflow plus pushes lost to lock contention.
     pub fn dropped_spans(&self) -> u64 {
+        // Relaxed load: the count is advisory telemetry — a reader racing a
+        // concurrent failed push may miss that one increment, never more.
         self.ring.lock().unwrap().dropped + self.contended.load(Ordering::Relaxed)
     }
 }

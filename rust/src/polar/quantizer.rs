@@ -203,6 +203,7 @@ impl PolarQuantizer {
     }
 
     /// Encode one vector.
+    // analyze: allow(hot_path_alloc, "builds one QuantizedVector per streamed token per head (not per cached token); the alloc-free encode path is tracked under ROADMAP vectorized decode kernels")
     pub fn encode(&self, x: &[f32]) -> QuantizedVector {
         assert_eq!(x.len(), self.cfg.dim);
         let mut pre = vec![0.0f32; x.len()];
@@ -372,27 +373,31 @@ impl PolarQuantizer {
     /// Preprocess a query for [`Self::score`]: rotate once and tabulate
     /// the level-1 pair contractions per centroid (d/2 × k₁ fmas, done
     /// once per attention step instead of once per cached token).
+    // analyze: allow(hot_path_alloc, "legacy per-sequence path: allocates once per attention step; the serving pool substrate uses prepare_query_into with retained scratch")
     pub fn prepare_query(&self, q: &[f32]) -> PreparedQuery {
         let mut table = Vec::new();
-        let k1 = self.prepare_query_into(q, &mut table);
+        let mut rot = Vec::new();
+        let k1 = self.prepare_query_into(q, &mut table, &mut rot);
         PreparedQuery { level1_table: table, k1 }
     }
 
     /// Reusable-buffer variant of [`prepare_query`](Self::prepare_query):
-    /// fills `table` (resized to d/2 × k₁) and returns k₁. The page-codec
-    /// scratch uses this to avoid a fresh allocation per head per step.
-    pub fn prepare_query_into(&self, q: &[f32], table: &mut Vec<f32>) -> usize {
+    /// fills `table` (resized to d/2 × k₁) and returns k₁, using `rot` as
+    /// scratch for the rotated query. The page-codec scratch uses this to
+    /// avoid any fresh allocation per head per step.
+    pub fn prepare_query_into(&self, q: &[f32], table: &mut Vec<f32>, rot: &mut Vec<f32>) -> usize {
         let d = self.cfg.dim;
         assert_eq!(q.len(), d);
-        let mut rq = vec![0.0f32; d];
-        self.rotation.apply(q, &mut rq);
+        rot.clear();
+        rot.resize(d, 0.0);
+        self.rotation.apply(q, rot);
         let lut1 = &self.trig_luts[0];
         let k1 = lut1.len();
         let pairs = d / 2;
         table.clear();
         table.resize(pairs * k1, 0.0);
         for j in 0..pairs {
-            let (a, b) = (rq[2 * j], rq[2 * j + 1]);
+            let (a, b) = (rot[2 * j], rot[2 * j + 1]);
             let row = &mut table[j * k1..(j + 1) * k1];
             for (c, &(co, si)) in lut1.iter().enumerate() {
                 row[c] = a * co + b * si;
@@ -724,7 +729,8 @@ mod tests {
             let q = gaussian_rows(1, d, 42);
             let prepared = pq.prepare_query(&q);
             let mut table = Vec::new();
-            let k1 = pq.prepare_query_into(&q, &mut table);
+            let mut rot = Vec::new();
+            let k1 = pq.prepare_query_into(&q, &mut table, &mut rot);
             assert_eq!(k1, prepared.k1);
             assert_eq!(table, prepared.level1_table);
             let mut slot = vec![0u8; pq.vec_slot_bytes()];

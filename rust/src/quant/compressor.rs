@@ -200,6 +200,7 @@ impl FpTail {
         self.positions.len() * 4 + (self.keys.len() + self.values.len()) * 2
     }
 
+    // analyze: allow(hot_path_alloc, "legacy per-sequence heap path: pushes into the caller's amortized scores buffer; the pool substrate is the serving default")
     pub fn key_scores_into(&self, q: &[f32], scores: &mut Vec<f32>) {
         let d = self.d;
         for i in 0..self.len() {

@@ -181,6 +181,7 @@ impl CompressedKv for EvictedKv {
             + self.tail.memory_bytes()
     }
 
+    // analyze: allow(hot_path_alloc, "legacy per-sequence heap path: pushes into the caller's amortized scores buffer; the pool substrate is the serving default")
     fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
         scores.clear();
         let d = self.d;

@@ -69,6 +69,7 @@ pub(crate) fn quantize_group(xs: &[f32], bits: u8) -> (Group, Vec<u8>) {
     let codes = xs
         .iter()
         .map(|&x| (((x - zero) / scale).round().clamp(0.0, levels as f32)) as u8)
+        // analyze: allow(hot_path_alloc, "group quantization runs at append/encode time, once per stored token, not in the per-step scoring loop")
         .collect();
     (Group { zero, scale }, codes)
 }

@@ -163,6 +163,7 @@ impl CompressedKv for PolarKv {
         kv_bytes + self.codebook_bytes + self.tail.memory_bytes()
     }
 
+    // analyze: allow(hot_path_alloc, "legacy per-sequence heap path: per-step prepared query and scratch; the pool substrate's codec scratch is the serving default")
     fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
         scores.clear();
         // Fused path (§Perf): prepare the query once (rotation + level-1
@@ -176,6 +177,7 @@ impl CompressedKv for PolarKv {
         self.tail.key_scores_into(q, scores);
     }
 
+    // analyze: allow(hot_path_alloc, "legacy per-sequence heap path: per-step accumulator buffers; the pool substrate's codec scratch is the serving default")
     fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
         let d = self.d;
         let np = self.values.len();

@@ -159,6 +159,7 @@ impl CompressedKv for QjlKv {
         // not charged per block (same convention as the QJL paper).
     }
 
+    // analyze: allow(hot_path_alloc, "legacy per-sequence heap path: per-step query sketch words; the pool substrate is the serving default")
     fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
         scores.clear();
         // Sketch the query once, then per-key hamming distance.

@@ -6,7 +6,7 @@
 
 use crate::model::config::ModelConfig;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::anyhow::{anyhow, bail, Context, Result};
 
 /// One argument of a graph.
 #[derive(Clone, Debug, PartialEq)]

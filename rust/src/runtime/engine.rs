@@ -6,7 +6,7 @@
 //! with f32/i32 payloads per the manifest conventions.
 
 use crate::runtime::artifacts::Manifest;
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
@@ -82,7 +82,7 @@ impl PjrtEngine {
 /// Build an f32 literal of the given shape.
 pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {shape:?} vs {} elements", data.len());
+    crate::anyhow::ensure!(n == data.len(), "shape {shape:?} vs {} elements", data.len());
     let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
     xla::Literal::vec1(data)
         .reshape(&dims)
@@ -92,7 +92,7 @@ pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 /// Build an i32 literal of the given shape.
 pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {shape:?} vs {} elements", data.len());
+    crate::anyhow::ensure!(n == data.len(), "shape {shape:?} vs {} elements", data.len());
     let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
     xla::Literal::vec1(data)
         .reshape(&dims)

@@ -3,5 +3,12 @@
 //! PJRT C API via the `xla` crate. Python never runs at request time.
 
 pub mod artifacts;
+// The PJRT execution layer needs the external `xla` crate, which is not
+// available in the offline build. It is feature-gated behind `pjrt` (a
+// marker feature with no dependencies of its own) so the manifest loader
+// above — pure Rust, no xla types — stays in the default build while the
+// engine compiles only where a vendored xla crate is present.
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod model_runtime;

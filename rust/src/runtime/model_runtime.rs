@@ -12,7 +12,7 @@
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::runtime::engine::{lit_f32, lit_i32, lit_i32_scalar, to_f32_vec, PjrtEngine};
-use anyhow::{ensure, Result};
+use crate::anyhow::{ensure, Result};
 
 /// PJRT-backed model session.
 pub struct PjrtModel<'e> {

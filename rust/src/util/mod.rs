@@ -7,5 +7,6 @@ pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 pub mod timer;

@@ -1,0 +1,15 @@
+//! Lock helpers for the serving threads.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the data if a previous holder panicked.
+///
+/// The serving loops (`worker_loop`, `NativeWorker`, `Server`) must not
+/// die because some other thread panicked while holding a shared lock:
+/// every structure guarded this way (pool sets, the response channel)
+/// keeps its invariants per-operation, so the data inside a poisoned
+/// mutex is still usable — take it and keep serving instead of
+/// propagating the panic to a second thread.
+pub fn lock_recover<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}

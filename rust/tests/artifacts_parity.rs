@@ -4,6 +4,10 @@
 //! with a loud message if the artifacts are missing (CI runs them via
 //! `make test`, which builds artifacts first).
 
+// The PJRT engine is feature-gated (needs the external `xla` crate); the
+// whole suite compiles away on the default offline build.
+#![cfg(feature = "pjrt")]
+
 use polarquant::model::transformer::Transformer;
 use polarquant::model::weights::Weights;
 use polarquant::polar::quantizer::{PolarConfig, PolarQuantizer};

@@ -1,0 +1,24 @@
+//! Clean hot-path fixture: the seed only try-locks (drop-on-contention)
+//! and the helper works in place without allocating or panicking.
+
+use std::sync::Mutex;
+
+pub struct Ring {
+    pub slots: Mutex<Vec<u32>>,
+}
+
+pub fn hot_seed(r: &Ring, xs: &[u32]) -> u32 {
+    let total = helper(xs);
+    match r.slots.try_lock() {
+        Ok(guard) => total + guard.len() as u32,
+        Err(_) => total,
+    }
+}
+
+fn helper(xs: &[u32]) -> u32 {
+    let mut acc = 0;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}

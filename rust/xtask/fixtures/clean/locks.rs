@@ -1,0 +1,25 @@
+//! Clean lock fixture: ascending tier order, and a higher-tier guard
+//! explicitly dropped before a lower-tier acquisition.
+
+use std::sync::Mutex;
+
+pub struct State {
+    pub pools: Mutex<u32>,
+    pub tables: Mutex<u32>,
+}
+
+impl State {
+    pub fn right_order(&self) -> u32 {
+        let pools = self.pools.lock().unwrap();
+        let tables = self.tables.lock().unwrap();
+        *pools + *tables
+    }
+
+    pub fn sequential(&self) -> u32 {
+        let tables = self.tables.lock().unwrap();
+        let t = *tables;
+        drop(tables);
+        let pools = self.pools.lock().unwrap();
+        t + *pools
+    }
+}

@@ -1,0 +1,16 @@
+//! Clean panic-free fixture: degrade instead of panicking, and one
+//! deliberate panic behind a reasoned fn-level hatch.
+
+pub fn drain(values: &[u32]) -> u32 {
+    match values.first() {
+        Some(v) => *v,
+        None => 0,
+    }
+}
+
+// analyze: allow(panic_free_module, "fixture: startup-only failure is fatal by design")
+pub fn must(flag: bool) {
+    if !flag {
+        panic!("boom");
+    }
+}

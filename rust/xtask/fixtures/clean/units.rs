@@ -1,0 +1,10 @@
+//! Clean unit fixture: the cross-unit comparison goes through a
+//! conversion from the configured allowlist.
+
+pub fn page_budget(free_bytes: usize, want_pages: usize, page_size: usize) -> bool {
+    want_pages <= pages_for(free_bytes, page_size)
+}
+
+pub fn pages_for(n_bytes: usize, page_size: usize) -> usize {
+    n_bytes.div_ceil(page_size)
+}

@@ -1,0 +1,7 @@
+//! Hatch fixture: an `analyze: allow` without a reason string is itself a
+//! finding (and does not suppress anything).
+
+pub fn hatched() -> u32 {
+    // analyze: allow(unit_mix)
+    1
+}

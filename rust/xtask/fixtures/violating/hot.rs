@@ -1,0 +1,20 @@
+//! Hot-path fixture: the seed blocks on a lock and panics, and reaches a
+//! helper that allocates and panics.
+
+use std::sync::Mutex;
+
+pub struct Ring {
+    pub slots: Mutex<Vec<u32>>,
+}
+
+pub fn hot_seed(r: &Ring, xs: &[u32]) -> u32 {
+    let doubled = helper(xs);
+    let guard = r.slots.lock().unwrap();
+    doubled + guard.len() as u32
+}
+
+fn helper(xs: &[u32]) -> u32 {
+    let v = vec![0u32; xs.len()];
+    let total: u32 = xs.iter().sum();
+    total + v.len() as u32
+}

@@ -1,0 +1,19 @@
+//! Lock-order fixture: acquires the lower-tier `pools` lock while the
+//! higher-tier `tables` guard is still live, and declares one mutex that
+//! no `[[lock]]` owner pattern claims.
+
+use std::sync::Mutex;
+
+pub struct State {
+    pub pools: Mutex<u32>,
+    pub tables: Mutex<u32>,
+    pub stray: Mutex<u32>,
+}
+
+impl State {
+    pub fn wrong_order(&self) -> u32 {
+        let tables = self.tables.lock().unwrap();
+        let pools = self.pools.lock().unwrap();
+        *tables + *pools
+    }
+}

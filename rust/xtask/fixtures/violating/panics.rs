@@ -1,0 +1,13 @@
+//! Panic-free-module fixture: this file is listed in
+//! `panic_free_modules`, so any panicking construct is a finding.
+
+pub fn drain(values: &[u32]) -> u32 {
+    let first = values.first().unwrap();
+    *first
+}
+
+pub fn must(flag: bool) {
+    if !flag {
+        panic!("boom");
+    }
+}

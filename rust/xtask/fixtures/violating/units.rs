@@ -1,0 +1,6 @@
+//! Unit-hygiene fixture: compares a page count against a byte count with
+//! no conversion call in the expression.
+
+pub fn page_budget(free_bytes: usize, want_pages: usize) -> bool {
+    want_pages < free_bytes
+}

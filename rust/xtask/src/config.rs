@@ -1,0 +1,168 @@
+//! Parser for the subset of TOML that `analysis.toml` uses: `[section]`
+//! headers, `[[lock]]` array-of-tables, `key = value` with string, integer
+//! and (possibly multi-line) string-array values, `#` comments.
+
+use std::path::Path;
+
+/// One `[[lock]]` entry: a named tier in the canonical acquisition order.
+#[derive(Debug, Default, Clone)]
+pub struct Lock {
+    pub name: String,
+    pub tier: i64,
+    /// Receiver identifiers whose `.lock()` maps to this tier.
+    pub receivers: Vec<String>,
+    /// `"file.rs:substring"` patterns naming the owning declarations.
+    pub owners: Vec<String>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// Hot-path reachability roots (`name` or `Type::name`).
+    pub seeds: Vec<String>,
+    /// Identifiers that sanction mixed-unit arithmetic.
+    pub conversions: Vec<String>,
+    /// Files (relative to the source root) where no non-test fn may panic.
+    pub panic_free_modules: Vec<String>,
+    pub locks: Vec<Lock>,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Ok(Self::parse(&text))
+    }
+
+    pub fn parse(text: &str) -> Config {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        // (key, accumulated value) while an array literal spans lines.
+        let mut buf: Option<(String, String)> = None;
+        for raw in text.lines() {
+            if let Some((key, acc)) = buf.take() {
+                let more = strip_comment(raw).trim();
+                let acc = format!("{acc} {more}");
+                if balanced(&acc) {
+                    set_kv(&mut cfg, &section, &key, &acc);
+                } else {
+                    buf = Some((key, acc));
+                }
+                continue;
+            }
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix("[[") {
+                section = inner.trim_end_matches(']').to_string();
+                if section == "lock" {
+                    cfg.locks.push(Lock::default());
+                }
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                section = inner.trim_end_matches(']').to_string();
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                let (k, v) = (k.trim().to_string(), v.trim().to_string());
+                if !balanced(&v) {
+                    buf = Some((k, v));
+                    continue;
+                }
+                set_kv(&mut cfg, &section, &k, &v);
+            }
+        }
+        cfg
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    line.split('#').next().unwrap_or("")
+}
+
+fn balanced(v: &str) -> bool {
+    v.matches('[').count() == v.matches(']').count()
+}
+
+fn parse_arr(v: &str) -> Vec<String> {
+    let v = v.trim();
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .unwrap_or(v)
+        .trim();
+    if inner.is_empty() {
+        return Vec::new();
+    }
+    inner
+        .split(',')
+        .map(|x| x.trim().trim_matches('"').to_string())
+        .filter(|x| !x.is_empty())
+        .collect()
+}
+
+fn set_kv(cfg: &mut Config, section: &str, k: &str, v: &str) {
+    match (section, k) {
+        ("hot_path", "seeds") => cfg.seeds = parse_arr(v),
+        ("units", "conversions") => cfg.conversions = parse_arr(v),
+        ("resilience", "panic_free_modules") => cfg.panic_free_modules = parse_arr(v),
+        ("lock", _) => {
+            let Some(lk) = cfg.locks.last_mut() else { return };
+            match k {
+                "name" => lk.name = v.trim_matches('"').to_string(),
+                "tier" => lk.tier = v.trim().parse().unwrap_or(0),
+                "receivers" => lk.receivers = parse_arr(v),
+                "owners" => lk.owners = parse_arr(v),
+                _ => {}
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_arrays_and_lock_tables() {
+        let cfg = Config::parse(
+            r#"
+# comment
+[hot_path]
+seeds = ["a", "Ty::b"]  # trailing comment
+
+[units]
+conversions = [
+    "page_bytes",
+    "pages_for",
+]
+
+[resilience]
+panic_free_modules = ["coordinator/server.rs"]
+
+[[lock]]
+name = "pools"
+tier = 20
+receivers = ["pools"]
+owners = ["coordinator/pools.rs:pub pools"]
+
+[[lock]]
+name = "ring"
+tier = 60
+receivers = []
+owners = []
+"#,
+        );
+        assert_eq!(cfg.seeds, ["a", "Ty::b"]);
+        assert_eq!(cfg.conversions, ["page_bytes", "pages_for"]);
+        assert_eq!(cfg.panic_free_modules, ["coordinator/server.rs"]);
+        assert_eq!(cfg.locks.len(), 2);
+        assert_eq!(cfg.locks[0].name, "pools");
+        assert_eq!(cfg.locks[0].tier, 20);
+        assert_eq!(cfg.locks[0].receivers, ["pools"]);
+        assert_eq!(cfg.locks[1].tier, 60);
+        assert!(cfg.locks[1].receivers.is_empty());
+    }
+}

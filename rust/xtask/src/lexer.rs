@@ -1,0 +1,273 @@
+//! A deliberately small Rust lexer: enough token structure for the lints
+//! (identifiers, numbers, single-char punctuation, collapsed string/char
+//! literals, lifetimes) plus extraction of `// analyze: allow(..)` hatches.
+//! Comments and literal *contents* never become tokens, so the lints cannot
+//! false-positive on text inside them.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    fn new(kind: Kind, text: impl Into<String>, line: u32) -> Self {
+        Self { kind, text: text.into(), line }
+    }
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+}
+
+/// line → hatches on that line, as `(lint, reason)` pairs.
+pub type Allows = BTreeMap<u32, Vec<(String, String)>>;
+
+/// Parse `// analyze: allow(lint, "reason")`; reason may be unquoted and
+/// may itself contain parentheses (the trailing `)` closes the allow).
+fn parse_allow(comment: &str) -> Option<(String, String)> {
+    let rest = comment.strip_prefix("//")?.trim_start();
+    let rest = rest.strip_prefix("analyze:")?.trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.rfind(')')?;
+    if !rest[close + 1..].trim().is_empty() {
+        return None;
+    }
+    let inner = &rest[..close];
+    let (lint, reason) = match inner.split_once(',') {
+        Some((l, r)) => (l.trim(), r.trim()),
+        None => (inner.trim(), ""),
+    };
+    if lint.is_empty() || !lint.chars().all(|c| c.is_ascii_lowercase() || c == '_') {
+        return None;
+    }
+    Some((lint.to_string(), reason.trim_matches('"').trim().to_string()))
+}
+
+fn starts(s: &[char], i: usize, pat: &str) -> bool {
+    pat.chars().enumerate().all(|(k, c)| s.get(i + k) == Some(&c))
+}
+
+pub fn lex(src: &str) -> (Vec<Tok>, Allows) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut allows: Allows = BTreeMap::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if starts(&s, i, "//") {
+            let j = (i..n).find(|&k| s[k] == '\n').unwrap_or(n);
+            let comment: String = s[i..j].iter().collect();
+            if let Some((lint, reason)) = parse_allow(&comment) {
+                allows.entry(line).or_default().push((lint, reason));
+            }
+            i = j;
+            continue;
+        }
+        if starts(&s, i, "/*") {
+            let mut depth = 1usize;
+            let mut i2 = i + 2;
+            while i2 < n && depth > 0 {
+                if starts(&s, i2, "/*") {
+                    depth += 1;
+                    i2 += 2;
+                } else if starts(&s, i2, "*/") {
+                    depth -= 1;
+                    i2 += 2;
+                } else {
+                    if s[i2] == '\n' {
+                        line += 1;
+                    }
+                    i2 += 1;
+                }
+            }
+            i = i2;
+            continue;
+        }
+        let maybe_str = c == '"'
+            || (c == 'r' && i + 1 < n && (s[i + 1] == '"' || s[i + 1] == '#'))
+            || starts(&s, i, "b\"")
+            || (starts(&s, i, "br") && i + 2 < n && (s[i + 2] == '"' || s[i + 2] == '#'));
+        if maybe_str {
+            let mut j = i;
+            if s[j] == 'b' {
+                j += 1;
+            }
+            let mut handled = false;
+            if j < n && s[j] == 'r' {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < n && s[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && s[j] == '"' {
+                    // Raw string: scan for `"###...` closer.
+                    j += 1;
+                    let endpat: String =
+                        std::iter::once('"').chain(std::iter::repeat('#').take(hashes)).collect();
+                    let mut k = j;
+                    while k < n && !starts(&s, k, &endpat) {
+                        k += 1;
+                    }
+                    line += s[i..k.min(n)].iter().filter(|&&x| x == '\n').count() as u32;
+                    toks.push(Tok::new(Kind::Str, "\"\"", line));
+                    i = (k + endpat.chars().count()).min(n);
+                    handled = true;
+                }
+                // Not a raw string (`r#ident` raw identifier, or a lone
+                // `r`): fall through to the ident branch below.
+            }
+            if !handled && s[i] == '"' {
+                let mut k = i + 1;
+                while k < n {
+                    if s[k] == '\\' {
+                        k += 2;
+                        continue;
+                    }
+                    if s[k] == '"' {
+                        break;
+                    }
+                    if s[k] == '\n' {
+                        line += 1;
+                    }
+                    k += 1;
+                }
+                toks.push(Tok::new(Kind::Str, "\"\"", line));
+                i = (k + 1).min(n + 1);
+                continue;
+            }
+            if !handled && starts(&s, i, "b\"") {
+                let mut k = i + 2;
+                while k < n {
+                    if s[k] == '\\' {
+                        k += 2;
+                        continue;
+                    }
+                    if s[k] == '"' {
+                        break;
+                    }
+                    if s[k] == '\n' {
+                        line += 1;
+                    }
+                    k += 1;
+                }
+                toks.push(Tok::new(Kind::Str, "\"\"", line));
+                i = (k + 1).min(n + 1);
+                continue;
+            }
+            if handled {
+                continue;
+            }
+        }
+        if c == '\'' {
+            if i + 2 < n && (s[i + 2] == '\'' || s[i + 1] == '\\') {
+                // Char literal (covers '\n', 'x', and multi-escape forms).
+                let mut j = i + 2;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok::new(Kind::Char, "''", line));
+                i = j + 1;
+                continue;
+            }
+            // Lifetime: 'a, 'static, or the label form 'outer.
+            let mut j = i + 1;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                j += 1;
+            }
+            let text: String = s[i..j].iter().collect();
+            toks.push(Tok::new(Kind::Life, text, line));
+            i = j;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                j += 1;
+            }
+            let text: String = s[i..j].iter().collect();
+            toks.push(Tok::new(Kind::Ident, text, line));
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '.' || s[j] == '_') {
+                j += 1;
+            }
+            let text: String = s[i..j].iter().collect();
+            toks.push(Tok::new(Kind::Num, text, line));
+            i = j;
+            continue;
+        }
+        toks.push(Tok::new(Kind::Punct, c.to_string(), line));
+        i += 1;
+    }
+    (toks, allows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).0.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_produce_no_inner_tokens() {
+        let toks = texts(r##"let x = "a.unwrap()"; // panic!() in comment"##);
+        assert_eq!(toks, ["let", "x", "=", "\"\"", ";"]);
+        let toks = texts("let y = r#\"vec![0]\"#; /* .lock() */ y");
+        assert_eq!(toks, ["let", "y", "=", "\"\"", ";", "y"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a u8) { let c = 'x'; let nl = '\\n'; }").0;
+        let lifes: Vec<&str> =
+            toks.iter().filter(|t| t.kind == Kind::Life).map(|t| t.text.as_str()).collect();
+        assert_eq!(lifes, ["'a", "'a"]);
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Char).count(), 2);
+    }
+
+    #[test]
+    fn allow_hatches_are_captured_with_line_numbers() {
+        let (_, allows) = lex(
+            "fn f() {}\n// analyze: allow(hot_path_alloc, \"why (with parens)\")\nfn g() {}\n// analyze: allow(lock_order)\n",
+        );
+        assert_eq!(allows[&2], [("hot_path_alloc".into(), "why (with parens)".into())]);
+        assert_eq!(allows[&4], [("lock_order".into(), String::new())]);
+    }
+
+    #[test]
+    fn multiline_string_advances_line_numbers() {
+        let toks = lex("let a = \"x\ny\";\nlet b = 1;").0;
+        let b = toks.iter().find(|t| t.is("b")).unwrap();
+        assert_eq!(b.line, 3);
+    }
+}

@@ -1,0 +1,41 @@
+//! `cargo xtask analyze` — repo-local static analysis for `rust/src`.
+//!
+//! Three lint families, configured by the checked-in `analysis.toml`:
+//!
+//! - **lock-hierarchy**: locks must be acquired in ascending tier order
+//!   (`lock_order`), every owning `Mutex` must be registered with a tier
+//!   (`unregistered_mutex`), and no blocking `.lock()` may appear in code
+//!   reachable from the decode hot path (`hot_path_blocking_lock`);
+//! - **hot-path hygiene**: no panicking constructs (`hot_path_panic`) and
+//!   no heap allocation (`hot_path_alloc`) in functions reachable from the
+//!   configured seeds;
+//! - **unit hygiene**: no arithmetic mixing `_bytes`/`_pages`/`_tokens`
+//!   identifiers without a conversion call (`unit_mix`);
+//!
+//! plus `panic_free_module` (configured files must not panic anywhere) and
+//! `allow_missing_reason` (every escape hatch must say why).
+//!
+//! Findings can be suppressed with `// analyze: allow(<lint>, "reason")`
+//! on (or directly above) the offending line; placed directly above a `fn`,
+//! the hatch covers the whole fn and — for the hot-path lints — its entire
+//! call subtree. The reason string is mandatory and every hatch is
+//! enumerated in the report, so suppressions stay auditable.
+
+#![forbid(unsafe_code)]
+
+pub mod config;
+pub mod lexer;
+pub mod lints;
+pub mod model;
+
+pub use config::Config;
+pub use lints::{analyze, Finding, Report};
+pub use model::Tree;
+
+use std::path::Path;
+
+/// Load `src_root` and run every lint under `cfg`.
+pub fn run(src_root: &Path, cfg: &Config) -> Result<Report, String> {
+    let tree = Tree::load(src_root)?;
+    Ok(analyze(&tree, cfg))
+}

@@ -1,0 +1,488 @@
+//! The lint passes. Each produces [`Finding`]s; `analyze` runs them all
+//! and returns a [`Report`] with findings sorted by `(file, line, lint)`
+//! plus every `// analyze: allow` hatch found in the tree.
+
+use crate::config::Config;
+use crate::lexer::Kind;
+use crate::model::Tree;
+use std::collections::{HashMap, HashSet};
+
+pub const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+pub const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+pub const ALLOC_PATHS: &[(&str, &str)] = &[
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("String", "new"),
+    ("String", "from"),
+    ("Box", "new"),
+    ("VecDeque", "new"),
+    ("VecDeque", "with_capacity"),
+    ("HashMap", "new"),
+    ("BTreeMap", "new"),
+];
+pub const ALLOC_MACROS: &[&str] = &["vec", "format"];
+pub const ALLOC_METHODS: &[&str] =
+    &["to_vec", "to_string", "to_owned", "push", "push_back", "push_front", "collect", "clone"];
+/// Chain links a `.lock()` guard may pass through and still be the bound
+/// value of its `let` statement.
+const UNWRAPS: &[&str] = &["unwrap", "expect", "unwrap_or_else"];
+const UNIT_SUFFIXES: &[(&str, &str)] =
+    &[("_bytes", "bytes"), ("_pages", "pages"), ("_tokens", "tokens")];
+const UNIT_OPS: &[&str] = &["+", "-", "<", ">"];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub lint: String,
+    pub file: String,
+    pub line: u32,
+    /// Enclosing fn qual, or `-` for file-level checks.
+    pub ctx: String,
+    pub what: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Every hatch in the tree: `(file, line, lint, reason)`.
+    pub allows: Vec<(String, u32, String, String)>,
+}
+
+impl Report {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}: {}\n", f.file, f.line, f.lint, f.ctx, f.what));
+        }
+        out.push_str(&format!("\n{} finding(s).\n", self.findings.len()));
+        out.push_str(&format!("\nallow hatches in tree ({}):\n", self.allows.len()));
+        for (file, line, lint, reason) in &self.allows {
+            let reason = if reason.is_empty() { "<MISSING REASON>" } else { reason };
+            out.push_str(&format!("  {file}:{line}: allow({lint}) — {reason}\n"));
+        }
+        out
+    }
+}
+
+pub fn analyze(tree: &Tree, cfg: &Config) -> Report {
+    let mut findings = Vec::new();
+    scan_hot(tree, cfg, "hot_path_panic", &mut findings);
+    scan_hot(tree, cfg, "hot_path_alloc", &mut findings);
+    scan_hot(tree, cfg, "hot_path_blocking_lock", &mut findings);
+    scan_lock_order(tree, cfg, &mut findings);
+    scan_units(tree, cfg, &mut findings);
+    scan_panic_free(tree, cfg, &mut findings);
+    scan_unregistered_mutexes(tree, cfg, &mut findings);
+
+    let mut allows = Vec::new();
+    for (file, al) in &tree.allows {
+        for (&line, entries) in al {
+            for (lint, reason) in entries {
+                allows.push((file.clone(), line, lint.clone(), reason.clone()));
+                if reason.is_empty() {
+                    findings.push(Finding {
+                        lint: "allow_missing_reason".into(),
+                        file: file.clone(),
+                        line,
+                        ctx: "-".into(),
+                        what: format!("allow({lint}) without a reason string"),
+                    });
+                }
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.lint, &a.ctx, &a.what).cmp(&(&b.file, b.line, &b.lint, &b.ctx, &b.what))
+    });
+    Report { findings, allows }
+}
+
+/// Hot-path hygiene: walk the call graph from the seeds and flag panicking
+/// constructs, heap allocation, or blocking `.lock()` in reachable fns.
+fn scan_hot(tree: &Tree, cfg: &Config, lint: &str, findings: &mut Vec<Finding>) {
+    for idx in tree.reach_from_seeds(&cfg.seeds, lint) {
+        let fi = &tree.fns[idx];
+        let body = &fi.body;
+        let n = body.len();
+        for i in 0..n {
+            let t = &body[i];
+            if t.kind != Kind::Ident {
+                continue;
+            }
+            let nxt = if i + 1 < n { body[i + 1].text.as_str() } else { "" };
+            let prv = if i > 0 { body[i - 1].text.as_str() } else { "" };
+            let prv2 = if i > 1 { body[i - 2].text.as_str() } else { "" };
+            let name = t.text.as_str();
+            let what: Option<String> = match lint {
+                "hot_path_panic" => {
+                    if PANIC_METHODS.contains(&name) && prv == "." && nxt == "(" {
+                        Some(format!(".{name}()"))
+                    } else if PANIC_MACROS.contains(&name) && nxt == "!" {
+                        Some(format!("{name}!"))
+                    } else {
+                        None
+                    }
+                }
+                "hot_path_alloc" => {
+                    if ALLOC_MACROS.contains(&name) && nxt == "!" {
+                        Some(format!("{name}!"))
+                    } else if ALLOC_METHODS.contains(&name) && prv == "." && nxt == "(" {
+                        Some(format!(".{name}()"))
+                    } else if nxt == "(" && prv == ":" && prv2 == ":" {
+                        let ty = if i > 2 { body[i - 3].text.as_str() } else { "" };
+                        if ALLOC_PATHS.contains(&(ty, name)) {
+                            Some(format!("{ty}::{name}"))
+                        } else {
+                            None
+                        }
+                    } else {
+                        None
+                    }
+                }
+                "hot_path_blocking_lock" => {
+                    if name == "lock" && prv == "." && nxt == "(" {
+                        Some(".lock()".to_string())
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            };
+            if let Some(what) = what {
+                if !tree.line_allowed(&fi.file, t.line, lint) {
+                    findings.push(Finding {
+                        lint: lint.into(),
+                        file: fi.file.clone(),
+                        line: t.line,
+                        ctx: fi.qual.clone(),
+                        what,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// A live lock guard inside a fn body.
+struct Guard {
+    bind: String,
+    recv: String,
+    tier: i64,
+    lock_name: String,
+    depth: i64,
+    line: u32,
+}
+
+/// Lock-hierarchy lint: within each fn, track `let`-bound guards from
+/// tiered receivers and flag any `.lock()`/`.try_lock()` on a receiver of
+/// equal-or-lower tier while a guard is live. Guards die at the end of
+/// their block or at an explicit `drop(name)`.
+fn scan_lock_order(tree: &Tree, cfg: &Config, findings: &mut Vec<Finding>) {
+    let mut recv_tier: HashMap<&str, (i64, &str)> = HashMap::new();
+    for lk in &cfg.locks {
+        for r in &lk.receivers {
+            recv_tier.insert(r.as_str(), (lk.tier, lk.name.as_str()));
+        }
+    }
+    for fi in &tree.fns {
+        if fi.is_test {
+            continue;
+        }
+        let body = &fi.body;
+        let n = body.len();
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut depth: i64 = 0;
+        let mut i = 0usize;
+        while i < n {
+            let t = &body[i];
+            if t.is("{") {
+                depth += 1;
+            } else if t.is("}") {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+            } else if t.kind == Kind::Ident
+                && t.is("drop")
+                && i + 1 < n
+                && body[i + 1].is("(")
+                && i + 3 < n
+                && body[i + 2].kind == Kind::Ident
+                && body[i + 3].is(")")
+            {
+                let victim = body[i + 2].text.clone();
+                guards.retain(|g| g.bind != victim);
+            } else if t.kind == Kind::Ident
+                && (t.is("lock") || t.is("try_lock"))
+                && i > 0
+                && body[i - 1].is(".")
+                && i + 1 < n
+                && body[i + 1].is("(")
+            {
+                let recv =
+                    if i > 1 { body[i - 2].text.clone() } else { "?".to_string() };
+                let tier = recv_tier.get(recv.as_str()).copied();
+                if let Some((new_tier, lock_name)) = tier {
+                    for g in &guards {
+                        if new_tier <= g.tier
+                            && !tree.line_allowed(&fi.file, t.line, "lock_order")
+                            && !tree.fn_allowed(fi, "lock_order")
+                        {
+                            findings.push(Finding {
+                                lint: "lock_order".into(),
+                                file: fi.file.clone(),
+                                line: t.line,
+                                ctx: fi.qual.clone(),
+                                what: format!(
+                                    "{recv}.{}() [{lock_name}/{new_tier}] while holding {} [{}/{}] since line {}",
+                                    t.text, g.recv, g.lock_name, g.tier, g.line
+                                ),
+                            });
+                            break;
+                        }
+                    }
+                }
+                // Is this a let-bound guard that lives past the statement?
+                // Walk over the call parens, then any unwrap/expect/
+                // unwrap_or_else links; a `;` right after means the chain's
+                // value — the guard — is what got bound.
+                let mut j = i + 2;
+                let mut pd = 1i64;
+                while j < n && pd > 0 {
+                    if body[j].is("(") {
+                        pd += 1;
+                    } else if body[j].is(")") {
+                        pd -= 1;
+                    }
+                    j += 1;
+                }
+                loop {
+                    if j < n
+                        && body[j].is(".")
+                        && j + 1 < n
+                        && body[j + 1].kind == Kind::Ident
+                        && UNWRAPS.contains(&body[j + 1].text.as_str())
+                    {
+                        j += 2;
+                        if j < n && body[j].is("(") {
+                            let mut pd = 1i64;
+                            j += 1;
+                            while j < n && pd > 0 {
+                                if body[j].is("(") {
+                                    pd += 1;
+                                } else if body[j].is(")") {
+                                    pd -= 1;
+                                }
+                                j += 1;
+                            }
+                        }
+                        continue;
+                    }
+                    break;
+                }
+                if j < n && body[j].is(";") {
+                    let mut b = i;
+                    while b > 0 && !body[b].is(";") && !body[b].is("{") && !body[b].is("}") {
+                        b -= 1;
+                    }
+                    let has_let = (b..i).any(|x| body[x].is("let"));
+                    if has_let {
+                        if let Some((new_tier, lock_name)) = tier {
+                            // Binding name: first ident after `let` that
+                            // isn't `mut`.
+                            let mut bind = None;
+                            for x in b..i {
+                                if body[x].is("let") {
+                                    for y in x + 1..i {
+                                        if body[y].kind == Kind::Ident && !body[y].is("mut") {
+                                            bind = Some(body[y].text.clone());
+                                            break;
+                                        }
+                                    }
+                                    break;
+                                }
+                            }
+                            guards.push(Guard {
+                                bind: bind.unwrap_or_else(|| "?".to_string()),
+                                recv,
+                                tier: new_tier,
+                                lock_name: lock_name.to_string(),
+                                depth,
+                                line: t.line,
+                            });
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+fn unit_of(name: &str) -> Option<&'static str> {
+    UNIT_SUFFIXES.iter().find(|(suf, _)| name.ends_with(suf)).map(|&(_, u)| u)
+}
+
+/// Unit hygiene: within each expression fragment (split at `;,{}`, `,` and
+/// `&&`/`||`), arithmetic or comparison over identifiers carrying two or
+/// more distinct unit suffixes, with no conversion call in sight, is a
+/// likely unit error.
+fn scan_units(tree: &Tree, cfg: &Config, findings: &mut Vec<Finding>) {
+    let conv: HashSet<&str> = cfg.conversions.iter().map(|s| s.as_str()).collect();
+    for fi in &tree.fns {
+        if fi.is_test {
+            continue;
+        }
+        let body = &fi.body;
+        let n = body.len();
+        let mut frag: Vec<usize> = Vec::new();
+        let check = |frag: &[usize], findings: &mut Vec<Finding>| {
+            if frag.is_empty() {
+                return;
+            }
+            let mut units: HashSet<&str> = HashSet::new();
+            let mut has_conv = false;
+            let mut has_op = false;
+            let line = body[frag[0]].line;
+            for &x in frag {
+                let t = &body[x];
+                if t.kind == Kind::Ident {
+                    if let Some(u) = unit_of(&t.text) {
+                        units.insert(u);
+                    }
+                    if conv.contains(t.text.as_str()) {
+                        has_conv = true;
+                    }
+                } else if t.kind == Kind::Punct && UNIT_OPS.contains(&t.text.as_str()) {
+                    has_op = true;
+                }
+            }
+            if units.len() >= 2
+                && has_op
+                && !has_conv
+                && !tree.line_allowed(&fi.file, line, "unit_mix")
+                && !tree.fn_allowed(fi, "unit_mix")
+            {
+                let mut us: Vec<&str> = units.into_iter().collect();
+                us.sort();
+                let txt: Vec<&str> =
+                    frag.iter().take(20).map(|&x| body[x].text.as_str()).collect();
+                findings.push(Finding {
+                    lint: "unit_mix".into(),
+                    file: fi.file.clone(),
+                    line,
+                    ctx: fi.qual.clone(),
+                    what: format!("mixes {:?}: {}", us, txt.join(" ")),
+                });
+            }
+        };
+        let mut i = 0usize;
+        while i < n {
+            let t = &body[i];
+            let mut boundary =
+                t.is(";") || t.is("{") || t.is("}") || t.is(",");
+            if !boundary
+                && (t.is("&") || t.is("|"))
+                && i + 1 < n
+                && body[i + 1].text == t.text
+            {
+                boundary = true;
+                i += 1; // skip the pair
+            }
+            if boundary {
+                check(&frag, findings);
+                frag.clear();
+            } else {
+                frag.push(i);
+            }
+            i += 1;
+        }
+        check(&frag, findings);
+    }
+}
+
+/// Panic-free modules: in the configured files, no non-test fn may contain
+/// a panicking construct at all (reachability doesn't matter — these are
+/// the worker-loop files where a panic kills the serving thread).
+fn scan_panic_free(tree: &Tree, cfg: &Config, findings: &mut Vec<Finding>) {
+    for fi in &tree.fns {
+        if fi.is_test || !cfg.panic_free_modules.contains(&fi.file) {
+            continue;
+        }
+        if tree.fn_allowed(fi, "panic_free_module") {
+            continue;
+        }
+        let body = &fi.body;
+        let n = body.len();
+        for i in 0..n {
+            let t = &body[i];
+            if t.kind != Kind::Ident {
+                continue;
+            }
+            let nxt = if i + 1 < n { body[i + 1].text.as_str() } else { "" };
+            let prv = if i > 0 { body[i - 1].text.as_str() } else { "" };
+            let name = t.text.as_str();
+            let what = if PANIC_METHODS.contains(&name) && prv == "." && nxt == "(" {
+                Some(format!(".{name}()"))
+            } else if PANIC_MACROS.contains(&name) && nxt == "!" {
+                Some(format!("{name}!"))
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                if !tree.line_allowed(&fi.file, t.line, "panic_free_module") {
+                    findings.push(Finding {
+                        lint: "panic_free_module".into(),
+                        file: fi.file.clone(),
+                        line: t.line,
+                        ctx: fi.qual.clone(),
+                        what,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Every owning `Mutex<..>` declaration must be claimed by some `[[lock]]`
+/// owner pattern — otherwise it has no tier and the hierarchy is unsound.
+/// Borrowed `&Mutex<..>` mentions reference a mutex owned elsewhere.
+fn scan_unregistered_mutexes(tree: &Tree, cfg: &Config, findings: &mut Vec<Finding>) {
+    let mut owner_pats: HashMap<&str, Vec<&str>> = HashMap::new();
+    for lk in &cfg.locks {
+        for o in &lk.owners {
+            let (file, pat) = o.split_once(':').unwrap_or((o.as_str(), ""));
+            owner_pats.entry(file).or_default().push(pat);
+        }
+    }
+    for (rel, toks) in &tree.files {
+        let n = toks.len();
+        for i in 0..n {
+            let t = &toks[i];
+            if t.kind != Kind::Ident || !t.is("Mutex") {
+                continue;
+            }
+            if !(i + 1 < n && toks[i + 1].is("<")) {
+                continue;
+            }
+            let borrowed =
+                (i.saturating_sub(2)..i).any(|j| toks[j].is("&"));
+            if borrowed {
+                continue;
+            }
+            let lines = &tree.lines[rel];
+            let text = lines.get(t.line as usize - 1).map(|s| s.as_str()).unwrap_or("");
+            let covered = owner_pats
+                .get(rel.as_str())
+                .is_some_and(|pats| pats.iter().any(|p| text.contains(p)));
+            if covered {
+                continue;
+            }
+            findings.push(Finding {
+                lint: "unregistered_mutex".into(),
+                file: rel.clone(),
+                line: t.line,
+                ctx: "-".into(),
+                what: "Mutex declaration not covered by any [[lock]] owner in analysis.toml"
+                    .into(),
+            });
+        }
+    }
+}

@@ -1,0 +1,59 @@
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: cargo xtask analyze [--root <src_dir>] [--config <analysis.toml>]\n\
+         \n\
+         Runs the repo's static analysis (lock hierarchy, hot-path hygiene,\n\
+         unit hygiene) and exits non-zero if any finding is reported."
+    );
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(|s| s.as_str()) != Some("analyze") {
+        usage();
+    }
+    // Defaults are relative to this crate so the tool works from any cwd.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut root = manifest.join("../src");
+    let mut config = manifest.join("../../analysis.toml");
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => usage(),
+            },
+            "--config" => match it.next() {
+                Some(v) => config = PathBuf::from(v),
+                None => usage(),
+            },
+            _ => usage(),
+        }
+    }
+    let cfg = match xtask::Config::load(&config) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("xtask: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match xtask::run(&root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", report.render());
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

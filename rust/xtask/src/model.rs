@@ -1,0 +1,464 @@
+//! Function extraction and the name-resolution call graph.
+//!
+//! Extraction is brace-depth based: it tracks `impl` blocks (for `self.`
+//! receiver resolution), skips `#[cfg(test)] mod` subtrees and `#[test]`
+//! functions, and records each fn's body as a token slice. Resolution is
+//! deliberately conservative-by-name: a plain `name(..)` or `.name(..)`
+//! call resolves to *every* non-test fn with that name, except for a
+//! no-resolve list of ubiquitous std names; `self.name(..)` resolves only
+//! within the enclosing impl type; `Ty::name(..)` resolves only to that
+//! qualified name.
+
+use crate::lexer::{lex, Allows, Kind, Tok};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::Path;
+
+pub const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "break", "continue", "let", "mut",
+    "fn", "pub", "impl", "trait", "struct", "enum", "mod", "use", "crate", "self", "Self",
+    "super", "in", "as", "ref", "move", "where", "const", "static", "type", "dyn", "unsafe",
+    "extern", "true", "false",
+];
+
+/// Calls that never resolve through the by-name table: std/core methods so
+/// common that global by-name fanout would connect unrelated code, plus the
+/// conventional closure-parameter names (`f`, `g`, `op`, ...) whose calls
+/// are indirect anyway, plus `drop` (modeled by the lock lint itself).
+pub const NO_RESOLVE: &[&str] = &[
+    "new", "default", "push", "insert", "get", "get_mut", "len", "iter", "iter_mut", "clone",
+    "lock", "try_lock", "unwrap", "expect", "clear", "resize", "extend", "extend_from_slice",
+    "remove", "contains", "contains_key", "map", "and_then", "unwrap_or", "unwrap_or_else",
+    "collect", "into_iter", "next", "last", "first", "split_at", "to_vec", "to_string", "min",
+    "max", "abs", "sum", "count", "take", "skip", "chunks", "windows", "zip", "enumerate", "rev",
+    "filter", "fold", "any", "all", "find", "position", "sort", "sort_by", "sort_by_key",
+    "drain", "append", "retain", "entry", "keys", "values", "values_mut", "is_empty", "as_ref",
+    "as_mut", "as_str", "as_slice", "fill", "copy_from_slice", "from", "into", "send", "recv",
+    "write", "read", "flush", "join", "spawn", "name", "pop", "pop_front", "push_back",
+    "push_front", "front", "back", "swap", "sample", "apply", "get_or_init", "cmp", "eq", "ne",
+    "fmt", "hash", "borrow", "borrow_mut", "to_owned", "saturating_sub", "saturating_add",
+    "wrapping_add", "checked_sub", "checked_add", "min_by_key", "max_by_key", "floor", "ceil",
+    "sqrt", "exp", "ln", "powi", "powf", "sin", "cos", "sin_cos", "trailing_zeros", "div_ceil",
+    "load", "store", "fetch_add", "fetch_sub", "ok", "err", "is_some", "is_none", "is_ok",
+    "is_err", "starts_with", "ends_with", "trim", "split", "parse", "truncate", "elapsed",
+    "duration_since", "as_secs_f64", "as_micros", "get_key_value", "cloned", "copied",
+    "unwrap_or_default", "id", "path", "exists", "flat_map", "rem_euclid", "to_le_bytes",
+    "from_le_bytes", "try_into", "leading_zeros", "rotate_left", "rotate_right", "f", "g", "h",
+    "op", "cb", "drop",
+];
+
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    pub name: String,
+    /// Enclosing impl type, if any.
+    pub ty: Option<String>,
+    /// `Type::name` or bare `name`.
+    pub qual: String,
+    /// Path relative to the analyzed root, `/`-separated.
+    pub file: String,
+    pub start_line: u32,
+    pub end_line: u32,
+    /// Body tokens, outer braces excluded.
+    pub body: Vec<Tok>,
+    pub is_test: bool,
+}
+
+pub fn extract_functions(toks: &[Tok], relpath: &str) -> Vec<FnInfo> {
+    let mut fns = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    // (type name, body depth) for each open impl block.
+    let mut impl_stack: Vec<(String, i64)> = Vec::new();
+    let mut skip_test_depth: Option<i64> = None;
+    let mut depth: i64 = 0;
+    let mut pending_attr_test = false;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == Kind::Punct && t.is("{") {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t.kind == Kind::Punct && t.is("}") {
+            depth -= 1;
+            if impl_stack.last().is_some_and(|&(_, d)| depth < d) {
+                impl_stack.pop();
+            }
+            if skip_test_depth.is_some_and(|d| depth < d) {
+                skip_test_depth = None;
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind == Kind::Punct && t.is("#") {
+            let j = i + 1;
+            if j < n && toks[j].is("[") {
+                let mut d2 = 1usize;
+                let mut j2 = j + 1;
+                let mut has_test = false;
+                while j2 < n && d2 > 0 {
+                    if toks[j2].is("[") {
+                        d2 += 1;
+                    } else if toks[j2].is("]") {
+                        d2 -= 1;
+                    } else if toks[j2].is("test") {
+                        has_test = true;
+                    }
+                    j2 += 1;
+                }
+                if has_test {
+                    pending_attr_test = true;
+                }
+                i = j2;
+                continue;
+            }
+        }
+        if t.kind == Kind::Ident && t.is("mod") && pending_attr_test {
+            let mut j = i;
+            while j < n && !toks[j].is("{") && !toks[j].is(";") {
+                j += 1;
+            }
+            if j < n && toks[j].is("{") {
+                if skip_test_depth.is_none() {
+                    skip_test_depth = Some(depth + 1);
+                }
+                depth += 1;
+                i = j + 1;
+                pending_attr_test = false;
+                continue;
+            }
+            pending_attr_test = false;
+            i = j + 1;
+            continue;
+        }
+        if t.kind == Kind::Ident && t.is("impl") {
+            let mut j = i + 1;
+            let mut idents: Vec<String> = Vec::new();
+            let mut gdepth = 0i64;
+            while j < n && !(toks[j].is("{") && gdepth == 0) && !toks[j].is(";") {
+                let tt = &toks[j];
+                if tt.is("<") {
+                    gdepth += 1;
+                } else if tt.is(">") {
+                    gdepth = (gdepth - 1).max(0);
+                } else if tt.kind == Kind::Ident && gdepth == 0 {
+                    if tt.is("for") {
+                        // `impl Trait for Type`: the type is what names
+                        // methods, so restart collection after `for`.
+                        idents.clear();
+                    } else if !tt.is("where") && !tt.is("Send") && !tt.is("Sync") {
+                        idents.push(tt.text.clone());
+                    }
+                }
+                j += 1;
+            }
+            let tyname = idents.last().cloned().unwrap_or_else(|| "?".to_string());
+            if j < n && toks[j].is("{") {
+                impl_stack.push((tyname, depth + 1));
+                depth += 1;
+                i = j + 1;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        if t.kind == Kind::Ident && t.is("fn") {
+            let is_test = pending_attr_test || skip_test_depth.is_some();
+            pending_attr_test = false;
+            let j = i + 1;
+            if j < n && toks[j].kind == Kind::Ident {
+                let name = toks[j].text.clone();
+                let start_line = toks[j].line;
+                // Scan the signature (generics/args/return type) for the
+                // body `{` or a `;` (trait method declaration).
+                let mut pd = 0i64;
+                let mut k2 = j + 1;
+                while k2 < n {
+                    let tt = &toks[k2];
+                    if tt.is("(") || tt.is("[") || tt.is("<") {
+                        pd += 1;
+                    } else if tt.is(")") || tt.is("]") || tt.is(">") {
+                        pd = (pd - 1).max(0);
+                    } else if tt.is("{") && pd == 0 {
+                        break;
+                    } else if tt.is(";") && pd == 0 {
+                        break;
+                    }
+                    k2 += 1;
+                }
+                if k2 < n && toks[k2].is("{") {
+                    let mut d2 = 1i64;
+                    let mut j2 = k2 + 1;
+                    while j2 < n && d2 > 0 {
+                        if toks[j2].is("{") {
+                            d2 += 1;
+                        } else if toks[j2].is("}") {
+                            d2 -= 1;
+                        }
+                        j2 += 1;
+                    }
+                    let ty = impl_stack.last().map(|(t, _)| t.clone());
+                    let qual = match &ty {
+                        Some(t) => format!("{t}::{name}"),
+                        None => name.clone(),
+                    };
+                    fns.push(FnInfo {
+                        name,
+                        ty,
+                        qual,
+                        file: relpath.to_string(),
+                        start_line,
+                        end_line: toks[j2 - 1].line,
+                        body: toks[k2 + 1..j2 - 1].to_vec(),
+                        is_test,
+                    });
+                    i = j2;
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind == Kind::Ident
+            && ["use", "struct", "enum", "static", "type", "trait"].contains(&t.text.as_str())
+        {
+            pending_attr_test = false;
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// The lexed source tree plus fn index tables.
+pub struct Tree {
+    /// rel path → all tokens (test code included — the unregistered-mutex
+    /// scan covers tests too).
+    pub files: BTreeMap<String, Vec<Tok>>,
+    /// rel path → raw source lines (for owner-pattern matching).
+    pub lines: BTreeMap<String, Vec<String>>,
+    pub allows: BTreeMap<String, Allows>,
+    pub fns: Vec<FnInfo>,
+    by_name: HashMap<String, Vec<usize>>,
+    by_qual: HashMap<String, Vec<usize>>,
+    no_resolve: HashSet<&'static str>,
+    keywords: HashSet<&'static str>,
+}
+
+impl Tree {
+    pub fn load(src_root: &Path) -> Result<Tree, String> {
+        let mut rels = Vec::new();
+        collect_rs_files(src_root, Path::new(""), &mut rels)?;
+        rels.sort();
+        let mut files = BTreeMap::new();
+        let mut lines = BTreeMap::new();
+        let mut allows = BTreeMap::new();
+        let mut fns = Vec::new();
+        for rel in rels {
+            let path = src_root.join(&rel);
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| format!("read {}: {e}", path.display()))?;
+            let (toks, al) = lex(&src);
+            fns.extend(extract_functions(&toks, &rel));
+            files.insert(rel.clone(), toks);
+            lines.insert(rel.clone(), src.split('\n').map(|s| s.to_string()).collect());
+            allows.insert(rel, al);
+        }
+        let mut by_name: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut by_qual: HashMap<String, Vec<usize>> = HashMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            if f.is_test {
+                continue;
+            }
+            by_name.entry(f.name.clone()).or_default().push(i);
+            by_qual.entry(f.qual.clone()).or_default().push(i);
+        }
+        Ok(Tree {
+            files,
+            lines,
+            allows,
+            fns,
+            by_name,
+            by_qual,
+            no_resolve: NO_RESOLVE.iter().copied().collect(),
+            keywords: KEYWORDS.iter().copied().collect(),
+        })
+    }
+
+    /// A finding on `line` is suppressed by a reasoned hatch on the same
+    /// line or the line above.
+    pub fn line_allowed(&self, file: &str, line: u32, lint: &str) -> bool {
+        let Some(al) = self.allows.get(file) else { return false };
+        for ln in [line, line.saturating_sub(1)] {
+            if let Some(v) = al.get(&ln) {
+                if v.iter().any(|(l, r)| l == lint && !r.is_empty()) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// A fn-level hatch sits on the `fn` line or up to two lines above it
+    /// (allowing one doc/attribute line between hatch and signature).
+    pub fn fn_allowed(&self, fi: &FnInfo, lint: &str) -> bool {
+        let Some(al) = self.allows.get(&fi.file) else { return false };
+        for ln in [fi.start_line, fi.start_line.saturating_sub(1), fi.start_line.saturating_sub(2)]
+        {
+            if let Some(v) = al.get(&ln) {
+                if v.iter().any(|(l, r)| l == lint && !r.is_empty()) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Indices of all resolved callees of `fns[idx]`.
+    pub fn callees(&self, idx: usize) -> Vec<usize> {
+        let fi = &self.fns[idx];
+        let body = &fi.body;
+        let n = body.len();
+        let mut out = Vec::new();
+        for i in 0..n {
+            let t = &body[i];
+            if t.kind != Kind::Ident || self.keywords.contains(t.text.as_str()) {
+                continue;
+            }
+            if !(i + 1 < n && body[i + 1].is("(")) {
+                continue;
+            }
+            let prv = if i > 0 { body[i - 1].text.as_str() } else { "" };
+            let prv2 = if i > 1 { body[i - 2].text.as_str() } else { "" };
+            if prv == ":" && prv2 == ":" {
+                let ty = if i > 2 { body[i - 3].text.as_str() } else { "" };
+                if let Some(v) = self.by_qual.get(&format!("{ty}::{}", t.text)) {
+                    out.extend(v.iter().copied());
+                }
+                continue;
+            }
+            if prv == "." && prv2 == "self" {
+                // Resolve only within the enclosing impl type; an
+                // unresolvable self-call is skipped rather than fanned out.
+                if let Some(ty) = &fi.ty {
+                    if let Some(v) = self.by_qual.get(&format!("{ty}::{}", t.text)) {
+                        out.extend(v.iter().copied());
+                    }
+                }
+                continue;
+            }
+            if self.no_resolve.contains(t.text.as_str()) {
+                continue;
+            }
+            if let Some(v) = self.by_name.get(&t.text) {
+                out.extend(v.iter().copied());
+            }
+        }
+        out
+    }
+
+    /// BFS from the configured seeds. A fn carrying a fn-level hatch for
+    /// `barrier_lint` is neither scanned nor descended into: the hatch
+    /// asserts its whole subtree is off the hot path for that lint.
+    pub fn reach_from_seeds(&self, seeds: &[String], barrier_lint: &str) -> Vec<usize> {
+        let mut seen: HashSet<usize> = HashSet::new();
+        let mut stack: Vec<usize> = Vec::new();
+        for s in seeds {
+            let cands = if s.contains("::") { self.by_qual.get(s) } else { self.by_name.get(s) };
+            for &i in cands.into_iter().flatten() {
+                if self.fn_allowed(&self.fns[i], barrier_lint) {
+                    continue;
+                }
+                if seen.insert(i) {
+                    stack.push(i);
+                }
+            }
+        }
+        while let Some(i) = stack.pop() {
+            for g in self.callees(i) {
+                if self.fn_allowed(&self.fns[g], barrier_lint) {
+                    continue;
+                }
+                if seen.insert(g) {
+                    stack.push(g);
+                }
+            }
+        }
+        let mut v: Vec<usize> = seen.into_iter().collect();
+        v.sort_by(|&a, &b| {
+            let (fa, fb) = (&self.fns[a], &self.fns[b]);
+            (&fa.file, &fa.qual, fa.start_line).cmp(&(&fb.file, &fb.qual, fb.start_line))
+        });
+        v
+    }
+}
+
+fn collect_rs_files(root: &Path, rel: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let dir = root.join(rel);
+    let entries =
+        std::fs::read_dir(&dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut names: Vec<_> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| (e.file_name(), e.path()))
+        .collect();
+    names.sort();
+    for (name, path) in names {
+        let sub = rel.join(&name);
+        if path.is_dir() {
+            collect_rs_files(root, &sub, out)?;
+        } else if name.to_string_lossy().ends_with(".rs") {
+            // `/`-separated keys so findings and config patterns agree
+            // across platforms.
+            let key = sub
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(key);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn fns_of(src: &str) -> Vec<FnInfo> {
+        extract_functions(&lex(src).0, "t.rs")
+    }
+
+    #[test]
+    fn extracts_impl_methods_with_qual_names() {
+        let fns = fns_of("struct A; impl A { fn m(&self) { self.n(); } fn n(&self) {} } fn free() {}");
+        let quals: Vec<&str> = fns.iter().map(|f| f.qual.as_str()).collect();
+        assert_eq!(quals, ["A::m", "A::n", "free"]);
+        assert_eq!(fns[0].ty.as_deref(), Some("A"));
+        assert_eq!(fns[2].ty, None);
+    }
+
+    #[test]
+    fn trait_impls_resolve_to_the_type() {
+        let fns = fns_of("impl Display for Thing { fn fmt(&self) {} }");
+        assert_eq!(fns[0].qual, "Thing::fmt");
+    }
+
+    #[test]
+    fn test_code_is_marked() {
+        let fns = fns_of(
+            "fn live() {}\n#[cfg(test)]\nmod tests { fn helper() {} #[test] fn t() {} }\n#[test]\nfn top_t() {}",
+        );
+        let tests: Vec<(&str, bool)> =
+            fns.iter().map(|f| (f.name.as_str(), f.is_test)).collect();
+        assert_eq!(
+            tests,
+            [("live", false), ("helper", true), ("t", true), ("top_t", true)]
+        );
+    }
+
+    #[test]
+    fn generic_signatures_find_their_body() {
+        let fns = fns_of("fn f<T: Into<Vec<u8>>>(x: T) -> Vec<u8> { x.into() }");
+        assert_eq!(fns.len(), 1);
+        assert!(!fns[0].body.is_empty());
+    }
+}

@@ -1,0 +1,75 @@
+//! Analyzer self-tests: the violating fixture tree must produce exactly
+//! the pinned findings (lint, file, line), the clean tree none.
+
+use std::path::PathBuf;
+use xtask::{run, Config};
+
+fn fixture(dir: &str) -> (PathBuf, Config) {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+    let cfg = Config::load(&base.join("analysis.toml")).expect("fixture config");
+    (base.join(dir), cfg)
+}
+
+#[test]
+fn violating_tree_produces_exactly_the_seeded_findings() {
+    let (root, cfg) = fixture("violating");
+    let report = run(&root, &cfg).expect("analyze violating fixtures");
+    let got: Vec<(String, String, u32)> = report
+        .findings
+        .iter()
+        .map(|f| (f.lint.clone(), f.file.clone(), f.line))
+        .collect();
+    let want: Vec<(String, String, u32)> = [
+        ("allow_missing_reason", "allows.rs", 5),
+        ("hot_path_blocking_lock", "hot.rs", 12),
+        ("hot_path_panic", "hot.rs", 12),
+        ("hot_path_alloc", "hot.rs", 17),
+        ("unregistered_mutex", "locks.rs", 10),
+        ("lock_order", "locks.rs", 16),
+        ("panic_free_module", "panics.rs", 5),
+        ("panic_free_module", "panics.rs", 11),
+        ("unit_mix", "units.rs", 5),
+    ]
+    .iter()
+    .map(|&(l, f, n)| (l.to_string(), f.to_string(), n))
+    .collect();
+    assert_eq!(got, want, "full report:\n{}", report.render());
+}
+
+#[test]
+fn violating_lock_order_names_both_tiers() {
+    let (root, cfg) = fixture("violating");
+    let report = run(&root, &cfg).unwrap();
+    let lo = report.findings.iter().find(|f| f.lint == "lock_order").expect("lock_order finding");
+    assert_eq!(lo.ctx, "State::wrong_order");
+    assert!(lo.what.contains("[pools/10]"), "{}", lo.what);
+    assert!(lo.what.contains("[tables/20]"), "{}", lo.what);
+    assert!(lo.what.contains("since line 15"), "{}", lo.what);
+}
+
+#[test]
+fn clean_tree_produces_no_findings_and_enumerates_hatches() {
+    let (root, cfg) = fixture("clean");
+    let report = run(&root, &cfg).expect("analyze clean fixtures");
+    assert!(report.findings.is_empty(), "unexpected findings:\n{}", report.render());
+    let hatches: Vec<(&str, u32, &str)> = report
+        .allows
+        .iter()
+        .map(|(f, n, l, _)| (f.as_str(), *n, l.as_str()))
+        .collect();
+    assert_eq!(
+        hatches,
+        [("allows.rs", 5, "unit_mix"), ("panics.rs", 11, "panic_free_module")]
+    );
+    assert!(report.allows.iter().all(|(_, _, _, reason)| !reason.is_empty()));
+}
+
+#[test]
+fn every_violating_finding_is_reported_in_file_line_format() {
+    let (root, cfg) = fixture("violating");
+    let report = run(&root, &cfg).unwrap();
+    let rendered = report.render();
+    assert!(rendered.contains("locks.rs:16: [lock_order]"), "{rendered}");
+    assert!(rendered.contains("units.rs:5: [unit_mix]"), "{rendered}");
+    assert!(rendered.contains("9 finding(s)."), "{rendered}");
+}
