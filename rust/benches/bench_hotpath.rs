@@ -10,7 +10,7 @@ use polarquant::coordinator::request::GenRequest;
 use polarquant::coordinator::server::{Server, ServerConfig};
 use polarquant::math::rotation::PreconditionKind;
 use polarquant::model::config::ModelConfig;
-use polarquant::polar::quantizer::{PolarConfig, PolarQuantizer};
+use polarquant::polar::quantizer::{BlockScratch, PolarConfig, PolarQuantizer};
 use polarquant::quant::compressor::KvBlock;
 use polarquant::quant::registry::{build_method, MethodContext};
 use polarquant::util::rng::{Pcg64, Rng};
@@ -92,6 +92,63 @@ fn main() {
         });
         print_result(&r);
     }
+
+    // Vectorized page-kernel gate (CI `kernel-perf` job): one block call
+    // over a 1024-slot run vs the per-slot scalar kernels on the same
+    // slots — the batch unpack + fused (radius × angle-LUT) contraction
+    // must win strictly, or the vectorization earns nothing. Best-of-3
+    // means per side so a one-off scheduler hiccup can't fail the gate.
+    let sb = pq.vec_slot_bytes();
+    let mut slots = vec![0u8; n * sb];
+    for (row, slot) in rows.chunks_exact(d).zip(slots.chunks_exact_mut(sb)) {
+        pq.encode_into(row, slot);
+    }
+    let (mut table, mut rot) = (Vec::new(), Vec::new());
+    let k1 = pq.prepare_query_into(&q, &mut table, &mut rot);
+    let weights: Vec<f32> = (0..n).map(|i| 1.0 / (1.0 + i as f32)).collect();
+    let mut scores = vec![0.0f32; n];
+    let mut acc = vec![0.0f32; d];
+    let mut tmp = Vec::new();
+    let mut block = BlockScratch::default();
+    let (mut best_scalar, mut best_block) = (f64::INFINITY, f64::INFINITY);
+    for round in 0..3 {
+        let r = bench("polar score+accum scalar (1024 slots)", target, || {
+            for (s, slot) in scores.iter_mut().zip(slots.chunks_exact(sb)) {
+                *s = pq.score_slot(&table, k1, slot, &mut tmp);
+            }
+            acc.fill(0.0);
+            for (&w, slot) in weights.iter().zip(slots.chunks_exact(sb)) {
+                pq.accumulate_slot(slot, w, &mut acc);
+            }
+            std::hint::black_box((&scores, &acc));
+        });
+        if round == 0 {
+            print_result(&r);
+        }
+        best_scalar = best_scalar.min(r.mean_s);
+        let r = bench("polar score+accum block  (1024 slots)", target, || {
+            let m = pq.score_block(&table, k1, &slots, sb, 0, n, &mut block, &mut scores);
+            std::hint::black_box(m);
+            acc.fill(0.0);
+            pq.accumulate_block(&slots, sb, 0, n, &weights, &mut block, &mut acc);
+            std::hint::black_box((&scores, &acc));
+        });
+        if round == 0 {
+            print_result(&r);
+        }
+        best_block = best_block.min(r.mean_s);
+    }
+    println!(
+        "  → scalar {:.2} Mtok/s vs block {:.2} Mtok/s (speedup {:.2}×)",
+        n as f64 / best_scalar / 1e6,
+        n as f64 / best_block / 1e6,
+        best_scalar / best_block
+    );
+    assert!(
+        best_block < best_scalar,
+        "vectorized page kernels must beat the per-slot scalar path \
+         (scalar {best_scalar:.6}s vs block {best_block:.6}s per pass)"
+    );
 
     // Tracing overhead gate (CI `trace-overhead` job): a decode-heavy
     // serving run with request tracing on must keep at least 97% of the

@@ -37,7 +37,7 @@
 use crate::kvcache::paged::{PageId, PagedPool};
 use crate::model::attention::AttentionSource;
 use crate::model::config::ModelConfig;
-use crate::polar::quantizer::{PolarConfig, PolarQuantizer};
+use crate::polar::quantizer::{BlockScratch, PolarConfig, PolarQuantizer};
 use crate::quant::fp16::{f16_bits_to_f32, f32_to_f16_bits};
 use crate::quant::kivi::{dequant_code, quantize_group};
 use std::cell::RefCell;
@@ -63,6 +63,10 @@ pub struct CodecScratch {
     /// Rotated-query scratch for [`PageCodec::prepare_query`] (polar:
     /// the randomized-rotation output), likewise reused across calls.
     pub rot: Vec<f32>,
+    /// Page-block kernel planes (polar: batched radii/codes/contraction
+    /// buffers for `score_block`/`accumulate_block`), reused across
+    /// (layer, head, page) so the block path allocates nothing steady-state.
+    pub block: BlockScratch,
 }
 
 /// A page-native KV codec: fixed-size self-contained token slots.
@@ -88,7 +92,10 @@ pub trait PageCodec: Send + Sync {
     /// Prepare a query once per (step, head); default: nothing to do.
     fn prepare_query(&self, _q: &[f32], _scratch: &mut CodecScratch) {}
 
-    /// Push `⟨K̂ᵢ, q⟩` for each of `count` token slots onto `scores`.
+    /// Push `⟨K̂ᵢ, q⟩` for each of `count` token slots onto `scores`,
+    /// returning the run's maximum raw score (`NEG_INFINITY` for an
+    /// empty run) — the fused softmax-max pass, so attention never
+    /// rescans the scores it just produced.
     fn key_scores_page(
         &self,
         slots: &[u8],
@@ -98,10 +105,12 @@ pub trait PageCodec: Send + Sync {
         q: &[f32],
         scratch: &mut CodecScratch,
         scores: &mut Vec<f32>,
-    );
+    ) -> f32;
 
     /// `acc += Σᵢ weights[i]·V̂ᵢ` over `count` token slots, in the
-    /// codec's working basis (polar: the preconditioned basis).
+    /// codec's working basis (polar: the preconditioned basis). `block`
+    /// is reusable page-kernel scratch; codecs without a block path
+    /// ignore it.
     fn value_accumulate_page(
         &self,
         slots: &[u8],
@@ -109,6 +118,7 @@ pub trait PageCodec: Send + Sync {
         offset: usize,
         count: usize,
         weights: &[f32],
+        block: &mut BlockScratch,
         acc: &mut [f32],
     );
 
@@ -200,8 +210,12 @@ fn polar_cfg_for(d: usize, base: PolarConfig) -> Option<PolarConfig> {
     let mut cfg = base;
     cfg.levels = levels;
     cfg.level_bits.truncate(levels);
-    if cfg.num_radii() > 64 {
-        return None; // beyond the slot kernels' stack bounds (d > 256-ish)
+    if !cfg.fits_fused_kernels() {
+        // The true capacity of the fused stack kernels (score/accumulate
+        // scratch arrays), not just the radii bound: the old
+        // `num_radii() > 64` gate admitted d up to 1024 while
+        // `accumulate_with` indexes out of bounds past d = 256.
+        return None;
     }
     Some(cfg)
 }
@@ -270,16 +284,21 @@ impl PageCodec for ExactF32Codec {
         q: &[f32],
         _scratch: &mut CodecScratch,
         scores: &mut Vec<f32>,
-    ) {
+    ) -> f32 {
+        let mut run_max = f32::NEG_INFINITY;
         for i in 0..count {
             let pair = &slots[i * stride + offset..];
             let mut s = 0.0f32;
             for (j, &qj) in q.iter().enumerate() {
                 s += f32_from_le(pair, 4 * j) * qj;
             }
+            if s > run_max {
+                run_max = s;
+            }
             // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
             scores.push(s);
         }
+        run_max
     }
 
     fn value_accumulate_page(
@@ -289,6 +308,7 @@ impl PageCodec for ExactF32Codec {
         offset: usize,
         count: usize,
         weights: &[f32],
+        _block: &mut BlockScratch,
         acc: &mut [f32],
     ) {
         let d = acc.len();
@@ -354,16 +374,21 @@ impl PageCodec for Fp16PageCodec {
         q: &[f32],
         _scratch: &mut CodecScratch,
         scores: &mut Vec<f32>,
-    ) {
+    ) -> f32 {
+        let mut run_max = f32::NEG_INFINITY;
         for i in 0..count {
             let pair = &slots[i * stride + offset..];
             let mut s = 0.0f32;
             for (j, &qj) in q.iter().enumerate() {
                 s += f16_from_le(pair, 2 * j) * qj;
             }
+            if s > run_max {
+                run_max = s;
+            }
             // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
             scores.push(s);
         }
+        run_max
     }
 
     fn value_accumulate_page(
@@ -373,6 +398,7 @@ impl PageCodec for Fp16PageCodec {
         offset: usize,
         count: usize,
         weights: &[f32],
+        _block: &mut BlockScratch,
         acc: &mut [f32],
     ) {
         let d = acc.len();
@@ -410,6 +436,16 @@ pub struct PolarPageCodec {
 
 impl PolarPageCodec {
     pub fn new(cfg: PolarConfig, name: &'static str) -> Self {
+        // Hard capacity gate, mirrored by `polar_cfg_for`: the fused
+        // slot/block kernels use fixed stack scratch sized for
+        // MAX_KERNEL_DIM and silently corrupt (release) or panic
+        // (debug) past it, so an over-wide config must never build.
+        assert!(
+            cfg.fits_fused_kernels(),
+            "polar page codec requires dim ≤ {} and ≤ 64 radii (got dim {})",
+            crate::polar::quantizer::MAX_KERNEL_DIM,
+            cfg.dim
+        );
         let quantizer = PolarQuantizer::new_offline(cfg);
         let vec_bytes = quantizer.vec_slot_bytes();
         Self { quantizer, name, vec_bytes }
@@ -442,6 +478,10 @@ impl PageCodec for PolarPageCodec {
         *k1 = self.quantizer.prepare_query_into(q, table, rot);
     }
 
+    /// Block-kernel scoring (§Perf): one `score_block` call per page run
+    /// batch-unpacks every slot's radii and angle codes and contracts
+    /// them against the level-1 table — bit-identical to the per-slot
+    /// `score_slot` loop it replaced (pinned by the parity suite).
     fn key_scores_page(
         &self,
         slots: &[u8],
@@ -451,14 +491,20 @@ impl PageCodec for PolarPageCodec {
         _q: &[f32],
         scratch: &mut CodecScratch,
         scores: &mut Vec<f32>,
-    ) {
-        let vb = self.vec_bytes;
-        let CodecScratch { table, k1, tmp, .. } = scratch;
-        for i in 0..count {
-            let pair = &slots[i * stride + offset..];
-            // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
-            scores.push(self.quantizer.score_slot(table, *k1, &pair[..vb], tmp));
-        }
+    ) -> f32 {
+        let CodecScratch { table, k1, block, .. } = scratch;
+        let base = scores.len();
+        scores.resize(base + count, 0.0);
+        self.quantizer.score_block(
+            table,
+            *k1,
+            slots,
+            stride,
+            offset,
+            count,
+            block,
+            &mut scores[base..],
+        )
     }
 
     fn value_accumulate_page(
@@ -468,16 +514,11 @@ impl PageCodec for PolarPageCodec {
         offset: usize,
         count: usize,
         weights: &[f32],
+        block: &mut BlockScratch,
         acc: &mut [f32],
     ) {
         let vb = self.vec_bytes;
-        for (i, &w) in weights.iter().take(count).enumerate() {
-            if w == 0.0 {
-                continue;
-            }
-            let pair = &slots[i * stride + offset..];
-            self.quantizer.accumulate_slot(&pair[vb..2 * vb], w, acc);
-        }
+        self.quantizer.accumulate_block(slots, stride, offset + vb, count, weights, block, acc);
     }
 
     /// The accumulator lives in the preconditioned basis; un-rotate once
@@ -595,10 +636,11 @@ impl PageCodec for KiviPageCodec {
         q: &[f32],
         _scratch: &mut CodecScratch,
         scores: &mut Vec<f32>,
-    ) {
+    ) -> f32 {
         let d = q.len();
         let g = self.group_for(d);
         let codes_at = d.div_ceil(g) * 4;
+        let mut run_max = f32::NEG_INFINITY;
         for i in 0..count {
             let key = &slots[i * stride + offset..];
             let mut s = 0.0f32;
@@ -609,9 +651,13 @@ impl PageCodec for KiviPageCodec {
                 let code = (key[codes_at + c / 4] >> (2 * (c % 4))) & 0x3;
                 s += qc * dequant_code(code, zero, scale);
             }
+            if s > run_max {
+                run_max = s;
+            }
             // analyze: allow(hot_path_alloc, "amortized push into the caller-retained scores scratch; the caller clears but never shrinks it")
             scores.push(s);
         }
+        run_max
     }
 
     fn value_accumulate_page(
@@ -621,6 +667,7 @@ impl PageCodec for KiviPageCodec {
         offset: usize,
         count: usize,
         weights: &[f32],
+        _block: &mut BlockScratch,
         acc: &mut [f32],
     ) {
         let d = acc.len();
@@ -718,15 +765,21 @@ impl AttentionSource for HeadKvView<'_> {
         self.len
     }
 
-    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) -> f32 {
         scores.clear();
         let stride = self.pool.cfg.token_bytes;
         let mut scratch = self.scratch.borrow_mut();
         self.codec.prepare_query(q, &mut scratch);
+        let mut raw_max = f32::NEG_INFINITY;
         self.for_each_page(|bytes, _start, count| {
-            self.codec
+            let m = self
+                .codec
                 .key_scores_page(bytes, stride, self.offset, count, q, &mut scratch, scores);
+            if m > raw_max {
+                raw_max = m;
+            }
         });
+        raw_max
     }
 
     fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
@@ -735,9 +788,9 @@ impl AttentionSource for HeadKvView<'_> {
         // fresh Vec per (layer, head, step), the decode path's last
         // hot-loop allocation.
         let mut scratch = self.scratch.borrow_mut();
-        let s = &mut *scratch;
-        s.acc.clear();
-        s.acc.resize(self.d, 0.0);
+        let CodecScratch { acc, unrot, block, .. } = &mut *scratch;
+        acc.clear();
+        acc.resize(self.d, 0.0);
         self.for_each_page(|bytes, start, count| {
             self.codec.value_accumulate_page(
                 bytes,
@@ -745,10 +798,11 @@ impl AttentionSource for HeadKvView<'_> {
                 self.offset,
                 count,
                 &weights[start..start + count],
-                &mut s.acc,
+                block,
+                acc,
             );
         });
-        self.codec.value_finish(&s.acc, out, &mut s.unrot);
+        self.codec.value_finish(acc, out, unrot);
     }
 }
 
@@ -786,6 +840,16 @@ mod tests {
         let shallow = page_codec_for("polarquant", 24).expect("L=3 layout");
         assert!(shallow.pair_bytes(24) < Fp16PageCodec.pair_bytes(24));
         assert!(page_codec_for("polarquant", 25).is_none(), "odd dim");
+        // Regression: d = 512 passes the old `num_radii() > 64` gate
+        // (nr = 32) but exceeds the fused kernels' stack scratch — it
+        // must cleanly return None (legacy path) instead of building a
+        // codec that panics mid-decode. Width-agnostic codecs still build.
+        for d in [512usize, 1024] {
+            assert!(page_codec_for("polarquant", d).is_none(), "d={d}");
+            assert!(page_codec_for("polarquant-r-offline", d).is_none(), "d={d}");
+            assert!(page_codec_for("fp16", d).is_some(), "d={d}");
+            assert!(page_codec_for("kivi", d).is_some(), "d={d}");
+        }
         // PAGE_CODEC_METHODS is the canonical list: every entry must
         // build at the paper dim, and every entry must agree with
         // is_page_codec (so the ratio suites iterate the full set).
@@ -844,8 +908,15 @@ mod tests {
             let mut scratch = CodecScratch::default();
             let mut scores = Vec::new();
             codec.prepare_query(&q, &mut scratch);
-            codec.key_scores_page(&slots, pb, 0, n, &q, &mut scratch, &mut scores);
+            let got_max = codec.key_scores_page(&slots, pb, 0, n, &q, &mut scratch, &mut scores);
             assert_eq!(scores.len(), n);
+            let want_max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+            assert_eq!(
+                got_max.to_bits(),
+                want_max.to_bits(),
+                "{}: fused max must equal the fold of the scores it returned",
+                codec.name()
+            );
             let mut ko = vec![0.0f32; d];
             let mut vo = vec![0.0f32; d];
             for i in 0..n {
@@ -877,7 +948,8 @@ mod tests {
             }
             let w: Vec<f32> = (0..n).map(|i| 0.1 + 0.05 * i as f32).collect();
             let mut acc = vec![0.0f32; d];
-            codec.value_accumulate_page(&slots, pb, 0, n, &w, &mut acc);
+            let mut block = BlockScratch::default();
+            codec.value_accumulate_page(&slots, pb, 0, n, &w, &mut block, &mut acc);
             let mut got = vec![0.0f32; d];
             codec.value_finish(&acc, &mut got, &mut Vec::new());
             // Reference: weighted sum of decode_pair values.
@@ -943,8 +1015,10 @@ mod tests {
         let pages = pool.table(7).unwrap().pages.clone();
         let view = HeadKvView::new(&pool, &pages, codec.as_ref(), &layout, 1, 1, n, &scratch);
         let mut scores = Vec::new();
-        view.key_scores(&q, &mut scores);
+        let raw_max = view.key_scores(&q, &mut scores);
         assert_eq!(scores.len(), n);
+        let want_max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+        assert_eq!(raw_max.to_bits(), want_max.to_bits(), "cross-page fused max");
         for t in 0..n {
             let want = crate::math::linalg::dot(&keys[t], &q);
             assert!((scores[t] - want).abs() < 0.05, "t={t}: {} vs {want}", scores[t]);

@@ -22,19 +22,30 @@ pub struct AttnScratch {
 /// scores and a weighted value combine over the cached tokens.
 pub trait AttentionSource {
     fn n_tokens(&self) -> usize;
-    /// scores ← ⟨K̂ᵢ, q⟩ for every cached token i (unscaled).
-    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>);
+    /// scores ← ⟨K̂ᵢ, q⟩ for every cached token i (unscaled), returning
+    /// the maximum raw score (`NEG_INFINITY` when the cache is empty).
+    /// Sources that score page runs fuse the max into the scoring pass,
+    /// so [`attend_cached`] never rescans the score vector for it.
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) -> f32;
     /// out += Σᵢ weights[i]·V̂ᵢ (out pre-zeroed by the caller).
     fn value_combine(&self, weights: &[f32], out: &mut [f32]);
 }
 
-/// Every compressed-cache box is an attention source as-is.
+/// Every compressed-cache box is an attention source as-is; the legacy
+/// trait has no fused max, so fold it here once per call.
 impl<T: CompressedKv + ?Sized> AttentionSource for T {
     fn n_tokens(&self) -> usize {
         CompressedKv::n_tokens(self)
     }
-    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
-        CompressedKv::key_scores(self, q, scores)
+    fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) -> f32 {
+        CompressedKv::key_scores(self, q, scores);
+        let mut raw_max = f32::NEG_INFINITY;
+        for &s in scores.iter() {
+            if s > raw_max {
+                raw_max = s;
+            }
+        }
+        raw_max
     }
     fn value_combine(&self, weights: &[f32], out: &mut [f32]) {
         CompressedKv::value_combine(self, weights, out)
@@ -74,18 +85,25 @@ pub fn attend_cached<S: AttentionSource + ?Sized>(
 ) {
     let dh = q.len();
     let scale = 1.0 / (dh as f32).sqrt();
-    cache.key_scores(q, &mut scratch.scores);
+    let raw_max = cache.key_scores(q, &mut scratch.scores);
     let n = scratch.scores.len();
     debug_assert_eq!(n, cache.n_tokens());
     let self_score = dot(q, self_k) * scale;
 
-    // Stable softmax over cache scores + self score.
+    // Stable softmax over cache scores + self score. The max comes
+    // fused from the scoring pass: `raw_max · scale` is bitwise the
+    // very product the scale loop below computes for that element
+    // (same input bits, and multiplying by a positive scale preserves
+    // the ordering), so this matches the old scale-then-scan exactly.
     let mut max = self_score;
+    if n > 0 {
+        let cached_max = raw_max * scale;
+        if cached_max > max {
+            max = cached_max;
+        }
+    }
     for s in scratch.scores.iter_mut() {
         *s *= scale;
-        if *s > max {
-            max = *s;
-        }
     }
     let mut denom = 0.0f32;
     for s in scratch.scores.iter_mut() {

@@ -15,6 +15,7 @@ use crate::model::config::ModelConfig;
 use crate::model::rope::RopeTable;
 use crate::model::weights::Weights;
 use crate::quant::compressor::CompressedKv;
+use crate::util::threadpool::{default_threads, parallel_for_mut};
 use std::cell::RefCell;
 
 /// Per-layer prefill output: K/V rows plus the observation-window queries
@@ -87,13 +88,35 @@ pub struct Transformer {
     pub weights: Weights,
     rope: RopeTable,
     scratch: AttnScratch,
-    /// Codec-side decode scratch (prepared-query tables, value
-    /// accumulators) reused across paged decode steps — RefCell because
-    /// [`HeadKvView`] borrows it behind a shared reference.
-    codec_scratch: RefCell<CodecScratch>,
+    /// Per-head decode slabs for the head-parallel paged fan-out; sized
+    /// lazily to `n_heads` on the first paged step.
+    head_scratch: Vec<HeadScratch>,
+    /// Forced fan-out width for [`decode_step_paged`](Self::decode_step_paged):
+    /// `None` auto-sizes from available parallelism (see
+    /// [`set_decode_threads`](Self::set_decode_threads)).
+    decode_threads: Option<usize>,
     /// Model-side decode buffers, reused across paged decode steps.
     decode: DecodeScratch,
 }
+
+/// One head's decode slab: attention scratch, codec scratch (prepared
+/// query table, value accumulator, block-kernel planes) and the head's
+/// output row. Each (layer, head) task in the head-parallel fan-out owns
+/// exactly one slab, so tasks share nothing mutable — determinism is
+/// structural, not locked.
+#[derive(Default)]
+struct HeadScratch {
+    attn: AttnScratch,
+    /// RefCell because [`HeadKvView`] borrows codec scratch behind a
+    /// shared reference; each slab is owned by one task at a time.
+    codec: RefCell<CodecScratch>,
+    out: Vec<f32>,
+}
+
+/// Cached-context length below which the paged decode stays
+/// single-threaded when auto-sizing: under this, fork-join overhead
+/// exceeds the per-head scoring work on small models.
+const PARALLEL_MIN_TOKENS: usize = 32;
 
 /// Reusable per-step buffers for [`Transformer::decode_step_paged`]:
 /// sized on the first step, after which steady-state decode performs no
@@ -135,9 +158,19 @@ impl Transformer {
             weights,
             rope,
             scratch: AttnScratch::default(),
-            codec_scratch: RefCell::new(CodecScratch::default()),
+            head_scratch: Vec::new(),
+            decode_threads: None,
             decode: DecodeScratch::default(),
         }
+    }
+
+    /// Pin the head-parallel decode fan-out width: `Some(1)` forces
+    /// single-threaded, `Some(n)` forces `n` threads, `None` (default)
+    /// auto-sizes from available parallelism once the cached context is
+    /// long enough to amortize the fork-join. Per-head results are
+    /// bit-identical at every width (pinned by the parity suite).
+    pub fn set_decode_threads(&mut self, threads: Option<usize>) {
+        self.decode_threads = threads;
     }
 
     pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
@@ -394,14 +427,30 @@ impl Transformer {
         layout: &KvLayout,
     ) -> &[f32] {
         // Field-split the &mut self borrow: weights, the RoPE table, the
-        // attention scratch and the decode buffers are disjoint, which is
+        // per-head slabs and the decode buffers are disjoint, which is
         // what lets every per-step buffer live on the struct (no per-token
         // allocation, no cfg clone) while the step mutates them all.
-        let Transformer { cfg, weights, rope, scratch, codec_scratch, decode } = self;
+        let Transformer { cfg, weights, rope, head_scratch, decode, decode_threads, .. } = self;
         let (d, h, dh, f) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
         let hd = h * dh;
         assert_eq!(layout.n_layers, cfg.n_layers);
         assert_eq!(layout.n_heads, h);
+
+        // Head-parallel fan-out width: forced, or auto once the cached
+        // context is long enough for the per-head scoring work to beat
+        // the fork-join cost (single-core boxes resolve to 1 either way).
+        let auto = if pos >= PARALLEL_MIN_TOKENS {
+            default_threads()
+        } else {
+            1
+        };
+        let fanout = decode_threads.unwrap_or(auto).min(h).max(1);
+        if head_scratch.len() != h {
+            head_scratch.resize_with(h, HeadScratch::default);
+        }
+        for hs in head_scratch.iter_mut() {
+            ensure_len(&mut hs.out, dh);
+        }
 
         let embed = weights.get("embed");
         let tok = token as usize % cfg.vocab;
@@ -431,22 +480,22 @@ impl Transformer {
                 // analyze: allow(hot_path_panic, "pool-slot invariants are enforced at admission; a missing table here is unrecoverable state corruption, not an input error")
                 let table = pool.table(seq).expect("pool sequence registered");
                 let pages = &table.pages;
-                for head in 0..h {
-                    let view = HeadKvView::new(
-                        pool,
-                        pages,
-                        codec,
-                        layout,
-                        l,
-                        head,
-                        pos,
-                        codec_scratch,
-                    );
-                    let qh = &q[head * dh..(head + 1) * dh];
-                    let kh = &k[head * dh..(head + 1) * dh];
-                    let vh = &v[head * dh..(head + 1) * dh];
-                    let out = &mut attn[head * dh..(head + 1) * dh];
-                    attend_cached(&view, qh, kh, vh, scratch, out);
+                // Head-parallel attention: every head is an independent
+                // task over shared read-only state (pool pages, q/k/v
+                // rows) writing only its own slab, so any fan-out width
+                // produces bit-identical per-head outputs.
+                let pool_ro = &*pool;
+                let (q_ro, k_ro, v_ro) = (&*q, &*k, &*v);
+                parallel_for_mut(&mut head_scratch[..h], fanout, |head, hs| {
+                    let sc = &hs.codec;
+                    let view = HeadKvView::new(pool_ro, pages, codec, layout, l, head, pos, sc);
+                    let qh = &q_ro[head * dh..(head + 1) * dh];
+                    let kh = &k_ro[head * dh..(head + 1) * dh];
+                    let vh = &v_ro[head * dh..(head + 1) * dh];
+                    attend_cached(&view, qh, kh, vh, &mut hs.attn, &mut hs.out);
+                });
+                for (head, hs) in head_scratch.iter().enumerate() {
+                    attn[head * dh..(head + 1) * dh].copy_from_slice(&hs.out);
                 }
             }
             // Encode the streamed pair into this token's slot. Matched

@@ -165,6 +165,96 @@ pub fn read_fields_fast(
     true
 }
 
+/// Page-block variant of [`read_fields_fast`] (§Perf, vectorized decode
+/// kernels): decode the same `count`-field run out of `n_slots`
+/// consecutive encoded vectors in one call. Slot `i`'s code stream
+/// starts at byte `base + i * stride`; the run itself starts
+/// `offset_bits` into each stream. Output is slot-major:
+/// `out[i * count + j]` is field `j` of slot `i`.
+///
+/// The alignment/width/bounds checks run once per page instead of once
+/// per slot, so the per-slot inner loops are branch-free byte
+/// arithmetic. Returns false (out untouched) when the fast layout does
+/// not apply — callers fall back to a per-slot [`BitReader`].
+pub fn read_fields_block(
+    buf: &[u8],
+    base: usize,
+    stride: usize,
+    offset_bits: usize,
+    width: u8,
+    count: usize,
+    n_slots: usize,
+    out: &mut [u16],
+) -> bool {
+    if offset_bits % 8 != 0 || !matches!(width, 1 | 2 | 4 | 8) {
+        return false;
+    }
+    if n_slots == 0 || count == 0 {
+        return true;
+    }
+    let per_byte = 8 / width as usize;
+    let field_bytes = count.div_ceil(per_byte);
+    let first = base + offset_bits / 8;
+    // Bounds once for the whole run: the last slot's field bytes must
+    // lie inside the buffer, and the output must hold every slot's row.
+    if (n_slots - 1) * stride + first + field_bytes > buf.len() || out.len() < n_slots * count {
+        return false;
+    }
+    match width {
+        8 => {
+            for i in 0..n_slots {
+                let src = &buf[i * stride + first..][..count];
+                let dst = &mut out[i * count..(i + 1) * count];
+                for (o, &b) in dst.iter_mut().zip(src) {
+                    *o = b as u16;
+                }
+            }
+        }
+        4 => {
+            for i in 0..n_slots {
+                let src = &buf[i * stride + first..][..field_bytes];
+                let dst = &mut out[i * count..(i + 1) * count];
+                for t in 0..count / 2 {
+                    let b = src[t];
+                    dst[2 * t] = (b & 0x0F) as u16;
+                    dst[2 * t + 1] = (b >> 4) as u16;
+                }
+                if count % 2 == 1 {
+                    dst[count - 1] = (src[count / 2] & 0x0F) as u16;
+                }
+            }
+        }
+        2 => {
+            for i in 0..n_slots {
+                let src = &buf[i * stride + first..][..field_bytes];
+                let dst = &mut out[i * count..(i + 1) * count];
+                let full = count / 4;
+                for t in 0..full {
+                    let b = src[t];
+                    dst[4 * t] = (b & 0x03) as u16;
+                    dst[4 * t + 1] = ((b >> 2) & 0x03) as u16;
+                    dst[4 * t + 2] = ((b >> 4) & 0x03) as u16;
+                    dst[4 * t + 3] = (b >> 6) as u16;
+                }
+                for r in full * 4..count {
+                    dst[r] = ((src[r / 4] >> (2 * (r % 4))) & 0x03) as u16;
+                }
+            }
+        }
+        1 => {
+            for i in 0..n_slots {
+                let src = &buf[i * stride + first..][..field_bytes];
+                let dst = &mut out[i * count..(i + 1) * count];
+                for (r, o) in dst.iter_mut().enumerate() {
+                    *o = ((src[r / 8] >> (r % 8)) & 1) as u16;
+                }
+            }
+        }
+        _ => return false,
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,6 +355,85 @@ mod tests {
         assert!(!read_fields_fast(&buf, 3, 2, 4, &mut out), "unaligned offset");
         assert!(!read_fields_fast(&buf, 0, 3, 4, &mut out), "3-bit fields");
         assert!(!read_fields_fast(&buf, 0, 8, 100, &mut out), "past end");
+    }
+
+    #[test]
+    fn block_fields_match_per_slot_fast_path() {
+        // The page-block unpack must agree with read_fields_fast applied
+        // slot by slot, for every fast width, odd counts, and slots that
+        // carry leading bytes (radii) and trailing slack.
+        let mut rng = Pcg64::new(77);
+        for width in [1u8, 2, 4, 8] {
+            for count in [1usize, 3, 7, 16, 31] {
+                for n_slots in [1usize, 2, 5] {
+                    let base = 6; // bytes of "radii" before the code stream
+                    let offset_bytes = 2;
+                    let field_bytes = packed_bytes(count, width);
+                    let stride = base + offset_bytes + field_bytes + 3; // slack
+                    let mut buf = vec![0u8; n_slots * stride];
+                    let mut want = vec![0u16; n_slots * count];
+                    for i in 0..n_slots {
+                        let mut w = BitWriter::new();
+                        for _ in 0..offset_bytes {
+                            w.write(0xCD, 8);
+                        }
+                        for j in 0..count {
+                            let v = (rng.next_u64() & ((1u64 << width) - 1)) as u16;
+                            want[i * count + j] = v;
+                            w.write(v, width);
+                        }
+                        let bytes = w.into_bytes();
+                        buf[i * stride + base..i * stride + base + bytes.len()]
+                            .copy_from_slice(&bytes);
+                    }
+                    let mut out = vec![0u16; n_slots * count];
+                    let ok = read_fields_block(
+                        &buf,
+                        base,
+                        stride,
+                        offset_bytes * 8,
+                        width,
+                        count,
+                        n_slots,
+                        &mut out,
+                    );
+                    assert!(ok, "width {width} must take the block fast path");
+                    assert_eq!(out, want, "width={width} count={count} slots={n_slots}");
+                    // Cross-check against the per-slot fast path.
+                    for i in 0..n_slots {
+                        let mut single = vec![0u16; count];
+                        assert!(read_fields_fast(
+                            &buf[i * stride + base..],
+                            offset_bytes * 8,
+                            width,
+                            count,
+                            &mut single,
+                        ));
+                        assert_eq!(single, out[i * count..(i + 1) * count]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_fields_rejects_bad_layouts() {
+        let buf = [0u8; 32];
+        let mut out = [0u16; 16];
+        assert!(
+            !read_fields_block(&buf, 0, 8, 3, 2, 4, 2, &mut out),
+            "unaligned offset"
+        );
+        assert!(!read_fields_block(&buf, 0, 8, 0, 3, 4, 2, &mut out), "3-bit fields");
+        assert!(
+            !read_fields_block(&buf, 0, 16, 0, 8, 8, 3, &mut out),
+            "last slot past end"
+        );
+        assert!(
+            !read_fields_block(&buf, 0, 4, 0, 2, 4, 8, &mut out[..4]),
+            "output too small"
+        );
+        assert!(read_fields_block(&buf, 0, 4, 0, 2, 4, 0, &mut out), "zero slots is a no-op");
     }
 
     #[test]

@@ -116,6 +116,51 @@ impl QuantizedVector {
 /// every layout we run; generous for ablations with fewer levels).
 const MAX_RADII: usize = 64;
 
+/// Hard capacity of the fused slot/score kernels' fixed stack scratch
+/// ([`PolarQuantizer::score_slot`], [`PolarQuantizer::accumulate_slot`]
+/// and the block kernels): `accumulate_with` expands through a
+/// `[f32; 128]` (d/2 entries) and the code buffers hold 256 fields
+/// (d/2 at level 1). Head dims above this must take the materialized
+/// decode path — [`PolarConfig::fits_fused_kernels`] is the guard every
+/// caller checks, so an oversized config degrades cleanly instead of
+/// indexing out of bounds mid-decode.
+pub const MAX_KERNEL_DIM: usize = 256;
+
+/// Codes processed per chunk in the dimension-independent decode path:
+/// chunk starts stay multiples of 256 fields, which is byte-aligned for
+/// every fast width (256·w ≡ 0 mod 8), so chunking never knocks an
+/// aligned layout off the fast path.
+const CODES_CHUNK: usize = 256;
+
+impl PolarConfig {
+    /// Whether the fused stack-scratch kernels (slot scoring, scaled
+    /// accumulation, the page-block kernels) can run this layout. False
+    /// means callers must use the heap decode path
+    /// ([`PolarQuantizer::decode_preconditioned`] + dot/axpy), which is
+    /// correct for any dim.
+    pub fn fits_fused_kernels(&self) -> bool {
+        self.dim <= MAX_KERNEL_DIM && self.num_radii() <= MAX_RADII
+    }
+}
+
+/// Reusable page-block kernel scratch (§Perf, vectorized decode): the
+/// slot-major code plane, the f32 value plane the level contractions run
+/// over, and the batch-converted radii. Owned by
+/// [`crate::kvcache::codec::CodecScratch`] so one slab lives per head
+/// and steady-state decode never touches the allocator (`resize` on
+/// retained capacity only).
+#[derive(Default)]
+pub struct BlockScratch {
+    /// Slot-major unpacked angle codes (one level at a time for scoring;
+    /// all levels, level-major bases, for accumulation).
+    pub codes: Vec<u16>,
+    /// f32 working plane: per-slot contraction rows (scoring) or one
+    /// slot's expansion tmp (accumulation).
+    pub plane: Vec<f32>,
+    /// Batch-converted f16→f32 radii, slot-major.
+    pub radii: Vec<f32>,
+}
+
 /// The codec: configuration + preconditioner + per-level codebooks.
 ///
 /// Decode-side acceleration (§Perf): the only angles a decoder ever sees
@@ -275,7 +320,11 @@ impl PolarQuantizer {
     /// Shared decode core. Allocation- and trig-free (§Perf): radii land
     /// in `out[0..nr]`, then each level expands in place back-to-front
     /// using the centroid (cos, sin) LUTs — `out[2j] = r·cos`,
-    /// `out[2j+1] = r·sin` is safe descending because 2j ≥ j.
+    /// `out[2j+1] = r·sin` is safe descending because 2j ≥ j. Levels
+    /// wider than the stack code buffer are read in aligned chunks
+    /// ([`CODES_CHUNK`]), so this path is correct for ANY dim — it is
+    /// the fallback the fused kernels degrade to past
+    /// [`MAX_KERNEL_DIM`].
     fn decode_pre_with(&self, radii: &[u16], codes: &[u8], out: &mut [f32]) {
         let cfg = &self.cfg;
         debug_assert_eq!(out.len(), cfg.dim);
@@ -283,20 +332,27 @@ impl PolarQuantizer {
         for j in 0..nr {
             out[j] = f16_bits_to_f32(radii[j]);
         }
-        let mut scratch = [0u16; 256];
+        let mut scratch = [0u16; CODES_CHUNK];
         let mut m = nr;
         for l in (0..cfg.levels).rev() {
             // Current values occupy out[0..m]; this level has m codes.
             debug_assert_eq!(m, cfg.dim >> (l + 1));
-            debug_assert!(m <= scratch.len());
             let bits = cfg.level_bits[l];
             let lut = &self.trig_luts[l];
-            self.read_level_codes(codes, l, bits, m, &mut scratch);
-            for j in (0..m).rev() {
-                let r = out[j];
-                let (co, si) = lut[scratch[j] as usize];
-                out[2 * j] = r * co;
-                out[2 * j + 1] = r * si;
+            // Descending chunk walk keeps the in-place expansion
+            // invariant (2j ≥ j); chunk starts are multiples of
+            // CODES_CHUNK so aligned layouts stay on the byte fast path.
+            let mut hi = m;
+            while hi > 0 {
+                let lo = ((hi - 1) / CODES_CHUNK) * CODES_CHUNK;
+                self.read_level_codes_at(codes, l, bits, lo, hi - lo, &mut scratch);
+                for j in (lo..hi).rev() {
+                    let r = out[j];
+                    let (co, si) = lut[scratch[j - lo] as usize];
+                    out[2 * j] = r * co;
+                    out[2 * j + 1] = r * si;
+                }
+                hi = lo;
             }
             m *= 2;
         }
@@ -306,15 +362,25 @@ impl PolarQuantizer {
     /// fallback for exotic layouts (§Perf).
     #[inline]
     fn read_level_codes(&self, codes: &[u8], l: usize, bits: u8, count: usize, out: &mut [u16]) {
-        if !crate::polar::pack::read_fields_fast(
-            codes,
-            self.level_offsets[l],
-            bits,
-            count,
-            out,
-        ) {
+        self.read_level_codes_at(codes, l, bits, 0, count, out);
+    }
+
+    /// Extract `count` codes of level `l` starting at field `lo` within
+    /// the level: the chunked window [`decode_pre_with`] walks.
+    #[inline]
+    fn read_level_codes_at(
+        &self,
+        codes: &[u8],
+        l: usize,
+        bits: u8,
+        lo: usize,
+        count: usize,
+        out: &mut [u16],
+    ) {
+        let off = self.level_offsets[l] + lo * bits as usize;
+        if !crate::polar::pack::read_fields_fast(codes, off, bits, count, out) {
             let mut reader = BitReader::new(codes);
-            reader.seek(self.level_offsets[l]);
+            reader.seek(off);
             for c in out[..count].iter_mut() {
                 *c = reader.read(bits);
             }
@@ -468,6 +534,328 @@ impl PolarQuantizer {
             s += f16_bits_to_f32(h) * scratch[j];
         }
         s
+    }
+
+    /// Batch-unpack one level's codes for `n_slots` consecutive encoded
+    /// vectors whose code streams start at `codes_base + i·stride`
+    /// (§Perf): the page-block fast path hoists every alignment/bounds
+    /// check out of the slot loop; unaligned layouts fall back to a
+    /// per-slot [`BitReader`]. Output slot-major: `out[i·count + j]`.
+    fn unpack_level_block(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        codes_base: usize,
+        l: usize,
+        n_slots: usize,
+        count: usize,
+        out: &mut [u16],
+    ) {
+        let bits = self.cfg.level_bits[l];
+        if crate::polar::pack::read_fields_block(
+            slots,
+            codes_base,
+            stride,
+            self.level_offsets[l],
+            bits,
+            count,
+            n_slots,
+            out,
+        ) {
+            return;
+        }
+        for i in 0..n_slots {
+            let mut reader = BitReader::new(&slots[i * stride + codes_base..]);
+            reader.seek(self.level_offsets[l]);
+            for c in out[i * count..(i + 1) * count].iter_mut() {
+                *c = reader.read(bits);
+            }
+        }
+    }
+
+    /// Whether level `l`'s `count`-field run is byte-aligned at `bits`
+    /// wide and fully inside `slots` for all `n_slots` strided vectors —
+    /// the once-per-page guard the fused byte kernels check before
+    /// reading packed bytes directly.
+    #[inline]
+    fn level_run_aligned(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        codes_base: usize,
+        l: usize,
+        bits: u8,
+        count: usize,
+        n_slots: usize,
+    ) -> bool {
+        let off = self.level_offsets[l];
+        off % 8 == 0
+            && (n_slots - 1) * stride
+                + codes_base
+                + off / 8
+                + (count * bits as usize).div_ceil(8)
+                <= slots.len()
+    }
+
+    /// Page-block score kernel (§Perf; the (radius bin × angle code)
+    /// lookup-table contraction of arXiv 2502.00527, adapted to the
+    /// recursive layout): score `count` contiguous encoded KEY vectors
+    /// laid out `stride` bytes apart against a prepared query table,
+    /// writing `scores[0..count]` and returning the run's maximum score
+    /// (the fused softmax-max pass — callers never rescan).
+    ///
+    /// Per-slot float op order is exactly [`score_slot`](Self::score_slot)'s
+    /// (level-1 lookups, pair contractions, radii dot), so results are
+    /// bit-identical to the scalar path; only the unpack is batched and
+    /// the level loops run fused off the packed bytes. Callers must
+    /// check [`PolarConfig::fits_fused_kernels`].
+    pub fn score_block(
+        &self,
+        table: &[f32],
+        k1: usize,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        block: &mut BlockScratch,
+        scores: &mut [f32],
+    ) -> f32 {
+        let cfg = &self.cfg;
+        debug_assert!(cfg.fits_fused_kernels());
+        debug_assert!(scores.len() >= count);
+        if count == 0 {
+            return f32::NEG_INFINITY;
+        }
+        let pairs = cfg.dim / 2;
+        let nr = cfg.num_radii();
+        let codes_base = offset + 2 * nr;
+
+        // Batch radii: one f16→f32 pass for the whole run.
+        let radii = &mut block.radii;
+        radii.clear();
+        radii.resize(count * nr, 0.0);
+        for i in 0..count {
+            let slot = &slots[i * stride + offset..][..2 * nr];
+            let row = &mut radii[i * nr..(i + 1) * nr];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = f16_bits_to_f32(u16::from_le_bytes([slot[2 * j], slot[2 * j + 1]]));
+            }
+        }
+
+        let plane = &mut block.plane;
+        plane.clear();
+        plane.resize(count * pairs, 0.0);
+
+        // Level 1: table lookups straight off the packed nibbles when
+        // the layout is byte-aligned (paper layouts always are) — no
+        // intermediate code plane at all for the widest level.
+        let m0 = pairs;
+        if cfg.level_bits[0] == 4
+            && self.level_run_aligned(slots, stride, codes_base, 0, 4, m0, count)
+        {
+            let first = codes_base + self.level_offsets[0] / 8;
+            let fb = (m0 * 4).div_ceil(8);
+            for i in 0..count {
+                let src = &slots[i * stride + first..][..fb];
+                let vrow = &mut plane[i * pairs..i * pairs + m0];
+                for t in 0..m0 / 2 {
+                    let b = src[t] as usize;
+                    vrow[2 * t] = table[(2 * t) * k1 + (b & 0x0F)];
+                    vrow[2 * t + 1] = table[(2 * t + 1) * k1 + (b >> 4)];
+                }
+                if m0 % 2 == 1 {
+                    vrow[m0 - 1] = table[(m0 - 1) * k1 + (src[m0 / 2] as usize & 0x0F)];
+                }
+            }
+        } else {
+            let codes = &mut block.codes;
+            codes.clear();
+            codes.resize(count * m0, 0);
+            self.unpack_level_block(slots, stride, codes_base, 0, count, m0, codes);
+            for i in 0..count {
+                let crow = &codes[i * m0..(i + 1) * m0];
+                let vrow = &mut plane[i * pairs..i * pairs + m0];
+                for j in 0..m0 {
+                    vrow[j] = table[j * k1 + crow[j] as usize];
+                }
+            }
+        }
+
+        // Levels 2..L: contract pairs with centroid trig, fused off the
+        // packed bytes for the paper's 2-bit levels. In-place ascending
+        // is the scalar kernel's own pattern (reads 2j, 2j+1 ≥ writes j).
+        let mut m = m0;
+        for l in 1..cfg.levels {
+            m /= 2;
+            let bits = cfg.level_bits[l];
+            let lut = &self.trig_luts[l];
+            if bits == 2 && self.level_run_aligned(slots, stride, codes_base, l, 2, m, count) {
+                let first = codes_base + self.level_offsets[l] / 8;
+                let fb = (m * 2).div_ceil(8);
+                for i in 0..count {
+                    let src = &slots[i * stride + first..][..fb];
+                    let vrow = &mut plane[i * pairs..i * pairs + 2 * m];
+                    for t in 0..m / 4 {
+                        let b = src[t] as usize;
+                        let j0 = 4 * t;
+                        let (co, si) = lut[b & 0x03];
+                        vrow[j0] = vrow[2 * j0] * co + vrow[2 * j0 + 1] * si;
+                        let (co, si) = lut[(b >> 2) & 0x03];
+                        vrow[j0 + 1] = vrow[2 * j0 + 2] * co + vrow[2 * j0 + 3] * si;
+                        let (co, si) = lut[(b >> 4) & 0x03];
+                        vrow[j0 + 2] = vrow[2 * j0 + 4] * co + vrow[2 * j0 + 5] * si;
+                        let (co, si) = lut[b >> 6];
+                        vrow[j0 + 3] = vrow[2 * j0 + 6] * co + vrow[2 * j0 + 7] * si;
+                    }
+                    for j in (m / 4) * 4..m {
+                        let (co, si) = lut[(src[j / 4] as usize >> (2 * (j % 4))) & 0x03];
+                        vrow[j] = vrow[2 * j] * co + vrow[2 * j + 1] * si;
+                    }
+                }
+            } else {
+                let codes = &mut block.codes;
+                codes.clear();
+                codes.resize(count * m, 0);
+                self.unpack_level_block(slots, stride, codes_base, l, count, m, codes);
+                for i in 0..count {
+                    let crow = &codes[i * m..(i + 1) * m];
+                    let vrow = &mut plane[i * pairs..i * pairs + 2 * m];
+                    for j in 0..m {
+                        let (co, si) = lut[crow[j] as usize];
+                        vrow[j] = vrow[2 * j] * co + vrow[2 * j + 1] * si;
+                    }
+                }
+            }
+        }
+
+        // Final: dot each contracted row against its radii, tracking the
+        // run max for the caller's softmax (the fused running-max pass).
+        let mut run_max = f32::NEG_INFINITY;
+        for i in 0..count {
+            let vrow = &plane[i * pairs..(i + 1) * pairs];
+            let rrow = &radii[i * nr..(i + 1) * nr];
+            let mut s = 0.0f32;
+            for j in 0..nr {
+                s += rrow[j] * vrow[j];
+            }
+            scores[i] = s;
+            if s > run_max {
+                run_max = s;
+            }
+        }
+        run_max
+    }
+
+    /// Page-block value kernel (§Perf): `acc += Σᵢ weights[i]·decode_pre(slotᵢ)`
+    /// over `count` contiguous encoded VALUE vectors, with every level's
+    /// codes batch-unpacked once per run (level-major planes) instead of
+    /// once per slot. Slots accumulate in ascending order with zero
+    /// weights skipped — the exact op order of
+    /// [`accumulate_slot`](Self::accumulate_slot), so the accumulator is
+    /// bit-identical to the scalar path. Callers must check
+    /// [`PolarConfig::fits_fused_kernels`].
+    pub fn accumulate_block(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        weights: &[f32],
+        block: &mut BlockScratch,
+        acc: &mut [f32],
+    ) {
+        let cfg = &self.cfg;
+        debug_assert!(cfg.fits_fused_kernels());
+        debug_assert_eq!(acc.len(), cfg.dim);
+        debug_assert!(weights.len() >= count);
+        if count == 0 {
+            return;
+        }
+        // Fully masked runs (every weight zero) skip the unpack.
+        let mut any = false;
+        for &w in weights.iter().take(count) {
+            if w != 0.0 {
+                any = true;
+                break;
+            }
+        }
+        if !any {
+            return;
+        }
+        let pairs = cfg.dim / 2;
+        let nr = cfg.num_radii();
+        let codes_base = offset + 2 * nr;
+
+        // Batch radii, unscaled — the per-slot weight folds in at seed
+        // time below, matching the scalar kernel's `w · r` op order.
+        let radii = &mut block.radii;
+        radii.clear();
+        radii.resize(count * nr, 0.0);
+        for i in 0..count {
+            let slot = &slots[i * stride + offset..][..2 * nr];
+            let row = &mut radii[i * nr..(i + 1) * nr];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = f16_bits_to_f32(u16::from_le_bytes([slot[2 * j], slot[2 * j + 1]]));
+            }
+        }
+
+        // Batch-unpack every level's codes: level-major bases, slot-major
+        // rows inside each level.
+        let codes = &mut block.codes;
+        codes.clear();
+        codes.resize(count * (cfg.dim - nr), 0);
+        let mut bases = [0usize; 16];
+        let mut base = 0usize;
+        for l in 0..cfg.levels {
+            let m_l = cfg.dim >> (l + 1);
+            bases[l] = base;
+            self.unpack_level_block(
+                slots,
+                stride,
+                codes_base,
+                l,
+                count,
+                m_l,
+                &mut codes[base..base + count * m_l],
+            );
+            base += count * m_l;
+        }
+
+        // Per-slot expansion into the accumulator, slots ascending.
+        let plane = &mut block.plane;
+        plane.clear();
+        plane.resize(pairs, 0.0);
+        for (i, &w) in weights.iter().take(count).enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let rrow = &radii[i * nr..(i + 1) * nr];
+            for j in 0..nr {
+                plane[j] = w * rrow[j];
+            }
+            let mut m = nr;
+            for l in (1..cfg.levels).rev() {
+                debug_assert_eq!(m, cfg.dim >> (l + 1));
+                let lut = &self.trig_luts[l];
+                let crow = &codes[bases[l] + i * m..bases[l] + (i + 1) * m];
+                for j in (0..m).rev() {
+                    let r = plane[j];
+                    let (co, si) = lut[crow[j] as usize];
+                    plane[2 * j] = r * co;
+                    plane[2 * j + 1] = r * si;
+                }
+                m *= 2;
+            }
+            // Last level expands straight into the accumulator.
+            let lut = &self.trig_luts[0];
+            let crow = &codes[bases[0] + i * m..bases[0] + (i + 1) * m];
+            for j in 0..m {
+                let (co, si) = lut[crow[j] as usize];
+                let r = plane[j];
+                acc[2 * j] += r * co;
+                acc[2 * j + 1] += r * si;
+            }
+        }
     }
 
     /// Full decode (applies Rᵀ) — Algorithm 1 `DeQuant`.
@@ -757,6 +1145,140 @@ mod tests {
             for (a, b) in acc_a.iter().zip(&acc_b) {
                 assert_eq!(a.to_bits(), b.to_bits(), "d={d}");
             }
+        }
+    }
+
+    #[test]
+    fn block_kernels_bitwise_match_slot_kernels() {
+        // The page-block kernels must be bit-identical to the per-slot
+        // scalar path — the vectorized codec's parity suite rests on
+        // this. Strided records with leading garbage and trailing pad
+        // mimic a pool page's (key, value) interleave.
+        let cfgs = [
+            PolarConfig::paper_default(32),
+            PolarConfig::paper_default(64),
+            PolarConfig::paper_default(128),
+            PolarConfig::paper_default(256),
+            // Unaligned ablation layout: forces the BitReader fallbacks.
+            PolarConfig {
+                dim: 64,
+                levels: 3,
+                level_bits: vec![5, 3, 2],
+                precondition: PreconditionKind::None,
+                seed: 9,
+            },
+        ];
+        for cfg in cfgs {
+            cfg.validate();
+            assert!(cfg.fits_fused_kernels());
+            let d = cfg.dim;
+            let pq = PolarQuantizer::new_offline(cfg);
+            let vb = pq.vec_slot_bytes();
+            let offset = 5usize;
+            let stride = offset + vb + 3;
+            let q = gaussian_rows(1, d, 5);
+            let mut table = Vec::new();
+            let mut rot = Vec::new();
+            let k1 = pq.prepare_query_into(&q, &mut table, &mut rot);
+            let mut block = BlockScratch::default();
+            for count in [1usize, 2, 5, 7] {
+                let rows = gaussian_rows(count, d, 77 + count as u64);
+                let mut buf = vec![0xA5u8; stride * count + 11];
+                for (i, row) in rows.chunks(d).enumerate() {
+                    pq.encode_into(row, &mut buf[i * stride + offset..][..vb]);
+                }
+
+                let mut scores = vec![0.0f32; count];
+                let got_max = pq
+                    .score_block(&table, k1, &buf, stride, offset, count, &mut block, &mut scores);
+                let mut scratch = Vec::new();
+                let mut want_max = f32::NEG_INFINITY;
+                for (i, got) in scores.iter().enumerate() {
+                    let slot = &buf[i * stride + offset..][..vb];
+                    let want = pq.score_slot(&table, k1, slot, &mut scratch);
+                    assert_eq!(got.to_bits(), want.to_bits(), "d={d} count={count} i={i}");
+                    if want > want_max {
+                        want_max = want;
+                    }
+                }
+                assert_eq!(got_max.to_bits(), want_max.to_bits(), "d={d} count={count}");
+
+                // Mix of zero and nonzero weights: the zero-skip must match.
+                let mut weights = vec![0.0f32; count];
+                for (i, w) in weights.iter_mut().enumerate() {
+                    if i % 3 != 1 {
+                        *w = 0.2 + 0.15 * i as f32;
+                    }
+                }
+                let mut acc_block = vec![0.125f32; d];
+                let mut acc_slot = acc_block.clone();
+                pq.accumulate_block(
+                    &buf,
+                    stride,
+                    offset,
+                    count,
+                    &weights,
+                    &mut block,
+                    &mut acc_block,
+                );
+                for (i, &w) in weights.iter().enumerate() {
+                    if w != 0.0 {
+                        pq.accumulate_slot(&buf[i * stride + offset..][..vb], w, &mut acc_slot);
+                    }
+                }
+                for (a, b) in acc_block.iter().zip(&acc_slot) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "d={d} count={count}");
+                }
+            }
+
+            // count == 0: identity max, untouched accumulator, no reads.
+            let empty = [0u8; 0];
+            let mut scores = Vec::new();
+            let m = pq.score_block(&table, k1, &empty, stride, offset, 0, &mut block, &mut scores);
+            assert_eq!(m, f32::NEG_INFINITY);
+            let mut acc = vec![1.0f32; d];
+            pq.accumulate_block(&empty, stride, offset, 0, &[], &mut block, &mut acc);
+            assert!(acc.iter().all(|&v| v == 1.0));
+        }
+    }
+
+    #[test]
+    fn chunked_decode_handles_large_dims() {
+        // d > 256 exceeds the fused stack kernels (fits_fused_kernels
+        // rejects them) but the chunked decode walk must stay exact:
+        // the legacy heap cache serves those dims via decode + axpy.
+        for d in [512usize, 1024] {
+            let cfg = PolarConfig::paper_default(d);
+            assert!(!cfg.fits_fused_kernels(), "d={d} must not claim fused capacity");
+            let pq = PolarQuantizer::new_offline(cfg);
+            let rows = gaussian_rows(3, d, 13);
+            let mut slot = vec![0u8; pq.vec_slot_bytes()];
+            let mut a = vec![0.0f32; d];
+            let mut b = vec![0.0f32; d];
+            for row in rows.chunks(d) {
+                let c = pq.encode(row);
+                pq.encode_into(row, &mut slot);
+                pq.decode(&c, &mut a);
+                pq.decode_slot(&slot, &mut b);
+                assert_eq!(a, b, "d={d}: slot and vector decode diverge");
+                let num: f64 = row
+                    .iter()
+                    .zip(&a)
+                    .map(|(x, y)| ((x - y) as f64).powi(2))
+                    .sum();
+                let den: f64 = row.iter().map(|&x| (x as f64).powi(2)).sum();
+                assert!(num / den.max(1e-12) < 0.25, "d={d}: relative decode error too high");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_kernel_capacity_matches_paper_layouts() {
+        for d in [16usize, 32, 64, 128, 256] {
+            assert!(PolarConfig::paper_default(d).fits_fused_kernels(), "d={d}");
+        }
+        for d in [512usize, 1024] {
+            assert!(!PolarConfig::paper_default(d).fits_fused_kernels(), "d={d}");
         }
     }
 

@@ -166,13 +166,26 @@ impl CompressedKv for PolarKv {
     // analyze: allow(hot_path_alloc, "legacy per-sequence heap path: per-step prepared query and scratch; the pool substrate's codec scratch is the serving default")
     fn key_scores(&self, q: &[f32], scores: &mut Vec<f32>) {
         scores.clear();
-        // Fused path (§Perf): prepare the query once (rotation + level-1
-        // centroid table), then score each token by tree contraction —
-        // no per-token reconstruction buffer, no trig.
-        let prepared = self.quantizer.prepare_query(q);
-        let mut scratch = Vec::with_capacity(self.d / 2);
-        for k in &self.keys {
-            scores.push(self.quantizer.score(&prepared, k, &mut scratch));
+        if self.quantizer.cfg.fits_fused_kernels() {
+            // Fused path (§Perf): prepare the query once (rotation +
+            // level-1 centroid table), then score each token by tree
+            // contraction — no per-token reconstruction buffer, no trig.
+            let prepared = self.quantizer.prepare_query(q);
+            let mut scratch = Vec::with_capacity(self.d / 2);
+            for k in &self.keys {
+                scores.push(self.quantizer.score(&prepared, k, &mut scratch));
+            }
+        } else {
+            // Past the fused kernels' stack capacity (d > 256): decode
+            // each key in the preconditioned basis and dot against the
+            // rotated query (⟨Rᵀy, q⟩ = ⟨y, Rq⟩) — correct for any dim.
+            let mut rq = vec![0.0f32; self.d];
+            self.quantizer.rotation.apply(q, &mut rq);
+            let mut dec = vec![0.0f32; self.d];
+            for k in &self.keys {
+                self.quantizer.decode_preconditioned(k, &mut dec);
+                scores.push(crate::math::linalg::dot(&dec, &rq));
+            }
         }
         self.tail.key_scores_into(q, scores);
     }
@@ -185,12 +198,28 @@ impl CompressedKv for PolarKv {
         // (linear, so Σ wᵢ Rᵀyᵢ = Rᵀ Σ wᵢ yᵢ) — one rotation per step
         // instead of one per token.
         let mut acc = vec![0.0f32; d];
-        for (i, v) in self.values.iter().enumerate() {
-            let w = weights[i];
-            if w == 0.0 {
-                continue;
+        if self.quantizer.cfg.fits_fused_kernels() {
+            for (i, v) in self.values.iter().enumerate() {
+                let w = weights[i];
+                if w == 0.0 {
+                    continue;
+                }
+                self.quantizer.decode_scaled_accumulate(v, w, &mut acc);
             }
-            self.quantizer.decode_scaled_accumulate(v, w, &mut acc);
+        } else {
+            // Materialized fallback past the fused kernels' capacity:
+            // decode then axpy — the chunked decode walk handles any dim.
+            let mut dec = vec![0.0f32; d];
+            for (i, v) in self.values.iter().enumerate() {
+                let w = weights[i];
+                if w == 0.0 {
+                    continue;
+                }
+                self.quantizer.decode_preconditioned(v, &mut dec);
+                for (a, &x) in acc.iter_mut().zip(dec.iter()) {
+                    *a += w * x;
+                }
+            }
         }
         let mut unrot = vec![0.0f32; d];
         self.quantizer.rotation.apply_t(&acc, &mut unrot);
@@ -329,6 +358,45 @@ mod tests {
             "tail is fp16-exact: {} vs {want}",
             scores[8]
         );
+    }
+
+    #[test]
+    fn large_head_dim_served_without_panic() {
+        // Regression: d = 512 passes the old radii gate but overflows
+        // the fused kernels' stack scratch (release-mode OOB panic in
+        // `accumulate_with`). The legacy compressor must detect the
+        // capacity miss and serve scores/combines via the materialized
+        // decode path instead.
+        let d = 512;
+        let n = 6;
+        let b = block(n, d, 11);
+        let kv = PolarKvCompressor::new(d, PolarVariant::r_offline()).compress(&b, &[]);
+        let mut rng = Pcg64::new(12);
+        let mut q = vec![0.0f32; d];
+        rng.fill_gaussian(&mut q);
+        let mut scores = Vec::new();
+        kv.key_scores(&q, &mut scores);
+        assert_eq!(scores.len(), n);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for t in 0..n {
+            let want = crate::math::linalg::dot(b.key(t), &q);
+            num += ((scores[t] - want) as f64).powi(2);
+            den += (want as f64).powi(2);
+        }
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.2, "d=512 score rel error {rel}");
+        let mut w = vec![0.0f32; n];
+        w[1] = 0.5;
+        w[4] = 0.5;
+        let mut got = vec![0.0f32; d];
+        kv.value_combine(&w, &mut got);
+        let mut want = vec![0.0f32; d];
+        for c in 0..d {
+            want[c] = 0.5 * b.values[d + c] + 0.5 * b.values[4 * d + c];
+        }
+        let rel = crate::util::stats::rel_l2_error(&got, &want);
+        assert!(rel < 0.25, "d=512 combine rel {rel}");
     }
 
     #[test]

@@ -7,18 +7,33 @@
 //!   scoped threads; used by batch quantization and eval sweeps. On this
 //!   single-core CI box it degrades gracefully to near-sequential cost.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+use crate::util::sync::lock_recover;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Shared completion accounting: `pending` counts jobs submitted but not
+/// yet finished; `idle` is signalled whenever it drops to zero so
+/// [`ThreadPool::wait_idle`] can sleep instead of spinning.
+struct PoolState {
+    pending: Mutex<usize>,
+    idle: Condvar,
+}
+
 /// Fixed-size pool executing boxed jobs FIFO.
+///
+/// Panic-safe: a job that panics is caught on the worker, the worker
+/// stays alive for the next job, and the pending count is still
+/// decremented — `wait_idle` never hangs on a panicking workload and
+/// pool capacity never silently shrinks.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
-    queued: Arc<AtomicUsize>,
+    state: Arc<PoolState>,
 }
 
 impl ThreadPool {
@@ -26,11 +41,11 @@ impl ThreadPool {
         let threads = threads.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let queued = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(PoolState { pending: Mutex::new(0), idle: Condvar::new() });
         let workers = (0..threads)
             .map(|i| {
                 let rx = Arc::clone(&rx);
-                let queued = Arc::clone(&queued);
+                let state = Arc::clone(&state);
                 thread::Builder::new()
                     .name(format!("pq-worker-{i}"))
                     .spawn(move || loop {
@@ -40,8 +55,15 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                queued.fetch_sub(1, Ordering::SeqCst);
+                                // Run outside the rx lock; swallow panics so
+                                // one bad job can't kill the worker or leak
+                                // the pending count.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                let mut n = lock_recover(&state.pending);
+                                *n = n.saturating_sub(1);
+                                if *n == 0 {
+                                    state.idle.notify_all();
+                                }
                             }
                             Err(_) => break, // channel closed → shut down
                         }
@@ -49,16 +71,16 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx: Some(tx), workers, queued }
+        Self { tx: Some(tx), workers, state }
     }
 
     /// Number of jobs submitted but not yet finished.
     pub fn pending(&self) -> usize {
-        self.queued.load(Ordering::SeqCst)
+        *lock_recover(&self.state.pending)
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.queued.fetch_add(1, Ordering::SeqCst);
+        *lock_recover(&self.state.pending) += 1;
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -66,10 +88,17 @@ impl ThreadPool {
             .expect("workers alive");
     }
 
-    /// Block until all submitted jobs have completed.
+    /// Block until all submitted jobs have completed. Condvar-based:
+    /// sleeps between completions instead of burning a core on
+    /// `yield_now`, and is woken by the worker that drains the count
+    /// to zero — including when the draining job panicked.
     pub fn wait_idle(&self) {
-        while self.pending() > 0 {
-            thread::yield_now();
+        let mut n = lock_recover(&self.state.pending);
+        while *n > 0 {
+            n = match self.state.idle.wait(n) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
     }
 }
@@ -116,6 +145,38 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     });
 }
 
+/// Fork-join over disjoint mutable slabs (§Perf): splits `items` into
+/// contiguous chunks across up to `threads` scoped threads and calls
+/// `f(global_index, &mut item)` for every element. The mutable-slab
+/// variant head-parallel decode rides on — each (layer, head) task owns
+/// its scratch slab with no locking.
+pub fn parallel_for_mut<T: Send, F: Fn(usize, &mut T) + Sync>(
+    items: &mut [T],
+    threads: usize,
+    f: F,
+) {
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for (t, slab) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            let lo = t * chunk;
+            s.spawn(move || {
+                for (k, item) in slab.iter_mut().enumerate() {
+                    f(lo + k, item);
+                }
+            });
+        }
+    });
+}
+
 /// Map `f` over `0..n` in parallel, collecting results in order.
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -132,7 +193,7 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn pool_runs_all_jobs() {
@@ -160,6 +221,64 @@ mod tests {
         }
         drop(pool); // must not hang
         assert!(counter.load(Ordering::SeqCst) <= 10);
+    }
+
+    #[test]
+    fn panicking_job_neither_hangs_nor_shrinks_pool() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.execute(|| panic!("job panics"));
+        }
+        // Regression: the old pool decremented pending only after job()
+        // returned, so a panic leaked the count and this spun forever.
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+
+        // Capacity is intact: park every worker on a barrier that only
+        // opens once each one arrives — deadlocks (and trips the recv
+        // timeout) if a worker thread died with the panics above.
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..2 {
+            let b = Arc::clone(&barrier);
+            let tx = tx.clone();
+            pool.execute(move || {
+                b.wait();
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..2 {
+            rx.recv_timeout(std::time::Duration::from_secs(10))
+                .expect("both workers alive after panicking jobs");
+        }
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn wait_idle_blocks_until_jobs_finish() {
+        let pool = ThreadPool::new(1);
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            thread::sleep(std::time::Duration::from_millis(50));
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_for_mut_disjoint_slabs() {
+        let mut slabs = vec![0u64; 23];
+        parallel_for_mut(&mut slabs, 4, |i, v| *v = i as u64 + 1);
+        for (i, v) in slabs.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1);
+        }
+        let mut empty: Vec<u64> = Vec::new();
+        parallel_for_mut(&mut empty, 4, |_, _| panic!("no calls"));
+        let mut one = [7u64];
+        parallel_for_mut(&mut one, 4, |i, v| *v += i as u64 + 1);
+        assert_eq!(one[0], 8);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Vectorized page-kernel parity: for every page codec, one
+//! `key_scores_page`/`value_accumulate_page` call over a multi-slot run
+//! must be bit-identical to scoring/accumulating the same slots one at
+//! a time (the scalar path — which for the polar codec the quantizer's
+//! own unit tests pin against `score_slot`/`accumulate_slot`). Runs
+//! cover full pages, partial pages and odd counts, and the fused
+//! softmax-max each batch call returns must equal the fold over the
+//! per-slot scores, bitwise. A second suite pins that head-parallel
+//! paged decode is a pure scheduling change: logits at every fan-out
+//! width match the single-threaded run bit for bit.
+
+use polarquant::kvcache::codec::{
+    page_codec_for, CodecScratch, KvLayout, PageCodec, PAGE_CODEC_METHODS,
+};
+use polarquant::kvcache::paged::{PagedConfig, PagedPool};
+use polarquant::model::config::ModelConfig;
+use polarquant::model::transformer::{PrefillOutput, Transformer};
+use polarquant::polar::quantizer::BlockScratch;
+use polarquant::util::rng::{Pcg64, Rng};
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_gaussian(&mut v);
+    v
+}
+
+/// Page geometry the serving pools use in the model tests: counts below
+/// exercise partial pages (1..3), one exactly-full page (4) and a run
+/// spanning page-plus (7) — odd counts included on purpose, they hit
+/// the unrolled kernels' remainder loops.
+const PAGE_TOKENS: usize = 4;
+const COUNTS: [usize; 5] = [1, 2, 3, PAGE_TOKENS, 7];
+
+#[test]
+fn page_kernels_bitwise_match_single_slot_calls() {
+    let d = 64;
+    let n = *COUNTS.iter().max().unwrap();
+    for method in PAGE_CODEC_METHODS {
+        let codec = page_codec_for(method, d)
+            .unwrap_or_else(|| panic!("{method} must be page-native at d={d}"));
+        let pb = codec.pair_bytes(d);
+        // Pair mid-slot with slack on both sides, like a real multi-head
+        // layout; surrounding garbage pins that kernels read only their
+        // own pair's bytes.
+        let offset = 5;
+        let stride = offset + pb + 3;
+        let mut buf = vec![0xA5u8; n * stride + 11];
+        for i in 0..n {
+            let k = gaussian(d, 100 + i as u64);
+            let v = gaussian(d, 200 + i as u64);
+            codec.encode_pair(&k, &v, &mut buf[i * stride + offset..][..pb]);
+        }
+        let q = gaussian(d, 9);
+
+        // Independent scratches: the batch side must not be able to lean
+        // on state the scalar side left behind, or vice versa.
+        let mut sc_batch = CodecScratch::default();
+        let mut sc_slot = CodecScratch::default();
+        codec.prepare_query(&q, &mut sc_batch);
+        codec.prepare_query(&q, &mut sc_slot);
+
+        for &count in &COUNTS {
+            // --- key scores: one batch call vs count single-slot calls.
+            let mut got = Vec::new();
+            let got_max =
+                codec.key_scores_page(&buf, stride, offset, count, &q, &mut sc_batch, &mut got);
+            let mut want = Vec::new();
+            let mut want_max = f32::NEG_INFINITY;
+            for i in 0..count {
+                let m = codec.key_scores_page(
+                    &buf[i * stride..],
+                    stride,
+                    offset,
+                    1,
+                    &q,
+                    &mut sc_slot,
+                    &mut want,
+                );
+                if m > want_max {
+                    want_max = m;
+                }
+            }
+            assert_eq!(got.len(), count, "{method} count={count}");
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                let msg = format!("{method} count={count} slot {i}: batch {g} vs scalar {w}");
+                assert_eq!(g.to_bits(), w.to_bits(), "{msg}");
+            }
+            let msg = format!("{method} count={count}: max {got_max} vs fold {want_max}");
+            assert_eq!(got_max.to_bits(), want_max.to_bits(), "{msg}");
+
+            // --- value accumulate: zero weights mixed in (the masked-slot
+            // skip must not perturb bits — adding 0.0 is not a bitwise
+            // no-op in IEEE 754).
+            let w: Vec<f32> = (0..count)
+                .map(|i| if i % 3 == 1 { 0.0 } else { 0.1 + 0.05 * i as f32 })
+                .collect();
+            let seed_acc: Vec<f32> = (0..d).map(|j| 0.25 + j as f32 * 1e-3).collect();
+            let mut acc_batch = seed_acc.clone();
+            let mut acc_slot = seed_acc;
+            let mut blk_batch = BlockScratch::default();
+            let mut blk_slot = BlockScratch::default();
+            codec.value_accumulate_page(
+                &buf,
+                stride,
+                offset,
+                count,
+                &w,
+                &mut blk_batch,
+                &mut acc_batch,
+            );
+            for i in 0..count {
+                codec.value_accumulate_page(
+                    &buf[i * stride..],
+                    stride,
+                    offset,
+                    1,
+                    &w[i..i + 1],
+                    &mut blk_slot,
+                    &mut acc_slot,
+                );
+            }
+            for (j, (a, b)) in acc_batch.iter().zip(&acc_slot).enumerate() {
+                let msg = format!("{method} count={count} acc[{j}]: batch {a} vs scalar {b}");
+                assert_eq!(a.to_bits(), b.to_bits(), "{msg}");
+            }
+        }
+
+        // --- empty run: NEG_INFINITY max, nothing scored or accumulated.
+        let mut got = Vec::new();
+        let m = codec.key_scores_page(&buf, stride, offset, 0, &q, &mut sc_batch, &mut got);
+        assert!(got.is_empty() && m == f32::NEG_INFINITY, "{method} empty run");
+        let mut acc = vec![0.5f32; d];
+        codec.value_accumulate_page(
+            &buf,
+            stride,
+            offset,
+            0,
+            &[],
+            &mut BlockScratch::default(),
+            &mut acc,
+        );
+        assert!(acc.iter().all(|&x| x == 0.5), "{method} empty accumulate");
+    }
+}
+
+/// Encode a prefill's K/V rows into a sequence's pool slots — the same
+/// write the engine's pooled prefill performs.
+fn encode_prompt(
+    pool: &mut PagedPool,
+    seq: u64,
+    codec: &dyn PageCodec,
+    layout: &KvLayout,
+    cfg: &ModelConfig,
+    pre: &PrefillOutput,
+    upto: usize,
+) {
+    let (hd, dh) = (cfg.n_heads * cfg.head_dim, cfg.head_dim);
+    for t in 0..upto {
+        let slot = pool.token_slot_mut(seq, t).expect("slot");
+        for (l, layer) in pre.kv.iter().enumerate() {
+            for h in 0..cfg.n_heads {
+                let off = layout.pair_offset(l, h);
+                codec.encode_pair(
+                    &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh],
+                    &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh],
+                    &mut slot[off..off + layout.pair_bytes],
+                );
+            }
+        }
+    }
+}
+
+fn sized_pool(layout: &KvLayout, tokens: usize) -> PagedPool {
+    PagedPool::new(PagedConfig {
+        page_tokens: PAGE_TOKENS,
+        token_bytes: layout.slot_bytes(),
+        num_pages: tokens.div_ceil(PAGE_TOKENS) + 8,
+    })
+}
+
+#[test]
+fn head_parallel_decode_bitwise_matches_single_threaded() {
+    // Head-parallel decode must be a pure scheduling change: every
+    // (layer, head) task owns its scratch slab and writes a disjoint
+    // output row, so logits at any fan-out width are bit-identical to
+    // the single-threaded run. Covered for the block-kernel polar codec
+    // and a per-slot codec (fp16); widths 2 and 4 exercise both uneven
+    // and exact head splits over the 4-head test model.
+    let cfg = ModelConfig::test();
+    let mut m = Transformer::synthetic(&cfg, 11);
+    let tokens: Vec<u32> = (0..44).map(|i| (i * 11 + 3) % 64).collect();
+    let split = 32; // past PARALLEL_MIN_TOKENS, so auto-sizing would fan out too
+    let pre = m.prefill(&tokens[..split]);
+
+    for method in ["polarquant-r-offline", "fp16"] {
+        let codec = page_codec_for(method, cfg.head_dim).expect("page codec");
+        let layout = KvLayout::new(&cfg, codec.as_ref());
+        let mut runs: Vec<Vec<Vec<f32>>> = Vec::new();
+        for &threads in &[1usize, 2, 4] {
+            m.set_decode_threads(Some(threads));
+            let mut pool = sized_pool(&layout, tokens.len() + PAGE_TOKENS);
+            pool.register(1, tokens.len() + PAGE_TOKENS).unwrap();
+            encode_prompt(&mut pool, 1, codec.as_ref(), &layout, &cfg, &pre, split);
+            let mut out = Vec::new();
+            for (i, &t) in tokens[split..].iter().enumerate() {
+                let logits =
+                    m.decode_step_paged(t, split + i, &mut pool, 1, codec.as_ref(), &layout);
+                assert!(logits.iter().all(|x| x.is_finite()), "{method} t{threads}");
+                out.push(logits.to_vec());
+            }
+            runs.push(out);
+        }
+        m.set_decode_threads(None);
+        for (w, run) in runs[1..].iter().enumerate() {
+            for (step, (a, b)) in runs[0].iter().zip(run).enumerate() {
+                for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                    let msg = format!("{method} width {} step {step} logit {j}", [2, 4][w]);
+                    assert_eq!(x.to_bits(), y.to_bits(), "{msg}");
+                }
+            }
+        }
+    }
+}
