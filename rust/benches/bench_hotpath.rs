@@ -158,8 +158,8 @@ fn main() {
     let mut best_ratio = 0.0f64;
     let (mut off_best, mut on_best) = (0.0f64, 0.0f64);
     for _ in 0..3 {
-        let off = serve_decode_tok_s(false);
-        let on = serve_decode_tok_s(true);
+        let off = serve_decode_tok_s(false, 0);
+        let on = serve_decode_tok_s(true, 0);
         off_best = off_best.max(off);
         on_best = on_best.max(on);
         best_ratio = best_ratio.max(on / off);
@@ -174,13 +174,41 @@ fn main() {
         best_ratio > 0.97,
         "tracing must cost < 3% decode throughput (best on/off ratio {best_ratio:.3})"
     );
+
+    // Quality-telemetry overhead gate (CI `quality-overhead` job): the
+    // same decode-heavy run with the 1-in-64 encode sampler on must keep
+    // at least 97% of the sampler-off throughput. The sampler's hot cost
+    // is one relaxed counter bump per encoded pair plus a try-lock copy
+    // for the winners; this gate keeps it honest. Best-of-3, same
+    // hiccup-tolerance reasoning as the tracing gate above.
+    let mut best_q_ratio = 0.0f64;
+    let (mut q_off_best, mut q_on_best) = (0.0f64, 0.0f64);
+    for _ in 0..3 {
+        let off = serve_decode_tok_s(true, 0);
+        let on = serve_decode_tok_s(true, 64);
+        q_off_best = q_off_best.max(off);
+        q_on_best = q_on_best.max(on);
+        best_q_ratio = best_q_ratio.max(on / off);
+    }
+    best_q_ratio = best_q_ratio.max(q_on_best / q_off_best);
+    println!(
+        "quality overhead: decode {:.0} tok/s (sampling off) vs {:.0} tok/s (1-in-64), \
+         best on/off ratio {:.3}",
+        q_off_best, q_on_best, best_q_ratio
+    );
+    assert!(
+        best_q_ratio > 0.97,
+        "quality sampling must cost < 3% decode throughput (best on/off ratio {best_q_ratio:.3})"
+    );
 }
 
 /// Decode throughput (generated tokens per wall-clock second) of a
 /// single-worker server under a small continuous batch, with tracing on
-/// or off. Ring pushes, per-tick drains and phase folding are all on the
-/// measured path when `trace_on`.
-fn serve_decode_tok_s(trace_on: bool) -> f64 {
+/// or off and quality sampling at `quality_every` (0 = off). Ring
+/// pushes, per-tick drains and phase folding are all on the measured
+/// path when `trace_on`; encode-pair sampling and per-tick quality
+/// drains when `quality_every > 0`.
+fn serve_decode_tok_s(trace_on: bool, quality_every: usize) -> f64 {
     let s = Server::start(ServerConfig {
         model: ModelConfig::test(),
         seed: 5,
@@ -189,6 +217,7 @@ fn serve_decode_tok_s(trace_on: bool) -> f64 {
         pool_tokens: 8192,
         max_active: 4,
         trace: trace_on,
+        quality_sample_every: quality_every,
         ..Default::default()
     });
     let gen_tokens = if common::smoke() { 12 } else { 48 };

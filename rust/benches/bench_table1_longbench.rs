@@ -4,7 +4,7 @@
 
 mod common;
 
-use polarquant::eval::{longbench, report};
+use polarquant::eval::{longbench, report, runtime_bench};
 use polarquant::model::config::ModelConfig;
 use polarquant::quant::registry::TABLE1_METHODS;
 
@@ -64,5 +64,36 @@ fn main() {
         } else {
             "CHECK"
         }
+    );
+
+    // Per-(layer, head) reconstruction error from the quality telemetry,
+    // tying the Table-1 quality scores back to the /metrics kv_quality_*
+    // families: the preconditioned codec should hold a near-analytic
+    // angle-code distribution on every cell, the raw codec should not.
+    let recon_len = cfg.prompt_len;
+    let pre = runtime_bench::recon_cells(&cfg.model, "polarquant-r-offline", recon_len, 7);
+    let mut rt = report::Table::new(
+        &format!("Reconstruction error by (layer, head) — polarquant-r-offline (n={recon_len})"),
+        &["layer", "head", "rmse", "cosine", "angle drift"],
+    );
+    for c in &pre {
+        rt.row(vec![
+            c.layer.to_string(),
+            c.head.to_string(),
+            report::f(c.rmse, 4),
+            report::f(c.cosine, 4),
+            report::f(c.angle_drift, 4),
+        ]);
+    }
+    rt.print();
+    let drift = |cells: &[runtime_bench::ReconCell]| {
+        cells.iter().map(|c| c.angle_drift).sum::<f64>() / cells.len().max(1) as f64
+    };
+    let raw = runtime_bench::recon_cells(&cfg.model, "polarquant", recon_len, 7);
+    println!(
+        "  preconditioning concentrates angle codes: drift {:.4} (Haar) vs {:.4} (none) → {}",
+        drift(&pre),
+        drift(&raw),
+        if drift(&pre) <= drift(&raw) { "PASS" } else { "CHECK" }
     );
 }

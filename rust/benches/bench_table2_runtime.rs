@@ -94,4 +94,32 @@ fn main() {
         exact.resident_kv_bytes as f64 / polar.resident_kv_bytes.max(1) as f64,
         if polar.resident_kv_bytes * 4 <= exact.resident_kv_bytes { "PASS" } else { "CHECK" }
     );
+
+    // Per-(layer, head) reconstruction error from the quality telemetry —
+    // the same kv_quality_* evidence /metrics exports, in table form.
+    let recon_len = common::scaled(48, 128, 512);
+    let cells = runtime_bench::recon_cells(&cfg.model, "polarquant-r-offline", recon_len, 7);
+    let mut rt = report::Table::new(
+        &format!("Reconstruction error by (layer, head) — polarquant-r-offline (n={recon_len})"),
+        &["layer", "head", "rmse", "cosine", "angle drift"],
+    );
+    for c in &cells {
+        rt.row(vec![
+            c.layer.to_string(),
+            c.head.to_string(),
+            report::f(c.rmse, 4),
+            report::f(c.cosine, 4),
+            report::f(c.angle_drift, 4),
+        ]);
+    }
+    rt.print();
+    if let Ok(p) = rt.save_csv("table2_recon_cells") {
+        println!("saved {p}");
+    }
+    let worst = cells.iter().map(|c| c.cosine).fold(f64::INFINITY, f64::min);
+    println!(
+        "  worst-cell reconstruction cosine: {:.4} → {}",
+        worst,
+        if worst > 0.8 { "PASS" } else { "CHECK" }
+    );
 }

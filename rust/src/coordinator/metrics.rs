@@ -2,6 +2,7 @@
 //! Thread-safe (shared by workers + server); snapshots encode to JSON for
 //! the `/stats` endpoint and the bench reporters.
 
+use crate::obs::quality::QualityStats;
 use crate::obs::{RequestTrace, TickTrace};
 use crate::util::json::Json;
 use crate::util::stats::Percentiles;
@@ -109,6 +110,9 @@ pub struct Metrics {
     lat: Mutex<Latencies>,
     phases: Mutex<PhaseLats>,
     workers: Mutex<Vec<WorkerLat>>,
+    /// Global quality-telemetry fold target: per-tick worker drains
+    /// merge their [`QualityStats`] deltas here; `/metrics` renders it.
+    quality: Mutex<QualityStats>,
     started: Instant,
 }
 
@@ -158,6 +162,7 @@ impl Metrics {
             lat: Mutex::new(Latencies::default()),
             phases: Mutex::new(PhaseLats::default()),
             workers: Mutex::new(Vec::new()),
+            quality: Mutex::new(QualityStats::default()),
             started: Instant::now(),
         }
     }
@@ -283,6 +288,20 @@ impl Metrics {
         w.queue.add(timing.queue_s);
     }
 
+    /// Fold one worker's drained quality-telemetry delta into the hub
+    /// (cells accumulate; per-worker sampling counters, being absolute,
+    /// overwrite).
+    pub fn fold_quality(&self, delta: QualityStats) {
+        self.quality.lock().unwrap().merge(&delta);
+    }
+
+    /// A clone of the global quality stats — what `/metrics` renders and
+    /// what the bench reporters read their per-(layer, head) error
+    /// tables from.
+    pub fn quality_stats(&self) -> QualityStats {
+        self.quality.lock().unwrap().clone()
+    }
+
     pub fn uptime_s(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }
@@ -300,6 +319,9 @@ impl Metrics {
                 ("p90", Json::num(p.pct(90.0))),
                 ("p99", Json::num(p.pct(99.0))),
                 ("mean", Json::num(p.mean())),
+                // Observed sample count, so consumers can weight
+                // percentiles from low-traffic workers correctly.
+                ("count", Json::num(p.len() as f64)),
             ])
         };
         let phases = {
@@ -647,6 +669,36 @@ mod tests {
         assert_eq!(get("true_evictions"), 1.0);
         assert_eq!(get("ram_bytes"), 8192.0);
         assert_eq!(get("disk_bytes"), 0.0);
+    }
+
+    #[test]
+    fn percentile_blocks_expose_observed_count() {
+        let m = Metrics::new();
+        for _ in 0..7 {
+            m.record_done(&Timing { ttft_s: 0.1, total_s: 0.2, ..Default::default() }, 3);
+        }
+        let parsed = crate::util::json::Json::parse(&m.snapshot().encode()).unwrap();
+        assert_eq!(parsed.path("ttft.count").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(parsed.path("total.count").unwrap().as_f64().unwrap(), 7.0);
+        // Empty reservoirs report count 0, not a missing key.
+        assert_eq!(parsed.path("phases.decode.count").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn quality_folds_accumulate_and_worker_counters_overwrite() {
+        use crate::obs::quality::{CellKey, QualityCell, QualityStats, WorkerQuality};
+        let m = Metrics::new();
+        let key = CellKey { worker: 0, codec: "exact", layer: 1, head: 2 };
+        let mut d = QualityStats::default();
+        d.cells.insert(key, QualityCell { samples: 3, mse_sum: 0.3, ..Default::default() });
+        d.workers.insert(0, WorkerQuality { observed: 64, dropped: 0 });
+        m.fold_quality(d.clone());
+        d.workers.insert(0, WorkerQuality { observed: 128, dropped: 1 });
+        m.fold_quality(d);
+        let q = m.quality_stats();
+        assert_eq!(q.cells[&key].samples, 6, "cells accumulate across folds");
+        assert_eq!(q.workers[&0].observed, 128, "absolute counters overwrite");
+        assert_eq!(q.workers[&0].dropped, 1);
     }
 
     #[test]

@@ -71,6 +71,10 @@ pub trait StepEngine {
         let (id, first) = self.prefill(req);
         (id, first, 0)
     }
+    /// Hand the engine a quality-telemetry probe: engines that encode KV
+    /// call [`crate::obs::QualityProbe::observe_pair`] for every encoded
+    /// pair. Default: no telemetry (mock engines encode nothing).
+    fn set_quality_probe(&mut self, _probe: Arc<crate::obs::QualityProbe>) {}
     /// One decode step; returns the next token.
     fn decode(&mut self, engine_id: u64, last_token: u32, pos: usize) -> u32;
     /// Cache footprint in bytes for accounting (0 if unknown).

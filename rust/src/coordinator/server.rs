@@ -8,18 +8,19 @@
 //!   ← {"id": 0, "tokens": [...], "prefill_s": ..., ...}
 //!   → {"cmd": "stats"}   ← metrics snapshot
 //!   → {"cmd": "trace"}   ← last N completed request traces
+//!   → {"cmd": "metrics"} ← Prometheus text exposition (ends with a blank line)
 //!   → {"cmd": "shutdown"}
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResponse, Tracked};
 use crate::coordinator::router::{RouteKind, Router};
-use crate::coordinator::scheduler::{AdmitGate, PendingPages, Scheduler};
+use crate::coordinator::scheduler::{AdmitGate, PendingPages, Scheduler, StepEngine};
 use crate::coordinator::worker::NativeWorker;
 use crate::kvcache::pools::{share_pools, PoolSet};
 use crate::kvcache::tier::{TierConfig, TierManager};
 use crate::obs::{chrome_request_events, chrome_tick_events, ChromeTraceWriter};
-use crate::obs::{TickTrace, TraceHub, WorkerTraces};
+use crate::obs::{QualityProbe, TickTrace, TraceHub, WorkerTraces};
 use crate::util::sync::lock_recover;
 use crate::prefix::PrefixDirectory;
 use crate::model::config::ModelConfig;
@@ -98,6 +99,13 @@ pub struct ServerConfig {
     /// `<trace_dir>/trace-worker<idx>.json` — loadable in Perfetto /
     /// chrome://tracing. The file is valid JSON after every append.
     pub trace_dir: Option<std::path::PathBuf>,
+    /// Quantization-quality telemetry: each worker samples 1 in N of
+    /// the (k, v) pairs it encodes (deterministically, seeded off
+    /// `seed` and the worker index), decodes the sampled slot back,
+    /// and folds reconstruction error plus angle-code/radius
+    /// histograms into the `/metrics` `kv_quality_*` families once per
+    /// scheduler tick. `0` disables sampling entirely.
+    pub quality_sample_every: usize,
 }
 
 impl Default for ServerConfig {
@@ -124,6 +132,7 @@ impl Default for ServerConfig {
             trace: true,
             trace_last: 256,
             trace_dir: None,
+            quality_sample_every: 64,
         }
     }
 }
@@ -154,6 +163,7 @@ struct WorkerShared {
     stopping: Arc<AtomicBool>,
     directory: Option<Arc<PrefixDirectory>>,
     trace: Option<Arc<WorkerTraces>>,
+    quality: Option<Arc<QualityProbe>>,
 }
 
 impl Server {
@@ -189,6 +199,14 @@ impl Server {
                 stopping: Arc::clone(&stopping),
                 directory: directory.clone(),
                 trace: traces.as_ref().map(|h| h.worker(w)),
+                quality: (cfg.quality_sample_every > 0).then(|| {
+                    Arc::new(QualityProbe::new(
+                        w,
+                        cfg.quality_sample_every as u64,
+                        cfg.seed,
+                        cfg.model.head_dim,
+                    ))
+                }),
             };
             handles.push(
                 thread::Builder::new()
@@ -220,6 +238,13 @@ impl Server {
             Some(h) => h.to_json(last),
             None => Json::from_pairs(vec![("error", Json::str("tracing disabled"))]),
         }
+    }
+
+    /// The `/metrics` payload: the full `/stats` surface plus the
+    /// `kv_quality_*` families, rendered in the Prometheus text
+    /// exposition format.
+    pub fn metrics_text(&self) -> String {
+        crate::obs::prom::render(&self.metrics.snapshot(), &self.metrics.quality_stats())
     }
 
     /// The shared prefix directory (present when prefix routing is on);
@@ -364,7 +389,7 @@ fn worker_loop(
     resp_tx: Sender<(usize, GenResponse)>,
     shared: WorkerShared,
 ) {
-    let WorkerShared { metrics, stopping, directory, trace } = shared;
+    let WorkerShared { metrics, stopping, directory, trace, quality } = shared;
     let weights = Weights::synthetic(&cfg.model, cfg.seed);
     let mut batcher = Batcher::new(cfg.batch.clone());
     // One pool set, two halves: the scheduler does admission/sharing on
@@ -428,6 +453,11 @@ fn worker_loop(
         });
         TraceSink { sink, seen: 0, writer }
     });
+    // Quality telemetry: the engine samples encoded pairs through this
+    // probe (prefill loop and model decode path both hold a handle).
+    if let Some(qp) = &quality {
+        engine.set_quality_probe(Arc::clone(qp));
+    }
     let mut reported_cached_pages = 0usize;
     // Per-worker resident-KV gauge contribution (bytes, coords).
     let mut reported_kv = (0u64, 0u64);
@@ -594,11 +624,23 @@ fn worker_loop(
             tr.flush(&metrics);
             tr.tick(&metrics, &tick);
         }
+
+        // Fold this tick's sampled quality accumulators into the global
+        // stats — same placement as the trace drain: per tick, after
+        // the decode round, never on the encode path itself.
+        if let Some(qp) = &quality {
+            metrics.fold_quality(qp.drain());
+        }
     }
     // Retirements between the last drain and Stop still reach the file
     // and the phase percentiles.
     if let Some(tr) = &mut tracer {
         tr.flush(&metrics);
+    }
+    // Samples staged between the last tick drain and Stop still reach
+    // `/metrics`.
+    if let Some(qp) = &quality {
+        metrics.fold_quality(qp.drain());
     }
 }
 
@@ -640,6 +682,14 @@ fn handle_conn(
                 Some("trace") => {
                     let last = j.get("last").and_then(|v| v.as_usize()).unwrap_or(32);
                     server.trace_json(last)
+                }
+                Some("metrics") => {
+                    // Prometheus text exposition, not a JSON line; the
+                    // trailing blank line tells line-oriented scrapers
+                    // where the payload ends.
+                    writer.write_all(server.metrics_text().as_bytes())?;
+                    writeln!(writer)?;
+                    continue;
                 }
                 Some("shutdown") => {
                     shutdown.store(true, Ordering::SeqCst);

@@ -23,6 +23,7 @@ use crate::model::config::ModelConfig;
 use crate::model::sampler::Sampler;
 use crate::model::transformer::{PastKv, PrefillOutput, Transformer};
 use crate::model::weights::Weights;
+use crate::obs::QualityProbe;
 use crate::util::sync::lock_recover;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -43,6 +44,9 @@ pub struct NativeWorker {
     /// Bench/ablation toggle: `false` forces every method onto the
     /// legacy heap path (no pool writes, no prefix reuse).
     use_pool_substrate: bool,
+    /// Quality-telemetry probe; prefill encode samples through it and
+    /// the model holds a clone for the decode path.
+    quality: Option<Arc<QualityProbe>>,
 }
 
 enum SessionKv {
@@ -85,6 +89,7 @@ impl NativeWorker {
             sessions: BTreeMap::new(),
             codecs: BTreeMap::new(),
             use_pool_substrate: true,
+            quality: None,
         }
     }
 
@@ -177,6 +182,16 @@ impl NativeWorker {
                         let k = &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh];
                         let v = &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh];
                         codec.encode_pair(k, v, &mut slot[off..off + layout.pair_bytes]);
+                        if let Some(qp) = &self.quality {
+                            qp.observe_pair(
+                                codec.as_ref(),
+                                l,
+                                h,
+                                k,
+                                v,
+                                &slot[off..off + layout.pair_bytes],
+                            );
+                        }
                     }
                 }
             }
@@ -265,6 +280,11 @@ impl NativeWorker {
 }
 
 impl StepEngine for NativeWorker {
+    fn set_quality_probe(&mut self, probe: Arc<QualityProbe>) {
+        self.model.set_quality_probe(Arc::clone(&probe));
+        self.quality = Some(probe);
+    }
+
     fn prefill(&mut self, req: &GenRequest) -> (u64, u32) {
         match self.codec_for(&req.method) {
             Some(codec) => {

@@ -7,10 +7,12 @@
 //! generation; online-codebook prefill ≫ offline), which comes from op
 //! counts and survives the hardware swap (DESIGN.md substitutions).
 
+use crate::kvcache::codec::page_codec_for;
 use crate::kvcache::pools::PoolSet;
 use crate::kvcache::sequence::{CacheConfig, SequenceCache};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::Transformer;
+use crate::obs::quality::{angle_drift, QualityProbe, QualityStats};
 use crate::util::rng::{Pcg64, Rng};
 use crate::util::timer::Timer;
 
@@ -114,6 +116,71 @@ pub fn run(methods: &[&str], cfg: &RuntimeBenchConfig) -> Vec<RuntimeRow> {
     methods.iter().map(|m| run_method(&mut model, m, cfg)).collect()
 }
 
+/// One per-(layer, head) reconstruction-error cell — the bench-table
+/// form of the `kv_quality_*` `/metrics` families.
+#[derive(Clone, Debug)]
+pub struct ReconCell {
+    pub layer: usize,
+    pub head: usize,
+    /// Root of the mean per-coordinate squared error (decode-the-slot-
+    /// back vs the pre-quantization pair).
+    pub rmse: f64,
+    pub cosine: f64,
+    /// [`angle_drift`]: KL of empirical angle-code usage from the
+    /// analytic distribution; ~0 for preconditioned polar codecs.
+    pub angle_drift: f64,
+}
+
+/// Reconstruction-error cells for one page-codec method: prefill a real
+/// model on a deterministic prompt, push every encoded (k, v) pair
+/// through a sample-everything [`QualityProbe`], and fold its drains —
+/// exactly what a serving worker feeds `/metrics`, at bench scale.
+/// Legacy (non-page-codec) methods return no cells.
+pub fn recon_cells(
+    model_cfg: &ModelConfig,
+    method: &str,
+    prompt_len: usize,
+    seed: u64,
+) -> Vec<ReconCell> {
+    let Some(codec) = page_codec_for(method, model_cfg.head_dim) else {
+        return Vec::new();
+    };
+    let mut model = Transformer::synthetic(model_cfg, 0);
+    let mut rng = Pcg64::new(seed);
+    let vocab = model_cfg.vocab;
+    let prompt: Vec<u32> = (0..prompt_len)
+        .map(|_| 16 + rng.next_below((vocab - 16) as u64) as u32)
+        .collect();
+    let pre = model.prefill(&prompt);
+    let probe = QualityProbe::new(0, 1, seed, model_cfg.head_dim);
+    let mut stats = QualityStats::default();
+    let (hd, dh) = (model_cfg.n_heads * model_cfg.head_dim, model_cfg.head_dim);
+    let mut buf = vec![0u8; codec.pair_bytes(dh)];
+    for t in 0..prompt_len {
+        for (l, layer) in pre.kv.iter().enumerate() {
+            for h in 0..model_cfg.n_heads {
+                let k = &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh];
+                let v = &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh];
+                codec.encode_pair(k, v, &mut buf);
+                probe.observe_pair(codec.as_ref(), l, h, k, v, &buf);
+            }
+        }
+        // The staging shard is tick-sized; fold it every token.
+        stats.merge(&probe.drain());
+    }
+    stats
+        .cells
+        .iter()
+        .map(|(key, cell)| ReconCell {
+            layer: key.layer as usize,
+            head: key.head as usize,
+            rmse: cell.mean_mse().sqrt(),
+            cosine: cell.mean_cosine(),
+            angle_drift: angle_drift(cell),
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +216,21 @@ mod tests {
             exact.resident_kv_bytes
         );
         assert!(snap.resident_kv_bytes > 0, "legacy methods report heap bytes");
+    }
+
+    #[test]
+    fn recon_cells_cover_every_layer_head_cell() {
+        let cfg = ModelConfig::test();
+        let cells = recon_cells(&cfg, "polarquant-r-offline", 48, 9);
+        assert_eq!(cells.len(), cfg.n_layers * cfg.n_heads, "one cell per (layer, head)");
+        for c in &cells {
+            assert!(c.cosine > 0.8, "layer {} head {} cosine {}", c.layer, c.head, c.cosine);
+            assert!(c.rmse >= 0.0 && c.angle_drift >= 0.0);
+        }
+        assert!(
+            recon_cells(&cfg, "snapkv", 16, 9).is_empty(),
+            "legacy methods have no page codec and no cells"
+        );
     }
 
     #[test]

@@ -89,6 +89,14 @@ pub trait PageCodec: Send + Sync {
     /// the prefix-reuse path feeds these to `Transformer::prefill_extend`.
     fn decode_pair(&self, src: &[u8], k_out: &mut [f32], v_out: &mut [f32]);
 
+    /// The polar quantizer behind this codec, when it has one — the
+    /// quality-telemetry drain uses it to histogram a sampled slot's
+    /// angle codes and radii against the analytic law. Default: `None`
+    /// (non-polar codecs still get reconstruction-error telemetry).
+    fn polar(&self) -> Option<&PolarQuantizer> {
+        None
+    }
+
     /// Prepare a query once per (step, head); default: nothing to do.
     fn prepare_query(&self, _q: &[f32], _scratch: &mut CodecScratch) {}
 
@@ -471,6 +479,10 @@ impl PageCodec for PolarPageCodec {
         let vb = self.vec_bytes;
         self.quantizer.decode_slot(&src[..vb], k_out);
         self.quantizer.decode_slot(&src[vb..2 * vb], v_out);
+    }
+
+    fn polar(&self) -> Option<&PolarQuantizer> {
+        Some(&self.quantizer)
     }
 
     fn prepare_query(&self, q: &[f32], scratch: &mut CodecScratch) {

@@ -130,6 +130,11 @@ fn cmd_serve(argv: Vec<String>) {
                 "trace-dir",
                 "",
                 "dump Chrome trace-event JSON per worker here (empty = off)",
+            )
+            .opt(
+                "quality-sample-every",
+                "64",
+                "sample 1 in N encoded KV pairs into /metrics quality gauges (0 = off)",
             ),
     );
     let spill = a.get("spill-dir");
@@ -152,6 +157,7 @@ fn cmd_serve(argv: Vec<String>) {
         trace: on_off(&a, "trace"),
         trace_last: a.get_usize("trace-last"),
         trace_dir: (!trace_dir.is_empty()).then(|| trace_dir.clone().into()),
+        quality_sample_every: a.get_usize("quality-sample-every"),
         ..Default::default()
     };
     let addr = a.get("addr");

@@ -14,9 +14,11 @@ use crate::model::attention::{attend_cached, AttnScratch};
 use crate::model::config::ModelConfig;
 use crate::model::rope::RopeTable;
 use crate::model::weights::Weights;
+use crate::obs::QualityProbe;
 use crate::quant::compressor::CompressedKv;
 use crate::util::threadpool::{default_threads, parallel_for_mut};
 use std::cell::RefCell;
+use std::sync::Arc;
 
 /// Per-layer prefill output: K/V rows plus the observation-window queries
 /// that score-based eviction methods need.
@@ -97,6 +99,9 @@ pub struct Transformer {
     decode_threads: Option<usize>,
     /// Model-side decode buffers, reused across paged decode steps.
     decode: DecodeScratch,
+    /// Quality-telemetry probe (serving only): sampled on every pair the
+    /// paged decode path encodes. `None` = no telemetry.
+    quality: Option<Arc<QualityProbe>>,
 }
 
 /// One head's decode slab: attention scratch, codec scratch (prepared
@@ -161,7 +166,14 @@ impl Transformer {
             head_scratch: Vec::new(),
             decode_threads: None,
             decode: DecodeScratch::default(),
+            quality: None,
         }
+    }
+
+    /// Attach a quality-telemetry probe: every (k, v) pair the paged
+    /// decode path encodes flows through its 1-in-N sampler.
+    pub fn set_quality_probe(&mut self, probe: Arc<QualityProbe>) {
+        self.quality = Some(probe);
     }
 
     /// Pin the head-parallel decode fan-out width: `Some(1)` forces
@@ -430,7 +442,8 @@ impl Transformer {
         // per-head slabs and the decode buffers are disjoint, which is
         // what lets every per-step buffer live on the struct (no per-token
         // allocation, no cfg clone) while the step mutates them all.
-        let Transformer { cfg, weights, rope, head_scratch, decode, decode_threads, .. } = self;
+        let Transformer { cfg, weights, rope, head_scratch, decode, decode_threads, quality, .. } =
+            self;
         let (d, h, dh, f) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff);
         let hd = h * dh;
         assert_eq!(layout.n_layers, cfg.n_layers);
@@ -505,11 +518,19 @@ impl Transformer {
             let slot = pool.token_slot_mut(seq, pos).expect("decode slot allocated");
             for head in 0..h {
                 let off = layout.pair_offset(l, head);
-                codec.encode_pair(
-                    &k[head * dh..(head + 1) * dh],
-                    &v[head * dh..(head + 1) * dh],
-                    &mut slot[off..off + layout.pair_bytes],
-                );
+                let kh = &k[head * dh..(head + 1) * dh];
+                let vh = &v[head * dh..(head + 1) * dh];
+                codec.encode_pair(kh, vh, &mut slot[off..off + layout.pair_bytes]);
+                if let Some(qp) = quality {
+                    qp.observe_pair(
+                        codec,
+                        l,
+                        head,
+                        kh,
+                        vh,
+                        &slot[off..off + layout.pair_bytes],
+                    );
+                }
             }
 
             matvec_t(weights.layer(l, "wo"), attn, hd, d, proj);

@@ -1,5 +1,12 @@
-//! Observability: per-request lifecycle spans, per-tick scheduler phase
-//! timings, bounded per-worker trace rings, and Chrome trace export.
+//! Observability, two pillars:
+//!
+//! 1. **Time** — per-request lifecycle spans, per-tick scheduler phase
+//!    timings, bounded per-worker trace rings, Chrome trace export.
+//! 2. **Quality** — sampled quantization-quality telemetry
+//!    ([`quality`]) and Prometheus text exposition ([`prom`], the
+//!    `/metrics` command): reconstruction error, angle/radius
+//!    histograms and the `angle_drift` concentration gauge per
+//!    (worker, codec, layer, head).
 //!
 //! Flow: the scheduler assembles a [`RequestTrace`] when a sequence
 //! retires and pushes it into its worker's [`WorkerTraces`] ring (try-lock,
@@ -9,15 +16,20 @@
 //! complete-events to the `--trace-dir` file. The [`TraceHub`] serves the
 //! `/trace` command from the same rings.
 //!
-//! Three export surfaces:
+//! Four export surfaces:
 //! * `/trace` — last N completed request traces as JSON (`TraceHub::to_json`).
 //! * `--trace-dir` — one Perfetto-loadable Chrome trace file per worker.
 //! * `/stats` — aggregated `phases.*` percentiles + per-worker breakdown.
+//! * `/metrics` — the whole `/stats` surface plus `kv_quality_*` in
+//!   Prometheus text format for fleet scrapers.
 
 pub mod export;
+pub mod prom;
+pub mod quality;
 pub mod ring;
 pub mod span;
 
 pub use export::{chrome_request_events, chrome_tick_events, ChromeTraceWriter};
+pub use quality::{angle_drift, QualityProbe, QualityStats};
 pub use ring::{TraceHub, WorkerTraces};
 pub use span::{build_spans, PhaseTimes, RequestTrace, Span, TickTrace};

@@ -1,0 +1,360 @@
+//! Prometheus text-format exposition: the `/metrics` server command.
+//!
+//! [`render`] flattens the `/stats` JSON snapshot into `pq_*` metric
+//! families — numeric leaves become gauges, percentile blocks become
+//! summaries (with `_sum`/`_count` from the reservoir's mean and
+//! observed count), the `workers[]` array becomes per-worker-labeled
+//! gauges — and appends the `kv_quality_*` families from the quality
+//! telemetry ([`QualityStats`]): sampling counters, per-(worker, codec,
+//! layer, head) reconstruction-error gauges, the `angle_drift`
+//! concentration gauge, and fixed-bucket histograms of angle codes and
+//! radii. Standard text format (`# HELP`/`# TYPE`, families contiguous,
+//! cumulative histogram buckets ending in `+Inf`) so any scraper can
+//! ingest it; ordering is deterministic (BTreeMap walks all the way
+//! down) so the golden test can parse byte-stable output.
+
+use crate::obs::quality::{angle_drift, CellKey, QualityStats, RADIUS_EDGES};
+use crate::util::json::Json;
+
+/// Render the full exposition: the `/stats` snapshot surface plus the
+/// quality-telemetry families.
+pub fn render(snapshot: &Json, quality: &QualityStats) -> String {
+    let mut out = String::new();
+    walk(snapshot, "", &mut out);
+    render_quality(quality, &mut out);
+    out
+}
+
+/// A number in Prometheus exposition syntax (JSON-style floats are
+/// valid; integral values print without a fraction for readability).
+fn fmt_num(x: f64) -> String {
+    if !x.is_finite() {
+        if x.is_nan() {
+            "NaN".to_string()
+        } else if x > 0.0 {
+            "+Inf".to_string()
+        } else {
+            "-Inf".to_string()
+        }
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Metric-name component from a JSON key: `[a-zA-Z0-9_]` passes,
+/// everything else (dots included) becomes `_`.
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect()
+}
+
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// A `/stats` object is a percentile block iff it carries the reservoir
+/// quantiles — rendered as one Prometheus summary instead of four
+/// unrelated gauges.
+fn is_summary(m: &std::collections::BTreeMap<String, Json>) -> bool {
+    ["p50", "p90", "p99", "mean"].iter().all(|k| m.contains_key(*k))
+}
+
+fn walk(v: &Json, path: &str, out: &mut String) {
+    match v {
+        Json::Num(x) => {
+            let name = format!("pq_{}", sanitize(path));
+            family(out, &name, "gauge", &format!("{path} from /stats."));
+            out.push_str(&format!("{name} {}\n", fmt_num(*x)));
+        }
+        Json::Obj(m) if is_summary(m) => {
+            let name = format!("pq_{}", sanitize(path));
+            family(out, &name, "summary", &format!("{path} percentiles from /stats."));
+            for (q, key) in [("0.5", "p50"), ("0.9", "p90"), ("0.99", "p99")] {
+                let val = m.get(key).and_then(|j| j.as_f64()).unwrap_or(0.0);
+                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {}\n", fmt_num(val)));
+            }
+            let mean = m.get("mean").and_then(|j| j.as_f64()).unwrap_or(0.0);
+            let count = m.get("count").and_then(|j| j.as_f64()).unwrap_or(0.0);
+            out.push_str(&format!("{name}_sum {}\n", fmt_num(mean * count)));
+            out.push_str(&format!("{name}_count {}\n", fmt_num(count)));
+        }
+        Json::Obj(m) => {
+            for (k, child) in m {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                walk(child, &sub, out);
+            }
+        }
+        Json::Arr(items) if path == "workers" => {
+            // One family per worker field, labeled by worker id — the
+            // per-worker label merge the multi-worker e2e asserts on.
+            let mut keys: Vec<&String> = Vec::new();
+            for it in items {
+                if let Json::Obj(m) = it {
+                    for k in m.keys() {
+                        if k != "id" && !keys.contains(&k) {
+                            keys.push(k);
+                        }
+                    }
+                }
+            }
+            keys.sort();
+            for key in keys {
+                let name = format!("pq_worker_{}", sanitize(key));
+                family(out, &name, "gauge", &format!("per-worker {key} from /stats workers[]."));
+                for it in items {
+                    let (Some(id), Some(val)) = (
+                        it.get("id").and_then(|j| j.as_f64()),
+                        it.get(key).and_then(|j| j.as_f64()),
+                    ) else {
+                        continue;
+                    };
+                    out.push_str(&format!(
+                        "{name}{{worker=\"{}\"}} {}\n",
+                        fmt_num(id),
+                        fmt_num(val)
+                    ));
+                }
+            }
+        }
+        // Strings, bools, nulls and non-worker arrays have no numeric
+        // exposition; /stats keeps them for the JSON surface.
+        _ => {}
+    }
+}
+
+fn cell_labels(k: &CellKey) -> String {
+    format!(
+        "worker=\"{}\",codec=\"{}\",layer=\"{}\",head=\"{}\"",
+        k.worker, k.codec, k.layer, k.head
+    )
+}
+
+fn render_quality(q: &QualityStats, out: &mut String) {
+    if !q.workers.is_empty() {
+        family(
+            out,
+            "kv_quality_observed_pairs_total",
+            "counter",
+            "Encoded (K,V) pairs the worker's quality probe saw (sampled 1-in-N).",
+        );
+        for (w, wq) in &q.workers {
+            out.push_str(&format!(
+                "kv_quality_observed_pairs_total{{worker=\"{w}\"}} {}\n",
+                wq.observed
+            ));
+        }
+        family(
+            out,
+            "kv_quality_dropped_samples_total",
+            "counter",
+            "Quality samples lost to shard contention or a full staging buffer.",
+        );
+        for (w, wq) in &q.workers {
+            out.push_str(&format!(
+                "kv_quality_dropped_samples_total{{worker=\"{w}\"}} {}\n",
+                wq.dropped
+            ));
+        }
+    }
+    if q.cells.is_empty() {
+        return;
+    }
+    family(
+        out,
+        "kv_quality_samples_total",
+        "counter",
+        "Quality samples folded per (worker, codec, layer, head) cell.",
+    );
+    for (k, c) in &q.cells {
+        out.push_str(&format!("kv_quality_samples_total{{{}}} {}\n", cell_labels(k), c.samples));
+    }
+    family(
+        out,
+        "kv_quality_recon_mse",
+        "gauge",
+        "Mean per-coordinate squared reconstruction error of sampled pairs (decode-the-slot-back vs pre-quantization).",
+    );
+    for (k, c) in &q.cells {
+        out.push_str(&format!(
+            "kv_quality_recon_mse{{{}}} {}\n",
+            cell_labels(k),
+            fmt_num(c.mean_mse())
+        ));
+    }
+    family(
+        out,
+        "kv_quality_recon_cosine",
+        "gauge",
+        "Mean cosine similarity of sampled pairs (decoded vs original K‖V).",
+    );
+    for (k, c) in &q.cells {
+        out.push_str(&format!(
+            "kv_quality_recon_cosine{{{}}} {}\n",
+            cell_labels(k),
+            fmt_num(c.mean_cosine())
+        ));
+    }
+    let polar_cells: Vec<(&CellKey, &crate::obs::quality::QualityCell)> =
+        q.cells.iter().filter(|(_, c)| !c.angle_counts.is_empty()).collect();
+    if polar_cells.is_empty() {
+        return;
+    }
+    family(
+        out,
+        "kv_quality_angle_drift",
+        "gauge",
+        "Mean per-level KL divergence of empirical angle codes from the analytic distribution (the paper's concentration claim; ~0 when preconditioned).",
+    );
+    for (k, c) in &polar_cells {
+        out.push_str(&format!(
+            "kv_quality_angle_drift{{{}}} {}\n",
+            cell_labels(k),
+            fmt_num(angle_drift(c))
+        ));
+    }
+    family(
+        out,
+        "kv_quality_angle_code",
+        "histogram",
+        "Angle-code usage per polar recursion level (bucket le = code index).",
+    );
+    for (k, c) in &polar_cells {
+        for (l, counts) in c.angle_counts.iter().enumerate() {
+            let labels = format!("{},level=\"{}\"", cell_labels(k), l + 1);
+            let mut cum = 0u64;
+            let mut weighted = 0u64;
+            for (i, &n) in counts.iter().enumerate() {
+                cum += n;
+                weighted += i as u64 * n;
+                out.push_str(&format!(
+                    "kv_quality_angle_code_bucket{{{labels},le=\"{i}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "kv_quality_angle_code_bucket{{{labels},le=\"+Inf\"}} {cum}\n"
+            ));
+            out.push_str(&format!("kv_quality_angle_code_sum{{{labels}}} {weighted}\n"));
+            out.push_str(&format!("kv_quality_angle_code_count{{{labels}}} {cum}\n"));
+        }
+    }
+    family(
+        out,
+        "kv_quality_radius",
+        "histogram",
+        "Sampled polar radii over fixed geometric buckets (2^-7 .. 2^8).",
+    );
+    for (k, c) in &polar_cells {
+        if c.radius_count == 0 {
+            continue;
+        }
+        let labels = cell_labels(k);
+        let mut cum = 0u64;
+        for (i, &n) in c.radius_bins.iter().enumerate() {
+            cum += n;
+            out.push_str(&format!(
+                "kv_quality_radius_bucket{{{labels},le=\"{}\"}} {cum}\n",
+                fmt_num(RADIUS_EDGES[i] as f64)
+            ));
+        }
+        cum += c.radius_overflow;
+        out.push_str(&format!("kv_quality_radius_bucket{{{labels},le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!("kv_quality_radius_sum{{{labels}}} {}\n", fmt_num(c.radius_sum)));
+        out.push_str(&format!("kv_quality_radius_count{{{labels}}} {}\n", c.radius_count));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::codec::page_codec_for;
+    use crate::obs::quality::QualityProbe;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn sample_quality() -> QualityStats {
+        let probe = QualityProbe::new(0, 1, 7, 16);
+        let codec = page_codec_for("polarquant-r-offline", 16).unwrap();
+        let mut buf = vec![0u8; codec.pair_bytes(16)];
+        let mut rng = Pcg64::new(3);
+        let mut k = vec![0.0f32; 16];
+        let mut v = vec![0.0f32; 16];
+        for layer in 0..2 {
+            for _ in 0..8 {
+                rng.fill_gaussian(&mut k);
+                rng.fill_gaussian(&mut v);
+                codec.encode_pair(&k, &v, &mut buf);
+                probe.observe_pair(codec.as_ref(), layer, 0, &k, &v, &buf);
+            }
+        }
+        probe.drain()
+    }
+
+    #[test]
+    fn snapshot_walk_emits_gauges_and_summaries() {
+        let snap = Json::parse(
+            r#"{"uptime_s": 1.5, "requests": {"in": 3, "done": 2},
+                "ttft": {"p50": 0.1, "p90": 0.2, "p99": 0.3, "mean": 0.15, "count": 4},
+                "workers": [{"id": 0, "requests_done": 2, "decode_rounds": 9}]}"#,
+        )
+        .unwrap();
+        let text = render(&snap, &QualityStats::default());
+        assert!(text.contains("# TYPE pq_uptime_s gauge\npq_uptime_s 1.5\n"));
+        assert!(text.contains("pq_requests_in 3\n"));
+        assert!(text.contains("# TYPE pq_ttft summary\n"));
+        assert!(text.contains("pq_ttft{quantile=\"0.5\"} 0.1\n"));
+        assert!(text.contains("pq_ttft_sum 0.6\n"), "sum = mean*count:\n{text}");
+        assert!(text.contains("pq_ttft_count 4\n"));
+        assert!(text.contains("pq_worker_requests_done{worker=\"0\"} 2\n"));
+        assert!(text.contains("pq_worker_decode_rounds{worker=\"0\"} 9\n"));
+    }
+
+    #[test]
+    fn quality_families_have_help_type_and_monotone_buckets() {
+        let stats = sample_quality();
+        let text = render(&Json::obj(), &stats);
+        for fam in [
+            "kv_quality_observed_pairs_total",
+            "kv_quality_dropped_samples_total",
+            "kv_quality_samples_total",
+            "kv_quality_recon_mse",
+            "kv_quality_recon_cosine",
+            "kv_quality_angle_drift",
+            "kv_quality_angle_code",
+            "kv_quality_radius",
+        ] {
+            assert!(text.contains(&format!("# HELP {fam} ")), "HELP for {fam}:\n{text}");
+            assert!(text.contains(&format!("# TYPE {fam} ")), "TYPE for {fam}");
+        }
+        // Cumulative buckets never decrease and end at the count.
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in text.lines() {
+            if line.starts_with("kv_quality_radius_bucket") && line.contains("layer=\"0\"") {
+                let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "monotone buckets: {line}");
+                last = v;
+                if line.contains("le=\"+Inf\"") {
+                    inf = Some(v);
+                }
+            }
+        }
+        let count: u64 = text
+            .lines()
+            .find(|l| l.starts_with("kv_quality_radius_count"))
+            .unwrap()
+            .rsplit(' ')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(inf, Some(count), "+Inf bucket equals _count");
+    }
+
+    #[test]
+    fn fmt_num_handles_edges() {
+        assert_eq!(fmt_num(5.0), "5");
+        assert_eq!(fmt_num(0.25), "0.25");
+        assert_eq!(fmt_num(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_num(f64::NAN), "NaN");
+    }
+}

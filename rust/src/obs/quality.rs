@@ -1,0 +1,579 @@
+//! Quantization-quality telemetry: the paper's concentration claim as a
+//! live gauge.
+//!
+//! PolarQuant's central empirical fact is that after random
+//! preconditioning the recursive polar angles follow a *closed-form*
+//! distribution ([`AngleDistribution`]) — which makes encode quality
+//! checkable online, not just benchmarkable offline. Each worker owns a
+//! [`QualityProbe`]: the encode hot paths (prefill slot encoding, the
+//! paged decode append) call [`QualityProbe::observe_pair`] for every
+//! encoded (K, V) pair, and a deterministic 1-in-N sampler (seeded
+//! [`Pcg64`], per-worker phase so a fleet doesn't sample in lock-step)
+//! stages the sampled pair — pre-quantization f32s plus the encoded
+//! slot bytes — into a small sharded buffer.
+//!
+//! Hot-path discipline mirrors the trace ring: one atomic counter bump
+//! per pair, a `try_lock` push for the 1-in-N winners with a
+//! `dropped_samples` counter when the drain holds the lock, and no
+//! allocation anywhere on the recording path (slots are preallocated at
+//! probe construction). The expensive part — decoding the slot back,
+//! cosine/MSE against the original pair, histogramming angle codes and
+//! radii — happens in [`QualityProbe::drain`], called once per
+//! scheduler tick off the decode path.
+//!
+//! [`QualityStats`] is the fold target: per (worker, codec, layer,
+//! head) cells of reconstruction error plus per-level angle-code
+//! histograms, and [`angle_drift`] compares each cell's empirical code
+//! usage against the analytic bin masses ([`analytic_code_masses`]) as
+//! a mean per-level KL divergence. A preconditioned encode sits near
+//! zero; skipping the rotation trips the gauge (see `eval/angles.rs`).
+
+use crate::kvcache::codec::{page_codec_for, PageCodec, PAGE_CODEC_METHODS};
+use crate::polar::codebook::Codebook;
+use crate::polar::distribution::AngleDistribution;
+use crate::util::rng::{Pcg64, Rng};
+use crate::util::sync::lock_recover;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Staged samples per shard between drains. A tick drains every slot,
+/// so this bounds telemetry loss under bursty encode traffic, not
+/// steady-state coverage; overflowing increments `dropped_samples`.
+const SHARD_SLOTS: usize = 64;
+
+/// Geometric radius-histogram bucket edges (upper bounds, inclusive):
+/// `2^-7 … 2^8`. Radii above the last edge land in the overflow bucket
+/// (`+Inf` in the Prometheus rendering). Fixed buckets keep scrape
+/// deltas meaningful across processes.
+pub const RADIUS_EDGES: [f32; 16] = [
+    0.0078125, 0.015625, 0.03125, 0.0625, 0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
+    128.0, 256.0,
+];
+
+/// One staged sample: the pre-quantization pair and the slot bytes the
+/// codec produced for it. All buffers are preallocated; staging only
+/// copies.
+struct SampleSlot {
+    /// Index into [`PAGE_CODEC_METHODS`].
+    codec: u8,
+    layer: u16,
+    head: u16,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pair: Vec<u8>,
+    pair_len: usize,
+}
+
+/// The shard-local staging buffer behind the probe's `try_lock`.
+struct SampleShard {
+    slots: Vec<SampleSlot>,
+    used: usize,
+    /// Cumulative samples lost to a full shard (folded into the
+    /// `dropped_samples` counter at drain).
+    overflow: u64,
+}
+
+impl SampleShard {
+    /// Stage one sampled pair. Hot-path callee of
+    /// [`QualityProbe::observe_pair`]: index loops only, no allocation,
+    /// no panic paths beyond checked copies.
+    fn stage_sample(&mut self, name: &str, layer: usize, head: usize, k: &[f32], v: &[f32], pair: &[u8]) {
+        if self.used == self.slots.len() {
+            self.overflow += 1;
+            return;
+        }
+        let mut idx = usize::MAX;
+        for i in 0..PAGE_CODEC_METHODS.len() {
+            if PAGE_CODEC_METHODS[i] == name {
+                idx = i;
+                break;
+            }
+        }
+        let slot = &mut self.slots[self.used];
+        if idx == usize::MAX
+            || k.len() != slot.k.len()
+            || v.len() != slot.v.len()
+            || pair.len() > slot.pair.len()
+        {
+            self.overflow += 1;
+            return;
+        }
+        slot.codec = idx as u8;
+        slot.layer = layer as u16;
+        slot.head = head as u16;
+        slot.k.copy_from_slice(k);
+        slot.v.copy_from_slice(v);
+        slot.pair[..pair.len()].copy_from_slice(pair);
+        slot.pair_len = pair.len();
+        self.used += 1;
+    }
+}
+
+/// Per-worker quality probe: deterministic 1-in-N sampling on the
+/// encode hot path, periodic fold into [`QualityStats`] off it.
+pub struct QualityProbe {
+    worker: usize,
+    /// Sample every `every`-th encoded pair (0 = probe disabled; the
+    /// hook returns after one branch).
+    every: u64,
+    /// Which residue class of the pair counter samples — seeded per
+    /// worker so replicas observe different token positions.
+    phase: u64,
+    counter: AtomicU64,
+    dropped: AtomicU64,
+    shard: Mutex<SampleShard>,
+    /// Probe-owned codec replicas (index-aligned with
+    /// [`PAGE_CODEC_METHODS`]) used by the drain to decode staged slots
+    /// back; the hot hook only ever reads the live codec's name.
+    codecs: Vec<Option<Arc<dyn PageCodec>>>,
+}
+
+impl QualityProbe {
+    pub fn new(worker: usize, every: u64, seed: u64, head_dim: usize) -> Self {
+        let phase = if every > 0 {
+            Pcg64::new(seed).split(worker as u64).next_below(every)
+        } else {
+            0
+        };
+        let codecs: Vec<Option<Arc<dyn PageCodec>>> = PAGE_CODEC_METHODS
+            .iter()
+            .map(|m| page_codec_for(m, head_dim))
+            .collect();
+        let max_pair = codecs
+            .iter()
+            .flatten()
+            .map(|c| c.pair_bytes(head_dim))
+            .max()
+            .unwrap_or(0);
+        let slots = (0..SHARD_SLOTS)
+            .map(|_| SampleSlot {
+                codec: 0,
+                layer: 0,
+                head: 0,
+                k: vec![0.0; head_dim],
+                v: vec![0.0; head_dim],
+                pair: vec![0u8; max_pair],
+                pair_len: 0,
+            })
+            .collect();
+        Self {
+            worker,
+            every,
+            phase,
+            counter: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            shard: Mutex::new(SampleShard { slots, used: 0, overflow: 0 }),
+            codecs,
+        }
+    }
+
+    /// Hot-path recording hook: one relaxed counter bump per encoded
+    /// pair; the 1-in-N winners stage a copy behind a `try_lock` (a
+    /// held lock means the drain is running — count the loss, never
+    /// wait).
+    pub fn observe_pair(
+        &self,
+        codec: &dyn PageCodec,
+        layer: usize,
+        head: usize,
+        k: &[f32],
+        v: &[f32],
+        pair: &[u8],
+    ) {
+        if self.every == 0 {
+            return;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        if n % self.every != self.phase {
+            return;
+        }
+        match self.shard.try_lock() {
+            Ok(mut shard) => shard.stage_sample(codec.name(), layer, head, k, v, pair),
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Fold every staged sample into a fresh [`QualityStats`] delta and
+    /// reset the shard. Cold path (once per scheduler tick): this is
+    /// where slots are decoded back and histogrammed.
+    pub fn drain(&self) -> QualityStats {
+        let mut stats = QualityStats::default();
+        let mut shard = lock_recover(&self.shard);
+        let head_dim = shard.slots.first().map(|s| s.k.len()).unwrap_or(0);
+        let mut kbuf = vec![0.0f32; head_dim];
+        let mut vbuf = vec![0.0f32; head_dim];
+        let mut codes = vec![0u16; head_dim.max(1)];
+        let mut radii = vec![0.0f32; head_dim.max(1)];
+        for i in 0..shard.used {
+            let s = &shard.slots[i];
+            let Some(codec) = self.codecs.get(s.codec as usize).and_then(|c| c.as_ref()) else {
+                continue;
+            };
+            codec.decode_pair(&s.pair[..s.pair_len], &mut kbuf, &mut vbuf);
+            let (mut se, mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for (orig, dec) in s.k.iter().zip(&kbuf).chain(s.v.iter().zip(&vbuf)) {
+                let (a, b) = (*orig as f64, *dec as f64);
+                se += (a - b) * (a - b);
+                dot += a * b;
+                na += a * a;
+                nb += b * b;
+            }
+            let n_coords = (2 * head_dim).max(1) as f64;
+            let cos = if na > 0.0 && nb > 0.0 { dot / (na.sqrt() * nb.sqrt()) } else { 1.0 };
+            let key = CellKey {
+                worker: self.worker as u16,
+                codec: PAGE_CODEC_METHODS[s.codec as usize],
+                layer: s.layer,
+                head: s.head,
+            };
+            let cell = stats.cells.entry(key).or_default();
+            cell.samples += 1;
+            cell.mse_sum += se / n_coords;
+            cell.cos_sum += cos;
+            if let Some(pq) = codec.polar() {
+                if cell.angle_counts.is_empty() {
+                    cell.angle_counts = (0..pq.cfg.levels)
+                        .map(|l| vec![0u64; 1usize << pq.cfg.level_bits[l]])
+                        .collect();
+                }
+                let vb = pq.vec_slot_bytes();
+                // Key half then value half: each is one encoded vector.
+                for half in [&s.pair[..vb], &s.pair[vb..2 * vb]] {
+                    for l in 0..pq.cfg.levels {
+                        let n = pq.slot_level_codes(half, l, &mut codes);
+                        for &c in &codes[..n] {
+                            let counts = &mut cell.angle_counts[l];
+                            if (c as usize) < counts.len() {
+                                counts[c as usize] += 1;
+                            }
+                        }
+                    }
+                    let nr = pq.slot_radii(half, &mut radii);
+                    for &r in &radii[..nr] {
+                        let mut b = 0;
+                        while b < RADIUS_EDGES.len() && r > RADIUS_EDGES[b] {
+                            b += 1;
+                        }
+                        if b < RADIUS_EDGES.len() {
+                            cell.radius_bins[b] += 1;
+                        } else {
+                            cell.radius_overflow += 1;
+                        }
+                        cell.radius_sum += r as f64;
+                        cell.radius_count += 1;
+                    }
+                }
+            }
+        }
+        shard.used = 0;
+        // Worker counters are absolute (monotone), not deltas: merges
+        // overwrite, so a drain that staged nothing still refreshes them.
+        stats.workers.insert(
+            self.worker as u16,
+            WorkerQuality {
+                observed: self.counter.load(Ordering::Relaxed),
+                dropped: self.dropped.load(Ordering::Relaxed) + shard.overflow,
+            },
+        );
+        stats
+    }
+}
+
+/// One telemetry cell: a (worker, codec, layer, head) tuple. `codec`
+/// is interned to [`PAGE_CODEC_METHODS`] so keys stay `Copy`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey {
+    pub worker: u16,
+    pub codec: &'static str,
+    pub layer: u16,
+    pub head: u16,
+}
+
+/// Accumulated quality evidence for one cell.
+#[derive(Clone, Debug, Default)]
+pub struct QualityCell {
+    pub samples: u64,
+    /// Sum of per-sample mean squared error over the 2·d coords (K‖V).
+    pub mse_sum: f64,
+    /// Sum of per-sample cosine similarity (original vs decoded K‖V).
+    pub cos_sum: f64,
+    /// Per-level angle-code histograms, `levels × 2^bits`; empty for
+    /// codecs without a polar quantizer (exact, fp16, kivi).
+    pub angle_counts: Vec<Vec<u64>>,
+    /// Radius histogram over [`RADIUS_EDGES`] …
+    pub radius_bins: [u64; 16],
+    /// … plus the overflow bucket above the last edge.
+    pub radius_overflow: u64,
+    pub radius_sum: f64,
+    pub radius_count: u64,
+}
+
+impl QualityCell {
+    pub fn mean_mse(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.mse_sum / self.samples as f64 }
+    }
+
+    pub fn mean_cosine(&self) -> f64 {
+        if self.samples == 0 { 1.0 } else { self.cos_sum / self.samples as f64 }
+    }
+
+    fn add(&mut self, other: &QualityCell) {
+        self.samples += other.samples;
+        self.mse_sum += other.mse_sum;
+        self.cos_sum += other.cos_sum;
+        if self.angle_counts.is_empty() {
+            self.angle_counts = other.angle_counts.clone();
+        } else if self.angle_counts.len() == other.angle_counts.len() {
+            for (a, b) in self.angle_counts.iter_mut().zip(&other.angle_counts) {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += *y;
+                }
+            }
+        }
+        for (x, y) in self.radius_bins.iter_mut().zip(&other.radius_bins) {
+            *x += *y;
+        }
+        self.radius_overflow += other.radius_overflow;
+        self.radius_sum += other.radius_sum;
+        self.radius_count += other.radius_count;
+    }
+}
+
+/// Per-worker sampling bookkeeping (absolute counters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerQuality {
+    /// Encoded pairs the probe saw (sampled ≈ observed / every).
+    pub observed: u64,
+    /// Samples lost to a contended shard or a full staging buffer.
+    pub dropped: u64,
+}
+
+/// The global fold target: what `/metrics` renders and what the future
+/// adaptive-precision codec will consume as its per-(layer, head)
+/// error table.
+#[derive(Clone, Debug, Default)]
+pub struct QualityStats {
+    pub cells: BTreeMap<CellKey, QualityCell>,
+    pub workers: BTreeMap<u16, WorkerQuality>,
+}
+
+impl QualityStats {
+    /// Fold a drain delta in: cells accumulate, worker counters (being
+    /// absolute) overwrite.
+    pub fn merge(&mut self, delta: &QualityStats) {
+        for (k, c) in &delta.cells {
+            self.cells.entry(*k).or_default().add(c);
+        }
+        for (w, q) in &delta.workers {
+            self.workers.insert(*w, *q);
+        }
+    }
+
+    pub fn total_samples(&self) -> u64 {
+        self.cells.values().map(|c| c.samples).sum()
+    }
+}
+
+/// Analytic probability mass of each of the `k` codebook bins at polar
+/// recursion `level` (1-based, matching [`AngleDistribution::for_level`]):
+/// the integral of the level's angle pdf over each Lloyd–Max decision
+/// interval. Level 1 is circular-uniform, so every bin carries exactly
+/// `1/k`; deeper levels integrate the sin-power density between the
+/// codebook boundaries.
+pub fn analytic_code_masses(level: usize, k: usize) -> Vec<f64> {
+    assert!(k > 0 && k.is_power_of_two(), "codebook size {k} must be a power of two");
+    let bits = k.trailing_zeros() as u8;
+    let cb = Codebook::lloyd_max_analytic(level, bits);
+    if cb.circular {
+        return vec![1.0 / k as f64; k];
+    }
+    let dist = AngleDistribution::for_level(level);
+    let mut m = Vec::with_capacity(k);
+    for i in 0..k {
+        let a = if i == 0 { cb.lo as f64 } else { cb.boundaries[i - 1] as f64 };
+        let b = if i == k - 1 { cb.hi as f64 } else { cb.boundaries[i] as f64 };
+        m.push(dist.mass(a, b).max(0.0));
+    }
+    let total: f64 = m.iter().sum();
+    if total > 0.0 {
+        for x in &mut m {
+            *x /= total;
+        }
+    }
+    m
+}
+
+/// The concentration claim as a number: mean per-level KL divergence of
+/// the cell's empirical angle-code distribution (with a +1 pseudocount
+/// so unused bins don't blow up) from the analytic bin masses. Near 0
+/// for a preconditioned encode; an un-preconditioned encode — whose
+/// angles keep the raw data's anisotropy — scores visibly higher.
+pub fn angle_drift(cell: &QualityCell) -> f64 {
+    let mut total = 0.0;
+    let mut levels = 0usize;
+    for (l, counts) in cell.angle_counts.iter().enumerate() {
+        let k = counts.len();
+        if k == 0 {
+            continue;
+        }
+        let n: u64 = counts.iter().sum();
+        if n == 0 {
+            continue;
+        }
+        let masses = analytic_code_masses(l + 1, k);
+        let denom = (n + k as u64) as f64;
+        let mut kl = 0.0;
+        for (i, &c) in counts.iter().enumerate() {
+            let p = (c as f64 + 1.0) / denom;
+            let q = masses[i].max(1e-12);
+            kl += p * (p / q).ln();
+        }
+        total += kl.max(0.0);
+        levels += 1;
+    }
+    if levels == 0 { 0.0 } else { total / levels as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::codec::page_codec_for;
+    use crate::util::rng::{Pcg64, Rng};
+
+    const D: usize = 16;
+
+    fn gaussian_pair(seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let mut k = vec![0.0f32; D];
+        let mut v = vec![0.0f32; D];
+        rng.fill_gaussian(&mut k);
+        rng.fill_gaussian(&mut v);
+        (k, v)
+    }
+
+    fn feed(probe: &QualityProbe, method: &str, pairs: usize, layer: usize, head: usize) {
+        let codec = page_codec_for(method, D).unwrap();
+        let mut buf = vec![0u8; codec.pair_bytes(D)];
+        for i in 0..pairs {
+            let (k, v) = gaussian_pair(1000 + i as u64);
+            codec.encode_pair(&k, &v, &mut buf);
+            probe.observe_pair(codec.as_ref(), layer, head, &k, &v, &buf);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_one_in_n() {
+        let probe = QualityProbe::new(0, 8, 42, D);
+        feed(&probe, "polarquant-r-offline", 64, 0, 0);
+        let stats = probe.drain();
+        assert_eq!(stats.total_samples(), 8, "exactly 1-in-8 of 64 pairs");
+        let wq = stats.workers[&0];
+        assert_eq!(wq.observed, 64);
+        assert_eq!(wq.dropped, 0);
+        // Distinct workers sample distinct phases (with this seed).
+        let p2 = QualityProbe::new(1, 8, 42, D);
+        assert_ne!(probe.phase, p2.phase);
+    }
+
+    #[test]
+    fn disabled_probe_records_nothing() {
+        let probe = QualityProbe::new(0, 0, 42, D);
+        feed(&probe, "polarquant-r-offline", 32, 0, 0);
+        let stats = probe.drain();
+        assert_eq!(stats.total_samples(), 0);
+        assert_eq!(stats.workers[&0].observed, 0);
+    }
+
+    #[test]
+    fn drain_reconstruction_error_tracks_codec_fidelity() {
+        // every=1: every pair sampled. The lossless f32 codec must
+        // reconstruct exactly; the polar codec approximately.
+        let pe = QualityProbe::new(0, 1, 1, D);
+        feed(&pe, "exact", 16, 2, 3);
+        let se = pe.drain();
+        let exact = &se.cells[&CellKey { worker: 0, codec: "exact", layer: 2, head: 3 }];
+        assert_eq!(exact.samples, 16);
+        assert!(exact.mean_mse() < 1e-12, "exact mse {}", exact.mean_mse());
+        assert!(exact.mean_cosine() > 1.0 - 1e-9);
+        assert!(exact.angle_counts.is_empty(), "no polar histograms for exact");
+
+        let pp = QualityProbe::new(0, 1, 1, D);
+        feed(&pp, "polarquant-r-offline", 16, 2, 3);
+        let sp = pp.drain();
+        let polar =
+            &sp.cells[&CellKey { worker: 0, codec: "polarquant-r-offline", layer: 2, head: 3 }];
+        assert_eq!(polar.samples, 16);
+        assert!(polar.mean_mse() > exact.mean_mse());
+        assert!(polar.mean_cosine() > 0.9, "cos {}", polar.mean_cosine());
+        assert!(!polar.angle_counts.is_empty());
+        let total_codes: u64 = polar.angle_counts.iter().flatten().sum();
+        // 16 samples × 2 vectors × (d/2 + d/4 + … ) codes each.
+        assert!(total_codes > 0);
+        assert!(polar.radius_count > 0);
+        let binned: u64 = polar.radius_bins.iter().sum::<u64>() + polar.radius_overflow;
+        assert_eq!(binned, polar.radius_count);
+    }
+
+    #[test]
+    fn shard_overflow_counts_as_dropped() {
+        let probe = QualityProbe::new(0, 1, 1, D);
+        feed(&probe, "polarquant-r-offline", SHARD_SLOTS + 10, 0, 0);
+        let stats = probe.drain();
+        assert_eq!(stats.total_samples() as usize, SHARD_SLOTS);
+        assert_eq!(stats.workers[&0].dropped, 10);
+        // Drain resets the staging buffer; counters stay absolute.
+        feed(&probe, "polarquant-r-offline", 4, 0, 0);
+        let s2 = probe.drain();
+        assert_eq!(s2.total_samples(), 4);
+        assert_eq!(s2.workers[&0].observed as usize, SHARD_SLOTS + 14);
+    }
+
+    #[test]
+    fn merge_accumulates_cells_and_overwrites_workers() {
+        let probe = QualityProbe::new(0, 1, 1, D);
+        let mut global = QualityStats::default();
+        feed(&probe, "polarquant-r-offline", 8, 1, 1);
+        global.merge(&probe.drain());
+        feed(&probe, "polarquant-r-offline", 8, 1, 1);
+        global.merge(&probe.drain());
+        let cell = &global.cells
+            [&CellKey { worker: 0, codec: "polarquant-r-offline", layer: 1, head: 1 }];
+        assert_eq!(cell.samples, 16, "cells accumulate across drains");
+        assert_eq!(global.workers[&0].observed, 16, "worker counters stay absolute");
+    }
+
+    #[test]
+    fn analytic_masses_sum_to_one_and_level1_is_uniform() {
+        for (level, k) in [(1usize, 16usize), (2, 16), (3, 8), (4, 8)] {
+            let m = analytic_code_masses(level, k);
+            assert_eq!(m.len(), k);
+            let s: f64 = m.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "level {level} masses sum {s}");
+            assert!(m.iter().all(|&x| x >= 0.0));
+        }
+        let u = analytic_code_masses(1, 16);
+        assert!(u.iter().all(|&x| (x - 1.0 / 16.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn angle_drift_near_zero_for_matching_distribution() {
+        // Build a synthetic cell whose counts are exactly proportional
+        // to the analytic masses: drift must be ~0 (pseudocount noise).
+        let k = 16;
+        let mut cell = QualityCell::default();
+        let masses = analytic_code_masses(2, k);
+        cell.angle_counts =
+            vec![masses.iter().map(|&m| (m * 1e6).round() as u64).collect::<Vec<u64>>()];
+        let d0 = angle_drift(&cell);
+        assert!(d0 < 1e-3, "matched distribution drift {d0}");
+        // All mass in one bin: drift is decisively larger.
+        let mut spiked = vec![0u64; k];
+        spiked[0] = 1_000_000;
+        cell.angle_counts = vec![spiked];
+        let d1 = angle_drift(&cell);
+        assert!(d1 > 10.0 * (d0 + 1e-6), "spiked drift {d1} vs matched {d0}");
+    }
+}

@@ -304,6 +304,34 @@ impl PolarQuantizer {
         (nr, &slot[2 * nr..])
     }
 
+    /// Telemetry accessor: unpack level `level`'s (0-based) angle codes
+    /// from a slot written by [`encode_into`](Self::encode_into) into
+    /// `out`; returns the code count (`dim >> (level+1)`). Cold path —
+    /// the quality drain histograms sampled slots with this.
+    pub fn slot_level_codes(&self, slot: &[u8], level: usize, out: &mut [u16]) -> usize {
+        let nr = self.cfg.num_radii();
+        let count = self.cfg.dim >> (level + 1);
+        self.read_level_codes_at(
+            &slot[2 * nr..],
+            level,
+            self.cfg.level_bits[level],
+            0,
+            count,
+            out,
+        );
+        count
+    }
+
+    /// Telemetry accessor: decode the slot's little-endian fp16 radii to
+    /// f32 into `out`; returns the radius count (`num_radii`).
+    pub fn slot_radii(&self, slot: &[u8], out: &mut [f32]) -> usize {
+        let nr = self.cfg.num_radii();
+        for j in 0..nr {
+            out[j] = f16_bits_to_f32(u16::from_le_bytes([slot[2 * j], slot[2 * j + 1]]));
+        }
+        nr
+    }
+
     /// Decode into the *preconditioned* basis (no Rᵀ). Hot path for fused
     /// attention: dot this against R·q.
     pub fn decode_preconditioned(&self, q: &QuantizedVector, out: &mut [f32]) {

@@ -1,0 +1,398 @@
+//! Golden-grammar tests for the `/metrics` Prometheus text exposition:
+//! every line must parse against the text-format grammar (metric names,
+//! label pairs, values), every family must carry `# HELP`/`# TYPE` and
+//! keep its samples contiguous, histograms must have monotone cumulative
+//! buckets ending at `+Inf` with a matching `_count`, and summaries must
+//! carry `_sum`/`_count`. Plus the multi-worker e2e: per-worker quality
+//! labels from every replica merge into one exposition without series
+//! collisions, and the TCP `{"cmd": "metrics"}` command round-trips the
+//! same payload terminated by a blank line.
+
+use polarquant::coordinator::batcher::BatchPolicy;
+use polarquant::coordinator::request::GenRequest;
+use polarquant::coordinator::server::{run_tcp, Server, ServerConfig};
+use polarquant::model::config::ModelConfig;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+fn server(workers: usize, quality_every: usize, round_robin: bool) -> Server {
+    Server::start(ServerConfig {
+        model: ModelConfig::test(),
+        seed: 2,
+        workers,
+        batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        pool_tokens: 1 << 14,
+        max_active: 4,
+        prefix_cache: true,
+        prefix_routing: !round_robin,
+        round_robin,
+        quality_sample_every: quality_every,
+        ..Default::default()
+    })
+}
+
+/// Worker count for the multi-worker merge test; the CI job pins it via
+/// `PQ_E2E_WORKERS` (same contract as `serving_e2e.rs`).
+fn e2e_workers() -> usize {
+    std::env::var("PQ_E2E_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(2)
+}
+
+// ---------------------------------------------------------------------------
+// The grammar checker: a line-by-line parser of the text exposition.
+// ---------------------------------------------------------------------------
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+type Labels = BTreeMap<String, String>;
+
+/// One parsed sample line: `name{labels} value` or `name value`.
+fn parse_sample(line: &str) -> (String, Labels, f64) {
+    let (name_labels, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+        panic!("sample line has no value: {line:?}");
+    });
+    let value = match value {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        v => v.parse().unwrap_or_else(|e| panic!("bad value {v:?} in {line:?}: {e}")),
+    };
+    let (name, labels) = match name_labels.split_once('{') {
+        None => (name_labels.to_string(), Labels::new()),
+        Some((name, rest)) => {
+            let body = rest
+                .strip_suffix('}')
+                .unwrap_or_else(|| panic!("unterminated label set: {line:?}"));
+            let mut labels = Labels::new();
+            for pair in body.split(',') {
+                let (k, v) = pair
+                    .split_once("=\"")
+                    .unwrap_or_else(|| panic!("bad label pair {pair:?} in {line:?}"));
+                let v = v
+                    .strip_suffix('"')
+                    .unwrap_or_else(|| panic!("unterminated label value in {line:?}"));
+                assert!(valid_label_name(k), "bad label name {k:?} in {line:?}");
+                assert!(!v.contains('"') && !v.contains('\\'), "unescaped label {v:?}");
+                assert!(
+                    labels.insert(k.to_string(), v.to_string()).is_none(),
+                    "duplicate label {k:?} in {line:?}"
+                );
+            }
+            (name.to_string(), labels)
+        }
+    };
+    assert!(valid_metric_name(&name), "bad metric name {name:?} in {line:?}");
+    (name, labels, value)
+}
+
+struct Exposition {
+    /// Family name -> declared TYPE.
+    families: BTreeMap<String, String>,
+    /// Every sample in exposition order.
+    samples: Vec<(String, Labels, f64)>,
+}
+
+impl Exposition {
+    fn values_of(&self, name: &str) -> Vec<(&Labels, f64)> {
+        self.samples.iter().filter(|(n, ..)| n == name).map(|(_, l, v)| (l, *v)).collect()
+    }
+}
+
+/// Parse the whole exposition, enforcing the grammar: HELP immediately
+/// followed by TYPE, one declaration per family, samples contiguous
+/// under their declaring family with kind-appropriate names, no
+/// duplicate series.
+fn check_exposition(text: &str) -> Exposition {
+    let mut families: BTreeMap<String, String> = BTreeMap::new();
+    let mut samples: Vec<(String, Labels, f64)> = Vec::new();
+    let mut seen_series: BTreeSet<String> = BTreeSet::new();
+    let mut current: Option<String> = None;
+    let mut pending_help: Option<String> = None;
+    for (ln, line) in text.lines().enumerate() {
+        let at = || format!("line {}: {line:?}", ln + 1);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest.split_once(' ').unwrap_or_else(|| panic!("{}", at()));
+            assert!(valid_metric_name(name), "{}", at());
+            assert!(!help.trim().is_empty(), "empty HELP: {}", at());
+            assert!(pending_help.is_none(), "HELP without TYPE before {}", at());
+            assert!(!families.contains_key(name), "family {name} declared twice: {}", at());
+            pending_help = Some(name.to_string());
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest.split_once(' ').unwrap_or_else(|| panic!("{}", at()));
+            assert_eq!(pending_help.as_deref(), Some(name), "TYPE must follow HELP: {}", at());
+            pending_help = None;
+            assert!(
+                ["counter", "gauge", "histogram", "summary"].contains(&kind),
+                "unknown TYPE {kind:?}: {}",
+                at()
+            );
+            families.insert(name.to_string(), kind.to_string());
+            current = Some(name.to_string());
+        } else if line.starts_with('#') {
+            panic!("unknown comment form: {}", at());
+        } else {
+            let (name, labels, value) = parse_sample(line);
+            let fam = current.clone().unwrap_or_else(|| panic!("sample before TYPE: {}", at()));
+            let kind = families[&fam].as_str();
+            let member = match kind {
+                "counter" | "gauge" => name == fam,
+                "summary" => {
+                    name == fam || name == format!("{fam}_sum") || name == format!("{fam}_count")
+                }
+                "histogram" => {
+                    name == format!("{fam}_bucket")
+                        || name == format!("{fam}_sum")
+                        || name == format!("{fam}_count")
+                }
+                _ => false,
+            };
+            assert!(member, "sample {name} outside contiguous family {fam} ({kind}): {}", at());
+            if kind == "histogram" && name.ends_with("_bucket") {
+                assert!(labels.contains_key("le"), "bucket without le: {}", at());
+            }
+            if kind == "summary" && name == fam {
+                assert!(labels.contains_key("quantile"), "summary without quantile: {}", at());
+            }
+            if kind == "counter" {
+                assert!(value >= 0.0, "negative counter: {}", at());
+            }
+            let series = format!("{name}{labels:?}");
+            assert!(seen_series.insert(series), "duplicate series: {}", at());
+            samples.push((name, labels, value));
+        }
+    }
+    assert!(pending_help.is_none(), "dangling # HELP at end of exposition");
+    Exposition { families, samples }
+}
+
+/// Histogram invariants per (family, label-set-minus-le) series group:
+/// cumulative buckets never decrease, the last bucket is `+Inf`, and it
+/// equals the series' `_count`; `_sum` exists.
+fn check_histograms(exp: &Exposition) {
+    for (fam, kind) in &exp.families {
+        if kind != "histogram" {
+            continue;
+        }
+        // Group in exposition order; label sets minus `le` key each series.
+        let mut groups: Vec<(Labels, Vec<(String, f64)>)> = Vec::new();
+        for (name, labels, value) in &exp.samples {
+            if name != &format!("{fam}_bucket") {
+                continue;
+            }
+            let mut key = labels.clone();
+            let le = key.remove("le").expect("bucket has le");
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push((le, *value)),
+                None => groups.push((key, vec![(le, *value)])),
+            }
+        }
+        assert!(!groups.is_empty(), "histogram family {fam} has no buckets");
+        for (key, buckets) in &groups {
+            let mut last = f64::NEG_INFINITY;
+            let mut prev_le = f64::NEG_INFINITY;
+            for (le, v) in buckets {
+                assert!(*v >= last, "{fam}{key:?}: bucket le={le} decreases ({v} < {last})");
+                last = *v;
+                if le != "+Inf" {
+                    let le_v: f64 = le.parse().unwrap_or_else(|e| {
+                        panic!("{fam}{key:?}: unparseable le {le:?}: {e}")
+                    });
+                    assert!(le_v > prev_le, "{fam}{key:?}: le edges not increasing at {le}");
+                    prev_le = le_v;
+                }
+            }
+            assert_eq!(
+                buckets.last().map(|(le, _)| le.as_str()),
+                Some("+Inf"),
+                "{fam}{key:?}: last bucket must be +Inf"
+            );
+            let count = exp
+                .values_of(&format!("{fam}_count"))
+                .into_iter()
+                .find(|(l, _)| *l == key)
+                .unwrap_or_else(|| panic!("{fam}{key:?}: missing _count"))
+                .1;
+            assert_eq!(last, count, "{fam}{key:?}: +Inf bucket must equal _count");
+            assert!(
+                exp.values_of(&format!("{fam}_sum")).iter().any(|(l, _)| **l == *key),
+                "{fam}{key:?}: missing _sum"
+            );
+        }
+    }
+}
+
+/// Summary invariants: every summary family exposes `_sum` and a
+/// non-negative `_count` alongside its quantiles.
+fn check_summaries(exp: &Exposition) {
+    for (fam, kind) in &exp.families {
+        if kind != "summary" {
+            continue;
+        }
+        assert!(
+            exp.samples.iter().any(|(n, l, _)| n == fam && l.contains_key("quantile")),
+            "summary {fam} has no quantile samples"
+        );
+        let counts = exp.values_of(&format!("{fam}_count"));
+        assert!(!counts.is_empty(), "summary {fam} missing _count");
+        assert!(counts.iter().all(|(_, v)| *v >= 0.0), "summary {fam} negative _count");
+        assert!(!exp.values_of(&format!("{fam}_sum")).is_empty(), "summary {fam} missing _sum");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metrics_exposition_parses_line_by_line() {
+    let s = server(1, 4, false);
+    for method in ["polarquant-r-offline", "exact"] {
+        let mut req = GenRequest::new(0, (0..40).map(|x| x % 64).collect(), 6);
+        req.method = method.into();
+        s.generate_blocking(req, Duration::from_secs(60)).expect("response");
+    }
+    let text = s.metrics_text();
+    let exp = check_exposition(&text);
+    check_histograms(&exp);
+    check_summaries(&exp);
+
+    // The full /stats surface is on the wire: gauges, the percentile
+    // summaries (with the observed-count satellite), per-worker gauges.
+    assert_eq!(exp.families.get("pq_requests_done").map(String::as_str), Some("gauge"));
+    assert_eq!(exp.families.get("pq_ttft").map(String::as_str), Some("summary"));
+    let ttft_count = exp.values_of("pq_ttft_count")[0].1;
+    assert!(ttft_count >= 2.0, "ttft summary count covers both requests: {ttft_count}");
+    assert!(exp.families.contains_key("pq_worker_requests_done"));
+
+    // And the quality families, with per-cell labels.
+    assert_eq!(exp.families.get("kv_quality_samples_total").map(String::as_str), Some("counter"));
+    assert_eq!(exp.families.get("kv_quality_angle_code").map(String::as_str), Some("histogram"));
+    assert_eq!(exp.families.get("kv_quality_radius").map(String::as_str), Some("histogram"));
+    let polar_samples: f64 = exp
+        .values_of("kv_quality_samples_total")
+        .iter()
+        .filter(|(l, _)| l.get("codec").map(String::as_str) == Some("polarquant-r-offline"))
+        .map(|(_, v)| *v)
+        .sum();
+    assert!(polar_samples > 0.0, "sampled polar cells reach the exposition:\n{text}");
+    for (labels, _) in exp.values_of("kv_quality_samples_total") {
+        for key in ["worker", "codec", "layer", "head"] {
+            assert!(labels.contains_key(key), "cell label {key} missing: {labels:?}");
+        }
+    }
+    s.shutdown();
+}
+
+#[test]
+fn multi_worker_quality_labels_merge_without_collisions() {
+    let workers = e2e_workers();
+    // Strict round-robin so every replica sees traffic deterministically.
+    let s = server(workers, 2, true);
+    let n = workers * 3;
+    for i in 0..n {
+        let mut req = GenRequest::new(0, (0..32).map(|x| (x * 3 + i as u32) % 64).collect(), 4);
+        req.method = "polarquant-r-offline".into();
+        s.submit(req);
+    }
+    for _ in 0..n {
+        s.recv_timeout(Duration::from_secs(120)).expect("all requests complete");
+    }
+    let text = s.metrics_text();
+    let exp = check_exposition(&text);
+    check_histograms(&exp);
+
+    // One observed-pairs counter per worker, each positive, no collisions
+    // (duplicate series would have tripped check_exposition already).
+    let mut worker_labels = BTreeSet::new();
+    for (labels, value) in exp.values_of("kv_quality_observed_pairs_total") {
+        assert!(value > 0.0, "worker {labels:?} observed nothing");
+        assert!(worker_labels.insert(labels["worker"].clone()));
+    }
+    assert_eq!(
+        worker_labels.len(),
+        workers,
+        "every replica reports its own counter: {worker_labels:?}\n{text}"
+    );
+
+    // Quality cells from at least two distinct replicas coexist.
+    let cell_workers: BTreeSet<String> = exp
+        .values_of("kv_quality_samples_total")
+        .iter()
+        .map(|(l, _)| l["worker"].clone())
+        .collect();
+    assert!(cell_workers.len() >= 2, "cells merge from multiple workers: {cell_workers:?}");
+    s.shutdown();
+}
+
+#[test]
+fn tcp_metrics_roundtrip_ends_with_blank_line() {
+    let s = Arc::new(server(1, 4, false));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let s2 = Arc::clone(&s);
+    let h = thread::spawn(move || {
+        let _ = run_tcp(s2, listener);
+    });
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(
+        conn,
+        r#"{{"prompt": [1,2,3,4,5,6,7,8], "max_new_tokens": 3, "method": "polarquant-r-offline"}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap(); // generation reply (JSON)
+
+    writeln!(conn, r#"{{"cmd": "metrics"}}"#).unwrap();
+    let mut text = String::new();
+    loop {
+        line.clear();
+        let bytes = reader.read_line(&mut line).unwrap();
+        assert!(bytes > 0, "connection closed before the blank-line terminator");
+        if line.trim().is_empty() {
+            break;
+        }
+        text.push_str(&line);
+    }
+    let exp = check_exposition(&text);
+    assert!(exp.families.contains_key("pq_requests_done"));
+    assert!(!exp.values_of("kv_quality_observed_pairs_total").is_empty());
+
+    // The connection still speaks JSON afterwards.
+    writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    line.clear();
+    let _ = reader.read_line(&mut line);
+    drop(conn);
+    let _ = TcpStream::connect(addr); // unblock the accept loop
+    h.join().unwrap();
+    match Arc::try_unwrap(s) {
+        Ok(srv) => srv.shutdown(),
+        Err(_) => {}
+    }
+}
