@@ -5,8 +5,53 @@
 mod common;
 
 use polarquant::eval::{longbench, report, runtime_bench};
+use polarquant::kvcache::codec::{codec_for_model, KvLayout};
 use polarquant::model::config::ModelConfig;
+use polarquant::polar::allocate;
 use polarquant::quant::registry::TABLE1_METHODS;
+use polarquant::util::rng::{Pcg64, Rng};
+
+/// Sensitivity-weighted expected reconstruction error of `method` on
+/// identical per-cell gaussian KV (every method sees the same data):
+/// Σ cells (sens.k · mseₖ + sens.v · mseᵥ) / Σ (sens.k + sens.v) — the
+/// objective the adaptive solver minimizes, measured empirically.
+/// Returns (resident B/token, bits/coord, weighted error).
+fn frontier_point(cfg: &ModelConfig, method: &str, samples: usize) -> Option<(usize, f64, f64)> {
+    let codec = codec_for_model(method, cfg)?;
+    let layout = KvLayout::new(cfg, codec.as_ref());
+    let sens = allocate::sensitivity_prior(cfg);
+    let d = cfg.head_dim;
+    let (mut k, mut v) = (vec![0.0f32; d], vec![0.0f32; d]);
+    let (mut ko, mut vo) = (vec![0.0f32; d], vec![0.0f32; d]);
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_heads {
+            let cell = codec.cell_codec(l, h);
+            let mut slot = vec![0u8; cell.pair_bytes(d)];
+            let (mut mk, mut mv) = (0.0f64, 0.0f64);
+            for i in 0..samples {
+                // Seeded per (cell, sample), method-independent: every
+                // frontier point quantizes the same vectors.
+                let mut rng = Pcg64::new(0xF007 + (l * 977 + h * 131 + i) as u64);
+                rng.fill_gaussian(&mut k);
+                rng.fill_gaussian(&mut v);
+                cell.encode_pair(&k, &v, &mut slot);
+                cell.decode_pair(&slot, &mut ko, &mut vo);
+                for j in 0..d {
+                    mk += ((k[j] - ko[j]) as f64).powi(2);
+                    mv += ((v[j] - vo[j]) as f64).powi(2);
+                }
+            }
+            let n = (samples * d) as f64;
+            let s = &sens[l * cfg.n_heads + h];
+            num += s.k * mk / n + s.v * mv / n;
+            den += s.k + s.v;
+        }
+    }
+    let bpt = layout.slot_bytes();
+    let bits = bpt as f64 * 8.0 / cfg.kv_coords_per_token() as f64;
+    Some((bpt, bits, num / den))
+}
 
 fn main() {
     common::banner(
@@ -95,5 +140,48 @@ fn main() {
         drift(&pre),
         drift(&raw),
         if drift(&pre) <= drift(&raw) { "PASS" } else { "CHECK" }
+    );
+
+    // Quality/bytes frontier: sensitivity-aware per-(layer, head) bit
+    // allocation vs the uniform polar layout. Every point quantizes the
+    // same gaussian KV; the adaptive rows spend the same or fewer
+    // resident bytes and must land strictly below the uniform row's
+    // weighted reconstruction error (the ISSUE-10 acceptance check).
+    let samples = common::scaled(4, 16, 64);
+    let frontier_methods = [
+        "polarquant-r-offline",
+        "adaptive",
+        "adaptive:budget=3.5",
+        "adaptive:budget=3.0",
+    ];
+    let mut ft = report::Table::new(
+        &format!("Quality/bytes frontier — analytic bit allocation (d=64 mini, {samples} samples/cell)"),
+        &["Method", "B/token", "bits/coord", "weighted recon err"],
+    );
+    let mut points = Vec::new();
+    for m in frontier_methods {
+        let Some((bpt, bits, err)) = frontier_point(&cfg.model, m, samples) else {
+            println!("  {m}: no codec at this geometry");
+            continue;
+        };
+        ft.row(vec![m.to_string(), bpt.to_string(), report::f(bits, 3), report::f(err, 5)]);
+        points.push((m, bpt, err));
+    }
+    ft.print();
+    let uniform = points.iter().find(|(m, ..)| *m == "polarquant-r-offline").expect("uniform row");
+    let adaptive = points.iter().find(|(m, ..)| *m == "adaptive").expect("adaptive row");
+    let dominates = adaptive.1 <= uniform.1 && adaptive.2 < uniform.2;
+    println!(
+        "  adaptive dominates uniform at equal-or-smaller bytes: {} B ≤ {} B, err {:.5} < {:.5} → {}",
+        adaptive.1,
+        uniform.1,
+        adaptive.2,
+        uniform.2,
+        if dominates { "PASS" } else { "CHECK" }
+    );
+    assert!(
+        dominates,
+        "adaptive ({} B, err {:.6}) must dominate uniform ({} B, err {:.6})",
+        adaptive.1, adaptive.2, uniform.1, uniform.2
     );
 }

@@ -200,11 +200,11 @@ impl Server {
                 directory: directory.clone(),
                 trace: traces.as_ref().map(|h| h.worker(w)),
                 quality: (cfg.quality_sample_every > 0).then(|| {
-                    Arc::new(QualityProbe::new(
+                    Arc::new(QualityProbe::for_model(
                         w,
                         cfg.quality_sample_every as u64,
                         cfg.seed,
-                        cfg.model.head_dim,
+                        &cfg.model,
                     ))
                 }),
             };

@@ -16,7 +16,7 @@
 
 use crate::coordinator::request::GenRequest;
 use crate::coordinator::scheduler::StepEngine;
-use crate::kvcache::codec::{page_codec_for, KvLayout, PageCodec};
+use crate::kvcache::codec::{codec_for_model, KvLayout, PageCodec};
 use crate::kvcache::pools::{share_pools, PoolSet, SharedPools};
 use crate::kvcache::sequence::{CacheConfig, SequenceCache};
 use crate::model::config::ModelConfig;
@@ -137,7 +137,7 @@ impl NativeWorker {
         if let Some(c) = self.codecs.get(method) {
             return Some(Arc::clone(c));
         }
-        let c = page_codec_for(method, self.model.cfg.head_dim)?;
+        let c = codec_for_model(method, &self.model.cfg)?;
         self.codecs.insert(method.to_string(), Arc::clone(&c));
         Some(c)
     }
@@ -178,19 +178,13 @@ impl NativeWorker {
                 };
                 for (l, layer) in pre.kv.iter().enumerate() {
                     for h in 0..cfg.n_heads {
-                        let off = layout.pair_offset(l, h);
+                        let cell = codec.cell_codec(l, h);
+                        let r = layout.pair_range(l, h);
                         let k = &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh];
                         let v = &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh];
-                        codec.encode_pair(k, v, &mut slot[off..off + layout.pair_bytes]);
+                        cell.encode_pair(k, v, &mut slot[r.start..r.end]);
                         if let Some(qp) = &self.quality {
-                            qp.observe_pair(
-                                codec.as_ref(),
-                                l,
-                                h,
-                                k,
-                                v,
-                                &slot[off..off + layout.pair_bytes],
-                            );
+                            qp.observe_pair(cell, l, h, k, v, &slot[r]);
                         }
                     }
                 }
@@ -268,8 +262,7 @@ impl NativeWorker {
             let slot = pool.token_slot(seq, t)?;
             for (l, layer) in past.iter_mut().enumerate() {
                 for h in 0..cfg.n_heads {
-                    let off = layout.pair_offset(l, h);
-                    codec.decode_pair(&slot[off..off + layout.pair_bytes], &mut k, &mut v);
+                    codec.cell_codec(l, h).decode_pair(&slot[layout.pair_range(l, h)], &mut k, &mut v);
                     layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh].copy_from_slice(&k);
                     layer.values[t * hd + h * dh..t * hd + (h + 1) * dh].copy_from_slice(&v);
                 }

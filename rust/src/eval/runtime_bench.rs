@@ -7,7 +7,7 @@
 //! generation; online-codebook prefill ≫ offline), which comes from op
 //! counts and survives the hardware swap (DESIGN.md substitutions).
 
-use crate::kvcache::codec::page_codec_for;
+use crate::kvcache::codec::codec_for_model;
 use crate::kvcache::pools::PoolSet;
 use crate::kvcache::sequence::{CacheConfig, SequenceCache};
 use crate::model::config::ModelConfig;
@@ -142,7 +142,7 @@ pub fn recon_cells(
     prompt_len: usize,
     seed: u64,
 ) -> Vec<ReconCell> {
-    let Some(codec) = page_codec_for(method, model_cfg.head_dim) else {
+    let Some(codec) = codec_for_model(method, model_cfg) else {
         return Vec::new();
     };
     let mut model = Transformer::synthetic(model_cfg, 0);
@@ -152,17 +152,21 @@ pub fn recon_cells(
         .map(|_| 16 + rng.next_below((vocab - 16) as u64) as u32)
         .collect();
     let pre = model.prefill(&prompt);
-    let probe = QualityProbe::new(0, 1, seed, model_cfg.head_dim);
+    let probe = QualityProbe::for_model(0, 1, seed, model_cfg);
     let mut stats = QualityStats::default();
     let (hd, dh) = (model_cfg.n_heads * model_cfg.head_dim, model_cfg.head_dim);
+    // Sized by the aggregate bound (the widest cell); each cell encodes
+    // into its own prefix of the buffer.
     let mut buf = vec![0u8; codec.pair_bytes(dh)];
     for t in 0..prompt_len {
         for (l, layer) in pre.kv.iter().enumerate() {
             for h in 0..model_cfg.n_heads {
+                let cell = codec.cell_codec(l, h);
+                let pb = cell.pair_bytes(dh);
                 let k = &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh];
                 let v = &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh];
-                codec.encode_pair(k, v, &mut buf);
-                probe.observe_pair(codec.as_ref(), l, h, k, v, &buf);
+                cell.encode_pair(k, v, &mut buf[..pb]);
+                probe.observe_pair(cell, l, h, k, v, &buf[..pb]);
             }
         }
         // The staging shard is tick-sized; fold it every token.

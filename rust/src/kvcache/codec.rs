@@ -17,7 +17,10 @@
 //! [ layer 0 head 0 pair | layer 0 head 1 pair | … | layer L-1 head H-1 pair | slack ]
 //! ```
 //!
-//! where each pair is `pair_bytes(d)` wide:
+//! where each (layer, head) cell's pair width comes from the codec's
+//! [`KvLayout`] (uniform codecs: every cell `pair_bytes(d)` wide;
+//! `adaptive`: per-cell widths from the bit-budget solver, addressed via
+//! the layout's prefix-sum offset table):
 //!
 //! | codec                  | pair layout (per head)                       | bits/coord |
 //! |------------------------|----------------------------------------------|------------|
@@ -25,6 +28,10 @@
 //! | `fp16`                 | k f16 · v f16                                | 16         |
 //! | `polarquant(-r-…)`     | (radii f16 + packed angles) ×2               | 3.875–4    |
 //! | `kivi`                 | (per-group zero/scale f16 + 2-bit codes) ×2  | 2 + 32/G   |
+//! | `adaptive[:budget=B]`  | (radii f16 + packed angles) ×2, per-cell     | ≤ B        |
+//! |                        | widths solved per (layer, head, K/V) under a |            |
+//! |                        | B bits/coord budget (default: the uniform    |            |
+//! |                        | polar layout's width at this head dim)       |            |
 //!
 //! Each codec's pool (see [`crate::kvcache::pools::PoolSet`]) sizes its
 //! `token_bytes` to exactly this codec's [`KvLayout::slot_bytes`] — no
@@ -33,10 +40,17 @@
 //! Decode-streamed tokens are encoded with the same codec as the prompt
 //! (the current step's own (k, v) stays full precision in-register, per
 //! Eq. 6), so a sequence's entire KV life happens inside pool pages.
+//!
+//! Method strings are parsed [`CodecSpec`]s against [`CODEC_REGISTRY`]
+//! — one table owning the family name, whether it takes `key=value`
+//! params, and the constructor. [`PAGE_CODEC_METHODS`] is *derived* from
+//! the registry at compile time, so a family added to the registry is
+//! automatically iterated by the compression-invariant suites.
 
 use crate::kvcache::paged::{PageId, PagedPool};
 use crate::model::attention::AttentionSource;
 use crate::model::config::ModelConfig;
+use crate::polar::allocate::{self, BitAllocation};
 use crate::polar::quantizer::{BlockScratch, PolarConfig, PolarQuantizer};
 use crate::quant::fp16::{f16_bits_to_f32, f32_to_f16_bits};
 use crate::quant::kivi::{dequant_code, quantize_group};
@@ -78,7 +92,36 @@ pub struct CodecScratch {
 pub trait PageCodec: Send + Sync {
     fn name(&self) -> &'static str;
 
+    /// The full parse-able method string this codec was built from —
+    /// family name plus any `key=value` params (`adaptive:budget=3.5`).
+    /// Uniform codecs are their family name. The quality probe interns
+    /// samples by spec, so replicas built from a different spec (hence a
+    /// different slot layout) can never decode a worker's slots with the
+    /// wrong widths.
+    fn spec(&self) -> &str {
+        self.name()
+    }
+
+    /// This codec's slot geometry for a model: where each (layer, head)
+    /// pair lives inside a token slot. Uniform codecs (the default) lay
+    /// every cell out `pair_bytes(d)` wide; the adaptive codec supplies
+    /// its solver's prefix-sum offset table.
+    fn layout(&self, cfg: &ModelConfig) -> KvLayout {
+        KvLayout::uniform(cfg, self.pair_bytes(cfg.head_dim))
+    }
+
+    /// The codec that actually encodes/scores/decodes the (layer, head)
+    /// cell. Uniform codecs return themselves; the adaptive codec
+    /// resolves its width-specialized per-cell codec. Every caller that
+    /// addresses a single cell — the engine encode loops, `HeadKvView`,
+    /// the quality-probe decode — must resolve through here before
+    /// calling pair-level methods.
+    fn cell_codec(&self, layer: usize, head: usize) -> &dyn PageCodec;
+
     /// Bytes one head's encoded (k, v) pair occupies in a token slot.
+    /// For the adaptive *aggregate* codec this is the widest cell (a
+    /// buffer-sizing bound); true per-cell widths come from
+    /// [`PageCodec::layout`] / [`PageCodec::cell_codec`].
     fn pair_bytes(&self, d: usize) -> usize;
 
     /// Encode one head's key and value rows (len `d` each) into `dst`
@@ -93,8 +136,18 @@ pub trait PageCodec: Send + Sync {
     /// quality-telemetry drain uses it to histogram a sampled slot's
     /// angle codes and radii against the analytic law. Default: `None`
     /// (non-polar codecs still get reconstruction-error telemetry).
+    /// Codecs with asymmetric K/V halves report the *key* half here;
+    /// use [`PageCodec::polar_pair`] when both halves matter.
     fn polar(&self) -> Option<&PolarQuantizer> {
         None
+    }
+
+    /// Both halves' polar quantizers (key, value) when the codec stores
+    /// polar slots. Uniform polar codecs share one quantizer across both
+    /// halves; adaptive cells may carry different widths per half, so
+    /// slot-splitting telemetry must size each half independently.
+    fn polar_pair(&self) -> Option<(&PolarQuantizer, &PolarQuantizer)> {
+        self.polar().map(|q| (q, q))
     }
 
     /// Prepare a query once per (step, head); default: nothing to do.
@@ -142,32 +195,113 @@ pub trait PageCodec: Send + Sync {
 
 /// Per-sequence slot geometry: where each (layer, head) pair lives
 /// inside a token slot.
+///
+/// Two forms, both fixed at codec construction so a lookup on the decode
+/// hot path is a multiply or an array index — no hashing, no allocation:
+///
+/// * **Uniform** — every cell the same width, multiplicative addressing
+///   (what every codec used before adaptive precision existed);
+/// * **Table** — a prefix-sum offset table with one entry per (layer,
+///   head) cell, produced by the adaptive codec's bit-budget solver.
+///
+/// Cell addressing is row-major by layer (`l * n_heads + h`), matching
+/// `BitAllocation::cell`.
 #[derive(Clone, Debug)]
 pub struct KvLayout {
     pub n_layers: usize,
     pub n_heads: usize,
     pub head_dim: usize,
-    pub pair_bytes: usize,
+    cells: CellTable,
+}
+
+#[derive(Clone, Debug)]
+enum CellTable {
+    Uniform { pair_bytes: usize },
+    /// Prefix-sum byte offsets, len `n_layers * n_heads + 1`; cell `i`
+    /// occupies `offsets[i]..offsets[i + 1]`.
+    Table { offsets: Arc<[usize]> },
 }
 
 impl KvLayout {
+    /// The codec's own geometry for this model (uniform codecs: one
+    /// width everywhere; adaptive: the solver's offset table).
     pub fn new(cfg: &ModelConfig, codec: &dyn PageCodec) -> Self {
+        codec.layout(cfg)
+    }
+
+    /// Uniform geometry: every (layer, head) cell `pair_bytes` wide.
+    pub fn uniform(cfg: &ModelConfig, pair_bytes: usize) -> Self {
         Self {
             n_layers: cfg.n_layers,
             n_heads: cfg.n_heads,
             head_dim: cfg.head_dim,
-            pair_bytes: codec.pair_bytes(cfg.head_dim),
+            cells: CellTable::Uniform { pair_bytes },
+        }
+    }
+
+    /// Table geometry from prefix-sum cell offsets (len
+    /// `n_layers * n_heads + 1`, monotone, starting at 0).
+    pub fn from_offsets(cfg: &ModelConfig, offsets: Arc<[usize]>) -> Self {
+        assert_eq!(
+            offsets.len(),
+            cfg.n_layers * cfg.n_heads + 1,
+            "one offset per cell plus the end sentinel"
+        );
+        assert_eq!(offsets[0], 0, "cell table starts at the slot origin");
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets monotone");
+        Self {
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            head_dim: cfg.head_dim,
+            cells: CellTable::Table { offsets },
         }
     }
 
     /// Bytes of one token slot actually used by this codec.
     pub fn slot_bytes(&self) -> usize {
-        self.n_layers * self.n_heads * self.pair_bytes
+        match &self.cells {
+            CellTable::Uniform { pair_bytes } => self.n_layers * self.n_heads * pair_bytes,
+            CellTable::Table { offsets } => offsets[offsets.len() - 1],
+        }
     }
 
     /// Byte offset of the (layer, head) pair inside a token slot.
     pub fn pair_offset(&self, l: usize, h: usize) -> usize {
-        (l * self.n_heads + h) * self.pair_bytes
+        match &self.cells {
+            CellTable::Uniform { pair_bytes } => (l * self.n_heads + h) * pair_bytes,
+            CellTable::Table { offsets } => offsets[l * self.n_heads + h],
+        }
+    }
+
+    /// Bytes the (layer, head) pair occupies inside a token slot.
+    pub fn pair_bytes(&self, l: usize, h: usize) -> usize {
+        match &self.cells {
+            CellTable::Uniform { pair_bytes } => *pair_bytes,
+            CellTable::Table { offsets } => {
+                let i = l * self.n_heads + h;
+                offsets[i + 1] - offsets[i]
+            }
+        }
+    }
+
+    /// Byte range of the (layer, head) pair inside a token slot — the
+    /// form the engine encode/decode loops slice with.
+    pub fn pair_range(&self, l: usize, h: usize) -> core::ops::Range<usize> {
+        match &self.cells {
+            CellTable::Uniform { pair_bytes } => {
+                let off = (l * self.n_heads + h) * pair_bytes;
+                off..off + pair_bytes
+            }
+            CellTable::Table { offsets } => {
+                let i = l * self.n_heads + h;
+                offsets[i]..offsets[i + 1]
+            }
+        }
+    }
+
+    /// Whether every cell shares one width (every codec but adaptive).
+    pub fn is_uniform(&self) -> bool {
+        matches!(self.cells, CellTable::Uniform { .. })
     }
 }
 
@@ -180,71 +314,209 @@ pub fn max_slot_bytes(cfg: &ModelConfig) -> usize {
     KvLayout::new(cfg, &ExactF32Codec).slot_bytes()
 }
 
-/// Every page-native method, in one place: the compression-invariant
-/// test suite and the residency benches iterate this list, so a codec
-/// added to [`page_codec_for`] without extending it here fails the
-/// `registry` unit test below instead of silently escaping the ratio
-/// invariants.
-pub const PAGE_CODEC_METHODS: [&str; 5] =
-    ["exact", "fp16", "kivi", "polarquant", "polarquant-r-offline"];
+// ---------------------------------------------------------------------
+// method-string registry
+// ---------------------------------------------------------------------
 
-/// Whether `method` runs on the pool substrate. Eviction baselines
-/// (SnapKV family) drop tokens and so cannot live in fixed-size slots;
-/// `polarquant-r-online` fits per-sequence codebooks, which would be
-/// side-channel state a shared page cannot carry. Both stay on the
-/// legacy per-sequence [`crate::quant::compressor::CompressedKv`] path.
+/// A parsed page-codec method string: `family[:key=value[,…]]`. Parsing
+/// is the single gate every method-string consumer goes through —
+/// [`is_page_codec`], pool routing, codec construction — replacing the
+/// scattered exact-string matching that would let a parameterized method
+/// silently fall through to the legacy path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CodecSpec {
+    /// Registry family this spec names (interned to the registry entry).
+    pub family: &'static str,
+    /// `budget=B` param (bits per stored KV coordinate), for families
+    /// that take one (`adaptive`). `None` = the family default.
+    pub budget: Option<f64>,
+}
+
+impl CodecSpec {
+    /// Parse `method` against [`CODEC_REGISTRY`]. `None` for unknown
+    /// families, params on a param-less family, unknown keys, and
+    /// non-positive or non-finite budgets — callers treat `None` as
+    /// "not page-native" (legacy path), so a malformed spec degrades
+    /// exactly like an eviction-baseline method, never an error.
+    pub fn parse(method: &str) -> Option<CodecSpec> {
+        let (family, params) = match method.split_once(':') {
+            Some((f, p)) => (f, Some(p)),
+            None => (method, None),
+        };
+        let entry = CODEC_REGISTRY.iter().find(|e| e.name == family)?;
+        let mut spec = CodecSpec { family: entry.name, budget: None };
+        if let Some(params) = params {
+            if !entry.takes_params || params.is_empty() {
+                return None;
+            }
+            for kv in params.split(',') {
+                let (key, val) = kv.split_once('=')?;
+                match key {
+                    "budget" => {
+                        let b: f64 = val.parse().ok()?;
+                        if !(b.is_finite() && b > 0.0) {
+                            return None;
+                        }
+                        spec.budget = Some(b);
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        Some(spec)
+    }
+}
+
+/// One registered page-codec family: its method-string name, whether
+/// `name:key=value` params are accepted, and its constructors.
+pub struct CodecFamily {
+    pub name: &'static str,
+    /// Whether `name:key=value` params parse (only `adaptive` today).
+    pub takes_params: bool,
+    /// Canonical constructor over the full model geometry.
+    build: fn(&CodecSpec, &str, &ModelConfig) -> Option<Arc<dyn PageCodec>>,
+    /// Dimension-only constructor for uniform families whose layout
+    /// depends on nothing but the head dim. `None` for geometry-spanning
+    /// families (`adaptive` — its solver needs layers × heads).
+    build_dim: Option<fn(usize) -> Option<Arc<dyn PageCodec>>>,
+}
+
+fn build_exact_dim(_d: usize) -> Option<Arc<dyn PageCodec>> {
+    Some(Arc::new(ExactF32Codec))
+}
+
+fn build_fp16_dim(_d: usize) -> Option<Arc<dyn PageCodec>> {
+    Some(Arc::new(Fp16PageCodec))
+}
+
+fn build_kivi_dim(_d: usize) -> Option<Arc<dyn PageCodec>> {
+    Some(Arc::new(KiviPageCodec::default()))
+}
+
+/// Paper layout at `d` (depth adapted, capacity-gated) without
+/// preconditioning — the paper's raw "PolarQuant" row.
+fn build_polar_dim(d: usize) -> Option<Arc<dyn PageCodec>> {
+    let cfg = PolarConfig::checked_page_layout(d, PolarConfig::paper_default_no_precondition(d))?;
+    Some(Arc::new(PolarPageCodec::new(cfg, "polarquant")))
+}
+
+fn build_polar_r_dim(d: usize) -> Option<Arc<dyn PageCodec>> {
+    let cfg = PolarConfig::checked_page_layout(d, PolarConfig::paper_default(d))?;
+    Some(Arc::new(PolarPageCodec::new(cfg, "polarquant-r-offline")))
+}
+
+fn build_exact(_s: &CodecSpec, _m: &str, cfg: &ModelConfig) -> Option<Arc<dyn PageCodec>> {
+    build_exact_dim(cfg.head_dim)
+}
+
+fn build_fp16(_s: &CodecSpec, _m: &str, cfg: &ModelConfig) -> Option<Arc<dyn PageCodec>> {
+    build_fp16_dim(cfg.head_dim)
+}
+
+fn build_kivi(_s: &CodecSpec, _m: &str, cfg: &ModelConfig) -> Option<Arc<dyn PageCodec>> {
+    build_kivi_dim(cfg.head_dim)
+}
+
+fn build_polar(_s: &CodecSpec, _m: &str, cfg: &ModelConfig) -> Option<Arc<dyn PageCodec>> {
+    build_polar_dim(cfg.head_dim)
+}
+
+fn build_polar_r(_s: &CodecSpec, _m: &str, cfg: &ModelConfig) -> Option<Arc<dyn PageCodec>> {
+    build_polar_r_dim(cfg.head_dim)
+}
+
+fn build_adaptive(s: &CodecSpec, method: &str, cfg: &ModelConfig) -> Option<Arc<dyn PageCodec>> {
+    AdaptivePageCodec::build(method, s.budget, cfg).map(|c| Arc::new(c) as Arc<dyn PageCodec>)
+}
+
+/// The one table every method-string consumer resolves against.
+pub const CODEC_REGISTRY: [CodecFamily; 6] = [
+    CodecFamily {
+        name: "exact",
+        takes_params: false,
+        build: build_exact,
+        build_dim: Some(build_exact_dim),
+    },
+    CodecFamily {
+        name: "fp16",
+        takes_params: false,
+        build: build_fp16,
+        build_dim: Some(build_fp16_dim),
+    },
+    CodecFamily {
+        name: "kivi",
+        takes_params: false,
+        build: build_kivi,
+        build_dim: Some(build_kivi_dim),
+    },
+    CodecFamily {
+        name: "polarquant",
+        takes_params: false,
+        build: build_polar,
+        build_dim: Some(build_polar_dim),
+    },
+    CodecFamily {
+        name: "polarquant-r-offline",
+        takes_params: false,
+        build: build_polar_r,
+        build_dim: Some(build_polar_r_dim),
+    },
+    CodecFamily {
+        name: "adaptive",
+        takes_params: true,
+        build: build_adaptive,
+        build_dim: None,
+    },
+];
+
+/// Every page-native family name — *derived* from [`CODEC_REGISTRY`] at
+/// compile time, so a family added to the registry is automatically
+/// iterated by the compression-invariant suites and cannot go stale.
+pub const PAGE_CODEC_METHODS: [&str; CODEC_REGISTRY.len()] = {
+    let mut out = [""; CODEC_REGISTRY.len()];
+    let mut i = 0;
+    while i < CODEC_REGISTRY.len() {
+        out[i] = CODEC_REGISTRY[i].name;
+        i += 1;
+    }
+    out
+};
+
+/// Whether `method` runs on the pool substrate — i.e. parses as a
+/// [`CodecSpec`]. Eviction baselines (SnapKV family) drop tokens and so
+/// cannot live in fixed-size slots; `polarquant-r-online` fits
+/// per-sequence codebooks, which would be side-channel state a shared
+/// page cannot carry. Both stay on the legacy per-sequence
+/// [`crate::quant::compressor::CompressedKv`] path.
 ///
-/// Consistent with [`page_codec_for`] for every RoPE-valid model: the
-/// polar codec adapts its recursion depth to any even head dimension
+/// Consistent with [`codec_for_model`] for every RoPE-valid model: the
+/// polar codecs adapt their recursion depth to any even head dimension
 /// (and RoPE requires head dims to be even). Engines must still treat
-/// [`page_codec_for`] as authoritative and fall back to the legacy path
-/// when it returns `None`.
+/// [`codec_for_model`] as authoritative and fall back to the legacy
+/// path when it returns `None`.
 pub fn is_page_codec(method: &str) -> bool {
-    PAGE_CODEC_METHODS.contains(&method)
+    CodecSpec::parse(method).is_some()
 }
 
-/// Paper layout adapted to head dimension `d`: recursion depth
-/// L = min(4, trailing zeros of d) with the matching prefix of the
-/// (4,2,2,2) bit allocation — the full paper layout whenever d is a
-/// multiple of 16, graceful shallower trees for other even dims.
-fn polar_cfg_for(d: usize, base: PolarConfig) -> Option<PolarConfig> {
-    if d == 0 {
-        return None;
-    }
-    let levels = (d.trailing_zeros() as usize).min(4);
-    if levels == 0 {
-        return None; // odd dims cannot pair coordinates (RoPE forbids them too)
-    }
-    let mut cfg = base;
-    cfg.levels = levels;
-    cfg.level_bits.truncate(levels);
-    if !cfg.fits_fused_kernels() {
-        // The true capacity of the fused stack kernels (score/accumulate
-        // scratch arrays), not just the radii bound: the old
-        // `num_radii() > 64` gate admitted d up to 1024 while
-        // `accumulate_with` indexes out of bounds past d = 256.
-        return None;
-    }
-    Some(cfg)
+/// Build the page codec serving `method` for a model, or `None` when
+/// the method is not page-native (legacy path). The canonical
+/// constructor: handles every family, including geometry-spanning ones
+/// (`adaptive` solves its bit allocation over the full layers × heads
+/// grid here, at model-load time).
+pub fn codec_for_model(method: &str, cfg: &ModelConfig) -> Option<Arc<dyn PageCodec>> {
+    let spec = CodecSpec::parse(method)?;
+    let entry = CODEC_REGISTRY.iter().find(|e| e.name == spec.family)?;
+    (entry.build)(&spec, method, cfg)
 }
 
-/// Build the page codec serving `method` at head dimension `d`, or
-/// `None` when the method is not page-native (legacy path).
+/// Dimension-only variant for callers that know nothing but a head dim
+/// (uniform-codec tests, probe replicas for uniform methods). `None`
+/// for non-page methods *and* for families whose layout spans the whole
+/// model (`adaptive`) — those must go through [`codec_for_model`].
 pub fn page_codec_for(method: &str, d: usize) -> Option<Arc<dyn PageCodec>> {
-    match method {
-        "exact" => Some(Arc::new(ExactF32Codec)),
-        "fp16" => Some(Arc::new(Fp16PageCodec)),
-        "kivi" => Some(Arc::new(KiviPageCodec::default())),
-        "polarquant" => {
-            let cfg = polar_cfg_for(d, PolarConfig::paper_default_no_precondition(d))?;
-            Some(Arc::new(PolarPageCodec::new(cfg, "polarquant")))
-        }
-        "polarquant-r-offline" => {
-            let cfg = polar_cfg_for(d, PolarConfig::paper_default(d))?;
-            Some(Arc::new(PolarPageCodec::new(cfg, "polarquant-r-offline")))
-        }
-        _ => None,
-    }
+    let spec = CodecSpec::parse(method)?;
+    let entry = CODEC_REGISTRY.iter().find(|e| e.name == spec.family)?;
+    (entry.build_dim?)(d)
 }
 
 // ---------------------------------------------------------------------
@@ -259,6 +531,10 @@ pub struct ExactF32Codec;
 impl PageCodec for ExactF32Codec {
     fn name(&self) -> &'static str {
         "exact"
+    }
+
+    fn cell_codec(&self, _layer: usize, _head: usize) -> &dyn PageCodec {
+        self
     }
 
     fn pair_bytes(&self, d: usize) -> usize {
@@ -348,6 +624,10 @@ pub struct Fp16PageCodec;
 impl PageCodec for Fp16PageCodec {
     fn name(&self) -> &'static str {
         "fp16"
+    }
+
+    fn cell_codec(&self, _layer: usize, _head: usize) -> &dyn PageCodec {
+        self
     }
 
     fn pair_bytes(&self, d: usize) -> usize {
@@ -444,16 +724,19 @@ pub struct PolarPageCodec {
 
 impl PolarPageCodec {
     pub fn new(cfg: PolarConfig, name: &'static str) -> Self {
-        // Hard capacity gate, mirrored by `polar_cfg_for`: the fused
-        // slot/block kernels use fixed stack scratch sized for
-        // MAX_KERNEL_DIM and silently corrupt (release) or panic
-        // (debug) past it, so an over-wide config must never build.
-        assert!(
-            cfg.fits_fused_kernels(),
-            "polar page codec requires dim ≤ {} and ≤ 64 radii (got dim {})",
-            crate::polar::quantizer::MAX_KERNEL_DIM,
-            cfg.dim
-        );
+        // Hard capacity gate through the *single* checked constructor
+        // (`PolarConfig::checked_for_kernels` — the same gate the
+        // registry's `checked_page_layout` and the adaptive solver use):
+        // the fused slot/block kernels use fixed stack scratch sized for
+        // MAX_KERNEL_DIM and silently corrupt (release) or panic (debug)
+        // past it, so an over-wide config must never build.
+        let dim = cfg.dim;
+        let cfg = cfg.checked_for_kernels().unwrap_or_else(|| {
+            panic!(
+                "polar page codec requires dim ≤ {} and ≤ 64 radii (got dim {dim})",
+                crate::polar::quantizer::MAX_KERNEL_DIM
+            )
+        });
         let quantizer = PolarQuantizer::new_offline(cfg);
         let vec_bytes = quantizer.vec_slot_bytes();
         Self { quantizer, name, vec_bytes }
@@ -463,6 +746,10 @@ impl PolarPageCodec {
 impl PageCodec for PolarPageCodec {
     fn name(&self) -> &'static str {
         self.name
+    }
+
+    fn cell_codec(&self, _layer: usize, _head: usize) -> &dyn PageCodec {
+        self
     }
 
     fn pair_bytes(&self, _d: usize) -> usize {
@@ -623,6 +910,10 @@ impl PageCodec for KiviPageCodec {
         "kivi"
     }
 
+    fn cell_codec(&self, _layer: usize, _head: usize) -> &dyn PageCodec {
+        self
+    }
+
     fn pair_bytes(&self, d: usize) -> usize {
         2 * self.vec_bytes(d)
     }
@@ -703,6 +994,312 @@ impl PageCodec for KiviPageCodec {
 }
 
 // ---------------------------------------------------------------------
+// adaptive (sensitivity-aware per-(layer, head, K/V) widths)
+// ---------------------------------------------------------------------
+
+/// One (layer, head) cell of the adaptive codec: a width-specialized
+/// polar pair codec whose key and value halves may carry *different*
+/// per-level angle widths (the solver prices K and V independently).
+/// This is what [`AdaptivePageCodec::cell_codec`] resolves to, and
+/// therefore what actually encodes, scores, and decodes adaptive slots.
+/// Both halves share the model-global rotation (same seed, same dim —
+/// paper §4.1), so `value_finish` can un-rotate with either quantizer.
+pub struct AdaptiveCellCodec {
+    /// Full parse-able method string, shared with the parent aggregate.
+    spec: Arc<str>,
+    /// Key-half quantizer (width per the allocation's `k_bits`).
+    k: Arc<PolarQuantizer>,
+    /// Value-half quantizer (`v_bits`).
+    v: Arc<PolarQuantizer>,
+    /// Encoded key-vector bytes — the in-pair offset of the value half.
+    k_bytes: usize,
+    /// Encoded value-vector bytes.
+    v_bytes: usize,
+}
+
+impl PageCodec for AdaptiveCellCodec {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    fn cell_codec(&self, _layer: usize, _head: usize) -> &dyn PageCodec {
+        self
+    }
+
+    fn pair_bytes(&self, _d: usize) -> usize {
+        self.k_bytes + self.v_bytes
+    }
+
+    fn encode_pair(&self, k: &[f32], v: &[f32], dst: &mut [u8]) {
+        let kb = self.k_bytes;
+        self.k.encode_into(k, &mut dst[..kb]);
+        self.v.encode_into(v, &mut dst[kb..kb + self.v_bytes]);
+    }
+
+    fn decode_pair(&self, src: &[u8], k_out: &mut [f32], v_out: &mut [f32]) {
+        let kb = self.k_bytes;
+        self.k.decode_slot(&src[..kb], k_out);
+        self.v.decode_slot(&src[kb..kb + self.v_bytes], v_out);
+    }
+
+    /// Key-half quantizer (the scoring side); the value half may differ —
+    /// see [`PageCodec::polar_pair`].
+    fn polar(&self) -> Option<&PolarQuantizer> {
+        Some(&self.k)
+    }
+
+    fn polar_pair(&self) -> Option<(&PolarQuantizer, &PolarQuantizer)> {
+        Some((&self.k, &self.v))
+    }
+
+    fn prepare_query(&self, q: &[f32], scratch: &mut CodecScratch) {
+        let CodecScratch { table, rot, k1, .. } = scratch;
+        *k1 = self.k.prepare_query_into(q, table, rot);
+    }
+
+    fn key_scores_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        _q: &[f32],
+        scratch: &mut CodecScratch,
+        scores: &mut Vec<f32>,
+    ) -> f32 {
+        let CodecScratch { table, k1, block, .. } = scratch;
+        let base = scores.len();
+        scores.resize(base + count, 0.0);
+        self.k.score_block(table, *k1, slots, stride, offset, count, block, &mut scores[base..])
+    }
+
+    fn value_accumulate_page(
+        &self,
+        slots: &[u8],
+        stride: usize,
+        offset: usize,
+        count: usize,
+        weights: &[f32],
+        block: &mut BlockScratch,
+        acc: &mut [f32],
+    ) {
+        self.v.accumulate_block(slots, stride, offset + self.k_bytes, count, weights, block, acc);
+    }
+
+    fn value_finish(&self, acc: &[f32], out: &mut [f32], unrot: &mut Vec<f32>) {
+        unrot.clear();
+        unrot.resize(acc.len(), 0.0);
+        self.v.rotation.apply_t(acc, unrot);
+        crate::math::linalg::add_assign(out, unrot);
+    }
+}
+
+/// The adaptive page codec (ROADMAP "Adaptive precision"): per-(layer,
+/// head, K-vs-V) angle code widths solved at model load by
+/// [`allocate::solve`] — minimize the sensitivity-weighted analytic
+/// expected reconstruction error under a resident-bytes budget. Slots
+/// stay fixed-size per codec *instance* (the solved layout is baked into
+/// the offset table), so pools, prefix sharing, tiering, and routing
+/// compose unchanged; only the intra-slot geometry is non-uniform.
+///
+/// The aggregate is cell-resolved: [`PageCodec::cell_codec`] returns the
+/// width-specialized [`AdaptiveCellCodec`] for a cell, and every real
+/// encode/score/decode path goes through it ([`HeadKvView::new`] resolves
+/// once per (layer, head, step)). The aggregate's own pair-level methods
+/// are deliberately unreachable.
+pub struct AdaptivePageCodec {
+    /// Full method string this instance was built from (`adaptive` or
+    /// `adaptive:budget=B`) — what [`PageCodec::spec`] reports.
+    spec: Arc<str>,
+    allocation: BitAllocation,
+    /// One width-specialized codec per (layer, head), row-major.
+    cells: Vec<AdaptiveCellCodec>,
+    /// Prefix-sum cell offsets (len cells + 1) — the layout table.
+    offsets: Arc<[usize]>,
+    /// Widest cell pair, reported by `pair_bytes` as a sizing bound.
+    max_pair: usize,
+}
+
+impl AdaptivePageCodec {
+    /// Solve and build. `budget` is in bits per stored KV coordinate;
+    /// `None` means the uniform polar layout's own width at this head
+    /// dim, so a plain `"adaptive"` spec matches `polarquant-r-offline`
+    /// resident bytes exactly (never outspends the codec it replaces).
+    /// `None` overall when the head dim cannot carry a polar layout or
+    /// the budget cannot cover the 1-bit floor — same legacy-fallback
+    /// contract as every other family.
+    pub fn build(method: &str, budget: Option<f64>, cfg: &ModelConfig) -> Option<Self> {
+        let sens = allocate::sensitivity_prior(cfg);
+        Self::build_with_sensitivity(method, budget, cfg, &sens)
+    }
+
+    /// [`Self::build`] with the prior refined by observed per-cell
+    /// reconstruction MSE (`(layer, head, mse)` triples — the
+    /// `obs::quality` `QualityCell` signal), steering bytes toward cells
+    /// the live probe sees decoding worst.
+    pub fn build_refined(
+        method: &str,
+        budget: Option<f64>,
+        cfg: &ModelConfig,
+        observed: &[(usize, usize, f64)],
+    ) -> Option<Self> {
+        let prior = allocate::sensitivity_prior(cfg);
+        let sens = allocate::refine_with_quality(&prior, observed, cfg.n_heads);
+        Self::build_with_sensitivity(method, budget, cfg, &sens)
+    }
+
+    fn build_with_sensitivity(
+        method: &str,
+        budget: Option<f64>,
+        cfg: &ModelConfig,
+        sens: &[allocate::CellSensitivity],
+    ) -> Option<Self> {
+        let budget = match budget {
+            Some(b) => b,
+            None => PolarConfig::checked_page_layout(
+                cfg.head_dim,
+                PolarConfig::paper_default(cfg.head_dim),
+            )?
+            .bits_per_coordinate(),
+        };
+        let allocation = allocate::solve(cfg, budget, sens)?;
+        Self::from_allocation(method, allocation, cfg)
+    }
+
+    /// Materialize a solved allocation into per-cell codecs. Quantizers
+    /// are deduplicated by width vector (cells overwhelmingly share a
+    /// handful of distinct widths, and the codebook/rotation caches make
+    /// even distinct ones cheap); all cells share the paper's global
+    /// rotation seed, so every quantizer agrees on the preconditioner.
+    pub fn from_allocation(
+        method: &str,
+        allocation: BitAllocation,
+        cfg: &ModelConfig,
+    ) -> Option<Self> {
+        assert_eq!(
+            (allocation.n_layers, allocation.n_heads, allocation.head_dim),
+            (cfg.n_layers, cfg.n_heads, cfg.head_dim),
+            "allocation solved for a different model shape"
+        );
+        let spec: Arc<str> = Arc::from(method);
+        let mut memo: std::collections::BTreeMap<Vec<u8>, Arc<PolarQuantizer>> =
+            std::collections::BTreeMap::new();
+        let mut quantizer_for = |bits: &[u8]| -> Option<Arc<PolarQuantizer>> {
+            if let Some(q) = memo.get(bits) {
+                return Some(q.clone());
+            }
+            let qcfg = PolarConfig {
+                levels: bits.len(),
+                level_bits: bits.to_vec(),
+                ..PolarConfig::paper_default(cfg.head_dim)
+            }
+            .checked_for_kernels()?;
+            let q = Arc::new(PolarQuantizer::new_offline(qcfg));
+            memo.insert(bits.to_vec(), q.clone());
+            Some(q)
+        };
+        let mut cells = Vec::with_capacity(allocation.cells.len());
+        let mut offsets = Vec::with_capacity(allocation.cells.len() + 1);
+        offsets.push(0usize);
+        let mut max_pair = 0usize;
+        for cw in &allocation.cells {
+            let k = quantizer_for(&cw.k_bits)?;
+            let v = quantizer_for(&cw.v_bits)?;
+            debug_assert_eq!(k.vec_slot_bytes(), cw.k_bytes, "solver/codec byte model agree");
+            debug_assert_eq!(v.vec_slot_bytes(), cw.v_bytes);
+            let pair = cw.pair_bytes();
+            max_pair = max_pair.max(pair);
+            offsets.push(offsets[offsets.len() - 1] + pair);
+            cells.push(AdaptiveCellCodec {
+                spec: spec.clone(),
+                k,
+                v,
+                k_bytes: cw.k_bytes,
+                v_bytes: cw.v_bytes,
+            });
+        }
+        Some(Self { spec, allocation, cells, offsets: offsets.into(), max_pair })
+    }
+
+    /// The solved allocation — [`BitAllocation::describe`] renders the
+    /// per-(layer, head) width map (the "inspect an allocation" recipe).
+    pub fn allocation(&self) -> &BitAllocation {
+        &self.allocation
+    }
+}
+
+impl PageCodec for AdaptivePageCodec {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    fn layout(&self, cfg: &ModelConfig) -> KvLayout {
+        assert_eq!(
+            (self.allocation.n_layers, self.allocation.n_heads, self.allocation.head_dim),
+            (cfg.n_layers, cfg.n_heads, cfg.head_dim),
+            "adaptive codec built for a different model shape"
+        );
+        KvLayout::from_offsets(cfg, self.offsets.clone())
+    }
+
+    fn cell_codec(&self, layer: usize, head: usize) -> &dyn PageCodec {
+        &self.cells[layer * self.allocation.n_heads + head]
+    }
+
+    /// Widest cell's pair — a buffer-sizing bound only; real widths come
+    /// from [`Self::layout`] / [`Self::cell_codec`].
+    fn pair_bytes(&self, _d: usize) -> usize {
+        self.max_pair
+    }
+
+    fn encode_pair(&self, _k: &[f32], _v: &[f32], _dst: &mut [u8]) {
+        // analyze: allow(hot_path_panic, "cell-resolved codec: every real encode path goes through cell_codec(); encoding at the ambiguous aggregate width would write mis-sized slots, so an aggregate call is an addressing bug that must abort")
+        panic!("adaptive aggregate: resolve cell_codec(layer, head) before pair-level calls");
+    }
+
+    fn decode_pair(&self, _src: &[u8], _k_out: &mut [f32], _v_out: &mut [f32]) {
+        // analyze: allow(hot_path_panic, "cell-resolved codec: every real decode path goes through cell_codec(); decoding with ambiguous widths would read garbage, so an aggregate call is an addressing bug that must abort")
+        panic!("adaptive aggregate: resolve cell_codec(layer, head) before pair-level calls");
+    }
+
+    fn key_scores_page(
+        &self,
+        _slots: &[u8],
+        _stride: usize,
+        _offset: usize,
+        _count: usize,
+        _q: &[f32],
+        _scratch: &mut CodecScratch,
+        _scores: &mut Vec<f32>,
+    ) -> f32 {
+        // analyze: allow(hot_path_panic, "unreachable from decode: HeadKvView::new resolves cell_codec(layer, head) before any scoring call, so only a caller that skipped cell resolution can land here")
+        panic!("adaptive aggregate: resolve cell_codec(layer, head) before scoring");
+    }
+
+    fn value_accumulate_page(
+        &self,
+        _slots: &[u8],
+        _stride: usize,
+        _offset: usize,
+        _count: usize,
+        _weights: &[f32],
+        _block: &mut BlockScratch,
+        _acc: &mut [f32],
+    ) {
+        // analyze: allow(hot_path_panic, "unreachable from decode: HeadKvView::new resolves cell_codec(layer, head) before any accumulate call, so only a caller that skipped cell resolution can land here")
+        panic!("adaptive aggregate: resolve cell_codec(layer, head) before accumulating");
+    }
+}
+
+// ---------------------------------------------------------------------
 // per-(layer, head) view over a sequence's pool pages
 // ---------------------------------------------------------------------
 
@@ -745,10 +1342,14 @@ impl<'a> HeadKvView<'a> {
             pool.cfg.token_bytes
         );
         debug_assert!(len <= pages.len() * pool.cfg.page_tokens);
+        // Resolve the (layer, head) cell once per view: for uniform
+        // codecs this is the codec itself; for adaptive it is the
+        // width-specialized cell codec every subsequent scoring /
+        // accumulate call must use.
         Self {
             pool,
             pages,
-            codec,
+            codec: codec.cell_codec(layer, head),
             offset: layout.pair_offset(layer, head),
             d: layout.head_dim,
             len,
@@ -831,6 +1432,8 @@ mod tests {
         v
     }
 
+    /// The uniform codecs at dimension `d` — adaptive spans the whole
+    /// model and is covered by its own tests below.
     fn codecs(d: usize) -> Vec<Arc<dyn PageCodec>> {
         PAGE_CODEC_METHODS
             .iter()
@@ -838,10 +1441,16 @@ mod tests {
             .collect()
     }
 
+    /// A d=64 model shape for adaptive tests (the paper dim).
+    fn mini() -> ModelConfig {
+        ModelConfig::mini()
+    }
+
     #[test]
     fn registry_covers_page_methods_and_rejects_others() {
         assert!(is_page_codec("exact"));
         assert!(is_page_codec("polarquant-r-offline"));
+        assert!(is_page_codec("adaptive"));
         assert!(!is_page_codec("snapkv"));
         assert!(!is_page_codec("polarquant-r-online"));
         assert!(page_codec_for("snapkv", 64).is_none());
@@ -862,17 +1471,204 @@ mod tests {
             assert!(page_codec_for("fp16", d).is_some(), "d={d}");
             assert!(page_codec_for("kivi", d).is_some(), "d={d}");
         }
-        // PAGE_CODEC_METHODS is the canonical list: every entry must
-        // build at the paper dim, and every entry must agree with
-        // is_page_codec (so the ratio suites iterate the full set).
-        assert_eq!(codecs(64).len(), PAGE_CODEC_METHODS.len());
+        // PAGE_CODEC_METHODS is derived from the registry, so the two
+        // can't diverge by construction — pin the derivation anyway.
+        assert_eq!(PAGE_CODEC_METHODS.len(), CODEC_REGISTRY.len());
+        for (m, fam) in PAGE_CODEC_METHODS.iter().zip(&CODEC_REGISTRY) {
+            assert_eq!(*m, fam.name);
+        }
+        // Every family builds through the canonical model-geometry
+        // constructor at the paper dim, under its registry name.
+        let cfg = mini();
         for m in PAGE_CODEC_METHODS {
             assert!(is_page_codec(m), "{m} missing from is_page_codec");
             assert_eq!(
-                page_codec_for(m, 64).unwrap().name(),
+                codec_for_model(m, &cfg).unwrap().name(),
                 m,
                 "codec name must match its registry key"
             );
+        }
+        // The dim-only constructor serves exactly the uniform families.
+        assert_eq!(codecs(64).len(), PAGE_CODEC_METHODS.len() - 1);
+        assert!(page_codec_for("adaptive", 64).is_none(), "adaptive needs model geometry");
+    }
+
+    #[test]
+    fn codec_spec_parses_params_strictly() {
+        // Family alone.
+        assert_eq!(
+            CodecSpec::parse("adaptive"),
+            Some(CodecSpec { family: "adaptive", budget: None })
+        );
+        // Budget param, only on the param-taking family.
+        assert_eq!(
+            CodecSpec::parse("adaptive:budget=3.5"),
+            Some(CodecSpec { family: "adaptive", budget: Some(3.5) })
+        );
+        assert!(is_page_codec("adaptive:budget=3.5"));
+        for bad in [
+            "adaptive:",            // empty param string
+            "adaptive:budget=",     // empty value
+            "adaptive:budget=-1",   // non-positive
+            "adaptive:budget=0",    // non-positive
+            "adaptive:budget=nope", // non-numeric
+            "adaptive:frobnicate=1", // unknown key
+            "kivi:budget=3",        // params on a param-less family
+            "polarquant:budget=4",
+            ":budget=3",            // empty family
+            "::legacy",             // the accounting pool's internal key
+        ] {
+            assert!(CodecSpec::parse(bad).is_none(), "{bad} must not parse");
+            assert!(!is_page_codec(bad), "{bad} must route to the legacy path");
+        }
+    }
+
+    #[test]
+    fn adaptive_layout_table_addresses_every_cell_within_budget() {
+        let cfg = mini();
+        let codec = codec_for_model("adaptive", &cfg).expect("solvable at the paper budget");
+        let layout = KvLayout::new(&cfg, codec.as_ref());
+        assert!(!layout.is_uniform(), "adaptive layout is a cell table");
+        // The table tiles the slot exactly: ranges are contiguous,
+        // per-cell widths match the resolved cell codecs, and the total
+        // is the solver's spend.
+        let mut expect_off = 0usize;
+        let mut widths = std::collections::BTreeSet::new();
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_heads {
+                let r = layout.pair_range(l, h);
+                assert_eq!(r.start, expect_off, "L{l} H{h} contiguous");
+                assert_eq!(r.start, layout.pair_offset(l, h));
+                assert_eq!(r.len(), layout.pair_bytes(l, h));
+                let cell = codec.cell_codec(l, h);
+                assert_eq!(r.len(), cell.pair_bytes(cfg.head_dim), "cell width agrees");
+                assert_eq!(cell.spec(), "adaptive");
+                widths.insert(r.len());
+                expect_off = r.end;
+            }
+        }
+        assert_eq!(expect_off, layout.slot_bytes());
+        assert!(widths.len() > 1, "sensitivity tilt produces mixed widths");
+        // Default budget = the uniform polar layout's width: adaptive
+        // never outspends the codec it replaces.
+        let uniform = page_codec_for("polarquant-r-offline", cfg.head_dim).unwrap();
+        let uniform_slot = KvLayout::new(&cfg, uniform.as_ref()).slot_bytes();
+        assert!(layout.slot_bytes() <= uniform_slot, "{} > {uniform_slot}", layout.slot_bytes());
+        // A tighter explicit budget buys a strictly smaller slot.
+        let tight = codec_for_model("adaptive:budget=3.25", &cfg).expect("solvable");
+        let tight_slot = KvLayout::new(&cfg, tight.as_ref()).slot_bytes();
+        assert!(tight_slot < layout.slot_bytes());
+        assert_eq!(tight.spec(), "adaptive:budget=3.25");
+    }
+
+    #[test]
+    fn adaptive_cells_roundtrip_and_score_like_polar() {
+        let cfg = mini();
+        let codec = codec_for_model("adaptive", &cfg).unwrap();
+        let d = cfg.head_dim;
+        let q = gaussian(d, 3);
+        for (l, h) in [(0usize, 0usize), (0, 3), (cfg.n_layers - 1, 1)] {
+            let cell = codec.cell_codec(l, h);
+            let pb = cell.pair_bytes(d);
+            let k = gaussian(d, 500 + (l * 7 + h) as u64);
+            let v = gaussian(d, 600 + (l * 7 + h) as u64);
+            let mut slot = vec![0u8; pb];
+            cell.encode_pair(&k, &v, &mut slot);
+            let mut ko = vec![0.0f32; d];
+            let mut vo = vec![0.0f32; d];
+            cell.decode_pair(&slot, &mut ko, &mut vo);
+            assert!(crate::util::stats::rel_l2_error(&ko, &k) < 0.6, "L{l} H{h} key");
+            assert!(crate::util::stats::rel_l2_error(&vo, &v) < 0.6, "L{l} H{h} value");
+            // Fused scoring against the decoded dot, like the uniform
+            // polar codec (scores live in the rotated basis; ⟨Rᵀy, q⟩ =
+            // ⟨y, Rq⟩ makes the comparison exact up to fp noise).
+            let mut scratch = CodecScratch::default();
+            let mut scores = Vec::new();
+            cell.prepare_query(&q, &mut scratch);
+            cell.key_scores_page(&slot, pb, 0, 1, &q, &mut scratch, &mut scores);
+            let want = crate::math::linalg::dot(&ko, &q);
+            assert!(
+                (scores[0] - want).abs() < 1e-2 * want.abs().max(1.0),
+                "L{l} H{h}: {} vs {want}",
+                scores[0]
+            );
+            // Value accumulate + finish reproduces the decoded value.
+            let mut acc = vec![0.0f32; d];
+            cell.value_accumulate_page(&slot, pb, 0, 1, &[1.0], &mut BlockScratch::default(), &mut acc);
+            let mut got = vec![0.0f32; d];
+            cell.value_finish(&acc, &mut got, &mut Vec::new());
+            assert!(crate::util::stats::rel_l2_error(&got, &vo) < 1e-3, "L{l} H{h} value path");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "adaptive aggregate")]
+    fn adaptive_aggregate_rejects_pair_level_calls() {
+        let cfg = mini();
+        let codec = codec_for_model("adaptive", &cfg).unwrap();
+        let d = cfg.head_dim;
+        let mut dst = vec![0u8; codec.pair_bytes(d)];
+        codec.encode_pair(&gaussian(d, 1), &gaussian(d, 2), &mut dst);
+    }
+
+    #[test]
+    fn head_view_resolves_adaptive_cells_across_page_boundaries() {
+        // The decode-path composition: a HeadKvView over an adaptive
+        // table layout must score the right bytes for *every* cell even
+        // though neighboring cells have different widths.
+        let cfg = mini();
+        let codec = codec_for_model("adaptive", &cfg).unwrap();
+        let layout = KvLayout::new(&cfg, codec.as_ref());
+        let mut pool = PagedPool::new(PagedConfig {
+            page_tokens: 4,
+            token_bytes: layout.slot_bytes(),
+            num_pages: 8,
+        });
+        let n = 10; // spans 3 pages
+        pool.register(7, n).unwrap();
+        let d = cfg.head_dim;
+        let (tl, th) = (1usize, 2usize); // the probed cell
+        let mut keys = Vec::new();
+        for t in 0..n {
+            let slot = pool.token_slot_mut(7, t).unwrap();
+            for l in 0..cfg.n_layers {
+                for h in 0..cfg.n_heads {
+                    let k = gaussian(d, (1000 + t * 17 + l * 3 + h) as u64);
+                    let v = gaussian(d, (2000 + t * 17 + l * 3 + h) as u64);
+                    let cell = codec.cell_codec(l, h);
+                    cell.encode_pair(&k, &v, &mut slot[layout.pair_range(l, h)]);
+                    if l == tl && h == th {
+                        keys.push(k);
+                    }
+                }
+            }
+        }
+        let q = gaussian(d, 9);
+        let scratch = RefCell::new(CodecScratch::default());
+        let pages = pool.table(7).unwrap().pages.clone();
+        let view = HeadKvView::new(&pool, &pages, codec.as_ref(), &layout, tl, th, n, &scratch);
+        let mut scores = Vec::new();
+        let raw_max = view.key_scores(&q, &mut scores);
+        assert_eq!(scores.len(), n);
+        let want_max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+        assert_eq!(raw_max.to_bits(), want_max.to_bits(), "cross-page fused max");
+        // Quantized scores track the true dots (rotated-basis identity).
+        let cell = codec.cell_codec(tl, th);
+        let pb = layout.pair_bytes(tl, th);
+        let mut ko = vec![0.0f32; d];
+        let mut vo = vec![0.0f32; d];
+        for t in 0..n {
+            let slot = pool.token_slot_mut(7, t).unwrap();
+            let r = layout.pair_range(tl, th);
+            cell.decode_pair(&slot[r], &mut ko, &mut vo);
+            let want = crate::math::linalg::dot(&ko, &q);
+            assert!(
+                (scores[t] - want).abs() < 1e-2 * want.abs().max(1.0),
+                "t={t} pb={pb}: {} vs {want}",
+                scores[t]
+            );
+            let true_dot = crate::math::linalg::dot(&keys[t], &q);
+            assert!((scores[t] - true_dot).abs() < 0.75, "t={t}: way off the true key");
         }
     }
 
@@ -1014,8 +1810,7 @@ mod tests {
                 for h in 0..cfg.n_heads {
                     let k = gaussian(d, (1000 + t * 17 + l * 3 + h) as u64);
                     let v = gaussian(d, (2000 + t * 17 + l * 3 + h) as u64);
-                    let off = layout.pair_offset(l, h);
-                    codec.encode_pair(&k, &v, &mut slot[off..off + layout.pair_bytes]);
+                    codec.encode_pair(&k, &v, &mut slot[layout.pair_range(l, h)]);
                     if l == 1 && h == 1 {
                         keys.push(k);
                     }

@@ -17,7 +17,7 @@
 //! used purely for admission control — its pages hold no KV bytes and
 //! are excluded from [`PoolSet::occupancy`].
 
-use crate::kvcache::codec::{is_page_codec, page_codec_for, KvLayout};
+use crate::kvcache::codec::{codec_for_model, is_page_codec, KvLayout};
 use crate::kvcache::paged::{PagedConfig, PagedPool, PoolError};
 use crate::model::config::ModelConfig;
 use std::collections::BTreeMap;
@@ -176,7 +176,7 @@ impl PoolSet {
         }
         let w = match &self.geometry {
             Geometry::Fixed(w) => *w,
-            Geometry::Model(cfg) => match page_codec_for(method, cfg.head_dim) {
+            Geometry::Model(cfg) => match codec_for_model(method, cfg) {
                 Some(codec) => KvLayout::new(cfg, codec.as_ref()).slot_bytes(),
                 // Legacy accounting width: the fp16 reference cost the
                 // heap path approximately pays per token.

@@ -517,19 +517,13 @@ impl Transformer {
             // analyze: allow(hot_path_panic, "slot pos was allocated when the scheduler admitted the request; absence is unrecoverable state corruption, not an input error")
             let slot = pool.token_slot_mut(seq, pos).expect("decode slot allocated");
             for head in 0..h {
-                let off = layout.pair_offset(l, head);
+                let cell = codec.cell_codec(l, head);
+                let r = layout.pair_range(l, head);
                 let kh = &k[head * dh..(head + 1) * dh];
                 let vh = &v[head * dh..(head + 1) * dh];
-                codec.encode_pair(kh, vh, &mut slot[off..off + layout.pair_bytes]);
+                cell.encode_pair(kh, vh, &mut slot[r.start..r.end]);
                 if let Some(qp) = quality {
-                    qp.observe_pair(
-                        codec,
-                        l,
-                        head,
-                        kh,
-                        vh,
-                        &slot[off..off + layout.pair_bytes],
-                    );
+                    qp.observe_pair(cell, l, head, kh, vh, &slot[r]);
                 }
             }
 

@@ -21,6 +21,13 @@
 //! radii — happens in [`QualityProbe::drain`], called once per
 //! scheduler tick off the decode path.
 //!
+//! Samples are interned by the codec's full *spec* (not just family
+//! name), and the drain resolves each staged sample's per-(layer, head)
+//! cell codec — for the `adaptive` codec the decode widths differ per
+//! cell, and a spec the probe has no replica for (a custom
+//! `adaptive:budget=…`) is counted dropped rather than decoded at the
+//! wrong widths.
+//!
 //! [`QualityStats`] is the fold target: per (worker, codec, layer,
 //! head) cells of reconstruction error plus per-level angle-code
 //! histograms, and [`angle_drift`] compares each cell's empirical code
@@ -28,7 +35,8 @@
 //! a mean per-level KL divergence. A preconditioned encode sits near
 //! zero; skipping the rotation trips the gauge (see `eval/angles.rs`).
 
-use crate::kvcache::codec::{page_codec_for, PageCodec, PAGE_CODEC_METHODS};
+use crate::kvcache::codec::{codec_for_model, page_codec_for, PageCodec, PAGE_CODEC_METHODS};
+use crate::model::config::ModelConfig;
 use crate::polar::codebook::Codebook;
 use crate::polar::distribution::AngleDistribution;
 use crate::util::rng::{Pcg64, Rng};
@@ -77,25 +85,21 @@ struct SampleShard {
 impl SampleShard {
     /// Stage one sampled pair. Hot-path callee of
     /// [`QualityProbe::observe_pair`]: index loops only, no allocation,
-    /// no panic paths beyond checked copies.
-    fn stage_sample(&mut self, name: &str, layer: usize, head: usize, k: &[f32], v: &[f32], pair: &[u8]) {
+    /// no panic paths beyond checked copies. `codec` is the caller's
+    /// pre-lock spec-interning result; `None` (a spec the probe has no
+    /// replica for) counts as an overflow rather than risking a decode
+    /// at the wrong widths.
+    fn stage_sample(&mut self, codec: Option<usize>, layer: usize, head: usize, k: &[f32], v: &[f32], pair: &[u8]) {
         if self.used == self.slots.len() {
             self.overflow += 1;
             return;
         }
-        let mut idx = usize::MAX;
-        for i in 0..PAGE_CODEC_METHODS.len() {
-            if PAGE_CODEC_METHODS[i] == name {
-                idx = i;
-                break;
-            }
-        }
+        let Some(idx) = codec else {
+            self.overflow += 1;
+            return;
+        };
         let slot = &mut self.slots[self.used];
-        if idx == usize::MAX
-            || k.len() != slot.k.len()
-            || v.len() != slot.v.len()
-            || pair.len() > slot.pair.len()
-        {
+        if k.len() != slot.k.len() || v.len() != slot.v.len() || pair.len() > slot.pair.len() {
             self.overflow += 1;
             return;
         }
@@ -130,16 +134,43 @@ pub struct QualityProbe {
 }
 
 impl QualityProbe {
+    /// Probe with codec replicas at bare head-dim geometry. Uniform
+    /// codecs only: model-spanning families (`adaptive`) have no replica
+    /// here, so their samples count as dropped. Serving paths should use
+    /// [`QualityProbe::for_model`].
     pub fn new(worker: usize, every: u64, seed: u64, head_dim: usize) -> Self {
+        let codecs: Vec<Option<Arc<dyn PageCodec>>> = PAGE_CODEC_METHODS
+            .iter()
+            .map(|m| page_codec_for(m, head_dim))
+            .collect();
+        Self::with_codecs(worker, every, seed, head_dim, codecs)
+    }
+
+    /// Probe whose replicas are built from the full model geometry —
+    /// required for the adaptive codec, whose per-(layer, head) widths
+    /// come from the deterministic load-time solve: the replica re-runs
+    /// that solve and decodes worker slots bit-exactly with no side
+    /// channel.
+    pub fn for_model(worker: usize, every: u64, seed: u64, cfg: &ModelConfig) -> Self {
+        let codecs: Vec<Option<Arc<dyn PageCodec>>> = PAGE_CODEC_METHODS
+            .iter()
+            .map(|m| codec_for_model(m, cfg))
+            .collect();
+        Self::with_codecs(worker, every, seed, cfg.head_dim, codecs)
+    }
+
+    fn with_codecs(
+        worker: usize,
+        every: u64,
+        seed: u64,
+        head_dim: usize,
+        codecs: Vec<Option<Arc<dyn PageCodec>>>,
+    ) -> Self {
         let phase = if every > 0 {
             Pcg64::new(seed).split(worker as u64).next_below(every)
         } else {
             0
         };
-        let codecs: Vec<Option<Arc<dyn PageCodec>>> = PAGE_CODEC_METHODS
-            .iter()
-            .map(|m| page_codec_for(m, head_dim))
-            .collect();
         let max_pair = codecs
             .iter()
             .flatten()
@@ -188,8 +219,21 @@ impl QualityProbe {
         if n % self.every != self.phase {
             return;
         }
+        // Intern the codec's *spec* (not just the family name) before
+        // taking the lock: a parameterized spec the probe has no replica
+        // for (e.g. a custom `adaptive:budget=…`) must never be decoded
+        // with the default replica's widths — it stages as None and is
+        // counted dropped instead.
+        let spec = codec.spec();
+        let mut idx = None;
+        for i in 0..PAGE_CODEC_METHODS.len() {
+            if PAGE_CODEC_METHODS[i] == spec && self.codecs[i].is_some() {
+                idx = Some(i);
+                break;
+            }
+        }
         match self.shard.try_lock() {
-            Ok(mut shard) => shard.stage_sample(codec.name(), layer, head, k, v, pair),
+            Ok(mut shard) => shard.stage_sample(idx, layer, head, k, v, pair),
             Err(_) => {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
             }
@@ -209,9 +253,13 @@ impl QualityProbe {
         let mut radii = vec![0.0f32; head_dim.max(1)];
         for i in 0..shard.used {
             let s = &shard.slots[i];
-            let Some(codec) = self.codecs.get(s.codec as usize).and_then(|c| c.as_ref()) else {
+            let Some(agg) = self.codecs.get(s.codec as usize).and_then(|c| c.as_ref()) else {
                 continue;
             };
+            // Resolve the cell codec: slots were encoded at this
+            // (layer, head)'s widths, which for adaptive differ per cell.
+            // Uniform codecs resolve to themselves.
+            let codec = agg.cell_codec(s.layer as usize, s.head as usize);
             codec.decode_pair(&s.pair[..s.pair_len], &mut kbuf, &mut vbuf);
             let (mut se, mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
             for (orig, dec) in s.k.iter().zip(&kbuf).chain(s.v.iter().zip(&vbuf)) {
@@ -233,21 +281,30 @@ impl QualityProbe {
             cell.samples += 1;
             cell.mse_sum += se / n_coords;
             cell.cos_sum += cos;
-            if let Some(pq) = codec.polar() {
+            if let Some((kq, vq)) = codec.polar_pair() {
                 if cell.angle_counts.is_empty() {
-                    cell.angle_counts = (0..pq.cfg.levels)
-                        .map(|l| vec![0u64; 1usize << pq.cfg.level_bits[l]])
+                    cell.angle_counts = (0..kq.cfg.levels)
+                        .map(|l| vec![0u64; 1usize << kq.cfg.level_bits[l]])
                         .collect();
                 }
-                let vb = pq.vec_slot_bytes();
-                // Key half then value half: each is one encoded vector.
-                for half in [&s.pair[..vb], &s.pair[vb..2 * vb]] {
-                    for l in 0..pq.cfg.levels {
-                        let n = pq.slot_level_codes(half, l, &mut codes);
-                        for &c in &codes[..n] {
-                            let counts = &mut cell.angle_counts[l];
-                            if (c as usize) < counts.len() {
-                                counts[c as usize] += 1;
+                // Key half then value half, each one encoded vector —
+                // sized by its *own* quantizer (an adaptive cell's K and
+                // V halves can carry different code widths).
+                let kb = kq.vec_slot_bytes();
+                let halves = [(kq, &s.pair[..kb]), (vq, &s.pair[kb..kb + vq.vec_slot_bytes()])];
+                for (pq, half) in halves {
+                    // Angle histograms are keyed to the cell's key-half
+                    // geometry; a value half with different widths would
+                    // land in wrong-shaped bins, so it only counts when
+                    // the widths agree. Radii are width-independent.
+                    if pq.cfg.level_bits == kq.cfg.level_bits {
+                        for l in 0..pq.cfg.levels {
+                            let n = pq.slot_level_codes(half, l, &mut codes);
+                            for &c in &codes[..n] {
+                                let counts = &mut cell.angle_counts[l];
+                                if (c as usize) < counts.len() {
+                                    counts[c as usize] += 1;
+                                }
                             }
                         }
                     }
@@ -543,6 +600,58 @@ mod tests {
             [&CellKey { worker: 0, codec: "polarquant-r-offline", layer: 1, head: 1 }];
         assert_eq!(cell.samples, 16, "cells accumulate across drains");
         assert_eq!(global.workers[&0].observed, 16, "worker counters stay absolute");
+    }
+
+    #[test]
+    fn adaptive_cells_decode_at_their_own_widths_and_foreign_specs_drop() {
+        let cfg = ModelConfig::mini();
+        let probe = QualityProbe::for_model(0, 1, 1, &cfg);
+        let codec = codec_for_model("adaptive", &cfg).unwrap();
+        let d = cfg.head_dim;
+        let mut rng = Pcg64::new(7);
+        let mut k = vec![0.0f32; d];
+        let mut v = vec![0.0f32; d];
+        let mut fed = 0u64;
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_heads {
+                let cell = codec.cell_codec(l, h);
+                let mut buf = vec![0u8; cell.pair_bytes(d)];
+                rng.fill_gaussian(&mut k);
+                rng.fill_gaussian(&mut v);
+                cell.encode_pair(&k, &v, &mut buf);
+                probe.observe_pair(cell, l, h, &k, &v, &buf);
+                fed += 1;
+            }
+        }
+        let stats = probe.drain();
+        assert_eq!(stats.total_samples(), fed, "every cell sampled at every=1");
+        assert_eq!(stats.workers[&0].dropped, 0);
+        for (key, cell) in &stats.cells {
+            assert_eq!(key.codec, "adaptive");
+            assert!(cell.samples == 1);
+            // Decoded at the cell's own widths: reconstruction must be
+            // sane for every cell, including the narrowest ones.
+            assert!(
+                cell.mean_cosine() > 0.5,
+                "L{} H{} cos {}",
+                key.layer,
+                key.head,
+                cell.mean_cosine()
+            );
+            assert!(cell.mean_mse().is_finite());
+            assert!(!cell.angle_counts.is_empty(), "polar cells histogram codes");
+            assert!(cell.radius_count > 0);
+        }
+        // A non-default budget has no probe replica: its samples count
+        // as dropped, never decoded with the default replica's widths.
+        let custom = codec_for_model("adaptive:budget=3.25", &cfg).unwrap();
+        let cell = custom.cell_codec(0, 0);
+        let mut buf = vec![0u8; cell.pair_bytes(d)];
+        cell.encode_pair(&k, &v, &mut buf);
+        probe.observe_pair(cell, 0, 0, &k, &v, &buf);
+        let s2 = probe.drain();
+        assert_eq!(s2.total_samples(), 0);
+        assert_eq!(s2.workers[&0].dropped, 1);
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Sensitivity-aware bit-budget allocation (ROADMAP "Adaptive precision").
+//!
+//! The paper's Lemma 2 makes expected angle-quantization error at any
+//! code width *computable* (analytic law → Lloyd-Max →
+//! [`Codebook::expected_sq_error`]), so choosing per-(layer, head,
+//! K-vs-V) widths is a deterministic optimization, not a tuning problem:
+//! minimize the sensitivity-weighted sum of analytic reconstruction
+//! errors subject to a total resident-bytes budget per token slot.
+//!
+//! The solver is a greedy marginal-gain sweep. Every (layer, head, K/V)
+//! half-cell starts at the 1-bit floor; each step upgrades the single
+//! (half-cell, level) whose error reduction per extra slot byte is
+//! largest, until no affordable upgrade remains. Because the error table
+//! is convex-decreasing in bits per level, greedy is the classic
+//! incremental solution to this separable allocation problem (the same
+//! structure as Lagrangian rate allocation); ties and iteration order are
+//! fixed, so the result is fully deterministic — two processes solving
+//! the same (model, budget, sensitivity) always agree on the layout,
+//! which is what lets quality-probe replicas decode a worker's adaptive
+//! slots without any side channel.
+//!
+//! A first-order error model justifies comparing levels directly: a
+//! level-ℓ angle error Δθ perturbs a subvector of squared norm ~2^ℓ, and
+//! there are d/2^ℓ such angles per vector, so each level's contribution
+//! to E‖x−x̂‖² is ≈ d·E[Δθ²] — level-independent up to the cascade
+//! cross-terms. The per-level expected angle error alone is therefore
+//! the right marginal currency (and reproduces the paper's wide-level-1
+//! choice: the uniform-circle level has by far the largest variance).
+
+use crate::model::config::ModelConfig;
+use crate::polar::codebook::Codebook;
+use crate::polar::distribution::AngleDistribution;
+use crate::polar::quantizer::PolarConfig;
+
+/// Widest per-level angle code the solver will hand out. Bounded well
+/// under the codec's 12-bit packing limit: the level-1 prepared-query
+/// table is `d/2 × 2^bits` floats per (layer, head, step), so 8 bits is
+/// already a 256-entry codebook.
+pub const MAX_LEVEL_BITS: u8 = 8;
+
+/// Relative weight of one (layer, head) cell's K and V reconstruction
+/// error in the allocation objective.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellSensitivity {
+    pub k: f64,
+    pub v: f64,
+}
+
+/// Deterministic sensitivity prior — no training data, shapes only.
+///
+/// Keys outweigh values: a key error perturbs the attention logit of
+/// every query that ever scores it (then gets amplified through the
+/// softmax renormalization), while a value error enters the output once,
+/// scaled down by its own attention weight (NQKV/KVQuant report the same
+/// asymmetry empirically). Early layers outweigh late ones: a cache
+/// error introduced at layer ℓ is re-consumed by every one of the
+/// remaining blocks. Heads tie under the prior (nothing distinguishes
+/// them without data); [`refine_with_quality`] breaks that tie from live
+/// telemetry when available.
+pub fn sensitivity_prior(cfg: &ModelConfig) -> Vec<CellSensitivity> {
+    let mut out = Vec::with_capacity(cfg.n_layers * cfg.n_heads);
+    for l in 0..cfg.n_layers {
+        let depth = if cfg.n_layers > 1 {
+            2.0 - l as f64 / (cfg.n_layers - 1) as f64
+        } else {
+            1.0
+        };
+        for _h in 0..cfg.n_heads {
+            out.push(CellSensitivity { k: 2.0 * depth, v: depth });
+        }
+    }
+    out
+}
+
+/// Refine a prior with observed per-cell reconstruction MSE (the
+/// `obs::quality` `QualityCell` signal): cells decoding worse than the
+/// fleet mean earn proportionally more weight. `observed` holds
+/// `(layer, head, mse)` triples; cells without an observation keep their
+/// prior. The multiplier is clamped so a cold or noisy probe cannot
+/// starve any cell.
+pub fn refine_with_quality(
+    prior: &[CellSensitivity],
+    observed: &[(usize, usize, f64)],
+    n_heads: usize,
+) -> Vec<CellSensitivity> {
+    let mut out = prior.to_vec();
+    if observed.is_empty() {
+        return out;
+    }
+    let mean = observed.iter().map(|(_, _, m)| *m).sum::<f64>() / observed.len() as f64;
+    if !(mean > 0.0) {
+        return out;
+    }
+    for &(l, h, mse) in observed {
+        let idx = l * n_heads + h;
+        if let Some(cell) = out.get_mut(idx) {
+            let mult = (mse / mean).sqrt().clamp(0.5, 2.0);
+            cell.k *= mult;
+            cell.v *= mult;
+        }
+    }
+    out
+}
+
+/// Chosen per-level angle code widths for one (layer, head) cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellWidths {
+    /// Key-vector bits per level, len = recursion depth.
+    pub k_bits: Vec<u8>,
+    /// Value-vector bits per level.
+    pub v_bits: Vec<u8>,
+    /// Encoded key-vector slot bytes (fp16 radii + byte-rounded codes).
+    pub k_bytes: usize,
+    /// Encoded value-vector slot bytes.
+    pub v_bytes: usize,
+}
+
+impl CellWidths {
+    /// Bytes this cell's (k, v) pair occupies inside a token slot.
+    pub fn pair_bytes(&self) -> usize {
+        self.k_bytes + self.v_bytes
+    }
+}
+
+/// A solved allocation: one [`CellWidths`] per (layer, head), row-major
+/// by layer (the same indexing as `KvLayout::pair_offset`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitAllocation {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Recursion depth shared by every cell (set by the head dim).
+    pub levels: usize,
+    /// The resident-bytes budget per token slot the solver was given.
+    pub budget_bytes: usize,
+    pub cells: Vec<CellWidths>,
+}
+
+impl BitAllocation {
+    pub fn cell(&self, layer: usize, head: usize) -> &CellWidths {
+        &self.cells[layer * self.n_heads + head]
+    }
+
+    /// Bytes one token slot occupies under this allocation — by
+    /// construction ≤ [`Self::budget_bytes`], with no affordable upgrade
+    /// left on the table.
+    pub fn slot_bytes(&self) -> usize {
+        self.cells.iter().map(|c| c.pair_bytes()).sum()
+    }
+
+    /// Achieved bits per stored KV coordinate.
+    pub fn bits_per_coord(&self) -> f64 {
+        (self.slot_bytes() * 8) as f64
+            / (2 * self.n_layers * self.n_heads * self.head_dim) as f64
+    }
+
+    /// Human-readable per-(layer, head) width map — what the "inspect an
+    /// allocation" recipe prints.
+    pub fn describe(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "adaptive allocation: {} layers × {} heads, d={}, budget {} B/token → {} B/token ({:.3} bits/coord)",
+            self.n_layers,
+            self.n_heads,
+            self.head_dim,
+            self.budget_bytes,
+            self.slot_bytes(),
+            self.bits_per_coord()
+        );
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                let c = self.cell(l, h);
+                let _ = writeln!(
+                    s,
+                    "  L{l} H{h}  K={:?} ({} B)  V={:?} ({} B)",
+                    c.k_bits, c.k_bytes, c.v_bits, c.v_bytes
+                );
+            }
+        }
+        s
+    }
+}
+
+/// Encoded vector-slot bytes for a width vector at dimension `dim`
+/// (matches `PolarConfig::bits_per_vector` / `vec_slot_bytes`: fp16
+/// radii + angle codes rounded up to whole bytes).
+fn vec_bytes(dim: usize, bits: &[u8]) -> usize {
+    let levels = bits.len();
+    let radii = (dim >> levels) * 2;
+    let angle_bits: usize =
+        (0..levels).map(|l| (dim >> (l + 1)) * bits[l] as usize).sum();
+    radii + angle_bits.div_ceil(8)
+}
+
+/// Analytic expected squared angle error at `level` (1-based) with a
+/// `bits`-wide Lloyd-Max codebook — the Lemma-2 law the whole solver
+/// prices against. Memoized per (level, bits) by the codebook cache.
+fn level_err(level: usize, bits: u8) -> f64 {
+    Codebook::lloyd_max_analytic(level, bits)
+        .expected_sq_error(&AngleDistribution::for_level(level))
+}
+
+/// Solve the bit-budget allocation for `cfg` at `budget_bits_per_coord`
+/// (bits per stored KV coordinate — e.g. the uniform paper layout's
+/// 3.875 at d=64) under per-cell sensitivity weights (`sens` len
+/// `n_layers × n_heads`; see [`sensitivity_prior`]).
+///
+/// Returns `None` when the head dim cannot carry a polar layout at all
+/// (odd dims, fused-kernel capacity — the same gate as the uniform
+/// codecs) or when the budget cannot even cover the 1-bit floor.
+pub fn solve(
+    cfg: &ModelConfig,
+    budget_bits_per_coord: f64,
+    sens: &[CellSensitivity],
+) -> Option<BitAllocation> {
+    assert_eq!(
+        sens.len(),
+        cfg.n_layers * cfg.n_heads,
+        "one CellSensitivity per (layer, head)"
+    );
+    let d = cfg.head_dim;
+    // Same checked constructor as the uniform page codecs: depth adapted
+    // to d, gated on the fused kernels' capacity.
+    let base = PolarConfig::checked_page_layout(d, PolarConfig::paper_default(d))?;
+    let levels = base.levels;
+    if !(budget_bits_per_coord > 0.0) {
+        return None;
+    }
+    let budget_bytes =
+        (budget_bits_per_coord * cfg.kv_coords_per_token() as f64 / 8.0).floor() as usize;
+
+    // Per-(level, bits) analytic error, priced once.
+    let mut err = vec![[0.0f64; MAX_LEVEL_BITS as usize + 1]; levels];
+    for (l, row) in err.iter_mut().enumerate() {
+        for b in 1..=MAX_LEVEL_BITS {
+            row[b as usize] = level_err(l + 1, b);
+        }
+    }
+
+    // State: one width vector per half-cell; halves are [cell0.K,
+    // cell0.V, cell1.K, …] so iteration order (and therefore greedy
+    // tie-breaking) is fixed.
+    let n_cells = cfg.n_layers * cfg.n_heads;
+    let mut halves: Vec<Vec<u8>> = vec![vec![1u8; levels]; 2 * n_cells];
+    let weight = |half: usize| {
+        let s = &sens[half / 2];
+        if half % 2 == 0 {
+            s.k
+        } else {
+            s.v
+        }
+    };
+    let mut spent: usize = halves.iter().map(|b| vec_bytes(d, b)).sum();
+    if spent > budget_bytes {
+        return None;
+    }
+
+    loop {
+        // Pick the (half, level) upgrade with the best error reduction
+        // per extra byte; zero-cost upgrades (the byte ceil didn't move)
+        // are always taken first.
+        let mut best: Option<(usize, usize, f64, usize)> = None; // (half, level, gain/cost, cost)
+        for (hi, bits) in halves.iter().enumerate() {
+            let cur_bytes = vec_bytes(d, bits);
+            let w = weight(hi);
+            for l in 0..levels {
+                let b = bits[l];
+                if b >= MAX_LEVEL_BITS {
+                    continue;
+                }
+                let mut next = bits.clone();
+                next[l] = b + 1;
+                let cost = vec_bytes(d, &next) - cur_bytes;
+                if spent + cost > budget_bytes {
+                    continue;
+                }
+                let gain = w * (err[l][b as usize] - err[l][b as usize + 1]);
+                let ratio = if cost == 0 { f64::INFINITY } else { gain / cost as f64 };
+                if best.map_or(true, |(_, _, r, _)| ratio > r) {
+                    best = Some((hi, l, ratio, cost));
+                }
+            }
+        }
+        match best {
+            Some((hi, l, _, cost)) => {
+                halves[hi][l] += 1;
+                spent += cost;
+            }
+            None => break,
+        }
+    }
+
+    let cells = (0..n_cells)
+        .map(|c| {
+            let k_bits = halves[2 * c].clone();
+            let v_bits = halves[2 * c + 1].clone();
+            let k_bytes = vec_bytes(d, &k_bits);
+            let v_bytes = vec_bytes(d, &v_bits);
+            CellWidths { k_bits, v_bits, k_bytes, v_bytes }
+        })
+        .collect();
+    Some(BitAllocation {
+        n_layers: cfg.n_layers,
+        n_heads: cfg.n_heads,
+        head_dim: d,
+        levels,
+        budget_bytes,
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini() -> ModelConfig {
+        ModelConfig::mini()
+    }
+
+    /// Uniform paper bits/coord at the mini model's head dim.
+    fn paper_budget(cfg: &ModelConfig) -> f64 {
+        PolarConfig::checked_page_layout(
+            cfg.head_dim,
+            PolarConfig::paper_default(cfg.head_dim),
+        )
+        .unwrap()
+        .bits_per_coordinate()
+    }
+
+    #[test]
+    fn prior_prefers_keys_and_early_layers() {
+        let cfg = mini();
+        let s = sensitivity_prior(&cfg);
+        assert_eq!(s.len(), cfg.n_layers * cfg.n_heads);
+        for c in &s {
+            assert!(c.k > c.v, "keys outweigh values");
+        }
+        let first = s[0].k;
+        let last = s[(cfg.n_layers - 1) * cfg.n_heads].k;
+        assert!(first > last, "early layers outweigh late ones");
+        // Heads tie under the prior.
+        assert_eq!(s[0], s[1]);
+    }
+
+    #[test]
+    fn solve_is_deterministic_and_respects_budget() {
+        let cfg = mini();
+        let sens = sensitivity_prior(&cfg);
+        let budget = paper_budget(&cfg);
+        let a = solve(&cfg, budget, &sens).expect("solvable at paper budget");
+        let b = solve(&cfg, budget, &sens).expect("solvable at paper budget");
+        assert_eq!(a, b, "same inputs must yield the same layout");
+        assert!(a.slot_bytes() <= a.budget_bytes, "never exceeds the budget");
+        assert!(a.bits_per_coord() <= budget + 1e-9);
+        // Maximality: no single +1-bit upgrade still fits the budget
+        // (otherwise the greedy loop would have taken it).
+        let headroom = a.budget_bytes - a.slot_bytes();
+        for c in &a.cells {
+            for bits in [&c.k_bits, &c.v_bits] {
+                for l in 0..a.levels {
+                    if bits[l] >= MAX_LEVEL_BITS {
+                        continue;
+                    }
+                    let mut next = bits.clone();
+                    next[l] += 1;
+                    let cost = vec_bytes(a.head_dim, &next) - vec_bytes(a.head_dim, bits);
+                    assert!(cost > headroom, "affordable upgrade left on the table");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_follows_sensitivity() {
+        let cfg = mini();
+        let sens = sensitivity_prior(&cfg);
+        let a = solve(&cfg, paper_budget(&cfg), &sens).expect("solvable");
+        // Keys never get fewer bytes than values within a cell, and the
+        // first layer never fewer than the last (weights are ordered and
+        // the error table is shared).
+        for c in &a.cells {
+            assert!(c.k_bytes >= c.v_bytes, "K outweighs V: {c:?}");
+        }
+        let first = a.cell(0, 0);
+        let last = a.cell(cfg.n_layers - 1, 0);
+        assert!(
+            first.k_bytes + first.v_bytes >= last.k_bytes + last.v_bytes,
+            "layer 0 outweighs the last layer"
+        );
+        // The tilt is real: at least two distinct pair widths exist.
+        let mut widths: Vec<usize> = a.cells.iter().map(|c| c.pair_bytes()).collect();
+        widths.dedup();
+        assert!(widths.len() > 1, "allocation degenerated to uniform");
+    }
+
+    #[test]
+    fn weighted_objective_beats_uniform_paper_layout_at_equal_bytes() {
+        let cfg = mini();
+        let sens = sensitivity_prior(&cfg);
+        let paper = PolarConfig::checked_page_layout(
+            cfg.head_dim,
+            PolarConfig::paper_default(cfg.head_dim),
+        )
+        .unwrap();
+        let a = solve(&cfg, paper.bits_per_coordinate(), &sens).expect("solvable");
+        let uniform_vec = vec_bytes(cfg.head_dim, &paper.level_bits);
+        assert!(
+            a.slot_bytes() <= 2 * cfg.n_layers * cfg.n_heads * uniform_vec,
+            "adaptive must not outspend the uniform layout it replaces"
+        );
+        let half_err = |bits: &[u8], w: f64| -> f64 {
+            w * bits.iter().enumerate().map(|(l, &b)| level_err(l + 1, b)).sum::<f64>()
+        };
+        let mut adaptive_obj = 0.0;
+        let mut uniform_obj = 0.0;
+        for (c, s) in a.cells.iter().zip(&sens) {
+            adaptive_obj += half_err(&c.k_bits, s.k) + half_err(&c.v_bits, s.v);
+            uniform_obj += half_err(&paper.level_bits, s.k) + half_err(&paper.level_bits, s.v);
+        }
+        assert!(
+            adaptive_obj < uniform_obj,
+            "solver objective must strictly beat uniform: {adaptive_obj} vs {uniform_obj}"
+        );
+    }
+
+    #[test]
+    fn refinement_shifts_weight_toward_lossy_cells() {
+        let cfg = mini();
+        let prior = sensitivity_prior(&cfg);
+        // Head 3 of every layer decodes twice as badly as the rest.
+        let mut obs = Vec::new();
+        for l in 0..cfg.n_layers {
+            for h in 0..cfg.n_heads {
+                obs.push((l, h, if h == 3 { 2.0 } else { 1.0 }));
+            }
+        }
+        let refined = refine_with_quality(&prior, &obs, cfg.n_heads);
+        assert!(refined[3].k > refined[0].k, "lossy head earns more weight");
+        let a = solve(&cfg, paper_budget(&cfg), &refined).expect("solvable");
+        let favored = a.cell(0, 3).pair_bytes();
+        let baseline = a.cell(0, 0).pair_bytes();
+        assert!(
+            favored >= baseline,
+            "refined sensitivity must steer bytes toward the lossy head"
+        );
+        // Empty observations are a no-op.
+        assert_eq!(refine_with_quality(&prior, &[], cfg.n_heads), prior);
+    }
+
+    #[test]
+    fn unsupported_dims_and_budgets_return_none() {
+        let mut cfg = mini();
+        let sens = sensitivity_prior(&cfg);
+        assert!(solve(&cfg, 0.05, &sens).is_none(), "budget under the 1-bit floor");
+        cfg.head_dim = 25; // odd: cannot pair coordinates
+        let sens = sensitivity_prior(&cfg);
+        assert!(solve(&cfg, 4.0, &sens).is_none());
+    }
+}

@@ -8,6 +8,7 @@
 //! [`quantizer::PolarQuantizer`] ties it together and is what the KV cache
 //! stores per page.
 
+pub mod allocate;
 pub mod codebook;
 pub mod distribution;
 pub mod error;

@@ -141,6 +141,45 @@ impl PolarConfig {
     pub fn fits_fused_kernels(&self) -> bool {
         self.dim <= MAX_KERNEL_DIM && self.num_radii() <= MAX_RADII
     }
+
+    /// The single checked gate for configs that will run the fused
+    /// kernels: validates the layout and applies
+    /// [`Self::fits_fused_kernels`]. Every page-codec config — uniform
+    /// or adaptive — must pass through here (or through
+    /// [`Self::checked_page_layout`], which calls it), so the capacity
+    /// policy cannot silently diverge between construction sites.
+    pub fn checked_for_kernels(self) -> Option<Self> {
+        self.validate();
+        if self.fits_fused_kernels() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+
+    /// Paper layout adapted to head dimension `d`: recursion depth
+    /// L = min(4, trailing zeros of d) with the matching prefix of
+    /// `base`'s bit allocation — the full paper layout whenever d is a
+    /// multiple of 16, graceful shallower trees for other even dims —
+    /// then capacity-gated via [`Self::checked_for_kernels`]. `None` for
+    /// odd dims (RoPE forbids them too) and for dims past the fused
+    /// kernels' stack scratch (the old `num_radii() > 64` gate admitted
+    /// d up to 1024 while `accumulate_with` indexes out of bounds past
+    /// d = 256).
+    pub fn checked_page_layout(d: usize, base: PolarConfig) -> Option<PolarConfig> {
+        if d == 0 {
+            return None;
+        }
+        let levels = (d.trailing_zeros() as usize).min(4);
+        if levels == 0 {
+            return None;
+        }
+        let mut cfg = base;
+        cfg.dim = d;
+        cfg.levels = levels;
+        cfg.level_bits.truncate(levels);
+        cfg.checked_for_kernels()
+    }
 }
 
 /// Reusable page-block kernel scratch (§Perf, vectorized decode): the

@@ -38,11 +38,10 @@ fn encode_prompt(
         let slot = pool.token_slot_mut(seq, t).expect("slot");
         for (l, layer) in pre.kv.iter().enumerate() {
             for h in 0..cfg.n_heads {
-                let off = layout.pair_offset(l, h);
-                codec.encode_pair(
+                codec.cell_codec(l, h).encode_pair(
                     &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh],
                     &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh],
-                    &mut slot[off..off + layout.pair_bytes],
+                    &mut slot[layout.pair_range(l, h)],
                 );
             }
         }
@@ -276,4 +275,39 @@ fn kivi_and_polar_pool_scores_stay_finite_end_to_end() {
     let page = |m: &str| pools.pool(m).unwrap().page_bytes();
     assert!(page("polarquant-r-offline") < page("fp16"));
     assert!(page("kivi") < page("fp16"));
+}
+
+#[test]
+fn adaptive_pool_serving_stays_finite_and_never_outspends_uniform_polar() {
+    // The adaptive codec through the real scheduler: generations
+    // complete with in-vocab tokens, decode stays finite across mixed
+    // per-(layer, head) cell widths, and — the allocation's default
+    // budget being the uniform polar width — its pool pages never
+    // outspend `polarquant-r-offline`'s. A custom-budget spec routes to
+    // its *own* pool at its own (strictly smaller) width.
+    let cfg = ModelConfig::test();
+    let pools = share_pools(PoolSet::for_model(&cfg, 16, 4096));
+    let mut engine = NativeWorker::with_pools(Weights::synthetic(&cfg, 3), pools.clone());
+    let mut sched = Scheduler::with_prefix_cache_shared(pools, 4, 1 << 20);
+    let prompt: Vec<u32> = (0..32).map(|i| (i * 3 + 2) % 64).collect();
+    let methods = ["adaptive", "adaptive:budget=3.25", "polarquant-r-offline"];
+    for (id, method) in methods.iter().enumerate() {
+        let mut r = GenRequest::new(id as u64 + 1, prompt.clone(), 4);
+        r.method = (*method).to_string();
+        sched.admit(vec![Tracked::new(r)], &mut engine);
+        let resp = run_to_done(&mut sched, &mut engine).remove(0);
+        assert_eq!(resp.tokens.len(), 4, "{method}");
+        assert!(resp.tokens.iter().all(|&t| (t as usize) < cfg.vocab), "{method}");
+        assert!(resp.cache_bytes > 0, "{method}");
+    }
+    let pools = sched.pools.lock().unwrap();
+    let page = |m: &str| pools.pool(m).unwrap().page_bytes();
+    assert!(
+        page("adaptive") <= page("polarquant-r-offline"),
+        "default budget must not outspend uniform polar"
+    );
+    assert!(
+        page("adaptive:budget=3.25") < page("adaptive"),
+        "a tighter budget buys a strictly smaller pool page"
+    );
 }

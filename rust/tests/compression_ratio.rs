@@ -17,7 +17,9 @@
 use polarquant::coordinator::request::{GenRequest, Tracked};
 use polarquant::coordinator::scheduler::Scheduler;
 use polarquant::coordinator::worker::NativeWorker;
-use polarquant::kvcache::codec::{max_slot_bytes, page_codec_for, KvLayout, PAGE_CODEC_METHODS};
+use polarquant::kvcache::codec::{
+    codec_for_model, max_slot_bytes, AdaptivePageCodec, KvLayout, PAGE_CODEC_METHODS,
+};
 use polarquant::kvcache::pools::{share_pools, PoolSet};
 use polarquant::model::config::ModelConfig;
 use polarquant::model::weights::Weights;
@@ -25,7 +27,7 @@ use polarquant::model::weights::Weights;
 const PAGE_TOKENS: usize = 16;
 
 fn layout_for(cfg: &ModelConfig, method: &str) -> KvLayout {
-    let codec = page_codec_for(method, cfg.head_dim).expect("page codec");
+    let codec = codec_for_model(method, cfg).expect("page codec");
     KvLayout::new(cfg, codec.as_ref())
 }
 
@@ -83,6 +85,57 @@ fn achieved_bits_per_coord_match_the_paper_layouts() {
     // while polar carries no constants and stays ≤ 4 bits.
     assert!(bits("kivi") > 2.0);
     assert!(bits("polarquant-r-offline") <= 4.0);
+    // Adaptive defaults its budget to the uniform polar width, so its
+    // achieved bits/coord never exceed 3.875 — and a sane allocation
+    // spends most of it.
+    assert!(bits("adaptive") <= 3.875);
+    assert!(bits("adaptive") > 3.0, "solver left most of the budget unspent");
+}
+
+#[test]
+fn adaptive_resident_bytes_pin_the_solver_budget() {
+    // The solver's spend IS the resident cost: for both the default
+    // budget (= uniform polar bits) and an explicit one, the layout's
+    // slot width equals the allocation's `slot_bytes()`, never exceeds
+    // `budget_bytes`, and pool pages are priced at exactly that width.
+    let cfg = ModelConfig::mini();
+    for (method, budget) in [("adaptive", None), ("adaptive:budget=3.25", Some(3.25))] {
+        let codec = AdaptivePageCodec::build(method, budget, &cfg).expect("solvable");
+        let alloc = codec.allocation();
+        let layout = KvLayout::new(&cfg, &codec);
+        assert_eq!(layout.slot_bytes(), alloc.slot_bytes(), "{method}");
+        assert!(
+            alloc.slot_bytes() <= alloc.budget_bytes,
+            "{method}: spend {} over budget {}",
+            alloc.slot_bytes(),
+            alloc.budget_bytes
+        );
+        // Greedy stops when no whole upgrade fits — the remainder is
+        // bounded by the widest single-level upgrade, not proportional
+        // to the budget. A byte-tight pin that still permits it:
+        assert!(
+            alloc.budget_bytes - alloc.slot_bytes() < 32,
+            "{method}: {} of {} budget bytes unspent",
+            alloc.budget_bytes - alloc.slot_bytes(),
+            alloc.budget_bytes
+        );
+        // The pool prices pages at exactly this width.
+        let mut pools = PoolSet::for_model(&cfg, PAGE_TOKENS, 4096);
+        assert_eq!(pools.token_bytes_for(method), alloc.slot_bytes(), "{method}");
+        let pool = pools.pool_mut(method);
+        pool.register(1, 40).unwrap();
+        let pages = 40usize.div_ceil(PAGE_TOKENS);
+        assert_eq!(pool.memory_bytes(), pages * PAGE_TOKENS * alloc.slot_bytes(), "{method}");
+    }
+    // The explicit budget must be the binding constraint (not a no-op).
+    let a = AdaptivePageCodec::build("adaptive", None, &cfg).unwrap();
+    let b = AdaptivePageCodec::build("adaptive:budget=3.25", Some(3.25), &cfg).unwrap();
+    assert!(b.allocation().slot_bytes() < a.allocation().slot_bytes());
+    // `describe()` is the allocation-inspection surface (see the verify
+    // skill): one line per (layer, head) with K/V level widths.
+    let desc = a.allocation().describe();
+    assert!(desc.lines().count() >= cfg.n_layers * cfg.n_heads);
+    assert!(desc.contains("L0"), "describe names layers:\n{desc}");
 }
 
 /// Encode the same prompt through the real engine for `method` and

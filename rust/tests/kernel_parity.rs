@@ -10,7 +10,7 @@
 //! width match the single-threaded run bit for bit.
 
 use polarquant::kvcache::codec::{
-    page_codec_for, CodecScratch, KvLayout, PageCodec, PAGE_CODEC_METHODS,
+    codec_for_model, page_codec_for, CodecScratch, KvLayout, PageCodec, PAGE_CODEC_METHODS,
 };
 use polarquant::kvcache::paged::{PagedConfig, PagedPool};
 use polarquant::model::config::ModelConfig;
@@ -32,116 +32,149 @@ fn gaussian(n: usize, seed: u64) -> Vec<f32> {
 const PAGE_TOKENS: usize = 4;
 const COUNTS: [usize; 5] = [1, 2, 3, PAGE_TOKENS, 7];
 
-#[test]
-fn page_kernels_bitwise_match_single_slot_calls() {
-    let d = 64;
+/// The batch-vs-scalar bitwise parity battery for one codec (or one
+/// adaptive *cell* codec) at dimension `d`. `label` names the codec in
+/// failure messages; `seed0` de-correlates the data across cells.
+fn check_codec_parity(label: &str, codec: &dyn PageCodec, d: usize, seed0: u64) {
     let n = *COUNTS.iter().max().unwrap();
-    for method in PAGE_CODEC_METHODS {
-        let codec = page_codec_for(method, d)
-            .unwrap_or_else(|| panic!("{method} must be page-native at d={d}"));
-        let pb = codec.pair_bytes(d);
-        // Pair mid-slot with slack on both sides, like a real multi-head
-        // layout; surrounding garbage pins that kernels read only their
-        // own pair's bytes.
-        let offset = 5;
-        let stride = offset + pb + 3;
-        let mut buf = vec![0xA5u8; n * stride + 11];
-        for i in 0..n {
-            let k = gaussian(d, 100 + i as u64);
-            let v = gaussian(d, 200 + i as u64);
-            codec.encode_pair(&k, &v, &mut buf[i * stride + offset..][..pb]);
-        }
-        let q = gaussian(d, 9);
+    let pb = codec.pair_bytes(d);
+    // Pair mid-slot with slack on both sides, like a real multi-head
+    // layout; surrounding garbage pins that kernels read only their
+    // own pair's bytes.
+    let offset = 5;
+    let stride = offset + pb + 3;
+    let mut buf = vec![0xA5u8; n * stride + 11];
+    for i in 0..n {
+        let k = gaussian(d, seed0 + 100 + i as u64);
+        let v = gaussian(d, seed0 + 200 + i as u64);
+        codec.encode_pair(&k, &v, &mut buf[i * stride + offset..][..pb]);
+    }
+    let q = gaussian(d, 9);
 
-        // Independent scratches: the batch side must not be able to lean
-        // on state the scalar side left behind, or vice versa.
-        let mut sc_batch = CodecScratch::default();
-        let mut sc_slot = CodecScratch::default();
-        codec.prepare_query(&q, &mut sc_batch);
-        codec.prepare_query(&q, &mut sc_slot);
+    // Independent scratches: the batch side must not be able to lean
+    // on state the scalar side left behind, or vice versa.
+    let mut sc_batch = CodecScratch::default();
+    let mut sc_slot = CodecScratch::default();
+    codec.prepare_query(&q, &mut sc_batch);
+    codec.prepare_query(&q, &mut sc_slot);
 
-        for &count in &COUNTS {
-            // --- key scores: one batch call vs count single-slot calls.
-            let mut got = Vec::new();
-            let got_max =
-                codec.key_scores_page(&buf, stride, offset, count, &q, &mut sc_batch, &mut got);
-            let mut want = Vec::new();
-            let mut want_max = f32::NEG_INFINITY;
-            for i in 0..count {
-                let m = codec.key_scores_page(
-                    &buf[i * stride..],
-                    stride,
-                    offset,
-                    1,
-                    &q,
-                    &mut sc_slot,
-                    &mut want,
-                );
-                if m > want_max {
-                    want_max = m;
-                }
-            }
-            assert_eq!(got.len(), count, "{method} count={count}");
-            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
-                let msg = format!("{method} count={count} slot {i}: batch {g} vs scalar {w}");
-                assert_eq!(g.to_bits(), w.to_bits(), "{msg}");
-            }
-            let msg = format!("{method} count={count}: max {got_max} vs fold {want_max}");
-            assert_eq!(got_max.to_bits(), want_max.to_bits(), "{msg}");
-
-            // --- value accumulate: zero weights mixed in (the masked-slot
-            // skip must not perturb bits — adding 0.0 is not a bitwise
-            // no-op in IEEE 754).
-            let w: Vec<f32> = (0..count)
-                .map(|i| if i % 3 == 1 { 0.0 } else { 0.1 + 0.05 * i as f32 })
-                .collect();
-            let seed_acc: Vec<f32> = (0..d).map(|j| 0.25 + j as f32 * 1e-3).collect();
-            let mut acc_batch = seed_acc.clone();
-            let mut acc_slot = seed_acc;
-            let mut blk_batch = BlockScratch::default();
-            let mut blk_slot = BlockScratch::default();
-            codec.value_accumulate_page(
-                &buf,
+    for &count in &COUNTS {
+        // --- key scores: one batch call vs count single-slot calls.
+        let mut got = Vec::new();
+        let got_max =
+            codec.key_scores_page(&buf, stride, offset, count, &q, &mut sc_batch, &mut got);
+        let mut want = Vec::new();
+        let mut want_max = f32::NEG_INFINITY;
+        for i in 0..count {
+            let m = codec.key_scores_page(
+                &buf[i * stride..],
                 stride,
                 offset,
-                count,
-                &w,
-                &mut blk_batch,
-                &mut acc_batch,
+                1,
+                &q,
+                &mut sc_slot,
+                &mut want,
             );
-            for i in 0..count {
-                codec.value_accumulate_page(
-                    &buf[i * stride..],
-                    stride,
-                    offset,
-                    1,
-                    &w[i..i + 1],
-                    &mut blk_slot,
-                    &mut acc_slot,
-                );
-            }
-            for (j, (a, b)) in acc_batch.iter().zip(&acc_slot).enumerate() {
-                let msg = format!("{method} count={count} acc[{j}]: batch {a} vs scalar {b}");
-                assert_eq!(a.to_bits(), b.to_bits(), "{msg}");
+            if m > want_max {
+                want_max = m;
             }
         }
+        assert_eq!(got.len(), count, "{label} count={count}");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let msg = format!("{label} count={count} slot {i}: batch {g} vs scalar {w}");
+            assert_eq!(g.to_bits(), w.to_bits(), "{msg}");
+        }
+        let msg = format!("{label} count={count}: max {got_max} vs fold {want_max}");
+        assert_eq!(got_max.to_bits(), want_max.to_bits(), "{msg}");
 
-        // --- empty run: NEG_INFINITY max, nothing scored or accumulated.
-        let mut got = Vec::new();
-        let m = codec.key_scores_page(&buf, stride, offset, 0, &q, &mut sc_batch, &mut got);
-        assert!(got.is_empty() && m == f32::NEG_INFINITY, "{method} empty run");
-        let mut acc = vec![0.5f32; d];
+        // --- value accumulate: zero weights mixed in (the masked-slot
+        // skip must not perturb bits — adding 0.0 is not a bitwise
+        // no-op in IEEE 754).
+        let w: Vec<f32> = (0..count)
+            .map(|i| if i % 3 == 1 { 0.0 } else { 0.1 + 0.05 * i as f32 })
+            .collect();
+        let seed_acc: Vec<f32> = (0..d).map(|j| 0.25 + j as f32 * 1e-3).collect();
+        let mut acc_batch = seed_acc.clone();
+        let mut acc_slot = seed_acc;
+        let mut blk_batch = BlockScratch::default();
+        let mut blk_slot = BlockScratch::default();
         codec.value_accumulate_page(
             &buf,
             stride,
             offset,
-            0,
-            &[],
-            &mut BlockScratch::default(),
-            &mut acc,
+            count,
+            &w,
+            &mut blk_batch,
+            &mut acc_batch,
         );
-        assert!(acc.iter().all(|&x| x == 0.5), "{method} empty accumulate");
+        for i in 0..count {
+            codec.value_accumulate_page(
+                &buf[i * stride..],
+                stride,
+                offset,
+                1,
+                &w[i..i + 1],
+                &mut blk_slot,
+                &mut acc_slot,
+            );
+        }
+        for (j, (a, b)) in acc_batch.iter().zip(&acc_slot).enumerate() {
+            let msg = format!("{label} count={count} acc[{j}]: batch {a} vs scalar {b}");
+            assert_eq!(a.to_bits(), b.to_bits(), "{msg}");
+        }
     }
+
+    // --- empty run: NEG_INFINITY max, nothing scored or accumulated.
+    let mut got = Vec::new();
+    let m = codec.key_scores_page(&buf, stride, offset, 0, &q, &mut sc_batch, &mut got);
+    assert!(got.is_empty() && m == f32::NEG_INFINITY, "{label} empty run");
+    let mut acc = vec![0.5f32; d];
+    codec.value_accumulate_page(
+        &buf,
+        stride,
+        offset,
+        0,
+        &[],
+        &mut BlockScratch::default(),
+        &mut acc,
+    );
+    assert!(acc.iter().all(|&x| x == 0.5), "{label} empty accumulate");
+}
+
+#[test]
+fn page_kernels_bitwise_match_single_slot_calls() {
+    let d = 64;
+    for method in PAGE_CODEC_METHODS {
+        // Model-spanning codecs (adaptive) have no dim-only constructor;
+        // their per-cell kernels are covered below in
+        // `adaptive_cells_page_kernels_bitwise_match_single_slot_calls`.
+        let Some(codec) = page_codec_for(method, d) else {
+            assert_eq!(method, "adaptive", "{method} must be page-native at d={d}");
+            continue;
+        };
+        check_codec_parity(method, codec.as_ref(), d, 0);
+    }
+}
+
+#[test]
+fn adaptive_cells_page_kernels_bitwise_match_single_slot_calls() {
+    // Every (layer, head) cell of the adaptive codec runs the same
+    // block kernels at its own code widths — the full battery must hold
+    // bitwise for each, and the solver must actually produce mixed
+    // widths (else this test degenerates into the uniform one).
+    let cfg = ModelConfig::mini();
+    let codec = codec_for_model("adaptive", &cfg).expect("adaptive solves at the paper budget");
+    let d = cfg.head_dim;
+    let mut widths = std::collections::BTreeSet::new();
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_heads {
+            let cell = codec.cell_codec(l, h);
+            widths.insert(cell.pair_bytes(d));
+            let label = format!("adaptive[L{l}H{h}]");
+            check_codec_parity(&label, cell, d, (l * 31 + h * 7) as u64);
+        }
+    }
+    assert!(widths.len() > 1, "bit allocation must produce mixed per-cell widths");
 }
 
 /// Encode a prefill's K/V rows into a sequence's pool slots — the same
@@ -160,11 +193,10 @@ fn encode_prompt(
         let slot = pool.token_slot_mut(seq, t).expect("slot");
         for (l, layer) in pre.kv.iter().enumerate() {
             for h in 0..cfg.n_heads {
-                let off = layout.pair_offset(l, h);
-                codec.encode_pair(
+                codec.cell_codec(l, h).encode_pair(
                     &layer.keys[t * hd + h * dh..t * hd + (h + 1) * dh],
                     &layer.values[t * hd + h * dh..t * hd + (h + 1) * dh],
-                    &mut slot[off..off + layout.pair_bytes],
+                    &mut slot[layout.pair_range(l, h)],
                 );
             }
         }
@@ -186,15 +218,16 @@ fn head_parallel_decode_bitwise_matches_single_threaded() {
     // output row, so logits at any fan-out width are bit-identical to
     // the single-threaded run. Covered for the block-kernel polar codec
     // and a per-slot codec (fp16); widths 2 and 4 exercise both uneven
-    // and exact head splits over the 4-head test model.
+    // and exact head splits over the 4-head test model. `adaptive` adds
+    // mixed per-(layer, head) cell widths under the same invariant.
     let cfg = ModelConfig::test();
     let mut m = Transformer::synthetic(&cfg, 11);
     let tokens: Vec<u32> = (0..44).map(|i| (i * 11 + 3) % 64).collect();
     let split = 32; // past PARALLEL_MIN_TOKENS, so auto-sizing would fan out too
     let pre = m.prefill(&tokens[..split]);
 
-    for method in ["polarquant-r-offline", "fp16"] {
-        let codec = page_codec_for(method, cfg.head_dim).expect("page codec");
+    for method in ["polarquant-r-offline", "fp16", "adaptive"] {
+        let codec = codec_for_model(method, &cfg).expect("page codec");
         let layout = KvLayout::new(&cfg, codec.as_ref());
         let mut runs: Vec<Vec<Vec<f32>>> = Vec::new();
         for &threads in &[1usize, 2, 4] {

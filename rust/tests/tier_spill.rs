@@ -68,7 +68,10 @@ fn expected_page(method: &str, prompt: &[u32], page_idx: usize, slot_bytes: usiz
 #[test]
 fn demote_promote_roundtrip_is_byte_identical_for_every_codec() {
     let cfg = ModelConfig::test();
-    for method in PAGE_CODEC_METHODS {
+    // Every registry family, plus a parameterized adaptive spec: its
+    // custom table layout gets its own pool at its own slot width, and
+    // the tier's pure byte-copy path must be layout-agnostic.
+    for method in PAGE_CODEC_METHODS.into_iter().chain(["adaptive:budget=3.25"]) {
         let mut pools = PoolSet::for_model(&cfg, PT, 256);
         let mut pc = PrefixCacheSet::new(PT, usize::MAX);
         let mut t = tier(&format!("roundtrip-{method}"));
